@@ -1,0 +1,87 @@
+//! Quickstart: make an application malleable in ~40 lines.
+//!
+//! A 4-rank job registers two data structures, runs a few iterations,
+//! grows to 6 ranks in the background (Wait Drains) while continuing to
+//! iterate, and keeps solving on the new size.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use proteo::mam::{block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy};
+use proteo::netmodel::{NetParams, Topology};
+use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
+
+fn main() {
+    let (ns, nd, total) = (4usize, 6usize, 60_000u64);
+    let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::sarteco25());
+    let world = sim.world();
+
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        // 1. Register the distributed data once (MaM's automatic mode).
+        let mut reg = Registry::new();
+        let blk = block_of(total, ns, rank);
+        reg.register("field", DataKind::Constant, total, Payload::virt(blk.len()));
+        let vb = block_of(total / 10, ns, rank);
+        reg.register("state", DataKind::Variable, total / 10, Payload::virt(vb.len()));
+        let decls = reg.decls();
+
+        // 2. Create the malleability handle.
+        let cfg = ReconfigCfg {
+            method: Method::Collective,
+            strategy: Strategy::WaitDrains,
+            spawn_cost: 0.05,
+        };
+        let mut mam = Mam::new(reg, cfg.clone());
+
+        // 3. Application loop with a resize checkpoint.
+        for _ in 0..3 {
+            p.compute(0.01); // "the app works"
+            let _ = p.allgather(WORLD, Payload::virt(1));
+            p.iter_tick();
+        }
+
+        // 4. Resize: spawned ranks run drain_join then join the app.
+        let cfg2 = cfg.clone();
+        let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                assert!(dmam.registry.verify_blocks(nd, dp.rank(merged)).is_empty());
+                for _ in 0..2 {
+                    dp.compute(0.01);
+                    let _ = dp.allgather(merged, Payload::virt(1));
+                    dp.iter_tick();
+                }
+            });
+        let mut status = mam.reconfigure(&p, WORLD, nd, drain_body);
+        while status == MamStatus::InProgress {
+            p.compute(0.01); // the app keeps iterating in the background
+            let _ = p.allgather(WORLD, Payload::real(vec![1.0]));
+            p.iter_tick();
+            status = mam.checkpoint(&p);
+        }
+        let out = mam.finish(&p, WORLD);
+
+        // 5. Continue on the new communicator (all ranks kept: grow).
+        let comm = out.app_comm.expect("grow keeps every source");
+        assert!(mam.registry.verify_blocks(nd, p.rank(comm)).is_empty());
+        for _ in 0..2 {
+            p.compute(0.01);
+            let _ = p.allgather(comm, Payload::virt(1));
+            p.iter_tick();
+        }
+        if rank == 0 {
+            println!("rank 0: resized {ns} -> {nd}, registry verified on the new layout");
+        }
+    });
+
+    let end = sim.run().expect("simulation");
+    let w = world.lock().unwrap();
+    println!(
+        "done at t={end:.3}s virtual; redistribution took {:.3}s",
+        w.metrics.span("mam.redist_start", "mam.redist_end").unwrap_or(f64::NAN)
+    );
+}

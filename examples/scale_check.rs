@@ -1,0 +1,28 @@
+use proteo::mam::{Method, Strategy};
+use proteo::proteo::{run_once, RunSpec};
+
+fn main() {
+    for (ns, nd) in [(20usize, 160usize), (160, 20), (160, 40)] {
+        for (m, s) in [
+            (Method::Collective, Strategy::Blocking),
+            (Method::RmaLock, Strategy::Blocking),
+            (Method::RmaLockall, Strategy::Blocking),
+            (Method::Collective, Strategy::NonBlocking),
+            (Method::Collective, Strategy::WaitDrains),
+            (Method::RmaLock, Strategy::WaitDrains),
+            (Method::RmaLockall, Strategy::WaitDrains),
+            (Method::Collective, Strategy::Threading),
+            (Method::RmaLock, Strategy::Threading),
+        ] {
+            let t0 = std::time::Instant::now();
+            let spec = RunSpec::sarteco25(ns, nd, m, s);
+            let r = run_once(&spec);
+            println!(
+                "{:>3}->{:<3} {:<16} R={:>8.3}s n_it={:>4} t_base={:.3} t_bg={:.3} omega={:>7.2} t_nd={:.3}  [wall {:.2}s, {} events]",
+                ns, nd, r.label, r.redist_time, r.n_it, r.t_base, r.t_bg, r.omega, r.t_it_nd,
+                t0.elapsed().as_secs_f64(), r.events
+            );
+        }
+        println!();
+    }
+}

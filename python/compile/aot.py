@@ -1,0 +1,97 @@
+"""AOT bridge: lower the L2 model (with the L1 Pallas kernel inlined)
+to HLO **text** and write it into artifacts/ for the Rust runtime.
+
+HLO text — NOT `lowered.compile()` or serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out ../artifacts [--grid 64]
+Outputs:
+  artifacts/cg_step.hlo.txt   one CG iteration (tuple of 4 outputs)
+  artifacts/spmv.hlo.txt      bare SpMV
+  artifacts/manifest.json     shapes + provenance the runtime checks
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model
+from .kernels.spmv_ell import mxu_flops_per_step, vmem_bytes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(grid: int):
+    """Lower both entry points for a grid×grid Laplacian problem."""
+    br = bc = grid
+    n = grid * grid
+    nbr = n // br
+    k = 3
+    args = model.shapes(nbr, k, br, bc, n)
+    cg_text = to_hlo_text(jax.jit(model.cg_step).lower(*args))
+    spmv_text = to_hlo_text(jax.jit(model.spmv).lower(*args[:2], args[4]))
+    manifest = {
+        "version": 1,
+        "grid": grid,
+        "n": n,
+        "nbr": nbr,
+        "k": k,
+        "br": br,
+        "bc": bc,
+        "dtype": "f32",
+        "entries": {
+            "cg_step": {
+                "file": "cg_step.hlo.txt",
+                "inputs": ["data", "idx", "x", "r", "p", "rr"],
+                "outputs": ["x", "r", "p", "rr"],
+            },
+            "spmv": {
+                "file": "spmv.hlo.txt",
+                "inputs": ["data", "idx", "x"],
+                "outputs": ["y"],
+            },
+        },
+        "perf_model": {
+            "vmem_bytes_per_step": vmem_bytes(nbr, k, br, bc, n),
+            "mxu_flops_per_step": mxu_flops_per_step(k, br, bc, rows_per_step=min(nbr, 16)),
+            "grid_steps": nbr // min(nbr, 16),
+        },
+    }
+    return cg_text, spmv_text, manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--grid", type=int, default=64, help="grid width (n = grid^2)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cg_text, spmv_text, manifest = build(args.grid)
+    cg_path = os.path.join(args.out, "cg_step.hlo.txt")
+    with open(cg_path, "w") as f:
+        f.write(cg_text)
+    with open(os.path.join(args.out, "spmv.hlo.txt"), "w") as f:
+        f.write(spmv_text)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {cg_path} ({len(cg_text)} chars) + spmv + manifest")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for the L1 kernel and the L2 model.
+
+Everything here is straight-line jnp with no Pallas — the reference the
+pytest suite asserts the kernel against (`assert_allclose`), and the
+ground truth for the dense conversion used in property tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ref(data, idx, x):
+    """Block-ELL SpMV via gather + einsum (no Pallas)."""
+    nbr, k, br, bc = data.shape
+    xb = x.reshape(-1, bc)          # (nbc, BC)
+    gathered = xb[idx]              # (nbr, K, BC)
+    y = jnp.einsum("nkrc,nkc->nr", data, gathered)
+    return y.reshape(nbr * br)
+
+
+def ell_to_dense(data, idx, n_cols):
+    """Materialize the block-ELL matrix as dense (numpy, tests only)."""
+    data = np.asarray(data)
+    idx = np.asarray(idx)
+    nbr, k, br, bc = data.shape
+    out = np.zeros((nbr * br, n_cols), dtype=data.dtype)
+    for i in range(nbr):
+        for j in range(k):
+            c = int(idx[i, j]) * bc
+            out[i * br:(i + 1) * br, c:c + bc] += data[i, j]
+    return out
+
+
+def cg_step_ref(data, idx, x, r, p, rr):
+    """One CG iteration (Barrett et al. [25]), pure jnp."""
+    ap = spmv_ref(data, idx, p)
+    alpha = rr / jnp.dot(p, ap)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rr2 = jnp.dot(r2, r2)
+    beta = rr2 / rr
+    p2 = r2 + beta * p
+    return x2, r2, p2, rr2
+
+
+def laplacian_2d_block_ell(grid: int, br: int | None = None):
+    """The 5-point 2-D Laplacian on a grid×grid mesh in block-ELL form.
+
+    Uses BR = BC = grid so each block row is one grid row; the stencil
+    then touches exactly the block columns {i-1, i, i+1} -> K = 3.
+    Mirrors `linalg::laplacian_2d` on the Rust side (same matrix, same
+    ordering), which is what makes the cross-layer CG comparison exact.
+    """
+    br = br or grid
+    assert br == grid, "block size must equal the grid width for K=3"
+    n = grid * grid
+    nbr = n // br
+    k = 3
+    data = np.zeros((nbr, k, br, br), dtype=np.float32)
+    idx = np.zeros((nbr, k), dtype=np.int32)
+    # In-block stencil: tridiagonal [-1, 4, -1] along the grid row.
+    diag = (
+        4.0 * np.eye(br, dtype=np.float32)
+        - np.eye(br, k=1, dtype=np.float32)
+        - np.eye(br, k=-1, dtype=np.float32)
+    )
+    off = -np.eye(br, dtype=np.float32)
+    for i in range(nbr):
+        # Slot 0: block column i-1 (pad: idx 0 with zero block).
+        if i > 0:
+            idx[i, 0] = i - 1
+            data[i, 0] = off
+        # Slot 1: the diagonal block.
+        idx[i, 1] = i
+        data[i, 1] = diag
+        # Slot 2: block column i+1.
+        if i + 1 < nbr:
+            idx[i, 2] = i + 1
+            data[i, 2] = off
+    return data, idx

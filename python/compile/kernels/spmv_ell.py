@@ -1,0 +1,99 @@
+"""Layer-1: block-ELL SpMV as a Pallas kernel.
+
+The paper's application hot-spot is the CG sweep over a 5.4G-nnz sparse
+matrix (§V-A).  On TPU-class hardware the natural sparse format is
+**block-ELL**: the matrix is cut into `BR×BC` dense blocks; each block
+row stores exactly `K` blocks (zero-padded) plus their block-column
+indices.  Dense `BR×BC` tiles feed the MXU systolic array, and the
+`BlockSpec` grid expresses the HBM→VMEM schedule over groups of block
+rows — the TPU rethink of what a CUDA kernel would do with warps over
+CSR (DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (numerically identical;
+real-TPU performance is *estimated* from the VMEM/MXU structure, see
+EXPERIMENTS.md §Perf-L1).
+
+§Perf-L1 note: the kernel body is ONE gather + ONE `dot_general`
+contraction per grid step (not a per-block loop of dynamic slices) and
+each grid step covers `rows_per_step` block rows.  Under interpret mode
+every grid step costs ~0.8 ms of harness overhead, so coarsening the
+grid 64→4 steps cut the AOT artifact's per-call latency ~10×; on a real
+TPU the same shape keeps the MXU fed with (K·BC)-deep contractions
+while staying far under the VMEM budget.
+
+VMEM footprint per grid step (f32, defaults nbr=64, K=3, BR=BC=64,
+rows_per_step=16):
+    data tile   rows·K·BR·BC·4 = 768 KiB
+    x (resident)           n·4 =  16 KiB
+    y tile           rows·BR·4 =   4 KiB
+— comfortably below the ~16 MiB VMEM budget, with room to push BR/BC to
+the MXU-optimal 128×128 for larger problems.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(idx_ref, data_ref, x_ref, y_ref, *, bc: int):
+    """`rows_per_step` block rows per grid step:
+    y[i] = Σ_k data[i,k] @ x[idx[i,k]] as gather + one contraction."""
+    idx = idx_ref[...]                  # (rows, K)
+    data = data_ref[...]                # (rows, K, BR, BC)
+    xb = x_ref[...].reshape(-1, bc)     # (nbc, BC)
+    gathered = xb[idx]                  # (rows, K, BC) — one gather
+    # Contract over (K, BC): feeds the MXU as a batched matvec.
+    y_ref[...] = jnp.einsum("nkrc,nkc->nr", data, gathered)
+
+
+def spmv_block_ell(data: jax.Array, idx: jax.Array, x: jax.Array,
+                   *, rows_per_step: int | None = None,
+                   interpret: bool = True) -> jax.Array:
+    """y = A·x for a block-ELL matrix.
+
+    Args:
+      data: (nbr, K, BR, BC) f32 — dense blocks (zero-padded).
+      idx:  (nbr, K) i32 — block-column index per block (pad → 0,
+            paired with an all-zero block so the contribution vanishes).
+      x:    (n,) f32 with n == nbc·BC.
+      rows_per_step: block rows per grid step (None → min(nbr, 16);
+            must divide nbr).
+
+    Returns: (n_rows,) f32 with n_rows == nbr·BR.
+    """
+    nbr, k, br, bc = data.shape
+    n = x.shape[0]
+    assert n % bc == 0, "x length must be a multiple of BC"
+    rows = rows_per_step or min(nbr, 16)
+    assert nbr % rows == 0, f"rows_per_step {rows} must divide nbr {nbr}"
+    out = pl.pallas_call(
+        functools.partial(_spmv_kernel, bc=bc),
+        grid=(nbr // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows, k, br, bc), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # x stays resident
+        ],
+        out_specs=pl.BlockSpec((rows, br), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbr, br), jnp.float32),
+        interpret=interpret,
+    )(idx, data, x)
+    return out.reshape(nbr * br)
+
+
+def vmem_bytes(nbr: int, k: int, br: int, bc: int, n: int,
+               rows_per_step: int | None = None) -> int:
+    """VMEM footprint of one grid step (see module docstring)."""
+    rows = rows_per_step or min(nbr, 16)
+    return 4 * (rows * k * br * bc + n + rows * br + rows * k)
+
+
+def mxu_flops_per_step(k: int, br: int, bc: int,
+                       rows_per_step: int = 16) -> int:
+    """MXU work per grid step: rows·K matvecs of BR×BC."""
+    return 2 * rows_per_step * k * br * bc

@@ -1,0 +1,56 @@
+"""Layer-2: the JAX compute graph — one CG iteration over the
+block-ELL matrix, calling the L1 Pallas kernel for the SpMV hot-spot.
+
+This is the function `aot.py` lowers once to HLO text; the Rust
+runtime (`rust/src/runtime/`) loads and executes it on the PJRT CPU
+client for every iteration of the end-to-end example.  Python never
+runs at simulation/serving time.
+
+State threading (functional, donation-friendly): the full CG state
+(x, r, p, rr) flows in and out, so XLA can reuse the buffers; the
+scalar `rr` rides along to avoid a host round-trip per iteration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv_ell import spmv_block_ell
+
+
+def cg_step(data, idx, x, r, p, rr):
+    """One CG iteration; returns (x', r', p', rr')."""
+    ap = spmv_block_ell(data, idx, p)
+    alpha = rr / jnp.dot(p, ap)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rr2 = jnp.dot(r2, r2)
+    beta = rr2 / rr
+    p2 = r2 + beta * p
+    return x2, r2, p2, rr2
+
+
+def spmv(data, idx, x):
+    """Bare SpMV entry point (microbench + quickstart artifact)."""
+    return spmv_block_ell(data, idx, x)
+
+
+def cg_state_init(data, idx, b):
+    """CG initialization from x0 = 0: r = p = b, rr = b.b."""
+    x = jnp.zeros_like(b)
+    rr = jnp.dot(b, b)
+    return x, b, b, rr
+
+
+def shapes(nbr: int, k: int, br: int, bc: int, n: int):
+    """ShapeDtypeStructs of (data, idx, x, r, p, rr) for lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((nbr, k, br, bc), f32),
+        jax.ShapeDtypeStruct((nbr, k), jnp.int32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )

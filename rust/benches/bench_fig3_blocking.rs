@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's **Figure 3** (see
+//! `experiments::fig3_blocking`).  Sweeps the 12 reconfiguration pairs of
+//! §V-A at full problem scale; tune with PROTEO_BENCH_REPS/_SCALE/_PAIRS.
+
+use proteo::experiments::{fig3_blocking, FigOptions};
+
+fn main() {
+    let opts = FigOptions::bench();
+    eprintln!(
+        "bench fig3: reps={} scale={} pairs={}",
+        opts.reps,
+        opts.scale,
+        if opts.pairs.is_empty() { "all-12".to_string() } else { format!("{:?}", opts.pairs) }
+    );
+    let wall = std::time::Instant::now();
+    let table = fig3_blocking(&opts);
+    println!("{}", table.render());
+    eprintln!("harness wall time: {:.2}s", wall.elapsed().as_secs_f64());
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's **Figure 7** (see
+//! `experiments::fig7_threading`).  Sweeps the 12 reconfiguration pairs of
+//! §V-A at full problem scale; tune with PROTEO_BENCH_REPS/_SCALE/_PAIRS.
+
+use proteo::experiments::{fig7_threading, FigOptions};
+
+fn main() {
+    let opts = FigOptions::bench();
+    eprintln!(
+        "bench fig7: reps={} scale={} pairs={}",
+        opts.reps,
+        opts.scale,
+        if opts.pairs.is_empty() { "all-12".to_string() } else { format!("{:?}", opts.pairs) }
+    );
+    let wall = std::time::Instant::now();
+    let table = fig7_threading(&opts);
+    println!("{}", table.render());
+    eprintln!("harness wall time: {:.2}s", wall.elapsed().as_secs_f64());
+}

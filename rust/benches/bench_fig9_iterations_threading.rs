@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's **Figure 9** (see
+//! `experiments::fig9_iterations_threading`).  Sweeps the 12 reconfiguration pairs of
+//! §V-A at full problem scale; tune with PROTEO_BENCH_REPS/_SCALE/_PAIRS.
+
+use proteo::experiments::{fig9_iterations_threading, FigOptions};
+
+fn main() {
+    let opts = FigOptions::bench();
+    eprintln!(
+        "bench fig9: reps={} scale={} pairs={}",
+        opts.reps,
+        opts.scale,
+        if opts.pairs.is_empty() { "all-12".to_string() } else { format!("{:?}", opts.pairs) }
+    );
+    let wall = std::time::Instant::now();
+    let table = fig9_iterations_threading(&opts);
+    println!("{}", table.render());
+    eprintln!("harness wall time: {:.2}s", wall.elapsed().as_secs_f64());
+}

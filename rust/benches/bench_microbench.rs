@@ -1,0 +1,153 @@
+//! Microbenchmarks of every layer's hot path (the §Perf baseline):
+//!
+//! * DES engine — event throughput, activity handoff latency;
+//! * simmpi — collective schedule computation at 160 ranks, window
+//!   create/free round-trips, Rget post rate;
+//! * MaM — Algorithm 1 plans, payload slicing for the send matrix;
+//! * runtime — PJRT `cg_step`/`spmv` latency (skipped without
+//!   artifacts);
+//! * ablations — single fused window vs per-structure windows, and the
+//!   registration-rate sweep (§VI).
+
+use proteo::experiments::{ablation, FigOptions};
+use proteo::linalg::EllMatrix;
+use proteo::mam::{drain_plan, source_plan, Method, Strategy};
+use proteo::netmodel::{CostModel, NetParams, Placement, Topology, TransferClass};
+use proteo::proteo::{run_once, RunSpec};
+use proteo::runtime::{artifacts_available, artifacts_dir, CgRuntime, CgState};
+use proteo::simcluster::Engine;
+use proteo::simmpi::{MpiSim, Payload, WORLD};
+use proteo::util::benchkit::Bench;
+
+fn engine_benches(b: &mut Bench) {
+    b.bench("engine: 100k advance events (1 activity)", || {
+        let mut e = Engine::new();
+        e.spawn_at(0.0, "spin", |ctx| {
+            for _ in 0..100_000 {
+                ctx.advance(1e-6);
+            }
+        });
+        e.run().unwrap();
+    });
+    b.bench("engine: 200 ranks x 500 events", || {
+        let mut e = Engine::new();
+        for i in 0..200 {
+            e.spawn_at(0.0, format!("r{i}"), |ctx| {
+                for _ in 0..500 {
+                    ctx.advance(1e-6);
+                }
+            });
+        }
+        e.run().unwrap();
+    });
+}
+
+fn simmpi_benches(b: &mut Bench) {
+    b.bench("simmpi: barrier x32 @160 ranks", || {
+        let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
+        s.launch(160, |p| {
+            for _ in 0..32 {
+                p.barrier(WORLD);
+            }
+        });
+        s.run().unwrap();
+    });
+    b.bench("simmpi: alltoallv @160 ranks (sparse resize pattern)", || {
+        let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
+        s.launch(160, |p| {
+            let r = p.rank(WORLD);
+            let sends = (0..160)
+                .map(|j| Payload::virt(if j == r / 8 { 1_000_000 } else { 0 }))
+                .collect();
+            let _ = p.alltoallv(WORLD, sends);
+        });
+        s.run().unwrap();
+    });
+    b.bench("simmpi: win create+free @160 ranks", || {
+        let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
+        s.launch(160, |p| {
+            let w = p.win_create(WORLD, Payload::virt(1_000_000));
+            p.win_free(w);
+        });
+        s.run().unwrap();
+    });
+    b.bench("costmodel: 100k transfers", || {
+        let topo = Topology::sarteco25();
+        let pl = Placement::cyclic(&topo, 160);
+        let mut cm = CostModel::new(NetParams::sarteco25(), 8);
+        let mut t = 0.0;
+        for i in 0..100_000u64 {
+            let tt = cm.transfer(
+                t,
+                &pl,
+                (i % 160) as usize,
+                ((i * 7) % 160) as usize,
+                (i % 1_000_000) + 1,
+                TransferClass::TwoSided,
+            );
+            t = tt.arrival * 1e-6 + t;
+        }
+        std::hint::black_box(t);
+    });
+}
+
+fn mam_benches(b: &mut Bench) {
+    b.bench("alg1: 160 drain plans from 160 sources", || {
+        for d in 0..160 {
+            std::hint::black_box(drain_plan(8_000_000_000, 160, 160, d));
+        }
+    });
+    b.bench("alg1: source plans 20->160", || {
+        for s in 0..20 {
+            std::hint::black_box(source_plan(8_000_000_000, 20, 160, s));
+        }
+    });
+    b.bench("end-to-end run_once: COL blocking 20->160 (virtual 64GB)", || {
+        let spec = RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking);
+        std::hint::black_box(run_once(&spec));
+    });
+    b.bench("end-to-end run_once: RMA-Lockall WD 160->20", || {
+        let spec = RunSpec::sarteco25(160, 20, Method::RmaLockall, Strategy::WaitDrains);
+        std::hint::black_box(run_once(&spec));
+    });
+}
+
+fn runtime_benches(b: &mut Bench) {
+    if !artifacts_available() {
+        eprintln!("runtime benches skipped: run `make artifacts`");
+        return;
+    }
+    let rt = CgRuntime::load(artifacts_dir()).expect("artifacts");
+    let a = EllMatrix::laplacian_2d(rt.manifest.grid);
+    let x: Vec<f32> = (0..rt.manifest.n).map(|i| (i as f32).sin()).collect();
+    b.bench("pjrt: spmv n=4096", || {
+        std::hint::black_box(rt.spmv(&a, &x).unwrap());
+    });
+    let st = CgState::init(&x);
+    b.bench("pjrt: cg_step n=4096 (cold: re-upload matrix)", || {
+        std::hint::black_box(rt.cg_step(&a, &st).unwrap());
+    });
+    let dev = rt.upload(&a).expect("upload");
+    b.bench("pjrt: cg_step n=4096 (hot: device-resident matrix)", || {
+        std::hint::black_box(rt.cg_step_dev(&dev, &st).unwrap());
+    });
+}
+
+fn main() {
+    let mut b = Bench::new();
+    engine_benches(&mut b);
+    simmpi_benches(&mut b);
+    mam_benches(&mut b);
+    runtime_benches(&mut b);
+    b.print_report("microbenchmarks (all layers)");
+
+    // §VI ablations at reduced scale so the bench stays quick.
+    let opts = FigOptions {
+        reps: 1,
+        scale: 1,
+        pairs: vec![(20, 160), (160, 20), (160, 40)],
+        seed: 0xC0FFEE,
+    };
+    println!("{}", ablation::single_window(&opts).render());
+    println!("{}", ablation::registration_sweep(&opts, 20, 160).render());
+}

@@ -1,0 +1,299 @@
+//! Configuration system: JSON experiment configs with presets.
+//!
+//! Proteo is "highly configurable" (§III); this module is the
+//! file-facing half.  A config names a preset (`sarteco25` — the
+//! paper's testbed and workload — or `tiny` for CI) and overrides any
+//! subset of fields:
+//!
+//! ```json
+//! {
+//!   "preset": "sarteco25",
+//!   "method": "rma-lockall",
+//!   "strategy": "wd",
+//!   "pairs": [[20, 160], [160, 20]],
+//!   "reps": 5,
+//!   "scale": 10,
+//!   "net": { "beta_register_gbps": 2.0, "eager_threshold": 65536 },
+//!   "sam": { "flops_per_core": 2.0e9, "jitter": 0.02 }
+//! }
+//! ```
+//!
+//! The CLI (`proteo run --config file.json`) and the experiment
+//! harnesses consume [`ExperimentConfig`].
+
+use crate::mam::{Method, Strategy};
+use crate::proteo::RunSpec;
+use crate::sam::SamConfig;
+use crate::util::json::Json;
+
+/// A fully resolved experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub method: Method,
+    pub strategy: Strategy,
+    pub pairs: Vec<(usize, usize)>,
+    pub reps: usize,
+    pub scale: u64,
+    pub seed: u64,
+    pub base: RunSpec,
+}
+
+impl ExperimentConfig {
+    /// The paper's configuration (§V-A), one pair.
+    pub fn sarteco25() -> ExperimentConfig {
+        ExperimentConfig {
+            method: Method::Collective,
+            strategy: Strategy::Blocking,
+            pairs: crate::proteo::sarteco25_pairs(),
+            reps: 3,
+            scale: 1,
+            seed: 0xC0FFEE,
+            base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
+        }
+    }
+
+    /// CI-sized configuration.
+    pub fn tiny() -> ExperimentConfig {
+        let mut c = ExperimentConfig::sarteco25();
+        c.scale = 100;
+        c.reps = 1;
+        c.pairs = vec![(20, 160), (160, 20)];
+        c
+    }
+
+    /// Materialize the run spec for one pair.
+    pub fn spec_for(&self, ns: usize, nd: usize) -> RunSpec {
+        let mut spec = self.base.clone();
+        spec.ns = ns;
+        spec.nd = nd;
+        spec.method = self.method;
+        spec.strategy = self.strategy;
+        spec.seed = self.seed;
+        if self.scale > 1 {
+            spec.sam.matrix_elems /= self.scale;
+            spec.sam.colind_elems /= self.scale;
+            spec.sam.rowptr_elems = (spec.sam.rowptr_elems / self.scale).max(16);
+            spec.sam.vector_elems = (spec.sam.vector_elems / self.scale).max(16);
+            spec.sam.flops_per_iter /= self.scale as f64;
+        }
+        spec
+    }
+
+    /// Parse a JSON document, starting from the named preset.
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig, String> {
+        let preset = doc
+            .get("preset")
+            .and_then(|p| p.as_str())
+            .unwrap_or("sarteco25");
+        let mut cfg = match preset {
+            "sarteco25" => ExperimentConfig::sarteco25(),
+            "tiny" => ExperimentConfig::tiny(),
+            other => return Err(format!("unknown preset '{other}'")),
+        };
+        if let Some(m) = doc.get("method").and_then(|v| v.as_str()) {
+            cfg.method = Method::parse(m).ok_or_else(|| format!("bad method '{m}'"))?;
+        }
+        if let Some(s) = doc.get("strategy").and_then(|v| v.as_str()) {
+            cfg.strategy = Strategy::parse(s).ok_or_else(|| format!("bad strategy '{s}'"))?;
+        }
+        if let Some(reps) = doc.get("reps").and_then(|v| v.as_usize()) {
+            cfg.reps = reps.max(1);
+        }
+        if let Some(scale) = doc.get("scale").and_then(|v| v.as_u64()) {
+            cfg.scale = scale.max(1);
+        }
+        if let Some(seed) = doc.get("seed").and_then(|v| v.as_u64()) {
+            cfg.seed = seed;
+        }
+        if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
+            cfg.pairs = pairs
+                .iter()
+                .map(|p| {
+                    let arr = p.as_arr().ok_or("pair must be [ns, nd]")?;
+                    if arr.len() != 2 {
+                        return Err("pair must have 2 entries".to_string());
+                    }
+                    let ns = arr[0].as_usize().ok_or("ns must be integer")?;
+                    let nd = arr[1].as_usize().ok_or("nd must be integer")?;
+                    if ns == 0 || nd == 0 || ns == nd {
+                        return Err(format!("invalid pair ({ns}, {nd})"));
+                    }
+                    Ok((ns, nd))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+        }
+        if let Some(net) = doc.get("net") {
+            apply_net_overrides(&mut cfg.base, net)?;
+        }
+        if let Some(sam) = doc.get("sam") {
+            apply_sam_overrides(&mut cfg.base.sam, sam)?;
+        }
+        if let Some(w) = doc.get("warmup_iters").and_then(|v| v.as_u64()) {
+            cfg.base.warmup_iters = w;
+        }
+        if let Some(p) = doc.get("post_iters").and_then(|v| v.as_u64()) {
+            cfg.base.post_iters = p;
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from JSON source text.
+    pub fn from_str(src: &str) -> Result<ExperimentConfig, String> {
+        let doc = Json::parse(src).map_err(|e| e.to_string())?;
+        ExperimentConfig::from_json(&doc)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        ExperimentConfig::from_str(&src)
+    }
+
+    /// Serialize the resolved configuration (reports, provenance).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.label())),
+            (
+                "strategy",
+                Json::str(format!("{:?}", self.strategy).to_lowercase()),
+            ),
+            (
+                "pairs",
+                Json::Arr(
+                    self.pairs
+                        .iter()
+                        .map(|&(a, b)| {
+                            Json::Arr(vec![Json::num(a as f64), Json::num(b as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("reps", Json::num(self.reps as f64)),
+            ("scale", Json::num(self.scale as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
+        ])
+    }
+}
+
+fn apply_net_overrides(spec: &mut RunSpec, net: &Json) -> Result<(), String> {
+    let p = &mut spec.net;
+    if let Some(v) = net.get("beta_register_gbps").and_then(|v| v.as_f64()) {
+        if v <= 0.0 {
+            return Err("beta_register_gbps must be > 0".into());
+        }
+        p.beta_register = 1.0 / (v * 1e9);
+    }
+    if let Some(v) = net.get("inter_gbps").and_then(|v| v.as_f64()) {
+        if v <= 0.0 {
+            return Err("inter_gbps must be > 0".into());
+        }
+        p.beta_inter = 1.0 / (v * 1e9);
+    }
+    if let Some(v) = net.get("eager_threshold").and_then(|v| v.as_u64()) {
+        p.eager_threshold = v;
+    }
+    if let Some(v) = net.get("progress_chunk").and_then(|v| v.as_u64()) {
+        p.progress_chunk = v.max(1);
+    }
+    if let Some(v) = net.get("oversub_factor").and_then(|v| v.as_f64()) {
+        p.oversub_factor = v;
+    }
+    if let Some(v) = net.get("small_lane_max_wait").and_then(|v| v.as_f64()) {
+        p.small_lane_max_wait = v;
+    }
+    if let Some(v) = net.get("spawn_cost").and_then(|v| v.as_f64()) {
+        spec.spawn_cost = v;
+    }
+    Ok(())
+}
+
+fn apply_sam_overrides(sam: &mut SamConfig, j: &Json) -> Result<(), String> {
+    if let Some(v) = j.get("flops_per_core").and_then(|v| v.as_f64()) {
+        if v <= 0.0 {
+            return Err("flops_per_core must be > 0".into());
+        }
+        sam.flops_per_core = v;
+    }
+    if let Some(v) = j.get("flops_per_iter").and_then(|v| v.as_f64()) {
+        sam.flops_per_iter = v;
+    }
+    if let Some(v) = j.get("jitter").and_then(|v| v.as_f64()) {
+        sam.jitter = v.clamp(0.0, 0.9);
+    }
+    if let Some(v) = j.get("matrix_elems").and_then(|v| v.as_u64()) {
+        sam.matrix_elems = v;
+    }
+    if let Some(v) = j.get("vector_elems").and_then(|v| v.as_u64()) {
+        sam.vector_elems = v;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_preset_parses() {
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert_eq!(cfg.pairs.len(), 12);
+        assert_eq!(cfg.method, Method::Collective);
+    }
+
+    #[test]
+    fn full_override_parses() {
+        let cfg = ExperimentConfig::from_str(
+            r#"{
+                "preset": "tiny",
+                "method": "rma-lockall",
+                "strategy": "wd",
+                "pairs": [[20, 160], [80, 40]],
+                "reps": 7,
+                "scale": 50,
+                "seed": 99,
+                "net": { "beta_register_gbps": 2.0, "inter_gbps": 5.0 },
+                "sam": { "jitter": 0.05 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.method, Method::RmaLockall);
+        assert_eq!(cfg.strategy, Strategy::WaitDrains);
+        assert_eq!(cfg.pairs, vec![(20, 160), (80, 40)]);
+        assert_eq!(cfg.reps, 7);
+        assert_eq!(cfg.seed, 99);
+        assert!((cfg.base.net.beta_register - 0.5e-9).abs() < 1e-15);
+        assert!((cfg.base.net.beta_inter - 0.2e-9).abs() < 1e-15);
+        assert!((cfg.base.sam.jitter - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_for_applies_scale() {
+        let mut cfg = ExperimentConfig::sarteco25();
+        cfg.scale = 100;
+        let spec = cfg.spec_for(20, 40);
+        assert_eq!(spec.ns, 20);
+        assert_eq!(spec.nd, 40);
+        assert_eq!(spec.sam.matrix_elems, SamConfig::sarteco25().matrix_elems / 100);
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        assert!(ExperimentConfig::from_str(r#"{"preset": "nope"}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"method": "smoke"}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"pairs": [[20, 20]]}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"pairs": [[20]]}"#).is_err());
+        assert!(
+            ExperimentConfig::from_str(r#"{"net": {"inter_gbps": -1}}"#).is_err()
+        );
+        assert!(ExperimentConfig::from_str("not json").is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips_provenance() {
+        let cfg = ExperimentConfig::tiny();
+        let j = cfg.to_json();
+        assert_eq!(j.get_path("reps").unwrap().as_usize(), Some(1));
+        assert!(j.get_path("pairs").unwrap().as_arr().unwrap().len() == 2);
+    }
+}

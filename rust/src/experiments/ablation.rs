@@ -1,0 +1,204 @@
+//! Ablations beyond the paper's evaluation, probing §VI's future-work
+//! directions:
+//!
+//! * [`single_window`] — the proposed fix for the window-initialization
+//!   overhead: one dynamic window per rank with all structures
+//!   attached, versus MaM's one-window-per-structure design (§IV-B).
+//! * [`registration_sweep`] — how the blocking RMA/COL ratio moves as
+//!   the memory-registration rate varies: where RMA *would* overtake
+//!   the collective, supporting the paper's conclusion that the
+//!   initialization cost is the blocker.
+
+use std::sync::Arc;
+
+use crate::mam::{block_of, rma, DataKind, Method, Registry, Roles, Strategy};
+use crate::netmodel::{NetParams, Topology};
+use crate::proteo::run_median;
+use crate::sam::{Sam, SamConfig};
+use crate::simmpi::{MpiProc, MpiSim, WORLD};
+use crate::util::benchkit::{FigureTable, Unit};
+
+use super::FigOptions;
+
+/// Time one blocking RMA redistribution (per-structure or fused
+/// windows) over the merged group, without the application around it.
+fn time_rma_blocking(
+    ns: usize,
+    nd: usize,
+    sam: &SamConfig,
+    net: &NetParams,
+    fused: bool,
+    lockall: bool,
+) -> f64 {
+    let n = ns.max(nd);
+    let topo = Topology::new_cyclic(n.div_ceil(20).max(1), 20);
+    let mut sim = MpiSim::new(topo, net.clone());
+    let world = sim.world();
+    let sam = sam.clone();
+    sim.launch(n, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let roles = Roles { ns, nd, rank };
+        let mut reg = Registry::new();
+        // Sources carry their block; everyone registers the metadata.
+        let s = Sam::new(sam.clone(), 7, p.gpid());
+        if roles.is_source() {
+            s.register_data(&mut reg, ns, rank);
+        } else {
+            for (name, total) in [
+                ("A_vals", sam.matrix_elems),
+                ("A_cols", sam.colind_elems),
+                ("A_rowptr", sam.rowptr_elems),
+            ] {
+                reg.register(name, DataKind::Constant, total, crate::simmpi::Payload::virt(0));
+            }
+            reg.register(
+                "x",
+                DataKind::Variable,
+                sam.vector_elems,
+                crate::simmpi::Payload::virt(0),
+            );
+            let _ = block_of(1, 1, 0);
+        }
+        let which = reg.of_kind(DataKind::Constant);
+        let t0 = p.now();
+        let _ = if fused {
+            rma::redistribute_blocking_fused(&p, WORLD, &roles, &reg, &which, lockall)
+        } else {
+            rma::redistribute_blocking(&p, WORLD, &roles, &reg, &which, lockall)
+        };
+        let dt = p.now() - t0;
+        p.metrics(|m| m.mark_max("ablation.redist", dt));
+    });
+    sim.run().expect("ablation sim failed");
+    let w = world.lock().unwrap();
+    w.metrics.mark_at("ablation.redist").unwrap_or(f64::NAN)
+}
+
+/// §VI ablation: per-structure windows (the paper's design) vs one
+/// fused window (the proposed fix), blocking RMA-Lockall.
+pub fn single_window(opts: &FigOptions) -> FigureTable {
+    let mut t = FigureTable::new(
+        "Ablation (§VI): per-structure windows vs single fused window, blocking RMA-Lockall",
+        "NS->ND",
+        &["per-struct", "fused"],
+        0,
+    );
+    for (ns, nd) in opts.pairs() {
+        let spec = opts.spec(ns, nd, Method::RmaLockall, Strategy::Blocking);
+        let a = time_rma_blocking(ns, nd, &spec.sam, &spec.net, false, true);
+        let b = time_rma_blocking(ns, nd, &spec.sam, &spec.net, true, true);
+        t.row(&format!("{ns}->{nd}"), vec![a, b]);
+    }
+    t
+}
+
+/// §VI ablation: blocking COL vs RMA-Lockall as the registration rate
+/// varies — shows the rate beyond which one-sided redistribution wins.
+pub fn registration_sweep(opts: &FigOptions, ns: usize, nd: usize) -> FigureTable {
+    let rates: [f64; 5] = [0.5e9, 1.0e9, 2.0e9, 3.7e9, 8.0e9];
+    let cols: Vec<String> = rates.iter().map(|r| format!("{:.1}GB/s", r / 1e9)).collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(
+        &format!("Ablation (§VI): RMA/COL blocking ratio at {ns}->{nd} vs registration rate"),
+        "version",
+        &col_refs,
+        0,
+    )
+    .with_unit(Unit::Ratio, false);
+    let mut col_row = Vec::new();
+    let mut rma_row = Vec::new();
+    for &rate in &rates {
+        let mut spec = opts.spec(ns, nd, Method::Collective, Strategy::Blocking);
+        spec.net.beta_register = 1.0 / rate;
+        let col = run_median(&spec, opts.reps).redist_time;
+        spec.method = Method::RmaLockall;
+        let rma = run_median(&spec, opts.reps).redist_time;
+        col_row.push(col);
+        rma_row.push(rma);
+    }
+    // Report the speedup of RMA relative to COL per rate (>1 ⇒ RMA wins).
+    let ratio: Vec<f64> = col_row.iter().zip(&rma_row).map(|(c, r)| c / r).collect();
+    t.row("COL/RMA", ratio);
+    t.row("COL (s)", col_row);
+    t.row("RMA (s)", rma_row);
+    t
+}
+
+/// DESIGN.md §6 ablation: blocking COL vs RMA-Lockall as the MPICH
+/// eager→rendezvous switchover varies.  The rendezvous handshake taxes
+/// every two-sided bulk message but no one-sided read, so a *lower*
+/// threshold (more rendezvous traffic) shifts the balance toward RMA.
+pub fn eager_sweep(opts: &FigOptions, ns: usize, nd: usize) -> FigureTable {
+    let thresholds: [u64; 4] = [4 << 10, 64 << 10, 512 << 10, 8 << 20];
+    let cols: Vec<String> = thresholds
+        .iter()
+        .map(|t| crate::util::stats::fmt_bytes(*t))
+        .collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(
+        &format!("Ablation (§6): RMA/COL blocking ratio at {ns}->{nd} vs eager threshold"),
+        "version",
+        &col_refs,
+        0,
+    )
+    .with_unit(Unit::Ratio, false);
+    let mut col_row = Vec::new();
+    let mut rma_row = Vec::new();
+    for &thr in &thresholds {
+        let mut spec = opts.spec(ns, nd, Method::Collective, Strategy::Blocking);
+        spec.net.eager_threshold = thr;
+        let col = run_median(&spec, opts.reps).redist_time;
+        spec.method = Method::RmaLockall;
+        let rma = run_median(&spec, opts.reps).redist_time;
+        col_row.push(col);
+        rma_row.push(rma);
+    }
+    let ratio: Vec<f64> = col_row.iter().zip(&rma_row).map(|(c, r)| c / r).collect();
+    t.row("COL/RMA", ratio);
+    t.row("COL (s)", col_row);
+    t.row("RMA (s)", rma_row);
+    t
+}
+
+// Arc is used by sibling experiment modules through re-export paths;
+// silence the lint locally where the closure-based launchers need it.
+#[allow(unused)]
+fn _keep(_: Arc<()>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_window_is_never_slower() {
+        let opts = FigOptions { pairs: vec![(8, 4)], scale: 10_000, ..FigOptions::quick() };
+        let spec = opts.spec(8, 4, Method::RmaLockall, Strategy::Blocking);
+        let a = time_rma_blocking(8, 4, &spec.sam, &spec.net, false, true);
+        let b = time_rma_blocking(8, 4, &spec.sam, &spec.net, true, true);
+        assert!(a.is_finite() && b.is_finite());
+        // One collective create+free instead of three: must not lose.
+        assert!(b <= a + 1e-9, "fused={b} per-struct={a}");
+    }
+
+    #[test]
+    fn eager_sweep_runs_and_is_finite() {
+        let opts = FigOptions { reps: 1, scale: 1000, pairs: vec![], seed: 4 };
+        let t = eager_sweep(&opts, 8, 4);
+        for c in 0..4 {
+            assert!(t.value(0, c).is_finite() && t.value(0, c) > 0.0);
+        }
+    }
+
+    #[test]
+    fn registration_sweep_monotone() {
+        let opts = FigOptions { reps: 1, scale: 1000, pairs: vec![], seed: 3 };
+        let t = registration_sweep(&opts, 20, 40);
+        // Faster registration → RMA relatively better (ratio grows).
+        let first = t.value(0, 0);
+        let last = t.value(0, 4);
+        assert!(
+            last > first,
+            "RMA should gain as registration gets faster: {first} → {last}"
+        );
+    }
+}

@@ -1,0 +1,324 @@
+//! Experiment harnesses — one generator per table/figure of §V, plus
+//! the ablations motivated by §VI (future work).
+//!
+//! Every generator sweeps the paper's 12 reconfiguration pairs
+//! (§V-A) for its version set and renders the same rows/series the
+//! paper reports, including the speedups relative to the first bar.
+//! The generators are used both by the `proteo exp figN` CLI and by
+//! the `bench_figN_*` bench targets.
+//!
+//! [`FigOptions::quick`] shrinks the problem 100× and runs 1
+//! repetition — same code path, CI-friendly runtime.
+
+use crate::mam::{version_label, Method, Strategy};
+use crate::proteo::{analysis, run_median, sarteco25_pairs, RunResult, RunSpec};
+use crate::util::benchkit::{FigureTable, Unit};
+
+/// Sweep options shared by all figure generators.
+#[derive(Clone, Debug)]
+pub struct FigOptions {
+    /// Repetitions per point (paper: 20; default here: 3).
+    pub reps: usize,
+    /// Divide the problem size (structure elements and per-iteration
+    /// flops) by this factor.
+    pub scale: u64,
+    /// Restrict to a subset of pairs (empty = all 12).
+    pub pairs: Vec<(usize, usize)>,
+    pub seed: u64,
+}
+
+impl Default for FigOptions {
+    fn default() -> Self {
+        FigOptions { reps: 3, scale: 1, pairs: Vec::new(), seed: 0xC0FFEE }
+    }
+}
+
+impl FigOptions {
+    /// Options for the bench targets: full scale and all 12 pairs by
+    /// default, tunable through `PROTEO_BENCH_REPS` / `_SCALE` /
+    /// `_PAIRS` (e.g. `PROTEO_BENCH_PAIRS=20:160,160:20`).
+    pub fn bench() -> FigOptions {
+        let env_u64 = |k: &str, d: u64| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        let pairs = std::env::var("PROTEO_BENCH_PAIRS")
+            .ok()
+            .map(|v| {
+                v.split(',')
+                    .filter_map(|p| {
+                        let (a, b) = p.split_once(':')?;
+                        Some((a.trim().parse().ok()?, b.trim().parse().ok()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        FigOptions {
+            reps: env_u64("PROTEO_BENCH_REPS", 3) as usize,
+            scale: env_u64("PROTEO_BENCH_SCALE", 1).max(1),
+            pairs,
+            seed: env_u64("PROTEO_BENCH_SEED", 0xC0FFEE),
+        }
+    }
+
+    /// CI-sized sweep: 100× smaller problem, 1 rep, 4 corner pairs.
+    pub fn quick() -> FigOptions {
+        FigOptions {
+            reps: 1,
+            scale: 100,
+            pairs: vec![(20, 160), (160, 20), (40, 80), (160, 40)],
+            seed: 0xC0FFEE,
+        }
+    }
+
+    pub fn pairs(&self) -> Vec<(usize, usize)> {
+        if self.pairs.is_empty() {
+            sarteco25_pairs()
+        } else {
+            self.pairs.clone()
+        }
+    }
+
+    /// Build the run spec for one point of the sweep.
+    pub fn spec(&self, ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
+        let mut spec = RunSpec::sarteco25(ns, nd, m, s);
+        spec.seed = self.seed;
+        if self.scale > 1 {
+            spec.sam.matrix_elems /= self.scale;
+            spec.sam.colind_elems /= self.scale;
+            spec.sam.rowptr_elems = (spec.sam.rowptr_elems / self.scale).max(16);
+            spec.sam.vector_elems = (spec.sam.vector_elems / self.scale).max(16);
+            spec.sam.flops_per_iter /= self.scale as f64;
+        }
+        spec
+    }
+
+    /// Run one version set over the selected pairs.
+    pub fn sweep(&self, versions: &[(Method, Strategy)]) -> Vec<PairResults> {
+        self.pairs()
+            .into_iter()
+            .map(|(ns, nd)| {
+                let results = versions
+                    .iter()
+                    .map(|&(m, s)| run_median(&self.spec(ns, nd, m, s), self.reps))
+                    .collect();
+                PairResults { ns, nd, results }
+            })
+            .collect()
+    }
+}
+
+/// All versions' results for one pair P.
+#[derive(Clone, Debug)]
+pub struct PairResults {
+    pub ns: usize,
+    pub nd: usize,
+    pub results: Vec<RunResult>,
+}
+
+impl PairResults {
+    pub fn pair_label(&self) -> String {
+        format!("{}->{}", self.ns, self.nd)
+    }
+}
+
+/// The blocking version set (Fig. 3).
+pub fn blocking_versions() -> Vec<(Method, Strategy)> {
+    vec![
+        (Method::Collective, Strategy::Blocking),
+        (Method::RmaLock, Strategy::Blocking),
+        (Method::RmaLockall, Strategy::Blocking),
+    ]
+}
+
+/// The NB + WD version set of §V-C (Figs. 4–6).
+pub fn nbwd_versions() -> Vec<(Method, Strategy)> {
+    vec![
+        (Method::Collective, Strategy::NonBlocking),
+        (Method::Collective, Strategy::WaitDrains),
+        (Method::RmaLock, Strategy::WaitDrains),
+        (Method::RmaLockall, Strategy::WaitDrains),
+    ]
+}
+
+/// The threading version set of §V-D (Figs. 7–9).
+pub fn threading_versions() -> Vec<(Method, Strategy)> {
+    vec![
+        (Method::Collective, Strategy::Threading),
+        (Method::RmaLock, Strategy::Threading),
+        (Method::RmaLockall, Strategy::Threading),
+    ]
+}
+
+fn labels(versions: &[(Method, Strategy)]) -> Vec<String> {
+    versions.iter().map(|&(m, s)| version_label(m, s)).collect()
+}
+
+fn table(
+    title: &str,
+    versions: &[(Method, Strategy)],
+    sweep: &[PairResults],
+    value: impl Fn(&PairResults, usize) -> f64,
+) -> FigureTable {
+    let labels = labels(versions);
+    let cols: Vec<&str> = labels.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(title, "NS->ND", &cols, 0);
+    for pr in sweep {
+        let row: Vec<f64> = (0..versions.len()).map(|v| value(pr, v)).collect();
+        t.row(&pr.pair_label(), row);
+    }
+    t
+}
+
+/// **Fig. 3** — reconfiguration time of the blocking versions, with
+/// speedups relative to COL.
+pub fn fig3_blocking(opts: &FigOptions) -> FigureTable {
+    let versions = blocking_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 3: blocking redistribution time (s), speedup vs COL",
+        &versions,
+        &sweep,
+        |pr, v| pr.results[v].redist_time,
+    )
+}
+
+/// **Fig. 4** — total time after applying Eq. (2) to the NB/WD set,
+/// with speedups relative to COL-NB.
+pub fn fig4_nonblocking(opts: &FigOptions) -> FigureTable {
+    let versions = nbwd_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 4: Eq.(2) total time (s), NB/WD versions, speedup vs COL-NB",
+        &versions,
+        &sweep,
+        |pr, v| analysis::eq2_totals(&pr.results)[v],
+    )
+}
+
+/// **Fig. 5** — ω = T_bg/T_base for the NB/WD set.
+pub fn fig5_omega(opts: &FigOptions) -> FigureTable {
+    let versions = nbwd_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 5: omega = T_bg/T_base, NB/WD versions",
+        &versions,
+        &sweep,
+        |pr, v| pr.results[v].omega,
+    )
+    .with_unit(Unit::Ratio, false)
+}
+
+/// **Fig. 6** — iterations overlapped with the background
+/// redistribution, NB/WD set.
+pub fn fig6_iterations(opts: &FigOptions) -> FigureTable {
+    let versions = nbwd_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 6: overlapped iterations, NB/WD versions",
+        &versions,
+        &sweep,
+        |pr, v| pr.results[v].n_it,
+    )
+    .with_unit(Unit::Count, false)
+}
+
+/// **Fig. 7** — Eq. (2) totals for the threading set, speedup vs COL-T.
+pub fn fig7_threading(opts: &FigOptions) -> FigureTable {
+    let versions = threading_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 7: Eq.(2) total time (s), T versions, speedup vs COL-T",
+        &versions,
+        &sweep,
+        |pr, v| analysis::eq2_totals(&pr.results)[v],
+    )
+}
+
+/// **Fig. 8** — ω for the threading set.
+pub fn fig8_omega_threading(opts: &FigOptions) -> FigureTable {
+    let versions = threading_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 8: omega = T_bg/T_base, T versions",
+        &versions,
+        &sweep,
+        |pr, v| pr.results[v].omega,
+    )
+    .with_unit(Unit::Ratio, false)
+}
+
+/// **Fig. 9** — overlapped iterations, threading set.
+pub fn fig9_iterations_threading(opts: &FigOptions) -> FigureTable {
+    let versions = threading_versions();
+    let sweep = opts.sweep(&versions);
+    table(
+        "Fig. 9: overlapped iterations, T versions",
+        &versions,
+        &sweep,
+        |pr, v| pr.results[v].n_it,
+    )
+    .with_unit(Unit::Count, false)
+}
+
+/// Dispatch a figure by id ("fig3".."fig9").
+pub fn by_name(name: &str, opts: &FigOptions) -> Option<FigureTable> {
+    Some(match name {
+        "fig3" => fig3_blocking(opts),
+        "fig4" => fig4_nonblocking(opts),
+        "fig5" => fig5_omega(opts),
+        "fig6" => fig6_iterations(opts),
+        "fig7" => fig7_threading(opts),
+        "fig8" => fig8_omega_threading(opts),
+        "fig9" => fig9_iterations_threading(opts),
+        _ => return None,
+    })
+}
+
+pub mod ablation;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig3_has_expected_shape() {
+        let t = fig3_blocking(&FigOptions::quick());
+        let s = t.render();
+        assert!(s.contains("COL"), "{s}");
+        assert!(s.contains("RMA-Lock"), "{s}");
+        assert!(s.contains("20->160"), "{s}");
+        // RMA must be slower than COL where registration dominates
+        // (growing from few sources), reproducing Fig. 3's band.
+        let grow_speedup = t.speedup(0, 1); // row 0 = 20->160, col RMA-Lock
+        assert!(
+            grow_speedup < 1.0,
+            "RMA should be slower than COL at 20->160: {grow_speedup}"
+        );
+    }
+
+    #[test]
+    fn quick_fig6_rma_overlaps_fewer_iterations_on_grow() {
+        // Needs the paper-sized problem for the progress-model gap
+        // between COL and RMA to show (small problems overlap roughly
+        // equally); one rep of one pair stays under a second.
+        let opts = FigOptions {
+            pairs: vec![(20, 160)],
+            scale: 1,
+            ..FigOptions::quick()
+        };
+        let t = fig6_iterations(&opts);
+        // columns: COL-NB, COL-WD, RMA-Lock-WD, RMA-Lockall-WD
+        let col_nb = t.value(0, 0);
+        let rma_wd = t.value(0, 2);
+        assert!(
+            rma_wd < col_nb,
+            "RMA should overlap fewer iterations: rma={rma_wd} col={col_nb}"
+        );
+    }
+
+    #[test]
+    fn by_name_dispatches() {
+        assert!(by_name("fig3", &FigOptions::quick()).is_some());
+        assert!(by_name("fig42", &FigOptions::quick()).is_none());
+    }
+}

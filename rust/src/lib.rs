@@ -1,0 +1,49 @@
+//! # proteo-rma
+//!
+//! Reproduction of **"Dynamic reconfiguration for malleable
+//! applications using RMA"** (Martín-Álvarez, Aliaga, Castillo —
+//! CS.DC 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper extends the Proteo/MaM malleability framework with
+//! one-sided (MPI-RMA) data-redistribution methods and evaluates them
+//! against the collective (`MPI_Alltoallv`) baseline on a synthetic
+//! Conjugate-Gradient application.  This crate rebuilds the entire
+//! stack on a deterministic discrete-event cluster simulator:
+//!
+//! * [`simcluster`] — the DES engine (virtual clock, simulated
+//!   processes as real threads),
+//! * [`netmodel`] — calibrated α-β network/NIC/registration cost model
+//!   of the paper's 8-node InfiniBand EDR testbed,
+//! * [`simmpi`] — an MPI-4-like runtime (p2p, collectives, passive-
+//!   target RMA, dynamic process spawning) on top of the DES,
+//! * [`mam`] — the Malleability Module: MaM's process management
+//!   (*Merge*), block data redistribution (Algorithm 1), the
+//!   redistribution methods (COL, RMA-Lock, RMA-Lockall) and
+//!   strategies (Blocking, Non-Blocking, Wait Drains, Threading),
+//! * [`sam`] — the Synthetic Application Module emulating CG,
+//! * [`rms`] — a miniature resource manager driving reconfigurations,
+//! * [`proteo`] — experiment runner implementing §V's methodology
+//!   (Eq. 1–3) and the figure harnesses,
+//! * [`linalg`] — real CSR/CG substrate for end-to-end validation,
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   CG step from `artifacts/` on the Rust side,
+//! * [`monitor`], [`config`], [`util`] — metrics, config system and
+//!   self-contained substrates (JSON, CLI, bench harness, property
+//!   testing, PRNG, stats).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod experiments;
+pub mod linalg;
+pub mod mam;
+pub mod monitor;
+pub mod netmodel;
+pub mod proteo;
+pub mod rms;
+pub mod runtime;
+pub mod sam;
+pub mod simcluster;
+pub mod simmpi;
+pub mod util;

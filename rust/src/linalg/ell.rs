@@ -1,0 +1,182 @@
+//! Block-ELL sparse format — the Rust mirror of the L1 kernel's input
+//! layout (`python/compile/kernels/spmv_ell.py`).
+//!
+//! The matrix is cut into `BR×BC` dense blocks; each block row stores
+//! exactly `K` blocks (zero-padded) plus their block-column indices.
+//! [`EllMatrix::from_csr`] converts any [`Csr`](super::Csr) matrix;
+//! [`EllMatrix::laplacian_2d`] builds the grid problem with the exact
+//! slot layout of the Python generator, so the AOT-compiled CG step
+//! and the Rust CG run on bitwise-identical operands.
+
+use super::Csr;
+
+/// A block-ELL matrix in the kernel's memory layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllMatrix {
+    pub nbr: usize,
+    pub k: usize,
+    pub br: usize,
+    pub bc: usize,
+    /// Row-major (nbr, K, BR, BC).
+    pub data: Vec<f32>,
+    /// Row-major (nbr, K).
+    pub idx: Vec<i32>,
+}
+
+impl EllMatrix {
+    pub fn n_rows(&self) -> usize {
+        self.nbr * self.br
+    }
+
+    /// Convert a CSR matrix.  `k_hint = None` sizes K to the densest
+    /// block row; a given K must fit (panics otherwise).
+    pub fn from_csr(a: &Csr, br: usize, bc: usize, k_hint: Option<usize>) -> EllMatrix {
+        assert!(a.n % br == 0 && a.n % bc == 0, "n must be divisible by BR and BC");
+        let nbr = a.n / br;
+        let nbc = a.n / bc;
+        // Pass 1: which block columns does each block row touch?
+        let mut touched: Vec<Vec<usize>> = vec![Vec::new(); nbr];
+        for i in 0..nbr {
+            let mut mask = vec![false; nbc];
+            for r in (i * br)..((i + 1) * br) {
+                for kk in a.row_ptr[r]..a.row_ptr[r + 1] {
+                    mask[a.col_idx[kk] / bc] = true;
+                }
+            }
+            touched[i] = (0..nbc).filter(|&c| mask[c]).collect();
+        }
+        let kmax = touched.iter().map(|t| t.len()).max().unwrap_or(0).max(1);
+        let k = match k_hint {
+            Some(k) => {
+                assert!(k >= kmax, "K={k} too small: densest block row needs {kmax}");
+                k
+            }
+            None => kmax,
+        };
+        // Pass 2: scatter values into the dense blocks.
+        let mut data = vec![0.0f32; nbr * k * br * bc];
+        let mut idx = vec![0i32; nbr * k];
+        for i in 0..nbr {
+            let slot_of = |c: usize| touched[i].iter().position(|&t| t == c).unwrap();
+            for (s, &c) in touched[i].iter().enumerate() {
+                idx[i * k + s] = c as i32;
+            }
+            for r in (i * br)..((i + 1) * br) {
+                for kk in a.row_ptr[r]..a.row_ptr[r + 1] {
+                    let c = a.col_idx[kk];
+                    let s = slot_of(c / bc);
+                    let off = ((i * k + s) * br + (r - i * br)) * bc + (c % bc);
+                    data[off] += a.vals[kk] as f32;
+                }
+            }
+        }
+        EllMatrix { nbr, k, br, bc, data, idx }
+    }
+
+    /// The grid×grid 5-point Laplacian with BR = BC = grid and K = 3 —
+    /// slot layout identical to `ref.laplacian_2d_block_ell` in Python
+    /// (slot 0: block col i−1, slot 1: diagonal, slot 2: i+1).
+    pub fn laplacian_2d(grid: usize) -> EllMatrix {
+        let (nbr, k, br, bc) = (grid, 3usize, grid, grid);
+        let mut data = vec![0.0f32; nbr * k * br * bc];
+        let mut idx = vec![0i32; nbr * k];
+        let put = |data: &mut [f32], i: usize, s: usize, r: usize, c: usize, v: f32| {
+            data[((i * k + s) * br + r) * bc + c] += v;
+        };
+        for i in 0..nbr {
+            if i > 0 {
+                idx[i * k] = (i - 1) as i32;
+                for r in 0..br {
+                    put(&mut data, i, 0, r, r, -1.0);
+                }
+            }
+            idx[i * k + 1] = i as i32;
+            for r in 0..br {
+                put(&mut data, i, 1, r, r, 4.0);
+                if r > 0 {
+                    put(&mut data, i, 1, r, r - 1, -1.0);
+                }
+                if r + 1 < br {
+                    put(&mut data, i, 1, r, r + 1, -1.0);
+                }
+            }
+            if i + 1 < nbr {
+                idx[i * k + 2] = (i + 1) as i32;
+                for r in 0..br {
+                    put(&mut data, i, 2, r, r, -1.0);
+                }
+            }
+        }
+        EllMatrix { nbr, k, br, bc, data, idx }
+    }
+
+    /// Reference SpMV over the block-ELL layout (f32, mirrors the
+    /// kernel semantics including duplicate-slot accumulation).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len() % self.bc, 0);
+        let mut y = vec![0.0f32; self.n_rows()];
+        for i in 0..self.nbr {
+            for s in 0..self.k {
+                let col = self.idx[i * self.k + s] as usize;
+                for r in 0..self.br {
+                    let base = ((i * self.k + s) * self.br + r) * self.bc;
+                    let mut acc = 0.0f32;
+                    for c in 0..self.bc {
+                        acc += self.data[base + c] * x[col * self.bc + c];
+                    }
+                    y[i * self.br + r] += acc;
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{laplacian_2d, spmv};
+    use super::*;
+
+    #[test]
+    fn from_csr_roundtrips_spmv() {
+        let a = laplacian_2d(8);
+        let e = EllMatrix::from_csr(&a, 8, 8, None);
+        assert_eq!(e.k, 3, "5-point stencil with BR=grid needs K=3");
+        let x: Vec<f64> = (0..a.n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = vec![0.0; a.n];
+        spmv(&a, &x, &mut y);
+        let ye = e.spmv(&xf);
+        for (a, b) in y.iter().zip(&ye) {
+            assert!((a - *b as f64).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn builtin_laplacian_matches_csr_conversion() {
+        let direct = EllMatrix::laplacian_2d(6);
+        let converted = EllMatrix::from_csr(&laplacian_2d(6), 6, 6, Some(3));
+        // Same SpMV results (slot ordering may differ only in padding).
+        let x: Vec<f32> = (0..36).map(|i| (i as f32).cos()).collect();
+        let y1 = direct.spmv(&x);
+        let y2 = converted.spmv(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn k_hint_too_small_panics() {
+        EllMatrix::from_csr(&laplacian_2d(4), 4, 4, Some(1));
+    }
+
+    #[test]
+    fn padding_slots_are_zero_blocks() {
+        // First block row has no i-1 neighbour: slot 0 must be zeros.
+        let e = EllMatrix::laplacian_2d(4);
+        let first_block = &e.data[0..16];
+        assert!(first_block.iter().all(|&v| v == 0.0));
+        assert_eq!(e.idx[0], 0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Real linear-algebra substrate: CSR matrices, test-problem
+//! generators and a Conjugate Gradient solver ([25] in the paper).
+//!
+//! This backs the end-to-end examples: a *real* CG solve runs through
+//! the malleability machinery (blocks of the CSR arrays and the
+//! iterate are what MaM redistributes), and its per-iteration compute
+//! can be executed either by [`spmv`]/[`cg`] here or by the
+//! AOT-compiled JAX/Pallas step through [`runtime`](crate::runtime).
+//! Both paths must produce the same residual history — that is the
+//! cross-layer validation.
+
+pub mod ell;
+
+pub use ell::EllMatrix;
+
+/// Compressed-sparse-row matrix (square).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Validate structural invariants; returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n + 1 {
+            return Err(format!("row_ptr len {} != n+1", self.row_ptr.len()));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err("row_ptr endpoints wrong".into());
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err("col_idx/vals length mismatch".into());
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err("row_ptr not monotone".into());
+            }
+        }
+        if self.col_idx.iter().any(|&c| c >= self.n) {
+            return Err("column index out of range".into());
+        }
+        Ok(())
+    }
+
+    /// Rows `[r0, r1)` as a standalone shard (local row_ptr rebased).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> CsrShard {
+        assert!(r0 <= r1 && r1 <= self.n);
+        let lo = self.row_ptr[r0];
+        let hi = self.row_ptr[r1];
+        CsrShard {
+            n_global: self.n,
+            row0: r0,
+            row_ptr: self.row_ptr[r0..=r1].iter().map(|p| p - lo).collect(),
+            col_idx: self.col_idx[lo..hi].to_vec(),
+            vals: self.vals[lo..hi].to_vec(),
+        }
+    }
+}
+
+/// A contiguous row shard of a global CSR matrix (what one rank owns
+/// under the block distribution).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrShard {
+    pub n_global: usize,
+    pub row0: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CsrShard {
+    pub fn rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// y = A_shard · x (x is the full global vector).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_global);
+        assert_eq!(y.len(), self.rows());
+        for r in 0..self.rows() {
+            let mut acc = 0.0;
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.vals[k] * x[self.col_idx[k]];
+            }
+            y[r] = acc;
+        }
+    }
+}
+
+/// 1-D Laplacian (tridiagonal [-1, 2, -1]) — SPD, CG-friendly.
+pub fn laplacian_1d(n: usize) -> Csr {
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col_idx = Vec::new();
+    let mut vals = Vec::new();
+    row_ptr.push(0);
+    for i in 0..n {
+        if i > 0 {
+            col_idx.push(i - 1);
+            vals.push(-1.0);
+        }
+        col_idx.push(i);
+        vals.push(2.0);
+        if i + 1 < n {
+            col_idx.push(i + 1);
+            vals.push(-1.0);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr { n, row_ptr, col_idx, vals }
+}
+
+/// 2-D 5-point Laplacian on a `k × k` grid (n = k²) — the classic CG
+/// benchmark problem.
+pub fn laplacian_2d(k: usize) -> Csr {
+    let n = k * k;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col_idx = Vec::new();
+    let mut vals = Vec::new();
+    row_ptr.push(0);
+    for i in 0..k {
+        for j in 0..k {
+            let r = i * k + j;
+            if i > 0 {
+                col_idx.push(r - k);
+                vals.push(-1.0);
+            }
+            if j > 0 {
+                col_idx.push(r - 1);
+                vals.push(-1.0);
+            }
+            col_idx.push(r);
+            vals.push(4.0);
+            if j + 1 < k {
+                col_idx.push(r + 1);
+                vals.push(-1.0);
+            }
+            if i + 1 < k {
+                col_idx.push(r + k);
+                vals.push(-1.0);
+            }
+            row_ptr.push(col_idx.len());
+        }
+    }
+    Csr { n, row_ptr, col_idx, vals }
+}
+
+/// y = A·x for a full CSR matrix.
+pub fn spmv(a: &Csr, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.n);
+    assert_eq!(y.len(), a.n);
+    for r in 0..a.n {
+        let mut acc = 0.0;
+        for k in a.row_ptr[r]..a.row_ptr[r + 1] {
+            acc += a.vals[k] * x[a.col_idx[k]];
+        }
+        y[r] = acc;
+    }
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn norm2(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// Residual history of a CG run.
+#[derive(Clone, Debug)]
+pub struct CgTrace {
+    pub iterations: usize,
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+}
+
+/// Conjugate Gradient ([25]): solve A·x = b to `tol` (relative), at
+/// most `max_iters` iterations.  `x` holds the initial guess and the
+/// solution.
+pub fn cg(a: &Csr, b: &[f64], x: &mut [f64], tol: f64, max_iters: usize) -> CgTrace {
+    let n = a.n;
+    let mut r = vec![0.0; n];
+    let mut ax = vec![0.0; n];
+    spmv(a, x, &mut ax);
+    for i in 0..n {
+        r[i] = b[i] - ax[i];
+    }
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut p = r.clone();
+    let mut rr = dot(&r, &r);
+    let mut residuals = vec![rr.sqrt() / bnorm];
+    let mut ap = vec![0.0; n];
+    for it in 0..max_iters {
+        if residuals.last().unwrap() < &tol {
+            return CgTrace { iterations: it, residuals, converged: true };
+        }
+        spmv(a, &p, &mut ap);
+        let alpha = rr / dot(&p, &ap);
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        let rr_new = dot(&r, &r);
+        let beta = rr_new / rr;
+        rr = rr_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        residuals.push(rr.sqrt() / bnorm);
+    }
+    let converged = residuals.last().unwrap() < &tol;
+    CgTrace { iterations: max_iters, residuals, converged }
+}
+
+/// One explicit CG step (mirrors the L2 JAX `cg_step` executed through
+/// PJRT — the cross-layer equivalence tests compare the two).
+/// State: (x, r, p, rr); returns the updated state.
+#[allow(clippy::type_complexity)]
+pub fn cg_step(
+    a: &Csr,
+    x: &[f64],
+    r: &[f64],
+    p: &[f64],
+    rr: f64,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64) {
+    let n = a.n;
+    let mut ap = vec![0.0; n];
+    spmv(a, p, &mut ap);
+    let alpha = rr / dot(p, &ap);
+    let mut x2 = x.to_vec();
+    axpy(alpha, p, &mut x2);
+    let mut r2 = r.to_vec();
+    axpy(-alpha, &ap, &mut r2);
+    let rr2 = dot(&r2, &r2);
+    let beta = rr2 / rr;
+    let p2: Vec<f64> = r2.iter().zip(p).map(|(ri, pi)| ri + beta * pi).collect();
+    (x2, r2, p2, rr2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplacian_1d_structure() {
+        let a = laplacian_1d(5);
+        a.validate().unwrap();
+        assert_eq!(a.nnz(), 13); // 3*5 - 2
+        let x = vec![1.0; 5];
+        let mut y = vec![0.0; 5];
+        spmv(&a, &x, &mut y);
+        assert_eq!(y, vec![1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn laplacian_2d_structure() {
+        let a = laplacian_2d(4);
+        a.validate().unwrap();
+        assert_eq!(a.n, 16);
+        // interior point has 5 entries, corner 3.
+        let row_nnz: Vec<usize> =
+            (0..16).map(|r| a.row_ptr[r + 1] - a.row_ptr[r]).collect();
+        assert_eq!(row_nnz[0], 3);
+        assert_eq!(row_nnz[5], 5);
+    }
+
+    #[test]
+    fn cg_solves_laplacian() {
+        let a = laplacian_2d(8);
+        let n = a.n;
+        let xs: Vec<f64> = (0..n).map(|i| ((i * 37) % 11) as f64 / 11.0).collect();
+        let mut b = vec![0.0; n];
+        spmv(&a, &xs, &mut b);
+        let mut x = vec![0.0; n];
+        let trace = cg(&a, &b, &mut x, 1e-10, 1000);
+        assert!(trace.converged, "CG did not converge: {:?}", trace.residuals.last());
+        for (xi, xsi) in x.iter().zip(&xs) {
+            assert!((xi - xsi).abs() < 1e-7, "{xi} vs {xsi}");
+        }
+    }
+
+    #[test]
+    fn cg_residuals_monotone_enough() {
+        let a = laplacian_1d(64);
+        let b = vec![1.0; 64];
+        let mut x = vec![0.0; 64];
+        let trace = cg(&a, &b, &mut x, 1e-12, 200);
+        assert!(trace.converged);
+        let first = trace.residuals[0];
+        let last = *trace.residuals.last().unwrap();
+        assert!(last < first * 1e-10);
+    }
+
+    #[test]
+    fn cg_step_matches_full_cg() {
+        // Drive cg_step manually and compare with cg()'s residuals.
+        let a = laplacian_2d(5);
+        let n = a.n;
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let r = b.clone(); // x0 = 0 → r0 = b
+        let p = r.clone();
+        let rr = dot(&r, &r);
+        let (x1, r1, p1, rr1) = cg_step(&a, &x, &r, &p, rr);
+        let (_x2, _r2, _p2, rr2) = cg_step(&a, &x1, &r1, &p1, rr1);
+        let trace = cg(&a, &b, &mut x, 1e-30, 2);
+        let bn = norm2(&b);
+        assert!((rr1.sqrt() / bn - trace.residuals[1]).abs() < 1e-12);
+        assert!((rr2.sqrt() / bn - trace.residuals[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_slice_spmv_matches_global() {
+        let a = laplacian_2d(6);
+        let n = a.n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let mut y = vec![0.0; n];
+        spmv(&a, &x, &mut y);
+        // Split rows over 4 shards and compare.
+        let mut y2 = vec![0.0; n];
+        let bounds = [0, 9, 18, 27, n];
+        for w in bounds.windows(2) {
+            let shard = a.row_slice(w[0], w[1]);
+            let mut part = vec![0.0; shard.rows()];
+            shard.spmv(&x, &mut part);
+            y2[w[0]..w[1]].copy_from_slice(&part);
+        }
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut a = laplacian_1d(4);
+        a.col_idx[0] = 99;
+        assert!(a.validate().is_err());
+        let mut b = laplacian_1d(4);
+        b.row_ptr[2] = 0;
+        assert!(b.validate().is_err());
+    }
+}

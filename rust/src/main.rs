@@ -1,0 +1,334 @@
+//! `proteo` — the command-line launcher.
+//!
+//! ```text
+//! proteo exp fig3            # regenerate a paper figure (fig3..fig9, all)
+//! proteo run --ns 20 --nd 160 --method rma-lockall --strategy wd
+//! proteo ablation single-window
+//! proteo ablation register-sweep --ns 20 --nd 160
+//! proteo cg --iters 200      # AOT JAX/Pallas CG through PJRT
+//! proteo info                # calibration, artifact manifest, versions
+//! ```
+
+use std::process::ExitCode;
+
+use proteo::config::ExperimentConfig;
+use proteo::experiments::{self, ablation, FigOptions};
+use proteo::linalg::EllMatrix;
+use proteo::mam::{Method, Strategy};
+use proteo::netmodel::NetParams;
+use proteo::proteo::{run_median, RunSpec};
+use proteo::runtime::{artifacts_dir, CgRuntime};
+use proteo::util::cli::{Args, Cli, Command};
+use proteo::util::json::Json;
+use proteo::util::stats::{fmt_bytes, fmt_seconds};
+
+fn cli() -> Cli {
+    Cli {
+        prog: "proteo",
+        about: "malleable-MPI reconfiguration study (CS.DC 2025 reproduction)",
+        commands: vec![
+            Command::new("exp", "regenerate a paper figure (fig3..fig9 or 'all')")
+                .opt("reps", "3", "repetitions per point (paper: 20)")
+                .opt("scale", "1", "divide the problem size by this factor")
+                .opt("pairs", "", "comma list like 20:160,160:20 (default: all 12)")
+                .opt("seed", "12648430", "base RNG seed")
+                .flag("quick", "CI-sized sweep (scale 100, 4 pairs, 1 rep)"),
+            Command::new("run", "run a single reconfiguration experiment")
+                .opt("config", "", "JSON config file (overrides other options)")
+                .opt("ns", "20", "source ranks")
+                .opt("nd", "160", "drain ranks")
+                .opt("method", "col", "col | rma-lock | rma-lockall")
+                .opt("strategy", "blocking", "blocking | nb | wd | t")
+                .opt("reps", "3", "repetitions (median reported)")
+                .opt("scale", "1", "problem-size divisor")
+                .opt("seed", "12648430", "base RNG seed")
+                .flag("json", "emit the result as JSON"),
+            Command::new("ablation", "ablations: single-window | register-sweep | eager-sweep")
+                .opt("ns", "20", "source ranks (register-sweep)")
+                .opt("nd", "160", "drain ranks (register-sweep)")
+                .opt("reps", "1", "repetitions")
+                .opt("scale", "1", "problem-size divisor")
+                .flag("quick", "CI-sized sweep"),
+            Command::new("cg", "run the AOT JAX/Pallas CG through PJRT")
+                .opt("iters", "200", "max iterations")
+                .opt("tol", "1e-5", "relative residual target")
+                .opt("artifacts", "", "artifacts dir (default: $PROTEO_ARTIFACTS or artifacts/)"),
+            Command::new("info", "print calibration constants and artifact manifest"),
+        ],
+    }
+}
+
+fn parse_pairs(s: &str) -> Result<Vec<(usize, usize)>, String> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|p| {
+            let (a, b) = p.split_once(':').ok_or_else(|| format!("bad pair '{p}' (want ns:nd)"))?;
+            let ns: usize = a.trim().parse().map_err(|_| format!("bad ns in '{p}'"))?;
+            let nd: usize = b.trim().parse().map_err(|_| format!("bad nd in '{p}'"))?;
+            if ns == 0 || nd == 0 || ns == nd {
+                return Err(format!("invalid pair {ns}:{nd}"));
+            }
+            Ok((ns, nd))
+        })
+        .collect()
+}
+
+fn fig_options(args: &Args) -> Result<FigOptions, String> {
+    let mut opts = if args.flag("quick") {
+        FigOptions::quick()
+    } else {
+        FigOptions::default()
+    };
+    if let Some(r) = args.get_usize("reps") {
+        opts.reps = r.max(1);
+    }
+    if let Some(s) = args.get_usize("scale") {
+        opts.scale = (s as u64).max(1);
+    }
+    if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
+        opts.seed = seed;
+    }
+    if let Some(p) = args.get("pairs") {
+        let pairs = parse_pairs(p)?;
+        if !pairs.is_empty() {
+            opts.pairs = pairs;
+        }
+    }
+    Ok(opts)
+}
+
+fn cmd_exp(args: &Args) -> Result<(), String> {
+    let which = args
+        .positionals()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let opts = fig_options(args)?;
+    let figs: Vec<&str> = if which == "all" {
+        vec!["fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"]
+    } else {
+        vec![which.as_str()]
+    };
+    for f in figs {
+        let table = experiments::by_name(f, &opts)
+            .ok_or_else(|| format!("unknown figure '{f}' (want fig3..fig9)"))?;
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let results = if let Some(path) = args.get("config").filter(|s| !s.is_empty()) {
+        let cfg = ExperimentConfig::from_file(path)?;
+        cfg.pairs
+            .iter()
+            .map(|&(ns, nd)| run_median(&cfg.spec_for(ns, nd), cfg.reps))
+            .collect::<Vec<_>>()
+    } else {
+        let ns = args.get_usize("ns").ok_or("bad --ns")?;
+        let nd = args.get_usize("nd").ok_or("bad --nd")?;
+        let method = Method::parse(args.get("method").unwrap_or("col"))
+            .ok_or("bad --method (col | rma-lock | rma-lockall)")?;
+        let strategy = Strategy::parse(args.get("strategy").unwrap_or("blocking"))
+            .ok_or("bad --strategy (blocking | nb | wd | t)")?;
+        if !proteo::mam::is_valid_version(method, strategy) {
+            return Err("NB is undefined for RMA methods (§V-A); use WD".into());
+        }
+        let mut spec = RunSpec::sarteco25(ns, nd, method, strategy);
+        if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
+            spec.seed = seed;
+        }
+        let scale = args.get_usize("scale").unwrap_or(1).max(1) as u64;
+        if scale > 1 {
+            spec.sam.matrix_elems /= scale;
+            spec.sam.colind_elems /= scale;
+            spec.sam.rowptr_elems = (spec.sam.rowptr_elems / scale).max(16);
+            spec.sam.vector_elems = (spec.sam.vector_elems / scale).max(16);
+            spec.sam.flops_per_iter /= scale as f64;
+        }
+        vec![run_median(&spec, args.get_usize("reps").unwrap_or(3).max(1))]
+    };
+    for r in results {
+        if args.flag("json") {
+            let j = Json::obj(vec![
+                ("version", Json::str(r.label.clone())),
+                ("ns", Json::num(r.ns as f64)),
+                ("nd", Json::num(r.nd as f64)),
+                ("redist_time_s", Json::num(r.redist_time)),
+                ("reconf_total_s", Json::num(r.reconf_total)),
+                ("n_it", Json::num(r.n_it)),
+                ("t_base_s", Json::num(r.t_base)),
+                ("t_bg_s", Json::num(r.t_bg)),
+                ("t_it_nd_s", Json::num(r.t_it_nd)),
+                ("omega", Json::num(r.omega)),
+                ("events", Json::num(r.events as f64)),
+            ]);
+            println!("{}", j.to_pretty());
+        } else {
+            println!(
+                "{:<16} {:>3}->{:<3}  R={:>10}  total={:>10}  n_it={:>4}  t_base={} t_bg={} t_nd={}  omega={:.2}",
+                r.label,
+                r.ns,
+                r.nd,
+                fmt_seconds(r.redist_time),
+                fmt_seconds(r.reconf_total),
+                r.n_it,
+                fmt_seconds(r.t_base),
+                fmt_seconds(r.t_bg),
+                fmt_seconds(r.t_it_nd),
+                r.omega,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<(), String> {
+    let which = args
+        .positionals()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "single-window".to_string());
+    let opts = fig_options(args)?;
+    match which.as_str() {
+        "single-window" => println!("{}", ablation::single_window(&opts).render()),
+        "register-sweep" => {
+            let ns = args.get_usize("ns").ok_or("bad --ns")?;
+            let nd = args.get_usize("nd").ok_or("bad --nd")?;
+            println!("{}", ablation::registration_sweep(&opts, ns, nd).render());
+        }
+        "eager-sweep" => {
+            let ns = args.get_usize("ns").ok_or("bad --ns")?;
+            let nd = args.get_usize("nd").ok_or("bad --nd")?;
+            println!("{}", ablation::eager_sweep(&opts, ns, nd).render());
+        }
+        other => return Err(format!("unknown ablation '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_cg(args: &Args) -> Result<(), String> {
+    let dir = match args.get("artifacts").filter(|s| !s.is_empty()) {
+        Some(d) => std::path::PathBuf::from(d),
+        None => artifacts_dir(),
+    };
+    let rt = CgRuntime::load(&dir).map_err(|e| format!("{e:#}"))?;
+    let m = rt.manifest.clone();
+    println!(
+        "platform={} artifact: n={} grid={} blocks=({},{},{},{}) vmem/step={} mxu flops/step={}",
+        rt.platform(),
+        m.n,
+        m.grid,
+        m.nbr,
+        m.k,
+        m.br,
+        m.bc,
+        fmt_bytes(m.vmem_bytes_per_step),
+        m.mxu_flops_per_step,
+    );
+    let a = EllMatrix::laplacian_2d(m.grid);
+    let b: Vec<f32> = (0..m.n).map(|i| 1.0 + ((i % 7) as f32) * 0.125).collect();
+    let tol: f32 = args.get("tol").and_then(|s| s.parse().ok()).unwrap_or(1e-5);
+    let iters = args.get_usize("iters").unwrap_or(200);
+    let t0 = std::time::Instant::now();
+    let (st, history) = rt.cg_solve(&a, &b, tol, iters).map_err(|e| format!("{e:#}"))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let done = history.len() - 1;
+    println!(
+        "CG: {} iterations, rel residual {:.3e}, rr={:.3e}, wall {:.3}s ({:.2} ms/iter)",
+        done,
+        history.last().unwrap(),
+        st.rr,
+        wall,
+        1e3 * wall / done.max(1) as f64,
+    );
+    for (i, r) in history.iter().enumerate() {
+        if i % 20 == 0 || i + 1 == history.len() {
+            println!("  iter {i:>4}: rel residual {r:.3e}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    let p = NetParams::sarteco25();
+    println!("== calibration (NetParams::sarteco25) ==");
+    println!(
+        "  inter-node: alpha={:.2}us, bw={:.2} GB/s (effective)",
+        p.alpha_inter * 1e6,
+        1e-9 / p.beta_inter
+    );
+    println!(
+        "  intra-node: alpha={:.2}us, bw={:.2} GB/s",
+        p.alpha_intra * 1e6,
+        1e-9 / p.beta_intra
+    );
+    println!("  eager threshold: {}", fmt_bytes(p.eager_threshold));
+    println!(
+        "  registration: {:.2} GB/s, win setup {:.1}us",
+        1e-9 / p.beta_register,
+        p.win_setup * 1e6
+    );
+    println!("  progress chunk: {}", fmt_bytes(p.progress_chunk));
+    println!(
+        "  MT penalties: coll x{}, rma x{}; oversub x{}",
+        p.mt_coll_penalty, p.mt_rma_penalty, p.oversub_factor
+    );
+    let sam = proteo::sam::SamConfig::sarteco25();
+    println!("== workload (SamConfig::sarteco25) ==");
+    println!(
+        "  CSR: vals={} cols={} rowptr={} (total {})",
+        sam.matrix_elems,
+        sam.colind_elems,
+        sam.rowptr_elems,
+        fmt_bytes(sam.total_bytes())
+    );
+    println!(
+        "  T_it(20)={} T_it(160)={}",
+        fmt_seconds(sam.iter_compute(20)),
+        fmt_seconds(sam.iter_compute(160))
+    );
+    match proteo::runtime::Manifest::load(&artifacts_dir()) {
+        Ok(m) => println!(
+            "== artifacts ==\n  n={} grid={} blocks=({},{},{},{}) vmem/step={}",
+            m.n,
+            m.grid,
+            m.nbr,
+            m.k,
+            m.br,
+            m.bc,
+            fmt_bytes(m.vmem_bytes_per_step)
+        ),
+        Err(e) => println!("== artifacts ==\n  not available: {e}"),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let (cmd, args) = match cli.parse(&argv) {
+        Ok(x) => x,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let result = match cmd.name {
+        "exp" => cmd_exp(&args),
+        "run" => cmd_run(&args),
+        "ablation" => cmd_ablation(&args),
+        "cg" => cmd_cg(&args),
+        "info" => cmd_info(),
+        _ => unreachable!(),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! Block data distribution and the paper's **Algorithm 1**.
+//!
+//! MaM distributes one-dimensional structures in contiguous blocks:
+//! rank `r` of `n` owns `[offset, offset+len)` with the remainder
+//! spread over the first ranks.  During a reconfiguration the drain
+//! side computes, per source, how many elements to read and where they
+//! land in the drain buffer — exactly the `counts`/`displs`/
+//! `first_source`/`last_source`/`first_index` computation of
+//! Algorithm 1 (§IV-B).
+
+/// Contiguous block `[ini, end)` owned by a rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub ini: u64,
+    pub end: u64,
+}
+
+impl Block {
+    pub fn len(&self) -> u64 {
+        self.end - self.ini
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ini >= self.end
+    }
+}
+
+/// Block of rank `r` in an `n`-way distribution of `total` elements
+/// (`Block_id` in the paper's pseudocode).
+pub fn block_of(total: u64, n: usize, r: usize) -> Block {
+    assert!(r < n, "rank {r} out of {n}");
+    let n64 = n as u64;
+    let base = total / n64;
+    let rem = total % n64;
+    let r64 = r as u64;
+    let ini = r64 * base + r64.min(rem);
+    let len = base + u64::from(r64 < rem);
+    Block { ini, end: ini + len }
+}
+
+/// Output of Algorithm 1 for one drain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DrainPlan {
+    /// Elements to read from each source (len = NS).
+    pub counts: Vec<u64>,
+    /// Destination offsets in the drain buffer (len = NS + 1;
+    /// `displs[i+1] = displs[i] + counts[i]`, as in the paper).
+    pub displs: Vec<u64>,
+    /// First source with a non-empty intersection (`usize::MAX` if the
+    /// drain receives nothing — zero-length block).
+    pub first_source: usize,
+    /// One past the last source with a non-empty intersection.
+    pub last_source: usize,
+    /// Offset within `first_source`'s block where reading starts.
+    pub first_index: u64,
+    /// This drain's target block.
+    pub block: Block,
+}
+
+/// Algorithm 1: communication parameters on the drain side.
+///
+/// `total` elements move from an `ns`-way to an `nd`-way block
+/// distribution; `my_id` is the drain rank.
+pub fn drain_plan(total: u64, ns: usize, nd: usize, my_id: usize) -> DrainPlan {
+    let block = block_of(total, nd, my_id); // L2
+    let mut counts = vec![0u64; ns]; // L3
+    let mut displs = vec![0u64; ns + 1]; // L4
+    let mut first_source = usize::MAX; // L5
+    let mut last_source = ns;
+    let mut first_index = 0u64;
+    let (ini, end) = (block.ini, block.end);
+    let mut stopped_at = ns;
+    for i in 0..ns {
+        // L6
+        let s = block_of(total, ns, i); // L7
+        if ini < s.end && end > s.ini {
+            // L8: non-empty intersection
+            if first_source == usize::MAX {
+                // L9
+                first_source = i; // L10
+                first_index = ini - s.ini; // L11
+            }
+            let big_ini = ini.max(s.ini); // L13
+            let small_end = end.min(s.end); // L14
+            counts[i] = small_end - big_ini; // L15
+            displs[i + 1] = displs[i] + counts[i]; // L16
+        } else {
+            displs[i + 1] = displs[i];
+            if first_source != usize::MAX {
+                // L18
+                last_source = i; // L19
+                stopped_at = i + 1;
+                break; // L20
+            }
+        }
+    }
+    // Carry the prefix sum past the early exit so `displs` stays a
+    // complete prefix-sum array (counts are all zero beyond the break).
+    for k in stopped_at..ns {
+        displs[k + 1] = displs[k];
+    }
+    if first_source == usize::MAX {
+        last_source = 0;
+        first_index = 0;
+    }
+    DrainPlan { counts, displs, first_source, last_source, first_index, block }
+}
+
+/// Source-side mirror of Algorithm 1 (used by the collective method to
+/// build `MPI_Alltoallv` send counts): how many of source `my_id`'s
+/// elements go to each drain, and from which local offset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SourcePlan {
+    /// Elements sent to each drain (len = ND).
+    pub counts: Vec<u64>,
+    /// Local offsets within this source's block (len = ND + 1).
+    pub displs: Vec<u64>,
+    /// This source's owned block.
+    pub block: Block,
+}
+
+pub fn source_plan(total: u64, ns: usize, nd: usize, my_id: usize) -> SourcePlan {
+    let block = block_of(total, ns, my_id);
+    let mut counts = vec![0u64; nd];
+    let mut displs = vec![0u64; nd + 1];
+    for j in 0..nd {
+        let d = block_of(total, nd, j);
+        if block.ini < d.end && block.end > d.ini {
+            let big_ini = block.ini.max(d.ini);
+            let small_end = block.end.min(d.end);
+            counts[j] = small_end - big_ini;
+        }
+        displs[j + 1] = displs[j] + counts[j];
+    }
+    SourcePlan { counts, displs, block }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::*;
+
+    #[test]
+    fn block_of_even_split() {
+        assert_eq!(block_of(100, 4, 0), Block { ini: 0, end: 25 });
+        assert_eq!(block_of(100, 4, 3), Block { ini: 75, end: 100 });
+    }
+
+    #[test]
+    fn block_of_remainder_goes_first() {
+        // 10 over 3: 4,3,3
+        assert_eq!(block_of(10, 3, 0).len(), 4);
+        assert_eq!(block_of(10, 3, 1).len(), 3);
+        assert_eq!(block_of(10, 3, 2).len(), 3);
+        assert_eq!(block_of(10, 3, 2).end, 10);
+    }
+
+    #[test]
+    fn blocks_partition_domain() {
+        for &(total, n) in &[(100u64, 7usize), (5, 8), (0, 3), (64, 64)] {
+            let mut next = 0;
+            for r in 0..n {
+                let b = block_of(total, n, r);
+                assert_eq!(b.ini, next, "gap at rank {r}");
+                next = b.end;
+            }
+            assert_eq!(next, total);
+        }
+    }
+
+    #[test]
+    fn drain_plan_identity_when_sizes_match() {
+        // NS == ND: each drain reads exactly its own block from the
+        // matching source.
+        let p = drain_plan(100, 4, 4, 2);
+        assert_eq!(p.first_source, 2);
+        assert_eq!(p.last_source, 3);
+        assert_eq!(p.first_index, 0);
+        assert_eq!(p.counts, vec![0, 0, 25, 0]);
+    }
+
+    #[test]
+    fn drain_plan_grow_splits_sources() {
+        // 100 elems, 2 sources (50 each), 4 drains (25 each).
+        // Drain 1 owns [25,50) — entirely within source 0's [0,50).
+        let p = drain_plan(100, 2, 4, 1);
+        assert_eq!(p.counts, vec![25, 0]);
+        assert_eq!(p.first_source, 0);
+        assert_eq!(p.first_index, 25);
+        // Drain 2 owns [50,75) — within source 1.
+        let p = drain_plan(100, 2, 4, 2);
+        assert_eq!(p.counts, vec![0, 25]);
+        assert_eq!(p.first_source, 1);
+        assert_eq!(p.first_index, 0);
+    }
+
+    #[test]
+    fn drain_plan_shrink_merges_sources() {
+        // 100 elems, 4 sources (25 each), 2 drains (50 each).
+        let p = drain_plan(100, 4, 2, 0);
+        assert_eq!(p.counts, vec![25, 25, 0, 0]);
+        assert_eq!(p.first_source, 0);
+        assert_eq!(p.last_source, 2);
+        assert_eq!(p.displs, vec![0, 25, 50, 50, 50]);
+        let p = drain_plan(100, 4, 2, 1);
+        assert_eq!(p.counts, vec![0, 0, 25, 25]);
+        assert_eq!(p.first_source, 2);
+        assert_eq!(p.last_source, 4);
+    }
+
+    #[test]
+    fn drain_plan_unaligned_boundaries() {
+        // 10 elems: 3 sources → 4,3,3 ; 2 drains → 5,5.
+        // Drain 0 [0,5): 4 from s0, 1 from s1.
+        let p = drain_plan(10, 3, 2, 0);
+        assert_eq!(p.counts, vec![4, 1, 0]);
+        assert_eq!(p.first_index, 0);
+        // Drain 1 [5,10): 2 from s1 (offset 1), 3 from s2.
+        let p = drain_plan(10, 3, 2, 1);
+        assert_eq!(p.counts, vec![0, 2, 3]);
+        assert_eq!(p.first_source, 1);
+        assert_eq!(p.first_index, 1); // s1 owns [4,7); drain starts at 5
+    }
+
+    #[test]
+    fn drain_plan_empty_block() {
+        // More drains than elements: trailing drains own nothing.
+        let p = drain_plan(2, 1, 4, 3);
+        assert!(p.block.is_empty());
+        assert_eq!(p.first_source, usize::MAX);
+        assert_eq!(p.counts, vec![0]);
+    }
+
+    #[test]
+    fn source_plan_mirrors_drain_plan() {
+        let (total, ns, nd) = (103u64, 5usize, 3usize);
+        for s in 0..ns {
+            let sp = source_plan(total, ns, nd, s);
+            for d in 0..nd {
+                let dp = drain_plan(total, ns, nd, d);
+                assert_eq!(
+                    sp.counts[d], dp.counts[s],
+                    "mismatch source {s} drain {d}"
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------ properties
+
+    #[test]
+    fn prop_counts_sum_to_drain_block() {
+        check(
+            "Σcounts == drain block length",
+            usizes(1, 64).pair(usizes(1, 64)).pair(usizes(0, 10_000)),
+            |((ns, nd), total)| {
+                let total = total as u64;
+                (0..nd).all(|d| {
+                    let p = drain_plan(total, ns, nd, d);
+                    p.counts.iter().sum::<u64>() == p.block.len()
+                        && *p.displs.last().unwrap() == p.block.len()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_displs_monotone_and_match_counts() {
+        check(
+            "displs are prefix sums",
+            usizes(1, 32).pair(usizes(1, 32)).pair(usizes(1, 5_000)),
+            |((ns, nd), total)| {
+                let total = total as u64;
+                (0..nd).all(|d| {
+                    let p = drain_plan(total, ns, nd, d);
+                    (0..ns).all(|i| p.displs[i + 1] == p.displs[i] + p.counts[i])
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_source_range_is_contiguous() {
+        // Non-zero counts appear only in [first_source, last_source).
+        check(
+            "intersecting sources are contiguous",
+            usizes(1, 48).pair(usizes(1, 48)).pair(usizes(1, 9_999)),
+            |((ns, nd), total)| {
+                let total = total as u64;
+                (0..nd).all(|d| {
+                    let p = drain_plan(total, ns, nd, d);
+                    if p.block.is_empty() {
+                        return p.counts.iter().all(|&c| c == 0);
+                    }
+                    p.counts.iter().enumerate().all(|(i, &c)| {
+                        let inside = i >= p.first_source && i < p.last_source;
+                        (c > 0) == inside
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_every_element_moves_exactly_once() {
+        // Union of (source, count) over all drains covers each source
+        // block exactly once.
+        check(
+            "conservation of elements",
+            usizes(1, 40).pair(usizes(1, 40)).pair(usizes(0, 8_000)),
+            |((ns, nd), total)| {
+                let total = total as u64;
+                let mut per_source = vec![0u64; ns];
+                for d in 0..nd {
+                    let p = drain_plan(total, ns, nd, d);
+                    for i in 0..ns {
+                        per_source[i] += p.counts[i];
+                    }
+                }
+                (0..ns).all(|i| per_source[i] == block_of(total, ns, i).len())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_first_index_consistent() {
+        check(
+            "first_index addresses the drain start inside first_source",
+            usizes(1, 40).pair(usizes(1, 40)).pair(usizes(1, 8_000)),
+            |((ns, nd), total)| {
+                let total = total as u64;
+                (0..nd).all(|d| {
+                    let p = drain_plan(total, ns, nd, d);
+                    if p.block.is_empty() || p.first_source == usize::MAX {
+                        return true;
+                    }
+                    let s = block_of(total, ns, p.first_source);
+                    s.ini + p.first_index == p.block.ini
+                })
+            },
+        );
+    }
+}

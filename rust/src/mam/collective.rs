@@ -1,0 +1,247 @@
+//! The COL redistribution method — `MPI_Alltoallv` over the merged
+//! communicator (the baseline of [9], §III).
+//!
+//! Every rank of the merged communicator participates.  A rank that is
+//! a *source* contributes, for each registered structure, the slice of
+//! its local block destined to each drain (the source-side mirror of
+//! Algorithm 1); all other send entries are empty.  A rank that is a
+//! *drain* receives one slice per intersecting source and concatenates
+//! them (they arrive in source-rank order, which is ascending global
+//! element order under the block scheme).
+//!
+//! Blocking mode issues one `alltoallv` per structure; background modes
+//! issue `ialltoallv` and poll the requests from the application loop
+//! (Non-Blocking / Wait Drains) or run the blocking call on an
+//! auxiliary thread (Threading).
+
+use crate::simmpi::{CommId, MpiProc, Payload, ReqId};
+
+use super::blockdist::source_plan;
+use super::reconfig::Roles;
+use super::registry::Registry;
+
+/// Send vector of one structure for one rank: `sends[j]` is the payload
+/// destined to merged-comm rank `j` (empty unless this rank is a source
+/// and `j` is a drain).
+pub fn build_sends(
+    roles: &Roles,
+    entry_total: u64,
+    local: &Payload,
+    merged_size: usize,
+) -> Vec<Payload> {
+    let mut sends: Vec<Payload> = (0..merged_size)
+        .map(|_| {
+            if local.is_real() {
+                Payload::real(Vec::new())
+            } else {
+                Payload::virt(0)
+            }
+        })
+        .collect();
+    if !roles.is_source() {
+        return sends;
+    }
+    let sp = source_plan(entry_total, roles.ns, roles.nd, roles.rank);
+    debug_assert_eq!(
+        local.elems(),
+        sp.block.len(),
+        "source local block size mismatch"
+    );
+    for j in 0..roles.nd {
+        if sp.counts[j] > 0 {
+            sends[j] = local.slice(sp.displs[j], sp.counts[j]);
+        }
+    }
+    sends
+}
+
+/// Assemble a drain's new local block from the alltoallv result
+/// (received payloads indexed by merged-comm rank).
+pub fn assemble_received(roles: &Roles, entry_total: u64, received: &[Payload]) -> Payload {
+    debug_assert!(roles.is_drain());
+    let plan = super::blockdist::drain_plan(entry_total, roles.ns, roles.nd, roles.rank);
+    if plan.block.is_empty() {
+        return if received.iter().any(|p| p.is_real()) {
+            Payload::real(Vec::new())
+        } else {
+            Payload::virt(0)
+        };
+    }
+    let parts: Vec<Payload> = (plan.first_source..plan.last_source)
+        .map(|i| received[i].clone())
+        .collect();
+    let out = Payload::concat(&parts);
+    debug_assert_eq!(out.elems(), plan.block.len(), "assembled block size mismatch");
+    out
+}
+
+/// Blocking COL: one `MPI_Alltoallv` per selected structure (registry
+/// indices in `which`).  Returns the drain's new local payloads (one
+/// per selected index, in order); `None` entries for non-drain ranks.
+pub fn redistribute_blocking(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+) -> Vec<Option<Payload>> {
+    let p = proc.size(merged);
+    let mut out = Vec::with_capacity(which.len());
+    for &i in which {
+        let e = registry.entry(i);
+        let sends = build_sends(roles, e.total_elems, &e.local, p);
+        let received = proc.alltoallv(merged, sends);
+        out.push(if roles.is_drain() {
+            Some(assemble_received(roles, e.total_elems, &received))
+        } else {
+            None
+        });
+    }
+    out
+}
+
+/// Start the background COL: one `MPI_Ialltoallv` per selected
+/// structure.  The returned requests are polled by `Mam::checkpoint`.
+pub fn start_nonblocking(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+) -> Vec<ReqId> {
+    let p = proc.size(merged);
+    which
+        .iter()
+        .map(|&i| {
+            let e = registry.entry(i);
+            let sends = build_sends(roles, e.total_elems, &e.local, p);
+            proc.ialltoallv(merged, sends)
+        })
+        .collect()
+}
+
+/// Collect the results of completed `ialltoallv` requests into the
+/// drain's new local payloads.
+pub fn collect_nonblocking(
+    proc: &MpiProc,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    reqs: &[ReqId],
+) -> Vec<Option<Payload>> {
+    which
+        .iter()
+        .zip(reqs)
+        .map(|(&i, r)| {
+            let e = registry.entry(i);
+            let received = proc.req_result_alltoallv(*r);
+            if roles.is_drain() {
+                Some(assemble_received(roles, e.total_elems, &received))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mam::registry::DataKind;
+    use crate::netmodel::{NetParams, Topology};
+    use crate::simmpi::{MpiSim, WORLD};
+
+    fn roles(ns: usize, nd: usize, rank: usize) -> Roles {
+        Roles { ns, nd, rank }
+    }
+
+    #[test]
+    fn build_sends_source_splits_block() {
+        // 100 elems, 2 sources → 4 drains; source 0 owns [0,50).
+        let local = Payload::real((0..50).map(|i| i as f64).collect());
+        let sends = build_sends(&roles(2, 4, 0), 100, &local, 4);
+        assert_eq!(sends[0].elems(), 25);
+        assert_eq!(sends[1].elems(), 25);
+        assert_eq!(sends[2].elems(), 0);
+        assert_eq!(sends[3].elems(), 0);
+        assert_eq!(sends[1].as_slice().unwrap()[0], 25.0);
+    }
+
+    #[test]
+    fn build_sends_non_source_is_empty() {
+        // Grow 2→4: ranks 2,3 are drain-only.
+        let local = Payload::virt(0);
+        let sends = build_sends(&roles(2, 4, 2), 100, &local, 4);
+        assert!(sends.iter().all(|s| s.elems() == 0));
+    }
+
+    #[test]
+    fn assemble_orders_sources() {
+        // Shrink 4→2, drain 0 reads sources 0 and 1.
+        let received = vec![
+            Payload::real(vec![0.0, 1.0]),
+            Payload::real(vec![2.0, 3.0]),
+            Payload::real(Vec::new()),
+            Payload::real(Vec::new()),
+        ];
+        let out = assemble_received(&roles(4, 2, 0), 8, &received);
+        assert_eq!(out.as_slice().unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn blocking_roundtrip_identity_data() {
+        // 3 sources → 2 drains over real data; verify bitwise blocks.
+        let total = 103u64;
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(3, move |p| {
+            let r = p.rank(WORLD);
+            let ns = 3;
+            let nd = 2;
+            let b = super::super::blockdist::block_of(total, ns, r);
+            let local =
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect());
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let roles = Roles { ns, nd, rank: r };
+            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0]);
+            if r < nd {
+                let nb = super::super::blockdist::block_of(total, nd, r);
+                let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+                let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                assert_eq!(got, want, "drain {r} got wrong block");
+            } else {
+                assert!(out[0].is_none());
+            }
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn nonblocking_start_collect_roundtrip() {
+        let total = 64u64;
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(4, move |p| {
+            let r = p.rank(WORLD);
+            let (ns, nd) = (2usize, 4usize);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if r < ns {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let reqs = start_nonblocking(&p, WORLD, &roles, &reg, &[0]);
+            while !p.req_testall(&reqs) {
+                p.compute(1e-4);
+            }
+            let out = collect_nonblocking(&p, &roles, &reg, &[0], &reqs);
+            let nb = super::super::blockdist::block_of(total, nd, r);
+            let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+            let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+            assert_eq!(got, want);
+        });
+        sim.run().unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! MaM — the Malleability Module (§III, §IV).
+//!
+//! MaM converts an MPI application into a malleable one: at a
+//! *checkpoint* the application asks MaM to resize from `NS` sources to
+//! `ND` drains; MaM performs process management (the *Merge* method:
+//! spawn `ND−NS` ranks or retire `NS−ND`), redistributes every
+//! registered data structure from the NS-way to the ND-way block
+//! distribution, and hands the application the communicator to resume
+//! on.
+//!
+//! The module implements the paper's full method × strategy matrix:
+//!
+//! | method        | Blocking | Non-Blocking | Wait Drains | Threading |
+//! |---------------|----------|--------------|-------------|-----------|
+//! | `Collective`  | ✓        | ✓            | ✓           | ✓         |
+//! | `RmaLock`     | ✓        | ✗ (§V-A)     | ✓           | ✓         |
+//! | `RmaLockall`  | ✓        | ✗ (§V-A)     | ✓           | ✓         |
+//!
+//! NB is not applicable to the RMA methods: sources only expose memory
+//! and cannot determine themselves when remote accesses have completed
+//! (§V-A) — that is exactly what *Wait Drains* adds.
+//!
+//! * [`blockdist`] — block ownership + the paper's Algorithm 1,
+//! * [`registry`]  — the automatic data-redistribution registry,
+//! * [`collective`] — the COL method over `MPI_(I)Alltoallv`,
+//! * [`rma`]       — RMA-Lock (Alg. 2), RMA-Lockall (Alg. 3) and the
+//!   split `Init_RMA`/`Complete_RMA` used for background redistribution,
+//! * [`reconfig`]  — the reconfiguration driver tying it together.
+
+pub mod blockdist;
+pub mod collective;
+pub mod reconfig;
+pub mod registry;
+pub mod rma;
+
+pub use blockdist::{block_of, drain_plan, source_plan, Block, DrainPlan, SourcePlan};
+pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
+pub use registry::{DataDecl, DataEntry, DataKind, Registry};
+
+/// Data-redistribution method (§IV, §V-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Baseline two-sided method over `MPI_Alltoallv` ([9]).
+    Collective,
+    /// Algorithm 2: one passive epoch per accessed target
+    /// (`Win_lock`/`Win_unlock`).
+    RmaLock,
+    /// Algorithm 3: a single passive epoch over all targets
+    /// (`Win_lock_all`/`Win_unlock_all`).
+    RmaLockall,
+}
+
+impl Method {
+    pub fn is_rma(self) -> bool {
+        !matches!(self, Method::Collective)
+    }
+
+    /// Short label used in figures ("COL", "RMA-Lock", "RMA-Lockall").
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::Collective => "COL",
+            Method::RmaLock => "RMA-Lock",
+            Method::RmaLockall => "RMA-Lockall",
+        }
+    }
+
+    pub fn all() -> [Method; 3] {
+        [Method::Collective, Method::RmaLock, Method::RmaLockall]
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "col" | "collective" => Some(Method::Collective),
+            "rma-lock" | "rmalock" | "rma1" | "lock" => Some(Method::RmaLock),
+            "rma-lockall" | "rmalockall" | "rma2" | "lockall" => Some(Method::RmaLockall),
+            _ => None,
+        }
+    }
+}
+
+/// Redistribution strategy (§III, §IV-C, §V-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Application blocked for the whole redistribution.
+    Blocking,
+    /// Overlap via nonblocking collectives; a source deems the
+    /// communication complete once it has sent all its messages.
+    NonBlocking,
+    /// Background redistribution with global completion detection:
+    /// drains confirm through a nonblocking barrier (§IV-C.2).
+    WaitDrains,
+    /// Background redistribution on an auxiliary thread (§IV-C.1).
+    Threading,
+}
+
+impl Strategy {
+    pub fn is_background(self) -> bool {
+        !matches!(self, Strategy::Blocking)
+    }
+
+    /// Figure label suffix ("", "-NB", "-WD", "-T").
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Strategy::Blocking => "",
+            Strategy::NonBlocking => "-NB",
+            Strategy::WaitDrains => "-WD",
+            Strategy::Threading => "-T",
+        }
+    }
+
+    pub fn all() -> [Strategy; 4] {
+        [
+            Strategy::Blocking,
+            Strategy::NonBlocking,
+            Strategy::WaitDrains,
+            Strategy::Threading,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "blocking" | "b" => Some(Strategy::Blocking),
+            "nonblocking" | "non-blocking" | "nb" => Some(Strategy::NonBlocking),
+            "waitdrains" | "wait-drains" | "wd" => Some(Strategy::WaitDrains),
+            "threading" | "t" => Some(Strategy::Threading),
+            _ => None,
+        }
+    }
+}
+
+/// Is the (method, strategy) pair part of the paper's version set 𝒱?
+/// NB × RMA is undefined (§V-A): sources cannot self-detect completion.
+pub fn is_valid_version(method: Method, strategy: Strategy) -> bool {
+    !(method.is_rma() && strategy == Strategy::NonBlocking)
+}
+
+/// Figure label of a version, e.g. "COL-NB", "RMA-Lockall-WD".
+pub fn version_label(method: Method, strategy: Strategy) -> String {
+    format!("{}{}", method.label(), strategy.suffix())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validity_matrix_matches_paper() {
+        // 3 methods × 4 strategies − 2 invalid (RMA×NB) = 10 versions.
+        let mut valid = 0;
+        for m in Method::all() {
+            for s in Strategy::all() {
+                if is_valid_version(m, s) {
+                    valid += 1;
+                }
+            }
+        }
+        assert_eq!(valid, 10);
+        assert!(!is_valid_version(Method::RmaLock, Strategy::NonBlocking));
+        assert!(!is_valid_version(Method::RmaLockall, Strategy::NonBlocking));
+        assert!(is_valid_version(Method::Collective, Strategy::NonBlocking));
+    }
+
+    #[test]
+    fn labels_match_figures() {
+        assert_eq!(version_label(Method::Collective, Strategy::NonBlocking), "COL-NB");
+        assert_eq!(version_label(Method::RmaLock, Strategy::Blocking), "RMA-Lock");
+        assert_eq!(
+            version_label(Method::RmaLockall, Strategy::WaitDrains),
+            "RMA-Lockall-WD"
+        );
+        assert_eq!(version_label(Method::Collective, Strategy::Threading), "COL-T");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.label()), Some(m));
+        }
+        assert_eq!(Strategy::parse("wd"), Some(Strategy::WaitDrains));
+        assert_eq!(Strategy::parse("nb"), Some(Strategy::NonBlocking));
+        assert_eq!(Strategy::parse("nope"), None);
+        assert_eq!(Method::parse("rma2"), Some(Method::RmaLockall));
+    }
+}

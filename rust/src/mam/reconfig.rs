@@ -1,0 +1,829 @@
+//! The reconfiguration driver: Merge process management + the
+//! method × strategy dispatch, including the split
+//! `Init_RMA`/`Complete_RMA` protocol for background redistributions
+//! (§IV-C, Figs. 1–2).
+//!
+//! ## Life of a reconfiguration
+//!
+//! 1. The application (all `NS` ranks of the current communicator)
+//!    calls [`Mam::reconfigure`] at a checkpoint.
+//! 2. **Process management** (*Merge*, [22]): growing spawns `ND−NS`
+//!    ranks via `MPI_Comm_spawn` + intercomm merge (sources keep their
+//!    ranks, spawned ranks follow); shrinking duplicates the
+//!    communicator so the redistribution traffic cannot cross-match
+//!    with application collectives.
+//! 3. **Data redistribution** over the merged/duplicated communicator
+//!    using the configured method (COL / RMA-Lock / RMA-Lockall) and
+//!    strategy (Blocking / NB / WD / Threading).  Blocking returns
+//!    `Completed`; background strategies return `InProgress` and the
+//!    application keeps iterating, polling [`Mam::checkpoint`] once per
+//!    iteration.
+//! 4. When `Completed`, the application calls [`Mam::finish`]: growing
+//!    continues on the merged communicator; shrinking performs the
+//!    collective prefix-split and ranks `≥ ND` exit.
+//!
+//! Spawned drains run [`Mam::drain_join`], which mirrors the source
+//! collective call sequence exactly (MPI matches collectives by call
+//! order per communicator).
+
+use std::sync::{Arc, Mutex};
+
+use crate::simcluster::Time;
+use crate::simmpi::{CommId, MpiProc, Payload, ReqId};
+
+use super::collective as col;
+use super::registry::{DataDecl, DataKind, Registry};
+use super::rma::{self, RmaInit};
+use super::{Method, Strategy};
+
+/// Rank roles during a reconfiguration (§I stage 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Roles {
+    pub ns: usize,
+    pub nd: usize,
+    /// Rank within the merged communicator (sources first).
+    pub rank: usize,
+}
+
+impl Roles {
+    /// Existed before the resize.
+    pub fn is_source(&self) -> bool {
+        self.rank < self.ns
+    }
+
+    /// Continues after the resize.
+    pub fn is_drain(&self) -> bool {
+        self.rank < self.nd
+    }
+
+    /// Will be retired once redistribution completes (shrink tail).
+    pub fn is_source_only(&self) -> bool {
+        self.is_source() && !self.is_drain()
+    }
+
+    /// Newly spawned by the resize (grow tail).
+    pub fn is_drain_only(&self) -> bool {
+        self.is_drain() && !self.is_source()
+    }
+
+    pub fn is_grow(&self) -> bool {
+        self.nd > self.ns
+    }
+}
+
+/// Static reconfiguration configuration.
+#[derive(Clone, Debug)]
+pub struct ReconfigCfg {
+    pub method: Method,
+    pub strategy: Strategy,
+    /// Modeled `MPI_Comm_spawn` duration (process launch, PMI exchange).
+    pub spawn_cost: f64,
+}
+
+impl Default for ReconfigCfg {
+    fn default() -> Self {
+        ReconfigCfg {
+            method: Method::Collective,
+            strategy: Strategy::Blocking,
+            spawn_cost: 0.25,
+        }
+    }
+}
+
+/// Result of [`Mam::reconfigure`] / [`Mam::checkpoint`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MamStatus {
+    /// No reconfiguration in progress.
+    Idle,
+    /// Background redistribution still running — keep iterating.
+    InProgress,
+    /// Redistribution done; call [`Mam::finish`].
+    Completed,
+}
+
+/// Background-redistribution progress state.
+enum State {
+    /// Everything already done (blocking strategies).
+    Done,
+    /// COL-NB: completion = local `ialltoallv` requests done (§V-A: a
+    /// source deems communication complete once its sends are out).
+    ColNb { reqs: Vec<ReqId> },
+    /// COL-WD: local requests, then the global confirmation barrier.
+    ColWd { reqs: Vec<ReqId>, barrier: Option<ReqId> },
+    /// RMA-WD (`Complete_RMA`, Fig. 2): local read phase, then barrier,
+    /// then local window frees.
+    RmaWd { init: RmaInit, barrier: Option<ReqId> },
+    /// Threading: the blocking method runs on the auxiliary thread; the
+    /// result is dropped into the shared slot on completion.
+    Threading { slot: Arc<Mutex<Option<Vec<Option<Payload>>>>> },
+}
+
+/// An in-flight (or just-completed) reconfiguration.
+pub struct Reconfiguration {
+    pub merged: CommId,
+    pub roles: Roles,
+    pub started_at: Time,
+    state: State,
+    /// Registry indices being redistributed in this phase (§III: only
+    /// *constant* data may move in the background; *variable* data is
+    /// redistributed while the application is blocked, in `finish`).
+    which: Vec<usize>,
+    /// New local payloads (parallel to `which`), set once data is in.
+    new_locals: Option<Vec<Option<Payload>>>,
+}
+
+/// Outcome of [`Mam::finish`].
+#[derive(Clone, Copy, Debug)]
+pub struct FinishOutcome {
+    /// Communicator the application resumes on (`None` for retired
+    /// ranks, which must return from their body after this call).
+    pub app_comm: Option<CommId>,
+    pub roles: Roles,
+}
+
+/// The per-rank Malleability Module handle.
+pub struct Mam {
+    pub registry: Registry,
+    pub cfg: ReconfigCfg,
+    inflight: Option<Reconfiguration>,
+}
+
+impl Mam {
+    pub fn new(registry: Registry, cfg: ReconfigCfg) -> Mam {
+        Mam { registry, cfg, inflight: None }
+    }
+
+    /// Is a background redistribution currently running?
+    pub fn in_progress(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// Roles of the in-flight reconfiguration, if any.
+    pub fn roles(&self) -> Option<Roles> {
+        self.inflight.as_ref().map(|r| r.roles)
+    }
+
+    /// Start a reconfiguration of `app_comm` (all current ranks call
+    /// this) towards `nd` ranks.  `drain_body` is the main function of
+    /// newly spawned processes (grow only).
+    ///
+    /// Returns `Completed` for blocking strategies, `InProgress` for
+    /// background ones.
+    pub fn reconfigure(
+        &mut self,
+        proc: &MpiProc,
+        app_comm: CommId,
+        nd: usize,
+        drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync>,
+    ) -> MamStatus {
+        assert!(self.inflight.is_none(), "reconfiguration already in progress");
+        let ns = proc.size(app_comm);
+        assert!(nd > 0 && nd != ns, "invalid target size {nd} (ns={ns})");
+        let t_begin = proc.now();
+
+        // ---- Stage 2: process management (Merge).
+        let merged = if nd > ns {
+            proc.spawn_merge(app_comm, nd - ns, self.cfg.spawn_cost, drain_body)
+        } else {
+            // Duplicate so redistribution traffic cannot cross-match
+            // with application collectives on `app_comm`.
+            proc.comm_sub(app_comm, ns)
+        };
+        let roles = Roles { ns, nd, rank: proc.rank(merged) };
+        proc.metrics(|m| {
+            m.mark_min("mam.reconf_start", t_begin);
+            m.mark_min("mam.redist_start", proc.now());
+        });
+
+        // ---- Stage 3: data redistribution.  Blocking strategies move
+        // everything now; background strategies move the *constant*
+        // entries in the background (§III) and leave variable entries
+        // to the blocking phase inside `finish`.
+        let which: Vec<usize> = if self.cfg.strategy == Strategy::Blocking {
+            (0..self.registry.len()).collect()
+        } else {
+            self.registry.of_kind(DataKind::Constant)
+        };
+        let state = self.start_redistribution(proc, merged, &roles, &which);
+        let done = matches!(state, State::Done);
+        self.inflight = Some(Reconfiguration {
+            merged,
+            roles,
+            started_at: t_begin,
+            state,
+            which,
+            new_locals: None,
+        });
+        if done {
+            Self::record_done(proc);
+            MamStatus::Completed
+        } else {
+            MamStatus::InProgress
+        }
+    }
+
+    /// Dispatch stage 3 and, for blocking strategies, run it to
+    /// completion (applying new payloads).
+    fn start_redistribution(
+        &mut self,
+        proc: &MpiProc,
+        merged: CommId,
+        roles: &Roles,
+        which: &[usize],
+    ) -> State {
+        match (self.cfg.method, self.cfg.strategy) {
+            // ------------------------------------------------ blocking
+            (Method::Collective, Strategy::Blocking) => {
+                let locals =
+                    col::redistribute_blocking(proc, merged, roles, &self.registry, which);
+                self.apply_locals(which, locals, roles);
+                State::Done
+            }
+            (m, Strategy::Blocking) => {
+                let lockall = m == Method::RmaLockall;
+                let locals = rma::redistribute_blocking(
+                    proc,
+                    merged,
+                    roles,
+                    &self.registry,
+                    which,
+                    lockall,
+                );
+                self.apply_locals(which, locals, roles);
+                State::Done
+            }
+            // -------------------------------------------- non-blocking
+            (Method::Collective, Strategy::NonBlocking) => {
+                let reqs = col::start_nonblocking(proc, merged, roles, &self.registry, which);
+                State::ColNb { reqs }
+            }
+            (_, Strategy::NonBlocking) => {
+                panic!("NB is undefined for RMA methods (§V-A); use Wait Drains")
+            }
+            // ---------------------------------------------- wait drains
+            (Method::Collective, Strategy::WaitDrains) => {
+                let reqs = col::start_nonblocking(proc, merged, roles, &self.registry, which);
+                State::ColWd { reqs, barrier: None }
+            }
+            (m, Strategy::WaitDrains) => {
+                let lockall = m == Method::RmaLockall;
+                let init = rma::init_rma(proc, merged, roles, &self.registry, which, lockall);
+                // Source-only ranks have no reads: they notify the
+                // others right away (Fig. 1) and keep computing.
+                let barrier = if !roles.is_drain() {
+                    Some(proc.ibarrier(merged))
+                } else {
+                    None
+                };
+                State::RmaWd { init, barrier }
+            }
+            // ------------------------------------------------ threading
+            (m, Strategy::Threading) => {
+                let slot: Arc<Mutex<Option<Vec<Option<Payload>>>>> =
+                    Arc::new(Mutex::new(None));
+                let s2 = slot.clone();
+                let reg = self.registry.clone();
+                let roles2 = *roles;
+                let which2 = which.to_vec();
+                proc.spawn_aux(move |aux| {
+                    let locals = match m {
+                        Method::Collective => {
+                            col::redistribute_blocking(&aux, merged, &roles2, &reg, &which2)
+                        }
+                        Method::RmaLock => rma::redistribute_blocking(
+                            &aux, merged, &roles2, &reg, &which2, false,
+                        ),
+                        Method::RmaLockall => rma::redistribute_blocking(
+                            &aux, merged, &roles2, &reg, &which2, true,
+                        ),
+                    };
+                    *s2.lock().unwrap() = Some(locals);
+                });
+                State::Threading { slot }
+            }
+        }
+    }
+
+    /// Per-iteration completion poll (the application calls this once
+    /// per iteration while `InProgress` — MaM's checkpoint API).
+    pub fn checkpoint(&mut self, proc: &MpiProc) -> MamStatus {
+        let Some(rc) = self.inflight.as_mut() else {
+            return MamStatus::Idle;
+        };
+        let roles = rc.roles;
+        let merged = rc.merged;
+        let which = rc.which.clone();
+        // Already completed earlier (e.g. the app re-polls while other
+        // ranks catch up): stay Completed without re-recording metrics.
+        if matches!(rc.state, State::Done) && rc.new_locals.is_none() {
+            return MamStatus::Completed;
+        }
+        let done = match &mut rc.state {
+            State::Done => true,
+            State::ColNb { reqs } => {
+                if proc.req_testall(reqs) {
+                    let locals =
+                        col::collect_nonblocking(proc, &roles, &self.registry, &which, reqs);
+                    rc.new_locals = Some(locals);
+                    rc.state = State::Done;
+                    true
+                } else {
+                    false
+                }
+            }
+            State::ColWd { reqs, barrier } => match barrier {
+                None => {
+                    if proc.req_testall(reqs) {
+                        let locals = col::collect_nonblocking(
+                            proc, &roles, &self.registry, &which, reqs,
+                        );
+                        rc.new_locals = Some(locals);
+                        // Local part done: join the confirmation barrier.
+                        *barrier = Some(proc.ibarrier(merged));
+                    }
+                    false
+                }
+                Some(b) => {
+                    if proc.req_test(*b) {
+                        rc.state = State::Done;
+                        true
+                    } else {
+                        false
+                    }
+                }
+            },
+            State::RmaWd { init, barrier } => match barrier {
+                None => {
+                    // Local phase (drains): wait for own Rgets.
+                    if proc.req_testall(&init.reqs) {
+                        rma::close_epochs(proc, init);
+                        rc.new_locals = Some(rma::take_payloads(init));
+                        *barrier = Some(proc.ibarrier(merged));
+                    }
+                    false
+                }
+                Some(b) => {
+                    // Global phase: poll the barrier, then free locally.
+                    if proc.req_test(*b) {
+                        rma::free_windows_local(proc, init);
+                        rc.state = State::Done;
+                        true
+                    } else {
+                        false
+                    }
+                }
+            },
+            State::Threading { slot } => {
+                if proc.aux_alive() {
+                    false
+                } else {
+                    rc.new_locals = slot.lock().unwrap().take();
+                    rc.state = State::Done;
+                    true
+                }
+            }
+        };
+        if done {
+            if let Some(locals) = rc.new_locals.take() {
+                let roles = rc.roles;
+                self.apply_locals(&which, locals, &roles);
+            }
+            Self::record_done(proc);
+            MamStatus::Completed
+        } else {
+            MamStatus::InProgress
+        }
+    }
+
+    /// Block until the in-flight redistribution completes (used by
+    /// ranks with no application work to overlap).
+    pub fn wait_completion(&mut self, proc: &MpiProc) {
+        while self.checkpoint(proc) == MamStatus::InProgress {
+            proc.compute(0.0);
+        }
+    }
+
+    /// Stage 4: resume execution.  Collective over the *old* application
+    /// communicator's members (and, on grow, the spawned drains, which
+    /// mirror it inside `drain_join`).  Background strategies first
+    /// redistribute the *variable* entries here, while the application
+    /// is blocked (§III), then the communicator is switched.  Consumes
+    /// the reconfiguration.
+    pub fn finish(&mut self, proc: &MpiProc, app_comm: CommId) -> FinishOutcome {
+        let rc = self.inflight.take().expect("no reconfiguration to finish");
+        assert!(matches!(rc.state, State::Done), "finish() before completion");
+        let roles = rc.roles;
+        if self.cfg.strategy.is_background() {
+            let variable = self.registry.of_kind(DataKind::Variable);
+            if !variable.is_empty() {
+                let locals = col::redistribute_blocking(
+                    proc,
+                    rc.merged,
+                    &roles,
+                    &self.registry,
+                    &variable,
+                );
+                self.apply_locals(&variable, locals, &roles);
+            }
+        }
+        proc.metrics(|m| m.mark_max("mam.reconf_end", proc.now()));
+        if roles.is_grow() {
+            FinishOutcome { app_comm: Some(rc.merged), roles }
+        } else {
+            // Shrink: collective prefix split of the old communicator;
+            // retired ranks get `None` and must return.
+            let sub = proc.comm_sub(app_comm, roles.nd);
+            let keep = proc.rank(app_comm) < roles.nd;
+            FinishOutcome { app_comm: keep.then_some(sub), roles }
+        }
+    }
+
+    fn record_done(proc: &MpiProc) {
+        let t = proc.now();
+        proc.metrics(|m| {
+            m.mark_max("mam.redist_end", t);
+            m.push_series("mam.redist_done_t", t);
+        });
+    }
+
+    /// Install redistributed payloads into the registry (drain side).
+    /// `locals` is parallel to the `which` index list.
+    fn apply_locals(&mut self, which: &[usize], locals: Vec<Option<Payload>>, roles: &Roles) {
+        assert_eq!(locals.len(), which.len());
+        for (&i, l) in which.iter().zip(locals) {
+            if let Some(p) = l {
+                debug_assert!(roles.is_drain());
+                self.registry.entry_mut(i).local = p;
+            }
+        }
+    }
+
+    /// Entry point for spawned drain processes (grow): build the
+    /// registry from declarations and mirror the source collective call
+    /// sequence of the configured method/strategy until the data is in.
+    /// Returns the populated `Mam`; the caller then enters the
+    /// application loop on `merged`.
+    pub fn drain_join(
+        proc: &MpiProc,
+        merged: CommId,
+        ns: usize,
+        nd: usize,
+        decls: &[DataDecl],
+        cfg: ReconfigCfg,
+    ) -> Mam {
+        let mut mam = Mam::new(Registry::from_decls(decls), cfg);
+        let roles = Roles { ns, nd, rank: proc.rank(merged) };
+        assert!(roles.is_drain_only(), "drain_join is for spawned ranks");
+        let which: Vec<usize> = if mam.cfg.strategy == Strategy::Blocking {
+            (0..mam.registry.len()).collect()
+        } else {
+            mam.registry.of_kind(DataKind::Constant)
+        };
+        let locals = match (mam.cfg.method, mam.cfg.strategy) {
+            // Blocking + Threading sources run the plain blocking
+            // sequence on the merged comm (Threading just moves it to an
+            // aux thread — same collective order).
+            (Method::Collective, Strategy::Blocking | Strategy::Threading) => {
+                col::redistribute_blocking(proc, merged, &roles, &mam.registry, &which)
+            }
+            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_blocking(
+                proc,
+                merged,
+                &roles,
+                &mam.registry,
+                &which,
+                m == Method::RmaLockall,
+            ),
+            (Method::Collective, Strategy::NonBlocking) => {
+                let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
+                proc.req_waitall(&reqs);
+                col::collect_nonblocking(proc, &roles, &mam.registry, &which, &reqs)
+            }
+            (Method::Collective, Strategy::WaitDrains) => {
+                let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
+                proc.req_waitall(&reqs);
+                let locals =
+                    col::collect_nonblocking(proc, &roles, &mam.registry, &which, &reqs);
+                let b = proc.ibarrier(merged);
+                proc.req_wait(b);
+                locals
+            }
+            (m, Strategy::WaitDrains) => {
+                // Fig. 2 drain-only path: blocking local phase, then the
+                // global barrier, then the local frees.
+                let mut init = rma::init_rma(
+                    proc,
+                    merged,
+                    &roles,
+                    &mam.registry,
+                    &which,
+                    m == Method::RmaLockall,
+                );
+                proc.req_waitall(&init.reqs);
+                rma::close_epochs(proc, &init);
+                let b = proc.ibarrier(merged);
+                proc.req_wait(b);
+                rma::free_windows_local(proc, &init);
+                rma::take_payloads(&mut init)
+            }
+            (_, Strategy::NonBlocking) => unreachable!("validated at reconfigure()"),
+        };
+        mam.apply_locals(&which, locals, &roles);
+        Mam::record_done(proc);
+        // Mirror the sources' `finish`: blocking redistribution of the
+        // variable entries (background strategies only — blocking moved
+        // everything already).
+        if mam.cfg.strategy.is_background() {
+            let variable = mam.registry.of_kind(DataKind::Variable);
+            if !variable.is_empty() {
+                let locals =
+                    col::redistribute_blocking(proc, merged, &roles, &mam.registry, &variable);
+                mam.apply_locals(&variable, locals, &roles);
+            }
+        }
+        mam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mam::registry::DataKind;
+    use crate::mam::{block_of, Method, Strategy};
+    use crate::netmodel::{NetParams, Topology};
+    use crate::simmpi::{MpiSim, WORLD};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Full grow-or-shrink reconfiguration over real payloads; verifies
+    /// every continuing rank ends with the exact ND-way block.
+    fn roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy) {
+        let total = 997u64;
+        let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
+        let checks = Arc::new(AtomicUsize::new(0));
+        let checks2 = checks.clone();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register(
+                "A",
+                DataKind::Constant,
+                total,
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect()),
+            );
+            let cfg = ReconfigCfg { method, strategy, spawn_cost: 0.01 };
+            let decls = reg.decls();
+            let mut mam = Mam::new(reg, cfg.clone());
+            let checks3 = checks2.clone();
+            let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg.clone());
+                    let dr = dp.rank(merged);
+                    let nb = block_of(total, nd, dr);
+                    let got = dmam.registry.entry(0).local.as_slice().unwrap().to_vec();
+                    let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                    assert_eq!(got, want, "spawned drain {dr} wrong block");
+                    checks3.fetch_add(1, Ordering::SeqCst);
+                });
+            let mut status = mam.reconfigure(&p, WORLD, nd, drain_body);
+            let mut iters = 0;
+            while status == MamStatus::InProgress {
+                p.compute(1e-3); // the app keeps iterating
+                status = mam.checkpoint(&p);
+                iters += 1;
+                assert!(iters < 100_000, "redistribution never completes");
+            }
+            let out = mam.finish(&p, WORLD);
+            match out.app_comm {
+                Some(c) => {
+                    let nr = p.rank(c);
+                    assert!(nr < nd);
+                    let nb = block_of(total, nd, nr);
+                    let got = mam.registry.entry(0).local.as_slice().unwrap().to_vec();
+                    let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                    assert_eq!(got, want, "rank {nr} wrong block after finish");
+                    checks2.fetch_add(1, Ordering::SeqCst);
+                }
+                None => assert!(r >= nd, "rank {r} wrongly retired"),
+            }
+        });
+        sim.run().unwrap();
+        assert_eq!(
+            checks.load(Ordering::SeqCst),
+            nd,
+            "every drain must verify its block"
+        );
+    }
+
+    #[test]
+    fn grow_collective_blocking() {
+        roundtrip(2, 5, Method::Collective, Strategy::Blocking);
+    }
+
+    #[test]
+    fn shrink_collective_blocking() {
+        roundtrip(6, 2, Method::Collective, Strategy::Blocking);
+    }
+
+    #[test]
+    fn grow_rma_lock_blocking() {
+        roundtrip(3, 8, Method::RmaLock, Strategy::Blocking);
+    }
+
+    #[test]
+    fn shrink_rma_lockall_blocking() {
+        roundtrip(8, 3, Method::RmaLockall, Strategy::Blocking);
+    }
+
+    #[test]
+    fn grow_collective_nb() {
+        roundtrip(2, 6, Method::Collective, Strategy::NonBlocking);
+    }
+
+    #[test]
+    fn shrink_collective_nb() {
+        roundtrip(6, 3, Method::Collective, Strategy::NonBlocking);
+    }
+
+    #[test]
+    fn grow_collective_wd() {
+        roundtrip(2, 6, Method::Collective, Strategy::WaitDrains);
+    }
+
+    #[test]
+    fn shrink_collective_wd() {
+        roundtrip(5, 2, Method::Collective, Strategy::WaitDrains);
+    }
+
+    #[test]
+    fn grow_rma_lock_wd() {
+        roundtrip(2, 7, Method::RmaLock, Strategy::WaitDrains);
+    }
+
+    #[test]
+    fn shrink_rma_lock_wd() {
+        roundtrip(7, 2, Method::RmaLock, Strategy::WaitDrains);
+    }
+
+    #[test]
+    fn grow_rma_lockall_wd() {
+        roundtrip(3, 9, Method::RmaLockall, Strategy::WaitDrains);
+    }
+
+    #[test]
+    fn shrink_rma_lockall_wd() {
+        roundtrip(9, 4, Method::RmaLockall, Strategy::WaitDrains);
+    }
+
+    #[test]
+    fn grow_collective_threading() {
+        roundtrip(2, 5, Method::Collective, Strategy::Threading);
+    }
+
+    #[test]
+    fn shrink_collective_threading() {
+        roundtrip(5, 2, Method::Collective, Strategy::Threading);
+    }
+
+    #[test]
+    fn grow_rma_lock_threading() {
+        roundtrip(2, 6, Method::RmaLock, Strategy::Threading);
+    }
+
+    #[test]
+    fn shrink_rma_lockall_threading() {
+        roundtrip(6, 2, Method::RmaLockall, Strategy::Threading);
+    }
+
+    #[test]
+    #[should_panic(expected = "NB is undefined for RMA")]
+    fn rma_nb_panics() {
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(2, |p| {
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, 10, Payload::virt(5));
+            let mut mam = Mam::new(
+                reg,
+                ReconfigCfg {
+                    method: Method::RmaLock,
+                    strategy: Strategy::NonBlocking,
+                    spawn_cost: 0.0,
+                },
+            );
+            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            mam.reconfigure(&p, WORLD, 4, body);
+        });
+        let err = sim.run();
+        // surface the panic as the test's panic
+        if let Err(e) = err {
+            panic!("{e}");
+        }
+    }
+
+    #[test]
+    fn variable_data_moves_at_finish_with_fresh_values() {
+        // A Variable entry is mutated while the background (WD)
+        // redistribution of the Constant entry is in flight; the drains
+        // must receive the *final* values (§III: variable data is
+        // redistributed while the application is blocked).
+        let total = 24u64;
+        let (ns, nd) = (4usize, 2usize);
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let cb = block_of(100_000, ns, r);
+            let vb = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, 100_000, Payload::virt(cb.len()));
+            reg.register(
+                "x",
+                DataKind::Variable,
+                total,
+                Payload::real((vb.ini..vb.end).map(|i| i as f64).collect()),
+            );
+            let mut mam = Mam::new(
+                reg,
+                ReconfigCfg {
+                    method: Method::Collective,
+                    strategy: Strategy::WaitDrains,
+                    spawn_cost: 0.0,
+                },
+            );
+            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            let mut status = mam.reconfigure(&p, WORLD, nd, body);
+            while status == MamStatus::InProgress {
+                // "The application" updates x each iteration.
+                let cur = mam.registry.by_name("x").unwrap().local.clone();
+                let bumped: Vec<f64> =
+                    cur.as_slice().unwrap().iter().map(|v| v + 1000.0).collect();
+                mam.registry.entry_mut(1).local = Payload::real(bumped);
+                p.compute(1e-3);
+                status = mam.checkpoint(&p);
+            }
+            // Snapshot the final local values right before finish.
+            let bumps = mam.registry.by_name("x").unwrap().local.as_slice().unwrap()[0]
+                - vb.ini as f64;
+            let out = mam.finish(&p, WORLD);
+            if let Some(c) = out.app_comm {
+                let nr = p.rank(c);
+                let nb = block_of(total, nd, nr);
+                let got = mam.registry.by_name("x").unwrap().local.as_slice().unwrap().to_vec();
+                // Every element must carry at least one bump (sources all
+                // iterated ≥1 time before finish) and the right base.
+                assert_eq!(got.len() as u64, nb.len());
+                for (k, v) in got.iter().enumerate() {
+                    let base = (nb.ini + k as u64) as f64;
+                    let bump = v - base;
+                    assert!(
+                        bump >= 1000.0 && (bump % 1000.0).abs() < 1e-9,
+                        "rank {nr} elem {k}: value {v} (base {base}) missed updates"
+                    );
+                }
+                let _ = bumps;
+            }
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn wd_sources_iterate_during_redistribution() {
+        // A shrink with WD: source-only ranks must complete several app
+        // iterations while the (large, virtual) redistribution runs.
+        let total = 50_000_000u64; // big enough to take a while
+        let (ns, nd) = (6usize, 2usize);
+        let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+        let max_iters = Arc::new(AtomicUsize::new(0));
+        let mi = max_iters.clone();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+            let mut mam = Mam::new(
+                reg,
+                ReconfigCfg {
+                    method: Method::RmaLockall,
+                    strategy: Strategy::WaitDrains,
+                    spawn_cost: 0.0,
+                },
+            );
+            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            let mut status = mam.reconfigure(&p, WORLD, nd, body);
+            let mut iters = 0usize;
+            while status == MamStatus::InProgress {
+                p.compute(1e-3);
+                iters += 1;
+                status = mam.checkpoint(&p);
+                assert!(iters < 1_000_000);
+            }
+            mi.fetch_max(iters, Ordering::SeqCst);
+            let _ = mam.finish(&p, WORLD);
+        });
+        sim.run().unwrap();
+        assert!(
+            max_iters.load(Ordering::SeqCst) >= 2,
+            "no overlap happened: {} iters",
+            max_iters.load(Ordering::SeqCst)
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! MaM's automatic data-redistribution registry (§III).
+//!
+//! Applications register their distributed one-dimensional structures
+//! once; MaM then redistributes all of them at every reconfiguration
+//! without further user involvement (the *Automatic* category of [3]).
+//! Entries are classified **constant** (unchanged during execution —
+//! transferable in the background) or **variable** (changes every
+//! iteration — must be redistributed while the application is
+//! blocked), which decides which redistribution strategies are legal
+//! per entry.
+
+use crate::simmpi::Payload;
+
+use super::blockdist::{block_of, Block};
+
+/// Constant/variable classification (§III).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    Constant,
+    Variable,
+}
+
+/// One registered structure.
+#[derive(Clone, Debug)]
+pub struct DataEntry {
+    pub name: String,
+    pub kind: DataKind,
+    /// Global element count (distributed block-wise).
+    pub total_elems: u64,
+    /// This rank's current block payload.
+    pub local: Payload,
+}
+
+impl DataEntry {
+    /// Expected local block for rank `r` of `n`.
+    pub fn expected_block(&self, n: usize, r: usize) -> Block {
+        block_of(self.total_elems, n, r)
+    }
+}
+
+/// Declaration used when (re)building a registry on spawned drains.
+#[derive(Clone, Debug)]
+pub struct DataDecl {
+    pub name: String,
+    pub kind: DataKind,
+    pub total_elems: u64,
+    /// Real mode? (drains allocate real buffers to receive into).
+    pub real: bool,
+}
+
+/// The per-rank registry.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    entries: Vec<DataEntry>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a structure with this rank's current block.
+    pub fn register(&mut self, name: &str, kind: DataKind, total_elems: u64, local: Payload) {
+        assert!(
+            self.entries.iter().all(|e| e.name != name),
+            "duplicate registration of '{name}'"
+        );
+        self.entries.push(DataEntry {
+            name: name.to_string(),
+            kind,
+            total_elems,
+            local,
+        });
+    }
+
+    /// Build an empty-local registry from declarations (drain side).
+    pub fn from_decls(decls: &[DataDecl]) -> Registry {
+        let mut r = Registry::new();
+        for d in decls {
+            let local = if d.real {
+                Payload::real(Vec::new())
+            } else {
+                Payload::virt(0)
+            };
+            r.register(&d.name, d.kind, d.total_elems, local);
+        }
+        r
+    }
+
+    /// Declarations mirroring this registry (source side → spawn cfg).
+    pub fn decls(&self) -> Vec<DataDecl> {
+        self.entries
+            .iter()
+            .map(|e| DataDecl {
+                name: e.name.clone(),
+                kind: e.kind,
+                total_elems: e.total_elems,
+                real: e.local.is_real(),
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[DataEntry] {
+        &self.entries
+    }
+
+    pub fn entry(&self, i: usize) -> &DataEntry {
+        &self.entries[i]
+    }
+
+    pub fn entry_mut(&mut self, i: usize) -> &mut DataEntry {
+        &mut self.entries[i]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&DataEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Indices of entries of a given kind.
+    pub fn of_kind(&self, kind: DataKind) -> Vec<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total bytes registered locally (source exposure size).
+    pub fn local_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.local.bytes()).sum()
+    }
+
+    /// Verify every entry's local block has the expected length for
+    /// rank `r` of `n`; returns offending names.
+    pub fn verify_blocks(&self, n: usize, r: usize) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|e| e.local.elems() != e.expected_block(n, r).len())
+            .map(|e| e.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut r = Registry::new();
+        r.register("A", DataKind::Constant, 1000, Payload::virt(250));
+        r.register("x", DataKind::Variable, 100, Payload::virt(25));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.by_name("A").unwrap().total_elems, 1000);
+        assert!(r.by_name("missing").is_none());
+        assert_eq!(r.of_kind(DataKind::Constant), vec![0]);
+        assert_eq!(r.of_kind(DataKind::Variable), vec![1]);
+        assert_eq!(r.local_bytes(), (250 + 25) * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate registration")]
+    fn duplicate_name_panics() {
+        let mut r = Registry::new();
+        r.register("A", DataKind::Constant, 10, Payload::virt(5));
+        r.register("A", DataKind::Constant, 10, Payload::virt(5));
+    }
+
+    #[test]
+    fn decls_roundtrip() {
+        let mut r = Registry::new();
+        r.register("A", DataKind::Constant, 1000, Payload::real(vec![0.0; 250]));
+        r.register("b", DataKind::Variable, 40, Payload::virt(10));
+        let decls = r.decls();
+        let drain = Registry::from_decls(&decls);
+        assert_eq!(drain.len(), 2);
+        assert!(drain.entry(0).local.is_real());
+        assert_eq!(drain.entry(0).local.elems(), 0);
+        assert!(!drain.entry(1).local.is_real());
+        assert_eq!(drain.by_name("b").unwrap().kind, DataKind::Variable);
+    }
+
+    #[test]
+    fn verify_blocks_flags_wrong_sizes() {
+        let mut r = Registry::new();
+        r.register("ok", DataKind::Constant, 100, Payload::virt(25));
+        r.register("bad", DataKind::Constant, 100, Payload::virt(7));
+        let bad = r.verify_blocks(4, 0);
+        assert_eq!(bad, vec!["bad".to_string()]);
+    }
+}

@@ -1,0 +1,476 @@
+//! The RMA redistribution methods (§IV-B, §IV-C).
+//!
+//! * **RMA-Lock** (Algorithm 2): for each accessed source the drain
+//!   opens a shared passive epoch (`Win_lock` + `MPI_MODE_NOCHECK`),
+//!   posts its read, and later closes every epoch (`Win_unlock`).
+//! * **RMA-Lockall** (Algorithm 3): a single epoch over all targets
+//!   (`Win_lock_all` … `Win_unlock_all`).
+//!
+//! One dedicated window per registered data structure (§IV-B: exposing
+//! several structures in one window complicates offset management).
+//! Sources expose their local block; every other rank exposes an empty
+//! buffer (`NULL`, Alg. 2 L3).  `Win_create` is collective and charges
+//! the memory-registration cost of the exposed bytes — the overhead the
+//! paper identifies as dominant (§V-B, §VI).
+//!
+//! For background redistribution the algorithms are split in two (§IV-C):
+//! [`init_rma`] creates the windows and posts the reads as `Rget`s, and
+//! the completion protocol (local `MPI_Testall`, global `MPI_Ibarrier`,
+//! local frees) is driven by [`reconfig`](super::reconfig).
+
+use crate::simmpi::{recv_buf_real, recv_buf_virtual, CommId, MpiProc, Payload, RecvBuf, ReqId, WinId};
+
+use super::blockdist::{drain_plan, DrainPlan};
+use super::reconfig::Roles;
+use super::registry::Registry;
+
+/// Per-entry read bookkeeping on the drain side.
+#[derive(Debug)]
+pub struct DrainReads {
+    pub plan: DrainPlan,
+    pub buf: RecvBuf,
+    pub real: bool,
+}
+
+impl DrainReads {
+    /// Materialize the received block as a payload.
+    pub fn into_payload(self) -> Payload {
+        if self.real {
+            let data = self.buf.lock().unwrap().take().expect("buffer vanished");
+            debug_assert_eq!(data.len() as u64, self.plan.block.len());
+            Payload::real(data)
+        } else {
+            Payload::virt(self.plan.block.len())
+        }
+    }
+}
+
+/// State carried between `Init_RMA` and `Complete_RMA` (§IV-C).
+pub struct RmaInit {
+    /// One window per registry entry (all ranks).
+    pub wins: Vec<WinId>,
+    /// Outstanding `Rget` requests (drains; empty for source-only).
+    pub reqs: Vec<ReqId>,
+    /// Read bookkeeping per entry (drains; `None` for source-only).
+    pub reads: Vec<Option<DrainReads>>,
+    /// Epochs to close once reads complete: (window index, lockall?,
+    /// first_source, last_source).
+    pub epochs: Vec<(usize, bool, usize, usize)>,
+}
+
+/// Collectively create the window of one registry entry.  Sources
+/// expose their local block, everyone else an empty payload (Alg. 2
+/// L1-L5 / L21, Alg. 3 L1-L5 / L18).
+fn create_window(proc: &MpiProc, merged: CommId, roles: &Roles, registry: &Registry, i: usize) -> WinId {
+    let e = registry.entry(i);
+    let exposure = if roles.is_source() {
+        e.local.clone()
+    } else if e.local.is_real() {
+        Payload::real(Vec::new()) // data = NULL (Alg. 2 L3)
+    } else {
+        Payload::virt(0)
+    };
+    proc.win_create(merged, exposure)
+}
+
+/// Collectively create one window per selected registry entry.
+pub fn create_windows(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+) -> Vec<WinId> {
+    which
+        .iter()
+        .map(|&i| create_window(proc, merged, roles, registry, i))
+        .collect()
+}
+
+/// Allocate the drain-side receive buffer for one entry (Algorithm 1
+/// also allocates the per-structure memory for each drain).
+fn alloc_drain(total: u64, roles: &Roles, real: bool) -> DrainReads {
+    let plan = drain_plan(total, roles.ns, roles.nd, roles.rank);
+    let buf = if real {
+        recv_buf_real(plan.block.len() as usize)
+    } else {
+        recv_buf_virtual()
+    };
+    DrainReads { plan, buf, real }
+}
+
+/// Post one drain's reads for one entry using blocking `Get`s
+/// (Algorithms 2/3 L11-L15).  Epochs are assumed open.
+fn post_gets(proc: &MpiProc, win: WinId, reads: &DrainReads) {
+    let plan = &reads.plan;
+    let mut first_index = plan.first_index;
+    for i in plan.first_source..plan.last_source {
+        proc.get(win, i, first_index, plan.counts[i], &reads.buf, plan.displs[i]);
+        first_index = 0; // only the first window needs the offset (§IV-B)
+    }
+}
+
+/// Post one drain's reads for one entry as `Rget`s (§IV-C background
+/// path); returns the requests.
+fn post_rgets(proc: &MpiProc, win: WinId, reads: &DrainReads) -> Vec<ReqId> {
+    let plan = &reads.plan;
+    let mut first_index = plan.first_index;
+    let mut reqs = Vec::new();
+    for i in plan.first_source..plan.last_source {
+        reqs.push(proc.rget(win, i, first_index, plan.counts[i], &reads.buf, plan.displs[i]));
+        first_index = 0;
+    }
+    reqs
+}
+
+/// Blocking RMA redistribution — Algorithm 2 (`lockall = false`) or
+/// Algorithm 3 (`lockall = true`), including the final collective
+/// `Win_free`.  Returns the drain's new local payloads (one per
+/// selected entry, in order; `None` for non-drain ranks).
+pub fn redistribute_blocking(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+) -> Vec<Option<Payload>> {
+    let wins = create_windows(proc, merged, roles, registry, which);
+    let mut out: Vec<Option<Payload>> = Vec::with_capacity(which.len());
+    for (&i, win) in which.iter().zip(&wins) {
+        let e = registry.entry(i);
+        if roles.is_drain() {
+            let reads = alloc_drain(e.total_elems, roles, e.local.is_real());
+            let plan = &reads.plan;
+            if lockall {
+                // Algorithm 3: one epoch for everything.
+                proc.win_lock_all(*win);
+                post_gets(proc, *win, &reads);
+                proc.win_unlock_all(*win);
+            } else {
+                // Algorithm 2: one epoch per accessed target.
+                for i in plan.first_source..plan.last_source {
+                    proc.win_lock(*win, i);
+                }
+                post_gets(proc, *win, &reads);
+                for i in plan.first_source..plan.last_source {
+                    proc.win_unlock(*win, i);
+                }
+            }
+            out.push(Some(reads.into_payload()));
+        } else {
+            // Source-only ranks just create and free their window
+            // (Alg. 2 L21-L23) — no epochs, no reads.
+            out.push(None);
+        }
+    }
+    for win in wins {
+        proc.win_free(win);
+    }
+    out
+}
+
+/// The paper's §VI future-work variant: a **single window** per rank
+/// exposing every selected structure back to back (the "one dynamic
+/// window with all memory attached" fix for the window-initialization
+/// overhead).  One collective create + one collective free amortize
+/// the per-window setup and synchronization across the k structures;
+/// the registration bytes are unchanged — which is exactly what the
+/// ablation measures.
+pub fn redistribute_blocking_fused(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+) -> Vec<Option<Payload>> {
+    // Expose one concatenated payload (sources) or nothing.
+    let exposure = if roles.is_source() {
+        let parts: Vec<Payload> = which.iter().map(|&i| registry.entry(i).local.clone()).collect();
+        Payload::concat(&parts)
+    } else if which.iter().any(|&i| registry.entry(i).local.is_real()) {
+        Payload::real(Vec::new())
+    } else {
+        Payload::virt(0)
+    };
+    let win = proc.win_create(merged, exposure);
+    let mut out: Vec<Option<Payload>> = Vec::with_capacity(which.len());
+    if roles.is_drain() {
+        // Base offset of entry k inside *target*'s exposure = total of
+        // the preceding entries' local blocks at that target.
+        let base_of = |target: usize, upto: usize| -> u64 {
+            which[..upto]
+                .iter()
+                .map(|&i| {
+                    super::blockdist::block_of(registry.entry(i).total_elems, roles.ns, target)
+                        .len()
+                })
+                .sum()
+        };
+        let mut all_reads = Vec::with_capacity(which.len());
+        for (k, &i) in which.iter().enumerate() {
+            let e = registry.entry(i);
+            let reads = alloc_drain(e.total_elems, roles, e.local.is_real());
+            let plan = reads.plan.clone();
+            if !lockall {
+                for t in plan.first_source..plan.last_source {
+                    proc.win_lock(win, t);
+                }
+            } else if k == 0 {
+                proc.win_lock_all(win);
+            }
+            let mut first_index = plan.first_index;
+            for t in plan.first_source..plan.last_source {
+                let disp = base_of(t, k) + first_index;
+                proc.get(win, t, disp, plan.counts[t], &reads.buf, plan.displs[t]);
+                first_index = 0;
+            }
+            if !lockall {
+                for t in plan.first_source..plan.last_source {
+                    proc.win_unlock(win, t);
+                }
+            }
+            all_reads.push(reads);
+        }
+        if lockall {
+            proc.win_unlock_all(win);
+        }
+        for reads in all_reads {
+            out.push(Some(reads.into_payload()));
+        }
+    } else {
+        for _ in which {
+            out.push(None);
+        }
+    }
+    proc.win_free(win);
+    out
+}
+
+/// `Init_RMA` (§IV-C, Fig. 1): per selected structure, collectively
+/// create its window and — on drains — immediately open the epoch and
+/// post the reads as `Rget`s before moving to the next structure.
+/// Interleaving reads with the successive window creations is the
+/// behaviour the paper observes ("some reads are also started during
+/// this creation […] many of them are already completed by the time
+/// all windows are created", §V-C).  Returns the in-flight state for
+/// `Complete_RMA`.
+pub fn init_rma(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+) -> RmaInit {
+    let mut wins = Vec::with_capacity(which.len());
+    let mut reqs = Vec::new();
+    let mut reads = Vec::with_capacity(which.len());
+    let mut epochs = Vec::new();
+    for (k, &i) in which.iter().enumerate() {
+        let e = registry.entry(i);
+        let win = create_window(proc, merged, roles, registry, i);
+        wins.push(win);
+        if roles.is_drain() {
+            let dr = alloc_drain(e.total_elems, roles, e.local.is_real());
+            let plan = &dr.plan;
+            if lockall {
+                proc.win_lock_all(win);
+            } else {
+                for t in plan.first_source..plan.last_source {
+                    proc.win_lock(win, t);
+                }
+            }
+            reqs.extend(post_rgets(proc, win, &dr));
+            epochs.push((k, lockall, plan.first_source, plan.last_source));
+            reads.push(Some(dr));
+        } else {
+            reads.push(None);
+        }
+    }
+    RmaInit { wins, reqs, reads, epochs }
+}
+
+/// Close the epochs opened by [`init_rma`] (called once the drain's
+/// `Rget`s have completed — the unlocks are then cheap bookkeeping,
+/// the paper's motivation for replacing `Get` with `Rget`, §IV-C).
+pub fn close_epochs(proc: &MpiProc, init: &RmaInit) {
+    for &(k, lockall, first, last) in &init.epochs {
+        let win = init.wins[k];
+        if lockall {
+            proc.win_unlock_all(win);
+        } else {
+            for i in first..last {
+                proc.win_unlock(win, i);
+            }
+        }
+    }
+}
+
+/// Free every window locally (Wait-Drains path: the global barrier has
+/// already synchronized, §IV-C).
+pub fn free_windows_local(proc: &MpiProc, init: &RmaInit) {
+    for win in &init.wins {
+        proc.win_free_local(*win);
+    }
+}
+
+/// Turn completed drain reads into the new local payloads.
+pub fn take_payloads(init: &mut RmaInit) -> Vec<Option<Payload>> {
+    init.reads
+        .iter_mut()
+        .map(|r| r.take().map(DrainReads::into_payload))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mam::registry::DataKind;
+    use crate::netmodel::{NetParams, Topology};
+    use crate::simmpi::{MpiSim, WORLD};
+
+    fn run_blocking(ns: usize, nd: usize, total: u64, lockall: bool) {
+        let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+        let p_count = ns.max(nd);
+        sim.launch(p_count, move |p| {
+            let r = p.rank(WORLD);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if roles.is_source() {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], lockall);
+            if roles.is_drain() {
+                let nb = super::super::blockdist::block_of(total, nd, r);
+                let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+                let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                assert_eq!(got, want, "drain {r} wrong block ({ns}->{nd})");
+            } else {
+                assert!(out[0].is_none());
+            }
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn blocking_lock_grow() {
+        run_blocking(2, 5, 97, false);
+    }
+
+    #[test]
+    fn blocking_lock_shrink() {
+        run_blocking(6, 2, 103, false);
+    }
+
+    #[test]
+    fn blocking_lockall_grow() {
+        run_blocking(3, 7, 211, true);
+    }
+
+    #[test]
+    fn blocking_lockall_shrink() {
+        run_blocking(7, 3, 211, true);
+    }
+
+    #[test]
+    fn blocking_same_size_is_local() {
+        run_blocking(4, 4, 64, false);
+        run_blocking(4, 4, 64, true);
+    }
+
+    #[test]
+    fn init_rma_then_manual_completion() {
+        // Drive the §IV-C split by hand: init, poll rgets, close, free.
+        let total = 60u64;
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(3, move |p| {
+            let r = p.rank(WORLD);
+            let (ns, nd) = (2usize, 3usize);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if roles.is_source() {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let mut init = init_rma(&p, WORLD, &roles, &reg, &[0], false);
+            // Everyone is a drain here (nd=3 covers all ranks).
+            while !p.req_testall(&init.reqs) {
+                p.compute(1e-4);
+            }
+            close_epochs(&p, &init);
+            let req = p.ibarrier(WORLD);
+            while !p.req_test(req) {
+                p.compute(1e-4);
+            }
+            free_windows_local(&p, &init);
+            let out = take_payloads(&mut init);
+            let nb = super::super::blockdist::block_of(total, nd, r);
+            let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+            let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+            assert_eq!(got, want);
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn multiple_structures_get_own_windows() {
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(2, move |p| {
+            let r = p.rank(WORLD);
+            let roles = Roles { ns: 2, nd: 2, rank: r };
+            let mut reg = Registry::new();
+            let b1 = super::super::blockdist::block_of(40, 2, r);
+            let b2 = super::super::blockdist::block_of(10, 2, r);
+            reg.register(
+                "A",
+                DataKind::Constant,
+                40,
+                Payload::real((b1.ini..b1.end).map(|i| i as f64).collect()),
+            );
+            reg.register(
+                "x",
+                DataKind::Constant,
+                10,
+                Payload::real((b2.ini..b2.end).map(|i| 100.0 + i as f64).collect()),
+            );
+            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0, 1], true);
+            assert_eq!(out.len(), 2);
+            let a = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+            let x = out[1].as_ref().unwrap().as_slice().unwrap().to_vec();
+            assert_eq!(a, (b1.ini..b1.end).map(|i| i as f64).collect::<Vec<_>>());
+            assert_eq!(x, (b2.ini..b2.end).map(|i| 100.0 + i as f64).collect::<Vec<_>>());
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn virtual_mode_moves_sizes_only() {
+        let mut sim = MpiSim::new(Topology::new(2, 2), NetParams::test_simple());
+        sim.launch(4, move |p| {
+            let r = p.rank(WORLD);
+            let (ns, nd) = (4usize, 2usize);
+            let roles = Roles { ns, nd, rank: r };
+            let total = 1_000_000u64;
+            let b = super::super::blockdist::block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], false);
+            if roles.is_drain() {
+                let nb = super::super::blockdist::block_of(total, nd, r);
+                assert_eq!(out[0].as_ref().unwrap().elems(), nb.len());
+                assert!(!out[0].as_ref().unwrap().is_real());
+            }
+            assert!(p.now() > 0.0, "virtual redistribution must cost time");
+        });
+        sim.run().unwrap();
+    }
+}

@@ -1,0 +1,176 @@
+//! Metrics recording — Proteo's monitoring submodule.
+//!
+//! The world owns one [`Metrics`] instance; simulated code records
+//! counters, time marks and series into it, and the experiment
+//! harnesses (`experiments/`) read them back to produce the paper's
+//! figures (redistribution time R, iteration counts N_it, per-iteration
+//! times for ω, …).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Thread-safe-by-context metrics store (lives inside the world mutex).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, f64>,
+    series: BTreeMap<String, Vec<f64>>,
+    marks: BTreeMap<String, f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    // ------------------------------------------------------- counters
+
+    pub fn add_counter(&mut self, name: &str, delta: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    pub fn set_counter(&mut self, name: &str, value: f64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> Option<f64> {
+        self.counters.get(name).copied()
+    }
+
+    // ---------------------------------------------------------- marks
+
+    /// Record a named instant (virtual time).
+    pub fn mark(&mut self, name: &str, t: f64) {
+        self.marks.insert(name.to_string(), t);
+    }
+
+    pub fn mark_at(&self, name: &str) -> Option<f64> {
+        self.marks.get(name).copied()
+    }
+
+    /// Keep the earliest of the recorded and new instant (first rank to
+    /// reach a phase defines its start).
+    pub fn mark_min(&mut self, name: &str, t: f64) {
+        let e = self.marks.entry(name.to_string()).or_insert(f64::INFINITY);
+        if t < *e {
+            *e = t;
+        }
+    }
+
+    /// Keep the latest of the recorded and new instant (last rank to
+    /// finish a phase defines its end).
+    pub fn mark_max(&mut self, name: &str, t: f64) {
+        let e = self.marks.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if t > *e {
+            *e = t;
+        }
+    }
+
+    /// Duration between two marks, if both exist.
+    pub fn span(&self, start: &str, end: &str) -> Option<f64> {
+        Some(self.mark_at(end)? - self.mark_at(start)?)
+    }
+
+    // --------------------------------------------------------- series
+
+    pub fn push_series(&mut self, name: &str, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(v);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&[f64]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn series_len(&self, name: &str) -> usize {
+        self.series.get(name).map_or(0, |v| v.len())
+    }
+
+    /// Remove everything (between repetitions).
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.series.clear();
+        self.marks.clear();
+    }
+
+    /// Export as JSON for the experiment reports.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "counters".to_string(),
+            Json::Obj(self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+        );
+        obj.insert(
+            "marks".to_string(),
+            Json::Obj(self.marks.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+        );
+        obj.insert(
+            "series".to_string(),
+            Json::Obj(
+                self.series
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::arr_f64(v)))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.add_counter("x", 1.0);
+        m.add_counter("x", 2.5);
+        assert_eq!(m.counter("x"), Some(3.5));
+        assert_eq!(m.counter("y"), None);
+        m.set_counter("x", 7.0);
+        assert_eq!(m.counter("x"), Some(7.0));
+    }
+
+    #[test]
+    fn marks_and_spans() {
+        let mut m = Metrics::new();
+        m.mark("start", 1.0);
+        m.mark("end", 3.5);
+        assert_eq!(m.span("start", "end"), Some(2.5));
+        assert_eq!(m.span("start", "missing"), None);
+    }
+
+    #[test]
+    fn series_collects() {
+        let mut m = Metrics::new();
+        m.push_series("it", 0.1);
+        m.push_series("it", 0.2);
+        assert_eq!(m.series("it").unwrap(), &[0.1, 0.2]);
+        assert_eq!(m.series_len("it"), 2);
+        assert_eq!(m.series_len("other"), 0);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let mut m = Metrics::new();
+        m.add_counter("c", 2.0);
+        m.mark("t0", 0.5);
+        m.push_series("s", 9.0);
+        let j = m.to_json();
+        assert_eq!(j.get_path("counters.c").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get_path("marks.t0").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get_path("series.s").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = Metrics::new();
+        m.add_counter("c", 1.0);
+        m.push_series("s", 1.0);
+        m.mark("m", 1.0);
+        m.clear();
+        assert!(m.counter("c").is_none());
+        assert!(m.series("s").is_none());
+        assert!(m.mark_at("m").is_none());
+    }
+}

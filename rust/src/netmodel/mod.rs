@@ -1,0 +1,19 @@
+//! Network and node performance model for the simulated cluster.
+//!
+//! Replaces the paper's physical testbed (8 nodes × 2× Intel Xeon 4210,
+//! 100 Gbps InfiniBand EDR, MPICH 4.2.0 CH4:OFI/verbs) with a calibrated
+//! analytical model:
+//!
+//! * [`topology`]  — nodes, cores, rank placement (⌈N/20⌉ nodes, §V-A),
+//! * [`costmodel`] — α-β point-to-point costs, eager/rendezvous regimes,
+//!   two-lane NIC contention (bulk FIFO occupancy + small-message lane),
+//!   RMA window registration and epoch costs,
+//! * [`calibration`] — the constants and their derivations.
+
+pub mod calibration;
+pub mod costmodel;
+pub mod topology;
+
+pub use calibration::NetParams;
+pub use costmodel::{CostModel, TransferClass};
+pub use topology::{NodeId, Placement, Topology};

@@ -1,0 +1,194 @@
+//! Cluster topology: nodes, cores and rank placement.
+//!
+//! The paper's testbed is 8 nodes × 20 cores (two 10-core Xeon 4210)
+//! on one InfiniBand switch.  Placement follows §V-A: a run with
+//! `N = max(NS, ND)` ranks uses `⌈N/20⌉` nodes and ranks are laid out
+//! block-wise (ranks 0..19 on node 0, 20..39 on node 1, …), which is
+//! MPICH's default `-bind-to core -map-by node`-free layout for one
+//! process per core.
+
+/// Identifier of a physical node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// How core slots map to nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Slot `s` → node `s / cores_per_node` (fill node 0 first).
+    Block,
+    /// Slot `s` → node `s % nodes` (round-robin).  This is the layout
+    /// of the paper's dynamic jobs: the allocation spans ⌈N/20⌉ nodes
+    /// (§V-A) and *both* the source and the drain group are spread over
+    /// every allocated node, so reconfiguration traffic uses all NICs
+    /// in parallel rather than funnelling through node 0.
+    Cyclic,
+}
+
+/// Static cluster description.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    pub policy: PlacePolicy,
+}
+
+impl Topology {
+    /// The paper's cluster: 8 nodes × 20 cores, cyclic rank layout.
+    pub fn sarteco25() -> Topology {
+        Topology { nodes: 8, cores_per_node: 20, policy: PlacePolicy::Cyclic }
+    }
+
+    pub fn new(nodes: usize, cores_per_node: usize) -> Topology {
+        assert!(nodes > 0 && cores_per_node > 0);
+        Topology { nodes, cores_per_node, policy: PlacePolicy::Block }
+    }
+
+    pub fn new_cyclic(nodes: usize, cores_per_node: usize) -> Topology {
+        assert!(nodes > 0 && cores_per_node > 0);
+        Topology { nodes, cores_per_node, policy: PlacePolicy::Cyclic }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Node hosting core slot `s` under this topology's policy.
+    pub fn node_of_slot(&self, slot: usize) -> NodeId {
+        debug_assert!(slot < self.total_cores());
+        match self.policy {
+            PlacePolicy::Block => NodeId(slot / self.cores_per_node),
+            PlacePolicy::Cyclic => NodeId(slot % self.nodes),
+        }
+    }
+
+    /// Nodes needed for `n` ranks at one rank per core (§V-A: ⌈N/20⌉).
+    pub fn nodes_for(&self, n_ranks: usize) -> usize {
+        n_ranks.div_ceil(self.cores_per_node)
+    }
+}
+
+/// Mapping from global rank to node, block-wise.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub cores_per_node: usize,
+    /// node of each rank (index = rank).
+    pub node_of: Vec<NodeId>,
+}
+
+impl Placement {
+    /// Block placement of `n_ranks` ranks over a topology; panics if the
+    /// cluster is too small (paper never oversubscribes at placement).
+    pub fn block(topo: &Topology, n_ranks: usize) -> Placement {
+        let needed = topo.nodes_for(n_ranks);
+        assert!(
+            needed <= topo.nodes,
+            "placement needs {needed} nodes but topology has {}",
+            topo.nodes
+        );
+        let node_of = (0..n_ranks)
+            .map(|r| NodeId(r / topo.cores_per_node))
+            .collect();
+        Placement { cores_per_node: topo.cores_per_node, node_of }
+    }
+
+    /// Cyclic (round-robin) placement over all of the topology's nodes.
+    pub fn cyclic(topo: &Topology, n_ranks: usize) -> Placement {
+        assert!(n_ranks <= topo.total_cores(), "cluster too small");
+        let node_of = (0..n_ranks).map(|r| NodeId(r % topo.nodes)).collect();
+        Placement { cores_per_node: topo.cores_per_node, node_of }
+    }
+
+    /// Placement for a reconfiguration pair (NS → ND): ranks of *both*
+    /// groups coexist during redistribution; MaM's Merge method reuses
+    /// ranks 0..min(NS,ND) and spawns/retires the tail, so the union
+    /// occupies `max(NS, ND)` cores with block layout (§V-A).
+    pub fn for_pair(topo: &Topology, ns: usize, nd: usize) -> Placement {
+        Placement::block(topo, ns.max(nd))
+    }
+
+    pub fn node_of(&self, rank: usize) -> NodeId {
+        self.node_of[rank]
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Number of distinct nodes used.
+    pub fn n_nodes(&self) -> usize {
+        self.node_of.iter().map(|n| n.0).max().map_or(0, |m| m + 1)
+    }
+
+    /// Are two ranks on the same node (shared-memory path)?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// Ranks hosted on `node`.
+    pub fn ranks_on(&self, node: NodeId) -> Vec<usize> {
+        (0..self.n_ranks())
+            .filter(|&r| self.node_of[r] == node)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sarteco_topology_matches_paper() {
+        let t = Topology::sarteco25();
+        assert_eq!(t.nodes, 8);
+        assert_eq!(t.cores_per_node, 20);
+        assert_eq!(t.total_cores(), 160);
+    }
+
+    #[test]
+    fn nodes_for_matches_ceiling_rule() {
+        let t = Topology::sarteco25();
+        assert_eq!(t.nodes_for(20), 1);
+        assert_eq!(t.nodes_for(21), 2);
+        assert_eq!(t.nodes_for(40), 2);
+        assert_eq!(t.nodes_for(80), 4);
+        assert_eq!(t.nodes_for(160), 8);
+    }
+
+    #[test]
+    fn block_placement_layout() {
+        let t = Topology::sarteco25();
+        let p = Placement::block(&t, 40);
+        assert_eq!(p.node_of(0), NodeId(0));
+        assert_eq!(p.node_of(19), NodeId(0));
+        assert_eq!(p.node_of(20), NodeId(1));
+        assert_eq!(p.node_of(39), NodeId(1));
+        assert_eq!(p.n_nodes(), 2);
+        assert!(p.same_node(3, 12));
+        assert!(!p.same_node(3, 22));
+    }
+
+    #[test]
+    fn pair_placement_uses_max() {
+        let t = Topology::sarteco25();
+        let p = Placement::for_pair(&t, 20, 160);
+        assert_eq!(p.n_ranks(), 160);
+        assert_eq!(p.n_nodes(), 8);
+        let p = Placement::for_pair(&t, 160, 40);
+        assert_eq!(p.n_ranks(), 160);
+    }
+
+    #[test]
+    #[should_panic(expected = "placement needs")]
+    fn oversized_placement_panics() {
+        let t = Topology::new(2, 4);
+        Placement::block(&t, 9);
+    }
+
+    #[test]
+    fn ranks_on_node() {
+        let t = Topology::new(2, 3);
+        let p = Placement::block(&t, 5);
+        assert_eq!(p.ranks_on(NodeId(0)), vec![0, 1, 2]);
+        assert_eq!(p.ranks_on(NodeId(1)), vec![3, 4]);
+    }
+}

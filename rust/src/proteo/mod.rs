@@ -1,0 +1,434 @@
+//! Proteo — the experiment runner implementing the paper's evaluation
+//! methodology (§V).
+//!
+//! A *run* executes one reconfiguration `P = (NS → ND)` with one
+//! version `V = (method, strategy)` on the simulated cluster:
+//!
+//! 1. launch `NS` ranks, register the SAM-CG data (§V-A),
+//! 2. run warm-up iterations on `NS` ranks → per-iteration baseline
+//!    `T_base`,
+//! 3. call `MAM_Reconfigure(ND)`; background versions keep iterating
+//!    with the consistent-stop protocol, counting the overlapped
+//!    iterations `N_it` (Fig. 6/9) and their durations `T_bg`
+//!    (→ ω = T_bg/T_base, Fig. 5/8),
+//! 4. `MAM_Finish`, then post iterations on `ND` ranks → `T_it^{ND}`.
+//!
+//! [`analysis`] implements Equations (1)–(3): the per-pair maximum
+//! iteration count `M^P`, the total cost
+//! `f(V,P) = R + T_it^{ND}·(M^P − N_it)` and the arg-min choice.
+//!
+//! Runs are repeated `reps` times with derived seeds and the median is
+//! reported, mirroring the paper's 20-repetition median (§V-A).
+
+use std::sync::Arc;
+
+use crate::mam::{is_valid_version, version_label, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy};
+use crate::netmodel::{NetParams, Topology};
+use crate::sam::{Sam, SamConfig};
+use crate::simmpi::{CommId, MpiProc, MpiSim, WORLD};
+use crate::util::stats::median;
+
+/// Full specification of one experimental run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub ns: usize,
+    pub nd: usize,
+    pub method: Method,
+    pub strategy: Strategy,
+    pub sam: SamConfig,
+    pub net: NetParams,
+    /// Cores per node (the paper's testbed has 20).
+    pub cores_per_node: usize,
+    /// Warm-up iterations on NS ranks (measure `T_base`).
+    pub warmup_iters: u64,
+    /// Iterations on ND ranks after the resize (measure `T_it^{ND}`).
+    pub post_iters: u64,
+    pub spawn_cost: f64,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    /// The paper's setup (§V-A) for one pair and version.
+    pub fn sarteco25(ns: usize, nd: usize, method: Method, strategy: Strategy) -> RunSpec {
+        RunSpec {
+            ns,
+            nd,
+            method,
+            strategy,
+            sam: SamConfig::sarteco25(),
+            net: NetParams::sarteco25(),
+            cores_per_node: 20,
+            warmup_iters: 3,
+            post_iters: 3,
+            spawn_cost: 0.25,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Nodes allocated: ⌈max(NS,ND)/cores⌉ (§V-A).
+    pub fn nodes(&self) -> usize {
+        self.ns.max(self.nd).div_ceil(self.cores_per_node)
+    }
+
+    pub fn label(&self) -> String {
+        version_label(self.method, self.strategy)
+    }
+}
+
+/// Measured outcome of one run (or the median of several).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    pub ns: usize,
+    pub nd: usize,
+    /// Redistribution time R (start of stage 3 → last rank done).
+    pub redist_time: f64,
+    /// Full reconfiguration span (stage 2 + 3 + 4).
+    pub reconf_total: f64,
+    /// Overlapped iterations N_it (max over sources; 0 for blocking).
+    pub n_it: f64,
+    /// Baseline per-iteration time on NS ranks.
+    pub t_base: f64,
+    /// Per-iteration time while redistribution ran in background
+    /// (NaN for blocking versions).
+    pub t_bg: f64,
+    /// Per-iteration time on ND ranks after the resize.
+    pub t_it_nd: f64,
+    /// ω = T_bg / T_base (Fig. 5/8; NaN for blocking).
+    pub omega: f64,
+    /// Virtual time at simulation end.
+    pub virt_end: f64,
+    /// DES events processed (simulator throughput diagnostics).
+    pub events: u64,
+}
+
+/// Execute one run.
+pub fn run_once(spec: &RunSpec) -> RunResult {
+    assert!(
+        is_valid_version(spec.method, spec.strategy),
+        "invalid version {:?}×{:?}",
+        spec.method,
+        spec.strategy
+    );
+    // Cyclic layout: the job's allocation spans ⌈max(NS,ND)/20⌉ nodes
+    // (§V-A) and both rank groups spread over every allocated node.
+    let topo = Topology::new_cyclic(spec.nodes().max(1), spec.cores_per_node);
+    let mut sim = MpiSim::new(topo, spec.net.clone());
+    let world = sim.world();
+    let spec2 = spec.clone();
+    sim.launch(spec.ns, move |p| source_body(&spec2, p));
+    let virt_end = sim.run().expect("simulation failed");
+
+    let w = world.lock().unwrap();
+    let m = &w.metrics;
+    let redist_time = m.span("mam.redist_start", "mam.redist_end").unwrap_or(f64::NAN);
+    let reconf_total = m.span("mam.reconf_start", "mam.reconf_end").unwrap_or(f64::NAN);
+    let t_base = m.series("sam.t_base").map_or(f64::NAN, median);
+    let t_bg = m.series("sam.t_bg").map_or(f64::NAN, median);
+    let t_it_nd = m.series("sam.t_nd").map_or(f64::NAN, median);
+    let n_it = m.mark_at("sam.n_it_max").unwrap_or(0.0);
+    RunResult {
+        label: spec.label(),
+        ns: spec.ns,
+        nd: spec.nd,
+        redist_time,
+        reconf_total,
+        n_it,
+        t_base,
+        t_bg,
+        t_it_nd,
+        omega: t_bg / t_base,
+        virt_end,
+        events: m.counter("engine.events").unwrap_or(0.0) as u64,
+    }
+}
+
+/// Median of `reps` runs with derived seeds (the paper uses 20 reps).
+pub fn run_median(spec: &RunSpec, reps: usize) -> RunResult {
+    assert!(reps >= 1);
+    let runs: Vec<RunResult> = (0..reps)
+        .map(|i| {
+            let mut s = spec.clone();
+            s.seed = spec.seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9);
+            run_once(&s)
+        })
+        .collect();
+    let med = |f: fn(&RunResult) -> f64| {
+        let vals: Vec<f64> = runs.iter().map(f).filter(|v| !v.is_nan()).collect();
+        if vals.is_empty() {
+            f64::NAN
+        } else {
+            median(&vals)
+        }
+    };
+    RunResult {
+        label: spec.label(),
+        ns: spec.ns,
+        nd: spec.nd,
+        redist_time: med(|r| r.redist_time),
+        reconf_total: med(|r| r.reconf_total),
+        n_it: med(|r| r.n_it),
+        t_base: med(|r| r.t_base),
+        t_bg: med(|r| r.t_bg),
+        t_it_nd: med(|r| r.t_it_nd),
+        omega: med(|r| r.omega),
+        virt_end: med(|r| r.virt_end),
+        events: runs.iter().map(|r| r.events).sum::<u64>() / reps as u64,
+    }
+}
+
+/// The per-source-rank body: warm-up → reconfigure (+ overlap loop) →
+/// finish → post iterations.
+fn source_body(spec: &RunSpec, p: MpiProc) {
+    let rank = p.rank(WORLD);
+    let mut sam = Sam::new(spec.sam.clone(), spec.seed, p.gpid());
+    let mut reg = Registry::new();
+    sam.register_data(&mut reg, spec.ns, rank);
+    let mam_cfg = ReconfigCfg {
+        method: spec.method,
+        strategy: spec.strategy,
+        spawn_cost: spec.spawn_cost,
+    };
+    let mut mam = Mam::new(reg, mam_cfg.clone());
+
+    // ---- Warm-up on NS ranks: measure T_base.
+    for _ in 0..spec.warmup_iters {
+        let dur = sam.iteration(&p, WORLD);
+        p.metrics(|m| m.push_series("sam.t_base", dur));
+    }
+
+    // ---- Reconfigure.
+    let nd = spec.nd;
+    let spec_d = spec.clone();
+    let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+        Arc::new(move |dp: MpiProc, merged: CommId| {
+            drain_main(&spec_d, dp, merged);
+        });
+    let status = mam.reconfigure(&p, WORLD, nd, drain_body);
+
+    // ---- Overlap loop (background strategies): the application keeps
+    // iterating; all ranks leave together via the flag allgather.
+    let mut n_it = 0u64;
+    if status == MamStatus::InProgress {
+        let mut local_done = false;
+        loop {
+            let (dur, all_done) = sam.iteration_with_flag(&p, WORLD, local_done);
+            if !local_done {
+                n_it += 1;
+                p.metrics(|m| m.push_series("sam.t_bg", dur));
+                if mam.checkpoint(&p) == MamStatus::Completed {
+                    local_done = true;
+                }
+            }
+            if all_done {
+                break;
+            }
+        }
+    }
+    p.metrics(|m| {
+        m.mark_max("sam.n_it_max", n_it as f64);
+        m.push_series("sam.n_it", n_it as f64);
+    });
+
+    // ---- Stage 4: switch communicators (and move variable data).
+    let out = mam.finish(&p, WORLD);
+    if let Some(comm) = out.app_comm {
+        debug_assert!(mam.registry.verify_blocks(nd, p.rank(comm)).is_empty());
+        for _ in 0..spec.post_iters {
+            let dur = sam.iteration(&p, comm);
+            p.metrics(|m| m.push_series("sam.t_nd", dur));
+        }
+    } else {
+        debug_assert!(rank >= nd, "rank {rank} wrongly retired");
+    }
+}
+
+/// Main function of spawned drain processes (grow only): mirror the
+/// redistribution, then run the post iterations with everyone else.
+fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
+    let sam0 = Sam::new(spec.sam.clone(), spec.seed, dp.gpid());
+    let mut reg = Registry::new();
+    // Declarations are identical on every rank: rebuild from config.
+    sam0.register_data(&mut reg, spec.ns, 0);
+    let decls = reg.decls();
+    let mam_cfg = ReconfigCfg {
+        method: spec.method,
+        strategy: spec.strategy,
+        spawn_cost: spec.spawn_cost,
+    };
+    let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
+    debug_assert!(mam
+        .registry
+        .verify_blocks(spec.nd, dp.rank(merged))
+        .is_empty());
+    let mut sam = Sam::new(spec.sam.clone(), spec.seed, dp.gpid());
+    for _ in 0..spec.post_iters {
+        let dur = sam.iteration(&dp, merged);
+        dp.metrics(|m| m.push_series("sam.t_nd", dur));
+    }
+}
+
+pub mod analysis {
+    //! Equations (1)–(3) of §V-C.
+
+    use super::RunResult;
+
+    /// Eq. (1): `M^P = max_V N_it^{V,P}`.
+    pub fn eq1_max_iters(results: &[RunResult]) -> f64 {
+        results.iter().map(|r| r.n_it).fold(0.0, f64::max)
+    }
+
+    /// Eq. (2): `f(V,P) = R^{V,P} + T_it^{ND} (M^P − N_it^{V,P})`.
+    pub fn eq2_total(r: &RunResult, m_p: f64) -> f64 {
+        r.redist_time + r.t_it_nd * (m_p - r.n_it)
+    }
+
+    /// Eq. (2) applied to a version set sharing one pair P.
+    pub fn eq2_totals(results: &[RunResult]) -> Vec<f64> {
+        let m_p = eq1_max_iters(results);
+        results.iter().map(|r| eq2_total(r, m_p)).collect()
+    }
+
+    /// Eq. (3): index of the version minimizing the total cost.
+    pub fn eq3_best(results: &[RunResult]) -> usize {
+        let totals = eq2_totals(results);
+        totals
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .expect("empty version set")
+    }
+}
+
+/// The paper's 12 reconfiguration pairs: ordered pairs from
+/// {20, 40, 80, 160} with NS ≠ ND (§V-A).
+pub fn sarteco25_pairs() -> Vec<(usize, usize)> {
+    let sizes = [20usize, 40, 80, 160];
+    let mut out = Vec::new();
+    for &ns in &sizes {
+        for &nd in &sizes {
+            if ns != nd {
+                out.push((ns, nd));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec(method: Method, strategy: Strategy) -> RunSpec {
+        let mut sam = SamConfig::sarteco25();
+        // Shrink the problem so unit tests stay fast (same shape).
+        sam.matrix_elems /= 100;
+        sam.vector_elems /= 100;
+        sam.flops_per_iter /= 100.0;
+        RunSpec {
+            ns: 6,
+            nd: 3,
+            method,
+            strategy,
+            sam,
+            net: NetParams::sarteco25(),
+            cores_per_node: 4,
+            warmup_iters: 2,
+            post_iters: 2,
+            spawn_cost: 0.05,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn pairs_match_paper() {
+        let pairs = sarteco25_pairs();
+        assert_eq!(pairs.len(), 12);
+        assert!(pairs.contains(&(20, 160)));
+        assert!(pairs.contains(&(160, 20)));
+        assert!(!pairs.contains(&(20, 20)));
+    }
+
+    #[test]
+    fn blocking_run_produces_metrics() {
+        let r = run_once(&small_spec(Method::Collective, Strategy::Blocking));
+        assert!(r.redist_time > 0.0, "R={}", r.redist_time);
+        assert!(r.t_base > 0.0);
+        assert!(r.t_it_nd > 0.0);
+        assert_eq!(r.n_it, 0.0, "blocking must not overlap iterations");
+        assert!(r.t_bg.is_nan());
+    }
+
+    #[test]
+    fn wd_run_overlaps_iterations() {
+        let r = run_once(&small_spec(Method::Collective, Strategy::WaitDrains));
+        assert!(r.redist_time > 0.0);
+        assert!(r.n_it >= 1.0, "WD should overlap ≥1 iteration, got {}", r.n_it);
+        assert!(r.omega > 0.5, "omega={}", r.omega);
+    }
+
+    #[test]
+    fn rma_wd_grow_works() {
+        let mut spec = small_spec(Method::RmaLockall, Strategy::WaitDrains);
+        spec.ns = 3;
+        spec.nd = 6;
+        let r = run_once(&spec);
+        assert!(r.redist_time > 0.0);
+        assert!(r.t_it_nd > 0.0);
+    }
+
+    #[test]
+    fn threading_run_completes() {
+        let r = run_once(&small_spec(Method::Collective, Strategy::Threading));
+        assert!(r.redist_time > 0.0);
+        assert!(r.t_it_nd > 0.0);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let spec = small_spec(Method::RmaLock, Strategy::WaitDrains);
+        let a = run_once(&spec);
+        let b = run_once(&spec);
+        assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
+        assert_eq!(a.virt_end.to_bits(), b.virt_end.to_bits());
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn median_aggregates_reps() {
+        let spec = small_spec(Method::Collective, Strategy::NonBlocking);
+        let r = run_median(&spec, 3);
+        assert!(r.redist_time > 0.0);
+        assert!(r.t_base > 0.0);
+    }
+
+    #[test]
+    fn eq2_analysis_favors_fast_redistribution() {
+        use analysis::*;
+        let mk = |label: &str, r, n_it, t_nd| RunResult {
+            label: label.into(),
+            ns: 20,
+            nd: 40,
+            redist_time: r,
+            reconf_total: r,
+            n_it,
+            t_base: 1.0,
+            t_bg: 1.0,
+            t_it_nd: t_nd,
+            omega: 1.0,
+            virt_end: 0.0,
+            events: 0,
+        };
+        // Version A: fast R, few overlapped iters.  B: slow R, many.
+        let a = mk("A", 10.0, 2.0, 1.0);
+        let b = mk("B", 14.0, 8.0, 1.0);
+        let set = vec![a, b];
+        let m = eq1_max_iters(&set);
+        assert_eq!(m, 8.0);
+        let totals = eq2_totals(&set);
+        // f(A) = 10 + (8-2) = 16 ; f(B) = 14 + 0 = 14 → B wins.
+        assert_eq!(totals, vec![16.0, 14.0]);
+        assert_eq!(eq3_best(&set), 1);
+    }
+}

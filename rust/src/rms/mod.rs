@@ -1,0 +1,321 @@
+//! RMS — a miniature Resource Manager System driving stage 1 of the
+//! reconfiguration pipeline (§I): *reconfiguration feasibility*.
+//!
+//! The RMS owns the node pool, tracks running jobs and a FIFO queue of
+//! pending ones, and applies a dynamic resource-allocation policy to
+//! decide whether (and to what size) a malleable job should be
+//! resized at its next checkpoint:
+//!
+//! * [`Policy::Static`] — never resize (rigid jobs).
+//! * [`Policy::FillIdle`] — expand the malleable job over every idle
+//!   core; the paper's "scale up when resources are available".
+//! * [`Policy::MakeRoom`] — shrink the malleable job to the smallest
+//!   size that lets the head of the queue start; "scale down when
+//!   demand is high".
+//! * [`Policy::Plan`] — a scripted sequence of target sizes, used by
+//!   the experiment harnesses to reproduce a specific `(NS → ND)`.
+//!
+//! Targets are clamped to the job's min/max and rounded to multiples
+//! of `granularity` (the paper resizes in multiples of 20 — full
+//! nodes).
+
+use std::collections::VecDeque;
+
+/// A job known to the RMS.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Job {
+    pub id: usize,
+    pub name: String,
+    /// Currently allocated cores (== MPI ranks at 1 rank/core).
+    pub cores: usize,
+    /// Resizing bounds for malleable jobs; `min == max` means rigid.
+    pub min_cores: usize,
+    pub max_cores: usize,
+}
+
+impl Job {
+    pub fn is_malleable(&self) -> bool {
+        self.min_cores < self.max_cores
+    }
+}
+
+/// Dynamic resource-allocation policy (§I stage 1).
+#[derive(Clone, Debug)]
+pub enum Policy {
+    Static,
+    FillIdle,
+    MakeRoom,
+    /// MakeRoom while jobs are queued, FillIdle otherwise — the
+    /// "scale down when demand is high, up when resources are free"
+    /// behaviour the paper's introduction describes.
+    Adaptive,
+    Plan(Vec<usize>),
+}
+
+/// A resize decision for one job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub job: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// The resource manager.
+pub struct Rms {
+    pub total_cores: usize,
+    pub granularity: usize,
+    policy: Policy,
+    jobs: Vec<Job>,
+    queue: VecDeque<Job>,
+    next_id: usize,
+    plan_cursor: usize,
+}
+
+impl Rms {
+    pub fn new(total_cores: usize, granularity: usize, policy: Policy) -> Rms {
+        assert!(granularity >= 1 && total_cores >= granularity);
+        Rms {
+            total_cores,
+            granularity,
+            policy,
+            jobs: Vec::new(),
+            queue: VecDeque::new(),
+            next_id: 0,
+            plan_cursor: 0,
+        }
+    }
+
+    /// Cores currently allocated to running jobs.
+    pub fn used_cores(&self) -> usize {
+        self.jobs.iter().map(|j| j.cores).sum()
+    }
+
+    pub fn idle_cores(&self) -> usize {
+        self.total_cores - self.used_cores()
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.used_cores() as f64 / self.total_cores as f64
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Submit a job; starts immediately if `cores` fit, else queues.
+    /// Returns the job id.
+    pub fn submit(&mut self, name: &str, cores: usize, min: usize, max: usize) -> usize {
+        assert!(min <= cores && cores <= max && max <= self.total_cores);
+        let id = self.next_id;
+        self.next_id += 1;
+        let job = Job { id, name: name.to_string(), cores, min_cores: min, max_cores: max };
+        if cores <= self.idle_cores() {
+            self.jobs.push(job);
+        } else {
+            self.queue.push_back(job);
+        }
+        id
+    }
+
+    /// A running job finished: free its cores, start queued jobs that
+    /// now fit (FIFO, no backfilling).
+    pub fn finish(&mut self, job_id: usize) {
+        self.jobs.retain(|j| j.id != job_id);
+        self.admit_from_queue();
+    }
+
+    fn admit_from_queue(&mut self) {
+        while let Some(head) = self.queue.front() {
+            if head.cores <= self.idle_cores() {
+                let j = self.queue.pop_front().unwrap();
+                self.jobs.push(j);
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn round_down(&self, n: usize) -> usize {
+        (n / self.granularity) * self.granularity
+    }
+
+    /// Stage 1: should `job_id` resize at its next checkpoint?
+    /// Returns `None` when no resize is warranted.
+    pub fn checkpoint_decision(&mut self, job_id: usize) -> Option<Decision> {
+        let job = self.jobs.iter().find(|j| j.id == job_id)?.clone();
+        if !job.is_malleable() {
+            return None;
+        }
+        let fill_idle = |s: &Rms| {
+            let grown = job.cores + s.round_down(s.idle_cores());
+            grown.min(job.max_cores)
+        };
+        let make_room = |s: &Rms| match s.queue.front() {
+            Some(head) => {
+                let needed = head.cores.saturating_sub(s.idle_cores());
+                let shrunk = job
+                    .cores
+                    .saturating_sub(needed.div_ceil(s.granularity) * s.granularity);
+                shrunk.max(job.min_cores)
+            }
+            None => job.cores,
+        };
+        let target = match &self.policy {
+            Policy::Static => job.cores,
+            Policy::FillIdle => fill_idle(self),
+            Policy::MakeRoom => make_room(self),
+            Policy::Adaptive => {
+                if self.queue.is_empty() {
+                    fill_idle(self)
+                } else {
+                    make_room(self)
+                }
+            }
+            Policy::Plan(sizes) => {
+                if self.plan_cursor < sizes.len() {
+                    let t = sizes[self.plan_cursor];
+                    self.plan_cursor += 1;
+                    t.clamp(job.min_cores, job.max_cores)
+                } else {
+                    job.cores
+                }
+            }
+        };
+        if target == job.cores || target == 0 {
+            return None;
+        }
+        Some(Decision { job: job_id, from: job.cores, to: target })
+    }
+
+    /// Stage 2 hand-back: the job committed to the new size.
+    pub fn apply(&mut self, d: Decision) {
+        let job = self
+            .jobs
+            .iter_mut()
+            .find(|j| j.id == d.job)
+            .expect("apply for unknown job");
+        assert_eq!(job.cores, d.from, "stale decision");
+        job.cores = d.to;
+        // Shrinks may let queued jobs start.
+        if d.to < d.from {
+            self.admit_from_queue();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rms(policy: Policy) -> Rms {
+        Rms::new(160, 20, policy)
+    }
+
+    #[test]
+    fn submit_runs_or_queues() {
+        let mut r = rms(Policy::Static);
+        let a = r.submit("a", 120, 120, 120);
+        let b = r.submit("b", 80, 80, 80);
+        assert_eq!(r.jobs().len(), 1);
+        assert_eq!(r.queue_len(), 1);
+        assert_eq!(r.used_cores(), 120);
+        r.finish(a);
+        assert_eq!(r.jobs().len(), 1);
+        assert_eq!(r.jobs()[0].id, b);
+        assert_eq!(r.queue_len(), 0);
+    }
+
+    #[test]
+    fn fill_idle_grows_to_capacity() {
+        let mut r = rms(Policy::FillIdle);
+        let j = r.submit("malleable", 40, 20, 160);
+        let d = r.checkpoint_decision(j).expect("should grow");
+        assert_eq!(d, Decision { job: j, from: 40, to: 160 });
+        r.apply(d);
+        assert_eq!(r.idle_cores(), 0);
+        assert!(r.checkpoint_decision(j).is_none(), "no more room");
+    }
+
+    #[test]
+    fn fill_idle_respects_max_and_granularity() {
+        let mut r = rms(Policy::FillIdle);
+        let _rigid = r.submit("rigid", 30, 30, 30); // leaves 130 idle
+        let j = r.submit("malleable", 20, 20, 80);
+        let d = r.checkpoint_decision(j).unwrap();
+        // 130 idle → rounded to 120; clamped to max 80.
+        assert_eq!(d.to, 80);
+    }
+
+    #[test]
+    fn make_room_shrinks_for_queue_head() {
+        let mut r = rms(Policy::MakeRoom);
+        let j = r.submit("malleable", 160, 20, 160);
+        r.submit("incoming", 60, 60, 60); // queued: no idle cores
+        let d = r.checkpoint_decision(j).unwrap();
+        assert_eq!(d.to, 100, "shrink by exactly ⌈60/20⌉ nodes");
+        r.apply(d);
+        // Queue admission happens on shrink.
+        assert_eq!(r.jobs().len(), 2);
+        assert_eq!(r.queue_len(), 0);
+        assert_eq!(r.used_cores(), 160);
+    }
+
+    #[test]
+    fn make_room_respects_min() {
+        let mut r = rms(Policy::MakeRoom);
+        let j = r.submit("malleable", 40, 40, 160);
+        r.submit("incoming", 160, 160, 160);
+        // Cannot shrink below min 40 (40 == current → None).
+        assert!(r.checkpoint_decision(j).is_none());
+    }
+
+    #[test]
+    fn plan_yields_scripted_sizes() {
+        let mut r = rms(Policy::Plan(vec![80, 20]));
+        let j = r.submit("malleable", 40, 20, 160);
+        let d1 = r.checkpoint_decision(j).unwrap();
+        assert_eq!(d1.to, 80);
+        r.apply(d1);
+        let d2 = r.checkpoint_decision(j).unwrap();
+        assert_eq!((d2.from, d2.to), (80, 20));
+        r.apply(d2);
+        assert!(r.checkpoint_decision(j).is_none(), "plan exhausted");
+    }
+
+    #[test]
+    fn static_never_resizes() {
+        let mut r = rms(Policy::Static);
+        let j = r.submit("m", 40, 20, 160);
+        assert!(r.checkpoint_decision(j).is_none());
+    }
+
+    #[test]
+    fn rigid_job_never_resizes_under_any_policy() {
+        let mut r = rms(Policy::FillIdle);
+        let j = r.submit("rigid", 40, 40, 40);
+        assert!(r.checkpoint_decision(j).is_none());
+    }
+
+    #[test]
+    fn utilization_tracks_allocations() {
+        let mut r = rms(Policy::Static);
+        assert_eq!(r.utilization(), 0.0);
+        r.submit("a", 80, 80, 80);
+        assert!((r.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale decision")]
+    fn stale_apply_panics() {
+        let mut r = rms(Policy::FillIdle);
+        let j = r.submit("m", 40, 20, 160);
+        let d = r.checkpoint_decision(j).unwrap();
+        r.apply(d);
+        r.apply(d); // same decision twice
+    }
+}

@@ -1,0 +1,279 @@
+//! SAM — the Synthetic Application Module (§III).
+//!
+//! SAM emulates an iterative MPI application from user-defined
+//! parameters.  For this paper the emulated application is the
+//! **Conjugate Gradient** solver of §V-A: a sparse matrix of
+//! 72,067,110 rows with 5,414,538,962 non-zeros (≈ 64 GB), distributed
+//! block-wise by rows.  One CG iteration is modeled as
+//!
+//! * a compute phase — SpMV (2·nnz flops) plus vector updates
+//!   (≈ 10·n flops), perfectly strong-scaled over the N ranks at a
+//!   calibrated effective per-core rate (SpMV is memory-bound), and
+//! * a small collective — the dot-product reduction, posted as
+//!   `MPI_Allgather` (the first collective the paper names in §V-D).
+//!
+//! The registered data mirrors MaM's classification (§III): the matrix
+//! is **constant** (redistributable in the background), the solution
+//! vector is **variable** (must move while the app is blocked).
+//!
+//! Per-iteration compute jitter (seeded, reproducible) models the
+//! system noise that makes the paper repeat every experiment 20 times
+//! and take the median.
+
+use crate::mam::{block_of, DataKind, Registry};
+use crate::simmpi::{CommId, MpiProc, Payload};
+use crate::util::rng::Rng;
+
+/// Parameters of the emulated application.
+#[derive(Clone, Debug)]
+pub struct SamConfig {
+    /// Global element counts (8-byte units) of the *constant* CSR
+    /// structures, in registration order: values, column indices,
+    /// row pointers.  Each gets its own registry entry — and hence its
+    /// own RMA window (§IV-B), which is what lets reads of structure k
+    /// overlap the window creation of structure k+1 (§V-C).
+    pub matrix_elems: u64,
+    pub colind_elems: u64,
+    pub rowptr_elems: u64,
+    /// Global element count of the variable structure (the vector).
+    pub vector_elems: u64,
+    /// Total floating-point work of one iteration.
+    pub flops_per_iter: f64,
+    /// Effective per-core rate for this workload (memory-bound SpMV).
+    pub flops_per_core: f64,
+    /// Per-rank block of the per-iteration `MPI_Allgather` (elements).
+    pub allgather_elems: u64,
+    /// Carry real `Vec<f64>` payloads (small problems only; virtual
+    /// payloads move modeled bytes instead — same control flow).
+    pub real: bool,
+    /// Relative compute-time jitter (uniform ±jitter), seeded.
+    pub jitter: f64,
+}
+
+impl SamConfig {
+    /// The paper's CG emulation (§V-A): 72M×72M, 5.4G nnz, ≈64 GB.
+    pub fn sarteco25() -> SamConfig {
+        let nnz = 5_414_538_962u64;
+        let n = 72_067_110u64;
+        SamConfig {
+            // CSR storage: values f64 (43.3 GB), column indices i32
+            // (21.7 GB, expressed in 8-byte units), row pointers i64.
+            matrix_elems: nnz,
+            colind_elems: nnz / 2,
+            rowptr_elems: n + 1,
+            vector_elems: n,
+            // SpMV (2 flops/nnz) + ~10 vector ops per row.
+            flops_per_iter: 2.0 * nnz as f64 + 10.0 * n as f64,
+            // Effective per-core rate of the memory-bound CG sweep.
+            flops_per_core: 2.0e9,
+            allgather_elems: 2, // dot products: scalars per rank
+            real: false,
+            jitter: 0.01,
+        }
+    }
+
+    /// A small, real-payload configuration for correctness tests.
+    pub fn tiny_real() -> SamConfig {
+        SamConfig {
+            matrix_elems: 4_096,
+            colind_elems: 2_048,
+            rowptr_elems: 257,
+            vector_elems: 256,
+            flops_per_iter: 1.0e6,
+            flops_per_core: 1.0e9,
+            allgather_elems: 2,
+            real: true,
+            jitter: 0.0,
+        }
+    }
+
+    /// Ideal per-iteration compute time on `n` ranks (no jitter).
+    pub fn iter_compute(&self, n: usize) -> f64 {
+        self.flops_per_iter / (n as f64 * self.flops_per_core)
+    }
+
+    /// Total registered bytes (diagnostics / reports).
+    pub fn total_bytes(&self) -> u64 {
+        (self.matrix_elems + self.colind_elems + self.rowptr_elems + self.vector_elems)
+            * crate::simmpi::ELEM_BYTES
+    }
+}
+
+/// The emulated application: owns the config and the per-rank RNG.
+pub struct Sam {
+    pub cfg: SamConfig,
+    rng: Rng,
+}
+
+impl Sam {
+    pub fn new(cfg: SamConfig, seed: u64, gpid: usize) -> Sam {
+        Sam { cfg, rng: Rng::new(seed ^ (gpid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) }
+    }
+
+    /// Register the CG data for rank `rank` of `n` (called once at
+    /// startup; MaM redistributes the registry automatically later):
+    /// the three constant CSR arrays plus the variable vector.
+    pub fn register_data(&self, reg: &mut Registry, n: usize, rank: usize) {
+        let mk = |total: u64, salt: f64| {
+            let b = block_of(total, n, rank);
+            if self.cfg.real {
+                Payload::real((b.ini..b.end).map(|i| i as f64 + salt).collect())
+            } else {
+                Payload::virt(b.len())
+            }
+        };
+        reg.register("A_vals", DataKind::Constant, self.cfg.matrix_elems, mk(self.cfg.matrix_elems, 0.0));
+        reg.register("A_cols", DataKind::Constant, self.cfg.colind_elems, mk(self.cfg.colind_elems, 0.25));
+        reg.register("A_rowptr", DataKind::Constant, self.cfg.rowptr_elems, mk(self.cfg.rowptr_elems, 0.5));
+        let vb = block_of(self.cfg.vector_elems, n, rank);
+        let vector = if self.cfg.real {
+            Payload::real((vb.ini..vb.end).map(|i| (i as f64).sin()).collect())
+        } else {
+            Payload::virt(vb.len())
+        };
+        reg.register("x", DataKind::Variable, self.cfg.vector_elems, vector);
+    }
+
+    /// Execute one emulated CG iteration on `comm`; returns its
+    /// duration in virtual seconds.
+    pub fn iteration(&mut self, proc: &MpiProc, comm: CommId) -> f64 {
+        let t0 = proc.now();
+        let n = proc.size(comm);
+        let mut dt = self.cfg.iter_compute(n);
+        if self.cfg.jitter > 0.0 {
+            dt *= 1.0 + self.rng.gen_range_f64(-self.cfg.jitter, self.cfg.jitter);
+        }
+        proc.compute(dt);
+        // Dot-product reduction (small, latency-bound collective).
+        let _ = proc.allgather(comm, Payload::virt(self.cfg.allgather_elems));
+        proc.iter_tick();
+        proc.now() - t0
+    }
+
+    /// Iteration that also allgathers this rank's `flag` and returns
+    /// whether *every* rank's flag was set — the consistent-stop
+    /// protocol the application loop uses while a background
+    /// redistribution is in flight (all ranks must leave the iteration
+    /// loop at the same iteration or their collectives would
+    /// cross-match).
+    pub fn iteration_with_flag(&mut self, proc: &MpiProc, comm: CommId, flag: bool) -> (f64, bool) {
+        let t0 = proc.now();
+        let n = proc.size(comm);
+        let mut dt = self.cfg.iter_compute(n);
+        if self.cfg.jitter > 0.0 {
+            dt *= 1.0 + self.rng.gen_range_f64(-self.cfg.jitter, self.cfg.jitter);
+        }
+        proc.compute(dt);
+        let got = proc.allgather(comm, Payload::real(vec![if flag { 1.0 } else { 0.0 }]));
+        proc.iter_tick();
+        let all = got
+            .iter()
+            .all(|p| p.as_slice().is_some_and(|s| s.first() == Some(&1.0)));
+        (proc.now() - t0, all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::{NetParams, Topology};
+    use crate::simmpi::{MpiSim, WORLD};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn sarteco_config_matches_paper() {
+        let c = SamConfig::sarteco25();
+        // ≈ 64 GB of constant CSR data (vals + cols + rowptr).
+        let csr_bytes = (c.matrix_elems + c.colind_elems + c.rowptr_elems) * 8;
+        assert!(
+            (60.0e9..70.0e9).contains(&(csr_bytes as f64)),
+            "csr={csr_bytes}"
+        );
+        assert_eq!(c.matrix_elems, 5_414_538_962); // paper's nnz
+        assert_eq!(c.vector_elems, 72_067_110);
+        // Iteration time scales inversely with ranks.
+        let t20 = c.iter_compute(20);
+        let t160 = c.iter_compute(160);
+        assert!((t20 / t160 - 8.0).abs() < 1e-9);
+        // Plausible regime: hundreds of ms at 20 ranks.
+        assert!(t20 > 0.05 && t20 < 5.0, "t20={t20}");
+    }
+
+    #[test]
+    fn register_data_creates_blocks() {
+        let sam = Sam::new(SamConfig::tiny_real(), 1, 0);
+        let mut reg = Registry::new();
+        sam.register_data(&mut reg, 4, 1);
+        assert_eq!(reg.len(), 4);
+        assert!(reg.verify_blocks(4, 1).is_empty());
+        assert_eq!(reg.by_name("A_vals").unwrap().kind, DataKind::Constant);
+        assert_eq!(reg.by_name("A_cols").unwrap().kind, DataKind::Constant);
+        assert_eq!(reg.by_name("A_rowptr").unwrap().kind, DataKind::Constant);
+        assert_eq!(reg.by_name("x").unwrap().kind, DataKind::Variable);
+        assert_eq!(reg.of_kind(DataKind::Constant).len(), 3);
+    }
+
+    #[test]
+    fn iteration_advances_time_and_counts() {
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(4, |p| {
+            let mut sam = Sam::new(SamConfig::tiny_real(), 7, p.gpid());
+            let d1 = sam.iteration(&p, WORLD);
+            let d2 = sam.iteration(&p, WORLD);
+            assert!(d1 > 0.0 && d2 > 0.0);
+            assert_eq!(p.iters_done(), 2);
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_reproducible() {
+        fn durations(seed: u64) -> Vec<f64> {
+            let out = Arc::new(std::sync::Mutex::new(Vec::new()));
+            let o = out.clone();
+            let mut sim = MpiSim::new(Topology::new(1, 2), NetParams::test_simple());
+            sim.launch(1, move |p| {
+                let mut cfg = SamConfig::tiny_real();
+                cfg.jitter = 0.2;
+                let mut sam = Sam::new(cfg, seed, p.gpid());
+                for _ in 0..5 {
+                    o.lock().unwrap().push(sam.iteration(&p, WORLD));
+                }
+            });
+            sim.run().unwrap();
+            let v = out.lock().unwrap().clone();
+            v
+        }
+        assert_eq!(durations(42), durations(42));
+        assert_ne!(durations(42), durations(43));
+    }
+
+    #[test]
+    fn flag_iteration_reaches_consensus() {
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        let stops = Arc::new(AtomicUsize::new(0));
+        let s = stops.clone();
+        sim.launch(3, move |p| {
+            let r = p.rank(WORLD);
+            let mut sam = Sam::new(SamConfig::tiny_real(), 3, p.gpid());
+            // Rank r sets its flag from iteration r+1 onward.
+            let mut iters = 0u64;
+            loop {
+                iters += 1;
+                let flag = iters > r as u64;
+                let (_, all) = sam.iteration_with_flag(&p, WORLD, flag);
+                if all {
+                    break;
+                }
+                assert!(iters < 100);
+            }
+            // All ranks leave at the same iteration: the first where
+            // every flag is set (iteration 3: rank 2 sets it at iter 3).
+            assert_eq!(iters, 3, "rank {r} left at iteration {iters}");
+            s.fetch_add(1, Ordering::SeqCst);
+        });
+        sim.run().unwrap();
+        assert_eq!(stops.load(Ordering::SeqCst), 3);
+    }
+}

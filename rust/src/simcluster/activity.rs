@@ -1,0 +1,190 @@
+//! The context handle simulated code runs against.
+//!
+//! An [`ActivityCtx`] is the only way a simulated process interacts
+//! with virtual time: `advance` models compute, `park`/`unpark_at`
+//! build synchronization, and `spawn` creates new simulated processes
+//! (used by MaM's dynamic process spawning).  All higher layers
+//! (`simmpi`, `mam`, `sam`) are written against this handle.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::engine::{ActivityId, Handoff, Request, Time};
+
+/// Per-activity handle; cheap to clone *within* the owning activity.
+/// Clones share the clock state (`Rc<Cell>`), so every handle of one
+/// activity observes the same local time.
+#[derive(Clone)]
+pub struct ActivityCtx {
+    id: ActivityId,
+    handoff: Arc<Handoff>,
+    now: Rc<Cell<Time>>,
+    /// Time lease (§Perf-L3, see [`engine::Resume`]): local advances
+    /// strictly below this instant need no engine handoff.
+    lease: Rc<Cell<Time>>,
+}
+
+// The ctx (with its Rc cells) is moved into the activity thread once;
+// clones never leave that thread.
+unsafe impl Send for ActivityCtx {}
+
+impl ActivityCtx {
+    pub(crate) fn new(id: ActivityId, handoff: Arc<Handoff>) -> ActivityCtx {
+        ActivityCtx {
+            id,
+            handoff,
+            now: Rc::new(Cell::new(0.0)),
+            lease: Rc::new(Cell::new(0.0)),
+        }
+    }
+
+    pub(crate) fn set_now(&self, t: Time) {
+        // Never move the local clock backwards: an engine resume can
+        // carry an older instant after lease-based local advances
+        // (e.g. a queued wake delivered at its original time); treat it
+        // as a spurious wake at the activity's own present.
+        if t > self.now.get() {
+            self.now.set(t);
+        }
+    }
+
+    pub(crate) fn set_lease(&self, t: Time) {
+        self.lease.set(t);
+    }
+
+    fn resumed(&self, r: crate::simcluster::engine::Resume) {
+        self.set_now(r.now);
+        self.lease.set(r.lease);
+    }
+
+    /// This activity's id.
+    pub fn id(&self) -> ActivityId {
+        self.id
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now.get()
+    }
+
+    /// Model `dt` seconds of local work (or sleeping); resumes at
+    /// `now + dt`.  Negative durations are clamped to zero.
+    pub fn advance(&self, dt: Time) {
+        self.advance_until(self.now.get() + dt.max(0.0));
+    }
+
+    /// Resume at the *absolute* virtual time `t` (no-op if in the past).
+    pub fn advance_until(&self, t: Time) {
+        let target = t.max(self.now.get());
+        // Lease fast path: nothing else is scheduled before `target`,
+        // so the advance is a pure local clock bump — no handoff.
+        // Zero-length advances always go through the engine: callers
+        // use `advance(0.0)` as an explicit yield point, and skipping
+        // it locally would spin without making virtual progress.
+        if target > self.now.get() && target < self.lease.get() {
+            self.now.set(target);
+            return;
+        }
+        let r = self.handoff.activity_yield(Request::AdvanceUntil(target));
+        self.resumed(r);
+    }
+
+    /// Park until another activity calls [`ActivityCtx::unpark_at`] for
+    /// this activity.  Spurious wakeups are possible by design —
+    /// callers re-check their condition in a loop.
+    pub fn park(&self) {
+        let r = self.handoff.activity_yield(Request::Park);
+        self.resumed(r);
+    }
+
+    /// Schedule a wakeup for `target` at absolute time `at` (clamped to
+    /// now).  Never lost: if `target` is not parked yet the wake is
+    /// queued and consumed by its next `park`.
+    pub fn unpark_at(&self, target: ActivityId, at: Time) {
+        let r = self.handoff.activity_yield(Request::Unpark { target, at });
+        self.resumed(r);
+    }
+
+    /// Wake `target` "immediately" (at the current virtual time).
+    pub fn unpark_now(&self, target: ActivityId) {
+        self.unpark_at(target, self.now());
+    }
+
+    /// Spawn a new activity starting at the current virtual time;
+    /// returns its id.  Used for dynamically created MPI processes and
+    /// the Threading strategy's auxiliary threads.
+    pub fn spawn<F>(&self, label: impl Into<String>, body: F) -> ActivityId
+    where
+        F: FnOnce(ActivityCtx) + Send + 'static,
+    {
+        let r = self.handoff.activity_yield(Request::Spawn {
+            label: label.into(),
+            body: Box::new(body),
+            at: self.now.get(),
+        });
+        self.resumed(r);
+        ActivityId(r.reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::Engine;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn now_tracks_advances() {
+        let mut e = Engine::new();
+        e.spawn_at(0.0, "t", |ctx| {
+            assert_eq!(ctx.now(), 0.0);
+            ctx.advance(0.25);
+            assert_eq!(ctx.now(), 0.25);
+            ctx.advance_until(1.0);
+            assert_eq!(ctx.now(), 1.0);
+            // advancing to the past clamps
+            ctx.advance_until(0.5);
+            assert_eq!(ctx.now(), 1.0);
+            ctx.advance(-3.0);
+            assert_eq!(ctx.now(), 1.0);
+        });
+        e.run().unwrap();
+    }
+
+    #[test]
+    fn unpark_now_wakes_at_same_time() {
+        let mut e = Engine::new();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s = seen.clone();
+        let sleeper = e.spawn_at(0.0, "sleeper", move |ctx| {
+            ctx.park();
+            s.lock().unwrap().push(ctx.now());
+        });
+        e.spawn_at(0.0, "waker", move |ctx| {
+            ctx.advance(3.0);
+            ctx.unpark_now(sleeper);
+        });
+        e.run().unwrap();
+        assert_eq!(*seen.lock().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn spawned_child_starts_at_parent_time() {
+        let mut e = Engine::new();
+        let starts = Arc::new(AtomicUsize::new(0));
+        let s = starts.clone();
+        e.spawn_at(0.0, "parent", move |ctx| {
+            ctx.advance(2.0);
+            let s2 = s.clone();
+            ctx.spawn("kid", move |kctx| {
+                assert_eq!(kctx.now(), 2.0);
+                s2.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.advance(1.0);
+        });
+        e.run().unwrap();
+        assert_eq!(starts.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,631 @@
+//! The discrete-event engine: virtual clock, event heap, and the
+//! thread handoff protocol that suspends/resumes simulated activities.
+//!
+//! ## Handoff protocol
+//!
+//! Every activity owns a [`Handoff`] slot (mutex + condvar).  The
+//! engine resumes an activity by storing `ToActivity` and waits for the
+//! slot to flip back to `ToEngine(request)`; the activity does the
+//! mirror image.  This gives strict alternation — at most one activity
+//! body executes at a time — which is what makes simulation runs
+//! deterministic regardless of OS scheduling.
+//!
+//! ## Wakeups
+//!
+//! `park`/`unpark` use counting semantics (a pending-wake queue per
+//! activity), so an `unpark` that is issued *before* the target parks
+//! is never lost.  Higher layers are written condition-variable style:
+//! `while !condition { ctx.park(); }` — spurious wakeups are allowed
+//! and harmless.
+
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::activity::ActivityCtx;
+
+/// Virtual time in seconds.
+pub type Time = f64;
+
+/// Identifier of a simulated activity (process or auxiliary thread).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ActivityId(pub usize);
+
+/// Errors surfaced by [`Engine::run`].
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("deadlock at t={time:.9}s: {parked} activities parked, no pending events: {detail}")]
+    Deadlock { time: Time, parked: usize, detail: String },
+    #[error("activity {0:?} ({1}) panicked: {2}")]
+    ActivityPanic(ActivityId, String, String),
+    #[error("event limit of {0} exceeded (livelock guard)")]
+    EventLimit(u64),
+}
+
+/// What an activity asks the engine to do when it yields.
+pub(crate) enum Request {
+    /// Resume me at absolute virtual time `t` (compute / sleep).
+    AdvanceUntil(Time),
+    /// Park until some other activity unparks me.
+    Park,
+    /// Schedule a wakeup for `target` at absolute time `at`, then
+    /// continue running me immediately.
+    Unpark { target: ActivityId, at: Time },
+    /// Spawn a new activity starting at `at` (the caller's local time,
+    /// which may be ahead of the engine clock under a lease); reply
+    /// with its id, continue me immediately.
+    Spawn { label: String, body: BodyFn, at: Time },
+    /// Activity body finished (normally or by panic) at local time `at`.
+    Exit { panic_msg: Option<String>, at: Time },
+}
+
+pub(crate) type BodyFn = Box<dyn FnOnce(ActivityCtx) + Send + 'static>;
+
+/// Value the engine passes back when it resumes an activity.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Resume {
+    /// Current virtual time.
+    pub now: Time,
+    /// Reply value (spawn returns the new ActivityId here).
+    pub reply: usize,
+    /// §Perf-L3 time lease: the activity may advance its local clock up
+    /// to (strictly below) this instant WITHOUT a handoff — no other
+    /// event precedes it, and since exactly one activity runs at a
+    /// time, none can appear.  The engine↔activity thread ping-pong
+    /// (~5–10 µs of futex traffic per simulated call) is the DES's
+    /// dominant cost; leases remove it for every compute segment that
+    /// fits before the next scheduled event.
+    pub lease: Time,
+}
+
+pub(crate) enum Slot {
+    Empty,
+    ToActivity(Resume),
+    ToEngine(Request),
+}
+
+/// One mutex+condvar pair per activity; both sides block on it.
+pub(crate) struct Handoff {
+    pub slot: Mutex<Slot>,
+    pub cv: Condvar,
+}
+
+impl Handoff {
+    fn new() -> Arc<Handoff> {
+        Arc::new(Handoff { slot: Mutex::new(Slot::Empty), cv: Condvar::new() })
+    }
+
+    /// Engine side: hand control to the activity and wait for its next
+    /// request.
+    fn engine_step(&self, resume: Resume) -> Request {
+        let mut slot = self.slot.lock().unwrap();
+        *slot = Slot::ToActivity(resume);
+        self.cv.notify_all();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Empty) {
+                Slot::ToEngine(req) => return req,
+                other => {
+                    *slot = other;
+                    slot = self.cv.wait(slot).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Activity side: submit a request and wait to be resumed.
+    pub(crate) fn activity_yield(&self, req: Request) -> Resume {
+        let mut slot = self.slot.lock().unwrap();
+        *slot = Slot::ToEngine(req);
+        self.cv.notify_all();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Empty) {
+                Slot::ToActivity(r) => return r,
+                other => {
+                    *slot = other;
+                    slot = self.cv.wait(slot).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Activity side: final request (Exit) — posts without waiting for
+    /// a resume, so the thread can return and be joined by the engine.
+    fn activity_finish(&self, req: Request) {
+        let mut slot = self.slot.lock().unwrap();
+        *slot = Slot::ToEngine(req);
+        self.cv.notify_all();
+    }
+
+    /// Activity side: first wait (thread start) — no request submitted.
+    fn activity_wait_first(&self) -> Resume {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Empty) {
+                Slot::ToActivity(r) => return r,
+                other => {
+                    *slot = other;
+                    slot = self.cv.wait(slot).unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// Heap event: resume `activity` at `time`.  `seq` breaks ties FIFO so
+/// equal-time events are processed in insertion order (determinism).
+struct Event {
+    time: Time,
+    seq: u64,
+    activity: ActivityId,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct ActivityState {
+    label: String,
+    handoff: Arc<Handoff>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Wakeups delivered while the activity was not parked.
+    pending_wakes: VecDeque<Time>,
+    parked: bool,
+    done: bool,
+}
+
+/// Shared counters the [`ActivityCtx`] can read without a handoff.
+pub(crate) struct EngineShared {
+    /// Monotone count of processed events — cheap progress metric.
+    pub events_processed: AtomicU64,
+}
+
+/// The discrete-event engine.
+pub struct Engine {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    clock: Time,
+    activities: HashMap<ActivityId, ActivityState>,
+    next_id: usize,
+    alive: usize,
+    pub(crate) shared: Arc<EngineShared>,
+    /// Livelock guard; configurable via [`Engine::set_event_limit`].
+    event_limit: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            clock: 0.0,
+            activities: HashMap::new(),
+            next_id: 0,
+            alive: 0,
+            shared: Arc::new(EngineShared { events_processed: AtomicU64::new(0) }),
+            event_limit: 500_000_000,
+        }
+    }
+
+    /// Lower the livelock guard (useful in tests).
+    pub fn set_event_limit(&mut self, limit: u64) {
+        self.event_limit = limit;
+    }
+
+    /// Current virtual time (valid between `run` calls or after run).
+    pub fn now(&self) -> Time {
+        self.clock
+    }
+
+    /// Total events processed so far (simulator throughput metric).
+    pub fn events_processed(&self) -> u64 {
+        self.shared.events_processed.load(Ordering::Relaxed)
+    }
+
+    fn push_event(&mut self, time: Time, activity: ActivityId) {
+        self.seq += 1;
+        self.heap.push(Event { time, seq: self.seq, activity });
+    }
+
+    /// Register an activity to start at virtual time `start`.
+    pub fn spawn_at<F>(&mut self, start: Time, label: impl Into<String>, body: F) -> ActivityId
+    where
+        F: FnOnce(ActivityCtx) + Send + 'static,
+    {
+        let id = self.spawn_suspended(label, Box::new(body));
+        self.push_event(start, id);
+        id
+    }
+
+    /// Create the activity thread without scheduling it.
+    fn spawn_suspended(&mut self, label: impl Into<String>, body: BodyFn) -> ActivityId {
+        let id = ActivityId(self.next_id);
+        self.next_id += 1;
+        let label = label.into();
+        let handoff = Handoff::new();
+        let ctx = ActivityCtx::new(id, handoff.clone());
+        let thread_label = label.clone();
+        let h2 = handoff.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("sim-{thread_label}"))
+            .stack_size(1 << 20)
+            .spawn(move || {
+                let first = h2.activity_wait_first();
+                ctx.set_now(first.now);
+                ctx.set_lease(first.lease);
+                let ctx2 = ctx.clone();
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    body(ctx);
+                }));
+                let panic_msg = result.err().map(|e| {
+                    e.downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".to_string())
+                });
+                // Final post: do not wait for a resume — the engine
+                // joins this thread right after handling Exit.  Carry
+                // the final local time so lease-advanced clocks are
+                // reflected in the engine clock.
+                h2.activity_finish(Request::Exit { panic_msg, at: ctx2.now() });
+            })
+            .expect("spawn simulation thread");
+        self.activities.insert(
+            id,
+            ActivityState {
+                label,
+                handoff,
+                join: Some(join),
+                pending_wakes: VecDeque::new(),
+                parked: false,
+                done: false,
+            },
+        );
+        self.alive += 1;
+        id
+    }
+
+    /// Drive the simulation until every activity has finished.
+    pub fn run(&mut self) -> Result<Time, EngineError> {
+        let result = self.run_inner();
+        // On error, detach remaining threads so we don't hang on drop:
+        // they are parked forever; marking done lets Drop skip joins.
+        if result.is_err() {
+            for st in self.activities.values_mut() {
+                st.done = true;
+                st.join = None; // detach
+            }
+            self.alive = 0;
+        }
+        result
+    }
+
+    fn run_inner(&mut self) -> Result<Time, EngineError> {
+        let mut processed: u64 = 0;
+        while self.alive > 0 {
+            let Some(ev) = self.heap.pop() else {
+                let parked: Vec<String> = self
+                    .activities
+                    .values()
+                    .filter(|a| a.parked && !a.done)
+                    .map(|a| a.label.clone())
+                    .collect();
+                return Err(EngineError::Deadlock {
+                    time: self.clock,
+                    parked: parked.len(),
+                    detail: parked.join(", "),
+                });
+            };
+            processed += 1;
+            if processed > self.event_limit {
+                return Err(EngineError::EventLimit(self.event_limit));
+            }
+            debug_assert!(ev.time >= self.clock - 1e-12, "time went backwards");
+            self.clock = self.clock.max(ev.time);
+            let current = ev.activity;
+            let mut reply: usize = 0;
+            // Run the activity; immediate requests (Unpark/Spawn) keep
+            // control in the same activity without a heap round-trip.
+            loop {
+                let st = match self.activities.get_mut(&current) {
+                    Some(s) if !s.done => s,
+                    _ => break, // stale event for a finished activity
+                };
+                st.parked = false;
+                let handoff = st.handoff.clone();
+                let lease = self.heap.peek().map_or(f64::INFINITY, |e| e.time);
+                let req = handoff.engine_step(Resume { now: self.clock, reply, lease });
+                self.shared.events_processed.fetch_add(1, Ordering::Relaxed);
+                reply = 0;
+                match req {
+                    Request::AdvanceUntil(t) => {
+                        let t = t.max(self.clock);
+                        self.push_event(t, current);
+                        break;
+                    }
+                    Request::Park => {
+                        let st = self.activities.get_mut(&current).unwrap();
+                        if let Some(at) = st.pending_wakes.pop_front() {
+                            // A wake was already queued: resume at its
+                            // delivery time (>= now by construction).
+                            let t = at.max(self.clock);
+                            self.push_event(t, current);
+                        } else {
+                            st.parked = true;
+                        }
+                        break;
+                    }
+                    Request::Unpark { target, at } => {
+                        let at = at.max(self.clock);
+                        if let Some(tst) = self.activities.get_mut(&target) {
+                            if tst.done {
+                                // waking a finished activity is a no-op
+                            } else if tst.parked {
+                                tst.parked = false;
+                                self.push_event(at, target);
+                            } else {
+                                tst.pending_wakes.push_back(at);
+                            }
+                        }
+                        // fall through: continue the same activity now
+                    }
+                    Request::Spawn { label, body, at } => {
+                        let new_id = self.spawn_suspended(label, body);
+                        self.push_event(at.max(self.clock), new_id);
+                        reply = new_id.0;
+                        // continue the same activity, replying the id
+                    }
+                    Request::Exit { panic_msg, at } => {
+                        self.clock = self.clock.max(at);
+                        let st = self.activities.get_mut(&current).unwrap();
+                        st.done = true;
+                        st.parked = false;
+                        let label = st.label.clone();
+                        if let Some(j) = st.join.take() {
+                            let _ = j.join();
+                        }
+                        self.alive -= 1;
+                        if let Some(msg) = panic_msg {
+                            return Err(EngineError::ActivityPanic(current, label, msg));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(self.clock)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Any threads still alive are parked in their handoff; they hold
+        // no engine locks, so leaking them on abnormal paths is safe.
+        for st in self.activities.values_mut() {
+            if let Some(j) = st.join.take() {
+                if st.done {
+                    let _ = j.join();
+                } // else: detached
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering as O};
+
+    #[test]
+    fn single_activity_advances_clock() {
+        let mut e = Engine::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l2 = log.clone();
+        e.spawn_at(0.0, "a", move |ctx| {
+            ctx.advance(1.5);
+            l2.lock().unwrap().push(ctx.now());
+            ctx.advance(0.5);
+            l2.lock().unwrap().push(ctx.now());
+        });
+        let end = e.run().unwrap();
+        assert!((end - 2.0).abs() < 1e-12);
+        assert_eq!(*log.lock().unwrap(), vec![1.5, 2.0]);
+    }
+
+    #[test]
+    fn two_activities_interleave_by_time() {
+        let mut e = Engine::new();
+        let log: Arc<Mutex<Vec<(&str, Time)>>> = Arc::new(Mutex::new(Vec::new()));
+        let (la, lb) = (log.clone(), log.clone());
+        e.spawn_at(0.0, "a", move |ctx| {
+            ctx.advance(1.0);
+            la.lock().unwrap().push(("a", ctx.now()));
+            ctx.advance(2.0);
+            la.lock().unwrap().push(("a", ctx.now()));
+        });
+        e.spawn_at(0.0, "b", move |ctx| {
+            ctx.advance(2.0);
+            lb.lock().unwrap().push(("b", ctx.now()));
+        });
+        e.run().unwrap();
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec![("a", 1.0), ("b", 2.0), ("a", 3.0)]
+        );
+    }
+
+    #[test]
+    fn park_unpark_roundtrip() {
+        let mut e = Engine::new();
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = flag.clone();
+        let waiter = e.spawn_at(0.0, "waiter", move |ctx| {
+            ctx.park();
+            f2.store(1, O::SeqCst);
+            assert!((ctx.now() - 5.0).abs() < 1e-12);
+        });
+        e.spawn_at(0.0, "waker", move |ctx| {
+            ctx.advance(2.0);
+            ctx.unpark_at(waiter, 5.0);
+        });
+        e.run().unwrap();
+        assert_eq!(flag.load(O::SeqCst), 1);
+    }
+
+    #[test]
+    fn unpark_before_park_is_not_lost() {
+        let mut e = Engine::new();
+        let waiter = e.spawn_at(0.0, "late-parker", move |ctx| {
+            // Do a long compute first; the wake arrives "during" it.
+            ctx.advance(10.0);
+            ctx.park(); // must complete because wake was queued
+            assert!(ctx.now() >= 10.0);
+        });
+        e.spawn_at(0.0, "early-waker", move |ctx| {
+            ctx.unpark_at(waiter, 1.0);
+        });
+        e.run().unwrap();
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        let mut e = Engine::new();
+        e.spawn_at(0.0, "stuck", |ctx| {
+            ctx.park();
+        });
+        match e.run() {
+            Err(EngineError::Deadlock { parked, detail, .. }) => {
+                assert_eq!(parked, 1);
+                assert!(detail.contains("stuck"));
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn activity_panic_is_propagated() {
+        let mut e = Engine::new();
+        e.spawn_at(0.0, "boom", |_ctx| {
+            panic!("kaboom {}", 42);
+        });
+        match e.run() {
+            Err(EngineError::ActivityPanic(_, label, msg)) => {
+                assert_eq!(label, "boom");
+                assert!(msg.contains("kaboom 42"));
+            }
+            other => panic!("expected panic error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spawn_from_inside_activity() {
+        let mut e = Engine::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        e.spawn_at(0.0, "parent", move |ctx| {
+            ctx.advance(1.0);
+            let c2 = c.clone();
+            let child = ctx.spawn("child", move |cctx| {
+                cctx.advance(3.0);
+                c2.fetch_add(10, O::SeqCst);
+            });
+            assert_ne!(child, ctx.id());
+            c.fetch_add(1, O::SeqCst);
+        });
+        let end = e.run().unwrap();
+        assert_eq!(count.load(O::SeqCst), 11);
+        assert!((end - 4.0).abs() < 1e-12, "end={end}");
+    }
+
+    #[test]
+    fn equal_time_events_fifo() {
+        // Two activities woken at the same instant run in insert order.
+        let mut e = Engine::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for name in ["first", "second", "third"] {
+            let l = log.clone();
+            e.spawn_at(1.0, name, move |_ctx| {
+                l.lock().unwrap().push(name);
+            });
+        }
+        e.run().unwrap();
+        assert_eq!(*log.lock().unwrap(), vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn determinism_two_runs_identical() {
+        fn run_once() -> Vec<(usize, u64)> {
+            let mut e = Engine::new();
+            let log = Arc::new(Mutex::new(Vec::new()));
+            for i in 0..8 {
+                let l = log.clone();
+                e.spawn_at(0.0, format!("w{i}"), move |ctx| {
+                    let mut t = 0.001 * (i as f64 + 1.0);
+                    for _ in 0..20 {
+                        ctx.advance(t);
+                        t *= 1.1;
+                        l.lock().unwrap().push((i, (ctx.now() * 1e9) as u64));
+                    }
+                });
+            }
+            e.run().unwrap();
+            let v = log.lock().unwrap().clone();
+            v
+        }
+        assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn event_limit_guards_livelock() {
+        let mut e = Engine::new();
+        e.set_event_limit(100);
+        e.spawn_at(0.0, "spinner", |ctx| loop {
+            ctx.advance(0.0);
+        });
+        match e.run() {
+            Err(EngineError::EventLimit(100)) => {}
+            other => panic!("expected event limit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn many_activities_scale() {
+        let mut e = Engine::new();
+        let n = 200;
+        let done = Arc::new(AtomicUsize::new(0));
+        for i in 0..n {
+            let d = done.clone();
+            e.spawn_at(0.0, format!("r{i}"), move |ctx| {
+                for _ in 0..50 {
+                    ctx.advance(1e-6);
+                }
+                d.fetch_add(1, O::SeqCst);
+            });
+        }
+        e.run().unwrap();
+        assert_eq!(done.load(O::SeqCst), n);
+    }
+}

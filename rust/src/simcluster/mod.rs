@@ -1,0 +1,21 @@
+//! Deterministic discrete-event cluster simulator.
+//!
+//! The paper evaluates on an 8-node / 160-core InfiniBand cluster that
+//! we do not have; `simcluster` is the substitute substrate (see
+//! DESIGN.md §1).  Simulated processes ("activities") are real OS
+//! threads running ordinary imperative Rust — the MaM redistribution
+//! algorithms read exactly like the paper's pseudocode — but they are
+//! *scheduled* by a central engine over a virtual clock: an activity
+//! blocks whenever it performs a simulated action (`advance`, `park`)
+//! and the engine resumes it at the right virtual time.  Exactly one
+//! activity body runs at any instant, so runs are fully deterministic
+//! and seed-stable.
+//!
+//! * [`engine`]  — the event loop, virtual clock and activity handoff.
+//! * [`activity`] — the context handle simulated code runs against.
+
+pub mod activity;
+pub mod engine;
+
+pub use activity::ActivityCtx;
+pub use engine::{ActivityId, Engine, EngineError, Time};

@@ -1,0 +1,531 @@
+//! Collective operations: matching state and completion schedules.
+//!
+//! A collective instance is keyed by `(comm, seq)` where `seq` is the
+//! per-member call counter — MPI requires every member to call
+//! collectives in the same order, so equal counters identify the same
+//! instance.  Each arriving rank records its arrival time and
+//! contribution; the *last* arriver computes the completion schedule
+//! for everyone using the textbook algorithm cost over the calibrated
+//! [`CostModel`] (dissemination barrier, ring allgather, pairwise
+//! alltoallv) and wakes parked waiters.
+//!
+//! Schedules are computed arithmetically — no engine events per
+//! message — which keeps the event count per collective at `O(P)`
+//! instead of `O(P²)` and makes 160-rank simulations fast.
+
+use crate::netmodel::{CostModel, Placement, TransferClass};
+use crate::simcluster::{ActivityId, Time};
+
+use super::types::Payload;
+
+/// What a rank contributes when it enters a collective.
+#[derive(Debug)]
+pub(crate) enum Contrib {
+    /// Barrier / Ibarrier / communicator ops: nothing.
+    None,
+    /// Win_create: local registration duration (already computed from
+    /// the exposed size by the caller).
+    RegTime(f64),
+    /// Allgather: this rank's block.
+    Block(Payload),
+    /// Alltoallv / Ialltoallv: payload destined to each member.
+    Scatter(Vec<Payload>),
+    /// Spawn: the process-launch duration (rank 0 supplies it).
+    SpawnTime(f64),
+}
+
+/// Per-rank outcome of a completed collective.
+#[derive(Debug, Clone)]
+pub(crate) enum CollResult {
+    None,
+    /// Allgather: every rank's block, in rank order.
+    Gathered(Vec<Payload>),
+    /// Alltoallv: what this rank received from each member.
+    Received(Vec<Payload>),
+}
+
+/// Which algorithm/semantics an instance uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CollKind {
+    Barrier,
+    Ibarrier,
+    Allgather,
+    Alltoallv,
+    Ialltoallv,
+    WinCreate,
+    WinFree,
+    Spawn,
+    CommSub,
+}
+
+/// One in-flight collective instance.
+pub(crate) struct CollState {
+    pub kind: CollKind,
+    pub n: usize,
+    pub arrivals: Vec<Option<Time>>,
+    pub contribs: Vec<Option<Contrib>>,
+    /// Per-rank completion time; `Some` once the last rank arrived.
+    pub completion: Option<Vec<Time>>,
+    /// Ranks parked waiting for the schedule, with their activity ids.
+    pub waiters: Vec<(usize, ActivityId)>,
+    /// Results, populated together with `completion`.
+    pub results: Vec<Option<CollResult>>,
+    /// How many ranks have consumed their result (for GC).
+    pub taken: usize,
+    /// Ialltoallv progress model: pack/unpack bytes left per rank.
+    pub cpu_remaining: Vec<u64>,
+    /// Window id allocated by the first arriver (WinCreate only).
+    pub win_id: Option<super::types::WinId>,
+    /// Any participant posted from an `MPI_THREAD_MULTIPLE` context
+    /// (auxiliary thread alive): the completion schedule is stretched
+    /// by `mt_coll_penalty` — MPICH 4.2.0's degraded multithreaded
+    /// progress (§V-D).
+    pub mt: bool,
+}
+
+impl CollState {
+    pub fn new(kind: CollKind, n: usize) -> CollState {
+        CollState {
+            kind,
+            n,
+            arrivals: vec![None; n],
+            contribs: (0..n).map(|_| None).collect(),
+            completion: None,
+            waiters: Vec::new(),
+            results: vec![None; n],
+            taken: 0,
+            cpu_remaining: vec![0; n],
+            win_id: None,
+            mt: false,
+        }
+    }
+
+    pub fn all_arrived(&self) -> bool {
+        self.arrivals.iter().all(|a| a.is_some())
+    }
+
+    /// Record one rank's arrival; returns true if it was the last.
+    pub fn arrive(&mut self, rank: usize, t: Time, contrib: Contrib) -> bool {
+        assert!(self.arrivals[rank].is_none(), "rank {rank} re-entered collective");
+        self.arrivals[rank] = Some(t);
+        self.contribs[rank] = Some(contrib);
+        self.all_arrived()
+    }
+
+    /// Compute per-rank completion times and results.  Called exactly
+    /// once, by the last arriver, under the world lock.
+    pub fn schedule(&mut self, cost: &mut CostModel, placement: &Placement, gpids: &[usize]) {
+        assert!(self.all_arrived());
+        assert!(self.completion.is_none());
+        let arrivals: Vec<Time> = self.arrivals.iter().map(|a| a.unwrap()).collect();
+        let (completion, results) = match self.kind {
+            CollKind::Barrier | CollKind::Ibarrier | CollKind::CommSub => {
+                let t = dissemination(cost, placement, gpids, &arrivals);
+                (t, vec![CollResult::None; self.n])
+            }
+            CollKind::Allgather => {
+                let blocks: Vec<Payload> = self
+                    .contribs
+                    .iter()
+                    .map(|c| match c {
+                        Some(Contrib::Block(p)) => p.clone(),
+                        _ => panic!("allgather without Block contribution"),
+                    })
+                    .collect();
+                // MPICH: recursive doubling for small blocks, ring for
+                // bandwidth-bound large ones.
+                let max_bytes = blocks.iter().map(|b| b.bytes()).max().unwrap_or(0);
+                let t = if max_bytes * self.n as u64 <= cost.params.eager_threshold {
+                    rd_allgather(cost, placement, gpids, &arrivals, &blocks)
+                } else {
+                    ring_allgather(cost, placement, gpids, &arrivals, &blocks)
+                };
+                let gathered = CollResult::Gathered(blocks);
+                (t, vec![gathered; self.n])
+            }
+            CollKind::Alltoallv | CollKind::Ialltoallv => {
+                let sends: Vec<&Vec<Payload>> = self
+                    .contribs
+                    .iter()
+                    .map(|c| match c {
+                        Some(Contrib::Scatter(v)) => v,
+                        _ => panic!("alltoallv without Scatter contribution"),
+                    })
+                    .collect();
+                let t = pairwise_alltoallv(cost, placement, gpids, &arrivals, &sends);
+                // results[i] = column i of the send matrix.
+                let results = (0..self.n)
+                    .map(|i| CollResult::Received(sends.iter().map(|row| row[i].clone()).collect()))
+                    .collect();
+                if self.kind == CollKind::Ialltoallv {
+                    // Progress-model CPU work: pack+unpack of non-self bytes.
+                    for i in 0..self.n {
+                        let sent: u64 = sends[i]
+                            .iter()
+                            .enumerate()
+                            .filter(|(j, _)| *j != i)
+                            .map(|(_, p)| p.bytes())
+                            .sum();
+                        let recvd: u64 = sends
+                            .iter()
+                            .enumerate()
+                            .filter(|(j, _)| *j != i)
+                            .map(|(_, row)| row[i].bytes())
+                            .sum();
+                        self.cpu_remaining[i] = sent + recvd;
+                    }
+                }
+                (t, results)
+            }
+            CollKind::WinCreate => {
+                // All ranks pin locally in parallel after arriving, then
+                // exchange rkeys (dissemination-style sync).  Everyone
+                // leaves at the same instant — Win_create is collective
+                // blocking, the paper's central RMA pain point.
+                let regs: Vec<f64> = self
+                    .contribs
+                    .iter()
+                    .map(|c| match c {
+                        Some(Contrib::RegTime(r)) => *r,
+                        _ => panic!("win_create without RegTime"),
+                    })
+                    .collect();
+                let ready: Vec<Time> = arrivals
+                    .iter()
+                    .zip(&regs)
+                    .map(|(a, r)| a + r)
+                    .collect();
+                let t = dissemination(cost, placement, gpids, &ready);
+                (t, vec![CollResult::None; self.n])
+            }
+            CollKind::WinFree => {
+                // Deregistration after a closing barrier.
+                let t0 = dissemination(cost, placement, gpids, &arrivals);
+                let t = t0
+                    .iter()
+                    .zip(self.contribs.iter())
+                    .map(|(t, c)| match c {
+                        Some(Contrib::RegTime(r)) => t + r,
+                        _ => *t,
+                    })
+                    .collect();
+                (t, vec![CollResult::None; self.n])
+            }
+            CollKind::Spawn => {
+                let dur = self
+                    .contribs
+                    .iter()
+                    .find_map(|c| match c {
+                        Some(Contrib::SpawnTime(d)) => Some(*d),
+                        _ => None,
+                    })
+                    .unwrap_or(0.0);
+                let sync = dissemination(cost, placement, gpids, &arrivals);
+                let t = sync.iter().map(|t| t + dur).collect();
+                (t, vec![CollResult::None; self.n])
+            }
+        };
+        // MPICH MPI_THREAD_MULTIPLE degradation (§V-D): the whole
+        // operation crawls under the contended global lock.
+        let completion = if self.mt {
+            let pen = cost.params.mt_coll_penalty;
+            completion
+                .iter()
+                .zip(&arrivals)
+                .map(|(c, a)| a + (c - a).max(0.0) * pen)
+                .collect()
+        } else {
+            completion
+        };
+        self.completion = Some(completion);
+        self.results = results.into_iter().map(Some).collect();
+    }
+
+    pub fn completion_of(&self, rank: usize) -> Option<Time> {
+        self.completion.as_ref().map(|c| c[rank])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Algorithm schedules
+// ---------------------------------------------------------------------
+
+/// Dissemination barrier: ⌈log2 n⌉ rounds; in round k rank i sends to
+/// (i + 2^k) mod n and receives from (i − 2^k) mod n.  Returns per-rank
+/// completion times.
+pub fn dissemination(
+    cost: &mut CostModel,
+    placement: &Placement,
+    gpids: &[usize],
+    arrivals: &[Time],
+) -> Vec<Time> {
+    let n = gpids.len();
+    if n <= 1 {
+        return arrivals.to_vec();
+    }
+    let mut t = arrivals.to_vec();
+    let rounds = usize::BITS - (n - 1).leading_zeros();
+    for k in 0..rounds {
+        let dist = 1usize << k;
+        let prev = t.clone();
+        for i in 0..n {
+            let from = (i + n - dist % n) % n;
+            let tt = cost.transfer(
+                prev[from],
+                placement,
+                gpids[from],
+                gpids[i],
+                16, // 16-byte control message
+                TransferClass::TwoSided,
+            );
+            t[i] = t[i].max(tt.arrival);
+        }
+    }
+    t
+}
+
+/// Recursive-doubling allgather (MPICH's algorithm for small blocks):
+/// ⌈log2 n⌉ rounds; in round k rank i exchanges its accumulated 2^k
+/// blocks with partner i⊕2^k.  Small-lane messages, so the rounds see
+/// the bounded contention wait when bulk redistribution traffic is in
+/// flight — the source of the paper's ω growth (§V-C, Fig. 5).
+pub fn rd_allgather(
+    cost: &mut CostModel,
+    placement: &Placement,
+    gpids: &[usize],
+    arrivals: &[Time],
+    blocks: &[Payload],
+) -> Vec<Time> {
+    let n = gpids.len();
+    if n <= 1 {
+        return arrivals.to_vec();
+    }
+    let mut t = arrivals.to_vec();
+    let avg_bytes = (blocks.iter().map(|b| b.bytes()).sum::<u64>() / n as u64).max(1);
+    let rounds = usize::BITS - (n - 1).leading_zeros();
+    for k in 0..rounds {
+        let prev = t.clone();
+        for i in 0..n {
+            let partner = i ^ (1usize << k);
+            if partner >= n {
+                continue; // non-power-of-two remainder: approximate
+            }
+            let bytes = avg_bytes.saturating_mul(1 << k);
+            let tt = cost.transfer(
+                prev[i].max(prev[partner]),
+                placement,
+                gpids[partner],
+                gpids[i],
+                bytes,
+                TransferClass::TwoSided,
+            );
+            t[i] = t[i].max(tt.arrival);
+        }
+    }
+    t
+}
+
+/// Ring allgather: n−1 rounds; each round rank i sends the block it
+/// received last round to (i+1) mod n.
+pub fn ring_allgather(
+    cost: &mut CostModel,
+    placement: &Placement,
+    gpids: &[usize],
+    arrivals: &[Time],
+    blocks: &[Payload],
+) -> Vec<Time> {
+    let n = gpids.len();
+    if n <= 1 {
+        return arrivals.to_vec();
+    }
+    let mut t = arrivals.to_vec();
+    for round in 0..(n - 1) {
+        let prev = t.clone();
+        for i in 0..n {
+            let from = (i + n - 1) % n;
+            // Block originating at (from - round) mod n travels this hop.
+            let origin = (from + n - (round % n)) % n;
+            let bytes = blocks[origin].bytes().max(1);
+            let tt = cost.transfer(
+                prev[from].max(prev[i]),
+                placement,
+                gpids[from],
+                gpids[i],
+                bytes,
+                TransferClass::TwoSided,
+            );
+            t[i] = t[i].max(tt.arrival);
+        }
+    }
+    t
+}
+
+/// Pairwise-exchange alltoallv: n−1 rounds of ring-shifted exchanges,
+/// plus the local self-copy.  `sends[i][j]` is what i sends to j.
+pub fn pairwise_alltoallv(
+    cost: &mut CostModel,
+    placement: &Placement,
+    gpids: &[usize],
+    arrivals: &[Time],
+    sends: &[&Vec<Payload>],
+) -> Vec<Time> {
+    let n = gpids.len();
+    let mut t = arrivals.to_vec();
+    // Sender injection chains (the NIC fluid queues in `CostModel`
+    // provide the contention; rounds are NOT barriers — MPICH posts the
+    // next exchange as soon as the local send completes, so sparse
+    // resize patterns run at aggregate NIC bandwidth).
+    let mut cpu = arrivals.to_vec();
+    for i in 0..n {
+        let bytes = sends[i][i].bytes();
+        if bytes > 0 {
+            cpu[i] += cost.memcpy_time(bytes);
+            t[i] = t[i].max(cpu[i]);
+        }
+    }
+    for round in 1..n {
+        for i in 0..n {
+            let dst = (i + round) % n;
+            let bytes = sends[i][dst].bytes();
+            if bytes == 0 {
+                continue;
+            }
+            let tt = cost.transfer(
+                cpu[i],
+                placement,
+                gpids[i],
+                gpids[dst],
+                bytes,
+                TransferClass::TwoSided,
+            );
+            // Sender occupied until its CPU is done; receiver until arrival.
+            cpu[i] = tt.cpu_done;
+            t[i] = t[i].max(tt.cpu_done);
+            t[dst] = t[dst].max(tt.arrival);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::{NetParams, Topology};
+
+    fn setup(n_ranks: usize) -> (CostModel, Placement, Vec<usize>) {
+        let topo = Topology::new(4, 8);
+        let placement = Placement::block(&topo, n_ranks);
+        let gpids = (0..n_ranks).collect();
+        (CostModel::new(NetParams::test_simple(), 4), placement, gpids)
+    }
+
+    #[test]
+    fn dissemination_single_rank_is_noop() {
+        let (mut cost, pl, g) = setup(1);
+        let t = dissemination(&mut cost, &pl, &g[..1], &[3.0]);
+        assert_eq!(t, vec![3.0]);
+    }
+
+    #[test]
+    fn dissemination_completion_after_last_arrival() {
+        let (mut cost, pl, g) = setup(8);
+        let arrivals: Vec<Time> = (0..8).map(|i| i as f64 * 0.01).collect();
+        let t = dissemination(&mut cost, &pl, &g, &arrivals);
+        let last = 0.07;
+        for ti in &t {
+            assert!(*ti >= last, "barrier exit {ti} before last arrival");
+        }
+        // log2(8)=3 rounds of small messages: bounded overhead.
+        for ti in &t {
+            assert!(*ti < last + 0.1, "barrier too slow: {ti}");
+        }
+    }
+
+    #[test]
+    fn ring_allgather_costs_grow_with_block_size() {
+        let (mut cost, pl, g) = setup(4);
+        let small: Vec<Payload> = (0..4).map(|_| Payload::virt(10)).collect();
+        let t_small = ring_allgather(&mut cost, &pl, &g, &[0.0; 4], &small);
+        let mut cost2 = CostModel::new(NetParams::test_simple(), 4);
+        let big: Vec<Payload> = (0..4).map(|_| Payload::virt(1_000_000)).collect();
+        let t_big = ring_allgather(&mut cost2, &pl, &g, &[0.0; 4], &big);
+        assert!(t_big[0] > t_small[0] * 2.0);
+    }
+
+    #[test]
+    fn pairwise_moves_all_data() {
+        let (mut cost, pl, g) = setup(3);
+        let row0 = vec![Payload::virt(0), Payload::virt(100), Payload::virt(100)];
+        let row1 = vec![Payload::virt(100), Payload::virt(0), Payload::virt(100)];
+        let row2 = vec![Payload::virt(100), Payload::virt(100), Payload::virt(0)];
+        let sends = [&row0, &row1, &row2];
+        let t = pairwise_alltoallv(&mut cost, &pl, &g, &[0.0; 3], &sends);
+        for ti in &t {
+            assert!(*ti > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_sends_are_nearly_free() {
+        let (mut cost, pl, g) = setup(4);
+        let zero = vec![Payload::virt(0); 4];
+        let sends = [&zero, &zero, &zero, &zero];
+        let t = pairwise_alltoallv(&mut cost, &pl, &g, &[1.0; 4], &sends);
+        for ti in &t {
+            assert!((ti - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn coll_state_lifecycle() {
+        let (mut cost, pl, g) = setup(2);
+        let mut cs = CollState::new(CollKind::Barrier, 2);
+        assert!(!cs.arrive(0, 0.0, Contrib::None));
+        assert!(cs.completion_of(0).is_none());
+        assert!(cs.arrive(1, 1.0, Contrib::None));
+        cs.schedule(&mut cost, &pl, &g);
+        assert!(cs.completion_of(0).unwrap() >= 1.0);
+        assert!(cs.completion_of(1).unwrap() >= 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "re-entered")]
+    fn double_arrival_panics() {
+        let mut cs = CollState::new(CollKind::Barrier, 2);
+        cs.arrive(0, 0.0, Contrib::None);
+        cs.arrive(0, 0.5, Contrib::None);
+    }
+
+    #[test]
+    fn win_create_waits_for_slowest_registration() {
+        let (mut cost, pl, g) = setup(2);
+        let mut cs = CollState::new(CollKind::WinCreate, 2);
+        cs.arrive(0, 0.0, Contrib::RegTime(5.0));
+        cs.arrive(1, 0.0, Contrib::RegTime(0.1));
+        cs.schedule(&mut cost, &pl, &g);
+        // Both leave only after the 5 s registration.
+        assert!(cs.completion_of(0).unwrap() >= 5.0);
+        assert!(cs.completion_of(1).unwrap() >= 5.0);
+    }
+
+    #[test]
+    fn ialltoallv_sets_cpu_work() {
+        let (mut cost, pl, g) = setup(2);
+        let mut cs = CollState::new(CollKind::Ialltoallv, 2);
+        let row0 = vec![Payload::virt(5), Payload::virt(100)];
+        let row1 = vec![Payload::virt(200), Payload::virt(7)];
+        cs.arrive(0, 0.0, Contrib::Scatter(row0));
+        cs.arrive(1, 0.0, Contrib::Scatter(row1));
+        cs.schedule(&mut cost, &pl, &g);
+        // rank0: sends 100 elems, receives 200 → (100+200)*8 bytes.
+        assert_eq!(cs.cpu_remaining[0], 300 * 8);
+        assert_eq!(cs.cpu_remaining[1], 300 * 8);
+        match cs.results[0].as_ref().unwrap() {
+            CollResult::Received(v) => {
+                assert_eq!(v[0].elems(), 5);
+                assert_eq!(v[1].elems(), 200);
+            }
+            _ => panic!("wrong result kind"),
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! `simmpi` — an MPI-4-like runtime implemented on the discrete-event
+//! simulator.
+//!
+//! The paper's redistribution algorithms (§IV) are written against the
+//! MPI API; this module provides the same surface with the same
+//! semantics so MaM's code is a faithful port:
+//!
+//! * communicators & groups, dynamic process spawning + merge
+//!   (MaM's *Merge* process-management method),
+//! * two-sided p2p with eager/rendezvous regimes,
+//! * blocking collectives (Barrier, Bcast, Allgather, Alltoallv)
+//!   whose completion schedule is computed from the calibrated cost
+//!   model using the textbook algorithms (dissemination, ring,
+//!   pairwise-exchange),
+//! * nonblocking operations (Ibarrier, Ialltoallv, Rget) with
+//!   request-based Test/Wait and an MPICH-CH4-style *progress model*:
+//!   pending CPU work of nonblocking collectives is drained in chunks
+//!   by subsequent MPI calls — this is what makes the ω ratios of §V-C
+//!   emerge rather than being hard-coded,
+//! * the full passive-target RMA chapter: `Win_create`/`Win_free`
+//!   (collective, with memory-registration cost — the paper's dominant
+//!   RMA overhead), `Lock`/`Unlock`, `Lock_all`/`Unlock_all`, `Get`,
+//!   `Rget`,
+//! * a per-process *progress token* emulating MPICH 4.2.0's effective
+//!   serialization of `MPI_THREAD_MULTIPLE` progress (§V-D): while an
+//!   auxiliary thread is inside a blocking call, main-thread MPI calls
+//!   stall.
+//!
+//! Simulated ranks run as engine activities; the world state lives in
+//! one mutex that is **never held across a virtual-time suspension**.
+
+pub mod collective;
+pub mod proc;
+pub mod request;
+pub mod rma;
+pub mod types;
+pub mod world;
+
+pub use proc::MpiProc;
+pub use request::ReqId;
+pub use types::{recv_buf_real, recv_buf_virtual, CommId, MpiError, Payload, RecvBuf, WinId, ELEM_BYTES};
+pub use world::{MpiSim, MpiWorld, WORLD};

@@ -1,0 +1,1322 @@
+//! `MpiProc` — the per-process MPI handle that simulated rank bodies
+//! program against.
+//!
+//! Locking discipline (see `world.rs`): the world mutex is never held
+//! across `advance`/`park`.  Holding it across `unpark_at`/`spawn` is
+//! safe — those engine requests return control to the caller without
+//! scheduling another activity.
+
+use std::sync::{Arc, Mutex};
+
+use crate::netmodel::TransferClass;
+use crate::simcluster::{ActivityCtx, Time};
+
+use super::collective::{CollKind, CollResult, CollState, Contrib};
+use super::request::{ReqBody, ReqId, ReqState};
+use super::rma::WinState;
+use super::types::{CommId, Payload, RecvBuf, WinId};
+use super::world::{MpiWorld, PendingMsg, RecvWait};
+
+/// Handle to one simulated MPI process (or its auxiliary thread).
+pub struct MpiProc {
+    pub(crate) ctx: ActivityCtx,
+    pub(crate) world: Arc<Mutex<MpiWorld>>,
+    pub(crate) gpid: usize,
+    pub(crate) is_aux: bool,
+}
+
+impl MpiProc {
+    pub(crate) fn main(ctx: ActivityCtx, world: Arc<Mutex<MpiWorld>>, gpid: usize) -> MpiProc {
+        MpiProc { ctx, world, gpid, is_aux: false }
+    }
+
+    /// Clone for passing into nested scopes (same activity).
+    pub fn clone_handle(&self) -> MpiProc {
+        MpiProc {
+            ctx: self.ctx.clone(),
+            world: self.world.clone(),
+            gpid: self.gpid,
+            is_aux: self.is_aux,
+        }
+    }
+
+    /// Called by the launcher when the rank body returns.
+    pub(crate) fn on_exit(&self) {
+        if !self.is_aux {
+            let mut w = self.world.lock().unwrap();
+            w.retire_proc(self.gpid);
+        }
+    }
+
+    // ------------------------------------------------------- identity
+
+    pub fn gpid(&self) -> usize {
+        self.gpid
+    }
+
+    pub fn is_aux(&self) -> bool {
+        self.is_aux
+    }
+
+    pub fn now(&self) -> Time {
+        self.ctx.now()
+    }
+
+    /// Rank of this process within `comm`; panics if not a member.
+    pub fn rank(&self, comm: CommId) -> usize {
+        let w = self.world.lock().unwrap();
+        w.comm(comm)
+            .rank_of(self.gpid)
+            .unwrap_or_else(|| panic!("gpid {} not in {:?}", self.gpid, comm))
+    }
+
+    /// Membership test.
+    pub fn in_comm(&self, comm: CommId) -> bool {
+        let w = self.world.lock().unwrap();
+        w.comm(comm).rank_of(self.gpid).is_some()
+    }
+
+    pub fn size(&self, comm: CommId) -> usize {
+        let w = self.world.lock().unwrap();
+        w.comm(comm).gpids.len()
+    }
+
+    // ------------------------------------------------------- app side
+
+    /// Model `dt` seconds of application compute.  Stretched by the
+    /// oversubscription factor while this process has a live auxiliary
+    /// thread (Threading strategy, §V-D).
+    pub fn compute(&self, dt: f64) {
+        let stretched = {
+            let w = self.world.lock().unwrap();
+            if w.oversubscription && w.procs[self.gpid].aux_alive {
+                dt * w.cost.params.oversub_factor
+            } else {
+                dt
+            }
+        };
+        self.ctx.advance(stretched);
+    }
+
+    /// Count one application iteration (read by the monitor).
+    pub fn iter_tick(&self) {
+        let mut w = self.world.lock().unwrap();
+        w.procs[self.gpid].iters_done += 1;
+    }
+
+    /// Iterations completed so far by this process.
+    pub fn iters_done(&self) -> u64 {
+        self.world.lock().unwrap().procs[self.gpid].iters_done
+    }
+
+    /// Record into the world metrics.
+    pub fn metrics<R>(&self, f: impl FnOnce(&mut crate::monitor::Metrics) -> R) -> R {
+        let mut w = self.world.lock().unwrap();
+        f(&mut w.metrics)
+    }
+
+    // --------------------------------------------- MPI call machinery
+
+    /// Progress model (MPICH CH4): every MPI call drains one chunk of
+    /// pending nonblocking-collective CPU work (pack/unpack).
+    fn drain_nb(&self) {
+        let work: Option<f64> = {
+            let mut w = self.world.lock().unwrap();
+            let chunk = w.cost.params.progress_chunk;
+            let beta = w.cost.params.beta_memcpy;
+            let open = w.procs[self.gpid].open_nb_reqs.clone();
+            let mut found = None;
+            for rid in open {
+                let (key, rank) = match &w.requests[rid].body {
+                    ReqBody::Coll { key, rank } => (*key, *rank),
+                    _ => continue,
+                };
+                if let Some(cs) = w.colls.get_mut(&key) {
+                    if cs.completion.is_some() && cs.cpu_remaining[rank] > 0 {
+                        let take = cs.cpu_remaining[rank].min(chunk);
+                        cs.cpu_remaining[rank] -= take;
+                        found = Some(take as f64 * beta);
+                        break;
+                    }
+                }
+            }
+            found
+        };
+        if let Some(dt) = work {
+            self.ctx.advance(dt);
+        }
+    }
+
+    /// Progress-engine contention model (MPICH 4.2.0 serialized
+    /// `MPI_THREAD_MULTIPLE` progress, §V-D).  The auxiliary thread
+    /// never waits — while it is inside a blocking MPI call it owns the
+    /// progress engine (depth-counted) and drives everyone's progress.
+    /// The *main* thread's MPI calls stall until the aux op completes;
+    /// in the gaps between the aux's blocking calls the main thread
+    /// sneaks its own operations through.  This reproduces the paper's
+    /// §V-D observations: COL-T overlaps exactly one iteration (the aux
+    /// runs a single long `Alltoallv`), while the RMA-T variants
+    /// overlap ~3 (one gap after each window-create/free collective).
+    fn progress_acquire(&self) {
+        if self.is_aux {
+            let mut w = self.world.lock().unwrap();
+            w.procs[self.gpid].aux_busy += 1;
+            return;
+        }
+        loop {
+            {
+                let mut w = self.world.lock().unwrap();
+                let p = &mut w.procs[self.gpid];
+                if !p.aux_alive || p.aux_busy == 0 {
+                    return;
+                }
+                p.progress_waiters.push(self.ctx.id());
+            }
+            self.ctx.park();
+        }
+    }
+
+    fn progress_release(&self) {
+        if !self.is_aux {
+            return;
+        }
+        let waiters = {
+            let mut w = self.world.lock().unwrap();
+            let p = &mut w.procs[self.gpid];
+            debug_assert!(p.aux_busy > 0, "unbalanced progress_release");
+            p.aux_busy = p.aux_busy.saturating_sub(1);
+            if p.aux_busy == 0 {
+                std::mem::take(&mut p.progress_waiters)
+            } else {
+                Vec::new()
+            }
+        };
+        for aid in waiters {
+            self.ctx.unpark_now(aid);
+        }
+    }
+
+    /// Standard prologue of every MPI call.
+    fn mpi_prologue(&self) {
+        self.drain_nb();
+    }
+
+    // ------------------------------------------------------------ p2p
+
+    /// Blocking standard-mode send.  Eager messages return when the
+    /// local copy is done; rendezvous messages when delivered.
+    pub fn send(&self, comm: CommId, dst_rank: usize, tag: i32, payload: Payload) {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (block_until, wake): (Time, Option<crate::simcluster::ActivityId>) = {
+            let mut w = self.world.lock().unwrap();
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("sender not in comm");
+            let dst_gpid = w.comm(comm).gpids[dst_rank];
+            let bytes = payload.bytes().max(1);
+            let eager = bytes < w.cost.params.eager_threshold;
+            let MpiWorld { cost, placement, .. } = &mut *w;
+            let tt = cost.transfer(
+                self.ctx.now(),
+                placement,
+                self.gpid,
+                dst_gpid,
+                bytes,
+                TransferClass::TwoSided,
+            );
+            let msg = PendingMsg {
+                src_rank: my_rank,
+                comm,
+                tag,
+                payload,
+                arrival: tt.arrival,
+            };
+            let dst = &mut w.procs[dst_gpid];
+            // Wake a matching parked receiver, if any.
+            let pos = dst.recv_waits.iter().position(|rw| {
+                rw.comm == comm
+                    && rw.tag == tag
+                    && (rw.src_rank.is_none() || rw.src_rank == Some(my_rank))
+            });
+            let wake = pos.map(|p| dst.recv_waits.remove(p).waiter);
+            dst.inbox.push(msg);
+            (if eager { tt.cpu_done } else { tt.arrival }, wake)
+        };
+        if let Some(aid) = wake {
+            self.ctx.unpark_at(aid, block_until.max(self.ctx.now()));
+        }
+        self.ctx.advance_until(block_until);
+        self.progress_release();
+    }
+
+    /// Blocking receive; `src_rank = None` means MPI_ANY_SOURCE.
+    pub fn recv(&self, comm: CommId, src_rank: Option<usize>, tag: i32) -> Payload {
+        self.mpi_prologue();
+        self.progress_acquire();
+        loop {
+            let found: Option<(Payload, Time)> = {
+                let mut w = self.world.lock().unwrap();
+                let p = &mut w.procs[self.gpid];
+                let pos = p.inbox.iter().position(|m| {
+                    m.comm == comm
+                        && m.tag == tag
+                        && (src_rank.is_none() || src_rank == Some(m.src_rank))
+                });
+                match pos {
+                    Some(i) => {
+                        let m = p.inbox.remove(i);
+                        Some((m.payload, m.arrival))
+                    }
+                    None => {
+                        p.recv_waits.push(RecvWait {
+                            src_rank,
+                            comm,
+                            tag,
+                            waiter: self.ctx.id(),
+                        });
+                        None
+                    }
+                }
+            };
+            match found {
+                Some((payload, arrival)) => {
+                    // Drop any stale wait registrations from earlier
+                    // loop iterations (spurious wakeups).
+                    {
+                        let mut w = self.world.lock().unwrap();
+                        let me = self.ctx.id();
+                        w.procs[self.gpid].recv_waits.retain(|rw| rw.waiter != me);
+                    }
+                    self.ctx.advance_until(arrival);
+                    // Receiver-side unpack charge for real bulk data.
+                    let unpack = {
+                        let w = self.world.lock().unwrap();
+                        if payload.is_real() {
+                            payload.bytes() as f64 * w.cost.params.beta_memcpy * 0.0
+                        } else {
+                            0.0
+                        }
+                    };
+                    if unpack > 0.0 {
+                        self.ctx.advance(unpack);
+                    }
+                    self.progress_release();
+                    return payload;
+                }
+                None => self.ctx.park(),
+            }
+        }
+    }
+
+    // ----------------------------------------------------- collectives
+
+    /// Post a contribution to a collective instance; schedules it if
+    /// this rank is the last to arrive.  Returns (key, my_rank).
+    fn coll_post(
+        &self,
+        comm: CommId,
+        kind: CollKind,
+        contrib: Contrib,
+        setup: impl FnOnce(&mut MpiWorld, &mut CollState, usize),
+    ) -> ((CommId, u64), usize) {
+        let (key, my_rank, waiters) = {
+            let mut w = self.world.lock().unwrap();
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in comm");
+            let seq = w.comm(comm).coll_seq[my_rank];
+            w.comm_mut(comm).coll_seq[my_rank] += 1;
+            let key = (comm, seq);
+            let n = w.comm(comm).gpids.len();
+            let arrive_t = self.ctx.now() + w.cost.params.op_overhead;
+            let mt = self.is_aux || w.procs[self.gpid].aux_alive;
+            let mut cs = w
+                .colls
+                .remove(&key)
+                .unwrap_or_else(|| CollState::new(kind, n));
+            assert_eq!(
+                cs.kind, kind,
+                "collective call order mismatch on {comm:?} seq {seq}"
+            );
+            cs.mt |= mt;
+            setup(&mut w, &mut cs, my_rank);
+            let last = cs.arrive(my_rank, arrive_t, contrib);
+            let mut waiters = Vec::new();
+            if last {
+                let gpids = w.comm(comm).gpids.clone();
+                let MpiWorld { cost, placement, .. } = &mut *w;
+                cs.schedule(cost, placement, &gpids);
+                waiters = std::mem::take(&mut cs.waiters);
+            }
+            let completion = cs.completion.clone();
+            w.colls.insert(key, cs);
+            // Wake parked participants at their completion times.
+            let waiters: Vec<(crate::simcluster::ActivityId, Time)> = waiters
+                .into_iter()
+                .map(|(r, aid)| (aid, completion.as_ref().unwrap()[r]))
+                .collect();
+            (key, my_rank, waiters)
+        };
+        for (aid, t) in waiters {
+            self.ctx.unpark_at(aid, t.max(self.ctx.now()));
+        }
+        (key, my_rank)
+    }
+
+    /// Block until the collective completes; returns this rank's result.
+    fn coll_block(&self, key: (CommId, u64), my_rank: usize) -> CollResult {
+        loop {
+            let state: Option<Time> = {
+                let mut w = self.world.lock().unwrap();
+                let cs = w.colls.get_mut(&key).expect("collective vanished");
+                match cs.completion_of(my_rank) {
+                    Some(t) => Some(t),
+                    None => {
+                        cs.waiters.push((my_rank, self.ctx.id()));
+                        None
+                    }
+                }
+            };
+            match state {
+                Some(t) => {
+                    self.ctx.advance_until(t);
+                    return self.coll_take(key, my_rank);
+                }
+                None => self.ctx.park(),
+            }
+        }
+    }
+
+    /// Consume this rank's result and GC the instance when everyone has.
+    fn coll_take(&self, key: (CommId, u64), my_rank: usize) -> CollResult {
+        let mut w = self.world.lock().unwrap();
+        let cs = w.colls.get_mut(&key).expect("collective vanished");
+        let res = cs.results[my_rank].take().expect("result already taken");
+        cs.taken += 1;
+        if cs.taken == cs.n {
+            w.colls.remove(&key);
+        }
+        res
+    }
+
+    /// MPI_Barrier.
+    pub fn barrier(&self, comm: CommId) {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (key, r) = self.coll_post(comm, CollKind::Barrier, Contrib::None, |_, _, _| {});
+        self.coll_block(key, r);
+        self.progress_release();
+    }
+
+    /// MPI_Allgather: returns every rank's block, in rank order.
+    pub fn allgather(&self, comm: CommId, block: Payload) -> Vec<Payload> {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (key, r) =
+            self.coll_post(comm, CollKind::Allgather, Contrib::Block(block), |_, _, _| {});
+        let res = self.coll_block(key, r);
+        self.progress_release();
+        match res {
+            CollResult::Gathered(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    /// MPI_Alltoallv (blocking): `sends[j]` goes to rank j; returns what
+    /// this rank received from each rank.
+    pub fn alltoallv(&self, comm: CommId, sends: Vec<Payload>) -> Vec<Payload> {
+        self.mpi_prologue();
+        self.progress_acquire();
+        assert_eq!(sends.len(), self.size(comm), "alltoallv send width");
+        let (key, r) =
+            self.coll_post(comm, CollKind::Alltoallv, Contrib::Scatter(sends), |_, _, _| {});
+        let res = self.coll_block(key, r);
+        self.progress_release();
+        match res {
+            CollResult::Received(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    /// MPI_Ibarrier.
+    pub fn ibarrier(&self, comm: CommId) -> ReqId {
+        self.mpi_prologue();
+        let (key, r) = self.coll_post(comm, CollKind::Ibarrier, Contrib::None, |_, _, _| {});
+        self.new_coll_request(key, r, false)
+    }
+
+    /// MPI_Ialltoallv.
+    pub fn ialltoallv(&self, comm: CommId, sends: Vec<Payload>) -> ReqId {
+        self.mpi_prologue();
+        assert_eq!(sends.len(), self.size(comm), "ialltoallv send width");
+        let (key, r) =
+            self.coll_post(comm, CollKind::Ialltoallv, Contrib::Scatter(sends), |_, _, _| {});
+        self.new_coll_request(key, r, true)
+    }
+
+    fn new_coll_request(&self, key: (CommId, u64), rank: usize, has_cpu_work: bool) -> ReqId {
+        let mut w = self.world.lock().unwrap();
+        let rid = w.requests.len();
+        w.requests.push(ReqState::new(self.gpid, ReqBody::Coll { key, rank }));
+        if has_cpu_work {
+            w.procs[self.gpid].open_nb_reqs.push(rid);
+        }
+        ReqId(rid)
+    }
+
+    // ------------------------------------------------------- requests
+
+    /// MPI_Test: nonblocking completion check (charges one poll).
+    pub fn req_test(&self, req: ReqId) -> bool {
+        self.mpi_prologue();
+        let poll = {
+            let w = self.world.lock().unwrap();
+            w.cost.params.poll_cost
+        };
+        self.ctx.advance(poll);
+        self.req_check(req)
+    }
+
+    /// Completion check without the poll charge (internal + testall).
+    fn req_check(&self, req: ReqId) -> bool {
+        let now = self.ctx.now();
+        let mut w = self.world.lock().unwrap();
+        if w.requests[req.0].done {
+            return true;
+        }
+        let done = match &w.requests[req.0].body {
+            ReqBody::Coll { key, rank } => match w.colls.get(key) {
+                Some(cs) => {
+                    cs.completion_of(*rank).is_some_and(|t| now >= t)
+                        && cs.cpu_remaining[*rank] == 0
+                }
+                // Instance GC'd: all results taken → long complete.
+                None => true,
+            },
+            ReqBody::Rget { complete_at, .. } => now >= *complete_at,
+        };
+        if done {
+            self.finish_request(&mut w, req);
+        }
+        done
+    }
+
+    fn finish_request(&self, w: &mut MpiWorld, req: ReqId) {
+        // Mark done, deliver Rget data, release coll result slot.
+        let body_key = {
+            let r = &mut w.requests[req.0];
+            r.done = true;
+            r.apply_rget_data();
+            match &r.body {
+                ReqBody::Coll { key, rank } => Some((*key, *rank)),
+                _ => None,
+            }
+        };
+        w.procs[self.gpid].open_nb_reqs.retain(|&x| x != req.0);
+        if let Some((key, rank)) = body_key {
+            if let Some(cs) = w.colls.get_mut(&key) {
+                if cs.results[rank].is_some() {
+                    // Leave the payload retrievable via req_result; mark
+                    // taken so the instance can be GC'd when consumed.
+                    let _ = rank;
+                }
+            }
+        }
+    }
+
+    /// Retrieve the received payloads of a completed Ialltoallv.
+    pub fn req_result_alltoallv(&self, req: ReqId) -> Vec<Payload> {
+        let (key, rank) = {
+            let w = self.world.lock().unwrap();
+            assert!(w.requests[req.0].done, "request not complete");
+            match &w.requests[req.0].body {
+                ReqBody::Coll { key, rank } => (*key, *rank),
+                _ => panic!("not an ialltoallv request"),
+            }
+        };
+        match self.coll_take(key, rank) {
+            CollResult::Received(v) => v,
+            _ => panic!("not an alltoallv collective"),
+        }
+    }
+
+    /// MPI_Wait.
+    pub fn req_wait(&self, req: ReqId) {
+        loop {
+            if self.req_test(req) {
+                return;
+            }
+            // Decide how to make progress.
+            enum Plan {
+                AdvanceTo(Time),
+                Park,
+                Drain,
+            }
+            let plan = {
+                let mut w = self.world.lock().unwrap();
+                match &w.requests[req.0].body {
+                    ReqBody::Rget { complete_at, .. } => Plan::AdvanceTo(*complete_at),
+                    ReqBody::Coll { key, rank } => {
+                        let (key, rank) = (*key, *rank);
+                        match w.colls.get_mut(&key) {
+                            Some(cs) => match cs.completion_of(rank) {
+                                Some(t) if cs.cpu_remaining[rank] == 0 => Plan::AdvanceTo(t),
+                                Some(_) => Plan::Drain, // test() drains a chunk
+                                None => {
+                                    cs.waiters.push((rank, self.ctx.id()));
+                                    Plan::Park
+                                }
+                            },
+                            None => Plan::Drain,
+                        }
+                    }
+                }
+            };
+            match plan {
+                Plan::AdvanceTo(t) => self.ctx.advance_until(t),
+                Plan::Park => self.ctx.park(),
+                Plan::Drain => {} // loop; req_test drains a chunk each call
+            }
+        }
+    }
+
+    /// MPI_Testall over a set of requests.
+    pub fn req_testall(&self, reqs: &[ReqId]) -> bool {
+        self.mpi_prologue();
+        let poll = {
+            let w = self.world.lock().unwrap();
+            w.cost.params.poll_cost * reqs.len().max(1) as f64
+        };
+        self.ctx.advance(poll);
+        reqs.iter().all(|r| self.req_check(*r))
+    }
+
+    /// MPI_Waitall.
+    pub fn req_waitall(&self, reqs: &[ReqId]) {
+        for r in reqs {
+            self.req_wait(*r);
+        }
+    }
+
+    // ------------------------------------------------------------ RMA
+
+    /// MPI_Win_create (collective; §IV-A).  Each rank exposes
+    /// `payload`; pass `Payload::virt(0)` to expose nothing (drain-only
+    /// ranks, §IV-B).  The registration cost of the exposed bytes is
+    /// what makes this the dominant RMA overhead (§V).
+    pub fn win_create(&self, comm: CommId, payload: Payload) -> WinId {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let bytes = payload.bytes();
+        let reg = {
+            let w = self.world.lock().unwrap();
+            w.cost.window_registration(bytes)
+        };
+        let is_aux = self.is_aux;
+        let gpid = self.gpid;
+        let (key, r) = self.coll_post(comm, CollKind::WinCreate, Contrib::RegTime(reg), {
+            let payload = payload.clone();
+            move |w, cs, my_rank| {
+                let win = *cs.win_id.get_or_insert_with(|| {
+                    let n = w.comm(comm).gpids.len();
+                    w.windows.push(WinState::new(comm, n));
+                    WinId(w.windows.len() - 1)
+                });
+                w.windows[win.0].exposures[my_rank] = payload;
+                // Propagate the MT flag: accesses to a window created
+                // from a threaded context pay the MT penalty (§V-D).
+                if is_aux || w.procs[gpid].aux_alive {
+                    w.windows[win.0].mt = true;
+                }
+            }
+        });
+        // Window id is fixed once the first rank arrives.
+        let win = {
+            let w = self.world.lock().unwrap();
+            w.colls.get(&key).and_then(|c| c.win_id).expect("win id")
+        };
+        self.coll_block(key, r);
+        self.progress_release();
+        win
+    }
+
+    /// MPI_Win_free (collective): closing barrier + local deregistration.
+    pub fn win_free(&self, win: WinId) {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (comm, dereg) = {
+            let mut w = self.world.lock().unwrap();
+            let ws = &w.windows[win.0];
+            let comm = ws.comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            let bytes = ws.exposures[my_rank].bytes();
+            let dereg = w.cost.window_free(bytes);
+            w.windows[win.0].freed_local[my_rank] = true;
+            (comm, dereg)
+        };
+        let (key, r) =
+            self.coll_post(comm, CollKind::WinFree, Contrib::RegTime(dereg), |_, _, _| {});
+        self.coll_block(key, r);
+        {
+            let mut w = self.world.lock().unwrap();
+            w.windows[win.0].freed = true;
+        }
+        self.progress_release();
+    }
+
+    /// Local-only window release (Wait-Drains path: the closing
+    /// synchronization already happened via MPI_Ibarrier, §IV-C).
+    pub fn win_free_local(&self, win: WinId) {
+        self.mpi_prologue();
+        let (dereg, my_rank) = {
+            let w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            let bytes = w.windows[win.0].exposures[my_rank].bytes();
+            (w.cost.window_free(bytes), my_rank)
+        };
+        self.ctx.advance(dereg);
+        let mut w = self.world.lock().unwrap();
+        w.windows[win.0].free_local(my_rank);
+    }
+
+    /// MPI_Win_lock (shared + MPI_MODE_NOCHECK: local bookkeeping only).
+    pub fn win_lock(&self, win: WinId, _target: usize) {
+        self.mpi_prologue();
+        let dt = {
+            let w = self.world.lock().unwrap();
+            assert!(!w.windows[win.0].freed, "lock on freed window");
+            w.cost.params.epoch_cost
+        };
+        self.ctx.advance(dt);
+    }
+
+    /// MPI_Win_lock_all (one epoch over all targets; §IV-B Alg. 3).
+    pub fn win_lock_all(&self, win: WinId) {
+        self.mpi_prologue();
+        let dt = {
+            let w = self.world.lock().unwrap();
+            assert!(!w.windows[win.0].freed, "lock_all on freed window");
+            // Cheaper than per-target: one local epoch + amortized setup.
+            w.cost.params.epoch_cost * 2.0
+        };
+        self.ctx.advance(dt);
+    }
+
+    /// MPI_Get: post a one-sided read of `count` elements at `disp`
+    /// from `target`'s exposure, delivered into `dest[dest_off..]`.
+    /// Completion is deferred to the closing `win_unlock*`.
+    pub fn get(
+        &self,
+        win: WinId,
+        target: usize,
+        disp: u64,
+        count: u64,
+        dest: &RecvBuf,
+        dest_off: u64,
+    ) {
+        self.mpi_prologue();
+        let (cpu_done, data) = {
+            let mut w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let target_gpid = w.comm(comm).gpids[target];
+            let bytes = (count * super::types::ELEM_BYTES).max(1);
+            let now = self.ctx.now();
+            let MpiWorld { cost, placement, .. } = &mut *w;
+            // One-sided read: data moves target → origin.
+            let tt = cost.transfer(
+                now,
+                placement,
+                target_gpid,
+                self.gpid,
+                bytes,
+                TransferClass::Rma,
+            );
+            // MT window (§V-D): passive-target progress crawls under
+            // MPICH's contended lock — stretch the completion.
+            let arrival = if w.windows[win.0].mt {
+                now + (tt.arrival - now) * w.cost.params.mt_rma_penalty
+            } else {
+                tt.arrival
+            };
+            let data = w.windows[win.0].read(target, disp, count);
+            w.windows[win.0].track_get(self.gpid, target, arrival);
+            (tt.cpu_done, data)
+        };
+        // Deliver data now (window exposures are constant during the
+        // epoch); virtual-time completion is enforced by unlock.
+        if let Some(src) = data {
+            let mut guard = dest.lock().unwrap();
+            if let Some(buf) = guard.as_mut() {
+                let off = dest_off as usize;
+                buf[off..off + src.len()].copy_from_slice(&src);
+            }
+        }
+        self.ctx.advance_until(cpu_done);
+    }
+
+    /// MPI_Rget: like [`MpiProc::get`] but returns a request that can
+    /// be tested/waited independently (the Wait-Drains building block,
+    /// §IV-C).
+    pub fn rget(
+        &self,
+        win: WinId,
+        target: usize,
+        disp: u64,
+        count: u64,
+        dest: &RecvBuf,
+        dest_off: u64,
+    ) -> ReqId {
+        self.mpi_prologue();
+        let (cpu_done, rid) = {
+            let mut w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let target_gpid = w.comm(comm).gpids[target];
+            let bytes = (count * super::types::ELEM_BYTES).max(1);
+            let now = self.ctx.now();
+            let MpiWorld { cost, placement, .. } = &mut *w;
+            let tt = cost.transfer(
+                now,
+                placement,
+                target_gpid,
+                self.gpid,
+                bytes,
+                TransferClass::Rma,
+            );
+            // MT window (§V-D): stretched completion, as in `get`.
+            let complete_at = if w.windows[win.0].mt {
+                now + (tt.arrival - now) * w.cost.params.mt_rma_penalty
+            } else {
+                tt.arrival
+            };
+            let data = w.windows[win.0].read(target, disp, count);
+            let rid = w.requests.len();
+            w.requests.push(ReqState::new(
+                self.gpid,
+                ReqBody::Rget {
+                    win,
+                    complete_at,
+                    data,
+                    dest: dest.clone(),
+                    dest_off,
+                    applied: false,
+                },
+            ));
+            (tt.cpu_done, rid)
+        };
+        self.ctx.advance_until(cpu_done);
+        ReqId(rid)
+    }
+
+    /// MPI_Win_unlock: blocks until this origin's pending Gets to
+    /// `target` have landed, then closes the epoch.
+    pub fn win_unlock(&self, win: WinId, target: usize) {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (flush_t, epoch) = {
+            let mut w = self.world.lock().unwrap();
+            let t = w.windows[win.0].flush_target(self.gpid, target);
+            (t, w.cost.params.epoch_cost)
+        };
+        if let Some(t) = flush_t {
+            self.ctx.advance_until(t);
+        }
+        self.ctx.advance(epoch);
+        self.progress_release();
+    }
+
+    /// MPI_Win_unlock_all.
+    pub fn win_unlock_all(&self, win: WinId) {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (flush_t, epoch) = {
+            let mut w = self.world.lock().unwrap();
+            let t = w.windows[win.0].flush_all(self.gpid);
+            (t, w.cost.params.epoch_cost)
+        };
+        if let Some(t) = flush_t {
+            self.ctx.advance_until(t);
+        }
+        self.ctx.advance(epoch);
+        self.progress_release();
+    }
+
+    /// Exposed size of `target`'s window slice (drain-side Algorithm 1
+    /// needs the source ranges; MaM queries them through the registry,
+    /// but tests use this).
+    pub fn win_exposed_elems(&self, win: WinId, target: usize) -> u64 {
+        let w = self.world.lock().unwrap();
+        w.windows[win.0].exposures[target].elems()
+    }
+
+    // -------------------------------------------- process management
+
+    /// MaM's Merge (grow): collective over `comm`; spawns `n_new`
+    /// processes running `body(proc, merged_comm)` and returns the
+    /// merged communicator (members of `comm` first, spawned after —
+    /// the intracomm produced by MPI_Comm_spawn + MPI_Intercomm_merge).
+    pub fn spawn_merge(
+        &self,
+        comm: CommId,
+        n_new: usize,
+        spawn_dur: f64,
+        body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync>,
+    ) -> CommId {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let contrib = if self.rank(comm) == 0 {
+            Contrib::SpawnTime(spawn_dur)
+        } else {
+            Contrib::None
+        };
+        let (key, r) = self.coll_post(comm, CollKind::Spawn, contrib, |_, _, _| {});
+        self.coll_block(key, r);
+        // Rank 0 creates the processes and the merged communicator.
+        if r == 0 {
+            let spawn_list: Vec<(usize, CommId)> = {
+                let mut w = self.world.lock().unwrap();
+                let old = w.comm(comm).gpids.clone();
+                let new_gpids: Vec<usize> = (0..n_new).map(|_| w.create_proc()).collect();
+                let mut merged = old;
+                merged.extend(&new_gpids);
+                let mc = w.create_comm(merged);
+                w.derived_comms.insert(key, mc);
+                let waiters = w.derived_waiters.remove(&key).unwrap_or_default();
+                drop(w);
+                for aid in waiters {
+                    self.ctx.unpark_now(aid);
+                }
+                new_gpids.into_iter().map(|g| (g, mc)).collect()
+            };
+            for (gpid, mc) in spawn_list {
+                let world = self.world.clone();
+                let b = body.clone();
+                self.ctx.spawn(format!("spawned-g{gpid}"), move |ctx| {
+                    let proc = MpiProc::main(ctx, world, gpid);
+                    b(proc.clone_handle(), mc);
+                    proc.on_exit();
+                });
+            }
+        }
+        let mc = self.wait_derived(key);
+        self.progress_release();
+        mc
+    }
+
+    /// Sub-communicator of the first `keep` ranks (MaM's Merge-shrink).
+    /// Collective over `comm`; every caller gets the new CommId, even
+    /// ranks that are not members of it.
+    pub fn comm_sub(&self, comm: CommId, keep: usize) -> CommId {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (key, r) = self.coll_post(comm, CollKind::CommSub, Contrib::None, move |w, cs, _| {
+            // First arriver materializes the communicator (metadata
+            // only); the id rides in the instance's spare slot.
+            if cs.win_id.is_none() {
+                let sub: Vec<usize> = w.comm(comm).gpids[..keep].to_vec();
+                let sc = w.create_comm(sub);
+                cs.win_id = Some(WinId(sc.0));
+            }
+        });
+        // Read before blocking: the instance may be GC'd after takes.
+        let sc = {
+            let w = self.world.lock().unwrap();
+            CommId(w.colls.get(&key).and_then(|c| c.win_id).expect("sub comm id").0)
+        };
+        self.coll_block(key, r);
+        self.progress_release();
+        sc
+    }
+
+    fn wait_derived(&self, key: (CommId, u64)) -> CommId {
+        loop {
+            let found = {
+                let mut w = self.world.lock().unwrap();
+                match w.derived_comms.get(&key) {
+                    Some(c) => Some(*c),
+                    None => {
+                        w.derived_waiters.entry(key).or_default().push(self.ctx.id());
+                        None
+                    }
+                }
+            };
+            match found {
+                Some(c) => return c,
+                None => self.ctx.park(),
+            }
+        }
+    }
+
+    /// Process exit for ranks removed by a shrink: retire and return.
+    /// (The body should return right after calling this.)
+    pub fn finalize(&self) {
+        // on_exit is called by the launcher wrapper; nothing extra here.
+    }
+
+    // ----------------------------------------------- auxiliary thread
+
+    /// Spawn this process's auxiliary redistribution thread (Threading
+    /// strategy, §IV-C.1).  At most one at a time.
+    pub fn spawn_aux<F>(&self, body: F)
+    where
+        F: FnOnce(MpiProc) + Send + 'static,
+    {
+        assert!(!self.is_aux, "aux thread cannot spawn aux threads");
+        {
+            let mut w = self.world.lock().unwrap();
+            let p = &mut w.procs[self.gpid];
+            assert!(!p.aux_alive, "aux thread already running");
+            p.aux_alive = true;
+        }
+        let world = self.world.clone();
+        let gpid = self.gpid;
+        self.ctx.spawn(format!("aux-g{gpid}"), move |ctx| {
+            let proc = MpiProc { ctx, world: world.clone(), gpid, is_aux: true };
+            body(proc.clone_handle());
+            let waiters = {
+                let mut w = world.lock().unwrap();
+                let p = &mut w.procs[gpid];
+                p.aux_alive = false;
+                // Release the engine if the aux died mid-operation.
+                p.aux_busy = 0;
+                let mut ws = std::mem::take(&mut p.aux_waiters);
+                ws.extend(std::mem::take(&mut p.progress_waiters));
+                ws
+            };
+            for aid in waiters {
+                proc.ctx.unpark_now(aid);
+            }
+        });
+    }
+
+    /// Is this process's auxiliary thread still running?
+    pub fn aux_alive(&self) -> bool {
+        self.world.lock().unwrap().procs[self.gpid].aux_alive
+    }
+
+    /// Block until the auxiliary thread finishes.
+    pub fn aux_join(&self) {
+        loop {
+            {
+                let mut w = self.world.lock().unwrap();
+                let p = &mut w.procs[self.gpid];
+                if !p.aux_alive {
+                    return;
+                }
+                p.aux_waiters.push(self.ctx.id());
+            }
+            self.ctx.park();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::{NetParams, Topology};
+    use crate::simmpi::types::recv_buf_real;
+    use crate::simmpi::world::{MpiSim, WORLD};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn sim(n_nodes: usize, cores: usize) -> MpiSim {
+        MpiSim::new(Topology::new(n_nodes, cores), NetParams::test_simple())
+    }
+
+    #[test]
+    fn send_recv_roundtrip_real_data() {
+        let mut s = sim(2, 2);
+        s.launch(2, |p| {
+            if p.rank(WORLD) == 0 {
+                p.send(WORLD, 1, 7, Payload::real(vec![1.0, 2.0, 3.0]));
+            } else {
+                let m = p.recv(WORLD, Some(0), 7);
+                assert_eq!(m.as_slice().unwrap(), &[1.0, 2.0, 3.0]);
+                assert!(p.now() > 0.0, "recv must take time");
+            }
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn recv_blocks_until_send() {
+        let mut s = sim(1, 2);
+        s.launch(2, |p| {
+            if p.rank(WORLD) == 0 {
+                p.compute(5.0);
+                p.send(WORLD, 1, 0, Payload::virt(10));
+            } else {
+                let _ = p.recv(WORLD, Some(0), 0);
+                assert!(p.now() >= 5.0, "recv returned at {}", p.now());
+            }
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn tag_matching_is_selective() {
+        let mut s = sim(1, 2);
+        s.launch(2, |p| {
+            if p.rank(WORLD) == 0 {
+                p.send(WORLD, 1, 1, Payload::real(vec![1.0]));
+                p.send(WORLD, 1, 2, Payload::real(vec![2.0]));
+            } else {
+                // Receive in reverse tag order.
+                let b = p.recv(WORLD, Some(0), 2);
+                let a = p.recv(WORLD, Some(0), 1);
+                assert_eq!(b.as_slice().unwrap(), &[2.0]);
+                assert_eq!(a.as_slice().unwrap(), &[1.0]);
+            }
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn barrier_synchronizes_ranks() {
+        let mut s = sim(2, 4);
+        s.launch(6, |p| {
+            let r = p.rank(WORLD);
+            p.compute(r as f64); // staggered arrivals 0..5 s
+            p.barrier(WORLD);
+            assert!(p.now() >= 5.0, "rank {r} left barrier at {}", p.now());
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn allgather_returns_all_blocks() {
+        let mut s = sim(1, 4);
+        s.launch(4, |p| {
+            let r = p.rank(WORLD);
+            let got = p.allgather(WORLD, Payload::real(vec![r as f64]));
+            let vals: Vec<f64> = got.iter().map(|b| b.as_slice().unwrap()[0]).collect();
+            assert_eq!(vals, vec![0.0, 1.0, 2.0, 3.0]);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn alltoallv_routes_data() {
+        let mut s = sim(2, 2);
+        s.launch(3, |p| {
+            let r = p.rank(WORLD) as f64;
+            // rank r sends value 10r+j to rank j.
+            let sends = (0..3)
+                .map(|j| Payload::real(vec![10.0 * r + j as f64]))
+                .collect();
+            let recv = p.alltoallv(WORLD, sends);
+            let vals: Vec<f64> = recv.iter().map(|b| b.as_slice().unwrap()[0]).collect();
+            // from rank i we get 10i + r.
+            assert_eq!(vals, vec![r, 10.0 + r, 20.0 + r]);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn ibarrier_test_then_complete() {
+        let mut s = sim(1, 2);
+        s.launch(2, |p| {
+            if p.rank(WORLD) == 0 {
+                let req = p.ibarrier(WORLD);
+                // Other rank arrives at t=2; not complete right away.
+                assert!(!p.req_test(req));
+                p.req_wait(req);
+                assert!(p.now() >= 2.0);
+            } else {
+                p.compute(2.0);
+                let req = p.ibarrier(WORLD);
+                p.req_wait(req);
+            }
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn ialltoallv_progress_requires_mpi_calls() {
+        let mut s = sim(2, 2);
+        let w = s.world();
+        s.launch(2, |p| {
+            let r = p.rank(WORLD);
+            let sends = vec![
+                Payload::virt(if r == 0 { 0 } else { 4_000_000 }),
+                Payload::virt(if r == 0 { 4_000_000 } else { 0 }),
+            ];
+            let req = p.ialltoallv(WORLD, sends);
+            let mut tests = 0;
+            while !p.req_test(req) {
+                tests += 1;
+                p.compute(0.01);
+                assert!(tests < 1000, "never completed");
+            }
+            // 4 M elems * 8 B * 2 (pack+unpack) at 1 MiB/chunk → many calls.
+            assert!(tests > 10, "completed too fast: {tests} tests");
+            let _ = p.req_result_alltoallv(req);
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        assert_eq!(w.live_procs(), 0);
+    }
+
+    #[test]
+    fn win_create_get_unlock_roundtrip() {
+        let mut s = sim(2, 2);
+        s.launch(2, |p| {
+            let r = p.rank(WORLD);
+            let expose = if r == 0 {
+                Payload::real(vec![5.0, 6.0, 7.0, 8.0])
+            } else {
+                Payload::virt(0)
+            };
+            let win = p.win_create(WORLD, expose);
+            if r == 1 {
+                let dest = recv_buf_real(2);
+                p.win_lock(win, 0);
+                p.get(win, 0, 1, 2, &dest, 0);
+                p.win_unlock(win, 0);
+                assert_eq!(dest.lock().unwrap().as_ref().unwrap(), &vec![6.0, 7.0]);
+            }
+            p.win_free(win);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn win_create_cost_scales_with_exposure() {
+        fn run(elems: u64) -> f64 {
+            let mut s = sim(2, 2);
+            let w = s.world();
+            s.launch(2, move |p| {
+                let r = p.rank(WORLD);
+                let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
+                let win = p.win_create(WORLD, expose);
+                if r == 0 {
+                    p.metrics(|m| m.mark("created", 0.0));
+                }
+                let t = p.now();
+                p.metrics(|m| m.mark("win_done", t));
+                p.win_free(win);
+            });
+            s.run().unwrap();
+            let t = w.lock().unwrap().metrics.mark_at("win_done").unwrap();
+            t
+        }
+        let small = run(1);
+        let big = run(100_000_000);
+        // 100M elems * 8 B at 1 GB/s registration = 0.8 s extra.
+        assert!(big > small + 0.5, "big={big} small={small}");
+    }
+
+    #[test]
+    fn rget_testall_completes() {
+        let mut s = sim(2, 2);
+        s.launch(2, |p| {
+            let r = p.rank(WORLD);
+            let expose = if r == 0 {
+                Payload::real((0..100).map(|i| i as f64).collect())
+            } else {
+                Payload::virt(0)
+            };
+            let win = p.win_create(WORLD, expose);
+            if r == 1 {
+                let dest = recv_buf_real(100);
+                p.win_lock_all(win);
+                let q1 = p.rget(win, 0, 0, 50, &dest, 0);
+                let q2 = p.rget(win, 0, 50, 50, &dest, 50);
+                while !p.req_testall(&[q1, q2]) {
+                    p.compute(0.001);
+                }
+                p.win_unlock_all(win);
+                let d = dest.lock().unwrap();
+                let buf = d.as_ref().unwrap();
+                assert_eq!(buf[0], 0.0);
+                assert_eq!(buf[99], 99.0);
+            }
+            p.win_free(win);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn spawn_merge_grows_comm() {
+        let mut s = sim(2, 4);
+        let spawned = Arc::new(AtomicUsize::new(0));
+        let sp = spawned.clone();
+        s.launch(2, move |p| {
+            let sp2 = sp.clone();
+            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |child: MpiProc, mc: CommId| {
+                    sp2.fetch_add(1, Ordering::SeqCst);
+                    assert_eq!(child.size(mc), 4);
+                    assert!(child.rank(mc) >= 2, "spawned ranks come after sources");
+                    child.barrier(mc);
+                });
+            let mc = p.spawn_merge(WORLD, 2, 0.5, body);
+            assert_eq!(p.size(mc), 4);
+            assert_eq!(p.rank(mc), p.rank(WORLD));
+            assert!(p.now() >= 0.5, "spawn cost not charged");
+            p.barrier(mc);
+        });
+        s.run().unwrap();
+        assert_eq!(spawned.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn comm_sub_selects_prefix() {
+        let mut s = sim(1, 4);
+        s.launch(4, |p| {
+            let sc = p.comm_sub(WORLD, 2);
+            if p.rank(WORLD) < 2 {
+                assert!(p.in_comm(sc));
+                assert_eq!(p.rank(sc), p.rank(WORLD));
+                assert_eq!(p.size(sc), 2);
+                p.barrier(sc);
+            } else {
+                assert!(!p.in_comm(sc));
+            }
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn aux_thread_runs_and_joins() {
+        let mut s = sim(1, 2);
+        s.launch(1, |p| {
+            assert!(!p.aux_alive());
+            p.spawn_aux(|aux| {
+                assert!(aux.is_aux());
+                aux.compute(2.0);
+            });
+            assert!(p.aux_alive());
+            // Oversubscribed compute is stretched 2x.
+            let t0 = p.now();
+            p.compute(1.0);
+            assert!((p.now() - t0 - 2.0).abs() < 1e-9);
+            p.aux_join();
+            assert!(!p.aux_alive());
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn progress_token_serializes_main_and_aux() {
+        // Aux does a long blocking alltoallv; main's barrier must wait
+        // (MPICH MPI_THREAD_MULTIPLE emulation, §V-D).
+        let mut s = sim(2, 2);
+        s.launch(2, |p| {
+            let r = p.rank(WORLD);
+            let world_comm = WORLD;
+            p.spawn_aux(move |aux| {
+                let sends = (0..2)
+                    .map(|j| Payload::virt(if j == r { 0 } else { 2_000_000 }))
+                    .collect();
+                let _ = aux.alltoallv(world_comm, sends);
+            });
+            p.compute(1e-6);
+            let t0 = p.now();
+            p.barrier(WORLD); // must stall behind aux's collective
+            let barrier_wait = p.now() - t0;
+            assert!(
+                barrier_wait > 1e-3,
+                "main barrier did not stall: {barrier_wait}"
+            );
+            p.aux_join();
+        });
+        s.run().unwrap();
+    }
+}

@@ -1,0 +1,120 @@
+//! Nonblocking-operation requests (MPI_Request equivalents).
+//!
+//! A request is created by `ibarrier`, `ialltoallv` or `rget` and
+//! completed through `req_test` / `req_wait` / `req_testall` on the
+//! owning process.  Collective-backed requests point at the shared
+//! [`CollState`](super::collective::CollState); Rget requests carry
+//! their completion time (known at post time — the flow schedule is
+//! computed eagerly, matching hardware-offloaded RDMA reads).
+
+use crate::simcluster::{ActivityId, Time};
+
+use super::types::{CommId, RecvBuf, WinId};
+
+/// Request handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ReqId(pub usize);
+
+#[derive(Debug)]
+pub(crate) enum ReqBody {
+    /// Ibarrier / Ialltoallv: completion comes from the collective
+    /// instance `(comm, seq)` at the owner's rank.
+    Coll { key: (CommId, u64), rank: usize },
+    /// Rget: one-sided read, completion known at post.
+    Rget {
+        /// Originating window (diagnostics; epochs close via WinState).
+        #[allow(dead_code)]
+        win: WinId,
+        complete_at: Time,
+        /// Real-mode data to deliver on completion.
+        data: Option<Vec<f64>>,
+        dest: RecvBuf,
+        dest_off: u64,
+        applied: bool,
+    },
+}
+
+pub(crate) struct ReqState {
+    /// Owning process (diagnostics).
+    #[allow(dead_code)]
+    pub owner_gpid: usize,
+    pub body: ReqBody,
+    pub done: bool,
+    /// Activity parked in `req_wait` (reserved for targeted wakeups).
+    #[allow(dead_code)]
+    pub waiter: Option<ActivityId>,
+}
+
+impl ReqState {
+    pub fn new(owner_gpid: usize, body: ReqBody) -> ReqState {
+        ReqState { owner_gpid, body, done: false, waiter: None }
+    }
+
+    /// Deliver Rget data into the destination buffer (once).
+    pub fn apply_rget_data(&mut self) {
+        if let ReqBody::Rget { data, dest, dest_off, applied, .. } = &mut self.body {
+            if *applied {
+                return;
+            }
+            *applied = true;
+            if let Some(src) = data.take() {
+                let mut guard = dest.lock().unwrap();
+                if let Some(buf) = guard.as_mut() {
+                    let off = *dest_off as usize;
+                    assert!(
+                        off + src.len() <= buf.len(),
+                        "rget destination overflow: off={} len={} buf={}",
+                        off,
+                        src.len(),
+                        buf.len()
+                    );
+                    buf[off..off + src.len()].copy_from_slice(&src);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::types::recv_buf_real;
+
+    #[test]
+    fn rget_apply_writes_at_offset() {
+        let dest = recv_buf_real(5);
+        let mut r = ReqState::new(
+            0,
+            ReqBody::Rget {
+                win: WinId(0),
+                complete_at: 1.0,
+                data: Some(vec![7.0, 8.0]),
+                dest: dest.clone(),
+                dest_off: 2,
+                applied: false,
+            },
+        );
+        r.apply_rget_data();
+        assert_eq!(dest.lock().unwrap().as_ref().unwrap(), &vec![0.0, 0.0, 7.0, 8.0, 0.0]);
+        // Second apply is a no-op.
+        r.apply_rget_data();
+    }
+
+    #[test]
+    #[should_panic(expected = "destination overflow")]
+    fn rget_overflow_panics() {
+        let dest = recv_buf_real(2);
+        let mut r = ReqState::new(
+            0,
+            ReqBody::Rget {
+                win: WinId(0),
+                complete_at: 1.0,
+                data: Some(vec![1.0, 2.0, 3.0]),
+                dest,
+                dest_off: 0,
+                applied: false,
+            },
+        );
+        r.apply_rget_data();
+    }
+}

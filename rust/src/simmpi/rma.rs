@@ -1,0 +1,156 @@
+//! RMA window state (passive-target model, MPI-3 §11).
+//!
+//! A window is created collectively over a communicator; each member
+//! exposes a payload (possibly empty — drains expose `NULL`, §IV-B).
+//! Origins open epochs with `Lock`/`Lock_all` (modeled with
+//! `MPI_MODE_NOCHECK` semantics: local bookkeeping only), post
+//! `Get`/`Rget` reads whose flow times come from the one-sided branch
+//! of the cost model (no target CPU involvement), and close epochs with
+//! `Unlock`/`Unlock_all`, which block until the pending reads to the
+//! target(s) have landed.
+//!
+//! Window payloads are snapshots of *constant* application data — the
+//! only class MaM redistributes without blocking the application (§III)
+//! — so reads may be satisfied from the exposure regardless of when
+//! the flow completes in virtual time.
+
+use std::collections::HashMap;
+
+use crate::simcluster::Time;
+
+use super::types::Payload;
+
+/// Per-window state.
+pub(crate) struct WinState {
+    pub comm: super::types::CommId,
+    /// Exposed payload per communicator rank (virt(0) = nothing).
+    pub exposures: Vec<Payload>,
+    /// Pending blocking-Get arrival times, keyed by (origin gpid,
+    /// target rank) — consumed by `Unlock`/`Unlock_all`.
+    pub pending_gets: HashMap<(usize, usize), Vec<Time>>,
+    /// Ranks that called `win_free_local` (WD path GC).
+    pub freed_local: Vec<bool>,
+    pub freed: bool,
+    /// Window created from an `MPI_THREAD_MULTIPLE` context (§V-D):
+    /// one-sided accesses crawl under MPICH's contended lock — their
+    /// wire contribution is scaled by `mt_rma_penalty`.
+    pub mt: bool,
+}
+
+impl WinState {
+    pub fn new(comm: super::types::CommId, n: usize) -> WinState {
+        WinState {
+            comm,
+            exposures: (0..n).map(|_| Payload::virt(0)).collect(),
+            pending_gets: HashMap::new(),
+            freed_local: vec![false; n],
+            freed: false,
+            mt: false,
+        }
+    }
+
+    /// Read `count` elements at `disp` from `target`'s exposure;
+    /// returns real data when the exposure is real.
+    pub fn read(&self, target: usize, disp: u64, count: u64) -> Option<Vec<f64>> {
+        let exp = &self.exposures[target];
+        assert!(
+            disp + count <= exp.elems(),
+            "get out of range: disp={} count={} exposed={} (target {})",
+            disp,
+            count,
+            exp.elems(),
+            target
+        );
+        exp.as_slice()
+            .map(|s| s[disp as usize..(disp + count) as usize].to_vec())
+    }
+
+    /// Register a blocking Get's arrival for epoch flushing.
+    pub fn track_get(&mut self, origin_gpid: usize, target: usize, arrival: Time) {
+        self.pending_gets
+            .entry((origin_gpid, target))
+            .or_default()
+            .push(arrival);
+    }
+
+    /// Drain pending arrivals for (origin, target); returns the latest.
+    pub fn flush_target(&mut self, origin_gpid: usize, target: usize) -> Option<Time> {
+        self.pending_gets
+            .remove(&(origin_gpid, target))
+            .and_then(|v| v.into_iter().reduce(f64::max))
+    }
+
+    /// Drain pending arrivals for all targets of `origin`.
+    pub fn flush_all(&mut self, origin_gpid: usize) -> Option<Time> {
+        let keys: Vec<_> = self
+            .pending_gets
+            .keys()
+            .filter(|(o, _)| *o == origin_gpid)
+            .cloned()
+            .collect();
+        let mut latest = None;
+        for k in keys {
+            if let Some(v) = self.pending_gets.remove(&k) {
+                for t in v {
+                    latest = Some(latest.map_or(t, |l: f64| l.max(t)));
+                }
+            }
+        }
+        latest
+    }
+
+    /// Mark one rank's local free; returns true when all freed.
+    pub fn free_local(&mut self, rank: usize) -> bool {
+        self.freed_local[rank] = true;
+        if self.freed_local.iter().all(|&f| f) {
+            self.freed = true;
+        }
+        self.freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::types::CommId;
+
+    #[test]
+    fn read_real_exposure() {
+        let mut w = WinState::new(CommId(0), 2);
+        w.exposures[0] = Payload::real(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.read(0, 1, 2).unwrap(), vec![2.0, 3.0]);
+        // Virtual exposure yields no data.
+        w.exposures[1] = Payload::virt(10);
+        assert!(w.read(1, 0, 5).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "get out of range")]
+    fn read_out_of_range_panics() {
+        let mut w = WinState::new(CommId(0), 1);
+        w.exposures[0] = Payload::virt(10);
+        w.read(0, 8, 3);
+    }
+
+    #[test]
+    fn flush_returns_latest_arrival() {
+        let mut w = WinState::new(CommId(0), 3);
+        w.track_get(7, 0, 1.0);
+        w.track_get(7, 0, 3.0);
+        w.track_get(7, 1, 2.0);
+        w.track_get(8, 0, 9.0); // different origin
+        assert_eq!(w.flush_target(7, 0), Some(3.0));
+        assert_eq!(w.flush_target(7, 0), None); // drained
+        assert_eq!(w.flush_all(7), Some(2.0));
+        assert_eq!(w.flush_all(8), Some(9.0));
+    }
+
+    #[test]
+    fn free_local_completes_when_all_freed() {
+        let mut w = WinState::new(CommId(0), 2);
+        assert!(!w.free_local(0));
+        assert!(!w.freed);
+        assert!(w.free_local(1));
+        assert!(w.freed);
+    }
+}

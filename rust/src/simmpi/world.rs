@@ -1,0 +1,320 @@
+//! The shared world state of the simulated MPI job and the `MpiSim`
+//! launcher.
+//!
+//! Locking discipline: the world mutex is only ever held for
+//! *zero-virtual-time* bookkeeping; it is **never** held across an
+//! engine suspension (`advance`/`park`).  Since the engine runs exactly
+//! one activity at a time, the mutex is uncontended in practice — it
+//! exists to satisfy `Send`/`Sync`, not for parallelism.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::netmodel::{CostModel, NetParams, Placement, Topology};
+use crate::simcluster::{ActivityId, Engine, EngineError, Time};
+
+use super::collective::CollState;
+use super::proc::MpiProc;
+use super::request::ReqState;
+use super::rma::WinState;
+use super::types::{CommId, Payload};
+
+/// The initial world communicator.
+pub const WORLD: CommId = CommId(0);
+
+/// A message posted to a destination process.
+#[derive(Debug)]
+pub(crate) struct PendingMsg {
+    pub src_rank: usize, // rank within `comm`
+    pub comm: CommId,
+    pub tag: i32,
+    pub payload: Payload,
+    pub arrival: Time,
+}
+
+/// A receiver parked waiting for a matching message.
+#[derive(Debug)]
+pub(crate) struct RecvWait {
+    pub src_rank: Option<usize>,
+    pub comm: CommId,
+    pub tag: i32,
+    pub waiter: ActivityId,
+}
+
+/// Per-process runtime state.
+pub(crate) struct ProcState {
+    /// Global process id (== index in `procs`; kept for diagnostics).
+    #[allow(dead_code)]
+    pub gpid: usize,
+    pub core_slot: usize,
+    pub exited: bool,
+    /// Live auxiliary activity (Threading strategy)?
+    pub aux_alive: bool,
+    // ---- p2p
+    pub inbox: Vec<PendingMsg>,
+    pub recv_waits: Vec<RecvWait>,
+    // ---- MPICH MPI_THREAD_MULTIPLE progress model (§V-D): while the
+    // auxiliary thread is inside a blocking MPI call it owns the
+    // progress engine (depth-counted); main-thread MPI calls stall
+    // until the aux op completes.  The aux never waits — it *is* the
+    // progress driver — which is what lets MaM's Threading strategy
+    // complete while every main thread is blocked in its first
+    // collective (the paper's COL-T observation).
+    pub aux_busy: u32,
+    pub progress_waiters: Vec<ActivityId>,
+    // ---- iteration accounting (read by the monitor)
+    pub iters_done: u64,
+    /// Open nonblocking requests with pending CPU (progress-model) work.
+    pub open_nb_reqs: Vec<usize>,
+    /// Activities parked in `aux_join`.
+    pub aux_waiters: Vec<ActivityId>,
+}
+
+impl ProcState {
+    fn new(gpid: usize, core_slot: usize) -> ProcState {
+        ProcState {
+            gpid,
+            core_slot,
+            exited: false,
+            aux_alive: false,
+            inbox: Vec::new(),
+            recv_waits: Vec::new(),
+            aux_busy: 0,
+            progress_waiters: Vec::new(),
+            iters_done: 0,
+            open_nb_reqs: Vec::new(),
+            aux_waiters: Vec::new(),
+        }
+    }
+}
+
+/// A communicator: ordered list of member gpids.
+pub(crate) struct CommState {
+    pub gpids: Vec<usize>,
+    /// Next collective sequence number, per member slot (local count —
+    /// matching relies on every member calling collectives in the same
+    /// order, as MPI requires).
+    pub coll_seq: Vec<u64>,
+}
+
+impl CommState {
+    pub fn rank_of(&self, gpid: usize) -> Option<usize> {
+        self.gpids.iter().position(|&g| g == gpid)
+    }
+}
+
+/// Global simulation state shared by all simulated processes.
+pub struct MpiWorld {
+    pub cost: CostModel,
+    pub placement: Placement,
+    pub topology: Topology,
+    pub(crate) procs: Vec<ProcState>,
+    pub(crate) comms: Vec<CommState>,
+    pub(crate) windows: Vec<WinState>,
+    pub(crate) colls: HashMap<(CommId, u64), CollState>,
+    pub(crate) requests: Vec<ReqState>,
+    /// Communicators produced by `spawn_merge` / `comm_sub`, keyed by
+    /// the collective instance that produced them.
+    pub(crate) derived_comms: HashMap<(CommId, u64), CommId>,
+    /// Activities parked waiting for a derived communicator.
+    pub(crate) derived_waiters: HashMap<(CommId, u64), Vec<ActivityId>>,
+    /// Core-slot occupancy: slot index → gpid.
+    core_slots: Vec<Option<usize>>,
+    /// Free-form counters/series for experiment harnesses.
+    pub metrics: crate::monitor::Metrics,
+    /// Oversubscription model toggle (always on; tests may disable).
+    pub oversubscription: bool,
+}
+
+impl MpiWorld {
+    fn new(topology: Topology, params: NetParams) -> MpiWorld {
+        let n_nodes = topology.nodes;
+        MpiWorld {
+            cost: CostModel::new(params, n_nodes),
+            placement: Placement {
+                cores_per_node: topology.cores_per_node,
+                node_of: Vec::new(),
+            },
+            core_slots: vec![None; topology.total_cores()],
+            topology,
+            procs: Vec::new(),
+            comms: Vec::new(),
+            windows: Vec::new(),
+            colls: HashMap::new(),
+            requests: Vec::new(),
+            derived_comms: HashMap::new(),
+            derived_waiters: HashMap::new(),
+            metrics: crate::monitor::Metrics::new(),
+            oversubscription: true,
+        }
+    }
+
+    /// Allocate a core slot and create a process record; returns gpid.
+    pub(crate) fn create_proc(&mut self) -> usize {
+        let slot = self
+            .core_slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("cluster out of cores");
+        let gpid = self.procs.len();
+        self.core_slots[slot] = Some(gpid);
+        // placement is indexed by gpid.
+        let node = self.topology.node_of_slot(slot);
+        debug_assert_eq!(self.placement.node_of.len(), gpid);
+        self.placement.node_of.push(node);
+        self.procs.push(ProcState::new(gpid, slot));
+        gpid
+    }
+
+    /// Mark a process exited and release its core slot.
+    pub(crate) fn retire_proc(&mut self, gpid: usize) {
+        let slot = self.procs[gpid].core_slot;
+        self.procs[gpid].exited = true;
+        self.core_slots[slot] = None;
+    }
+
+    /// Create a communicator over the given gpids; returns its id.
+    pub(crate) fn create_comm(&mut self, gpids: Vec<usize>) -> CommId {
+        let n = gpids.len();
+        self.comms.push(CommState { gpids, coll_seq: vec![0; n] });
+        CommId(self.comms.len() - 1)
+    }
+
+    pub(crate) fn comm(&self, c: CommId) -> &CommState {
+        &self.comms[c.0]
+    }
+
+    pub(crate) fn comm_mut(&mut self, c: CommId) -> &mut CommState {
+        &mut self.comms[c.0]
+    }
+
+    /// Number of live (non-exited) processes.
+    pub fn live_procs(&self) -> usize {
+        self.procs.iter().filter(|p| !p.exited).count()
+    }
+
+    /// Iterations completed by a process (monitor hook).
+    pub fn iters_of(&self, gpid: usize) -> u64 {
+        self.procs[gpid].iters_done
+    }
+}
+
+/// Builder/driver: wires an [`Engine`] to a shared [`MpiWorld`] and
+/// launches the initial ranks.
+pub struct MpiSim {
+    engine: Engine,
+    world: Arc<Mutex<MpiWorld>>,
+}
+
+impl MpiSim {
+    pub fn new(topology: Topology, params: NetParams) -> MpiSim {
+        MpiSim {
+            engine: Engine::new(),
+            world: Arc::new(Mutex::new(MpiWorld::new(topology, params))),
+        }
+    }
+
+    /// Shared handle to the world (inspect metrics after `run`).
+    pub fn world(&self) -> Arc<Mutex<MpiWorld>> {
+        self.world.clone()
+    }
+
+    /// Launch the initial `n` ranks as communicator [`WORLD`].  Every
+    /// rank runs `body`; use `proc.rank(WORLD)` inside to specialize.
+    pub fn launch<F>(&mut self, n: usize, body: F)
+    where
+        F: Fn(MpiProc) + Send + Sync + 'static,
+    {
+        let body = Arc::new(body);
+        let gpids: Vec<usize> = {
+            let mut w = self.world.lock().unwrap();
+            let g: Vec<usize> = (0..n).map(|_| w.create_proc()).collect();
+            let c = w.create_comm(g.clone());
+            assert_eq!(c, WORLD, "launch must create the first communicator");
+            g
+        };
+        for (rank, gpid) in gpids.into_iter().enumerate() {
+            let world = self.world.clone();
+            let b = body.clone();
+            self.engine.spawn_at(0.0, format!("rank{rank}"), move |ctx| {
+                let proc = MpiProc::main(ctx, world, gpid);
+                b(proc.clone_handle());
+                proc.on_exit();
+            });
+        }
+    }
+
+    /// Drive the simulation to completion; returns the final virtual
+    /// time.
+    pub fn run(mut self) -> Result<Time, EngineError> {
+        let t = self.engine.run()?;
+        let events = self.engine.events_processed();
+        self.world
+            .lock()
+            .unwrap()
+            .metrics
+            .set_counter("engine.events", events as f64);
+        Ok(t)
+    }
+
+    /// Events processed so far (simulator throughput metric).
+    pub fn events_processed(&self) -> u64 {
+        self.engine.events_processed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::NodeId;
+
+    fn tiny_sim() -> MpiSim {
+        MpiSim::new(Topology::new(2, 4), NetParams::test_simple())
+    }
+
+    #[test]
+    fn launch_creates_world_comm() {
+        let mut sim = tiny_sim();
+        sim.launch(4, |p| {
+            assert_eq!(p.size(WORLD), 4);
+            assert!(p.rank(WORLD) < 4);
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn core_slots_are_block_placed() {
+        let mut sim = tiny_sim();
+        let w = sim.world();
+        sim.launch(6, |_p| {});
+        sim.run().unwrap();
+        let w = w.lock().unwrap();
+        assert_eq!(w.placement.node_of(0), NodeId(0));
+        assert_eq!(w.placement.node_of(3), NodeId(0));
+        assert_eq!(w.placement.node_of(4), NodeId(1));
+        assert_eq!(w.placement.node_of(5), NodeId(1));
+    }
+
+    #[test]
+    fn retire_frees_slot_for_reuse() {
+        let mut w = MpiWorld::new(Topology::new(1, 2), NetParams::test_simple());
+        let a = w.create_proc();
+        let b = w.create_proc();
+        assert_eq!((a, b), (0, 1));
+        w.retire_proc(0);
+        let c = w.create_proc();
+        // gpid grows, but the slot (and hence node) is recycled.
+        assert_eq!(c, 2);
+        assert_eq!(w.procs[c].core_slot, 0);
+        assert_eq!(w.live_procs(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of cores")]
+    fn exhausting_cores_panics() {
+        let mut w = MpiWorld::new(Topology::new(1, 2), NetParams::test_simple());
+        w.create_proc();
+        w.create_proc();
+        w.create_proc();
+    }
+}

@@ -1,0 +1,305 @@
+//! Criterion-style benchmark harness (criterion is not available in the
+//! offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed repetitions, outlier-robust summaries, and aligned
+//! table output so every paper figure prints as rows the way the paper
+//! reports them.  Also supports *simulated-time* benchmarks, where the
+//! measured quantity is the virtual clock of the DES rather than the
+//! wall clock.
+
+use crate::util::stats::{fmt_seconds, Summary};
+use std::time::Instant;
+
+/// One benchmark measurement series.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Wall-clock seconds per iteration.
+    pub wall: Summary,
+    /// Optional domain metric (e.g. simulated seconds, ops/s).
+    pub metric: Option<(String, Summary)>,
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 1, measure_iters: 5, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor the conventional quick-mode env var so `make bench` can be
+        // tuned without recompiling.
+        let mut b = Bench::default();
+        if let Ok(v) = std::env::var("BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                b.measure_iters = n;
+            }
+        }
+        b
+    }
+
+    /// Benchmark a closure for wall-clock time.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            wall: Summary::of(&samples),
+            metric: None,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Benchmark a closure that *returns* a domain metric (e.g. the
+    /// simulated redistribution time). Both wall time and the metric are
+    /// recorded; the table prints the metric as the primary column.
+    pub fn bench_metric<F: FnMut() -> f64>(
+        &mut self,
+        name: &str,
+        metric_name: &str,
+        mut f: F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut wall = Vec::with_capacity(self.measure_iters);
+        let mut met = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            let m = f();
+            wall.push(t0.elapsed().as_secs_f64());
+            met.push(m);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            wall: Summary::of(&wall),
+            metric: Some((metric_name.to_string(), Summary::of(&met))),
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render a report table.
+    pub fn report(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {title} ==\n"));
+        let name_w = self
+            .results
+            .iter()
+            .map(|r| r.name.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        out.push_str(&format!(
+            "{:<w$}  {:>12}  {:>12}  {:>12}  {:>10}\n",
+            "bench", "median", "p05", "p95", "n",
+            w = name_w
+        ));
+        for r in &self.results {
+            let (med, p05, p95, label) = match &r.metric {
+                Some((mname, m)) => (m.median, m.p05, m.p95, format!(" [{mname}]")),
+                None => (r.wall.median, r.wall.p05, r.wall.p95, String::new()),
+            };
+            out.push_str(&format!(
+                "{:<w$}  {:>12}  {:>12}  {:>12}  {:>10}{}\n",
+                r.name,
+                fmt_seconds(med),
+                fmt_seconds(p05),
+                fmt_seconds(p95),
+                r.wall.n,
+                label,
+                w = name_w
+            ));
+        }
+        out
+    }
+
+    /// Print the report to stdout.
+    pub fn print_report(&self, title: &str) {
+        print!("{}", self.report(title));
+    }
+}
+
+/// A grouped-bar table mirroring the paper's figures: one row per
+/// process pair, one column per version, plus speedups vs. a baseline
+/// column — exactly how Figs. 3, 4 and 7 annotate their bars.
+pub struct FigureTable {
+    pub title: String,
+    pub row_label: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Index of the baseline column speedups are computed against.
+    pub baseline: usize,
+    /// How cell values are formatted.
+    pub unit: Unit,
+    /// Annotate speedup columns (the paper only does so for the time
+    /// figures 3, 4 and 7).
+    pub show_speedup: bool,
+}
+
+/// Cell formatting of a [`FigureTable`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    Seconds,
+    /// Dimensionless ratio (ω figures).
+    Ratio,
+    /// Integer count (iteration figures).
+    Count,
+}
+
+impl FigureTable {
+    pub fn new(title: &str, row_label: &str, columns: &[&str], baseline: usize) -> Self {
+        FigureTable {
+            title: title.to_string(),
+            row_label: row_label.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            baseline,
+            unit: Unit::Seconds,
+            show_speedup: true,
+        }
+    }
+
+    /// Builder-style unit/speedup configuration.
+    pub fn with_unit(mut self, unit: Unit, show_speedup: bool) -> Self {
+        self.unit = unit;
+        self.show_speedup = show_speedup;
+        self
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    fn fmt_cell(&self, v: f64) -> String {
+        match self.unit {
+            Unit::Seconds => fmt_seconds(v),
+            Unit::Ratio => format!("{v:.2}"),
+            Unit::Count => format!("{v:.0}"),
+        }
+    }
+
+    /// Render: value columns followed by speedup-vs-baseline columns.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&format!("{:<12}", self.row_label));
+        for c in &self.columns {
+            out.push_str(&format!("{:>14}", c));
+        }
+        if self.show_speedup {
+            for (i, c) in self.columns.iter().enumerate() {
+                if i != self.baseline {
+                    out.push_str(&format!("{:>14}", format!("S({c})")));
+                }
+            }
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{:<12}", label));
+            for v in vals {
+                out.push_str(&format!("{:>14}", self.fmt_cell(*v)));
+            }
+            if self.show_speedup {
+                let base = vals[self.baseline];
+                for (i, v) in vals.iter().enumerate() {
+                    if i != self.baseline {
+                        out.push_str(&format!("{:>14}", format!("{:.2}x", base / v)));
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Cell value at row `r`, column `col`.
+    pub fn value(&self, r: usize, col: usize) -> f64 {
+        self.rows[r].1[col]
+    }
+
+    /// Speedup of column `col` over the baseline, for row `r`.
+    pub fn speedup(&self, r: usize, col: usize) -> f64 {
+        let (_, vals) = &self.rows[r];
+        vals[self.baseline] / vals[col]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bench { warmup_iters: 0, measure_iters: 3, results: vec![] };
+        b.bench("noop", || {});
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].wall.n, 3);
+        assert!(b.results()[0].wall.median >= 0.0);
+    }
+
+    #[test]
+    fn bench_metric_records_metric() {
+        let mut b = Bench { warmup_iters: 0, measure_iters: 4, results: vec![] };
+        let mut k = 0.0;
+        b.bench_metric("m", "sim_s", || {
+            k += 1.0;
+            k
+        });
+        let (name, m) = b.results()[0].metric.clone().unwrap();
+        assert_eq!(name, "sim_s");
+        assert_eq!(m.n, 4);
+        // warmup skipped, so samples are 1..=4 → median 2.5
+        assert_eq!(m.median, 2.5);
+    }
+
+    #[test]
+    fn report_contains_rows() {
+        let mut b = Bench { warmup_iters: 0, measure_iters: 2, results: vec![] };
+        b.bench("alpha", || {});
+        b.bench("beta", || {});
+        let rep = b.report("t");
+        assert!(rep.contains("alpha"));
+        assert!(rep.contains("beta"));
+        assert!(rep.contains("median"));
+    }
+
+    #[test]
+    fn figure_table_speedups() {
+        let mut t = FigureTable::new("fig", "pair", &["COL", "RMA1", "RMA2"], 0);
+        t.row("20->40", vec![2.0, 4.0, 1.0]);
+        assert!((t.speedup(0, 1) - 0.5).abs() < 1e-12);
+        assert!((t.speedup(0, 2) - 2.0).abs() < 1e-12);
+        let r = t.render();
+        assert!(r.contains("0.50x"));
+        assert!(r.contains("2.00x"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn figure_table_rejects_bad_row() {
+        let mut t = FigureTable::new("fig", "pair", &["a", "b"], 0);
+        t.row("x", vec![1.0]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Tiny declarative command-line parser (clap is not available offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options, positionals, defaults and an auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+/// A subcommand with its option specs.
+#[derive(Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{} {} — {}\n\noptions:\n", prog, self.name, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("  --{} <val> (default {})", o.name, d)
+            } else {
+                format!("  --{} <val> (required)", o.name)
+            };
+            s.push_str(&format!("{head:<44}{}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse this command's arguments (after the subcommand word).
+    pub fn parse(&self, prog: &str, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage(prog));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage(prog)))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required.
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.usage(prog)));
+            }
+        }
+        Ok(args)
+    }
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\ncommands:\n", self.prog, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<24}{}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nrun `{} <command> --help` for details\n", self.prog));
+        s
+    }
+
+    /// Dispatch: returns (command name, parsed args) or a usage/help message.
+    pub fn parse(&self, argv: &[String]) -> Result<(&Command, Args), String> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+        let args = cmd.parse(self.prog, &argv[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn test_cli() -> Cli {
+        Cli {
+            prog: "proteo",
+            about: "test",
+            commands: vec![Command::new("run", "run it")
+                .opt("pairs", "all", "which pairs")
+                .opt("reps", "5", "repetitions")
+                .opt_required("method", "method name")
+                .flag("verbose", "more output")],
+        }
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let cli = test_cli();
+        let (cmd, args) = cli
+            .parse(&sv(&["run", "--method", "col", "--reps=9", "--verbose"]))
+            .unwrap();
+        assert_eq!(cmd.name, "run");
+        assert_eq!(args.get("method"), Some("col"));
+        assert_eq!(args.get_usize("reps"), Some(9));
+        assert_eq!(args.get("pairs"), Some("all")); // default
+        assert!(args.flag("verbose"));
+        assert!(!args.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let cli = test_cli();
+        let err = cli.parse(&sv(&["run"])).unwrap_err();
+        assert!(err.contains("--method"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let cli = test_cli();
+        let err = cli.parse(&sv(&["run", "--method", "x", "--bogus", "1"])).unwrap_err();
+        assert!(err.contains("bogus"));
+    }
+
+    #[test]
+    fn unknown_command_shows_usage() {
+        let cli = test_cli();
+        let err = cli.parse(&sv(&["frob"])).unwrap_err();
+        assert!(err.contains("unknown command"));
+        assert!(err.contains("commands:"));
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let cli = test_cli();
+        assert!(cli.parse(&sv(&[])).is_err());
+        assert!(cli.parse(&sv(&["--help"])).unwrap_err().contains("commands:"));
+        assert!(cli.parse(&sv(&["run", "--help"])).unwrap_err().contains("options:"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let cli = test_cli();
+        let (_, args) = cli.parse(&sv(&["run", "--method", "m", "a", "b"])).unwrap();
+        assert_eq!(args.positionals(), &["a".to_string(), "b".to_string()]);
+    }
+}

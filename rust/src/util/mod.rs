@@ -1,0 +1,20 @@
+//! Small self-contained substrates that the rest of the crate builds on.
+//!
+//! The build environment is fully offline with a minimal vendored crate
+//! set (`xla`, `anyhow`, `thiserror`, `log`), so the usual ecosystem
+//! helpers (serde, clap, criterion, proptest, rand) are implemented
+//! here from scratch:
+//!
+//! * [`rng`]      — a seedable SplitMix64/xoshiro256** PRNG,
+//! * [`stats`]    — summary statistics (median, percentiles, CI),
+//! * [`json`]     — a JSON value type, parser and pretty-printer,
+//! * [`cli`]      — a tiny declarative command-line parser,
+//! * [`benchkit`] — a criterion-style benchmarking harness,
+//! * [`proptest_lite`] — a property-testing kit with shrinking.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,332 @@
+//! In-repo property-based testing kit (proptest is not in the offline
+//! vendor set).
+//!
+//! Provides seeded generators, a configurable case count, and greedy
+//! shrinking for the built-in strategies.  The API is deliberately
+//! small: a `Strategy<T>` generates values from an [`Rng`] and can
+//! propose smaller candidates for a failing value.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use proteo::util::proptest_lite::*;
+//! check("sum is commutative", usizes(0, 100).pair(usizes(0, 100)), |(a, b)| {
+//!     a + b == b + a
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A value generator + shrinker.
+pub trait Strategy {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values to try when `v` fails; may be empty.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+
+    /// Combine with another strategy into a pair.
+    fn pair<B: Strategy>(self, other: B) -> Pair<Self, B>
+    where
+        Self: Sized,
+    {
+        Pair(self, other)
+    }
+
+    /// Map the generated value (shrinking degrades to none).
+    fn map_gen<U: Clone + std::fmt::Debug, F: Fn(Self::Value) -> U>(
+        self,
+        f: F,
+    ) -> MapGen<Self, F>
+    where
+        Self: Sized,
+    {
+        MapGen(self, f)
+    }
+}
+
+/// Run a property over `default_cases()` random cases; on failure,
+/// greedily shrink and panic with the minimal counterexample.
+pub fn check<S: Strategy>(name: &str, strat: S, prop: impl Fn(S::Value) -> bool) {
+    check_seeded(name, strat, prop, 0xC0FFEE ^ fxhash(name));
+}
+
+/// `check` with an explicit seed (tests that need reproducibility).
+pub fn check_seeded<S: Strategy>(
+    name: &str,
+    strat: S,
+    prop: impl Fn(S::Value) -> bool,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let cases = default_cases();
+    for case in 0..cases {
+        let v = strat.generate(&mut rng);
+        if !prop(v.clone()) {
+            let minimal = shrink_loop(&strat, v, &prop);
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}).\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<S: Strategy>(
+    strat: &S,
+    mut failing: S::Value,
+    prop: &impl Fn(S::Value) -> bool,
+) -> S::Value {
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in strat.shrink(&failing) {
+            if !prop(cand.clone()) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------------
+// Built-in strategies
+// ------------------------------------------------------------------
+
+/// Uniform usize in `[lo, hi]` (inclusive), shrinking toward `lo`.
+pub struct Usizes {
+    lo: usize,
+    hi: usize,
+}
+
+pub fn usizes(lo: usize, hi: usize) -> Usizes {
+    assert!(lo <= hi);
+    Usizes { lo, hi }
+}
+
+impl Strategy for Usizes {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.gen_range(self.lo, self.hi + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in `[lo, hi)`, shrinking toward lo and round numbers.
+pub struct F64s {
+    lo: f64,
+    hi: f64,
+}
+
+pub fn f64s(lo: f64, hi: f64) -> F64s {
+    F64s { lo, hi }
+}
+
+impl Strategy for F64s {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.gen_range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2.0);
+            let r = v.round();
+            if r != *v && r >= self.lo && r < self.hi {
+                out.push(r);
+            }
+        }
+        out
+    }
+}
+
+/// Vec of a base strategy with length in `[min_len, max_len]`,
+/// shrinking by halving the length then shrinking elements.
+pub struct VecOf<S> {
+    elem: S,
+    min_len: usize,
+    max_len: usize,
+}
+
+pub fn vec_of<S: Strategy>(elem: S, min_len: usize, max_len: usize) -> VecOf<S> {
+    assert!(min_len <= max_len);
+    VecOf { elem, min_len, max_len }
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Value> {
+        let len = rng.gen_range(self.min_len, self.max_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        // Try dropping halves / single elements.
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            out.push(minus_last);
+        }
+        // Try shrinking each element (first few positions only).
+        for i in 0..v.len().min(4) {
+            for cand in self.elem.shrink(&v[i]) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Choose uniformly from a fixed set.
+pub struct OneOf<T> {
+    items: Vec<T>,
+}
+
+pub fn one_of<T: Clone + std::fmt::Debug>(items: &[T]) -> OneOf<T> {
+    assert!(!items.is_empty());
+    OneOf { items: items.to_vec() }
+}
+
+impl<T: Clone + std::fmt::Debug> Strategy for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.items[rng.gen_range(0, self.items.len())].clone()
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A, B>(A, B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Map combinator (generation only).
+pub struct MapGen<S, F>(S, F);
+
+impl<S: Strategy, U: Clone + std::fmt::Debug, F: Fn(S::Value) -> U> Strategy for MapGen<S, F> {
+    type Value = U;
+    fn generate(&self, rng: &mut Rng) -> U {
+        (self.1)(self.0.generate(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", usizes(0, 1000).pair(usizes(0, 1000)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            check_seeded("x < 50", usizes(0, 1000), |x| x < 50, 1234);
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrinking should land exactly on the boundary value 50.
+        assert!(err.contains("counterexample: 50"), "got: {err}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_bounds() {
+        let mut rng = Rng::new(1);
+        let strat = vec_of(usizes(5, 9), 2, 6);
+        for _ in 0..200 {
+            let v = strat.generate(&mut rng);
+            assert!((2..=6).contains(&v.len()));
+            assert!(v.iter().all(|&x| (5..=9).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrinks_toward_shorter() {
+        let strat = vec_of(usizes(0, 10), 0, 8);
+        let v = vec![3, 7, 2, 9];
+        let shrunk = strat.shrink(&v);
+        assert!(shrunk.iter().any(|w| w.len() < v.len()));
+    }
+
+    #[test]
+    fn one_of_only_produces_members() {
+        let mut rng = Rng::new(2);
+        let strat = one_of(&[10usize, 20, 30]);
+        for _ in 0..100 {
+            assert!([10, 20, 30].contains(&strat.generate(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn f64_bounds_respected() {
+        let mut rng = Rng::new(3);
+        let strat = f64s(-2.0, 2.0);
+        for _ in 0..500 {
+            let x = strat.generate(&mut rng);
+            assert!((-2.0..2.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn map_gen_applies() {
+        let mut rng = Rng::new(4);
+        let strat = usizes(1, 5).map_gen(|x| x * 10);
+        for _ in 0..50 {
+            let v = strat.generate(&mut rng);
+            assert!(v % 10 == 0 && (10..=50).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Integration: every redistribution version moves real data
+//! bit-for-bit across grow, shrink and multi-structure registries.
+//!
+//! This is the correctness backbone for the whole method × strategy
+//! matrix — the unit tests cover each method in isolation; here the
+//! full `Mam` driver (Merge process management + state machine +
+//! variable-data phase) runs end to end.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use proteo::mam::{
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
+};
+use proteo::netmodel::{NetParams, Topology};
+use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
+
+/// Expected value of element `i` of structure `s` after any number of
+/// redistributions (content must be preserved exactly).
+fn val(s: usize, i: u64) -> f64 {
+    (s * 1_000_000) as f64 + i as f64
+}
+
+/// Run one full reconfiguration over `n_structs` real structures and
+/// verify every continuing rank holds exactly its new block.
+fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_structs: usize) {
+    let totals: Vec<u64> = (0..n_structs).map(|s| 400 + 37 * s as u64).collect();
+    let mut sim = MpiSim::new(Topology::new(2, 8), NetParams::test_simple());
+    let verified = Arc::new(AtomicUsize::new(0));
+    let v2 = verified.clone();
+    let totals2 = totals.clone();
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let mut reg = Registry::new();
+        for (s, &total) in totals2.iter().enumerate() {
+            let b = block_of(total, ns, rank);
+            let kind = if s == 0 { DataKind::Variable } else { DataKind::Constant };
+            reg.register(
+                &format!("S{s}"),
+                kind,
+                total,
+                Payload::real((b.ini..b.end).map(|i| val(s, i)).collect()),
+            );
+        }
+        let decls = reg.decls();
+        let cfg = ReconfigCfg { method, strategy, spawn_cost: 0.01 };
+        let mut mam = Mam::new(reg, cfg.clone());
+        let totals3 = totals2.clone();
+        let v3 = v2.clone();
+        let cfg2 = cfg.clone();
+        let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                let dr = dp.rank(merged);
+                for (s, &total) in totals3.iter().enumerate() {
+                    let b = block_of(total, nd, dr);
+                    let got = dmam.registry.entry(s).local.as_slice().unwrap();
+                    let want: Vec<f64> = (b.ini..b.end).map(|i| val(s, i)).collect();
+                    assert_eq!(got, &want[..], "spawned drain {dr} S{s}");
+                }
+                v3.fetch_add(1, Ordering::SeqCst);
+            });
+        let mut status = mam.reconfigure(&p, WORLD, nd, drain_body);
+        while status == MamStatus::InProgress {
+            p.compute(1e-3);
+            status = mam.checkpoint(&p);
+        }
+        let out = mam.finish(&p, WORLD);
+        if let Some(comm) = out.app_comm {
+            let nr = p.rank(comm);
+            for (s, &total) in totals2.iter().enumerate() {
+                let b = block_of(total, nd, nr);
+                let got = mam.registry.entry(s).local.as_slice().unwrap();
+                let want: Vec<f64> = (b.ini..b.end).map(|i| val(s, i)).collect();
+                assert_eq!(got, &want[..], "rank {nr} S{s} after {ns}->{nd}");
+            }
+            v2.fetch_add(1, Ordering::SeqCst);
+        } else {
+            assert!(rank >= nd);
+        }
+    });
+    sim.run().unwrap_or_else(|e| panic!("{method:?}×{strategy:?} {ns}->{nd}: {e}"));
+    assert_eq!(verified.load(Ordering::SeqCst), nd, "{method:?}×{strategy:?}");
+}
+
+#[test]
+fn all_versions_grow_preserve_data() {
+    for m in Method::all() {
+        for s in Strategy::all() {
+            if is_valid_version(m, s) {
+                verify_roundtrip(3, 9, m, s, 2);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_versions_shrink_preserve_data() {
+    for m in Method::all() {
+        for s in Strategy::all() {
+            if is_valid_version(m, s) {
+                verify_roundtrip(9, 3, m, s, 2);
+            }
+        }
+    }
+}
+
+#[test]
+fn many_structures_with_uneven_sizes() {
+    verify_roundtrip(4, 7, Method::RmaLockall, Strategy::WaitDrains, 5);
+    verify_roundtrip(7, 4, Method::Collective, Strategy::NonBlocking, 5);
+}
+
+#[test]
+fn extreme_ratios() {
+    verify_roundtrip(1, 12, Method::RmaLock, Strategy::WaitDrains, 2);
+    verify_roundtrip(12, 1, Method::Collective, Strategy::WaitDrains, 2);
+    verify_roundtrip(2, 16, Method::Collective, Strategy::Threading, 1);
+    verify_roundtrip(16, 2, Method::RmaLockall, Strategy::Threading, 1);
+}
+
+#[test]
+fn back_to_back_reconfigurations_compose() {
+    // 4 -> 8 -> 2 with real data: the second resize redistributes what
+    // the first one produced.
+    let total = 555u64;
+    let mut sim = MpiSim::new(Topology::new(2, 8), NetParams::test_simple());
+    let done = Arc::new(AtomicUsize::new(0));
+    let d2 = done.clone();
+    sim.launch(4, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let b = block_of(total, 4, rank);
+        let mut reg = Registry::new();
+        reg.register(
+            "A",
+            DataKind::Constant,
+            total,
+            Payload::real((b.ini..b.end).map(|i| i as f64).collect()),
+        );
+        let decls = reg.decls();
+        let cfg = ReconfigCfg {
+            method: Method::RmaLockall,
+            strategy: Strategy::WaitDrains,
+            spawn_cost: 0.01,
+        };
+        let mut mam = Mam::new(reg, cfg.clone());
+        let d3 = d2.clone();
+        let cfg2 = cfg.clone();
+        // Spawned drains (first resize): join, verify, then take part in
+        // the second resize as sources.
+        let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let mut dmam = Mam::drain_join(&dp, merged, 4, 8, &decls, cfg2.clone());
+                // Second resize: 8 -> 2 (shrink; no spawns).
+                let nobody: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+                let mut st = dmam.reconfigure(&dp, merged, 2, nobody);
+                while st == MamStatus::InProgress {
+                    dp.compute(1e-3);
+                    st = dmam.checkpoint(&dp);
+                }
+                let out = dmam.finish(&dp, merged);
+                if let Some(c) = out.app_comm {
+                    let nr = dp.rank(c);
+                    let nb = block_of(total, 2, nr);
+                    let got = dmam.registry.entry(0).local.as_slice().unwrap();
+                    let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                    assert_eq!(got, &want[..]);
+                    d3.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        // First resize: 4 -> 8.
+        let mut status = mam.reconfigure(&p, WORLD, 8, drain_body);
+        while status == MamStatus::InProgress {
+            p.compute(1e-3);
+            status = mam.checkpoint(&p);
+        }
+        let out = mam.finish(&p, WORLD);
+        let comm = out.app_comm.expect("grow keeps all");
+        // Second resize: 8 -> 2.
+        let nobody: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+        let mut st = mam.reconfigure(&p, comm, 2, nobody);
+        while st == MamStatus::InProgress {
+            p.compute(1e-3);
+            st = mam.checkpoint(&p);
+        }
+        let out2 = mam.finish(&p, comm);
+        if let Some(c) = out2.app_comm {
+            let nr = p.rank(c);
+            let nb = block_of(total, 2, nr);
+            let got = mam.registry.entry(0).local.as_slice().unwrap();
+            let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+            assert_eq!(got, &want[..]);
+            d2.fetch_add(1, Ordering::SeqCst);
+        } else {
+            assert!(rank >= 2);
+        }
+    });
+    sim.run().unwrap();
+    assert_eq!(done.load(Ordering::SeqCst), 2, "both final ranks verified");
+}
+
+#[test]
+fn fused_single_window_preserves_data() {
+    // The §VI future-work variant must be exactly as correct.
+    use proteo::mam::{rma, Roles};
+    let totals = [250u64, 97, 41];
+    let (ns, nd) = (5usize, 3usize);
+    let mut sim = MpiSim::new(Topology::new(1, 6), NetParams::test_simple());
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let roles = Roles { ns, nd, rank };
+        let mut reg = Registry::new();
+        for (s, &total) in totals.iter().enumerate() {
+            let b = block_of(total, ns, rank);
+            reg.register(
+                &format!("S{s}"),
+                DataKind::Constant,
+                total,
+                Payload::real((b.ini..b.end).map(|i| val(s, i)).collect()),
+            );
+        }
+        let out = rma::redistribute_blocking_fused(&p, WORLD, &roles, &reg, &[0, 1, 2], true);
+        if roles.is_drain() {
+            for (s, &total) in totals.iter().enumerate() {
+                let b = block_of(total, nd, rank);
+                let got = out[s].as_ref().unwrap().as_slice().unwrap();
+                let want: Vec<f64> = (b.ini..b.end).map(|i| val(s, i)).collect();
+                assert_eq!(got, &want[..], "fused S{s}");
+            }
+        }
+    });
+    sim.run().unwrap();
+}

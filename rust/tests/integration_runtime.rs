@@ -1,0 +1,121 @@
+//! Integration: the PJRT runtime executing the AOT-compiled JAX/Pallas
+//! artifacts, cross-validated against the pure-Rust linalg substrate.
+//!
+//! Requires `make artifacts`; every test skips (with a notice) when the
+//! artifacts have not been built.
+
+use proteo::linalg::{self, EllMatrix};
+use proteo::runtime::{artifacts_available, artifacts_dir, CgRuntime, CgState};
+
+fn runtime_or_skip() -> Option<CgRuntime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(CgRuntime::load(artifacts_dir()).expect("load artifacts"))
+}
+
+#[test]
+fn manifest_describes_default_problem() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = &rt.manifest;
+    assert_eq!(m.n, m.grid * m.grid);
+    assert_eq!(m.nbr * m.br, m.n);
+    assert_eq!(m.k, 3);
+    assert!(m.vmem_bytes_per_step > 0);
+    assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+}
+
+#[test]
+fn spmv_artifact_matches_rust_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = EllMatrix::laplacian_2d(rt.manifest.grid);
+    let x: Vec<f32> = (0..rt.manifest.n).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let y_pjrt = rt.spmv(&a, &x).expect("spmv exec");
+    let y_rust = a.spmv(&x);
+    for (i, (a, b)) in y_pjrt.iter().zip(&y_rust).enumerate() {
+        assert!((a - b).abs() < 1e-3, "elem {i}: pjrt={a} rust={b}");
+    }
+}
+
+#[test]
+fn spmv_artifact_matches_csr_f64_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let grid = rt.manifest.grid;
+    let csr = linalg::laplacian_2d(grid);
+    let ell = EllMatrix::laplacian_2d(grid);
+    let x: Vec<f64> = (0..csr.n).map(|i| ((i as f64) * 0.11).cos()).collect();
+    let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    let mut y64 = vec![0.0; csr.n];
+    linalg::spmv(&csr, &x, &mut y64);
+    let y_pjrt = rt.spmv(&ell, &xf).expect("spmv exec");
+    for (a, b) in y_pjrt.iter().zip(&y64) {
+        assert!((f64::from(*a) - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn cg_step_artifact_matches_rust_cg_step() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let grid = rt.manifest.grid;
+    let csr = linalg::laplacian_2d(grid);
+    let ell = EllMatrix::laplacian_2d(grid);
+    let b: Vec<f64> = (0..csr.n).map(|i| ((i * 7 % 13) as f64) / 13.0).collect();
+    let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+
+    // One step on each side from the same initial state.
+    let st0 = CgState::init(&bf);
+    let st1 = rt.cg_step(&ell, &st0).expect("cg_step exec");
+    let rr0 = linalg::dot(&b, &b);
+    let x0 = vec![0.0; csr.n];
+    let (_, _, _, rr1) = linalg::cg_step(&csr, &x0, &b, &b, rr0);
+    let rel = (f64::from(st1.rr) - rr1).abs() / rr1.max(1e-30);
+    assert!(rel < 1e-3, "rr after 1 step: pjrt={} rust={rr1}", st1.rr);
+}
+
+#[test]
+fn cg_solve_through_pjrt_converges_like_rust_cg() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let grid = rt.manifest.grid;
+    let csr = linalg::laplacian_2d(grid);
+    let ell = EllMatrix::laplacian_2d(grid);
+    let b: Vec<f64> = (0..csr.n).map(|i| 1.0 + ((i % 5) as f64) * 0.1).collect();
+    let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+
+    let (st, history) = rt.cg_solve(&ell, &bf, 1e-5, 400).expect("cg solve");
+    assert!(
+        *history.last().unwrap() < 1e-5,
+        "PJRT CG did not converge: {:?}",
+        history.last()
+    );
+
+    let mut x = vec![0.0; csr.n];
+    let trace = linalg::cg(&csr, &b, &mut x, 1e-5, 400);
+    assert!(trace.converged);
+    // Iteration counts agree within f32-vs-f64 slack.
+    let pjrt_iters = history.len() as i64 - 1;
+    let rust_iters = trace.iterations as i64;
+    assert!(
+        (pjrt_iters - rust_iters).abs() <= rust_iters / 4 + 8,
+        "iteration counts diverge: pjrt={pjrt_iters} rust={rust_iters}"
+    );
+    // And the PJRT solution really solves the f64 system.
+    let xf: Vec<f64> = st.x.iter().map(|&v| f64::from(v)).collect();
+    let mut ax = vec![0.0; csr.n];
+    linalg::spmv(&csr, &xf, &mut ax);
+    let res: f64 = ax
+        .iter()
+        .zip(&b)
+        .map(|(a, bb)| (a - bb) * (a - bb))
+        .sum::<f64>()
+        .sqrt();
+    assert!(res / linalg::norm2(&b) < 1e-3, "residual {res}");
+}
+
+#[test]
+fn wrong_shape_matrix_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let wrong = EllMatrix::laplacian_2d(rt.manifest.grid / 2);
+    let x = vec![0.0f32; rt.manifest.n];
+    assert!(rt.spmv(&wrong, &x).is_err());
+}

@@ -1,0 +1,245 @@
+//! Property tests over the redistribution machinery: for *random*
+//! (NS, ND, total, method, strategy) the full reconfiguration must be a
+//! content-preserving re-partition — no element lost, duplicated,
+//! reordered or altered — and virtual-mode runs must follow the exact
+//! same control flow (same collective counts) as real-mode runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use proteo::mam::{
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
+};
+use proteo::netmodel::{NetParams, Topology};
+use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
+use proteo::util::proptest_lite::{check_seeded, one_of, usizes, Strategy as PStrategy};
+
+/// Run one reconfiguration, collecting every drain's final block into a
+/// global vector; returns (reassembled, events).
+fn run_and_collect(
+    ns: usize,
+    nd: usize,
+    total: u64,
+    method: Method,
+    strategy: Strategy,
+    real: bool,
+) -> (Option<Vec<f64>>, u64) {
+    let collected: Arc<Mutex<Vec<Option<Vec<f64>>>>> = Arc::new(Mutex::new(vec![None; nd]));
+    let c2 = collected.clone();
+    let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+    let drains_done = Arc::new(AtomicUsize::new(0));
+    let dd = drains_done.clone();
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let b = block_of(total, ns, rank);
+        let local = if real {
+            Payload::real((b.ini..b.end).map(|i| (i as f64) * 1.5 - 3.0).collect())
+        } else {
+            Payload::virt(b.len())
+        };
+        let mut reg = Registry::new();
+        reg.register("A", DataKind::Constant, total, local);
+        let decls = reg.decls();
+        let cfg = ReconfigCfg { method, strategy, spawn_cost: 0.001 };
+        let mut mam = Mam::new(reg, cfg.clone());
+        let c3 = c2.clone();
+        let dd2 = dd.clone();
+        let cfg2 = cfg.clone();
+        let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                let dr = dp.rank(merged);
+                let e = dmam.registry.entry(0);
+                c3.lock().unwrap()[dr] = Some(
+                    e.local
+                        .as_slice()
+                        .map(|s| s.to_vec())
+                        .unwrap_or_else(|| vec![f64::NAN; e.local.elems() as usize]),
+                );
+                dd2.fetch_add(1, Ordering::SeqCst);
+            });
+        let mut status = mam.reconfigure(&p, WORLD, nd, body);
+        while status == MamStatus::InProgress {
+            p.compute(1e-4);
+            status = mam.checkpoint(&p);
+        }
+        let out = mam.finish(&p, WORLD);
+        if let Some(comm) = out.app_comm {
+            let nr = p.rank(comm);
+            let e = mam.registry.entry(0);
+            c2.lock().unwrap()[nr] = Some(
+                e.local
+                    .as_slice()
+                    .map(|s| s.to_vec())
+                    .unwrap_or_else(|| vec![f64::NAN; e.local.elems() as usize]),
+            );
+            dd.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    sim.run().expect("simulation");
+    let events = {
+        // events metric recorded by the sim driver
+        drains_done.load(Ordering::SeqCst) as u64
+    };
+    let shards = collected.lock().unwrap();
+    if shards.iter().any(|s| s.is_none()) {
+        return (None, events);
+    }
+    let mut out = Vec::with_capacity(total as usize);
+    for s in shards.iter() {
+        out.extend_from_slice(s.as_ref().unwrap());
+    }
+    (Some(out), events)
+}
+
+fn methods() -> Vec<(Method, Strategy)> {
+    let mut v = Vec::new();
+    for m in Method::all() {
+        for s in Strategy::all() {
+            if is_valid_version(m, s) {
+                v.push((m, s));
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn prop_redistribution_is_identity_on_contents() {
+    let versions = methods();
+    check_seeded(
+        "redistribution == content-preserving repartition",
+        usizes(1, 10)
+            .pair(usizes(1, 10))
+            .pair(usizes(0, 2_000))
+            .pair(one_of(&versions)),
+        |(((ns, nd), total), (m, s))| {
+            if ns == nd {
+                return true; // resize to the same size is rejected by Mam
+            }
+            let total = total as u64;
+            let (got, _) = run_and_collect(ns, nd, total, m, s, true);
+            let Some(got) = got else { return false };
+            if got.len() as u64 != total {
+                return false;
+            }
+            got.iter()
+                .enumerate()
+                .all(|(i, v)| *v == (i as f64) * 1.5 - 3.0)
+        },
+        0xDEC0DE,
+    );
+}
+
+#[test]
+fn prop_block_sizes_after_resize_match_block_of() {
+    let versions = methods();
+    check_seeded(
+        "per-drain block length == block_of(total, nd, r)",
+        usizes(1, 12)
+            .pair(usizes(1, 12))
+            .pair(usizes(1, 5_000))
+            .pair(one_of(&versions)),
+        |(((ns, nd), total), (m, s))| {
+            if ns == nd {
+                return true;
+            }
+            let total = total as u64;
+            let collected: Arc<Mutex<Vec<Option<u64>>>> = Arc::new(Mutex::new(vec![None; nd]));
+            let c2 = collected.clone();
+            let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+            sim.launch(ns, move |p: MpiProc| {
+                let rank = p.rank(WORLD);
+                let b = block_of(total, ns, rank);
+                let mut reg = Registry::new();
+                reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+                let decls = reg.decls();
+                let cfg = ReconfigCfg { method: m, strategy: s, spawn_cost: 0.001 };
+                let mut mam = Mam::new(reg, cfg.clone());
+                let c3 = c2.clone();
+                let cfg2 = cfg.clone();
+                let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                    Arc::new(move |dp: MpiProc, merged: CommId| {
+                        let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                        c3.lock().unwrap()[dp.rank(merged)] =
+                            Some(dmam.registry.entry(0).local.elems());
+                    });
+                let mut status = mam.reconfigure(&p, WORLD, nd, body);
+                while status == MamStatus::InProgress {
+                    p.compute(1e-4);
+                    status = mam.checkpoint(&p);
+                }
+                let out = mam.finish(&p, WORLD);
+                if let Some(comm) = out.app_comm {
+                    c2.lock().unwrap()[p.rank(comm)] =
+                        Some(mam.registry.entry(0).local.elems());
+                }
+            });
+            sim.run().expect("sim");
+            let c = collected.lock().unwrap();
+            (0..nd).all(|r| c[r] == Some(block_of(total, nd, r).len()))
+        },
+        0xBEEF,
+    );
+}
+
+#[test]
+fn prop_virtual_and_real_modes_share_control_flow() {
+    // Virtual payloads must take the same schedule (identical virtual
+    // end times) as real payloads of the same sizes — DESIGN.md §1's
+    // "control flow is identical in both modes".
+    let versions = methods();
+    check_seeded(
+        "virtual mode ≡ real mode timing",
+        usizes(1, 8)
+            .pair(usizes(1, 8))
+            .pair(usizes(1, 3_000))
+            .pair(one_of(&versions)),
+        |(((ns, nd), total), (m, s))| {
+            if ns == nd {
+                return true;
+            }
+            let total = total as u64;
+            fn end_time(
+                ns: usize,
+                nd: usize,
+                total: u64,
+                m: Method,
+                s: Strategy,
+                real: bool,
+            ) -> f64 {
+                let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+                sim.launch(ns, move |p: MpiProc| {
+                    let rank = p.rank(WORLD);
+                    let b = block_of(total, ns, rank);
+                    let local = if real {
+                        Payload::real(vec![0.25; b.len() as usize])
+                    } else {
+                        Payload::virt(b.len())
+                    };
+                    let mut reg = Registry::new();
+                    reg.register("A", DataKind::Constant, total, local);
+                    let decls = reg.decls();
+                    let cfg = ReconfigCfg { method: m, strategy: s, spawn_cost: 0.001 };
+                    let mut mam = Mam::new(reg, cfg.clone());
+                    let cfg2 = cfg.clone();
+                    let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                        Arc::new(move |dp: MpiProc, merged: CommId| {
+                            let _ = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                        });
+                    let mut status = mam.reconfigure(&p, WORLD, nd, body);
+                    while status == MamStatus::InProgress {
+                        p.compute(1e-4);
+                        status = mam.checkpoint(&p);
+                    }
+                    let _ = mam.finish(&p, WORLD);
+                });
+                sim.run().expect("sim")
+            }
+            let tv = end_time(ns, nd, total, m, s, false);
+            let tr = end_time(ns, nd, total, m, s, true);
+            (tv - tr).abs() < 1e-9
+        },
+        0xFEED,
+    );
+}
