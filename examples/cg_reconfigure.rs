@@ -18,9 +18,11 @@
 use std::sync::{Arc, Mutex};
 
 use proteo::linalg::{self, EllMatrix};
-use proteo::mam::{block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy};
+use proteo::mam::{
+    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy, WinPoolPolicy,
+};
 use proteo::netmodel::{NetParams, Topology};
-use proteo::runtime::{artifacts_available, artifacts_dir, CgRuntime, CgState};
+use proteo::runtime::{artifacts_dir, runtime_available, CgRuntime, CgState};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
 
 const NS: usize = 4;
@@ -28,8 +30,8 @@ const ND: usize = 8;
 const RECONF_AT_ITER: usize = 12;
 
 fn main() {
-    if !artifacts_available() {
-        eprintln!("artifacts not built — run `make artifacts` first");
+    if !runtime_available() {
+        eprintln!("PJRT runtime unavailable — run `make artifacts` and build with `--features pjrt`");
         std::process::exit(2);
     }
     let rt = CgRuntime::load(artifacts_dir()).expect("load artifacts");
@@ -79,10 +81,13 @@ fn main() {
         reg.register("x", DataKind::Variable, totals.2,
             Payload::real(slice_of(&x_arc, totals.2, NS, rank)));
         let decls = reg.decls();
+        // Window pool on: the real-data end-to-end path exercises the
+        // §VI warm-acquire machinery (bit-exactness is asserted below).
         let cfg = ReconfigCfg {
             method: Method::RmaLockall,
             strategy: Strategy::WaitDrains,
             spawn_cost: 0.1,
+            win_pool: WinPoolPolicy::on(),
         };
         let mut mam = Mam::new(reg, cfg.clone());
 

@@ -10,7 +10,9 @@
 
 use std::sync::Arc;
 
-use proteo::mam::{block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy};
+use proteo::mam::{
+    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy, WinPoolPolicy,
+};
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
 
@@ -34,6 +36,7 @@ fn main() {
             method: Method::Collective,
             strategy: Strategy::WaitDrains,
             spawn_cost: 0.05,
+            win_pool: WinPoolPolicy::off(),
         };
         let mut mam = Mam::new(reg, cfg.clone());
 

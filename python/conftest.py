@@ -1,0 +1,8 @@
+"""Make `from compile import ...` resolve regardless of the pytest
+invocation directory (`python -m pytest python/tests` from the repo
+root, or `pytest tests` from `python/`)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

@@ -32,15 +32,22 @@ def test_lowered_computation_executes_like_eager():
     the Rust side (`rust/tests/integration_runtime.rs`), which is the
     real consumer.
     """
-    from jax._src.lib import _jax
-
     grid = 8
     lowered = jax.jit(model.cg_step).lower(
         *model.shapes(grid, 3, grid, grid, grid * grid)
     )
     client = jax.devices("cpu")[0].client
-    dl = _jax.DeviceList(tuple(jax.devices("cpu")))
-    exe = client.compile_and_load(str(lowered.compiler_ir("stablehlo")), dl)
+    ir = str(lowered.compiler_ir("stablehlo"))
+    try:
+        # jax >= 0.6: compile_and_load wants an explicit device list.
+        from jax._src.lib import _jax
+
+        exe = client.compile_and_load(ir, _jax.DeviceList(tuple(jax.devices("cpu"))))
+    except (ImportError, AttributeError):
+        # jax 0.4/0.5: Client.compile takes the MLIR module directly.
+        # (AttributeError covers mid-migration versions where the _jax
+        # module exists but compile_and_load does not.)
+        exe = client.compile(ir)
     data, idx = ref.laplacian_2d_block_ell(grid)
     b = np.random.default_rng(0).standard_normal((grid * grid,)).astype(np.float32)
     state = model.cg_state_init(jnp.asarray(data), jnp.asarray(idx), jnp.asarray(b))

@@ -14,7 +14,7 @@ use proteo::linalg::EllMatrix;
 use proteo::mam::{drain_plan, source_plan, Method, Strategy};
 use proteo::netmodel::{CostModel, NetParams, Placement, Topology, TransferClass};
 use proteo::proteo::{run_once, RunSpec};
-use proteo::runtime::{artifacts_available, artifacts_dir, CgRuntime, CgState};
+use proteo::runtime::{artifacts_dir, runtime_available, CgRuntime, CgState};
 use proteo::simcluster::Engine;
 use proteo::simmpi::{MpiSim, Payload, WORLD};
 use proteo::util::benchkit::Bench;
@@ -71,6 +71,17 @@ fn simmpi_benches(b: &mut Bench) {
         });
         s.run().unwrap();
     });
+    b.bench("simmpi: win pool cold+warm acquire/release @160 ranks", || {
+        let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
+        s.launch(160, |p| {
+            let w1 = p.win_acquire(WORLD, Payload::virt(1_000_000), 0xA);
+            p.win_release(w1);
+            // Second acquire rides the registration cache (warm).
+            let w2 = p.win_acquire(WORLD, Payload::virt(1_000_000), 0xA);
+            p.win_release(w2);
+        });
+        s.run().unwrap();
+    });
     b.bench("costmodel: 100k transfers", || {
         let topo = Topology::sarteco25();
         let pl = Placement::cyclic(&topo, 160);
@@ -113,8 +124,8 @@ fn mam_benches(b: &mut Bench) {
 }
 
 fn runtime_benches(b: &mut Bench) {
-    if !artifacts_available() {
-        eprintln!("runtime benches skipped: run `make artifacts`");
+    if !runtime_available() {
+        eprintln!("runtime benches skipped: need `make artifacts` and `--features pjrt`");
         return;
     }
     let rt = CgRuntime::load(artifacts_dir()).expect("artifacts");
@@ -150,4 +161,6 @@ fn main() {
     };
     println!("{}", ablation::single_window(&opts).render());
     println!("{}", ablation::registration_sweep(&opts, 20, 160).render());
+    // §VI window pool: cold vs warm reconfiguration latency head-to-head.
+    println!("{}", ablation::win_pool(&opts).render());
 }

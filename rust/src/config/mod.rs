@@ -13,6 +13,7 @@
 //!   "pairs": [[20, 160], [160, 20]],
 //!   "reps": 5,
 //!   "scale": 10,
+//!   "win_pool": "on",
 //!   "net": { "beta_register_gbps": 2.0, "eager_threshold": 65536 },
 //!   "sam": { "flops_per_core": 2.0e9, "jitter": 0.02 }
 //! }
@@ -21,7 +22,7 @@
 //! The CLI (`proteo run --config file.json`) and the experiment
 //! harnesses consume [`ExperimentConfig`].
 
-use crate::mam::{Method, Strategy};
+use crate::mam::{Method, Strategy, WinPoolPolicy};
 use crate::proteo::RunSpec;
 use crate::sam::SamConfig;
 use crate::util::json::Json;
@@ -35,6 +36,8 @@ pub struct ExperimentConfig {
     pub reps: usize,
     pub scale: u64,
     pub seed: u64,
+    /// Persistent RMA window pool (`"win_pool": "on"` / `true`, §VI).
+    pub win_pool: WinPoolPolicy,
     pub base: RunSpec,
 }
 
@@ -48,6 +51,7 @@ impl ExperimentConfig {
             reps: 3,
             scale: 1,
             seed: 0xC0FFEE,
+            win_pool: WinPoolPolicy::off(),
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
     }
@@ -69,6 +73,7 @@ impl ExperimentConfig {
         spec.method = self.method;
         spec.strategy = self.strategy;
         spec.seed = self.seed;
+        spec.win_pool = self.win_pool;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
             spec.sam.colind_elems /= self.scale;
@@ -104,6 +109,21 @@ impl ExperimentConfig {
         }
         if let Some(seed) = doc.get("seed").and_then(|v| v.as_u64()) {
             cfg.seed = seed;
+        }
+        if let Some(wp) = doc.get("win_pool") {
+            cfg.win_pool = match (wp.as_bool(), wp.as_str()) {
+                (Some(b), _) => {
+                    if b {
+                        WinPoolPolicy::on()
+                    } else {
+                        WinPoolPolicy::off()
+                    }
+                }
+                (_, Some(s)) => {
+                    WinPoolPolicy::parse(s).ok_or_else(|| format!("bad win_pool '{s}'"))?
+                }
+                _ => return Err("win_pool must be a bool or \"on\"/\"off\"".into()),
+            };
         }
         if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
             cfg.pairs = pairs
@@ -171,6 +191,7 @@ impl ExperimentConfig {
             ("reps", Json::num(self.reps as f64)),
             ("scale", Json::num(self.scale as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("win_pool", Json::str(self.win_pool.label())),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
     }
@@ -275,6 +296,30 @@ mod tests {
         assert_eq!(spec.ns, 20);
         assert_eq!(spec.nd, 40);
         assert_eq!(spec.sam.matrix_elems, SamConfig::sarteco25().matrix_elems / 100);
+    }
+
+    #[test]
+    fn win_pool_toggle_parses_and_propagates() {
+        // Default: off (the paper's cold path).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert_eq!(cfg.win_pool, WinPoolPolicy::off());
+        assert!(!cfg.spec_for(20, 40).win_pool.enabled);
+        // String and bool spellings.
+        for src in [r#"{"win_pool": "on"}"#, r#"{"win_pool": true}"#] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.win_pool, WinPoolPolicy::on(), "{src}");
+            assert!(cfg.spec_for(20, 40).win_pool.enabled);
+        }
+        let cfg = ExperimentConfig::from_str(r#"{"win_pool": "off"}"#).unwrap();
+        assert_eq!(cfg.win_pool, WinPoolPolicy::off());
+        assert!(ExperimentConfig::from_str(r#"{"win_pool": "sideways"}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"win_pool": 3}"#).is_err());
+        // Provenance includes the toggle.
+        let cfg = ExperimentConfig::from_str(r#"{"win_pool": "on"}"#).unwrap();
+        assert_eq!(
+            cfg.to_json().get_path("win_pool").unwrap().as_str(),
+            Some("on")
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use crate::mam::{block_of, rma, DataKind, Method, Registry, Roles, Strategy};
+use crate::mam::{block_of, rma, DataKind, Method, Registry, Roles, Strategy, WinPoolPolicy};
 use crate::netmodel::{NetParams, Topology};
 use crate::proteo::run_median;
 use crate::sam::{Sam, SamConfig};
@@ -64,7 +64,15 @@ fn time_rma_blocking(
         let _ = if fused {
             rma::redistribute_blocking_fused(&p, WORLD, &roles, &reg, &which, lockall)
         } else {
-            rma::redistribute_blocking(&p, WORLD, &roles, &reg, &which, lockall)
+            rma::redistribute_blocking(
+                &p,
+                WORLD,
+                &roles,
+                &reg,
+                &which,
+                lockall,
+                WinPoolPolicy::off(),
+            )
         };
         let dt = p.now() - t0;
         p.metrics(|m| m.mark_max("ablation.redist", dt));
@@ -72,6 +80,82 @@ fn time_rma_blocking(
     sim.run().expect("ablation sim failed");
     let w = world.lock().unwrap();
     w.metrics.mark_at("ablation.redist").unwrap_or(f64::NAN)
+}
+
+/// Run the same blocking RMA-Lockall redistribution `passes` times in
+/// one world under `policy`; returns each pass's redistribution time
+/// (max over ranks).  With the pool on, the first pass registers cold
+/// and later ones ride the pool — the §VI cold/warm comparison.
+fn time_rma_passes(
+    ns: usize,
+    nd: usize,
+    sam: &SamConfig,
+    net: &NetParams,
+    policy: WinPoolPolicy,
+    passes: u32,
+) -> Vec<f64> {
+    let n = ns.max(nd);
+    let topo = Topology::new_cyclic(n.div_ceil(20).max(1), 20);
+    let mut sim = MpiSim::new(topo, net.clone());
+    let world = sim.world();
+    let sam = sam.clone();
+    sim.launch(n, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let roles = Roles { ns, nd, rank };
+        let mut reg = Registry::new();
+        let s = Sam::new(sam.clone(), 7, p.gpid());
+        if roles.is_source() {
+            s.register_data(&mut reg, ns, rank);
+        } else {
+            for (name, total) in [
+                ("A_vals", sam.matrix_elems),
+                ("A_cols", sam.colind_elems),
+                ("A_rowptr", sam.rowptr_elems),
+            ] {
+                reg.register(name, DataKind::Constant, total, crate::simmpi::Payload::virt(0));
+            }
+            reg.register(
+                "x",
+                DataKind::Variable,
+                sam.vector_elems,
+                crate::simmpi::Payload::virt(0),
+            );
+        }
+        let which = reg.of_kind(DataKind::Constant);
+        for pass in 1..=passes {
+            let t0 = p.now();
+            let _ = rma::redistribute_blocking(&p, WORLD, &roles, &reg, &which, true, policy);
+            let dt = p.now() - t0;
+            p.metrics(|m| m.mark_max(&format!("ablation.redist{pass}"), dt));
+        }
+    });
+    sim.run().expect("win-pool ablation sim failed");
+    let w = world.lock().unwrap();
+    (1..=passes)
+        .map(|pass| w.metrics.mark_at(&format!("ablation.redist{pass}")).unwrap_or(f64::NAN))
+        .collect()
+}
+
+/// §VI ablation: the persistent window pool.  Per pair: the no-pool
+/// redistribution time (seed behaviour), the pool's first (cold)
+/// reconfiguration, and the repeat (warm) one — head-to-head.  The
+/// cold column must match no-pool on the registration-dominated
+/// critical path; the warm column is where "RMA loses on init cost"
+/// becomes "RMA wins after the first resize".
+pub fn win_pool(opts: &FigOptions) -> FigureTable {
+    let mut t = FigureTable::new(
+        "Ablation (§VI): persistent window pool — cold vs warm, blocking RMA-Lockall",
+        "NS->ND",
+        &["no-pool", "pool-cold", "pool-warm"],
+        0,
+    );
+    for (ns, nd) in opts.pairs() {
+        let spec = opts.spec(ns, nd, Method::RmaLockall, Strategy::Blocking);
+        let no_pool = time_rma_passes(ns, nd, &spec.sam, &spec.net, WinPoolPolicy::off(), 1)[0];
+        let pooled = time_rma_passes(ns, nd, &spec.sam, &spec.net, WinPoolPolicy::on(), 2);
+        t.row(&format!("{ns}->{nd}"), vec![no_pool, pooled[0], pooled[1]]);
+    }
+    t
 }
 
 /// §VI ablation: per-structure windows (the paper's design) vs one
@@ -178,6 +262,40 @@ mod tests {
         assert!(a.is_finite() && b.is_finite());
         // One collective create+free instead of three: must not lose.
         assert!(b <= a + 1e-9, "fused={b} per-struct={a}");
+    }
+
+    #[test]
+    fn win_pool_warm_beats_cold() {
+        let opts = FigOptions { pairs: vec![(8, 4)], scale: 10_000, ..FigOptions::quick() };
+        let t = win_pool(&opts);
+        let (no_pool, cold, warm) = (t.value(0, 0), t.value(0, 1), t.value(0, 2));
+        assert!(no_pool.is_finite() && cold.is_finite() && warm.is_finite());
+        // The §VI acceptance bar: warm-pool reconfiguration strictly
+        // cheaper than the cold Win_create path.
+        assert!(warm < cold, "warm={warm} cold={cold}");
+        assert!(warm < no_pool, "warm={warm} no_pool={no_pool}");
+        // Cold acquires charge exactly the seed registration cost; the
+        // pool only skips the deregistration on release, so the cold
+        // pass can never be slower than no-pool.
+        assert!(cold <= no_pool + 1e-12, "cold={cold} no_pool={no_pool}");
+    }
+
+    #[test]
+    fn win_pool_off_is_deterministic_and_stateless() {
+        // Pool off = the seed path: repeating the whole experiment in a
+        // fresh world reproduces both pass times bit-for-bit — no pool
+        // state can leak into the cold path.
+        let opts = FigOptions { pairs: vec![(6, 3)], scale: 10_000, ..FigOptions::quick() };
+        let spec = opts.spec(6, 3, Method::RmaLockall, Strategy::Blocking);
+        let off1 = time_rma_passes(6, 3, &spec.sam, &spec.net, WinPoolPolicy::off(), 2);
+        let off2 = time_rma_passes(6, 3, &spec.sam, &spec.net, WinPoolPolicy::off(), 2);
+        assert_eq!(off1[0].to_bits(), off2[0].to_bits(), "{off1:?} vs {off2:?}");
+        assert_eq!(off1[1].to_bits(), off2[1].to_bits(), "{off1:?} vs {off2:?}");
+        // And the pool-on first pass pays the same cold registration:
+        // its redistribution may only get cheaper (release-side), never
+        // slower.
+        let on = time_rma_passes(6, 3, &spec.sam, &spec.net, WinPoolPolicy::on(), 1);
+        assert!(on[0] <= off1[0] + 1e-12, "pool-cold={} no-pool={}", on[0], off1[0]);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::process::ExitCode;
 use proteo::config::ExperimentConfig;
 use proteo::experiments::{self, ablation, FigOptions};
 use proteo::linalg::EllMatrix;
-use proteo::mam::{Method, Strategy};
+use proteo::mam::{Method, Strategy, WinPoolPolicy};
 use proteo::netmodel::NetParams;
 use proteo::proteo::{run_median, RunSpec};
 use proteo::runtime::{artifacts_dir, CgRuntime};
@@ -42,13 +42,17 @@ fn cli() -> Cli {
                 .opt("reps", "3", "repetitions (median reported)")
                 .opt("scale", "1", "problem-size divisor")
                 .opt("seed", "12648430", "base RNG seed")
+                .opt("win-pool", "off", "persistent RMA window pool (§VI): on | off")
                 .flag("json", "emit the result as JSON"),
-            Command::new("ablation", "ablations: single-window | register-sweep | eager-sweep")
-                .opt("ns", "20", "source ranks (register-sweep)")
-                .opt("nd", "160", "drain ranks (register-sweep)")
-                .opt("reps", "1", "repetitions")
-                .opt("scale", "1", "problem-size divisor")
-                .flag("quick", "CI-sized sweep"),
+            Command::new(
+                "ablation",
+                "ablations: single-window | register-sweep | eager-sweep | win-pool",
+            )
+            .opt("ns", "20", "source ranks (register-sweep)")
+            .opt("nd", "160", "drain ranks (register-sweep)")
+            .opt("reps", "1", "repetitions")
+            .opt("scale", "1", "problem-size divisor")
+            .flag("quick", "CI-sized sweep"),
             Command::new("cg", "run the AOT JAX/Pallas CG through PJRT")
                 .opt("iters", "200", "max iterations")
                 .opt("tol", "1e-5", "relative residual target")
@@ -137,6 +141,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             return Err("NB is undefined for RMA methods (§V-A); use WD".into());
         }
         let mut spec = RunSpec::sarteco25(ns, nd, method, strategy);
+        spec.win_pool = args
+            .get("win-pool")
+            .and_then(WinPoolPolicy::parse)
+            .ok_or("bad --win-pool (on | off)")?;
         if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
             spec.seed = seed;
         }
@@ -204,6 +212,7 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
             let nd = args.get_usize("nd").ok_or("bad --nd")?;
             println!("{}", ablation::eager_sweep(&opts, ns, nd).render());
         }
+        "win-pool" => println!("{}", ablation::win_pool(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
     }
     Ok(())

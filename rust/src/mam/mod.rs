@@ -25,6 +25,8 @@
 //! * [`collective`] — the COL method over `MPI_(I)Alltoallv`,
 //! * [`rma`]       — RMA-Lock (Alg. 2), RMA-Lockall (Alg. 3) and the
 //!   split `Init_RMA`/`Complete_RMA` used for background redistribution,
+//! * [`winpool`]   — the persistent window pool (§VI): entries pin
+//!   their windows so repeat resizes skip `Win_create` registration,
 //! * [`reconfig`]  — the reconfiguration driver tying it together.
 
 pub mod blockdist;
@@ -32,10 +34,12 @@ pub mod collective;
 pub mod reconfig;
 pub mod registry;
 pub mod rma;
+pub mod winpool;
 
 pub use blockdist::{block_of, drain_plan, source_plan, Block, DrainPlan, SourcePlan};
 pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
 pub use registry::{DataDecl, DataEntry, DataKind, Registry};
+pub use winpool::WinPoolPolicy;
 
 /// Data-redistribution method (§IV, §V-A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

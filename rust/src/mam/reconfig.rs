@@ -34,6 +34,7 @@ use crate::simmpi::{CommId, MpiProc, Payload, ReqId};
 use super::collective as col;
 use super::registry::{DataDecl, DataKind, Registry};
 use super::rma::{self, RmaInit};
+use super::winpool::{self, WinPoolPolicy};
 use super::{Method, Strategy};
 
 /// Rank roles during a reconfiguration (§I stage 2).
@@ -78,6 +79,10 @@ pub struct ReconfigCfg {
     pub strategy: Strategy,
     /// Modeled `MPI_Comm_spawn` duration (process launch, PMI exchange).
     pub spawn_cost: f64,
+    /// Persistent window pool (§VI): registry entries pin their RMA
+    /// windows so later resizes acquire them warm.  Off = the paper's
+    /// cold `Win_create` path (seed behaviour).
+    pub win_pool: WinPoolPolicy,
 }
 
 impl Default for ReconfigCfg {
@@ -86,6 +91,7 @@ impl Default for ReconfigCfg {
             method: Method::Collective,
             strategy: Strategy::Blocking,
             spawn_cost: 0.25,
+            win_pool: WinPoolPolicy::off(),
         }
     }
 }
@@ -236,7 +242,7 @@ impl Mam {
             (Method::Collective, Strategy::Blocking) => {
                 let locals =
                     col::redistribute_blocking(proc, merged, roles, &self.registry, which);
-                self.apply_locals(which, locals, roles);
+                self.apply_locals(proc, which, locals, roles);
                 State::Done
             }
             (m, Strategy::Blocking) => {
@@ -248,8 +254,9 @@ impl Mam {
                     &self.registry,
                     which,
                     lockall,
+                    self.cfg.win_pool,
                 );
-                self.apply_locals(which, locals, roles);
+                self.apply_locals(proc, which, locals, roles);
                 State::Done
             }
             // -------------------------------------------- non-blocking
@@ -267,7 +274,15 @@ impl Mam {
             }
             (m, Strategy::WaitDrains) => {
                 let lockall = m == Method::RmaLockall;
-                let init = rma::init_rma(proc, merged, roles, &self.registry, which, lockall);
+                let init = rma::init_rma(
+                    proc,
+                    merged,
+                    roles,
+                    &self.registry,
+                    which,
+                    lockall,
+                    self.cfg.win_pool,
+                );
                 // Source-only ranks have no reads: they notify the
                 // others right away (Fig. 1) and keep computing.
                 let barrier = if !roles.is_drain() {
@@ -285,16 +300,17 @@ impl Mam {
                 let reg = self.registry.clone();
                 let roles2 = *roles;
                 let which2 = which.to_vec();
+                let pool = self.cfg.win_pool;
                 proc.spawn_aux(move |aux| {
                     let locals = match m {
                         Method::Collective => {
                             col::redistribute_blocking(&aux, merged, &roles2, &reg, &which2)
                         }
                         Method::RmaLock => rma::redistribute_blocking(
-                            &aux, merged, &roles2, &reg, &which2, false,
+                            &aux, merged, &roles2, &reg, &which2, false, pool,
                         ),
                         Method::RmaLockall => rma::redistribute_blocking(
-                            &aux, merged, &roles2, &reg, &which2, true,
+                            &aux, merged, &roles2, &reg, &which2, true, pool,
                         ),
                     };
                     *s2.lock().unwrap() = Some(locals);
@@ -386,7 +402,7 @@ impl Mam {
         if done {
             if let Some(locals) = rc.new_locals.take() {
                 let roles = rc.roles;
-                self.apply_locals(&which, locals, &roles);
+                self.apply_locals(proc, &which, locals, &roles);
             }
             Self::record_done(proc);
             MamStatus::Completed
@@ -423,7 +439,7 @@ impl Mam {
                     &self.registry,
                     &variable,
                 );
-                self.apply_locals(&variable, locals, &roles);
+                self.apply_locals(proc, &variable, locals, &roles);
             }
         }
         proc.metrics(|m| m.mark_max("mam.reconf_end", proc.now()));
@@ -447,13 +463,27 @@ impl Mam {
     }
 
     /// Install redistributed payloads into the registry (drain side).
-    /// `locals` is parallel to the `which` index list.
-    fn apply_locals(&mut self, which: &[usize], locals: Vec<Option<Payload>>, roles: &Roles) {
+    /// `locals` is parallel to the `which` index list.  With the window
+    /// pool on, each installed block is *pre-pinned* (register-on-
+    /// receive, §VI): the registration happens here — local time, off
+    /// the collective critical path — so the next resize's window
+    /// acquires are warm on every rank.
+    fn apply_locals(
+        &mut self,
+        proc: &MpiProc,
+        which: &[usize],
+        locals: Vec<Option<Payload>>,
+        roles: &Roles,
+    ) {
         assert_eq!(locals.len(), which.len());
         for (&i, l) in which.iter().zip(locals) {
             if let Some(p) = l {
                 debug_assert!(roles.is_drain());
                 self.registry.entry_mut(i).local = p;
+                if self.cfg.win_pool.enabled {
+                    let e = self.registry.entry(i);
+                    proc.pin_buffer(winpool::pin_token(&e.name), e.local.bytes());
+                }
             }
         }
     }
@@ -493,6 +523,7 @@ impl Mam {
                 &mam.registry,
                 &which,
                 m == Method::RmaLockall,
+                mam.cfg.win_pool,
             ),
             (Method::Collective, Strategy::NonBlocking) => {
                 let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
@@ -518,6 +549,7 @@ impl Mam {
                     &mam.registry,
                     &which,
                     m == Method::RmaLockall,
+                    mam.cfg.win_pool,
                 );
                 proc.req_waitall(&init.reqs);
                 rma::close_epochs(proc, &init);
@@ -528,7 +560,7 @@ impl Mam {
             }
             (_, Strategy::NonBlocking) => unreachable!("validated at reconfigure()"),
         };
-        mam.apply_locals(&which, locals, &roles);
+        mam.apply_locals(proc, &which, locals, &roles);
         Mam::record_done(proc);
         // Mirror the sources' `finish`: blocking redistribution of the
         // variable entries (background strategies only — blocking moved
@@ -538,7 +570,7 @@ impl Mam {
             if !variable.is_empty() {
                 let locals =
                     col::redistribute_blocking(proc, merged, &roles, &mam.registry, &variable);
-                mam.apply_locals(&variable, locals, &roles);
+                mam.apply_locals(proc, &variable, locals, &roles);
             }
         }
         mam
@@ -555,8 +587,11 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     /// Full grow-or-shrink reconfiguration over real payloads; verifies
-    /// every continuing rank ends with the exact ND-way block.
-    fn roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy) {
+    /// every continuing rank ends with the exact ND-way block.  The
+    /// window-pool variant must be payload-identical to the cold path —
+    /// the roundtrip assertions check the exact expected block either
+    /// way.
+    fn roundtrip_pool(ns: usize, nd: usize, method: Method, strategy: Strategy, pool: bool) {
         let total = 997u64;
         let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
         let checks = Arc::new(AtomicUsize::new(0));
@@ -571,7 +606,12 @@ mod tests {
                 total,
                 Payload::real((b.ini..b.end).map(|i| i as f64).collect()),
             );
-            let cfg = ReconfigCfg { method, strategy, spawn_cost: 0.01 };
+            let cfg = ReconfigCfg {
+                method,
+                strategy,
+                spawn_cost: 0.01,
+                win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
+            };
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
             let checks3 = checks2.clone();
@@ -613,6 +653,11 @@ mod tests {
             nd,
             "every drain must verify its block"
         );
+    }
+
+    /// Cold-path roundtrip (the paper's configuration; seed behaviour).
+    fn roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy) {
+        roundtrip_pool(ns, nd, method, strategy, false);
     }
 
     #[test]
@@ -695,6 +740,108 @@ mod tests {
         roundtrip(6, 2, Method::RmaLockall, Strategy::Threading);
     }
 
+    // ---- window pool on: payloads must match the cold path exactly
+    // for expand and shrink across all three methods (satellite: pool
+    // on/off payload parity).
+
+    #[test]
+    fn pool_grow_collective_blocking_matches() {
+        roundtrip_pool(2, 5, Method::Collective, Strategy::Blocking, true);
+    }
+
+    #[test]
+    fn pool_shrink_collective_blocking_matches() {
+        roundtrip_pool(6, 2, Method::Collective, Strategy::Blocking, true);
+    }
+
+    #[test]
+    fn pool_grow_rma_lock_blocking_matches() {
+        roundtrip_pool(3, 8, Method::RmaLock, Strategy::Blocking, true);
+    }
+
+    #[test]
+    fn pool_shrink_rma_lock_wd_matches() {
+        roundtrip_pool(7, 2, Method::RmaLock, Strategy::WaitDrains, true);
+    }
+
+    #[test]
+    fn pool_grow_rma_lockall_wd_matches() {
+        roundtrip_pool(3, 9, Method::RmaLockall, Strategy::WaitDrains, true);
+    }
+
+    #[test]
+    fn pool_shrink_rma_lockall_blocking_matches() {
+        roundtrip_pool(8, 3, Method::RmaLockall, Strategy::Blocking, true);
+    }
+
+    #[test]
+    fn pool_threading_matches() {
+        roundtrip_pool(2, 6, Method::RmaLock, Strategy::Threading, true);
+        roundtrip_pool(6, 2, Method::RmaLockall, Strategy::Threading, true);
+    }
+
+    #[test]
+    fn warm_reconfiguration_charges_zero_registration() {
+        // Shrink 4 -> 2, then grow back 2 -> 4, pool on.  Resize 1 is
+        // cold; register-on-receive then pins every installed block, so
+        // resize 2's window acquires are warm on every rank (survivors
+        // re-expose pinned blocks, spawned drains expose NULL): zero
+        // cold acquires and zero registration seconds are added to the
+        // simulated timeline after resize 1.
+        let total = 40_000u64;
+        let (ns, nd) = (4usize, 2usize);
+        let mut sim = MpiSim::new(Topology::new(1, 8), NetParams::test_simple());
+        let world = sim.world();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+            let cfg = ReconfigCfg {
+                method: Method::RmaLockall,
+                strategy: Strategy::Blocking,
+                spawn_cost: 0.0,
+                win_pool: WinPoolPolicy::on(),
+            };
+            let decls = reg.decls();
+            let mut mam = Mam::new(reg, cfg.clone());
+            let nobody: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            // Resize 1: 4 -> 2 (cold: first exposure of "A" anywhere).
+            let st = mam.reconfigure(&p, WORLD, nd, nobody);
+            assert_eq!(st, MamStatus::Completed);
+            let out = mam.finish(&p, WORLD);
+            let Some(c1) = out.app_comm else {
+                return; // retired by the shrink
+            };
+            let s1 = p.win_pool_stats();
+            assert!(s1.cold_acquires > 0, "first resize must be cold");
+            // Resize 2: grow back to 4, re-exposing the pinned blocks.
+            let cfg2 = cfg.clone();
+            let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let _ = Mam::drain_join(&dp, merged, nd, ns, &decls, cfg2.clone());
+                });
+            let st = mam.reconfigure(&p, c1, ns, drain_body);
+            assert_eq!(st, MamStatus::Completed);
+            let _ = mam.finish(&p, c1);
+            let s2 = p.win_pool_stats();
+            assert_eq!(
+                s2.cold_acquires, s1.cold_acquires,
+                "warm resize must add zero cold acquires: {s2:?}"
+            );
+            assert!(
+                (s2.cold_reg_time - s1.cold_reg_time).abs() < 1e-15,
+                "warm resize charged registration on the collective path: {s2:?}"
+            );
+            assert!(s2.warm_acquires > s1.warm_acquires, "{s2:?}");
+            assert!(s2.warm_reg_saved > 0.0, "{s2:?}");
+        });
+        sim.run().unwrap();
+        let w = world.lock().unwrap();
+        let s = w.win_pool_stats();
+        assert!(s.warm_acquires > 0 && s.pre_pins > 0, "{s:?}");
+    }
+
     #[test]
     #[should_panic(expected = "NB is undefined for RMA")]
     fn rma_nb_panics() {
@@ -708,6 +855,7 @@ mod tests {
                     method: Method::RmaLock,
                     strategy: Strategy::NonBlocking,
                     spawn_cost: 0.0,
+                    win_pool: WinPoolPolicy::off(),
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
@@ -747,6 +895,7 @@ mod tests {
                     method: Method::Collective,
                     strategy: Strategy::WaitDrains,
                     spawn_cost: 0.0,
+                    win_pool: WinPoolPolicy::off(),
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
@@ -805,6 +954,7 @@ mod tests {
                     method: Method::RmaLockall,
                     strategy: Strategy::WaitDrains,
                     spawn_cost: 0.0,
+                    win_pool: WinPoolPolicy::off(),
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});

@@ -18,11 +18,14 @@
 //! the completion protocol (local `MPI_Testall`, global `MPI_Ibarrier`,
 //! local frees) is driven by [`reconfig`](super::reconfig).
 
-use crate::simmpi::{recv_buf_real, recv_buf_virtual, CommId, MpiProc, Payload, RecvBuf, ReqId, WinId};
+use crate::simmpi::{
+    recv_buf_real, recv_buf_virtual, CommId, MpiProc, Payload, RecvBuf, ReqId, WinId,
+};
 
 use super::blockdist::{drain_plan, DrainPlan};
 use super::reconfig::Roles;
 use super::registry::Registry;
+use super::winpool::{self, WinPoolPolicy};
 
 /// Per-entry read bookkeeping on the drain side.
 #[derive(Debug)]
@@ -56,34 +59,26 @@ pub struct RmaInit {
     /// Epochs to close once reads complete: (window index, lockall?,
     /// first_source, last_source).
     pub epochs: Vec<(usize, bool, usize, usize)>,
-}
-
-/// Collectively create the window of one registry entry.  Sources
-/// expose their local block, everyone else an empty payload (Alg. 2
-/// L1-L5 / L21, Alg. 3 L1-L5 / L18).
-fn create_window(proc: &MpiProc, merged: CommId, roles: &Roles, registry: &Registry, i: usize) -> WinId {
-    let e = registry.entry(i);
-    let exposure = if roles.is_source() {
-        e.local.clone()
-    } else if e.local.is_real() {
-        Payload::real(Vec::new()) // data = NULL (Alg. 2 L3)
-    } else {
-        Payload::virt(0)
-    };
-    proc.win_create(merged, exposure)
+    /// Window-pool policy the windows were acquired under — the frees
+    /// in `Complete_RMA` must match it (§VI window pool).
+    pub policy: WinPoolPolicy,
 }
 
 /// Collectively create one window per selected registry entry.
+/// Sources expose their local block, everyone else an empty payload
+/// (Alg. 2 L1-L5 / L21, Alg. 3 L1-L5 / L18); with the pool enabled,
+/// warm ranks reuse their cached registration (see [`winpool`]).
 pub fn create_windows(
     proc: &MpiProc,
     merged: CommId,
     roles: &Roles,
     registry: &Registry,
     which: &[usize],
+    policy: WinPoolPolicy,
 ) -> Vec<WinId> {
     which
         .iter()
-        .map(|&i| create_window(proc, merged, roles, registry, i))
+        .map(|&i| winpool::acquire_entry_window(proc, merged, roles, registry, i, policy))
         .collect()
 }
 
@@ -134,8 +129,9 @@ pub fn redistribute_blocking(
     registry: &Registry,
     which: &[usize],
     lockall: bool,
+    policy: WinPoolPolicy,
 ) -> Vec<Option<Payload>> {
-    let wins = create_windows(proc, merged, roles, registry, which);
+    let wins = create_windows(proc, merged, roles, registry, which, policy);
     let mut out: Vec<Option<Payload>> = Vec::with_capacity(which.len());
     for (&i, win) in which.iter().zip(&wins) {
         let e = registry.entry(i);
@@ -164,9 +160,7 @@ pub fn redistribute_blocking(
             out.push(None);
         }
     }
-    for win in wins {
-        proc.win_free(win);
-    }
+    winpool::close_windows(proc, &wins, policy);
     out
 }
 
@@ -263,6 +257,7 @@ pub fn init_rma(
     registry: &Registry,
     which: &[usize],
     lockall: bool,
+    policy: WinPoolPolicy,
 ) -> RmaInit {
     let mut wins = Vec::with_capacity(which.len());
     let mut reqs = Vec::new();
@@ -270,7 +265,7 @@ pub fn init_rma(
     let mut epochs = Vec::new();
     for (k, &i) in which.iter().enumerate() {
         let e = registry.entry(i);
-        let win = create_window(proc, merged, roles, registry, i);
+        let win = winpool::acquire_entry_window(proc, merged, roles, registry, i, policy);
         wins.push(win);
         if roles.is_drain() {
             let dr = alloc_drain(e.total_elems, roles, e.local.is_real());
@@ -289,7 +284,7 @@ pub fn init_rma(
             reads.push(None);
         }
     }
-    RmaInit { wins, reqs, reads, epochs }
+    RmaInit { wins, reqs, reads, epochs, policy }
 }
 
 /// Close the epochs opened by [`init_rma`] (called once the drain's
@@ -309,11 +304,10 @@ pub fn close_epochs(proc: &MpiProc, init: &RmaInit) {
 }
 
 /// Free every window locally (Wait-Drains path: the global barrier has
-/// already synchronized, §IV-C).
+/// already synchronized, §IV-C).  Pool-acquired windows are released
+/// back to the pool instead of deregistered.
 pub fn free_windows_local(proc: &MpiProc, init: &RmaInit) {
-    for win in &init.wins {
-        proc.win_free_local(*win);
-    }
+    winpool::close_windows_local(proc, &init.wins, init.policy);
 }
 
 /// Turn completed drain reads into the new local payloads.
@@ -345,7 +339,8 @@ mod tests {
             };
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, local);
-            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], lockall);
+            let out =
+                redistribute_blocking(&p, WORLD, &roles, &reg, &[0], lockall, WinPoolPolicy::off());
             if roles.is_drain() {
                 let nb = super::super::blockdist::block_of(total, nd, r);
                 let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
@@ -401,7 +396,7 @@ mod tests {
             };
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, local);
-            let mut init = init_rma(&p, WORLD, &roles, &reg, &[0], false);
+            let mut init = init_rma(&p, WORLD, &roles, &reg, &[0], false, WinPoolPolicy::off());
             // Everyone is a drain here (nd=3 covers all ranks).
             while !p.req_testall(&init.reqs) {
                 p.compute(1e-4);
@@ -417,6 +412,51 @@ mod tests {
             let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
             let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
             assert_eq!(got, want);
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn pooled_rerun_is_warm_and_preserves_payloads() {
+        // Two identical blocking RMA redistributions in one world: with
+        // the pool on, the second run's acquires are all warm (zero
+        // registration charged) and the payloads are byte-identical.
+        let total = 97u64;
+        let (ns, nd) = (2usize, 4usize);
+        let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+        sim.launch(4, move |p| {
+            let r = p.rank(WORLD);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if roles.is_source() {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let pool = WinPoolPolicy::on();
+            let t0 = p.now();
+            let first = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], true, pool);
+            let cold_dt = p.now() - t0;
+            let s1 = p.win_pool_stats();
+            let t1 = p.now();
+            let second = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], true, pool);
+            let warm_dt = p.now() - t1;
+            let s2 = p.win_pool_stats();
+            assert_eq!(s2.cold_acquires, s1.cold_acquires, "second run must be all-warm");
+            assert!(s2.warm_acquires > s1.warm_acquires);
+            assert!(
+                (s2.cold_reg_time - s1.cold_reg_time).abs() < 1e-15,
+                "warm run charged registration time"
+            );
+            assert!(warm_dt < cold_dt, "warm={warm_dt} cold={cold_dt}");
+            let nb = super::super::blockdist::block_of(total, nd, r);
+            let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+            for out in [&first, &second] {
+                let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+                assert_eq!(got, want, "drain {r} wrong block");
+            }
         });
         sim.run().unwrap();
     }
@@ -442,7 +482,8 @@ mod tests {
                 10,
                 Payload::real((b2.ini..b2.end).map(|i| 100.0 + i as f64).collect()),
             );
-            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0, 1], true);
+            let out =
+                redistribute_blocking(&p, WORLD, &roles, &reg, &[0, 1], true, WinPoolPolicy::off());
             assert_eq!(out.len(), 2);
             let a = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
             let x = out[1].as_ref().unwrap().as_slice().unwrap().to_vec();
@@ -463,7 +504,8 @@ mod tests {
             let b = super::super::blockdist::block_of(total, ns, r);
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
-            let out = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], false);
+            let out =
+                redistribute_blocking(&p, WORLD, &roles, &reg, &[0], false, WinPoolPolicy::off());
             if roles.is_drain() {
                 let nb = super::super::blockdist::block_of(total, nd, r);
                 assert_eq!(out[0].as_ref().unwrap().elems(), nb.len());

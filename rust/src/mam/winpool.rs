@@ -1,0 +1,173 @@
+//! MaM's window-pool layer (§VI): registry entries *pin* their RMA
+//! windows so successive redistributions reuse registered memory.
+//!
+//! The paper names window initialization as the one overhead that
+//! keeps the RMA methods from beating the collective baseline: every
+//! reconfiguration pays `Win_create`'s memory registration for every
+//! exposed structure.  MaM's registry makes the fix natural — each
+//! entry is a long-lived, named buffer, so the entry's *name* is a
+//! stable pin token across ranks **and** across resizes.  With the
+//! pool enabled, `init_rma`/`Complete_RMA` and the blocking RMA paths
+//! acquire epoch-capable windows through
+//! [`MpiProc::win_acquire`]/[`MpiProc::win_release`] instead of
+//! `win_create`/`win_free`: the first resize registers (cold), every
+//! later exposure of the same entry at the same rank rides the cached
+//! registration (warm) and skips the per-byte pinning entirely.
+//!
+//! Policy lives here; mechanism (registration cache, slot free lists,
+//! warm/cold virtual-time accounting) lives in
+//! [`crate::simmpi::winpool`].
+//!
+//! [`MpiProc::win_acquire`]: crate::simmpi::MpiProc::win_acquire
+//! [`MpiProc::win_release`]: crate::simmpi::MpiProc::win_release
+
+use crate::simmpi::{CommId, MpiProc, Payload, WinId};
+
+use super::reconfig::Roles;
+use super::registry::Registry;
+
+/// Per-reconfiguration window-pool policy (set from `ReconfigCfg`;
+/// `--win-pool on|off` on the CLI).  Off is the paper's cold path and
+/// is bit-identical to the seed behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WinPoolPolicy {
+    pub enabled: bool,
+}
+
+impl WinPoolPolicy {
+    pub fn on() -> WinPoolPolicy {
+        WinPoolPolicy { enabled: true }
+    }
+
+    pub fn off() -> WinPoolPolicy {
+        WinPoolPolicy { enabled: false }
+    }
+
+    /// Parse the CLI/config toggle — one grammar, shared via
+    /// [`parse_toggle`](crate::util::cli::parse_toggle).
+    pub fn parse(s: &str) -> Option<WinPoolPolicy> {
+        crate::util::cli::parse_toggle(s)
+            .map(|on| if on { WinPoolPolicy::on() } else { WinPoolPolicy::off() })
+    }
+
+    pub fn label(self) -> &'static str {
+        if self.enabled {
+            "on"
+        } else {
+            "off"
+        }
+    }
+}
+
+/// Stable pin token of a registry entry: FNV-1a of its name.  Every
+/// rank derives the same token for the same entry, and the token
+/// survives reconfigurations — which is exactly the lifetime of the
+/// pinned buffer it stands for.
+pub fn pin_token(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The window exposure of registry entry `i` for this rank: sources
+/// expose their local block, everyone else `NULL` (Alg. 2 L3) — real
+/// or virtual matching the entry's payload mode.
+pub fn entry_exposure(roles: &Roles, registry: &Registry, i: usize) -> Payload {
+    let e = registry.entry(i);
+    if roles.is_source() {
+        e.local.clone()
+    } else if e.local.is_real() {
+        Payload::real(Vec::new())
+    } else {
+        Payload::virt(0)
+    }
+}
+
+/// Collectively create (pool off) or acquire (pool on) the window of
+/// registry entry `i` over `comm`.
+pub fn acquire_entry_window(
+    proc: &MpiProc,
+    comm: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    i: usize,
+    policy: WinPoolPolicy,
+) -> WinId {
+    let exposure = entry_exposure(roles, registry, i);
+    if policy.enabled {
+        proc.win_acquire(comm, exposure, pin_token(&registry.entry(i).name))
+    } else {
+        proc.win_create(comm, exposure)
+    }
+}
+
+/// Collectively close a set of windows: `win_release` keeps the
+/// registrations pooled, `win_free` (pool off) deregisters.
+pub fn close_windows(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
+    for win in wins {
+        if policy.enabled {
+            proc.win_release(*win);
+        } else {
+            proc.win_free(*win);
+        }
+    }
+}
+
+/// Local-only close (Wait-Drains path: the confirmation barrier
+/// already synchronized, §IV-C).
+pub fn close_windows_local(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
+    for win in wins {
+        if policy.enabled {
+            proc.win_release_local(*win);
+        } else {
+            proc.win_free_local(*win);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_cli_spellings() {
+        assert_eq!(WinPoolPolicy::parse("on"), Some(WinPoolPolicy::on()));
+        assert_eq!(WinPoolPolicy::parse("ON"), Some(WinPoolPolicy::on()));
+        assert_eq!(WinPoolPolicy::parse("true"), Some(WinPoolPolicy::on()));
+        assert_eq!(WinPoolPolicy::parse("off"), Some(WinPoolPolicy::off()));
+        assert_eq!(WinPoolPolicy::parse("0"), Some(WinPoolPolicy::off()));
+        assert_eq!(WinPoolPolicy::parse("maybe"), None);
+        assert_eq!(WinPoolPolicy::default(), WinPoolPolicy::off());
+        assert_eq!(WinPoolPolicy::on().label(), "on");
+        assert_eq!(WinPoolPolicy::off().label(), "off");
+    }
+
+    #[test]
+    fn pin_tokens_are_stable_and_distinct() {
+        assert_eq!(pin_token("A_vals"), pin_token("A_vals"));
+        assert_ne!(pin_token("A_vals"), pin_token("A_cols"));
+        assert_ne!(pin_token(""), pin_token("x"));
+        // FNV-1a of the empty string is the offset basis.
+        assert_eq!(pin_token(""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn exposure_follows_roles_and_mode() {
+        use crate::mam::registry::DataKind;
+        let mut reg = Registry::new();
+        reg.register("real", DataKind::Constant, 10, Payload::real(vec![1.0, 2.0]));
+        reg.register("virt", DataKind::Constant, 10, Payload::virt(2));
+        let src = Roles { ns: 2, nd: 4, rank: 0 };
+        let drain = Roles { ns: 2, nd: 4, rank: 3 };
+        assert_eq!(entry_exposure(&src, &reg, 0).elems(), 2);
+        assert!(entry_exposure(&src, &reg, 0).is_real());
+        // Drain-only ranks expose NULL in the entry's mode.
+        assert_eq!(entry_exposure(&drain, &reg, 0).elems(), 0);
+        assert!(entry_exposure(&drain, &reg, 0).is_real());
+        assert_eq!(entry_exposure(&drain, &reg, 1).elems(), 0);
+        assert!(!entry_exposure(&drain, &reg, 1).is_real());
+    }
+}

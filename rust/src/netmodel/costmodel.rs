@@ -67,6 +67,27 @@ impl CostModel {
         self.params.win_setup * 0.5 + bytes as f64 * self.params.beta_register / 3.0
     }
 
+    /// Pooled-window acquire cost (§VI window pool).  A *cold* acquire
+    /// is a full `Win_create`: fixed setup plus `ibv_reg_mr` pinning of
+    /// every exposed byte.  A *warm* acquire re-exposes memory that is
+    /// still registered with the NIC: only the fixed setup (rkey
+    /// exchange, window object) is charged — the per-byte registration,
+    /// the paper's dominant RMA overhead, vanishes.
+    pub fn window_acquire(&self, bytes: u64, warm: bool) -> f64 {
+        if warm {
+            self.params.win_setup
+        } else {
+            self.window_registration(bytes)
+        }
+    }
+
+    /// Pooled-window release cost: the window object returns to the
+    /// pool with its memory still pinned, so unlike
+    /// [`CostModel::window_free`] there is no per-byte deregistration.
+    pub fn window_release(&self) -> f64 {
+        self.params.win_setup * 0.5
+    }
+
     /// Route one message; updates NIC occupancy.  `now` is the moment
     /// the initiator posts the operation.
     pub fn transfer(
@@ -241,6 +262,21 @@ mod tests {
         assert!((r1 - 1e-4).abs() < 1e-12);
         assert!((r2 - (1e-4 + 1.0)).abs() < 1e-9);
         assert!(cm.window_free(1_000_000_000) < r2);
+    }
+
+    #[test]
+    fn warm_acquire_skips_registration() {
+        let (cm, _) = setup();
+        let bytes = 1_000_000_000u64;
+        let cold = cm.window_acquire(bytes, false);
+        let warm = cm.window_acquire(bytes, true);
+        // Cold == the seed's full Win_create registration charge.
+        assert_eq!(cold.to_bits(), cm.window_registration(bytes).to_bits());
+        // Warm charges the fixed setup only: no per-byte term at all.
+        assert_eq!(warm.to_bits(), cm.window_acquire(1, true).to_bits());
+        assert!(warm < cold);
+        // Release keeps memory pinned: cheaper than a full free.
+        assert!(cm.window_release() < cm.window_free(bytes));
     }
 
     #[test]

@@ -22,7 +22,10 @@
 
 use std::sync::Arc;
 
-use crate::mam::{is_valid_version, version_label, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy};
+use crate::mam::{
+    is_valid_version, version_label, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
+    WinPoolPolicy,
+};
 use crate::netmodel::{NetParams, Topology};
 use crate::sam::{Sam, SamConfig};
 use crate::simmpi::{CommId, MpiProc, MpiSim, WORLD};
@@ -45,6 +48,9 @@ pub struct RunSpec {
     pub post_iters: u64,
     pub spawn_cost: f64,
     pub seed: u64,
+    /// Persistent RMA window pool (§VI): `--win-pool on|off`.  Off is
+    /// the paper's cold `Win_create` path.
+    pub win_pool: WinPoolPolicy,
 }
 
 impl RunSpec {
@@ -62,6 +68,7 @@ impl RunSpec {
             post_iters: 3,
             spawn_cost: 0.25,
             seed: 0xC0FFEE,
+            win_pool: WinPoolPolicy::off(),
         }
     }
 
@@ -188,6 +195,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
         method: spec.method,
         strategy: spec.strategy,
         spawn_cost: spec.spawn_cost,
+        win_pool: spec.win_pool,
     };
     let mut mam = Mam::new(reg, mam_cfg.clone());
 
@@ -255,6 +263,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
         method: spec.method,
         strategy: spec.strategy,
         spawn_cost: spec.spawn_cost,
+        win_pool: spec.win_pool,
     };
     let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
     debug_assert!(mam
@@ -338,6 +347,7 @@ mod tests {
             post_iters: 2,
             spawn_cost: 0.05,
             seed: 1,
+            win_pool: WinPoolPolicy::off(),
         }
     }
 
@@ -383,6 +393,17 @@ mod tests {
         let r = run_once(&small_spec(Method::Collective, Strategy::Threading));
         assert!(r.redist_time > 0.0);
         assert!(r.t_it_nd > 0.0);
+    }
+
+    #[test]
+    fn pooled_run_completes_and_is_deterministic() {
+        let mut spec = small_spec(Method::RmaLockall, Strategy::WaitDrains);
+        spec.win_pool = WinPoolPolicy::on();
+        let a = run_once(&spec);
+        let b = run_once(&spec);
+        assert!(a.redist_time > 0.0 && a.t_it_nd > 0.0);
+        assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -7,6 +7,14 @@
 //! re-parses and re-numbers instruction ids, sidestepping the 64-bit-id
 //! protos that xla_extension 0.5.1 rejects.
 //!
+//! The execution backend binds to the `xla` crate (xla_extension),
+//! which is only present in vendored builds; it is gated behind the
+//! `pjrt` cargo feature so the default build has **zero external
+//! dependencies**.  Without the feature, [`CgRuntime::load`] reports
+//! the missing backend, and artifact-dependent tests/benches guard on
+//! [`runtime_available`] (artifacts built **and** backend compiled)
+//! to skip rather than panic.
+//!
 //! ```no_run
 //! use proteo::runtime::{CgRuntime, CgState};
 //! use proteo::linalg::EllMatrix;
@@ -20,10 +28,35 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
 use crate::linalg::EllMatrix;
 use crate::util::json::Json;
+
+/// Error of the runtime layer: a contextualized message, rendered the
+/// same under `{}` and `{:#}` (anyhow-style call sites keep working).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+
+    /// Prepend context, like `anyhow::Context`.
+    pub fn context(self, ctx: impl std::fmt::Display) -> RuntimeError {
+        RuntimeError(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used throughout the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
@@ -41,13 +74,17 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let src = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::new(format!(
+                "reading {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&src).map_err(|e| RuntimeError::new(format!("manifest: {e}")))?;
         let u = |k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(|v| v.as_usize())
-                .with_context(|| format!("manifest missing '{k}'"))
+                .ok_or_else(|| RuntimeError::new(format!("manifest missing '{k}'")))
         };
         Ok(Manifest {
             grid: u("grid")?,
@@ -95,156 +132,265 @@ impl CgState {
     }
 }
 
-/// A matrix resident in device memory (see [`CgRuntime::upload`]).
-pub struct DeviceMatrix {
-    data: xla::PjRtBuffer,
-    idx: xla::PjRtBuffer,
-}
+pub use backend::{CgRuntime, DeviceMatrix};
 
-/// The loaded CG executables on the PJRT CPU client.
-pub struct CgRuntime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cg_step: xla::PjRtLoadedExecutable,
-    spmv: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! xla_extension-backed execution (vendored builds only).
 
-impl CgRuntime {
-    /// Load `cg_step.hlo.txt` + `spmv.hlo.txt` from `dir` and compile
-    /// them on the PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<CgRuntime> {
-        let dir = dir.as_ref();
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path: PathBuf = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parse {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compile {}", path.display()))
-        };
-        let cg_step = compile("cg_step.hlo.txt")?;
-        let spmv = compile("spmv.hlo.txt")?;
-        Ok(CgRuntime { manifest, client, cg_step, spmv })
+    use std::path::{Path, PathBuf};
+
+    use super::{CgState, Manifest, Result, RuntimeError};
+    use crate::linalg::EllMatrix;
+
+    fn xe(e: impl std::fmt::Display) -> RuntimeError {
+        RuntimeError::new(e.to_string())
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A matrix resident in device memory (see [`CgRuntime::upload`]).
+    pub struct DeviceMatrix {
+        data: xla::PjRtBuffer,
+        idx: xla::PjRtBuffer,
     }
 
-    fn matrix_literals(&self, a: &EllMatrix) -> Result<(xla::Literal, xla::Literal)> {
-        if !self.manifest.accepts(a) {
-            bail!(
-                "matrix shape ({}, {}, {}, {}) does not match artifact ({}, {}, {}, {})",
-                a.nbr,
-                a.k,
-                a.br,
-                a.bc,
-                self.manifest.nbr,
-                self.manifest.k,
-                self.manifest.br,
-                self.manifest.bc
-            );
+    /// The loaded CG executables on the PJRT CPU client.
+    pub struct CgRuntime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        cg_step: xla::PjRtLoadedExecutable,
+        spmv: xla::PjRtLoadedExecutable,
+    }
+
+    impl CgRuntime {
+        /// Load `cg_step.hlo.txt` + `spmv.hlo.txt` from `dir` and compile
+        /// them on the PJRT CPU client.
+        pub fn load(dir: impl AsRef<Path>) -> Result<CgRuntime> {
+            let dir = dir.as_ref();
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| xe(e).context("create PJRT CPU client"))?;
+            let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path: PathBuf = dir.join(file);
+                let text = path
+                    .to_str()
+                    .ok_or_else(|| RuntimeError::new("artifact path not utf-8"))?;
+                let proto = xla::HloModuleProto::from_text_file(text)
+                    .map_err(|e| xe(e).context(format!("parse {}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| xe(e).context(format!("compile {}", path.display())))
+            };
+            let cg_step = compile("cg_step.hlo.txt")?;
+            let spmv = compile("spmv.hlo.txt")?;
+            Ok(CgRuntime { manifest, client, cg_step, spmv })
         }
-        let dims = [a.nbr as i64, a.k as i64, a.br as i64, a.bc as i64];
-        let data = xla::Literal::vec1(&a.data).reshape(&dims)?;
-        let idx = xla::Literal::vec1(&a.idx).reshape(&[a.nbr as i64, a.k as i64])?;
-        Ok((data, idx))
-    }
 
-    /// Upload a matrix to device memory once; subsequent
-    /// [`CgRuntime::cg_step_dev`] calls reuse the resident buffers —
-    /// the §Perf fix that removes the dominant per-iteration cost
-    /// (re-uploading the 3 MB block data every call).
-    pub fn upload(&self, a: &EllMatrix) -> Result<DeviceMatrix> {
-        if !self.manifest.accepts(a) {
-            bail!("matrix shape does not match artifact");
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let data = self
-            .client
-            .buffer_from_host_buffer(&a.data, &[a.nbr, a.k, a.br, a.bc], None)?;
-        let idx = self.client.buffer_from_host_buffer(&a.idx, &[a.nbr, a.k], None)?;
-        Ok(DeviceMatrix { data, idx })
-    }
 
-    /// One CG iteration through the compiled artifact.
-    pub fn cg_step(&self, a: &EllMatrix, st: &CgState) -> Result<CgState> {
-        let dev = self.upload(a)?;
-        self.cg_step_dev(&dev, st)
-    }
-
-    /// One CG iteration with a device-resident matrix (hot path): only
-    /// the four small state tensors cross the host↔device boundary.
-    pub fn cg_step_dev(&self, m: &DeviceMatrix, st: &CgState) -> Result<CgState> {
-        let n = st.x.len();
-        let up = |v: &[f32]| self.client.buffer_from_host_buffer(v, &[n], None);
-        let rr = self
-            .client
-            .buffer_from_host_buffer(&[st.rr], &[], None)?;
-        let result = self
-            .cg_step
-            .execute_b::<&xla::PjRtBuffer>(&[
-                &m.data,
-                &m.idx,
-                &up(&st.x)?,
-                &up(&st.r)?,
-                &up(&st.p)?,
-                &rr,
-            ])?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 4 {
-            bail!("cg_step returned {} outputs, expected 4", parts.len());
-        }
-        let mut it = parts.into_iter();
-        let x = it.next().unwrap().to_vec::<f32>()?;
-        let r = it.next().unwrap().to_vec::<f32>()?;
-        let p = it.next().unwrap().to_vec::<f32>()?;
-        let rr = it.next().unwrap().to_vec::<f32>()?[0];
-        Ok(CgState { x, r, p, rr })
-    }
-
-    /// Bare SpMV through the compiled artifact.
-    pub fn spmv(&self, a: &EllMatrix, x: &[f32]) -> Result<Vec<f32>> {
-        if x.len() != self.manifest.n {
-            bail!("x length {} != artifact n {}", x.len(), self.manifest.n);
-        }
-        let (data, idx) = self.matrix_literals(a)?;
-        let result = self
-            .spmv
-            .execute::<xla::Literal>(&[data, idx, xla::Literal::vec1(x)])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Run CG to `tol` (relative residual) or `max_iters`; returns the
-    /// state and the residual history — the signature mirrors
-    /// [`linalg::cg`](crate::linalg::cg) for cross-layer comparison.
-    /// The matrix is uploaded once and stays device-resident.
-    pub fn cg_solve(
-        &self,
-        a: &EllMatrix,
-        b: &[f32],
-        tol: f32,
-        max_iters: usize,
-    ) -> Result<(CgState, Vec<f32>)> {
-        let dev = self.upload(a)?;
-        let mut st = CgState::init(b);
-        let rr0 = st.rr;
-        let mut history = vec![st.rel_residual(rr0)];
-        for _ in 0..max_iters {
-            if *history.last().unwrap() < tol {
-                break;
+        fn matrix_literals(&self, a: &EllMatrix) -> Result<(xla::Literal, xla::Literal)> {
+            if !self.manifest.accepts(a) {
+                return Err(RuntimeError::new(format!(
+                    "matrix shape ({}, {}, {}, {}) does not match artifact ({}, {}, {}, {})",
+                    a.nbr,
+                    a.k,
+                    a.br,
+                    a.bc,
+                    self.manifest.nbr,
+                    self.manifest.k,
+                    self.manifest.br,
+                    self.manifest.bc
+                )));
             }
-            st = self.cg_step_dev(&dev, &st)?;
-            history.push(st.rel_residual(rr0));
+            let dims = [a.nbr as i64, a.k as i64, a.br as i64, a.bc as i64];
+            let data = xla::Literal::vec1(&a.data).reshape(&dims).map_err(xe)?;
+            let idx = xla::Literal::vec1(&a.idx)
+                .reshape(&[a.nbr as i64, a.k as i64])
+                .map_err(xe)?;
+            Ok((data, idx))
         }
-        Ok((st, history))
+
+        /// Upload a matrix to device memory once; subsequent
+        /// [`CgRuntime::cg_step_dev`] calls reuse the resident buffers —
+        /// the §Perf fix that removes the dominant per-iteration cost
+        /// (re-uploading the 3 MB block data every call).
+        pub fn upload(&self, a: &EllMatrix) -> Result<DeviceMatrix> {
+            if !self.manifest.accepts(a) {
+                return Err(RuntimeError::new("matrix shape does not match artifact"));
+            }
+            let data = self
+                .client
+                .buffer_from_host_buffer(&a.data, &[a.nbr, a.k, a.br, a.bc], None)
+                .map_err(xe)?;
+            let idx = self
+                .client
+                .buffer_from_host_buffer(&a.idx, &[a.nbr, a.k], None)
+                .map_err(xe)?;
+            Ok(DeviceMatrix { data, idx })
+        }
+
+        /// One CG iteration through the compiled artifact.
+        pub fn cg_step(&self, a: &EllMatrix, st: &CgState) -> Result<CgState> {
+            let dev = self.upload(a)?;
+            self.cg_step_dev(&dev, st)
+        }
+
+        /// One CG iteration with a device-resident matrix (hot path): only
+        /// the four small state tensors cross the host↔device boundary.
+        pub fn cg_step_dev(&self, m: &DeviceMatrix, st: &CgState) -> Result<CgState> {
+            let n = st.x.len();
+            let up = |v: &[f32]| {
+                self.client
+                    .buffer_from_host_buffer(v, &[n], None)
+                    .map_err(xe)
+            };
+            let rr = self
+                .client
+                .buffer_from_host_buffer(&[st.rr], &[], None)
+                .map_err(xe)?;
+            let result = self
+                .cg_step
+                .execute_b::<&xla::PjRtBuffer>(&[
+                    &m.data,
+                    &m.idx,
+                    &up(&st.x)?,
+                    &up(&st.r)?,
+                    &up(&st.p)?,
+                    &rr,
+                ])
+                .map_err(xe)?[0][0]
+                .to_literal_sync()
+                .map_err(xe)?;
+            let parts = result.to_tuple().map_err(xe)?;
+            if parts.len() != 4 {
+                return Err(RuntimeError::new(format!(
+                    "cg_step returned {} outputs, expected 4",
+                    parts.len()
+                )));
+            }
+            let mut it = parts.into_iter();
+            let x = it.next().unwrap().to_vec::<f32>().map_err(xe)?;
+            let r = it.next().unwrap().to_vec::<f32>().map_err(xe)?;
+            let p = it.next().unwrap().to_vec::<f32>().map_err(xe)?;
+            let rr = it.next().unwrap().to_vec::<f32>().map_err(xe)?[0];
+            Ok(CgState { x, r, p, rr })
+        }
+
+        /// Bare SpMV through the compiled artifact.
+        pub fn spmv(&self, a: &EllMatrix, x: &[f32]) -> Result<Vec<f32>> {
+            if x.len() != self.manifest.n {
+                return Err(RuntimeError::new(format!(
+                    "x length {} != artifact n {}",
+                    x.len(),
+                    self.manifest.n
+                )));
+            }
+            let (data, idx) = self.matrix_literals(a)?;
+            let result = self
+                .spmv
+                .execute::<xla::Literal>(&[data, idx, xla::Literal::vec1(x)])
+                .map_err(xe)?[0][0]
+                .to_literal_sync()
+                .map_err(xe)?;
+            let out = result.to_tuple1().map_err(xe)?;
+            out.to_vec::<f32>().map_err(xe)
+        }
+
+        /// Run CG to `tol` (relative residual) or `max_iters`; returns the
+        /// state and the residual history — the signature mirrors
+        /// [`linalg::cg`](crate::linalg::cg) for cross-layer comparison.
+        /// The matrix is uploaded once and stays device-resident.
+        pub fn cg_solve(
+            &self,
+            a: &EllMatrix,
+            b: &[f32],
+            tol: f32,
+            max_iters: usize,
+        ) -> Result<(CgState, Vec<f32>)> {
+            let dev = self.upload(a)?;
+            let mut st = CgState::init(b);
+            let rr0 = st.rr;
+            let mut history = vec![st.rel_residual(rr0)];
+            for _ in 0..max_iters {
+                if *history.last().unwrap() < tol {
+                    break;
+                }
+                st = self.cg_step_dev(&dev, &st)?;
+                history.push(st.rel_residual(rr0));
+            }
+            Ok((st, history))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend: same surface, but [`CgRuntime::load`] reports the
+    //! disabled feature.  The `Infallible` member makes the accessor
+    //! bodies trivially diverging — a constructed `CgRuntime` cannot
+    //! exist without the real backend.
+
+    use std::convert::Infallible;
+    use std::path::Path;
+
+    use super::{CgState, Manifest, Result, RuntimeError};
+    use crate::linalg::EllMatrix;
+
+    /// A matrix resident in device memory (stub: never constructed).
+    pub struct DeviceMatrix {
+        #[allow(dead_code)]
+        never: Infallible,
+    }
+
+    /// Stub runtime handle; see the module docs of [`crate::runtime`].
+    pub struct CgRuntime {
+        pub manifest: Manifest,
+        never: Infallible,
+    }
+
+    impl CgRuntime {
+        pub fn load(dir: impl AsRef<Path>) -> Result<CgRuntime> {
+            // Surface manifest problems first — they are actionable
+            // (`make artifacts`) even without the execution backend.
+            let _ = Manifest::load(dir.as_ref())?;
+            Err(RuntimeError::new(
+                "PJRT backend disabled: add the vendored `xla` crate as a path \
+                 dependency in rust/Cargo.toml (see the `pjrt` feature notes \
+                 there), then rebuild with `--features pjrt`",
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn upload(&self, _a: &EllMatrix) -> Result<DeviceMatrix> {
+            match self.never {}
+        }
+
+        pub fn cg_step(&self, _a: &EllMatrix, _st: &CgState) -> Result<CgState> {
+            match self.never {}
+        }
+
+        pub fn cg_step_dev(&self, _m: &DeviceMatrix, _st: &CgState) -> Result<CgState> {
+            match self.never {}
+        }
+
+        pub fn spmv(&self, _a: &EllMatrix, _x: &[f32]) -> Result<Vec<f32>> {
+            match self.never {}
+        }
+
+        pub fn cg_solve(
+            &self,
+            _a: &EllMatrix,
+            _b: &[f32],
+            _tol: f32,
+            _max_iters: usize,
+        ) -> Result<(CgState, Vec<f32>)> {
+            match self.never {}
+        }
     }
 }
 
@@ -258,6 +404,19 @@ pub fn artifacts_dir() -> PathBuf {
 /// Artifacts present? (tests skip gracefully when not built yet).
 pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.json").exists()
+}
+
+/// Is the PJRT execution backend compiled in (`--features pjrt`)?
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// Can [`CgRuntime::load`] succeed: artifacts built **and** backend
+/// compiled?  The skip guard for artifact-dependent tests, benches and
+/// examples — checking only [`artifacts_available`] would panic the
+/// default (stub-backend) build once `make artifacts` has run.
+pub fn runtime_available() -> bool {
+    pjrt_available() && artifacts_available()
 }
 
 #[cfg(test)]
@@ -280,6 +439,13 @@ mod tests {
     fn manifest_missing_is_graceful() {
         let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn runtime_error_context_chains() {
+        let e = RuntimeError::new("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+        assert_eq!(format!("{e:#}"), "outer: inner");
     }
 
     #[test]

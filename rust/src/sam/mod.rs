@@ -122,9 +122,10 @@ impl Sam {
                 Payload::virt(b.len())
             }
         };
-        reg.register("A_vals", DataKind::Constant, self.cfg.matrix_elems, mk(self.cfg.matrix_elems, 0.0));
-        reg.register("A_cols", DataKind::Constant, self.cfg.colind_elems, mk(self.cfg.colind_elems, 0.25));
-        reg.register("A_rowptr", DataKind::Constant, self.cfg.rowptr_elems, mk(self.cfg.rowptr_elems, 0.5));
+        let (mv, cv, rv) = (self.cfg.matrix_elems, self.cfg.colind_elems, self.cfg.rowptr_elems);
+        reg.register("A_vals", DataKind::Constant, mv, mk(mv, 0.0));
+        reg.register("A_cols", DataKind::Constant, cv, mk(cv, 0.25));
+        reg.register("A_rowptr", DataKind::Constant, rv, mk(rv, 0.5));
         let vb = block_of(self.cfg.vector_elems, n, rank);
         let vector = if self.cfg.real {
             Payload::real((vb.ini..vb.end).map(|i| (i as f64).sin()).collect())

@@ -32,15 +32,29 @@ pub type Time = f64;
 pub struct ActivityId(pub usize);
 
 /// Errors surfaced by [`Engine::run`].
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("deadlock at t={time:.9}s: {parked} activities parked, no pending events: {detail}")]
     Deadlock { time: Time, parked: usize, detail: String },
-    #[error("activity {0:?} ({1}) panicked: {2}")]
     ActivityPanic(ActivityId, String, String),
-    #[error("event limit of {0} exceeded (livelock guard)")]
     EventLimit(u64),
 }
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Deadlock { time, parked, detail } => write!(
+                f,
+                "deadlock at t={time:.9}s: {parked} activities parked, no pending events: {detail}"
+            ),
+            EngineError::ActivityPanic(id, label, msg) => {
+                write!(f, "activity {id:?} ({label}) panicked: {msg}")
+            }
+            EngineError::EventLimit(n) => write!(f, "event limit of {n} exceeded (livelock guard)"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// What an activity asks the engine to do when it yields.
 pub(crate) enum Request {

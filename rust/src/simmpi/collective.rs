@@ -104,6 +104,13 @@ impl CollState {
         self.arrivals.iter().all(|a| a.is_some())
     }
 
+    /// Ranks that have not arrived yet.  A setup closure observing
+    /// `pending_arrivals() == 1` is running on the *last* arriver
+    /// (setup runs before that rank's own `arrive`).
+    pub fn pending_arrivals(&self) -> usize {
+        self.arrivals.iter().filter(|a| a.is_none()).count()
+    }
+
     /// Record one rank's arrival; returns true if it was the last.
     pub fn arrive(&mut self, rank: usize, t: Time, contrib: Contrib) -> bool {
         assert!(self.arrivals[rank].is_none(), "rank {rank} re-entered collective");

@@ -20,7 +20,9 @@
 //! * the full passive-target RMA chapter: `Win_create`/`Win_free`
 //!   (collective, with memory-registration cost — the paper's dominant
 //!   RMA overhead), `Lock`/`Unlock`, `Lock_all`/`Unlock_all`, `Get`,
-//!   `Rget`,
+//!   `Rget`, plus the pooled `win_acquire`/`win_release` pair backed by
+//!   the persistent [`winpool`] (warm acquires skip re-registration —
+//!   the §VI fix),
 //! * a per-process *progress token* emulating MPICH 4.2.0's effective
 //!   serialization of `MPI_THREAD_MULTIPLE` progress (§V-D): while an
 //!   auxiliary thread is inside a blocking call, main-thread MPI calls
@@ -34,9 +36,13 @@ pub mod proc;
 pub mod request;
 pub mod rma;
 pub mod types;
+pub mod winpool;
 pub mod world;
 
 pub use proc::MpiProc;
 pub use request::ReqId;
-pub use types::{recv_buf_real, recv_buf_virtual, CommId, MpiError, Payload, RecvBuf, WinId, ELEM_BYTES};
+pub use types::{
+    recv_buf_real, recv_buf_virtual, CommId, MpiError, Payload, RecvBuf, WinId, ELEM_BYTES,
+};
+pub use winpool::WinPoolStats;
 pub use world::{MpiSim, MpiWorld, WORLD};

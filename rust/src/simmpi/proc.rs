@@ -15,7 +15,13 @@ use super::collective::{CollKind, CollResult, CollState, Contrib};
 use super::request::{ReqBody, ReqId, ReqState};
 use super::rma::WinState;
 use super::types::{CommId, Payload, RecvBuf, WinId};
+use super::winpool::{size_class, WinPoolStats};
 use super::world::{MpiWorld, PendingMsg, RecvWait};
+
+/// Size class of a window's largest exposure (free-list filing key).
+fn exposure_class(ws: &WinState) -> u32 {
+    size_class(ws.exposures.iter().map(|e| e.bytes()).max().unwrap_or(0))
+}
 
 /// Handle to one simulated MPI process (or its auxiliary thread).
 pub struct MpiProc {
@@ -597,18 +603,12 @@ impl MpiProc {
 
     // ------------------------------------------------------------ RMA
 
-    /// MPI_Win_create (collective; §IV-A).  Each rank exposes
-    /// `payload`; pass `Payload::virt(0)` to expose nothing (drain-only
-    /// ranks, §IV-B).  The registration cost of the exposed bytes is
-    /// what makes this the dominant RMA overhead (§V).
-    pub fn win_create(&self, comm: CommId, payload: Payload) -> WinId {
-        self.mpi_prologue();
-        self.progress_acquire();
+    /// Shared body of `win_create`/`win_acquire`: the collective that
+    /// materializes the window (first arriver allocates — from the
+    /// pool's free list when `pooled` — every rank installs its
+    /// exposure) and charges `reg` seconds of per-rank setup time.
+    fn win_open(&self, comm: CommId, payload: Payload, reg: f64, pooled: bool) -> WinId {
         let bytes = payload.bytes();
-        let reg = {
-            let w = self.world.lock().unwrap();
-            w.cost.window_registration(bytes)
-        };
         let is_aux = self.is_aux;
         let gpid = self.gpid;
         let (key, r) = self.coll_post(comm, CollKind::WinCreate, Contrib::RegTime(reg), {
@@ -616,8 +616,21 @@ impl MpiProc {
             move |w, cs, my_rank| {
                 let win = *cs.win_id.get_or_insert_with(|| {
                     let n = w.comm(comm).gpids.len();
-                    w.windows.push(WinState::new(comm, n));
-                    WinId(w.windows.len() - 1)
+                    let slot = if pooled {
+                        w.win_pool.take_slot(comm, size_class(bytes))
+                    } else {
+                        None
+                    };
+                    match slot {
+                        Some(wid) => {
+                            w.windows[wid.0].reset(comm, n);
+                            wid
+                        }
+                        None => {
+                            w.windows.push(WinState::new(comm, n));
+                            WinId(w.windows.len() - 1)
+                        }
+                    }
                 });
                 w.windows[win.0].exposures[my_rank] = payload;
                 // Propagate the MT flag: accesses to a window created
@@ -633,8 +646,133 @@ impl MpiProc {
             w.colls.get(&key).and_then(|c| c.win_id).expect("win id")
         };
         self.coll_block(key, r);
+        win
+    }
+
+    /// MPI_Win_create (collective; §IV-A).  Each rank exposes
+    /// `payload`; pass `Payload::virt(0)` to expose nothing (drain-only
+    /// ranks, §IV-B).  The registration cost of the exposed bytes is
+    /// what makes this the dominant RMA overhead (§V).
+    pub fn win_create(&self, comm: CommId, payload: Payload) -> WinId {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let reg = {
+            let w = self.world.lock().unwrap();
+            w.cost.window_registration(payload.bytes())
+        };
+        let win = self.win_open(comm, payload, reg, false);
         self.progress_release();
         win
+    }
+
+    /// Pooled `MPI_Win_create` (§VI window pool): collective like
+    /// [`MpiProc::win_create`], but the exposed buffer's registration
+    /// is looked up in the persistent pool first.  A rank whose `pin`
+    /// token still covers `payload` is *warm* and pays only the fixed
+    /// window setup; cold ranks pay the full registration and populate
+    /// the cache for the next acquire.  The first arriver reuses a
+    /// released slot of this communicator when one fits.
+    pub fn win_acquire(&self, comm: CommId, payload: Payload, pin: u64) -> WinId {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let bytes = payload.bytes();
+        let reg = {
+            let mut w = self.world.lock().unwrap();
+            let warm = w.win_pool.is_warm(self.gpid, pin, bytes);
+            let reg = w.cost.window_acquire(bytes, warm);
+            if warm {
+                let saved = w.cost.window_acquire(bytes, false) - reg;
+                w.win_pool.note_acquire(true, 0.0, saved);
+            } else {
+                w.win_pool.record_pin(self.gpid, pin, bytes);
+                w.win_pool.note_acquire(false, reg, 0.0);
+            }
+            reg
+        };
+        let win = self.win_open(comm, payload, reg, true);
+        self.progress_release();
+        win
+    }
+
+    /// Release a pooled window (collective): the closing
+    /// synchronization of `MPI_Win_free`, but the slot returns to the
+    /// pool with its memory still pinned — no per-byte deregistration.
+    pub fn win_release(&self, win: WinId) {
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (comm, dt) = {
+            let mut w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            let dt = w.cost.window_release();
+            w.windows[win.0].freed_local[my_rank] = true;
+            (comm, dt)
+        };
+        // The *last arriver* files the slot, inside the collective
+        // matching step: every rank has arrived and none has resumed,
+        // so no re-acquire of the same slot can interleave.  (A latch
+        // on `freed` in a post-block epilogue would race: the first
+        // resumed rank's next `win_acquire` may take the slot and
+        // reset it before the other ranks run their epilogue, making
+        // them re-file a live window.)
+        let (key, r) =
+            self.coll_post(comm, CollKind::WinFree, Contrib::RegTime(dt), move |w, cs, _| {
+                if cs.pending_arrivals() == 1 {
+                    w.windows[win.0].freed = true;
+                    let class = exposure_class(&w.windows[win.0]);
+                    w.win_pool.put_slot(comm, class, win);
+                }
+            });
+        self.coll_block(key, r);
+        self.progress_release();
+    }
+
+    /// Local-only pooled release (Wait-Drains path, the pooled analog
+    /// of [`MpiProc::win_free_local`]): the closing barrier already
+    /// synchronized; the last rank to release files the slot.
+    pub fn win_release_local(&self, win: WinId) {
+        self.mpi_prologue();
+        let (dt, my_rank) = {
+            let w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            (w.cost.window_release(), my_rank)
+        };
+        self.ctx.advance(dt);
+        let mut w = self.world.lock().unwrap();
+        if w.windows[win.0].free_local(my_rank) {
+            let comm = w.windows[win.0].comm;
+            let class = exposure_class(&w.windows[win.0]);
+            w.win_pool.put_slot(comm, class, win);
+        }
+    }
+
+    /// Pre-register a buffer under `pin` (window-pool path): charges
+    /// the registration time *now*, locally, unless the token already
+    /// covers `bytes`.  MaM uses this to pin an entry's freshly
+    /// received block off the collective critical path
+    /// (register-on-receive), so the next resize's `win_acquire` is
+    /// warm for every rank.
+    pub fn pin_buffer(&self, pin: u64, bytes: u64) {
+        let dt = {
+            let mut w = self.world.lock().unwrap();
+            if w.win_pool.is_warm(self.gpid, pin, bytes) {
+                0.0
+            } else {
+                let dt = w.cost.window_registration(bytes);
+                w.win_pool.record_pin(self.gpid, pin, bytes);
+                w.win_pool.note_pre_pin(dt);
+                dt
+            }
+        };
+        if dt > 0.0 {
+            self.ctx.advance(dt);
+        }
+    }
+
+    /// Snapshot of the window pool's warm/cold accounting.
+    pub fn win_pool_stats(&self) -> WinPoolStats {
+        self.world.lock().unwrap().win_pool.stats()
     }
 
     /// MPI_Win_free (collective): closing barrier + local deregistration.
@@ -1230,6 +1368,122 @@ mod tests {
             p.win_free(win);
         });
         s.run().unwrap();
+    }
+
+    #[test]
+    fn win_acquire_roundtrips_data_like_win_create() {
+        let mut s = sim(2, 2);
+        s.launch(2, |p| {
+            let r = p.rank(WORLD);
+            let expose = if r == 0 {
+                Payload::real(vec![5.0, 6.0, 7.0, 8.0])
+            } else {
+                Payload::virt(0)
+            };
+            let win = p.win_acquire(WORLD, expose, 0xA);
+            if r == 1 {
+                let dest = recv_buf_real(2);
+                p.win_lock(win, 0);
+                p.get(win, 0, 1, 2, &dest, 0);
+                p.win_unlock(win, 0);
+                assert_eq!(dest.lock().unwrap().as_ref().unwrap(), &vec![6.0, 7.0]);
+            }
+            p.win_release(win);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn warm_reacquire_skips_registration_time() {
+        // Same exposure, same pin token: the second acquire must reuse
+        // the released slot and charge no per-byte registration.
+        let mut s = sim(2, 2);
+        let w = s.world();
+        s.launch(2, |p| {
+            let elems = 100_000_000u64; // 0.8 s of registration at 1 GB/s
+            let r = p.rank(WORLD);
+            let expose = || if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
+            let t0 = p.now();
+            let w1 = p.win_acquire(WORLD, expose(), 0xA);
+            let cold_dt = p.now() - t0;
+            p.win_release(w1);
+            let t1 = p.now();
+            let w2 = p.win_acquire(WORLD, expose(), 0xA);
+            let warm_dt = p.now() - t1;
+            assert_eq!(w1, w2, "released slot must be reused");
+            assert!(
+                warm_dt < cold_dt / 10.0,
+                "warm acquire not cheap: cold={cold_dt} warm={warm_dt}"
+            );
+            p.win_release(w2);
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        let st = w.win_pool_stats();
+        // Rank 0's first exposure is the only cold one — rank 1 exposes
+        // NULL (always warm), and the re-acquires ride the pin cache.
+        assert_eq!(st.cold_acquires, 1);
+        assert_eq!(st.warm_acquires, 3);
+        assert_eq!(st.slot_reuses, 1);
+        assert_eq!(st.releases, 2);
+        assert!(st.warm_reg_saved > 0.5, "saved {}", st.warm_reg_saved);
+    }
+
+    #[test]
+    fn pin_tokens_and_comms_are_isolated() {
+        // A different pin token stays cold even after a release, and a
+        // slot released on one communicator is invisible to another.
+        let mut s = sim(1, 4);
+        let w = s.world();
+        s.launch(2, |p| {
+            let win = p.win_acquire(WORLD, Payload::virt(1000), 0xA);
+            p.win_release(win);
+            // Different token: cold again (different buffer).
+            let win2 = p.win_acquire(WORLD, Payload::virt(1000), 0xB);
+            p.win_release(win2);
+            // Different communicator: the pooled slot must not cross.
+            let sub = p.comm_sub(WORLD, 2);
+            let win3 = p.win_acquire(sub, Payload::virt(1000), 0xC);
+            assert_ne!(win3, win, "slot leaked across communicators");
+            p.win_release(win3);
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        assert_eq!(w.win_pool_stats().warm_acquires, 0);
+        assert_eq!(w.win_pool_stats().cold_acquires, 6);
+    }
+
+    #[test]
+    fn release_local_files_slot_once_all_ranks_released() {
+        let mut s = sim(1, 4);
+        let w = s.world();
+        s.launch(3, |p| {
+            let win = p.win_acquire(WORLD, Payload::virt(64), 0x1);
+            p.barrier(WORLD);
+            p.win_release_local(win);
+            p.barrier(WORLD);
+            // Reacquire must find the slot filed by the last releaser.
+            let win2 = p.win_acquire(WORLD, Payload::virt(64), 0x1);
+            assert_eq!(win, win2);
+            p.win_release(win2);
+        });
+        s.run().unwrap();
+        assert_eq!(w.lock().unwrap().win_pool_stats().slot_reuses, 1);
+    }
+
+    #[test]
+    fn retirement_drops_pins() {
+        // After a rank's process exits, a new process on the same gpid
+        // index cannot inherit its warmth (fresh memory).
+        let mut s = sim(1, 2);
+        let w = s.world();
+        s.launch(1, |p| {
+            let win = p.win_acquire(WORLD, Payload::virt(512), 0x9);
+            p.win_release(win);
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        assert!(!w.win_pool.is_warm(0, 0x9, 512), "pins must die with the process");
     }
 
     #[test]

@@ -49,6 +49,21 @@ impl WinState {
         }
     }
 
+    /// Re-arm a pooled slot for a fresh acquire on the same
+    /// communicator (window-pool path): exposures are replaced by the
+    /// acquiring ranks, epoch/free bookkeeping starts over.  The MT
+    /// flag resets too — warmth of the *registration* does not carry
+    /// the threaded-context penalty of a previous epoch (§V-D).
+    pub fn reset(&mut self, comm: super::types::CommId, n: usize) {
+        debug_assert!(self.pending_gets.is_empty(), "reset with pending gets");
+        self.comm = comm;
+        self.exposures = (0..n).map(|_| Payload::virt(0)).collect();
+        self.pending_gets.clear();
+        self.freed_local = vec![false; n];
+        self.freed = false;
+        self.mt = false;
+    }
+
     /// Read `count` elements at `disp` from `target`'s exposure;
     /// returns real data when the exposure is real.
     pub fn read(&self, target: usize, disp: u64, count: u64) -> Option<Vec<f64>> {
@@ -143,6 +158,21 @@ mod tests {
         assert_eq!(w.flush_target(7, 0), None); // drained
         assert_eq!(w.flush_all(7), Some(2.0));
         assert_eq!(w.flush_all(8), Some(9.0));
+    }
+
+    #[test]
+    fn reset_rearms_a_released_slot() {
+        let mut w = WinState::new(CommId(0), 2);
+        w.exposures[0] = Payload::real(vec![1.0]);
+        w.mt = true;
+        assert!(!w.free_local(0));
+        assert!(w.free_local(1));
+        w.reset(CommId(3), 3);
+        assert_eq!(w.comm, CommId(3));
+        assert_eq!(w.exposures.len(), 3);
+        assert!(w.exposures.iter().all(|e| e.elems() == 0));
+        assert!(!w.freed && !w.mt);
+        assert_eq!(w.freed_local, vec![false; 3]);
     }
 
     #[test]

@@ -15,15 +15,26 @@ pub struct WinId(pub usize);
 
 /// Runtime errors (programming errors panic instead, like real MPI
 /// aborts).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MpiError {
-    #[error("rank {rank} is not a member of communicator {comm:?}")]
     NotInComm { rank: usize, comm: CommId },
-    #[error("window {0:?} already freed")]
     WindowFreed(WinId),
-    #[error("request {0} not found")]
     UnknownRequest(usize),
 }
+
+impl std::fmt::Display for MpiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MpiError::NotInComm { rank, comm } => {
+                write!(f, "rank {rank} is not a member of communicator {comm:?}")
+            }
+            MpiError::WindowFreed(w) => write!(f, "window {w:?} already freed"),
+            MpiError::UnknownRequest(r) => write!(f, "request {r} not found"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
 
 /// Application data travelling through the runtime.
 ///

@@ -1,0 +1,241 @@
+//! Persistent RMA window pool (§VI future work: amortizing the
+//! `Win_create` initialization cost).
+//!
+//! The paper's conclusion is that one-sided redistribution matches the
+//! collective baseline *except* for the window-initialization overhead
+//! charged at every reconfiguration: `MPI_Win_create` must pin
+//! (`ibv_reg_mr`) every exposed byte.  Pinning, however, is a property
+//! of the **buffer**, not of the window object — memory that stays
+//! registered with the NIC can back a new window for the price of the
+//! fixed setup (rkey exchange, bookkeeping) alone.
+//!
+//! This module models exactly that split, with explicit warm/cold
+//! accounting in virtual time:
+//!
+//! * a **registration cache** keyed by `(gpid, pin token)` → pinned
+//!   size-class.  A rank's acquire is *warm* when the pin token's
+//!   cached class covers the new exposure; only *cold* acquires charge
+//!   `beta_register × bytes` (see [`CostModel::window_acquire`]).
+//!   Size-classes are power-of-two byte buckets so a slightly smaller
+//!   re-exposure still reuses the pinned region.
+//! * a **free list** of released, epoch-capable [`WinState`] slots
+//!   keyed by `(communicator, size-class)`.  `win_acquire` reuses a
+//!   pooled slot instead of growing the window table; `win_release`
+//!   returns the slot without deregistering.
+//!
+//! The pool is pure mechanism: `MpiProc::win_create`/`win_free` (the
+//! paper's cold path) never touch it, so pool-off behaviour is
+//! bit-identical to the seed model.  Policy — which MaM registry
+//! entries pin their windows — lives in [`crate::mam::winpool`].
+//!
+//! [`CostModel::window_acquire`]: crate::netmodel::CostModel::window_acquire
+//! [`WinState`]: super::rma::WinState
+
+use std::collections::BTreeMap;
+
+use super::types::{CommId, WinId};
+
+/// Power-of-two size class of an exposure: smallest `c` with
+/// `2^c >= bytes` (0 for empty exposures).
+pub fn size_class(bytes: u64) -> u32 {
+    if bytes <= 1 {
+        0
+    } else {
+        u64::BITS - (bytes - 1).leading_zeros()
+    }
+}
+
+/// Warm/cold accounting of the pool, in counts and virtual seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WinPoolStats {
+    /// Acquires that paid the full registration cost.
+    pub cold_acquires: u64,
+    /// Acquires satisfied from the registration cache.
+    pub warm_acquires: u64,
+    /// Windows returned to the free list by `win_release`.
+    pub releases: u64,
+    /// Pooled `WinState` slots reused (vs freshly allocated).
+    pub slot_reuses: u64,
+    /// Virtual seconds of registration charged by cold acquires.
+    pub cold_reg_time: f64,
+    /// Virtual seconds of registration *avoided* by warm acquires
+    /// (what the cold path would have charged, minus the warm attach).
+    pub warm_reg_saved: f64,
+    /// Register-on-receive pre-pins (MaM pinning a freshly received
+    /// block off the collective critical path).
+    pub pre_pins: u64,
+    /// Virtual seconds charged by those pre-pins (local, overlappable).
+    pub pre_pin_time: f64,
+}
+
+/// The world-global window pool (one per [`MpiWorld`]).
+///
+/// [`MpiWorld`]: super::world::MpiWorld
+#[derive(Debug, Default)]
+pub struct WinPool {
+    /// Registration cache: (gpid, pin token) → pinned size class.
+    /// BTreeMaps keep every lookup order-deterministic — the DES
+    /// guarantees bit-identical reruns and the pool must not break
+    /// that.
+    pinned: BTreeMap<(usize, u64), u32>,
+    /// Released window slots: (comm, size class) → slot ids.
+    free: BTreeMap<(CommId, u32), Vec<WinId>>,
+    stats: WinPoolStats,
+}
+
+impl WinPool {
+    pub fn new() -> WinPool {
+        WinPool::default()
+    }
+
+    /// Is an acquire of `bytes` under `token` warm for `gpid`?  Empty
+    /// exposures (`NULL`, the drain side of Alg. 2 L3) are always warm:
+    /// there is nothing to register.
+    pub fn is_warm(&self, gpid: usize, token: u64, bytes: u64) -> bool {
+        bytes == 0
+            || self
+                .pinned
+                .get(&(gpid, token))
+                .is_some_and(|&c| c >= size_class(bytes))
+    }
+
+    /// Record a cold registration: the token now covers `bytes`.
+    pub fn record_pin(&mut self, gpid: usize, token: u64, bytes: u64) {
+        let class = size_class(bytes);
+        let e = self.pinned.entry((gpid, token)).or_insert(class);
+        *e = (*e).max(class);
+    }
+
+    /// Drop every pin of `gpid` (process retirement: its memory is
+    /// gone, a later process reusing the gpid must re-register).
+    pub fn unpin_all(&mut self, gpid: usize) {
+        self.pinned.retain(|&(g, _), _| g != gpid);
+    }
+
+    /// Account one acquire.  `saved` is the registration time a warm
+    /// acquire avoided (cold charge minus warm attach).
+    pub fn note_acquire(&mut self, warm: bool, charged: f64, saved: f64) {
+        if warm {
+            self.stats.warm_acquires += 1;
+            self.stats.warm_reg_saved += saved;
+        } else {
+            self.stats.cold_acquires += 1;
+            self.stats.cold_reg_time += charged;
+        }
+    }
+
+    /// Account one register-on-receive pre-pin of `dt` virtual seconds.
+    pub fn note_pre_pin(&mut self, dt: f64) {
+        self.stats.pre_pins += 1;
+        self.stats.pre_pin_time += dt;
+    }
+
+    /// Take a released slot usable for a window on `comm` whose largest
+    /// exposure has class `class` — smallest adequate class wins.
+    pub fn take_slot(&mut self, comm: CommId, class: u32) -> Option<WinId> {
+        let cl = self
+            .free
+            .range((comm, class)..=(comm, u32::MAX))
+            .find(|(_, v)| !v.is_empty())
+            .map(|(&(_, cl), _)| cl)?;
+        let win = self.free.get_mut(&(comm, cl)).and_then(|v| v.pop());
+        if win.is_some() {
+            self.stats.slot_reuses += 1;
+        }
+        win
+    }
+
+    /// File a released window slot for reuse.
+    pub fn put_slot(&mut self, comm: CommId, class: u32, win: WinId) {
+        self.free.entry((comm, class)).or_default().push(win);
+        self.stats.releases += 1;
+    }
+
+    /// Snapshot of the warm/cold accounting.
+    pub fn stats(&self) -> WinPoolStats {
+        self.stats
+    }
+
+    /// Free-list population (diagnostics).
+    pub fn free_slots(&self) -> usize {
+        self.free.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_classes_are_pow2_buckets() {
+        assert_eq!(size_class(0), 0);
+        assert_eq!(size_class(1), 0);
+        assert_eq!(size_class(2), 1);
+        assert_eq!(size_class(3), 2);
+        assert_eq!(size_class(4), 2);
+        assert_eq!(size_class(1024), 10);
+        assert_eq!(size_class(1025), 11);
+    }
+
+    #[test]
+    fn pins_warm_same_class_and_below() {
+        let mut p = WinPool::new();
+        assert!(p.is_warm(0, 7, 0), "NULL exposure registers nothing");
+        assert!(!p.is_warm(0, 7, 100));
+        p.record_pin(0, 7, 100); // class 7 (128 B)
+        assert!(p.is_warm(0, 7, 100));
+        assert!(p.is_warm(0, 7, 128)); // same class
+        assert!(p.is_warm(0, 7, 10)); // below
+        assert!(!p.is_warm(0, 7, 129)); // above
+        assert!(!p.is_warm(1, 7, 10)); // other rank
+        assert!(!p.is_warm(0, 8, 10)); // other token
+    }
+
+    #[test]
+    fn pin_class_only_grows() {
+        let mut p = WinPool::new();
+        p.record_pin(3, 1, 1 << 20);
+        p.record_pin(3, 1, 16); // smaller re-pin must not shrink
+        assert!(p.is_warm(3, 1, 1 << 20));
+    }
+
+    #[test]
+    fn unpin_all_clears_one_rank() {
+        let mut p = WinPool::new();
+        p.record_pin(0, 1, 64);
+        p.record_pin(1, 1, 64);
+        p.unpin_all(0);
+        assert!(!p.is_warm(0, 1, 64));
+        assert!(p.is_warm(1, 1, 64));
+    }
+
+    #[test]
+    fn slots_prefer_smallest_adequate_class() {
+        let mut p = WinPool::new();
+        let c = CommId(0);
+        p.put_slot(c, 10, WinId(1));
+        p.put_slot(c, 20, WinId(2));
+        assert_eq!(p.free_slots(), 2);
+        // Class 12 request: skip the class-10 slot, take class-20.
+        assert_eq!(p.take_slot(c, 12), Some(WinId(2)));
+        // Class 4 request: the class-10 slot is the smallest adequate.
+        assert_eq!(p.take_slot(c, 4), Some(WinId(1)));
+        assert_eq!(p.take_slot(c, 0), None);
+        // Other communicators never match.
+        p.put_slot(c, 5, WinId(3));
+        assert_eq!(p.take_slot(CommId(1), 0), None);
+    }
+
+    #[test]
+    fn stats_track_warm_and_cold() {
+        let mut p = WinPool::new();
+        p.note_acquire(false, 2.5, 0.0);
+        p.note_acquire(true, 0.0, 2.0);
+        p.note_acquire(true, 0.0, 1.0);
+        let s = p.stats();
+        assert_eq!(s.cold_acquires, 1);
+        assert_eq!(s.warm_acquires, 2);
+        assert!((s.cold_reg_time - 2.5).abs() < 1e-12);
+        assert!((s.warm_reg_saved - 3.0).abs() < 1e-12);
+    }
+}

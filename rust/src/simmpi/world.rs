@@ -18,6 +18,7 @@ use super::proc::MpiProc;
 use super::request::ReqState;
 use super::rma::WinState;
 use super::types::{CommId, Payload};
+use super::winpool::{WinPool, WinPoolStats};
 
 /// The initial world communicator.
 pub const WORLD: CommId = CommId(0);
@@ -111,6 +112,9 @@ pub struct MpiWorld {
     pub(crate) procs: Vec<ProcState>,
     pub(crate) comms: Vec<CommState>,
     pub(crate) windows: Vec<WinState>,
+    /// Persistent window pool: registration cache + released slots
+    /// (§VI; see [`crate::simmpi::winpool`]).
+    pub(crate) win_pool: WinPool,
     pub(crate) colls: HashMap<(CommId, u64), CollState>,
     pub(crate) requests: Vec<ReqState>,
     /// Communicators produced by `spawn_merge` / `comm_sub`, keyed by
@@ -140,6 +144,7 @@ impl MpiWorld {
             procs: Vec::new(),
             comms: Vec::new(),
             windows: Vec::new(),
+            win_pool: WinPool::new(),
             colls: HashMap::new(),
             requests: Vec::new(),
             derived_comms: HashMap::new(),
@@ -166,11 +171,19 @@ impl MpiWorld {
         gpid
     }
 
-    /// Mark a process exited and release its core slot.
+    /// Mark a process exited and release its core slot.  Its pinned
+    /// registrations die with it — a later process must re-register.
     pub(crate) fn retire_proc(&mut self, gpid: usize) {
         let slot = self.procs[gpid].core_slot;
         self.procs[gpid].exited = true;
         self.core_slots[slot] = None;
+        self.win_pool.unpin_all(gpid);
+    }
+
+    /// Warm/cold accounting of the window pool (experiment harnesses
+    /// read this through the world handle after `run`).
+    pub fn win_pool_stats(&self) -> WinPoolStats {
+        self.win_pool.stats()
     }
 
     /// Create a communicator over the given gpids; returns its id.

@@ -5,6 +5,17 @@
 
 use std::collections::BTreeMap;
 
+/// The one `on|off` toggle grammar, shared by CLI options and config
+/// strings (e.g. `--win-pool on` / `"win_pool": "on"`) so the two
+/// surfaces cannot drift.
+pub fn parse_toggle(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Some(true),
+        "off" | "false" | "0" | "no" => Some(false),
+        _ => None,
+    }
+}
+
 /// Specification of one option.
 #[derive(Clone, Debug)]
 pub struct OptSpec {
@@ -216,6 +227,26 @@ mod tests {
         assert_eq!(args.get("pairs"), Some("all")); // default
         assert!(args.flag("verbose"));
         assert!(!args.flag("quiet"));
+    }
+
+    #[test]
+    fn toggle_values_parse() {
+        // The shared on|off grammar behind `--win-pool` and config
+        // strings, driven through a parsed option value.
+        let cli = Cli {
+            prog: "p",
+            about: "t",
+            commands: vec![Command::new("run", "r").opt("win-pool", "off", "pool toggle")],
+        };
+        let (_, a) = cli.parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.get("win-pool").and_then(parse_toggle), Some(false)); // default
+        let (_, a) = cli.parse(&sv(&["run", "--win-pool", "on"])).unwrap();
+        assert_eq!(a.get("win-pool").and_then(parse_toggle), Some(true));
+        let (_, a) = cli.parse(&sv(&["run", "--win-pool=ON"])).unwrap();
+        assert_eq!(a.get("win-pool").and_then(parse_toggle), Some(true));
+        let (_, a) = cli.parse(&sv(&["run", "--win-pool", "sideways"])).unwrap();
+        assert_eq!(a.get("win-pool").and_then(parse_toggle), None);
+        assert_eq!(a.get("missing").and_then(parse_toggle), None);
     }
 
     #[test]

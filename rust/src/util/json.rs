@@ -21,12 +21,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset and message.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ------------------------------------------------------ accessors
@@ -460,7 +467,8 @@ mod tests {
 
     #[test]
     fn roundtrip_compact_and_pretty() {
-        let src = r#"{"net":{"alpha":1.6e-06,"beta":8.6e-11},"nodes":8,"names":["a","b"],"on":true}"#;
+        let src =
+            r#"{"net":{"alpha":1.6e-06,"beta":8.6e-11},"nodes":8,"names":["a","b"],"on":true}"#;
         let v = Json::parse(src).unwrap();
         let v2 = Json::parse(&v.to_compact()).unwrap();
         assert_eq!(v, v2);

@@ -1,9 +1,9 @@
 //! Small self-contained substrates that the rest of the crate builds on.
 //!
-//! The build environment is fully offline with a minimal vendored crate
-//! set (`xla`, `anyhow`, `thiserror`, `log`), so the usual ecosystem
-//! helpers (serde, clap, criterion, proptest, rand) are implemented
-//! here from scratch:
+//! The build environment is fully offline with **no** external crates
+//! (the optional `xla` binding is feature-gated in [`crate::runtime`]),
+//! so the usual ecosystem helpers (serde, clap, criterion, proptest,
+//! rand, thiserror) are implemented here from scratch:
 //!
 //! * [`rng`]      — a seedable SplitMix64/xoshiro256** PRNG,
 //! * [`stats`]    — summary statistics (median, percentiles, CI),

@@ -4,7 +4,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use proteo::mam::{Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy};
+use proteo::mam::{Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy, WinPoolPolicy};
 use proteo::netmodel::{NetParams, Topology};
 use proteo::proteo::{run_once, RunSpec};
 use proteo::rms::{Policy, Rms};
@@ -30,6 +30,7 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         post_iters: 2,
         spawn_cost: 0.05,
         seed: 11,
+        win_pool: WinPoolPolicy::off(),
     }
 }
 
@@ -200,6 +201,7 @@ fn multi_resize_marathon_with_sam() {
                 method: Method::RmaLockall,
                 strategy: Strategy::WaitDrains,
                 spawn_cost: 0.01,
+                win_pool: WinPoolPolicy::off(),
             },
         );
         run_stages(&p, WORLD, 0, &seq, &cfg0, &t2, &sz2, mam);

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use proteo::mam::{
     block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
+    WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -43,7 +44,12 @@ fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_
             );
         }
         let decls = reg.decls();
-        let cfg = ReconfigCfg { method, strategy, spawn_cost: 0.01 };
+        let cfg = ReconfigCfg {
+            method,
+            strategy,
+            spawn_cost: 0.01,
+            win_pool: WinPoolPolicy::off(),
+        };
         let mut mam = Mam::new(reg, cfg.clone());
         let totals3 = totals2.clone();
         let v3 = v2.clone();

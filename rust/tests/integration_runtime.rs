@@ -5,11 +5,13 @@
 //! artifacts have not been built.
 
 use proteo::linalg::{self, EllMatrix};
-use proteo::runtime::{artifacts_available, artifacts_dir, CgRuntime, CgState};
+use proteo::runtime::{artifacts_dir, runtime_available, CgRuntime, CgState};
 
 fn runtime_or_skip() -> Option<CgRuntime> {
-    if !artifacts_available() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    if !runtime_available() {
+        eprintln!(
+            "SKIP: PJRT runtime unavailable (needs `make artifacts` and `--features pjrt`)"
+        );
         return None;
     }
     Some(CgRuntime::load(artifacts_dir()).expect("load artifacts"))

@@ -9,6 +9,7 @@ use std::sync::{Arc, Mutex};
 
 use proteo::mam::{
     block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
+    WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -40,7 +41,12 @@ fn run_and_collect(
         let mut reg = Registry::new();
         reg.register("A", DataKind::Constant, total, local);
         let decls = reg.decls();
-        let cfg = ReconfigCfg { method, strategy, spawn_cost: 0.001 };
+        let cfg = ReconfigCfg {
+            method,
+            strategy,
+            spawn_cost: 0.001,
+            win_pool: WinPoolPolicy::off(),
+        };
         let mut mam = Mam::new(reg, cfg.clone());
         let c3 = c2.clone();
         let dd2 = dd.clone();
@@ -154,7 +160,12 @@ fn prop_block_sizes_after_resize_match_block_of() {
                 let mut reg = Registry::new();
                 reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
                 let decls = reg.decls();
-                let cfg = ReconfigCfg { method: m, strategy: s, spawn_cost: 0.001 };
+                let cfg = ReconfigCfg {
+                    method: m,
+                    strategy: s,
+                    spawn_cost: 0.001,
+                    win_pool: WinPoolPolicy::off(),
+                };
                 let mut mam = Mam::new(reg, cfg.clone());
                 let c3 = c2.clone();
                 let cfg2 = cfg.clone();
@@ -220,7 +231,12 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                     let mut reg = Registry::new();
                     reg.register("A", DataKind::Constant, total, local);
                     let decls = reg.decls();
-                    let cfg = ReconfigCfg { method: m, strategy: s, spawn_cost: 0.001 };
+                    let cfg = ReconfigCfg {
+                        method: m,
+                        strategy: s,
+                        spawn_cost: 0.001,
+                        win_pool: WinPoolPolicy::off(),
+                    };
                     let mut mam = Mam::new(reg, cfg.clone());
                     let cfg2 = cfg.clone();
                     let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
