@@ -19,7 +19,8 @@ use std::sync::{Arc, Mutex};
 
 use proteo::linalg::{self, EllMatrix};
 use proteo::mam::{
-    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy, WinPoolPolicy,
+    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy,
+    WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::runtime::{artifacts_dir, runtime_available, CgRuntime, CgState};
@@ -87,6 +88,7 @@ fn main() {
             method: Method::RmaLockall,
             strategy: Strategy::WaitDrains,
             spawn_cost: 0.1,
+            spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::on(),
         };
         let mut mam = Mam::new(reg, cfg.clone());

@@ -11,7 +11,8 @@
 use std::sync::Arc;
 
 use proteo::mam::{
-    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy, WinPoolPolicy,
+    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy,
+    WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -36,6 +37,7 @@ fn main() {
             method: Method::Collective,
             strategy: Strategy::WaitDrains,
             spawn_cost: 0.05,
+            spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
         };
         let mut mam = Mam::new(reg, cfg.clone());

@@ -1,0 +1,20 @@
+//! Bench: **Figure 10** (beyond the paper) — grow reconfiguration time
+//! under the Sequential / Parallel / Async spawn strategies (see
+//! `experiments::fig10_spawn`).  Sweeps the grow pairs of §V-A at full
+//! problem scale; tune with PROTEO_BENCH_REPS/_SCALE/_PAIRS.
+
+use proteo::experiments::{fig10_spawn, FigOptions};
+
+fn main() {
+    let opts = FigOptions::bench();
+    eprintln!(
+        "bench fig10: reps={} scale={} pairs={}",
+        opts.reps,
+        opts.scale,
+        if opts.pairs.is_empty() { "all-grows".to_string() } else { format!("{:?}", opts.pairs) }
+    );
+    let wall = std::time::Instant::now();
+    let table = fig10_spawn(&opts);
+    println!("{}", table.render());
+    eprintln!("harness wall time: {:.2}s", wall.elapsed().as_secs_f64());
+}

@@ -152,15 +152,18 @@ fn main() {
     runtime_benches(&mut b);
     b.print_report("microbenchmarks (all layers)");
 
-    // §VI ablations at reduced scale so the bench stays quick.
-    let opts = FigOptions {
-        reps: 1,
-        scale: 1,
-        pairs: vec![(20, 160), (160, 20), (160, 40)],
-        seed: 0xC0FFEE,
-    };
+    // §VI ablations at reduced scale so the bench stays quick.  The
+    // PROTEO_BENCH_* env vars (scale, pairs, seed) apply here too so CI
+    // can shrink the sweep without recompiling; reps stay at 1.
+    let mut opts = FigOptions::bench();
+    opts.reps = 1;
+    if opts.pairs.is_empty() {
+        opts.pairs = vec![(20, 160), (160, 20), (160, 40)];
+    }
     println!("{}", ablation::single_window(&opts).render());
     println!("{}", ablation::registration_sweep(&opts, 20, 160).render());
     // §VI window pool: cold vs warm reconfiguration latency head-to-head.
     println!("{}", ablation::win_pool(&opts).render());
+    // Spawn strategies: the other half of the initialization cost.
+    println!("{}", ablation::spawn_strategies(&opts).render());
 }

@@ -14,6 +14,8 @@
 //!   "reps": 5,
 //!   "scale": 10,
 //!   "win_pool": "on",
+//!   "win_pool_cap": 8,
+//!   "spawn_strategy": "async",
 //!   "net": { "beta_register_gbps": 2.0, "eager_threshold": 65536 },
 //!   "sam": { "flops_per_core": 2.0e9, "jitter": 0.02 }
 //! }
@@ -22,7 +24,7 @@
 //! The CLI (`proteo run --config file.json`) and the experiment
 //! harnesses consume [`ExperimentConfig`].
 
-use crate::mam::{Method, Strategy, WinPoolPolicy};
+use crate::mam::{Method, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::RunSpec;
 use crate::sam::SamConfig;
 use crate::util::json::Json;
@@ -37,7 +39,11 @@ pub struct ExperimentConfig {
     pub scale: u64,
     pub seed: u64,
     /// Persistent RMA window pool (`"win_pool": "on"` / `true`, §VI).
+    /// `"win_pool_cap": N` bounds the per-rank registration cache.
     pub win_pool: WinPoolPolicy,
+    /// Spawn strategy of the Merge grow path
+    /// (`"spawn_strategy": "sequential" | "parallel" | "async"`).
+    pub spawn_strategy: SpawnStrategy,
     pub base: RunSpec,
 }
 
@@ -52,6 +58,7 @@ impl ExperimentConfig {
             scale: 1,
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
+            spawn_strategy: SpawnStrategy::Sequential,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
     }
@@ -74,6 +81,7 @@ impl ExperimentConfig {
         spec.strategy = self.strategy;
         spec.seed = self.seed;
         spec.win_pool = self.win_pool;
+        spec.spawn_strategy = self.spawn_strategy;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
             spec.sam.colind_elems /= self.scale;
@@ -124,6 +132,18 @@ impl ExperimentConfig {
                 }
                 _ => return Err("win_pool must be a bool or \"on\"/\"off\"".into()),
             };
+        }
+        if let Some(cap) = doc.get("win_pool_cap") {
+            let cap = cap
+                .as_usize()
+                .ok_or("win_pool_cap must be a non-negative integer (0 = unbounded)")?;
+            cfg.win_pool = cfg.win_pool.with_cap(cap);
+        }
+        if let Some(ss) = doc.get("spawn_strategy") {
+            let ss = ss.as_str().ok_or("spawn_strategy must be a string")?;
+            cfg.spawn_strategy = SpawnStrategy::parse(ss).ok_or_else(|| {
+                format!("bad spawn_strategy '{ss}' (sequential | parallel | async)")
+            })?;
         }
         if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
             cfg.pairs = pairs
@@ -192,6 +212,8 @@ impl ExperimentConfig {
             ("scale", Json::num(self.scale as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("win_pool", Json::str(self.win_pool.label())),
+            ("win_pool_cap", Json::num(self.win_pool.cap as f64)),
+            ("spawn_strategy", Json::str(self.spawn_strategy.label())),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
     }
@@ -319,6 +341,60 @@ mod tests {
         assert_eq!(
             cfg.to_json().get_path("win_pool").unwrap().as_str(),
             Some("on")
+        );
+    }
+
+    #[test]
+    fn spawn_strategy_parses_propagates_and_rejects_bad_values() {
+        // Default: sequential (the paper's single-constant model).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert_eq!(cfg.spawn_strategy, SpawnStrategy::Sequential);
+        assert_eq!(cfg.spec_for(20, 40).spawn_strategy, SpawnStrategy::Sequential);
+        // All spellings the CLI accepts.
+        for (src, want) in [
+            (r#"{"spawn_strategy": "sequential"}"#, SpawnStrategy::Sequential),
+            (r#"{"spawn_strategy": "seq"}"#, SpawnStrategy::Sequential),
+            (r#"{"spawn_strategy": "parallel"}"#, SpawnStrategy::Parallel),
+            (r#"{"spawn_strategy": "par"}"#, SpawnStrategy::Parallel),
+            (r#"{"spawn_strategy": "async"}"#, SpawnStrategy::Async),
+            (r#"{"spawn_strategy": "ASYNC"}"#, SpawnStrategy::Async),
+        ] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.spawn_strategy, want, "{src}");
+            // Round-trip into the per-pair run spec.
+            assert_eq!(cfg.spec_for(20, 40).spawn_strategy, want, "{src}");
+        }
+        // Bad values error out with the grammar in the message.
+        let err = ExperimentConfig::from_str(r#"{"spawn_strategy": "forkbomb"}"#).unwrap_err();
+        assert!(err.contains("spawn_strategy"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"spawn_strategy": 3}"#).is_err());
+        // Provenance carries the label back out.
+        let cfg = ExperimentConfig::from_str(r#"{"spawn_strategy": "parallel"}"#).unwrap();
+        assert_eq!(
+            cfg.to_json().get_path("spawn_strategy").unwrap().as_str(),
+            Some("parallel")
+        );
+    }
+
+    #[test]
+    fn win_pool_cap_parses_propagates_and_rejects_bad_values() {
+        // Default: unbounded.
+        let cfg = ExperimentConfig::from_str(r#"{"win_pool": "on"}"#).unwrap();
+        assert_eq!(cfg.win_pool.cap, 0);
+        // Cap composes with the toggle regardless of key order.
+        let cfg =
+            ExperimentConfig::from_str(r#"{"win_pool": "on", "win_pool_cap": 8}"#).unwrap();
+        assert!(cfg.win_pool.enabled);
+        assert_eq!(cfg.win_pool.cap, 8);
+        assert_eq!(cfg.spec_for(20, 40).win_pool.cap, 8);
+        // Bad values error out.
+        assert!(ExperimentConfig::from_str(r#"{"win_pool_cap": -1}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"win_pool_cap": 1.5}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"win_pool_cap": "many"}"#).is_err());
+        // Provenance includes the cap.
+        assert_eq!(
+            cfg.to_json().get_path("win_pool_cap").unwrap().as_usize(),
+            Some(8)
         );
     }
 

@@ -158,6 +158,40 @@ pub fn win_pool(opts: &FigOptions) -> FigureTable {
     t
 }
 
+/// Spawn-strategy ablation (the other half of the initialization
+/// cost): full reconfiguration span of grows under Sequential /
+/// Parallel / Async spawning, for the blocking path, Wait Drains, and
+/// pool-aware Wait Drains (warm registrations leave the spawn as the
+/// dominant setup cost — exactly what Async hides inside the drain
+/// window).  The acceptance pair 8→16 is always included.
+pub fn spawn_strategies(opts: &FigOptions) -> FigureTable {
+    let mut pairs: Vec<(usize, usize)> = vec![(8, 16)];
+    pairs.extend(
+        opts.pairs()
+            .into_iter()
+            .filter(|&(ns, nd)| nd > ns && (ns, nd) != (8, 16)),
+    );
+    let cols = super::spawn_strategy_cols();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(
+        "Ablation: grow reconfiguration time (s) by spawn strategy, RMA-Lockall",
+        "NS->ND",
+        &col_refs,
+        0,
+    );
+    for (ns, nd) in pairs {
+        for (suffix, strategy, pool) in [
+            (" blk", Strategy::Blocking, WinPoolPolicy::off()),
+            (" wd", Strategy::WaitDrains, WinPoolPolicy::off()),
+            (" wd+pool", Strategy::WaitDrains, WinPoolPolicy::on()),
+        ] {
+            let row = super::spawn_strategy_row(opts, ns, nd, strategy, pool);
+            t.row(&format!("{ns}->{nd}{suffix}"), row);
+        }
+    }
+    t
+}
+
 /// §VI ablation: per-structure windows (the paper's design) vs one
 /// fused window (the proposed fix), blocking RMA-Lockall.
 pub fn single_window(opts: &FigOptions) -> FigureTable {
@@ -299,8 +333,29 @@ mod tests {
     }
 
     #[test]
+    fn spawn_ablation_parallel_and_async_strictly_reduce_grow_time() {
+        // The acceptance criterion: on the 8→16 grow, Parallel and
+        // Async spawning strictly undercut the Sequential constant in
+        // `proteo ablation spawn` — on the blocking row, the WD row,
+        // and the pool-aware WD row.
+        let opts = FigOptions { pairs: vec![(8, 16)], scale: 10_000, ..FigOptions::quick() };
+        let t = spawn_strategies(&opts);
+        assert_eq!(t.rows.len(), 3, "blk, wd, wd+pool rows");
+        for (r, label) in [(0usize, "blk"), (1, "wd"), (2, "wd+pool")] {
+            let (seq, par, asy) = (t.value(r, 0), t.value(r, 1), t.value(r, 2));
+            assert!(
+                seq.is_finite() && par.is_finite() && asy.is_finite(),
+                "{label}: {seq} {par} {asy}"
+            );
+            assert!(par < seq, "{label}: parallel {par} !< sequential {seq}");
+            assert!(asy < seq, "{label}: async {asy} !< sequential {seq}");
+        }
+    }
+
+    #[test]
     fn eager_sweep_runs_and_is_finite() {
-        let opts = FigOptions { reps: 1, scale: 1000, pairs: vec![], seed: 4 };
+        let opts =
+            FigOptions { reps: 1, scale: 1000, pairs: vec![], seed: 4, ..FigOptions::default() };
         let t = eager_sweep(&opts, 8, 4);
         for c in 0..4 {
             assert!(t.value(0, c).is_finite() && t.value(0, c) > 0.0);
@@ -309,7 +364,8 @@ mod tests {
 
     #[test]
     fn registration_sweep_monotone() {
-        let opts = FigOptions { reps: 1, scale: 1000, pairs: vec![], seed: 3 };
+        let opts =
+            FigOptions { reps: 1, scale: 1000, pairs: vec![], seed: 3, ..FigOptions::default() };
         let t = registration_sweep(&opts, 20, 40);
         // Faster registration → RMA relatively better (ratio grows).
         let first = t.value(0, 0);

@@ -10,9 +10,39 @@
 //! [`FigOptions::quick`] shrinks the problem 100× and runs 1
 //! repetition — same code path, CI-friendly runtime.
 
-use crate::mam::{version_label, Method, Strategy};
+use crate::mam::{version_label, Method, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::{analysis, run_median, sarteco25_pairs, RunResult, RunSpec};
 use crate::util::benchkit::{FigureTable, Unit};
+
+/// One column of a figure sweep: a (method, strategy) version plus the
+/// window-pool toggle, so pooled variants can ride alongside the seed
+/// versions in the same table (`--win-pool on` / `PROTEO_BENCH_WINPOOL`).
+#[derive(Clone, Copy, Debug)]
+pub struct VersionSpec {
+    pub method: Method,
+    pub strategy: Strategy,
+    pub win_pool: WinPoolPolicy,
+}
+
+impl VersionSpec {
+    pub fn new(method: Method, strategy: Strategy) -> VersionSpec {
+        VersionSpec { method, strategy, win_pool: WinPoolPolicy::off() }
+    }
+
+    pub fn pooled(method: Method, strategy: Strategy) -> VersionSpec {
+        VersionSpec { method, strategy, win_pool: WinPoolPolicy::on() }
+    }
+
+    /// Figure label, e.g. "RMA-Lockall-WD" or "RMA-Lockall-WD+pool".
+    pub fn label(&self) -> String {
+        let base = version_label(self.method, self.strategy);
+        if self.win_pool.enabled {
+            format!("{base}+pool")
+        } else {
+            base
+        }
+    }
+}
 
 /// Sweep options shared by all figure generators.
 #[derive(Clone, Debug)]
@@ -25,11 +55,14 @@ pub struct FigOptions {
     /// Restrict to a subset of pairs (empty = all 12).
     pub pairs: Vec<(usize, usize)>,
     pub seed: u64,
+    /// Add `+pool` variants of the RMA versions to every figure's
+    /// version set (satellite of the §VI window-pool study).
+    pub pool_variants: bool,
 }
 
 impl Default for FigOptions {
     fn default() -> Self {
-        FigOptions { reps: 3, scale: 1, pairs: Vec::new(), seed: 0xC0FFEE }
+        FigOptions { reps: 3, scale: 1, pairs: Vec::new(), seed: 0xC0FFEE, pool_variants: false }
     }
 }
 
@@ -52,11 +85,16 @@ impl FigOptions {
                     .collect()
             })
             .unwrap_or_default();
+        let pool_variants = std::env::var("PROTEO_BENCH_WINPOOL")
+            .ok()
+            .and_then(|v| crate::util::cli::parse_toggle(&v))
+            .unwrap_or(false);
         FigOptions {
             reps: env_u64("PROTEO_BENCH_REPS", 3) as usize,
             scale: env_u64("PROTEO_BENCH_SCALE", 1).max(1),
             pairs,
             seed: env_u64("PROTEO_BENCH_SEED", 0xC0FFEE),
+            pool_variants,
         }
     }
 
@@ -67,6 +105,7 @@ impl FigOptions {
             scale: 100,
             pairs: vec![(20, 160), (160, 20), (40, 80), (160, 40)],
             seed: 0xC0FFEE,
+            pool_variants: false,
         }
     }
 
@@ -92,14 +131,35 @@ impl FigOptions {
         spec
     }
 
+    /// Build the run spec for one versioned column of the sweep.
+    pub fn spec_v(&self, ns: usize, nd: usize, v: &VersionSpec) -> RunSpec {
+        let mut spec = self.spec(ns, nd, v.method, v.strategy);
+        spec.win_pool = v.win_pool;
+        spec
+    }
+
+    /// Append pooled variants of the RMA versions when enabled — the
+    /// figure then shows seed and pooled columns side by side.
+    pub fn with_pool_variants(&self, mut versions: Vec<VersionSpec>) -> Vec<VersionSpec> {
+        if self.pool_variants {
+            let pooled: Vec<VersionSpec> = versions
+                .iter()
+                .filter(|v| v.method.is_rma())
+                .map(|v| VersionSpec::pooled(v.method, v.strategy))
+                .collect();
+            versions.extend(pooled);
+        }
+        versions
+    }
+
     /// Run one version set over the selected pairs.
-    pub fn sweep(&self, versions: &[(Method, Strategy)]) -> Vec<PairResults> {
+    pub fn sweep(&self, versions: &[VersionSpec]) -> Vec<PairResults> {
         self.pairs()
             .into_iter()
             .map(|(ns, nd)| {
                 let results = versions
                     .iter()
-                    .map(|&(m, s)| run_median(&self.spec(ns, nd, m, s), self.reps))
+                    .map(|v| run_median(&self.spec_v(ns, nd, v), self.reps))
                     .collect();
                 PairResults { ns, nd, results }
             })
@@ -122,40 +182,40 @@ impl PairResults {
 }
 
 /// The blocking version set (Fig. 3).
-pub fn blocking_versions() -> Vec<(Method, Strategy)> {
+pub fn blocking_versions() -> Vec<VersionSpec> {
     vec![
-        (Method::Collective, Strategy::Blocking),
-        (Method::RmaLock, Strategy::Blocking),
-        (Method::RmaLockall, Strategy::Blocking),
+        VersionSpec::new(Method::Collective, Strategy::Blocking),
+        VersionSpec::new(Method::RmaLock, Strategy::Blocking),
+        VersionSpec::new(Method::RmaLockall, Strategy::Blocking),
     ]
 }
 
 /// The NB + WD version set of §V-C (Figs. 4–6).
-pub fn nbwd_versions() -> Vec<(Method, Strategy)> {
+pub fn nbwd_versions() -> Vec<VersionSpec> {
     vec![
-        (Method::Collective, Strategy::NonBlocking),
-        (Method::Collective, Strategy::WaitDrains),
-        (Method::RmaLock, Strategy::WaitDrains),
-        (Method::RmaLockall, Strategy::WaitDrains),
+        VersionSpec::new(Method::Collective, Strategy::NonBlocking),
+        VersionSpec::new(Method::Collective, Strategy::WaitDrains),
+        VersionSpec::new(Method::RmaLock, Strategy::WaitDrains),
+        VersionSpec::new(Method::RmaLockall, Strategy::WaitDrains),
     ]
 }
 
 /// The threading version set of §V-D (Figs. 7–9).
-pub fn threading_versions() -> Vec<(Method, Strategy)> {
+pub fn threading_versions() -> Vec<VersionSpec> {
     vec![
-        (Method::Collective, Strategy::Threading),
-        (Method::RmaLock, Strategy::Threading),
-        (Method::RmaLockall, Strategy::Threading),
+        VersionSpec::new(Method::Collective, Strategy::Threading),
+        VersionSpec::new(Method::RmaLock, Strategy::Threading),
+        VersionSpec::new(Method::RmaLockall, Strategy::Threading),
     ]
 }
 
-fn labels(versions: &[(Method, Strategy)]) -> Vec<String> {
-    versions.iter().map(|&(m, s)| version_label(m, s)).collect()
+fn labels(versions: &[VersionSpec]) -> Vec<String> {
+    versions.iter().map(|v| v.label()).collect()
 }
 
 fn table(
     title: &str,
-    versions: &[(Method, Strategy)],
+    versions: &[VersionSpec],
     sweep: &[PairResults],
     value: impl Fn(&PairResults, usize) -> f64,
 ) -> FigureTable {
@@ -172,7 +232,7 @@ fn table(
 /// **Fig. 3** — reconfiguration time of the blocking versions, with
 /// speedups relative to COL.
 pub fn fig3_blocking(opts: &FigOptions) -> FigureTable {
-    let versions = blocking_versions();
+    let versions = opts.with_pool_variants(blocking_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 3: blocking redistribution time (s), speedup vs COL",
@@ -185,7 +245,7 @@ pub fn fig3_blocking(opts: &FigOptions) -> FigureTable {
 /// **Fig. 4** — total time after applying Eq. (2) to the NB/WD set,
 /// with speedups relative to COL-NB.
 pub fn fig4_nonblocking(opts: &FigOptions) -> FigureTable {
-    let versions = nbwd_versions();
+    let versions = opts.with_pool_variants(nbwd_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 4: Eq.(2) total time (s), NB/WD versions, speedup vs COL-NB",
@@ -197,7 +257,7 @@ pub fn fig4_nonblocking(opts: &FigOptions) -> FigureTable {
 
 /// **Fig. 5** — ω = T_bg/T_base for the NB/WD set.
 pub fn fig5_omega(opts: &FigOptions) -> FigureTable {
-    let versions = nbwd_versions();
+    let versions = opts.with_pool_variants(nbwd_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 5: omega = T_bg/T_base, NB/WD versions",
@@ -211,7 +271,7 @@ pub fn fig5_omega(opts: &FigOptions) -> FigureTable {
 /// **Fig. 6** — iterations overlapped with the background
 /// redistribution, NB/WD set.
 pub fn fig6_iterations(opts: &FigOptions) -> FigureTable {
-    let versions = nbwd_versions();
+    let versions = opts.with_pool_variants(nbwd_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 6: overlapped iterations, NB/WD versions",
@@ -224,7 +284,7 @@ pub fn fig6_iterations(opts: &FigOptions) -> FigureTable {
 
 /// **Fig. 7** — Eq. (2) totals for the threading set, speedup vs COL-T.
 pub fn fig7_threading(opts: &FigOptions) -> FigureTable {
-    let versions = threading_versions();
+    let versions = opts.with_pool_variants(threading_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 7: Eq.(2) total time (s), T versions, speedup vs COL-T",
@@ -236,7 +296,7 @@ pub fn fig7_threading(opts: &FigOptions) -> FigureTable {
 
 /// **Fig. 8** — ω for the threading set.
 pub fn fig8_omega_threading(opts: &FigOptions) -> FigureTable {
-    let versions = threading_versions();
+    let versions = opts.with_pool_variants(threading_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 8: omega = T_bg/T_base, T versions",
@@ -249,7 +309,7 @@ pub fn fig8_omega_threading(opts: &FigOptions) -> FigureTable {
 
 /// **Fig. 9** — overlapped iterations, threading set.
 pub fn fig9_iterations_threading(opts: &FigOptions) -> FigureTable {
-    let versions = threading_versions();
+    let versions = opts.with_pool_variants(threading_versions());
     let sweep = opts.sweep(&versions);
     table(
         "Fig. 9: overlapped iterations, T versions",
@@ -260,7 +320,62 @@ pub fn fig9_iterations_threading(opts: &FigOptions) -> FigureTable {
     .with_unit(Unit::Count, false)
 }
 
-/// Dispatch a figure by id ("fig3".."fig9").
+/// Column labels of a spawn-strategy sweep (one per strategy).
+pub(crate) fn spawn_strategy_cols() -> Vec<String> {
+    SpawnStrategy::all().iter().map(|s| s.label().to_string()).collect()
+}
+
+/// One row of a spawn-strategy sweep: `reconf_total` of the
+/// `ns`→`nd` grow for every strategy, with the given redistribution
+/// strategy and pool policy.  Shared by `fig10_spawn` and
+/// `ablation::spawn_strategies` so the two sweeps cannot drift.
+pub(crate) fn spawn_strategy_row(
+    opts: &FigOptions,
+    ns: usize,
+    nd: usize,
+    strategy: Strategy,
+    win_pool: WinPoolPolicy,
+) -> Vec<f64> {
+    SpawnStrategy::all()
+        .iter()
+        .map(|&ss| {
+            let mut spec = opts.spec(ns, nd, Method::RmaLockall, strategy);
+            spec.spawn_strategy = ss;
+            spec.win_pool = win_pool;
+            run_median(&spec, opts.reps).reconf_total
+        })
+        .collect()
+}
+
+/// **Fig. 10** (beyond the paper) — full reconfiguration span of a
+/// grow under each spawn strategy, RMA-Lockall-WD: the spawn phase is
+/// the other half of the initialization cost the paper identifies, and
+/// parallel/async spawning bends it the way the window pool bends the
+/// registration half.  Grow pairs only (shrinks never spawn); when the
+/// selected pairs contain no grows, the paper's grow pairs are swept
+/// instead of rendering an empty table.
+pub fn fig10_spawn(opts: &FigOptions) -> FigureTable {
+    let mut pairs: Vec<(usize, usize)> =
+        opts.pairs().into_iter().filter(|&(ns, nd)| nd > ns).collect();
+    if pairs.is_empty() {
+        pairs = sarteco25_pairs().into_iter().filter(|&(ns, nd)| nd > ns).collect();
+    }
+    let cols = spawn_strategy_cols();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(
+        "Fig. 10: grow reconfiguration time (s) by spawn strategy, RMA-Lockall-WD",
+        "NS->ND",
+        &col_refs,
+        0,
+    );
+    for (ns, nd) in pairs {
+        let row = spawn_strategy_row(opts, ns, nd, Strategy::WaitDrains, WinPoolPolicy::off());
+        t.row(&format!("{ns}->{nd}"), row);
+    }
+    t
+}
+
+/// Dispatch a figure by id ("fig3".."fig10").
 pub fn by_name(name: &str, opts: &FigOptions) -> Option<FigureTable> {
     Some(match name {
         "fig3" => fig3_blocking(opts),
@@ -270,11 +385,13 @@ pub fn by_name(name: &str, opts: &FigOptions) -> Option<FigureTable> {
         "fig7" => fig7_threading(opts),
         "fig8" => fig8_omega_threading(opts),
         "fig9" => fig9_iterations_threading(opts),
+        "fig10" => fig10_spawn(opts),
         _ => return None,
     })
 }
 
 pub mod ablation;
+pub mod smoke;
 
 #[cfg(test)]
 mod tests {
@@ -320,5 +437,45 @@ mod tests {
     fn by_name_dispatches() {
         assert!(by_name("fig3", &FigOptions::quick()).is_some());
         assert!(by_name("fig42", &FigOptions::quick()).is_none());
+    }
+
+    #[test]
+    fn pool_variants_add_pooled_rma_columns() {
+        let mut opts = FigOptions::quick();
+        opts.pairs = vec![(8, 4)];
+        opts.scale = 10_000;
+        opts.pool_variants = true;
+        let t = fig3_blocking(&opts);
+        // COL, RMA-Lock, RMA-Lockall + two pooled RMA variants.
+        assert_eq!(t.columns.len(), 5, "{:?}", t.columns);
+        assert_eq!(t.columns[3], "RMA-Lock+pool");
+        assert_eq!(t.columns[4], "RMA-Lockall+pool");
+        // A single (cold) pooled pass can only save the deregistration
+        // on release — never lose to the seed version.
+        assert!(t.value(0, 3) <= t.value(0, 1) + 1e-9);
+        assert!(t.value(0, 4) <= t.value(0, 2) + 1e-9);
+        // Flag off: seed columns only (the default figures unchanged).
+        opts.pool_variants = false;
+        assert_eq!(fig3_blocking(&opts).columns.len(), 3);
+    }
+
+    #[test]
+    fn fig10_sweeps_grow_pairs_by_spawn_strategy() {
+        let opts = FigOptions {
+            pairs: vec![(8, 16), (16, 8)],
+            scale: 10_000,
+            ..FigOptions::quick()
+        };
+        let t = fig10_spawn(&opts);
+        assert_eq!(t.columns, vec!["sequential", "parallel", "async"]);
+        // Shrinks are filtered out — spawn strategies only act on grows.
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0].0, "8->16");
+        let (seq, par, asy) = (t.value(0, 0), t.value(0, 1), t.value(0, 2));
+        assert!(seq.is_finite() && par.is_finite() && asy.is_finite());
+        // The acceptance bar: decomposed strategies strictly reduce the
+        // modeled resize time on the 8→16 grow.
+        assert!(par < seq, "parallel {par} !< sequential {seq}");
+        assert!(asy < seq, "async {asy} !< sequential {seq}");
     }
 }

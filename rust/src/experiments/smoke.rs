@@ -1,0 +1,110 @@
+//! Deterministic bench-smoke metrics for the CI regression gate.
+//!
+//! The DES is bit-deterministic, so *virtual-time* results are stable
+//! across machines and runs — unlike wall-clock benchmarks, they can
+//! gate a CI job without flaking.  `proteo bench-smoke` collects the
+//! key modeled quantities (window-pool cold/warm, spawn strategies,
+//! one end-to-end redistribution) into a flat `{name: seconds}` JSON;
+//! `proteo bench-compare` fails when any entry regresses more than the
+//! tolerance against the committed `BENCH_baseline.json`.
+//!
+//! Baseline lifecycle: the committed baseline starts with an empty
+//! `entries` object (bootstrap — the gate passes and uploads
+//! `BENCH_pr.json` as an artifact); promoting a CI-produced
+//! `BENCH_pr.json` to `BENCH_baseline.json` arms the gate.
+
+use crate::mam::{Method, SpawnStrategy, Strategy, WinPoolPolicy};
+use crate::proteo::run_once;
+use crate::util::json::Json;
+
+use super::{ablation, FigOptions};
+
+/// Schema version of the smoke-metrics JSON.
+pub const SCHEMA: u64 = 1;
+
+fn opts(quick: bool) -> FigOptions {
+    FigOptions {
+        reps: 1,
+        // Quick mode shrinks the workload 10000×; the full smoke uses
+        // the CI-friendly 100× figure scale.
+        scale: if quick { 10_000 } else { 100 },
+        pairs: vec![(8, 4)],
+        seed: 0xC0FFEE,
+        pool_variants: false,
+    }
+}
+
+/// Collect the deterministic smoke metrics (virtual seconds).
+pub fn collect(quick: bool) -> Json {
+    let o = opts(quick);
+    let mut entries: Vec<(String, f64)> = Vec::new();
+
+    // Window pool: no-pool vs cold vs warm on the 8→4 shrink.
+    let wp = ablation::win_pool(&o);
+    for (c, name) in ["no_pool", "cold", "warm"].iter().enumerate() {
+        entries.push((format!("winpool.8to4.{name}"), wp.value(0, c)));
+    }
+
+    // Spawn strategies: the 8→16 grow, blocking / WD / pool-aware WD.
+    let sp = ablation::spawn_strategies(&FigOptions { pairs: vec![(8, 16)], ..o.clone() });
+    for (r, row) in ["blk", "wd", "wd_pool"].iter().enumerate() {
+        for (c, ss) in SpawnStrategy::all().iter().enumerate() {
+            entries.push((format!("spawn.8to16.{row}.{}", ss.label()), sp.value(r, c)));
+        }
+    }
+
+    // One end-to-end run per method family (redistribution time).
+    for (name, m, s) in [
+        ("col.blocking", Method::Collective, Strategy::Blocking),
+        ("rma_lockall.wd", Method::RmaLockall, Strategy::WaitDrains),
+    ] {
+        let mut spec = o.spec(20, 40, m, s);
+        spec.win_pool = WinPoolPolicy::off();
+        let r = run_once(&spec);
+        entries.push((format!("run.20to40.{name}.redist"), r.redist_time));
+        entries.push((format!("run.20to40.{name}.total"), r.reconf_total));
+    }
+
+    let obj: Vec<(&str, Json)> = vec![
+        ("schema", Json::num(SCHEMA as f64)),
+        // Workload provenance: bench-compare refuses to compare
+        // documents produced at different scales.
+        ("mode", Json::str(if quick { "quick" } else { "full" })),
+        (
+            "entries",
+            Json::Obj(entries.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
+    ];
+    Json::obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_is_deterministic_and_finite() {
+        let a = collect(true);
+        let b = collect(true);
+        assert_eq!(a, b, "smoke metrics must be bit-deterministic");
+        let entries = a.get("entries").and_then(|e| e.as_obj()).unwrap();
+        assert!(entries.len() >= 15, "got {} entries", entries.len());
+        for (k, v) in entries {
+            let v = v.as_f64().unwrap();
+            assert!(v.is_finite() && v > 0.0, "{k} = {v}");
+        }
+        assert_eq!(a.get("schema").unwrap().as_u64(), Some(SCHEMA));
+    }
+
+    #[test]
+    fn collect_reflects_the_acceptance_orderings() {
+        let j = collect(true);
+        // Note: entry names contain dots, so index the object directly
+        // rather than via `get_path`.
+        let e = |k: &str| j.get("entries").unwrap().get(k).unwrap().as_f64().unwrap();
+        // Warm pool beats cold; parallel/async spawn beat sequential.
+        assert!(e("winpool.8to4.warm") < e("winpool.8to4.cold"));
+        assert!(e("spawn.8to16.blk.parallel") < e("spawn.8to16.blk.sequential"));
+        assert!(e("spawn.8to16.wd.async") < e("spawn.8to16.wd.sequential"));
+    }
+}

@@ -12,13 +12,14 @@
 use std::process::ExitCode;
 
 use proteo::config::ExperimentConfig;
-use proteo::experiments::{self, ablation, FigOptions};
+use proteo::experiments::{self, ablation, smoke, FigOptions};
 use proteo::linalg::EllMatrix;
-use proteo::mam::{Method, Strategy, WinPoolPolicy};
+use proteo::mam::{Method, SpawnStrategy, Strategy, WinPoolPolicy};
 use proteo::netmodel::NetParams;
 use proteo::proteo::{run_median, RunSpec};
 use proteo::runtime::{artifacts_dir, CgRuntime};
-use proteo::util::cli::{Args, Cli, Command};
+use proteo::util::benchkit::compare_bench;
+use proteo::util::cli::{parse_toggle, Args, Cli, Command};
 use proteo::util::json::Json;
 use proteo::util::stats::{fmt_bytes, fmt_seconds};
 
@@ -27,11 +28,12 @@ fn cli() -> Cli {
         prog: "proteo",
         about: "malleable-MPI reconfiguration study (CS.DC 2025 reproduction)",
         commands: vec![
-            Command::new("exp", "regenerate a paper figure (fig3..fig9 or 'all')")
+            Command::new("exp", "regenerate a paper figure (fig3..fig10 or 'all')")
                 .opt("reps", "3", "repetitions per point (paper: 20)")
                 .opt("scale", "1", "divide the problem size by this factor")
                 .opt("pairs", "", "comma list like 20:160,160:20 (default: all 12)")
                 .opt("seed", "12648430", "base RNG seed")
+                .opt("win-pool", "off", "add +pool variants to the version sets: on | off")
                 .flag("quick", "CI-sized sweep (scale 100, 4 pairs, 1 rep)"),
             Command::new("run", "run a single reconfiguration experiment")
                 .opt("config", "", "JSON config file (overrides other options)")
@@ -43,10 +45,12 @@ fn cli() -> Cli {
                 .opt("scale", "1", "problem-size divisor")
                 .opt("seed", "12648430", "base RNG seed")
                 .opt("win-pool", "off", "persistent RMA window pool (§VI): on | off")
+                .opt("win-pool-cap", "0", "per-rank pin-cache bound (0 = unbounded)")
+                .opt("spawn-strategy", "sequential", "sequential | parallel | async")
                 .flag("json", "emit the result as JSON"),
             Command::new(
                 "ablation",
-                "ablations: single-window | register-sweep | eager-sweep | win-pool",
+                "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn",
             )
             .opt("ns", "20", "source ranks (register-sweep)")
             .opt("nd", "160", "drain ranks (register-sweep)")
@@ -57,6 +61,11 @@ fn cli() -> Cli {
                 .opt("iters", "200", "max iterations")
                 .opt("tol", "1e-5", "relative residual target")
                 .opt("artifacts", "", "artifacts dir (default: $PROTEO_ARTIFACTS or artifacts/)"),
+            Command::new("bench-smoke", "collect deterministic bench metrics as JSON")
+                .opt("out", "BENCH_pr.json", "output path")
+                .flag("quick", "CI-sized workload"),
+            Command::new("bench-compare", "gate: compare two bench-smoke JSON files")
+                .opt("tol", "0.10", "allowed relative regression before failing"),
             Command::new("info", "print calibration constants and artifact manifest"),
         ],
     }
@@ -80,25 +89,37 @@ fn parse_pairs(s: &str) -> Result<Vec<(usize, usize)>, String> {
 }
 
 fn fig_options(args: &Args) -> Result<FigOptions, String> {
-    let mut opts = if args.flag("quick") {
-        FigOptions::quick()
-    } else {
-        FigOptions::default()
+    let quick = args.flag("quick");
+    let mut opts = if quick { FigOptions::quick() } else { FigOptions::default() };
+    // Under `--quick`, only *explicitly passed* options override the
+    // preset — the command's seeded defaults must not silently undo it
+    // (e.g. the default `--scale 1` turning a quick sweep full-scale).
+    let get = |name: &str| {
+        if quick {
+            args.get_explicit(name)
+        } else {
+            args.get(name)
+        }
     };
-    if let Some(r) = args.get_usize("reps") {
+    if let Some(r) = get("reps") {
+        let r: usize = r.parse().map_err(|_| format!("bad --reps '{r}' (integer)"))?;
         opts.reps = r.max(1);
     }
-    if let Some(s) = args.get_usize("scale") {
-        opts.scale = (s as u64).max(1);
+    if let Some(s) = get("scale") {
+        let s: u64 = s.parse().map_err(|_| format!("bad --scale '{s}' (integer)"))?;
+        opts.scale = s.max(1);
     }
-    if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
-        opts.seed = seed;
+    if let Some(seed) = get("seed") {
+        opts.seed = seed.parse().map_err(|_| format!("bad --seed '{seed}' (integer)"))?;
     }
-    if let Some(p) = args.get("pairs") {
+    if let Some(p) = get("pairs") {
         let pairs = parse_pairs(p)?;
         if !pairs.is_empty() {
             opts.pairs = pairs;
         }
+    }
+    if let Some(wp) = get("win-pool") {
+        opts.pool_variants = parse_toggle(wp).ok_or("bad --win-pool (on | off)")?;
     }
     Ok(opts)
 }
@@ -111,13 +132,13 @@ fn cmd_exp(args: &Args) -> Result<(), String> {
         .unwrap_or_else(|| "all".to_string());
     let opts = fig_options(args)?;
     let figs: Vec<&str> = if which == "all" {
-        vec!["fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"]
+        vec!["fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10"]
     } else {
         vec![which.as_str()]
     };
     for f in figs {
         let table = experiments::by_name(f, &opts)
-            .ok_or_else(|| format!("unknown figure '{f}' (want fig3..fig9)"))?;
+            .ok_or_else(|| format!("unknown figure '{f}' (want fig3..fig10)"))?;
         println!("{}", table.render());
     }
     Ok(())
@@ -144,7 +165,15 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         spec.win_pool = args
             .get("win-pool")
             .and_then(WinPoolPolicy::parse)
-            .ok_or("bad --win-pool (on | off)")?;
+            .ok_or("bad --win-pool (on | off)")?
+            .with_cap(
+                args.get_usize("win-pool-cap")
+                    .ok_or("bad --win-pool-cap (non-negative integer)")?,
+            );
+        spec.spawn_strategy = args
+            .get("spawn-strategy")
+            .and_then(SpawnStrategy::parse)
+            .ok_or("bad --spawn-strategy (sequential | parallel | async)")?;
         if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
             spec.seed = seed;
         }
@@ -213,6 +242,7 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
             println!("{}", ablation::eager_sweep(&opts, ns, nd).render());
         }
         "win-pool" => println!("{}", ablation::win_pool(&opts).render()),
+        "spawn" => println!("{}", ablation::spawn_strategies(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
     }
     Ok(())
@@ -259,6 +289,48 @@ fn cmd_cg(args: &Args) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+fn cmd_bench_smoke(args: &Args) -> Result<(), String> {
+    let out = args.get("out").unwrap_or("BENCH_pr.json").to_string();
+    let doc = smoke::collect(args.flag("quick"));
+    std::fs::write(&out, doc.to_pretty()).map_err(|e| format!("{out}: {e}"))?;
+    let n = doc.get("entries").and_then(|e| e.as_obj()).map_or(0, |o| o.len());
+    println!("wrote {n} deterministic bench entries to {out}");
+    Ok(())
+}
+
+fn cmd_bench_compare(args: &Args) -> Result<(), String> {
+    let [baseline, current] = args.positionals() else {
+        return Err("usage: proteo bench-compare <baseline.json> <current.json>".into());
+    };
+    let tol = args.get_f64("tol").ok_or("bad --tol")?;
+    let load = |path: &str| -> Result<Json, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Json::parse(&src).map_err(|e| format!("{path}: {e}"))
+    };
+    let cmp = compare_bench(&load(baseline)?, &load(current)?, tol);
+    for note in &cmp.notes {
+        println!("note: {note}");
+    }
+    if cmp.passed() {
+        println!(
+            "bench gate OK: {} entries within {:.0}% of {baseline}",
+            cmp.compared,
+            tol * 100.0
+        );
+        Ok(())
+    } else {
+        for r in &cmp.regressions {
+            eprintln!("REGRESSION: {r}");
+        }
+        Err(format!(
+            "{} regression(s) beyond {:.0}% vs {baseline} ({} entries compared)",
+            cmp.regressions.len(),
+            tol * 100.0,
+            cmp.compared
+        ))
+    }
 }
 
 fn cmd_info() -> Result<(), String> {
@@ -330,6 +402,8 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args),
         "ablation" => cmd_ablation(&args),
         "cg" => cmd_cg(&args),
+        "bench-smoke" => cmd_bench_smoke(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(),
         _ => unreachable!(),
     };

@@ -27,6 +27,8 @@
 //!   split `Init_RMA`/`Complete_RMA` used for background redistribution,
 //! * [`winpool`]   — the persistent window pool (§VI): entries pin
 //!   their windows so repeat resizes skip `Win_create` registration,
+//! * [`spawn`]     — spawn strategies for the Merge grow path
+//!   (sequential / parallel / async `MPI_Comm_spawn` modeling),
 //! * [`reconfig`]  — the reconfiguration driver tying it together.
 
 pub mod blockdist;
@@ -34,11 +36,13 @@ pub mod collective;
 pub mod reconfig;
 pub mod registry;
 pub mod rma;
+pub mod spawn;
 pub mod winpool;
 
 pub use blockdist::{block_of, drain_plan, source_plan, Block, DrainPlan, SourcePlan};
 pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
 pub use registry::{DataDecl, DataEntry, DataKind, Registry};
+pub use spawn::SpawnStrategy;
 pub use winpool::WinPoolPolicy;
 
 /// Data-redistribution method (§IV, §V-A).

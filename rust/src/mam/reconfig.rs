@@ -34,6 +34,7 @@ use crate::simmpi::{CommId, MpiProc, Payload, ReqId};
 use super::collective as col;
 use super::registry::{DataDecl, DataKind, Registry};
 use super::rma::{self, RmaInit};
+use super::spawn::SpawnStrategy;
 use super::winpool::{self, WinPoolPolicy};
 use super::{Method, Strategy};
 
@@ -77,8 +78,14 @@ impl Roles {
 pub struct ReconfigCfg {
     pub method: Method,
     pub strategy: Strategy,
-    /// Modeled `MPI_Comm_spawn` duration (process launch, PMI exchange).
+    /// Modeled `MPI_Comm_spawn` duration (process launch, PMI exchange)
+    /// of the Sequential spawn strategy — the paper's opaque constant.
     pub spawn_cost: f64,
+    /// How the Merge grow path executes `MPI_Comm_spawn`
+    /// (`--spawn-strategy`): Sequential reproduces the single-constant
+    /// model bit-identically; Parallel/Async use the decomposed
+    /// launch/startup/merge cost terms of the network model.
+    pub spawn_strategy: SpawnStrategy,
     /// Persistent window pool (§VI): registry entries pin their RMA
     /// windows so later resizes acquire them warm.  Off = the paper's
     /// cold `Win_create` path (seed behaviour).
@@ -91,6 +98,7 @@ impl Default for ReconfigCfg {
             method: Method::Collective,
             strategy: Strategy::Blocking,
             spawn_cost: 0.25,
+            spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
         }
     }
@@ -189,7 +197,14 @@ impl Mam {
 
         // ---- Stage 2: process management (Merge).
         let merged = if nd > ns {
-            proc.spawn_merge(app_comm, nd - ns, self.cfg.spawn_cost, drain_body)
+            let sched = self.cfg.spawn_strategy.schedule(
+                &proc.net_params(),
+                ns,
+                nd - ns,
+                nd,
+                self.cfg.spawn_cost,
+            );
+            proc.spawn_merge_scheduled(app_comm, nd - ns, &sched, drain_body)
         } else {
             // Duplicate so redistribution traffic cannot cross-match
             // with application collectives on `app_comm`.
@@ -482,7 +497,11 @@ impl Mam {
                 self.registry.entry_mut(i).local = p;
                 if self.cfg.win_pool.enabled {
                     let e = self.registry.entry(i);
-                    proc.pin_buffer(winpool::pin_token(&e.name), e.local.bytes());
+                    proc.pin_buffer(
+                        winpool::pin_token(&e.name),
+                        e.local.bytes(),
+                        self.cfg.win_pool.cap,
+                    );
                 }
             }
         }
@@ -590,8 +609,15 @@ mod tests {
     /// every continuing rank ends with the exact ND-way block.  The
     /// window-pool variant must be payload-identical to the cold path —
     /// the roundtrip assertions check the exact expected block either
-    /// way.
-    fn roundtrip_pool(ns: usize, nd: usize, method: Method, strategy: Strategy, pool: bool) {
+    /// way — and so must every spawn strategy.
+    fn roundtrip_cfg(
+        ns: usize,
+        nd: usize,
+        method: Method,
+        strategy: Strategy,
+        pool: bool,
+        spawn_strategy: SpawnStrategy,
+    ) {
         let total = 997u64;
         let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
         let checks = Arc::new(AtomicUsize::new(0));
@@ -610,6 +636,7 @@ mod tests {
                 method,
                 strategy,
                 spawn_cost: 0.01,
+                spawn_strategy,
                 win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
             };
             let decls = reg.decls();
@@ -653,6 +680,10 @@ mod tests {
             nd,
             "every drain must verify its block"
         );
+    }
+
+    fn roundtrip_pool(ns: usize, nd: usize, method: Method, strategy: Strategy, pool: bool) {
+        roundtrip_cfg(ns, nd, method, strategy, pool, SpawnStrategy::Sequential);
     }
 
     /// Cold-path roundtrip (the paper's configuration; seed behaviour).
@@ -780,6 +811,98 @@ mod tests {
         roundtrip_pool(6, 2, Method::RmaLockall, Strategy::Threading, true);
     }
 
+    // ---- spawn strategies: payloads must be identical to the
+    // Sequential (seed) path for every method × strategy grow; the
+    // roundtrip asserts the exact expected block per rank.
+
+    #[test]
+    fn parallel_spawn_grow_payloads_match() {
+        for (m, s) in [
+            (Method::Collective, Strategy::Blocking),
+            (Method::Collective, Strategy::WaitDrains),
+            (Method::RmaLock, Strategy::WaitDrains),
+            (Method::RmaLockall, Strategy::Blocking),
+            (Method::RmaLockall, Strategy::Threading),
+        ] {
+            roundtrip_cfg(3, 8, m, s, false, SpawnStrategy::Parallel);
+        }
+    }
+
+    #[test]
+    fn async_spawn_grow_payloads_match() {
+        for (m, s) in [
+            (Method::Collective, Strategy::Blocking),
+            (Method::Collective, Strategy::NonBlocking),
+            (Method::RmaLock, Strategy::WaitDrains),
+            (Method::RmaLockall, Strategy::WaitDrains),
+            (Method::Collective, Strategy::Threading),
+        ] {
+            roundtrip_cfg(3, 8, m, s, false, SpawnStrategy::Async);
+        }
+    }
+
+    #[test]
+    fn async_spawn_with_pool_payloads_match() {
+        roundtrip_cfg(2, 7, Method::RmaLockall, Strategy::WaitDrains, true, SpawnStrategy::Async);
+        roundtrip_cfg(3, 6, Method::RmaLock, Strategy::Blocking, true, SpawnStrategy::Parallel);
+    }
+
+    #[test]
+    fn spawn_strategies_ignore_shrinks() {
+        // Shrinks never spawn: every strategy must behave identically
+        // (comm_sub path), including payload placement.
+        let par = SpawnStrategy::Parallel;
+        roundtrip_cfg(7, 3, Method::RmaLockall, Strategy::WaitDrains, false, par);
+        roundtrip_cfg(6, 2, Method::Collective, Strategy::Blocking, false, SpawnStrategy::Async);
+    }
+
+    #[test]
+    fn async_spawn_overlaps_spawn_with_registration() {
+        // Blocking RMA grow with a large source exposure: under Async
+        // the sources' window registration runs while the targets are
+        // still starting, so the whole reconfiguration finishes
+        // strictly earlier than under Sequential (0.25 s constant) and
+        // no later than Parallel.
+        let total = 200_000_000u64; // ~0.2 s of registration per source
+        let (ns, nd) = (2usize, 4usize);
+        let time_with = |spawn_strategy: SpawnStrategy| -> f64 {
+            let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+            let world = sim.world();
+            sim.launch(ns, move |p| {
+                let r = p.rank(WORLD);
+                let b = block_of(total, ns, r);
+                let mut reg = Registry::new();
+                reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+                let cfg = ReconfigCfg {
+                    method: Method::RmaLockall,
+                    strategy: Strategy::Blocking,
+                    spawn_cost: 0.25,
+                    spawn_strategy,
+                    win_pool: WinPoolPolicy::off(),
+                };
+                let decls = reg.decls();
+                let mut mam = Mam::new(reg, cfg.clone());
+                let cfg2 = cfg.clone();
+                let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                    Arc::new(move |dp: MpiProc, merged: CommId| {
+                        let _ = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                    });
+                let st = mam.reconfigure(&p, WORLD, nd, body);
+                assert_eq!(st, MamStatus::Completed);
+                let _ = mam.finish(&p, WORLD);
+            });
+            sim.run().unwrap();
+            let w = world.lock().unwrap();
+            w.metrics.span("mam.reconf_start", "mam.reconf_end").unwrap()
+        };
+        let seq = time_with(SpawnStrategy::Sequential);
+        let par = time_with(SpawnStrategy::Parallel);
+        let asy = time_with(SpawnStrategy::Async);
+        assert!(par < seq, "parallel {par} !< sequential {seq}");
+        assert!(asy < seq, "async {asy} !< sequential {seq}");
+        assert!(asy <= par + 1e-12, "async {asy} should not lose to parallel {par}");
+    }
+
     #[test]
     fn warm_reconfiguration_charges_zero_registration() {
         // Shrink 4 -> 2, then grow back 2 -> 4, pool on.  Resize 1 is
@@ -801,6 +924,7 @@ mod tests {
                 method: Method::RmaLockall,
                 strategy: Strategy::Blocking,
                 spawn_cost: 0.0,
+                spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::on(),
             };
             let decls = reg.decls();
@@ -855,6 +979,7 @@ mod tests {
                     method: Method::RmaLock,
                     strategy: Strategy::NonBlocking,
                     spawn_cost: 0.0,
+                    spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                 },
             );
@@ -895,6 +1020,7 @@ mod tests {
                     method: Method::Collective,
                     strategy: Strategy::WaitDrains,
                     spawn_cost: 0.0,
+                    spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                 },
             );
@@ -954,6 +1080,7 @@ mod tests {
                     method: Method::RmaLockall,
                     strategy: Strategy::WaitDrains,
                     spawn_cost: 0.0,
+                    spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                 },
             );

@@ -1,0 +1,146 @@
+//! MaM's spawn-strategy layer: how the `MPI_Comm_spawn` phase of a
+//! Merge-based grow is executed and charged in virtual time.
+//!
+//! The source paper treats process management as a single opaque
+//! constant (`spawn_cost`) paid at every grow, and concludes that
+//! reconfiguration initialization costs — window registration *and*
+//! spawning — are what keeps one-sided redistribution from winning.
+//! The parallel-spawning literature (Martín-Álvarez et al.) shows the
+//! spawn half of that cost is itself malleable: who launches the new
+//! processes, and whether the sources wait for them, changes the curve
+//! qualitatively.  This module names those choices:
+//!
+//! * [`SpawnStrategy::Sequential`] — the paper's model: one opaque
+//!   constant, all sources blocked, spawned ranks up atomically.
+//!   **Bit-identical** to the pre-subsystem behaviour; the default.
+//! * [`SpawnStrategy::Parallel`] — every source rank is a spawn root
+//!   launching ⌈(ND−NS)/NS⌉ targets concurrently; sources stay blocked
+//!   through the intercomm merge, but the per-process startups overlap
+//!   so the phase shortens as NS grows.  Spawned ranks come up at
+//!   staggered virtual times, wave by wave, as real `simcluster`
+//!   activities.
+//! * [`SpawnStrategy::Async`] — the same parallel launch, but sources
+//!   resume right after the launch handshake and proceed into the
+//!   redistribution: window registration (cold pins) and — under Wait
+//!   Drains — the first application iterations overlap the targets'
+//!   startup.  With a warm window pool the registration is already
+//!   free, so Async is what hides the *remaining* initialization cost
+//!   (the spawn) inside the drain window.
+//!
+//! Policy lives here; the virtual-time decomposition
+//! ([`SpawnSchedule`]) lives in [`crate::netmodel::costmodel`], and the
+//! staggered execution mechanism in
+//! [`MpiProc::spawn_merge_scheduled`].
+//!
+//! [`MpiProc::spawn_merge_scheduled`]: crate::simmpi::MpiProc::spawn_merge_scheduled
+
+use crate::netmodel::{NetParams, SpawnSchedule};
+
+/// How MaM executes the `MPI_Comm_spawn` + intercomm-merge phase of a
+/// grow (`--spawn-strategy`, `"spawn_strategy"` in JSON configs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SpawnStrategy {
+    /// The paper's single-constant model (seed behaviour; default).
+    #[default]
+    Sequential,
+    /// All sources spawn concurrently; blocked through the merge.
+    Parallel,
+    /// Parallel launch, but sources resume after initiation and the
+    /// targets come up in the background.
+    Async,
+}
+
+impl SpawnStrategy {
+    /// Label used in figures and JSON provenance.
+    pub fn label(self) -> &'static str {
+        match self {
+            SpawnStrategy::Sequential => "sequential",
+            SpawnStrategy::Parallel => "parallel",
+            SpawnStrategy::Async => "async",
+        }
+    }
+
+    pub fn all() -> [SpawnStrategy; 3] {
+        [SpawnStrategy::Sequential, SpawnStrategy::Parallel, SpawnStrategy::Async]
+    }
+
+    /// Parse the CLI/config spelling.
+    pub fn parse(s: &str) -> Option<SpawnStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Some(SpawnStrategy::Sequential),
+            "parallel" | "par" => Some(SpawnStrategy::Parallel),
+            "async" | "asynchronous" => Some(SpawnStrategy::Async),
+            _ => None,
+        }
+    }
+
+    /// Build the virtual-time schedule of a grow spawning `n_new`
+    /// targets from `ns` sources towards `nd` total ranks.
+    /// `sequential_cost` is the legacy opaque constant
+    /// (`ReconfigCfg::spawn_cost`), used only by `Sequential`.
+    pub fn schedule(
+        self,
+        p: &NetParams,
+        ns: usize,
+        n_new: usize,
+        nd: usize,
+        sequential_cost: f64,
+    ) -> SpawnSchedule {
+        match self {
+            SpawnStrategy::Sequential => SpawnSchedule::atomic(sequential_cost),
+            SpawnStrategy::Parallel => SpawnSchedule::parallel(p, ns, n_new, nd),
+            SpawnStrategy::Async => SpawnSchedule::asynchronous(p, ns, n_new, nd),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_cli_spellings_and_rejects_junk() {
+        assert_eq!(SpawnStrategy::parse("sequential"), Some(SpawnStrategy::Sequential));
+        assert_eq!(SpawnStrategy::parse("SEQ"), Some(SpawnStrategy::Sequential));
+        assert_eq!(SpawnStrategy::parse("parallel"), Some(SpawnStrategy::Parallel));
+        assert_eq!(SpawnStrategy::parse("par"), Some(SpawnStrategy::Parallel));
+        assert_eq!(SpawnStrategy::parse("async"), Some(SpawnStrategy::Async));
+        assert_eq!(SpawnStrategy::parse("Asynchronous"), Some(SpawnStrategy::Async));
+        assert_eq!(SpawnStrategy::parse("fork"), None);
+        assert_eq!(SpawnStrategy::parse(""), None);
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for s in SpawnStrategy::all() {
+            assert_eq!(SpawnStrategy::parse(s.label()), Some(s));
+        }
+    }
+
+    #[test]
+    fn default_is_sequential() {
+        assert_eq!(SpawnStrategy::default(), SpawnStrategy::Sequential);
+    }
+
+    #[test]
+    fn sequential_schedule_is_the_opaque_constant() {
+        let p = NetParams::test_simple();
+        let s = SpawnStrategy::Sequential.schedule(&p, 8, 8, 16, 0.25);
+        assert_eq!(s, SpawnSchedule::atomic(0.25));
+    }
+
+    #[test]
+    fn parallel_and_async_block_less_than_the_constant_on_8_to_16() {
+        // The acceptance bar: on a ≥8→16 grow the decomposed strategies
+        // must undercut the paper's 0.25 s constant.
+        let p = NetParams::sarteco25();
+        let seq = SpawnStrategy::Sequential.schedule(&p, 8, 8, 16, 0.25);
+        let par = SpawnStrategy::Parallel.schedule(&p, 8, 8, 16, 0.25);
+        let asy = SpawnStrategy::Async.schedule(&p, 8, 8, 16, 0.25);
+        assert!(par.source_block < seq.source_block, "{par:?}");
+        assert!(asy.source_block < par.source_block, "{asy:?}");
+        // Async targets are nonetheless fully up before the sequential
+        // constant would have elapsed.
+        assert!(asy.last_child_up() < seq.source_block);
+    }
+}

@@ -27,20 +27,30 @@ use super::reconfig::Roles;
 use super::registry::Registry;
 
 /// Per-reconfiguration window-pool policy (set from `ReconfigCfg`;
-/// `--win-pool on|off` on the CLI).  Off is the paper's cold path and
-/// is bit-identical to the seed behaviour.
+/// `--win-pool on|off` / `--win-pool-cap N` on the CLI).  Off is the
+/// paper's cold path and is bit-identical to the seed behaviour.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WinPoolPolicy {
     pub enabled: bool,
+    /// Per-rank bound on the registration cache (`win_pool_cap`):
+    /// at most this many pinned tokens are kept per process, evicting
+    /// least-recently-used beyond it.  0 = unbounded (the default).
+    pub cap: usize,
 }
 
 impl WinPoolPolicy {
     pub fn on() -> WinPoolPolicy {
-        WinPoolPolicy { enabled: true }
+        WinPoolPolicy { enabled: true, cap: 0 }
     }
 
     pub fn off() -> WinPoolPolicy {
-        WinPoolPolicy { enabled: false }
+        WinPoolPolicy { enabled: false, cap: 0 }
+    }
+
+    /// Builder-style cap override (0 = unbounded).
+    pub fn with_cap(mut self, cap: usize) -> WinPoolPolicy {
+        self.cap = cap;
+        self
     }
 
     /// Parse the CLI/config toggle — one grammar, shared via
@@ -98,7 +108,7 @@ pub fn acquire_entry_window(
 ) -> WinId {
     let exposure = entry_exposure(roles, registry, i);
     if policy.enabled {
-        proc.win_acquire(comm, exposure, pin_token(&registry.entry(i).name))
+        proc.win_acquire_capped(comm, exposure, pin_token(&registry.entry(i).name), policy.cap)
     } else {
         proc.win_create(comm, exposure)
     }
@@ -143,6 +153,16 @@ mod tests {
         assert_eq!(WinPoolPolicy::default(), WinPoolPolicy::off());
         assert_eq!(WinPoolPolicy::on().label(), "on");
         assert_eq!(WinPoolPolicy::off().label(), "off");
+    }
+
+    #[test]
+    fn cap_defaults_unbounded_and_composes() {
+        assert_eq!(WinPoolPolicy::on().cap, 0);
+        assert_eq!(WinPoolPolicy::parse("on").unwrap().cap, 0);
+        let p = WinPoolPolicy::on().with_cap(3);
+        assert!(p.enabled);
+        assert_eq!(p.cap, 3);
+        assert_ne!(p, WinPoolPolicy::on(), "cap is part of the policy identity");
     }
 
     #[test]

@@ -76,6 +76,21 @@ pub struct NetParams {
     /// Cap on how much queued bulk traffic can delay a small-lane
     /// (latency-sensitive) message, in seconds.
     pub small_lane_max_wait: f64,
+
+    // --------------------------------------------------------- spawn
+    /// Fixed launch latency of one `MPI_Comm_spawn` round (s): the
+    /// mpiexec/PMI bootstrap handshake paid once per spawn call,
+    /// independent of how many processes it creates.
+    pub spawn_launch: f64,
+    /// Per-process startup cost (s): fork+exec, PMI wire-up and
+    /// business-card exchange of one spawned rank.  Parallel spawning
+    /// pays this once per *wave* (each source root launches its share
+    /// concurrently) instead of once per process.
+    pub spawn_per_proc: f64,
+    /// Per-round cost (s) of `MPI_Intercomm_merge`: the merged
+    /// intracommunicator is built in ⌈log2 ND⌉ rounds of rank
+    /// renumbering/context agreement.
+    pub merge_round: f64,
 }
 
 impl NetParams {
@@ -110,6 +125,15 @@ impl NetParams {
             // queue up to this long behind bulk redistribution traffic —
             // the contention that drives ω to ~2.8 at (160→20), Fig. 5.
             small_lane_max_wait: 8.0e-3,
+            // Decomposed `MPI_Comm_spawn` terms (parallel-spawning
+            // study): Hydra bootstrap ~80 ms per spawn call, ~18 ms of
+            // fork/exec + PMI wire-up per process, and a ~2 ms merge
+            // round.  The legacy single-constant spawn model (0.25 s,
+            // `RunSpec::spawn_cost`) remains the Sequential strategy's
+            // calibration; these terms only drive Parallel/Async.
+            spawn_launch: 0.08,
+            spawn_per_proc: 0.018,
+            merge_round: 2.0e-3,
         }
     }
 
@@ -135,6 +159,9 @@ impl NetParams {
             mt_coll_penalty: 4.0,
             mt_rma_penalty: 8.0,
             small_lane_max_wait: 1e-3,
+            spawn_launch: 0.05,
+            spawn_per_proc: 0.01,
+            merge_round: 1e-3,
         }
     }
 
@@ -162,6 +189,11 @@ mod tests {
         assert!(p.beta_register < 2.0 * p.beta_inter * 10.0);
         // Eager threshold is KiB-scale.
         assert!(p.eager_threshold >= 4 * 1024 && p.eager_threshold <= 1024 * 1024);
+        // Spawn terms: launch dominates one process's startup, and a
+        // single parallel wave undercuts the 0.25 s sequential constant
+        // (the parallel-spawning premise).
+        assert!(p.spawn_launch > p.spawn_per_proc);
+        assert!(p.spawn_launch + p.spawn_per_proc + 8.0 * p.merge_round < 0.25);
     }
 
     #[test]

@@ -32,6 +32,89 @@ pub struct TransferTiming {
     pub arrival: Time,
 }
 
+/// Cost of `MPI_Intercomm_merge` over `nd` final ranks: ⌈log2 ND⌉
+/// rounds of context agreement at `merge_round` seconds each.
+pub fn intercomm_merge_cost(p: &NetParams, nd: usize) -> f64 {
+    let rounds = usize::BITS - (nd.max(2) - 1).leading_zeros();
+    p.merge_round * rounds as f64
+}
+
+/// Virtual-time decomposition of one `MPI_Comm_spawn` + intercomm-merge
+/// phase (MaM's *Merge* grow path).  All offsets are seconds past the
+/// spawn collective's entry synchronization.
+///
+/// * [`SpawnSchedule::atomic`] is the legacy single-constant model: all
+///   sources blocked for one opaque duration and the spawned ranks come
+///   up atomically when the sources resume — bit-identical to the
+///   pre-subsystem behaviour.
+/// * [`SpawnSchedule::parallel`] decomposes the phase into launch
+///   latency + per-wave process startup + merge, with every source root
+///   launching its share of the targets concurrently; spawned ranks
+///   come up at staggered times, one wave at a time.
+/// * [`SpawnSchedule::asynchronous`] initiates the same parallel launch
+///   but unblocks the sources right after the launch handshake: the
+///   targets finish starting (and merging) while the sources are
+///   already registering windows / draining — the spawn phase overlaps
+///   the redistribution's own initialization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpawnSchedule {
+    /// Seconds until the spawn root resumes and the merged communicator
+    /// becomes available to the sources.
+    pub initiate: f64,
+    /// Seconds every source rank stays blocked in the spawn collective.
+    /// Equals `initiate` for Async; covers launch + startup waves +
+    /// merge for Parallel.
+    pub source_block: f64,
+    /// Per-spawned-rank start offsets (index = spawn order).  Empty
+    /// means the legacy atomic behaviour: children begin when the
+    /// sources resume.
+    pub child_up: Vec<f64>,
+}
+
+impl SpawnSchedule {
+    /// The legacy model: one opaque constant, atomic start.
+    pub fn atomic(dur: f64) -> SpawnSchedule {
+        SpawnSchedule { initiate: dur, source_block: dur, child_up: Vec::new() }
+    }
+
+    /// Start offset of spawned rank `j` when `ns` roots launch
+    /// `n_new` targets round-robin: wave `j / ns`, each wave costing
+    /// one per-process startup.
+    fn wave_up(p: &NetParams, ns: usize, j: usize) -> f64 {
+        p.spawn_launch + (j / ns.max(1) + 1) as f64 * p.spawn_per_proc
+    }
+
+    /// Parallel spawning: all `ns` sources act as spawn roots, each
+    /// launching ⌈n_new/ns⌉ targets; sources block through the merge.
+    pub fn parallel(p: &NetParams, ns: usize, n_new: usize, nd: usize) -> SpawnSchedule {
+        let waves = n_new.div_ceil(ns.max(1));
+        let merge = intercomm_merge_cost(p, nd);
+        SpawnSchedule {
+            initiate: p.spawn_launch,
+            source_block: p.spawn_launch + waves as f64 * p.spawn_per_proc + merge,
+            child_up: (0..n_new).map(|j| Self::wave_up(p, ns, j)).collect(),
+        }
+    }
+
+    /// Asynchronous spawning: the same parallel launch, but sources
+    /// resume after the launch handshake; targets complete startup and
+    /// the merge in the background (their first collective on the
+    /// merged communicator synchronizes with the sources naturally).
+    pub fn asynchronous(p: &NetParams, ns: usize, n_new: usize, nd: usize) -> SpawnSchedule {
+        let merge = intercomm_merge_cost(p, nd);
+        SpawnSchedule {
+            initiate: p.spawn_launch,
+            source_block: p.spawn_launch,
+            child_up: (0..n_new).map(|j| Self::wave_up(p, ns, j) + merge).collect(),
+        }
+    }
+
+    /// Latest spawned-rank start offset (0 for the atomic model).
+    pub fn last_child_up(&self) -> f64 {
+        self.child_up.iter().fold(0.0, |a, &b| a.max(b))
+    }
+}
+
 /// Mutable cost model: parameters + NIC occupancy state.
 #[derive(Clone, Debug)]
 pub struct CostModel {
@@ -277,6 +360,60 @@ mod tests {
         assert!(warm < cold);
         // Release keeps memory pinned: cheaper than a full free.
         assert!(cm.window_release() < cm.window_free(bytes));
+    }
+
+    #[test]
+    fn atomic_spawn_schedule_is_one_constant() {
+        let s = SpawnSchedule::atomic(0.25);
+        assert_eq!(s.initiate.to_bits(), 0.25f64.to_bits());
+        assert_eq!(s.source_block.to_bits(), 0.25f64.to_bits());
+        assert!(s.child_up.is_empty());
+        assert_eq!(s.last_child_up(), 0.0);
+    }
+
+    #[test]
+    fn parallel_spawn_staggers_by_wave_and_blocks_through_merge() {
+        let p = NetParams::test_simple();
+        // 2 roots spawning 5 targets: waves of 2 → waves ⌈5/2⌉ = 3.
+        let s = SpawnSchedule::parallel(&p, 2, 5, 7);
+        assert_eq!(s.child_up.len(), 5);
+        // Round-robin waves: children 0,1 in wave 0; 2,3 wave 1; 4 wave 2.
+        assert_eq!(s.child_up[0], s.child_up[1]);
+        assert!(s.child_up[2] > s.child_up[1]);
+        assert_eq!(s.child_up[2], s.child_up[3]);
+        assert!(s.child_up[4] > s.child_up[3]);
+        // Sources resume only after the last wave + merge.
+        let merge = intercomm_merge_cost(&p, 7);
+        assert!(merge > 0.0);
+        assert!((s.source_block - (s.last_child_up() + merge)).abs() < 1e-15);
+        assert!((s.initiate - p.spawn_launch).abs() < 1e-15);
+    }
+
+    #[test]
+    fn async_spawn_unblocks_sources_at_launch() {
+        let p = NetParams::test_simple();
+        let s = SpawnSchedule::asynchronous(&p, 4, 8, 12);
+        assert_eq!(s.initiate.to_bits(), s.source_block.to_bits());
+        assert!((s.initiate - p.spawn_launch).abs() < 1e-15);
+        // Targets carry the merge cost themselves and come up after the
+        // sources resumed.
+        assert!(s.child_up.iter().all(|&u| u > s.source_block));
+        // Same wave structure as Parallel, shifted by the merge.
+        let par = SpawnSchedule::parallel(&p, 4, 8, 12);
+        let merge = intercomm_merge_cost(&p, 12);
+        for (a, b) in s.child_up.iter().zip(&par.child_up) {
+            assert!((a - (b + merge)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn merge_cost_grows_logarithmically() {
+        let p = NetParams::test_simple();
+        assert_eq!(intercomm_merge_cost(&p, 2), p.merge_round);
+        assert_eq!(intercomm_merge_cost(&p, 16), 4.0 * p.merge_round);
+        assert_eq!(intercomm_merge_cost(&p, 17), 5.0 * p.merge_round);
+        // Degenerate sizes clamp to one round.
+        assert_eq!(intercomm_merge_cost(&p, 1), p.merge_round);
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub mod costmodel;
 pub mod topology;
 
 pub use calibration::NetParams;
-pub use costmodel::{CostModel, TransferClass};
+pub use costmodel::{intercomm_merge_cost, CostModel, SpawnSchedule, TransferClass};
 pub use topology::{NodeId, Placement, Topology};

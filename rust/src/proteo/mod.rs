@@ -23,8 +23,8 @@
 use std::sync::Arc;
 
 use crate::mam::{
-    is_valid_version, version_label, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
-    WinPoolPolicy,
+    is_valid_version, version_label, Mam, MamStatus, Method, ReconfigCfg, Registry,
+    SpawnStrategy, Strategy, WinPoolPolicy,
 };
 use crate::netmodel::{NetParams, Topology};
 use crate::sam::{Sam, SamConfig};
@@ -47,6 +47,10 @@ pub struct RunSpec {
     /// Iterations on ND ranks after the resize (measure `T_it^{ND}`).
     pub post_iters: u64,
     pub spawn_cost: f64,
+    /// Spawn strategy of the Merge grow path (`--spawn-strategy`):
+    /// Sequential charges the single `spawn_cost` constant (seed
+    /// behaviour); Parallel/Async use the decomposed spawn terms.
+    pub spawn_strategy: SpawnStrategy,
     pub seed: u64,
     /// Persistent RMA window pool (§VI): `--win-pool on|off`.  Off is
     /// the paper's cold `Win_create` path.
@@ -67,6 +71,7 @@ impl RunSpec {
             warmup_iters: 3,
             post_iters: 3,
             spawn_cost: 0.25,
+            spawn_strategy: SpawnStrategy::Sequential,
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
         }
@@ -195,6 +200,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
         method: spec.method,
         strategy: spec.strategy,
         spawn_cost: spec.spawn_cost,
+        spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
     };
     let mut mam = Mam::new(reg, mam_cfg.clone());
@@ -263,6 +269,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
         method: spec.method,
         strategy: spec.strategy,
         spawn_cost: spec.spawn_cost,
+        spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
     };
     let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
@@ -346,6 +353,7 @@ mod tests {
             warmup_iters: 2,
             post_iters: 2,
             spawn_cost: 0.05,
+            spawn_strategy: SpawnStrategy::Sequential,
             seed: 1,
             win_pool: WinPoolPolicy::off(),
         }
@@ -393,6 +401,54 @@ mod tests {
         let r = run_once(&small_spec(Method::Collective, Strategy::Threading));
         assert!(r.redist_time > 0.0);
         assert!(r.t_it_nd > 0.0);
+    }
+
+    #[test]
+    fn parallel_and_async_spawn_reduce_grow_totals() {
+        // ≥8→16 grow, RMA-Lockall WD, the paper's 0.25 s sequential
+        // spawn constant: the decomposed strategies must strictly
+        // reduce the full reconfiguration span.
+        let time_with = |ss: SpawnStrategy| -> RunResult {
+            let mut spec = small_spec(Method::RmaLockall, Strategy::WaitDrains);
+            spec.ns = 8;
+            spec.nd = 16;
+            spec.spawn_cost = 0.25;
+            spec.spawn_strategy = ss;
+            run_once(&spec)
+        };
+        let seq = time_with(SpawnStrategy::Sequential);
+        let par = time_with(SpawnStrategy::Parallel);
+        let asy = time_with(SpawnStrategy::Async);
+        assert!(
+            par.reconf_total < seq.reconf_total,
+            "parallel {} !< sequential {}",
+            par.reconf_total,
+            seq.reconf_total
+        );
+        assert!(
+            asy.reconf_total < seq.reconf_total,
+            "async {} !< sequential {}",
+            asy.reconf_total,
+            seq.reconf_total
+        );
+        // All strategies yield the same post-resize iteration behaviour.
+        assert!(par.t_it_nd > 0.0 && asy.t_it_nd > 0.0);
+    }
+
+    #[test]
+    fn sequential_spawn_strategy_is_the_default_and_deterministic() {
+        // Explicit Sequential must be indistinguishable from the
+        // default-constructed spec (the PR-1 behaviour): same events,
+        // same timings, bit for bit.
+        let spec = small_spec(Method::RmaLock, Strategy::WaitDrains);
+        let mut explicit = spec.clone();
+        explicit.spawn_strategy = SpawnStrategy::Sequential;
+        let a = run_once(&spec);
+        let b = run_once(&explicit);
+        assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
+        assert_eq!(a.reconf_total.to_bits(), b.reconf_total.to_bits());
+        assert_eq!(a.virt_end.to_bits(), b.virt_end.to_bits());
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -30,8 +30,12 @@ pub(crate) enum Contrib {
     Block(Payload),
     /// Alltoallv / Ialltoallv: payload destined to each member.
     Scatter(Vec<Payload>),
-    /// Spawn: the process-launch duration (rank 0 supplies it).
-    SpawnTime(f64),
+    /// Spawn: the process-launch durations (the spawn root supplies
+    /// them).  `initiate` is how long the root itself stays blocked
+    /// (it resumes early under staggered schedules to create the
+    /// spawned activities); `block` is how long every other source
+    /// waits.  The legacy single-constant model has the two equal.
+    SpawnTime { initiate: f64, block: f64 },
 }
 
 /// Per-rank outcome of a completed collective.
@@ -219,16 +223,27 @@ impl CollState {
                 (t, vec![CollResult::None; self.n])
             }
             CollKind::Spawn => {
-                let dur = self
+                // The spawn root (the rank that posted SpawnTime) may
+                // resume earlier than the other sources: under a
+                // staggered schedule it creates the spawned activities
+                // and then advances to the common release point itself.
+                let (root, initiate, block) = self
                     .contribs
                     .iter()
-                    .find_map(|c| match c {
-                        Some(Contrib::SpawnTime(d)) => Some(*d),
+                    .enumerate()
+                    .find_map(|(r, c)| match c {
+                        Some(Contrib::SpawnTime { initiate, block }) => {
+                            Some((r, *initiate, *block))
+                        }
                         _ => None,
                     })
-                    .unwrap_or(0.0);
+                    .unwrap_or((0, 0.0, 0.0));
                 let sync = dissemination(cost, placement, gpids, &arrivals);
-                let t = sync.iter().map(|t| t + dur).collect();
+                let t = sync
+                    .iter()
+                    .enumerate()
+                    .map(|(r, t)| t + if r == root { initiate } else { block })
+                    .collect();
                 (t, vec![CollResult::None; self.n])
             }
         };

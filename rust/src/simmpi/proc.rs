@@ -8,7 +8,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::netmodel::TransferClass;
+use crate::netmodel::{NetParams, SpawnSchedule, TransferClass};
 use crate::simcluster::{ActivityCtx, Time};
 
 use super::collective::{CollKind, CollResult, CollState, Contrib};
@@ -119,6 +119,12 @@ impl MpiProc {
     pub fn metrics<R>(&self, f: impl FnOnce(&mut crate::monitor::Metrics) -> R) -> R {
         let mut w = self.world.lock().unwrap();
         f(&mut w.metrics)
+    }
+
+    /// Snapshot of the calibrated model constants (read-only; MaM uses
+    /// this to derive spawn schedules from the cost model).
+    pub fn net_params(&self) -> NetParams {
+        self.world.lock().unwrap().cost.params.clone()
     }
 
     // --------------------------------------------- MPI call machinery
@@ -673,19 +679,43 @@ impl MpiProc {
     /// the cache for the next acquire.  The first arriver reuses a
     /// released slot of this communicator when one fits.
     pub fn win_acquire(&self, comm: CommId, payload: Payload, pin: u64) -> WinId {
+        self.win_acquire_capped(comm, payload, pin, 0)
+    }
+
+    /// [`MpiProc::win_acquire`] with a bound on this process's
+    /// registration cache: `cap` is the maximum number of pinned
+    /// tokens kept per rank (0 = unbounded).  When a cold pin would
+    /// exceed the cap, the least-recently-used token is evicted — its
+    /// buffer is deregistered and the next acquire under it is cold
+    /// again.
+    pub fn win_acquire_capped(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        pin: u64,
+        cap: usize,
+    ) -> WinId {
         self.mpi_prologue();
         self.progress_acquire();
         let bytes = payload.bytes();
         let reg = {
             let mut w = self.world.lock().unwrap();
             let warm = w.win_pool.is_warm(self.gpid, pin, bytes);
-            let reg = w.cost.window_acquire(bytes, warm);
+            let mut reg = w.cost.window_acquire(bytes, warm);
             if warm {
                 let saved = w.cost.window_acquire(bytes, false) - reg;
+                w.win_pool.touch(self.gpid, pin);
                 w.win_pool.note_acquire(true, 0.0, saved);
             } else {
-                w.win_pool.record_pin(self.gpid, pin, bytes);
+                let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_acquire(false, reg, 0.0);
+                // Cap evictions deregister the victims' buffers: the
+                // evicting rank pays the unpin before it is ready.
+                for b in evicted {
+                    let dereg = w.cost.window_free(b);
+                    w.win_pool.note_evict_dereg(dereg);
+                    reg += dereg;
+                }
             }
             reg
         };
@@ -752,16 +782,24 @@ impl MpiProc {
     /// covers `bytes`.  MaM uses this to pin an entry's freshly
     /// received block off the collective critical path
     /// (register-on-receive), so the next resize's `win_acquire` is
-    /// warm for every rank.
-    pub fn pin_buffer(&self, pin: u64, bytes: u64) {
+    /// warm for every rank.  `cap` bounds this rank's pinned-token
+    /// cache (0 = unbounded, LRU eviction otherwise).
+    pub fn pin_buffer(&self, pin: u64, bytes: u64, cap: usize) {
         let dt = {
             let mut w = self.world.lock().unwrap();
             if w.win_pool.is_warm(self.gpid, pin, bytes) {
+                w.win_pool.touch(self.gpid, pin);
                 0.0
             } else {
-                let dt = w.cost.window_registration(bytes);
-                w.win_pool.record_pin(self.gpid, pin, bytes);
+                let mut dt = w.cost.window_registration(bytes);
+                let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_pre_pin(dt);
+                // Evicted victims are deregistered here, locally.
+                for b in evicted {
+                    let dereg = w.cost.window_free(b);
+                    w.win_pool.note_evict_dereg(dereg);
+                    dt += dereg;
+                }
                 dt
             }
         };
@@ -986,10 +1024,10 @@ impl MpiProc {
 
     // -------------------------------------------- process management
 
-    /// MaM's Merge (grow): collective over `comm`; spawns `n_new`
-    /// processes running `body(proc, merged_comm)` and returns the
-    /// merged communicator (members of `comm` first, spawned after —
-    /// the intracomm produced by MPI_Comm_spawn + MPI_Intercomm_merge).
+    /// MaM's Merge (grow) with the legacy single-constant timing: all
+    /// sources blocked for `spawn_dur`, spawned ranks up atomically.
+    /// Delegates to [`MpiProc::spawn_merge_scheduled`] with an atomic
+    /// schedule — the seed/paper behaviour, bit for bit.
     pub fn spawn_merge(
         &self,
         comm: CommId,
@@ -997,17 +1035,42 @@ impl MpiProc {
         spawn_dur: f64,
         body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync>,
     ) -> CommId {
+        self.spawn_merge_scheduled(comm, n_new, &SpawnSchedule::atomic(spawn_dur), body)
+    }
+
+    /// MaM's Merge (grow): collective over `comm`; spawns `n_new`
+    /// processes running `body(proc, merged_comm)` and returns the
+    /// merged communicator (members of `comm` first, spawned after —
+    /// the intracomm produced by MPI_Comm_spawn + MPI_Intercomm_merge).
+    ///
+    /// `sched` controls the virtual-time shape of the phase.  Under the
+    /// atomic (legacy) schedule every source is blocked for the same
+    /// constant and children start when the sources resume.  Under a
+    /// staggered schedule (parallel/async spawning) the spawn root
+    /// resumes after `sched.initiate`, creates each spawned rank as a
+    /// real engine activity that begins at its own `child_up` offset,
+    /// then rejoins the other sources at `sched.source_block`.
+    pub fn spawn_merge_scheduled(
+        &self,
+        comm: CommId,
+        n_new: usize,
+        sched: &SpawnSchedule,
+        body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync>,
+    ) -> CommId {
         self.mpi_prologue();
         self.progress_acquire();
         let contrib = if self.rank(comm) == 0 {
-            Contrib::SpawnTime(spawn_dur)
+            Contrib::SpawnTime { initiate: sched.initiate, block: sched.source_block }
         } else {
             Contrib::None
         };
         let (key, r) = self.coll_post(comm, CollKind::Spawn, contrib, |_, _, _| {});
         self.coll_block(key, r);
-        // Rank 0 creates the processes and the merged communicator.
+        // The root creates the processes and the merged communicator.
         if r == 0 {
+            // Entry-synchronization instant the child offsets are
+            // relative to (the root resumed `initiate` past it).
+            let base = self.ctx.now() - sched.initiate;
             let spawn_list: Vec<(usize, CommId)> = {
                 let mut w = self.world.lock().unwrap();
                 let old = w.comm(comm).gpids.clone();
@@ -1023,14 +1086,26 @@ impl MpiProc {
                 }
                 new_gpids.into_iter().map(|g| (g, mc)).collect()
             };
-            for (gpid, mc) in spawn_list {
+            for (idx, (gpid, mc)) in spawn_list.into_iter().enumerate() {
                 let world = self.world.clone();
                 let b = body.clone();
+                let up = sched.child_up.get(idx).map(|off| base + off);
                 self.ctx.spawn(format!("spawned-g{gpid}"), move |ctx| {
                     let proc = MpiProc::main(ctx, world, gpid);
+                    if let Some(t) = up {
+                        // Staggered startup: the rank exists but is
+                        // still launching until its wave completes.
+                        proc.ctx.advance_until(t);
+                    }
                     b(proc.clone_handle(), mc);
                     proc.on_exit();
                 });
+            }
+            // Staggered schedules release the root early so the child
+            // activities can start at past-relative offsets; the root
+            // itself still observes the full blocking duration.
+            if sched.source_block > sched.initiate {
+                self.ctx.advance_until(base + sched.source_block);
             }
         }
         let mc = self.wait_derived(key);
@@ -1508,6 +1583,139 @@ mod tests {
         });
         s.run().unwrap();
         assert_eq!(spawned.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn sequential_spawn_is_bit_identical_to_the_legacy_constant() {
+        // The PR-1 model: Spawn completion[r] = dissemination-sync[r] +
+        // spawn_cost.  A Barrier uses the *same* dissemination schedule
+        // over the same cost-model state, so with staggered arrivals
+        // the spawn must exit exactly `spawn_cost` later than the
+        // barrier exits — bit for bit, per rank.
+        const COST: f64 = 0.37;
+        fn exit_times(spawn: bool) -> Vec<f64> {
+            let mut s = sim(2, 4);
+            let out: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(vec![0.0; 3]));
+            let o2 = out.clone();
+            s.launch(3, move |p| {
+                let r = p.rank(WORLD);
+                p.compute(r as f64 * 0.01); // staggered arrivals
+                if spawn {
+                    let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                        Arc::new(|_, _| {});
+                    let _ = p.spawn_merge(WORLD, 2, COST, body);
+                } else {
+                    p.barrier(WORLD);
+                }
+                o2.lock().unwrap()[r] = p.now();
+            });
+            s.run().unwrap();
+            let v = out.lock().unwrap().clone();
+            v
+        }
+        let spawned = exit_times(true);
+        let barrier = exit_times(false);
+        for r in 0..3 {
+            assert_eq!(
+                spawned[r].to_bits(),
+                (barrier[r] + COST).to_bits(),
+                "rank {r}: spawn exit {} != barrier exit {} + {COST}",
+                spawned[r],
+                barrier[r]
+            );
+        }
+    }
+
+    #[test]
+    fn staggered_spawn_brings_children_up_in_waves() {
+        let mut s = sim(2, 4);
+        let ups: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+        let u2 = ups.clone();
+        let source_done = Arc::new(Mutex::new(0.0f64));
+        let sd = source_done.clone();
+        s.launch(1, move |p| {
+            let u3 = u2.clone();
+            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |child: MpiProc, mc: CommId| {
+                    u3.lock().unwrap().push(child.now());
+                    child.barrier(mc);
+                });
+            let sched = SpawnSchedule {
+                initiate: 0.1,
+                source_block: 0.5,
+                child_up: vec![0.2, 0.3, 0.4],
+            };
+            let mc = p.spawn_merge_scheduled(WORLD, 3, &sched, body);
+            *sd.lock().unwrap() = p.now();
+            p.barrier(mc);
+        });
+        s.run().unwrap();
+        let mut ups = ups.lock().unwrap().clone();
+        ups.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ups.len(), 3);
+        // Children come up staggered (0.1 s apart), not atomically.
+        assert!((ups[1] - ups[0] - 0.1).abs() < 1e-9, "{ups:?}");
+        assert!((ups[2] - ups[1] - 0.1).abs() < 1e-9, "{ups:?}");
+        // All of them before the source resumes at +0.5.
+        let done = *source_done.lock().unwrap();
+        assert!(ups[2] < done, "last child {} vs source {}", ups[2], done);
+        assert!((done - ups[0] - 0.3).abs() < 1e-9, "{done} vs {ups:?}");
+    }
+
+    #[test]
+    fn async_schedule_releases_sources_before_children_are_up() {
+        let mut s = sim(1, 4);
+        let child_up: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+        let c2 = child_up.clone();
+        s.launch(2, move |p| {
+            let c3 = c2.clone();
+            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |child: MpiProc, mc: CommId| {
+                    c3.lock().unwrap().push(child.now());
+                    child.barrier(mc);
+                });
+            let sched = SpawnSchedule {
+                initiate: 0.05,
+                source_block: 0.05,
+                child_up: vec![0.25],
+            };
+            let mc = p.spawn_merge_scheduled(WORLD, 1, &sched, body);
+            let resumed = p.now();
+            p.barrier(mc); // synchronizes with the late-arriving child
+            assert!(
+                p.now() - resumed > 0.15,
+                "barrier must wait for the child: resumed {resumed}, now {}",
+                p.now()
+            );
+        });
+        s.run().unwrap();
+        assert_eq!(child_up.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn capped_acquire_evicts_and_recolds() {
+        let mut s = sim(1, 2);
+        let w = s.world();
+        s.launch(1, |p| {
+            // Cap 2: pinning a third token evicts the least recent.
+            for token in [0xA, 0xB, 0xC] {
+                let win = p.win_acquire_capped(WORLD, Payload::virt(1000), token, 2);
+                p.win_release(win);
+            }
+            // 0xA was evicted: cold again.  0xC is still warm.
+            let win = p.win_acquire_capped(WORLD, Payload::virt(1000), 0xC, 2);
+            p.win_release(win);
+            let win = p.win_acquire_capped(WORLD, Payload::virt(1000), 0xA, 2);
+            p.win_release(win);
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        let st = w.win_pool_stats();
+        // Cold: initial 0xA/0xB/0xC, then re-pin of evicted 0xA.
+        assert_eq!(st.cold_acquires, 4, "{st:?}");
+        assert_eq!(st.warm_acquires, 1, "{st:?}");
+        assert!(st.evictions >= 1, "{st:?}");
+        assert!(st.evict_dereg_time > 0.0, "evictions must charge dereg: {st:?}");
     }
 
     #[test]

@@ -66,6 +66,17 @@ pub struct WinPoolStats {
     pub pre_pins: u64,
     /// Virtual seconds charged by those pre-pins (local, overlappable).
     pub pre_pin_time: f64,
+    /// Pins evicted by the per-rank LRU cap (`win_pool_cap`).
+    pub evictions: u64,
+    /// Virtual seconds spent deregistering evicted pins.
+    pub evict_dereg_time: f64,
+}
+
+/// One pinned token: its covered size class and an LRU stamp.
+#[derive(Clone, Copy, Debug)]
+struct PinEntry {
+    class: u32,
+    stamp: u64,
 }
 
 /// The world-global window pool (one per [`MpiWorld`]).
@@ -73,11 +84,13 @@ pub struct WinPoolStats {
 /// [`MpiWorld`]: super::world::MpiWorld
 #[derive(Debug, Default)]
 pub struct WinPool {
-    /// Registration cache: (gpid, pin token) → pinned size class.
-    /// BTreeMaps keep every lookup order-deterministic — the DES
-    /// guarantees bit-identical reruns and the pool must not break
+    /// Registration cache: (gpid, pin token) → pinned size class + LRU
+    /// stamp.  BTreeMaps keep every lookup order-deterministic — the
+    /// DES guarantees bit-identical reruns and the pool must not break
     /// that.
-    pinned: BTreeMap<(usize, u64), u32>,
+    pinned: BTreeMap<(usize, u64), PinEntry>,
+    /// Monotone LRU clock (incremented on every pin/touch).
+    tick: u64,
     /// Released window slots: (comm, size class) → slot ids.
     free: BTreeMap<(CommId, u32), Vec<WinId>>,
     stats: WinPoolStats,
@@ -96,14 +109,60 @@ impl WinPool {
             || self
                 .pinned
                 .get(&(gpid, token))
-                .is_some_and(|&c| c >= size_class(bytes))
+                .is_some_and(|e| e.class >= size_class(bytes))
+    }
+
+    /// Refresh a token's LRU recency (warm hits keep their pin young).
+    pub fn touch(&mut self, gpid: usize, token: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.pinned.get_mut(&(gpid, token)) {
+            e.stamp = tick;
+        }
     }
 
     /// Record a cold registration: the token now covers `bytes`.
-    pub fn record_pin(&mut self, gpid: usize, token: u64, bytes: u64) {
+    /// `cap` bounds how many tokens `gpid` may keep pinned
+    /// (0 = unbounded); beyond it the least-recently-used token of
+    /// this rank is evicted — deregistered, so its next acquire is
+    /// cold again.  Returns the pinned-region size (size-class bytes)
+    /// of every evicted token so the caller can charge the
+    /// deregistration time to the evicting rank.
+    pub fn record_pin(&mut self, gpid: usize, token: u64, bytes: u64, cap: usize) -> Vec<u64> {
         let class = size_class(bytes);
-        let e = self.pinned.entry((gpid, token)).or_insert(class);
-        *e = (*e).max(class);
+        self.tick += 1;
+        let stamp = self.tick;
+        let e = self
+            .pinned
+            .entry((gpid, token))
+            .or_insert(PinEntry { class, stamp });
+        e.class = e.class.max(class);
+        e.stamp = stamp;
+        let mut evicted = Vec::new();
+        if cap == 0 {
+            return evicted;
+        }
+        loop {
+            let mine = self
+                .pinned
+                .range((gpid, u64::MIN)..=(gpid, u64::MAX))
+                .count();
+            if mine <= cap {
+                break;
+            }
+            // Evict this rank's least-recently-used token (never the
+            // one just pinned — it carries the freshest stamp).
+            let victim = self
+                .pinned
+                .range((gpid, u64::MIN)..=(gpid, u64::MAX))
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, e)| (k, e.class))
+                .expect("over-cap cache cannot be empty");
+            self.pinned.remove(&victim.0);
+            evicted.push(1u64.checked_shl(victim.1).unwrap_or(u64::MAX));
+            self.stats.evictions += 1;
+        }
+        evicted
     }
 
     /// Drop every pin of `gpid` (process retirement: its memory is
@@ -128,6 +187,12 @@ impl WinPool {
     pub fn note_pre_pin(&mut self, dt: f64) {
         self.stats.pre_pins += 1;
         self.stats.pre_pin_time += dt;
+    }
+
+    /// Account the deregistration time of LRU-evicted pins (charged by
+    /// the caller to the evicting rank's clock).
+    pub fn note_evict_dereg(&mut self, dt: f64) {
+        self.stats.evict_dereg_time += dt;
     }
 
     /// Take a released slot usable for a window on `comm` whose largest
@@ -182,7 +247,7 @@ mod tests {
         let mut p = WinPool::new();
         assert!(p.is_warm(0, 7, 0), "NULL exposure registers nothing");
         assert!(!p.is_warm(0, 7, 100));
-        p.record_pin(0, 7, 100); // class 7 (128 B)
+        p.record_pin(0, 7, 100, 0); // class 7 (128 B)
         assert!(p.is_warm(0, 7, 100));
         assert!(p.is_warm(0, 7, 128)); // same class
         assert!(p.is_warm(0, 7, 10)); // below
@@ -194,16 +259,16 @@ mod tests {
     #[test]
     fn pin_class_only_grows() {
         let mut p = WinPool::new();
-        p.record_pin(3, 1, 1 << 20);
-        p.record_pin(3, 1, 16); // smaller re-pin must not shrink
+        p.record_pin(3, 1, 1 << 20, 0);
+        p.record_pin(3, 1, 16, 0); // smaller re-pin must not shrink
         assert!(p.is_warm(3, 1, 1 << 20));
     }
 
     #[test]
     fn unpin_all_clears_one_rank() {
         let mut p = WinPool::new();
-        p.record_pin(0, 1, 64);
-        p.record_pin(1, 1, 64);
+        p.record_pin(0, 1, 64, 0);
+        p.record_pin(1, 1, 64, 0);
         p.unpin_all(0);
         assert!(!p.is_warm(0, 1, 64));
         assert!(p.is_warm(1, 1, 64));
@@ -237,5 +302,53 @@ mod tests {
         assert_eq!(s.warm_acquires, 2);
         assert!((s.cold_reg_time - 2.5).abs() < 1e-12);
         assert!((s.warm_reg_saved - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cap_evicts_least_recently_used_token() {
+        let mut p = WinPool::new();
+        assert!(p.record_pin(0, 1, 64, 2).is_empty());
+        assert!(p.record_pin(0, 2, 64, 2).is_empty());
+        // Touch token 1 so token 2 becomes the LRU victim.
+        p.touch(0, 1);
+        // The eviction reports the victim's pinned-region size (its
+        // size-class bytes) so the caller can charge the unpin.
+        assert_eq!(p.record_pin(0, 3, 64, 2), vec![64]);
+        assert!(p.is_warm(0, 1, 64), "touched token must survive");
+        assert!(!p.is_warm(0, 2, 64), "LRU token must be evicted");
+        assert!(p.is_warm(0, 3, 64), "fresh pin never self-evicts");
+        assert_eq!(p.stats().evictions, 1);
+    }
+
+    #[test]
+    fn cap_is_per_rank_and_zero_means_unbounded() {
+        let mut p = WinPool::new();
+        for t in 0..16 {
+            p.record_pin(0, t, 64, 0); // unbounded
+            p.record_pin(1, t, 64, 4); // capped
+        }
+        assert_eq!(p.stats().evictions, 12);
+        for t in 0..16 {
+            assert!(p.is_warm(0, t, 64), "unbounded rank keeps all pins");
+        }
+        // Rank 1 keeps only its 4 most recent tokens.
+        for t in 0..12 {
+            assert!(!p.is_warm(1, t, 64), "token {t} should be evicted");
+        }
+        for t in 12..16 {
+            assert!(p.is_warm(1, t, 64), "token {t} should survive");
+        }
+    }
+
+    #[test]
+    fn repinning_an_existing_token_does_not_evict() {
+        let mut p = WinPool::new();
+        p.record_pin(0, 1, 64, 2);
+        p.record_pin(0, 2, 64, 2);
+        // Re-pin of a cached token (class growth) stays within the cap.
+        p.record_pin(0, 1, 4096, 2);
+        assert_eq!(p.stats().evictions, 0);
+        assert!(p.is_warm(0, 1, 4096));
+        assert!(p.is_warm(0, 2, 64));
     }
 }

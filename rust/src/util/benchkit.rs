@@ -8,8 +8,90 @@
 //! measured quantity is the virtual clock of the DES rather than the
 //! wall clock.
 
+use crate::util::json::Json;
 use crate::util::stats::{fmt_seconds, Summary};
 use std::time::Instant;
+
+/// Outcome of one bench-regression comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchComparison {
+    /// Human-readable per-entry notes (improvements, new entries, …).
+    pub notes: Vec<String>,
+    /// Entries whose current value regressed beyond the tolerance (or
+    /// disappeared).  Non-empty ⇒ the gate fails.
+    pub regressions: Vec<String>,
+    /// Entries actually compared (present in both documents).
+    pub compared: usize,
+}
+
+impl BenchComparison {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare a current bench-smoke document against a baseline: every
+/// baseline entry must exist in `current` and must not exceed
+/// `baseline * (1 + tol)`.  An empty baseline (`"entries": {}`) is the
+/// bootstrap state and passes with a note — promote a CI-produced
+/// `BENCH_pr.json` to arm the gate.  Entries only present in `current`
+/// are noted, never failed, so adding benchmarks is painless.
+/// Documents carrying mismatched `schema` or `mode` (quick vs full
+/// workload) provenance are rejected outright — their virtual-time
+/// values are not comparable.
+pub fn compare_bench(baseline: &Json, current: &Json, tol: f64) -> BenchComparison {
+    let mut cmp = BenchComparison { notes: Vec::new(), regressions: Vec::new(), compared: 0 };
+    for key in ["schema", "mode"] {
+        let (b, c) = (baseline.get(key), current.get(key));
+        if let (Some(b), Some(c)) = (b, c) {
+            if b != c {
+                cmp.regressions
+                    .push(format!("{key} mismatch: baseline {b} vs current {c}"));
+            }
+        }
+    }
+    if !cmp.regressions.is_empty() {
+        return cmp;
+    }
+    let base = baseline.get("entries").and_then(|e| e.as_obj());
+    let cur = current.get("entries").and_then(|e| e.as_obj());
+    let (Some(base), Some(cur)) = (base, cur) else {
+        cmp.regressions.push("malformed document: missing \"entries\" object".into());
+        return cmp;
+    };
+    if base.is_empty() {
+        cmp.notes.push(
+            "baseline has no entries (bootstrap) — promote BENCH_pr.json to arm the gate".into(),
+        );
+    }
+    for (name, bv) in base {
+        let Some(bv) = bv.as_f64() else {
+            cmp.regressions.push(format!("{name}: baseline value is not a number"));
+            continue;
+        };
+        match cur.get(name).and_then(|v| v.as_f64()) {
+            None => cmp.regressions.push(format!("{name}: missing from current run")),
+            Some(cv) => {
+                cmp.compared += 1;
+                let limit = bv * (1.0 + tol);
+                if cv > limit {
+                    cmp.regressions.push(format!(
+                        "{name}: {cv:.6} exceeds baseline {bv:.6} by more than {:.0}%",
+                        tol * 100.0
+                    ));
+                } else if cv < bv * (1.0 - tol) {
+                    cmp.notes.push(format!("{name}: improved {bv:.6} -> {cv:.6}"));
+                }
+            }
+        }
+    }
+    for name in cur.keys() {
+        if !base.contains_key(name) {
+            cmp.notes.push(format!("{name}: new entry (not in baseline)"));
+        }
+    }
+    cmp
+}
 
 /// One benchmark measurement series.
 #[derive(Clone, Debug)]
@@ -301,5 +383,82 @@ mod tests {
     fn figure_table_rejects_bad_row() {
         let mut t = FigureTable::new("fig", "pair", &["a", "b"], 0);
         t.row("x", vec![1.0]);
+    }
+
+    fn doc(entries: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            (
+                "entries",
+                Json::Obj(
+                    entries.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance_and_fails_beyond() {
+        let base = doc(&[("a", 1.0), ("b", 2.0)]);
+        // 9% slower: within the 10% gate.
+        let ok = doc(&[("a", 1.09), ("b", 2.0)]);
+        let cmp = compare_bench(&base, &ok, 0.10);
+        assert!(cmp.passed(), "{cmp:?}");
+        assert_eq!(cmp.compared, 2);
+        // 11% slower on one entry: the gate must fail and name it.
+        let bad = doc(&[("a", 1.11), ("b", 2.0)]);
+        let cmp = compare_bench(&base, &bad, 0.10);
+        assert!(!cmp.passed());
+        assert_eq!(cmp.regressions.len(), 1);
+        assert!(cmp.regressions[0].contains('a'), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn compare_flags_missing_entries_and_notes_new_ones() {
+        let base = doc(&[("a", 1.0)]);
+        let cur = doc(&[("b", 5.0)]);
+        let cmp = compare_bench(&base, &cur, 0.10);
+        assert!(!cmp.passed(), "a vanished — must fail");
+        assert!(cmp.regressions[0].contains("missing"));
+        assert!(cmp.notes.iter().any(|n| n.contains("new entry")), "{:?}", cmp.notes);
+    }
+
+    #[test]
+    fn compare_bootstrap_baseline_passes() {
+        let base = doc(&[]);
+        let cur = doc(&[("a", 1.0)]);
+        let cmp = compare_bench(&base, &cur, 0.10);
+        assert!(cmp.passed());
+        assert_eq!(cmp.compared, 0);
+        assert!(cmp.notes.iter().any(|n| n.contains("bootstrap")), "{:?}", cmp.notes);
+    }
+
+    #[test]
+    fn compare_rejects_mismatched_provenance() {
+        // quick-vs-full documents are never comparable.
+        let mut base = doc(&[("a", 1.0)]);
+        let mut cur = doc(&[("a", 1.0)]);
+        if let (Json::Obj(b), Json::Obj(c)) = (&mut base, &mut cur) {
+            b.insert("mode".into(), Json::str("quick"));
+            c.insert("mode".into(), Json::str("full"));
+        }
+        let cmp = compare_bench(&base, &cur, 0.1);
+        assert!(!cmp.passed());
+        assert!(cmp.regressions[0].contains("mode mismatch"), "{:?}", cmp.regressions);
+        // A document without provenance still compares (back-compat).
+        let cmp = compare_bench(&doc(&[("a", 1.0)]), &doc(&[("a", 1.0)]), 0.1);
+        assert!(cmp.passed());
+    }
+
+    #[test]
+    fn compare_rejects_malformed_documents() {
+        let cmp = compare_bench(&Json::Null, &doc(&[]), 0.1);
+        assert!(!cmp.passed());
+        // Improvements are notes, not failures.
+        let base = doc(&[("a", 2.0)]);
+        let cur = doc(&[("a", 1.0)]);
+        let cmp = compare_bench(&base, &cur, 0.1);
+        assert!(cmp.passed());
+        assert!(cmp.notes.iter().any(|n| n.contains("improved")));
     }
 }

@@ -29,6 +29,8 @@ pub struct OptSpec {
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Option names the user actually passed (vs seeded defaults).
+    explicit: Vec<String>,
     flags: Vec<String>,
     positionals: Vec<String>,
 }
@@ -36,6 +38,17 @@ pub struct Args {
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Like [`Args::get`], but only when the user passed the option
+    /// explicitly — seeded defaults return `None`.  Lets presets like
+    /// `--quick` keep their values unless actually overridden.
+    pub fn get_explicit(&self, name: &str) -> Option<&str> {
+        if self.explicit.iter().any(|k| k == name) {
+            self.get(name)
+        } else {
+            None
+        }
     }
 
     pub fn get_usize(&self, name: &str) -> Option<usize> {
@@ -143,6 +156,7 @@ impl Command {
                                 .ok_or_else(|| format!("--{key} needs a value"))?
                         }
                     };
+                    args.explicit.push(key.clone());
                     args.values.insert(key, val);
                 }
             } else {
@@ -247,6 +261,19 @@ mod tests {
         let (_, a) = cli.parse(&sv(&["run", "--win-pool", "sideways"])).unwrap();
         assert_eq!(a.get("win-pool").and_then(parse_toggle), None);
         assert_eq!(a.get("missing").and_then(parse_toggle), None);
+    }
+
+    #[test]
+    fn explicit_options_are_distinguished_from_defaults() {
+        let cli = test_cli();
+        let (_, args) = cli.parse(&sv(&["run", "--method", "col"])).unwrap();
+        // Seeded default: visible via get, invisible via get_explicit —
+        // this is what keeps `--quick` presets from being overridden.
+        assert_eq!(args.get("reps"), Some("5"));
+        assert_eq!(args.get_explicit("reps"), None);
+        assert_eq!(args.get_explicit("method"), Some("col"));
+        let (_, args) = cli.parse(&sv(&["run", "--method", "col", "--reps=9"])).unwrap();
+        assert_eq!(args.get_explicit("reps"), Some("9"));
     }
 
     #[test]

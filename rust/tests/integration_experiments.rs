@@ -7,7 +7,7 @@ use proteo::mam::{Method, Strategy};
 use proteo::proteo::{analysis, run_once, RunSpec};
 
 fn full_scale(pairs: Vec<(usize, usize)>) -> FigOptions {
-    FigOptions { reps: 1, scale: 1, pairs, seed: 7 }
+    FigOptions { reps: 1, scale: 1, pairs, seed: 7, ..FigOptions::default() }
 }
 
 #[test]
@@ -113,12 +113,7 @@ fn ablation_single_window_saves_setup_not_registration() {
     // §VI: fusing the windows removes the per-structure collective
     // creations; the residual (registration) dominates, so the gain is
     // real but bounded.
-    let t = ablation::single_window(&FigOptions {
-        reps: 1,
-        scale: 1,
-        pairs: vec![(20, 160)],
-        seed: 7,
-    });
+    let t = ablation::single_window(&full_scale(vec![(20, 160)]));
     let per_struct = t.value(0, 0);
     let fused = t.value(0, 1);
     assert!(fused <= per_struct, "fused must not lose: {fused} vs {per_struct}");
@@ -132,7 +127,7 @@ fn ablation_single_window_saves_setup_not_registration() {
 fn register_sweep_shows_crossover() {
     // With fast enough registration RMA overtakes COL — the paper's
     // conclusion that initialization cost is the blocker.
-    let opts = FigOptions { reps: 1, scale: 10, pairs: vec![], seed: 7 };
+    let opts = FigOptions { reps: 1, scale: 10, pairs: vec![], seed: 7, ..FigOptions::default() };
     let t = ablation::registration_sweep(&opts, 20, 160);
     let slow = t.value(0, 0); // COL/RMA at 0.5 GB/s registration
     let fast = t.value(0, 4); // at 8 GB/s

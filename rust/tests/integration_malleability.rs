@@ -4,7 +4,9 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use proteo::mam::{Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy, WinPoolPolicy};
+use proteo::mam::{
+    Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy, WinPoolPolicy,
+};
 use proteo::netmodel::{NetParams, Topology};
 use proteo::proteo::{run_once, RunSpec};
 use proteo::rms::{Policy, Rms};
@@ -29,6 +31,7 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         warmup_iters: 2,
         post_iters: 2,
         spawn_cost: 0.05,
+        spawn_strategy: SpawnStrategy::Sequential,
         seed: 11,
         win_pool: WinPoolPolicy::off(),
     }
@@ -201,6 +204,7 @@ fn multi_resize_marathon_with_sam() {
                 method: Method::RmaLockall,
                 strategy: Strategy::WaitDrains,
                 spawn_cost: 0.01,
+                spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::off(),
             },
         );

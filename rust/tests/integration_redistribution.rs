@@ -10,8 +10,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use proteo::mam::{
-    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
-    WinPoolPolicy,
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry,
+    SpawnStrategy, Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -48,6 +48,7 @@ fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_
             method,
             strategy,
             spawn_cost: 0.01,
+            spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
         };
         let mut mam = Mam::new(reg, cfg.clone());
@@ -148,6 +149,7 @@ fn back_to_back_reconfigurations_compose() {
             method: Method::RmaLockall,
             strategy: Strategy::WaitDrains,
             spawn_cost: 0.01,
+            ..ReconfigCfg::default()
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let d3 = d2.clone();

@@ -8,8 +8,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use proteo::mam::{
-    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, Strategy,
-    WinPoolPolicy,
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry,
+    SpawnStrategy, Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -45,6 +45,7 @@ fn run_and_collect(
             method,
             strategy,
             spawn_cost: 0.001,
+            spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
         };
         let mut mam = Mam::new(reg, cfg.clone());
@@ -164,6 +165,7 @@ fn prop_block_sizes_after_resize_match_block_of() {
                     method: m,
                     strategy: s,
                     spawn_cost: 0.001,
+                    spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                 };
                 let mut mam = Mam::new(reg, cfg.clone());
@@ -235,6 +237,7 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                         method: m,
                         strategy: s,
                         spawn_cost: 0.001,
+                        spawn_strategy: SpawnStrategy::Sequential,
                         win_pool: WinPoolPolicy::off(),
                     };
                     let mut mam = Mam::new(reg, cfg.clone());

@@ -1,0 +1,144 @@
+//! Property tests over the spawn-strategy subsystem: for *random*
+//! (NS, ND, total, method, strategy) grows, the redistributed payloads
+//! must be identical across Sequential / Parallel / Async spawning —
+//! the strategy only reshapes virtual time, never data — and the
+//! Sequential strategy must be byte-identical to the default
+//! configuration (the seed's single-constant model).
+
+use std::sync::{Arc, Mutex};
+
+use proteo::mam::{
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry,
+    SpawnStrategy, Strategy, WinPoolPolicy,
+};
+use proteo::netmodel::{NetParams, Topology};
+use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
+use proteo::util::proptest_lite::{check_seeded, one_of, usizes, Strategy as PStrategy};
+
+/// Run one grow under the given spawn strategy and return the
+/// reassembled contents (drain-rank order) plus the final virtual time.
+fn run_grow(
+    ns: usize,
+    nd: usize,
+    total: u64,
+    method: Method,
+    strategy: Strategy,
+    spawn_strategy: SpawnStrategy,
+) -> (Option<Vec<f64>>, f64) {
+    let collected: Arc<Mutex<Vec<Option<Vec<f64>>>>> = Arc::new(Mutex::new(vec![None; nd]));
+    let c2 = collected.clone();
+    let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let b = block_of(total, ns, rank);
+        let mut reg = Registry::new();
+        reg.register(
+            "A",
+            DataKind::Constant,
+            total,
+            Payload::real((b.ini..b.end).map(|i| (i as f64) * 0.5 + 1.0).collect()),
+        );
+        let decls = reg.decls();
+        let cfg = ReconfigCfg {
+            method,
+            strategy,
+            spawn_cost: 0.02,
+            spawn_strategy,
+            win_pool: WinPoolPolicy::off(),
+        };
+        let mut mam = Mam::new(reg, cfg.clone());
+        let c3 = c2.clone();
+        let cfg2 = cfg.clone();
+        let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                let dr = dp.rank(merged);
+                let e = dmam.registry.entry(0);
+                c3.lock().unwrap()[dr] = e.local.as_slice().map(|s| s.to_vec());
+            });
+        let mut status = mam.reconfigure(&p, WORLD, nd, body);
+        while status == MamStatus::InProgress {
+            p.compute(1e-4);
+            status = mam.checkpoint(&p);
+        }
+        let out = mam.finish(&p, WORLD);
+        if let Some(comm) = out.app_comm {
+            let nr = p.rank(comm);
+            let e = mam.registry.entry(0);
+            c2.lock().unwrap()[nr] = e.local.as_slice().map(|s| s.to_vec());
+        }
+    });
+    let end = sim.run().expect("simulation");
+    let shards = collected.lock().unwrap();
+    if shards.iter().any(|s| s.is_none()) {
+        return (None, end);
+    }
+    let mut out = Vec::with_capacity(total as usize);
+    for s in shards.iter() {
+        out.extend_from_slice(s.as_ref().unwrap());
+    }
+    (Some(out), end)
+}
+
+fn grow_versions() -> Vec<(Method, Strategy)> {
+    let mut v = Vec::new();
+    for m in Method::all() {
+        for s in Strategy::all() {
+            if is_valid_version(m, s) {
+                v.push((m, s));
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn prop_payloads_identical_across_spawn_strategies() {
+    let versions = grow_versions();
+    check_seeded(
+        "spawn strategies move identical payloads",
+        usizes(1, 5)
+            .pair(usizes(2, 9))
+            .pair(usizes(1, 1_500))
+            .pair(one_of(&versions)),
+        |(((ns, nd), total), (m, s))| {
+            if nd <= ns {
+                return true; // property targets grows (spawning)
+            }
+            let total = total as u64;
+            let (seq, _) = run_grow(ns, nd, total, m, s, SpawnStrategy::Sequential);
+            let (par, _) = run_grow(ns, nd, total, m, s, SpawnStrategy::Parallel);
+            let (asy, _) = run_grow(ns, nd, total, m, s, SpawnStrategy::Async);
+            let (Some(seq), Some(par), Some(asy)) = (seq, par, asy) else {
+                return false;
+            };
+            // Bitwise-identical contents, and the right contents.
+            seq.len() as u64 == total
+                && seq == par
+                && seq == asy
+                && seq.iter().enumerate().all(|(i, v)| *v == (i as f64) * 0.5 + 1.0)
+        },
+        0x5BA11,
+    );
+}
+
+#[test]
+fn prop_sequential_matches_default_cfg_bit_for_bit() {
+    // The acceptance bar: Sequential reproduces the single-constant
+    // model exactly — same payloads *and* same virtual end time as a
+    // default-configured run (whose spawn_strategy is Sequential).
+    let versions = grow_versions();
+    check_seeded(
+        "explicit Sequential == default cfg (time bit-identical)",
+        usizes(1, 4).pair(usizes(2, 8)).pair(one_of(&versions)),
+        |((ns, nd), (m, s))| {
+            if nd <= ns {
+                return true;
+            }
+            let (a, ta) = run_grow(ns, nd, 800, m, s, SpawnStrategy::Sequential);
+            let (b, tb) = run_grow(ns, nd, 800, m, s, SpawnStrategy::default());
+            a.is_some() && a == b && ta.to_bits() == tb.to_bits()
+        },
+        0xB17,
+    );
+}
