@@ -19,8 +19,8 @@ use std::sync::{Arc, Mutex};
 
 use proteo::linalg::{self, EllMatrix};
 use proteo::mam::{
-    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy,
-    WinPoolPolicy,
+    block_of, DataKind, Mam, MamStatus, Method, PlannerMode, ReconfigCfg, Registry, SpawnStrategy,
+    Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::runtime::{artifacts_dir, runtime_available, CgRuntime, CgState};
@@ -90,6 +90,7 @@ fn main() {
             spawn_cost: 0.1,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::on(),
+            planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
 

@@ -11,8 +11,8 @@
 use std::sync::Arc;
 
 use proteo::mam::{
-    block_of, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy,
-    WinPoolPolicy,
+    block_of, DataKind, Mam, MamStatus, Method, PlannerMode, ReconfigCfg, Registry, SpawnStrategy,
+    Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -39,6 +39,7 @@ fn main() {
             spawn_cost: 0.05,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
 

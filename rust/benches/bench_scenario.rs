@@ -1,0 +1,58 @@
+//! Bench: the closed-loop RMS scenario (see `experiments::scenario`) —
+//! total makespan of the adaptive job trace under the cost-model
+//! planner versus fixed anchor versions.  The measured quantity is
+//! deterministic virtual time; wall time is reported for harness
+//! throughput.  `PROTEO_BENCH_QUICK=1` shrinks the workload 10000×
+//! (the CI configuration), otherwise the CI-friendly 100× scale runs.
+
+use proteo::experiments::scenario::{run_scenario, ScenarioSpec};
+use proteo::mam::{Method, PlannerMode, Strategy, WinPoolPolicy};
+use proteo::util::benchkit::Bench;
+
+fn main() {
+    let quick = std::env::var("PROTEO_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let base = ScenarioSpec::rms_trace(quick);
+    eprintln!("bench scenario: quick={quick} trace={}", base.name);
+    let wall = std::time::Instant::now();
+    let mut b = Bench::new();
+    let configs: [(&str, PlannerMode, Method, Strategy, WinPoolPolicy); 4] = [
+        ("auto", PlannerMode::Auto, Method::Collective, Strategy::Blocking, WinPoolPolicy::off()),
+        (
+            "col-blocking",
+            PlannerMode::Fixed,
+            Method::Collective,
+            Strategy::Blocking,
+            WinPoolPolicy::off(),
+        ),
+        (
+            "rma-lockall+pool",
+            PlannerMode::Fixed,
+            Method::RmaLockall,
+            Strategy::Blocking,
+            WinPoolPolicy::on(),
+        ),
+        (
+            "rma-lockall-wd",
+            PlannerMode::Fixed,
+            Method::RmaLockall,
+            Strategy::WaitDrains,
+            WinPoolPolicy::off(),
+        ),
+    ];
+    for (name, planner, method, strategy, pool) in configs {
+        let mut spec = base.clone();
+        spec.planner = planner;
+        spec.method = method;
+        spec.strategy = strategy;
+        spec.win_pool = pool;
+        b.bench_metric(&format!("scenario/{name}"), "makespan_s", || {
+            run_scenario(&spec).makespan
+        });
+    }
+    b.print_report("closed-loop RMS scenario makespan (virtual seconds)");
+    // One full accuracy table for the planner run.
+    let mut auto = base.clone();
+    auto.planner = PlannerMode::Auto;
+    println!("{}", run_scenario(&auto).render());
+    eprintln!("harness wall time: {:.2}s", wall.elapsed().as_secs_f64());
+}

@@ -24,7 +24,7 @@
 //! The CLI (`proteo run --config file.json`) and the experiment
 //! harnesses consume [`ExperimentConfig`].
 
-use crate::mam::{Method, SpawnStrategy, Strategy, WinPoolPolicy};
+use crate::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::RunSpec;
 use crate::sam::SamConfig;
 use crate::util::json::Json;
@@ -44,6 +44,9 @@ pub struct ExperimentConfig {
     /// Spawn strategy of the Merge grow path
     /// (`"spawn_strategy": "sequential" | "parallel" | "async"`).
     pub spawn_strategy: SpawnStrategy,
+    /// `"planner": "auto" | "fixed"` — `auto` lets the cost-model
+    /// planner override method/strategy/spawn/pool per resize.
+    pub planner: PlannerMode,
     pub base: RunSpec,
 }
 
@@ -59,6 +62,7 @@ impl ExperimentConfig {
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
             spawn_strategy: SpawnStrategy::Sequential,
+            planner: PlannerMode::Fixed,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
     }
@@ -82,6 +86,7 @@ impl ExperimentConfig {
         spec.seed = self.seed;
         spec.win_pool = self.win_pool;
         spec.spawn_strategy = self.spawn_strategy;
+        spec.planner = self.planner;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
             spec.sam.colind_elems /= self.scale;
@@ -144,6 +149,11 @@ impl ExperimentConfig {
             cfg.spawn_strategy = SpawnStrategy::parse(ss).ok_or_else(|| {
                 format!("bad spawn_strategy '{ss}' (sequential | parallel | async)")
             })?;
+        }
+        if let Some(pl) = doc.get("planner") {
+            let pl = pl.as_str().ok_or("planner must be a string")?;
+            cfg.planner = PlannerMode::parse(pl)
+                .ok_or_else(|| format!("bad planner '{pl}' (fixed | auto)"))?;
         }
         if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
             cfg.pairs = pairs
@@ -214,6 +224,7 @@ impl ExperimentConfig {
             ("win_pool", Json::str(self.win_pool.label())),
             ("win_pool_cap", Json::num(self.win_pool.cap as f64)),
             ("spawn_strategy", Json::str(self.spawn_strategy.label())),
+            ("planner", Json::str(self.planner.label())),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
     }
@@ -396,6 +407,29 @@ mod tests {
             cfg.to_json().get_path("win_pool_cap").unwrap().as_usize(),
             Some(8)
         );
+    }
+
+    #[test]
+    fn planner_parses_propagates_and_rejects_bad_values() {
+        // Default: fixed (seed behaviour).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert_eq!(cfg.planner, PlannerMode::Fixed);
+        assert_eq!(cfg.spec_for(20, 40).planner, PlannerMode::Fixed);
+        for (src, want) in [
+            (r#"{"planner": "fixed"}"#, PlannerMode::Fixed),
+            (r#"{"planner": "auto"}"#, PlannerMode::Auto),
+            (r#"{"planner": "AUTO"}"#, PlannerMode::Auto),
+        ] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.planner, want, "{src}");
+            assert_eq!(cfg.spec_for(20, 40).planner, want, "{src}");
+        }
+        let err = ExperimentConfig::from_str(r#"{"planner": "oracle"}"#).unwrap_err();
+        assert!(err.contains("planner"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"planner": 1}"#).is_err());
+        // Provenance carries the mode back out.
+        let cfg = ExperimentConfig::from_str(r#"{"planner": "auto"}"#).unwrap();
+        assert_eq!(cfg.to_json().get_path("planner").unwrap().as_str(), Some("auto"));
     }
 
     #[test]

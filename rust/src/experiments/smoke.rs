@@ -13,11 +13,11 @@
 //! `BENCH_pr.json` as an artifact); promoting a CI-produced
 //! `BENCH_pr.json` to `BENCH_baseline.json` arms the gate.
 
-use crate::mam::{Method, SpawnStrategy, Strategy, WinPoolPolicy};
+use crate::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::run_once;
 use crate::util::json::Json;
 
-use super::{ablation, FigOptions};
+use super::{ablation, scenario, FigOptions};
 
 /// Schema version of the smoke-metrics JSON.
 pub const SCHEMA: u64 = 1;
@@ -65,6 +65,22 @@ pub fn collect(quick: bool) -> Json {
         entries.push((format!("run.20to40.{name}.total"), r.reconf_total));
     }
 
+    // Closed-loop RMS scenario: total makespan under the planner and
+    // two fixed anchors — the gate's planner-regression tripwire.
+    let base = scenario::ScenarioSpec::rms_trace(quick);
+    for (name, planner, m, s) in [
+        ("auto", PlannerMode::Auto, Method::Collective, Strategy::Blocking),
+        ("col_blocking", PlannerMode::Fixed, Method::Collective, Strategy::Blocking),
+        ("rma_lockall_wd", PlannerMode::Fixed, Method::RmaLockall, Strategy::WaitDrains),
+    ] {
+        let mut sp = base.clone();
+        sp.planner = planner;
+        sp.method = m;
+        sp.strategy = s;
+        let rep = scenario::run_scenario(&sp);
+        entries.push((format!("scenario.rms.{name}.makespan"), rep.makespan));
+    }
+
     let obj: Vec<(&str, Json)> = vec![
         ("schema", Json::num(SCHEMA as f64)),
         // Workload provenance: bench-compare refuses to compare
@@ -94,6 +110,14 @@ mod tests {
             assert!(v.is_finite() && v > 0.0, "{k} = {v}");
         }
         assert_eq!(a.get("schema").unwrap().as_u64(), Some(SCHEMA));
+        // The scenario makespans feed the gate too.
+        for key in [
+            "scenario.rms.auto.makespan",
+            "scenario.rms.col_blocking.makespan",
+            "scenario.rms.rma_lockall_wd.makespan",
+        ] {
+            assert!(entries.contains_key(key), "missing {key}");
+        }
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! `proteo` — the command-line launcher.
 //!
 //! ```text
-//! proteo exp fig3            # regenerate a paper figure (fig3..fig9, all)
+//! proteo exp fig3            # regenerate a paper figure (fig3..fig10, all)
 //! proteo run --ns 20 --nd 160 --method rma-lockall --strategy wd
+//! proteo run --ns 20 --nd 160 --planner auto   # cost-model-driven choice
+//! proteo scenario --quick --compare            # closed-loop RMS trace
 //! proteo ablation single-window
 //! proteo ablation register-sweep --ns 20 --nd 160
 //! proteo cg --iters 200      # AOT JAX/Pallas CG through PJRT
@@ -12,9 +14,9 @@
 use std::process::ExitCode;
 
 use proteo::config::ExperimentConfig;
-use proteo::experiments::{self, ablation, smoke, FigOptions};
+use proteo::experiments::{self, ablation, scenario, smoke, FigOptions};
 use proteo::linalg::EllMatrix;
-use proteo::mam::{Method, SpawnStrategy, Strategy, WinPoolPolicy};
+use proteo::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use proteo::netmodel::NetParams;
 use proteo::proteo::{run_median, RunSpec};
 use proteo::runtime::{artifacts_dir, CgRuntime};
@@ -47,7 +49,21 @@ fn cli() -> Cli {
                 .opt("win-pool", "off", "persistent RMA window pool (§VI): on | off")
                 .opt("win-pool-cap", "0", "per-rank pin-cache bound (0 = unbounded)")
                 .opt("spawn-strategy", "sequential", "sequential | parallel | async")
+                .opt("planner", "fixed", "fixed | auto (cost-model-driven version choice)")
                 .flag("json", "emit the result as JSON"),
+            Command::new(
+                "scenario",
+                "closed-loop RMS job-trace simulation with per-resize planning",
+            )
+            .opt("planner", "auto", "fixed | auto")
+            .opt("method", "col", "fixed version: col | rma-lock | rma-lockall")
+            .opt("strategy", "blocking", "fixed version: blocking | nb | wd | t")
+            .opt("spawn-strategy", "sequential", "fixed version: sequential | parallel | async")
+            .opt("win-pool", "off", "fixed version: on | off")
+            .opt("seed", "12648430", "base RNG seed")
+            .flag("quick", "CI-sized workload (10000x smaller problem)")
+            .flag("compare", "also run the fixed anchor versions and print makespans")
+            .flag("json", "emit the report as JSON"),
             Command::new(
                 "ablation",
                 "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn",
@@ -66,6 +82,11 @@ fn cli() -> Cli {
                 .flag("quick", "CI-sized workload"),
             Command::new("bench-compare", "gate: compare two bench-smoke JSON files")
                 .opt("tol", "0.10", "allowed relative regression before failing"),
+            Command::new(
+                "bench-promote",
+                "promote a green bench-smoke JSON into the committed baseline",
+            )
+            .opt("out", "BENCH_baseline.json", "baseline path to (over)write"),
             Command::new("info", "print calibration constants and artifact manifest"),
         ],
     }
@@ -174,6 +195,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             .get("spawn-strategy")
             .and_then(SpawnStrategy::parse)
             .ok_or("bad --spawn-strategy (sequential | parallel | async)")?;
+        spec.planner = args
+            .get("planner")
+            .and_then(PlannerMode::parse)
+            .ok_or("bad --planner (fixed | auto)")?;
         if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
             spec.seed = seed;
         }
@@ -244,6 +269,48 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         "win-pool" => println!("{}", ablation::win_pool(&opts).render()),
         "spawn" => println!("{}", ablation::spawn_strategies(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<(), String> {
+    let mut spec = scenario::ScenarioSpec::rms_trace(args.flag("quick"));
+    spec.planner = args
+        .get("planner")
+        .and_then(PlannerMode::parse)
+        .ok_or("bad --planner (fixed | auto)")?;
+    spec.method = Method::parse(args.get("method").unwrap_or("col"))
+        .ok_or("bad --method (col | rma-lock | rma-lockall)")?;
+    spec.strategy = Strategy::parse(args.get("strategy").unwrap_or("blocking"))
+        .ok_or("bad --strategy (blocking | nb | wd | t)")?;
+    spec.spawn_strategy = args
+        .get("spawn-strategy")
+        .and_then(SpawnStrategy::parse)
+        .ok_or("bad --spawn-strategy (sequential | parallel | async)")?;
+    spec.win_pool = args
+        .get("win-pool")
+        .and_then(WinPoolPolicy::parse)
+        .ok_or("bad --win-pool (on | off)")?;
+    if spec.planner == PlannerMode::Fixed
+        && !proteo::mam::is_valid_version(spec.method, spec.strategy)
+    {
+        return Err("NB is undefined for RMA methods (§V-A); use WD".into());
+    }
+    if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
+        spec.seed = seed;
+    }
+    if args.flag("compare") {
+        if args.flag("json") {
+            return Err("--compare renders a text table; drop --json".into());
+        }
+        println!("{}", scenario::makespan_comparison(&spec).render());
+        return Ok(());
+    }
+    let report = scenario::run_scenario(&spec);
+    if args.flag("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        println!("{}", report.render());
     }
     Ok(())
 }
@@ -333,6 +400,44 @@ fn cmd_bench_compare(args: &Args) -> Result<(), String> {
     }
 }
 
+fn cmd_bench_promote(args: &Args) -> Result<(), String> {
+    let [src] = args.positionals() else {
+        return Err(
+            "usage: proteo bench-promote <BENCH_pr.json> [--out BENCH_baseline.json]".into()
+        );
+    };
+    let out = args.get("out").unwrap_or("BENCH_baseline.json").to_string();
+    let doc = {
+        let s = std::fs::read_to_string(src).map_err(|e| format!("{src}: {e}"))?;
+        Json::parse(&s).map_err(|e| format!("{src}: {e}"))?
+    };
+    let entries = doc
+        .get("entries")
+        .and_then(|e| e.as_obj())
+        .ok_or("source has no \"entries\" object")?;
+    if entries.is_empty() {
+        return Err("refusing to promote an empty entry set (still bootstrap)".into());
+    }
+    // Rewrite the note: the bootstrap wording of the pre-promotion
+    // baseline would misdescribe an armed file.
+    let note = format!(
+        "Armed baseline for the CI bench-smoke regression gate (virtual-time metrics; \
+         fully deterministic), promoted from {src} via `proteo bench-promote`. \
+         `proteo bench-compare {out} BENCH_pr.json --tol 0.10` fails the job when any \
+         entry regresses by more than 10%. Re-promote a green run's BENCH_pr.json \
+         artifact to refresh it."
+    );
+    let out_doc = Json::obj(vec![
+        ("entries", Json::Obj(entries.clone())),
+        ("mode", doc.get("mode").cloned().unwrap_or_else(|| Json::str("quick"))),
+        ("note", Json::str(note)),
+        ("schema", doc.get("schema").cloned().unwrap_or(Json::Num(1.0))),
+    ]);
+    std::fs::write(&out, out_doc.to_pretty()).map_err(|e| format!("{out}: {e}"))?;
+    println!("promoted {} entries from {src} into {out}", entries.len());
+    Ok(())
+}
+
 fn cmd_info() -> Result<(), String> {
     let p = NetParams::sarteco25();
     println!("== calibration (NetParams::sarteco25) ==");
@@ -400,10 +505,12 @@ fn main() -> ExitCode {
     let result = match cmd.name {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
+        "scenario" => cmd_scenario(&args),
         "ablation" => cmd_ablation(&args),
         "cg" => cmd_cg(&args),
         "bench-smoke" => cmd_bench_smoke(&args),
         "bench-compare" => cmd_bench_compare(&args),
+        "bench-promote" => cmd_bench_promote(&args),
         "info" => cmd_info(),
         _ => unreachable!(),
     };

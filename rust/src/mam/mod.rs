@@ -29,10 +29,15 @@
 //!   their windows so repeat resizes skip `Win_create` registration,
 //! * [`spawn`]     — spawn strategies for the Merge grow path
 //!   (sequential / parallel / async `MPI_Comm_spawn` modeling),
+//! * [`planner`]   — the cost-model-driven reconfiguration planner:
+//!   prices every `(method × strategy × spawn × pool)` candidate with
+//!   `netmodel`'s prediction API (refined by exact DES micro-probes)
+//!   and picks the version per resize (`--planner auto`),
 //! * [`reconfig`]  — the reconfiguration driver tying it together.
 
 pub mod blockdist;
 pub mod collective;
+pub mod planner;
 pub mod reconfig;
 pub mod registry;
 pub mod rma;
@@ -40,6 +45,7 @@ pub mod spawn;
 pub mod winpool;
 
 pub use blockdist::{block_of, drain_plan, source_plan, Block, DrainPlan, SourcePlan};
+pub use planner::{Candidate, Objective, PlannerInputs, PlannerMode, ReconfigPlan};
 pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
 pub use registry::{DataDecl, DataEntry, DataKind, Registry};
 pub use spawn::SpawnStrategy;

@@ -1,0 +1,681 @@
+//! Cost-model-driven reconfiguration planning (§VI, and the related
+//! dynamic-workload RMS literature).
+//!
+//! The paper's conclusion is that one-sided redistribution is
+//! *conditionally* best: window registration can erase its advantage,
+//! so the right `(method × strategy × spawn strategy × window pool)`
+//! depends on the resize direction, the data volume and whether the
+//! windows are already warm.  This module makes that choice
+//! automatically:
+//!
+//! * every valid candidate version is priced with the closed-form
+//!   prediction API of [`crate::netmodel::costmodel`]
+//!   ([`predict_reconfig`]), using the same calibrated constants the
+//!   simulator charges;
+//! * because closed-form contention models have irreducible error on
+//!   near-ties (the paper's own Fig. 3 band is 0.73–0.99×), the
+//!   *blocking* candidates — the ones that can actually shorten the
+//!   reconfiguration span — are optionally refined with **DES
+//!   micro-probes**: an isolated simulation of just the
+//!   reconfiguration, which is exact by construction (the DES is
+//!   deterministic and the probe replays the identical collective
+//!   sequence over the identical topology);
+//! * the argmin is returned as a [`ReconfigPlan`] that the harnesses
+//!   (`proteo::run_once`, `experiments::scenario`) apply per resize.
+//!
+//! Two objectives are supported.  [`Objective::ReconfTime`] minimizes
+//! the reconfiguration span itself and therefore always selects a
+//! blocking candidate (background strategies cannot shorten the span —
+//! they pay iteration-quantized completion detection plus the variable
+//! tail; they pay off through *overlap*).  [`Objective::Effective`]
+//! minimizes the Eq. (2)-style effective cost `span − overlap credit`
+//! and may select a background strategy.
+//!
+//! Plan resolution is a **harness-level** operation: every rank (and
+//! every spawned drain) must execute the same plan, so the plan is
+//! computed from rank-independent inputs (declared sizes, calibrated
+//! parameters, the resize pair, pool warmth known from the resize
+//! history) before the collective sequence starts.  `Mam` itself
+//! resolves `ReconfigCfg::planner == Auto` with the analytic-only
+//! variant ([`resolve_internal`]), which depends on nothing but those
+//! shared inputs and is therefore consistent across sources and
+//! drains.
+
+use std::sync::Arc;
+
+use crate::netmodel::{
+    predict_reconfig, CostPrediction, NetParams, ReconfigCase, RedistShape, Topology,
+};
+use crate::simmpi::{CommId, MpiProc, MpiSim, Payload, ELEM_BYTES, WORLD};
+
+use super::blockdist::block_of;
+use super::reconfig::{Mam, MamStatus, ReconfigCfg};
+use super::registry::{DataDecl, DataKind, Registry};
+use super::winpool::{self, WinPoolPolicy};
+use super::{is_valid_version, version_label, Method, SpawnStrategy, Strategy};
+
+/// Whether a reconfiguration uses the fixed configured version or the
+/// planner's per-resize choice (`--planner auto|fixed`, `"planner"` in
+/// JSON configs, [`ReconfigCfg::planner`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// Use the configured method/strategy/spawn/pool fields verbatim
+    /// (seed behaviour; the default).
+    #[default]
+    Fixed,
+    /// Let the planner override the version fields per resize.
+    Auto,
+}
+
+impl PlannerMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            PlannerMode::Fixed => "fixed",
+            PlannerMode::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlannerMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Some(PlannerMode::Fixed),
+            "auto" => Some(PlannerMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// What the planner minimizes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Objective {
+    /// The reconfiguration span (default): always a blocking pick.
+    #[default]
+    ReconfTime,
+    /// Span minus the overlapped-iteration credit (Eq. (2) analog):
+    /// may pick a background strategy.
+    Effective,
+}
+
+/// One candidate version of the planner's search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub method: Method,
+    pub strategy: Strategy,
+    pub spawn_strategy: SpawnStrategy,
+    pub win_pool: WinPoolPolicy,
+}
+
+impl Candidate {
+    /// Figure-style label, e.g. `RMA-Lockall+pool+async`.
+    pub fn label(&self) -> String {
+        let mut l = version_label(self.method, self.strategy);
+        if self.win_pool.enabled {
+            l.push_str("+pool");
+        }
+        if self.spawn_strategy != SpawnStrategy::Sequential {
+            l.push('+');
+            l.push_str(self.spawn_strategy.label());
+        }
+        l
+    }
+
+    /// Materialize a (resolved, `planner: Fixed`) reconfiguration
+    /// configuration for this candidate.
+    pub fn cfg(&self, spawn_cost: f64) -> ReconfigCfg {
+        ReconfigCfg {
+            method: self.method,
+            strategy: self.strategy,
+            spawn_cost,
+            spawn_strategy: self.spawn_strategy,
+            win_pool: self.win_pool,
+            planner: PlannerMode::Fixed,
+        }
+    }
+}
+
+/// A candidate with its predicted (and optionally probed) cost.
+#[derive(Clone, Debug)]
+pub struct CandidateCost {
+    pub candidate: Candidate,
+    pub predicted: CostPrediction,
+    /// Exact reconfiguration span from the DES micro-probe, when one
+    /// ran (blocking candidates under `probe: true`).
+    pub probed_reconf: Option<f64>,
+}
+
+impl CandidateCost {
+    /// Best available span estimate: probed when present.
+    pub fn reconf_time(&self) -> f64 {
+        self.probed_reconf.unwrap_or(self.predicted.reconf_time)
+    }
+
+    /// Best available effective cost (span minus overlap credit).
+    pub fn effective(&self) -> f64 {
+        self.reconf_time() - self.predicted.overlap_credit
+    }
+}
+
+/// The planner's answer for one resize.
+#[derive(Clone, Debug)]
+pub struct ReconfigPlan {
+    pub ns: usize,
+    pub nd: usize,
+    /// Pool warmth the plan assumed.
+    pub warm: bool,
+    pub choice: Candidate,
+    /// Decomposed prediction of the chosen candidate.
+    pub predicted: CostPrediction,
+    /// Planner's span estimate for the choice (probed when available).
+    pub predicted_reconf: f64,
+    /// Every candidate considered, in enumeration order (stable, so
+    /// reports and ties are deterministic).
+    pub candidates: Vec<CandidateCost>,
+}
+
+impl ReconfigPlan {
+    pub fn label(&self) -> String {
+        self.choice.label()
+    }
+}
+
+/// Rank-independent planner inputs for one resize.
+#[derive(Clone, Debug)]
+pub struct PlannerInputs {
+    /// Registered structures (names, kinds, global sizes) — identical
+    /// on every rank by MaM's registry contract.
+    pub decls: Vec<DataDecl>,
+    pub ns: usize,
+    pub nd: usize,
+    pub cores_per_node: usize,
+    pub net: NetParams,
+    /// Sequential-spawn constant (`ReconfigCfg::spawn_cost`).
+    pub spawn_cost: f64,
+    /// A previous resize with the pool enabled pinned every source's
+    /// current block (register-on-receive, §VI).
+    pub warm: bool,
+    /// Application iteration time on NS / ND ranks (0 = unknown;
+    /// disables the overlap terms).
+    pub t_iter_src: f64,
+    pub t_iter_dst: f64,
+    pub objective: Objective,
+    /// Refine blocking candidates with exact DES micro-probes.
+    pub probe: bool,
+}
+
+/// Price one candidate with the closed-form model.
+pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPrediction {
+    let mut bulk = Vec::new();
+    let mut tail = Vec::new();
+    for d in &inp.decls {
+        let bytes = d.total_elems * ELEM_BYTES;
+        if cand.strategy == Strategy::Blocking || d.kind == DataKind::Constant {
+            bulk.push(bytes);
+        } else {
+            tail.push(bytes);
+        }
+    }
+    let spawn_block = if inp.nd > inp.ns {
+        cand.spawn_strategy
+            .schedule(&inp.net, inp.ns, inp.nd - inp.ns, inp.nd, inp.spawn_cost)
+            .source_block
+    } else {
+        0.0
+    };
+    let case = ReconfigCase {
+        ns: inp.ns,
+        nd: inp.nd,
+        cores_per_node: inp.cores_per_node,
+        bulk_bytes: bulk,
+        tail_bytes: tail,
+        warm: inp.warm,
+        t_iter_src: inp.t_iter_src,
+        t_iter_dst: inp.t_iter_dst,
+        spawn_block,
+    };
+    let shape = RedistShape {
+        one_sided: cand.method.is_rma(),
+        lock_per_target: cand.method == Method::RmaLock,
+        background: cand.strategy.is_background(),
+        threading: cand.strategy == Strategy::Threading,
+        pool: cand.win_pool.enabled,
+    };
+    predict_reconfig(&inp.net, &case, &shape)
+}
+
+/// Exact cost of one candidate from an isolated DES micro-probe.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeCost {
+    /// Full reconfiguration span (spawn + redistribution + finish).
+    pub reconf_time: f64,
+    /// Redistribution span only.
+    pub redist_time: f64,
+}
+
+/// Simulate exactly one reconfiguration of the declared data in a
+/// fresh world — same topology rule, same calibrated parameters, same
+/// collective sequence as the real run — and measure its span.  The
+/// DES is bit-deterministic and nothing besides the reconfiguration
+/// runs, so for blocking candidates the probed span equals the span
+/// the application will observe (warm-up skew shifts every candidate
+/// identically and cancels in the comparison).
+pub fn probe_reconfiguration(inp: &PlannerInputs, cand: &Candidate) -> ProbeCost {
+    let (ns, nd) = (inp.ns, inp.nd);
+    let n = ns.max(nd);
+    let cpn = inp.cores_per_node.max(1);
+    let topo = Topology::new_cyclic(n.div_ceil(cpn).max(1), cpn);
+    let mut sim = MpiSim::new(topo, inp.net.clone());
+    let world = sim.world();
+    let decls = inp.decls.clone();
+    let cfg = cand.cfg(inp.spawn_cost);
+    let warm = inp.warm;
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let mut reg = Registry::new();
+        for d in &decls {
+            let b = block_of(d.total_elems, ns, rank);
+            let local = if d.real {
+                Payload::real(vec![0.0; b.len() as usize])
+            } else {
+                Payload::virt(b.len())
+            };
+            reg.register(&d.name, d.kind, d.total_elems, local);
+        }
+        if warm && cfg.win_pool.enabled {
+            // Reproduce the register-on-receive state left by a
+            // previous resize: every source's current block is pinned.
+            for e in reg.entries() {
+                p.pin_buffer(winpool::pin_token(&e.name), e.local.bytes(), cfg.win_pool.cap);
+            }
+        }
+        let mut mam = Mam::new(reg, cfg.clone());
+        let decls2 = decls.clone();
+        let cfg2 = cfg.clone();
+        let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let _ = Mam::drain_join(&dp, merged, ns, nd, &decls2, cfg2.clone());
+            });
+        let mut st = mam.reconfigure(&p, WORLD, nd, body);
+        let mut polls = 0u32;
+        while st == MamStatus::InProgress {
+            p.compute(1e-3);
+            st = mam.checkpoint(&p);
+            polls += 1;
+            assert!(polls < 1_000_000, "probe redistribution never completes");
+        }
+        let _ = mam.finish(&p, WORLD);
+    });
+    sim.run().expect("planner probe simulation failed");
+    let w = world.lock().unwrap();
+    ProbeCost {
+        reconf_time: w
+            .metrics
+            .span("mam.reconf_start", "mam.reconf_end")
+            .unwrap_or(f64::NAN),
+        redist_time: w
+            .metrics
+            .span("mam.redist_start", "mam.redist_end")
+            .unwrap_or(f64::NAN),
+    }
+}
+
+/// Analytic spawn-block time of one spawn strategy for this resize
+/// (exact: the spawn schedules are the closed forms the DES charges).
+fn spawn_block_of(inp: &PlannerInputs, ss: SpawnStrategy) -> f64 {
+    if inp.nd <= inp.ns {
+        return 0.0;
+    }
+    ss.schedule(&inp.net, inp.ns, inp.nd - inp.ns, inp.nd, inp.spawn_cost)
+        .source_block
+}
+
+/// Plan one resize: price every valid candidate, refine the blocking
+/// ones with micro-probes when requested, and return the argmin under
+/// the objective (stable first-wins tie-break in enumeration order).
+pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
+    assert!(inp.ns > 0 && inp.nd > 0 && inp.ns != inp.nd, "invalid resize");
+    let grow = inp.nd > inp.ns;
+    let mut candidates: Vec<CandidateCost> = Vec::new();
+    for m in Method::all() {
+        for s in Strategy::all() {
+            if !is_valid_version(m, s) {
+                continue;
+            }
+            for pool in [WinPoolPolicy::off(), WinPoolPolicy::on()] {
+                let candidate = Candidate {
+                    method: m,
+                    strategy: s,
+                    spawn_strategy: SpawnStrategy::Sequential,
+                    win_pool: pool,
+                };
+                let predicted = predict_candidate(inp, &candidate);
+                candidates.push(CandidateCost { candidate, predicted, probed_reconf: None });
+            }
+        }
+    }
+    if inp.probe {
+        for cc in &mut candidates {
+            if cc.candidate.strategy == Strategy::Blocking {
+                cc.probed_reconf = Some(probe_reconfiguration(inp, &cc.candidate).reconf_time);
+            }
+        }
+    }
+    let mut best: Option<usize> = None;
+    let mut best_v = f64::INFINITY;
+    for (i, cc) in candidates.iter().enumerate() {
+        let v = match inp.objective {
+            // Span minimization restricts the pick to blocking
+            // candidates: background strategies cannot shorten the
+            // span (completion is iteration-quantized and the
+            // variable tail still moves) — they pay off via overlap,
+            // which is what `Effective` optimizes.
+            Objective::ReconfTime => {
+                if cc.candidate.strategy != Strategy::Blocking {
+                    continue;
+                }
+                cc.reconf_time()
+            }
+            Objective::Effective => cc.effective(),
+        };
+        if v < best_v {
+            best_v = v;
+            best = Some(i);
+        }
+    }
+    let idx = best.expect("candidate set cannot be empty");
+    let mut choice = candidates[idx].candidate;
+    let mut predicted = candidates[idx].predicted;
+    let mut predicted_reconf = candidates[idx].reconf_time();
+    // Spawn-strategy refinement (grows only; shrinks never spawn).
+    if grow {
+        if inp.probe && choice.strategy == Strategy::Blocking {
+            for ss in [SpawnStrategy::Parallel, SpawnStrategy::Async] {
+                let mut cand = choice;
+                cand.spawn_strategy = ss;
+                let probed = probe_reconfiguration(inp, &cand).reconf_time;
+                let pred = predict_candidate(inp, &cand);
+                if probed < predicted_reconf {
+                    choice = cand;
+                    predicted = pred;
+                    predicted_reconf = probed;
+                }
+                candidates.push(CandidateCost {
+                    candidate: cand,
+                    predicted: pred,
+                    probed_reconf: Some(probed),
+                });
+            }
+        } else {
+            // Analytic refinement: the spawn schedules are exact, so
+            // the minimal source-block time is the simulator's too.
+            let mut best_ss = choice.spawn_strategy;
+            let mut best_block = spawn_block_of(inp, best_ss);
+            for ss in [SpawnStrategy::Parallel, SpawnStrategy::Async] {
+                let b = spawn_block_of(inp, ss);
+                if b < best_block {
+                    best_block = b;
+                    best_ss = ss;
+                }
+            }
+            if best_ss != choice.spawn_strategy {
+                choice.spawn_strategy = best_ss;
+                predicted = predict_candidate(inp, &choice);
+                predicted_reconf = predicted.reconf_time;
+                candidates.push(CandidateCost {
+                    candidate: choice,
+                    predicted,
+                    probed_reconf: None,
+                });
+            }
+        }
+    }
+    ReconfigPlan {
+        ns: inp.ns,
+        nd: inp.nd,
+        warm: inp.warm,
+        choice,
+        predicted,
+        predicted_reconf,
+        candidates,
+    }
+}
+
+/// Analytic-only resolution used by `Mam` when
+/// [`ReconfigCfg::planner`] is [`PlannerMode::Auto`]: every input is
+/// rank-independent (declared sizes, calibrated parameters, the
+/// resize pair), so sources and spawned drains resolve to the same
+/// plan without communicating.  Iteration times are unknown at this
+/// level, so the objective is the span and pool warmth is not
+/// assumed; harnesses that know more resolve at their own level with
+/// [`plan`] and pass the resolved configuration down.
+pub fn resolve_internal(
+    net: &NetParams,
+    cores_per_node: usize,
+    decls: Vec<DataDecl>,
+    ns: usize,
+    nd: usize,
+    base: &ReconfigCfg,
+) -> ReconfigCfg {
+    let inp = PlannerInputs {
+        decls,
+        ns,
+        nd,
+        cores_per_node,
+        net: net.clone(),
+        spawn_cost: base.spawn_cost,
+        warm: false,
+        t_iter_src: 0.0,
+        t_iter_dst: 0.0,
+        objective: Objective::ReconfTime,
+        probe: false,
+    };
+    plan(&inp).choice.cfg(base.spawn_cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_inputs(ns: usize, nd: usize, probe: bool) -> PlannerInputs {
+        PlannerInputs {
+            decls: vec![
+                DataDecl {
+                    name: "A".into(),
+                    kind: DataKind::Constant,
+                    total_elems: 60_000,
+                    real: false,
+                },
+                DataDecl {
+                    name: "x".into(),
+                    kind: DataKind::Variable,
+                    total_elems: 2_000,
+                    real: false,
+                },
+            ],
+            ns,
+            nd,
+            cores_per_node: 4,
+            net: NetParams::sarteco25(),
+            spawn_cost: 0.05,
+            warm: false,
+            t_iter_src: 2e-3,
+            t_iter_dst: 1e-3,
+            objective: Objective::ReconfTime,
+            probe,
+        }
+    }
+
+    #[test]
+    fn planner_mode_parses_and_labels() {
+        assert_eq!(PlannerMode::parse("fixed"), Some(PlannerMode::Fixed));
+        assert_eq!(PlannerMode::parse("AUTO"), Some(PlannerMode::Auto));
+        assert_eq!(PlannerMode::parse("maybe"), None);
+        assert_eq!(PlannerMode::default(), PlannerMode::Fixed);
+        assert_eq!(PlannerMode::Auto.label(), "auto");
+        assert_eq!(PlannerMode::Fixed.label(), "fixed");
+    }
+
+    #[test]
+    fn candidate_labels_compose() {
+        let c = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Async,
+            win_pool: WinPoolPolicy::on(),
+        };
+        assert_eq!(c.label(), "RMA-Lockall+pool+async");
+        let c = Candidate {
+            method: Method::Collective,
+            strategy: Strategy::WaitDrains,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: WinPoolPolicy::off(),
+        };
+        assert_eq!(c.label(), "COL-WD");
+    }
+
+    #[test]
+    fn analytic_plan_is_deterministic_and_valid() {
+        let inp = tiny_inputs(4, 8, false);
+        let a = plan(&inp);
+        let b = plan(&inp);
+        assert_eq!(a.choice, b.choice, "planning must be deterministic");
+        assert!(is_valid_version(a.choice.method, a.choice.strategy));
+        // Every valid (method, strategy) appears twice (pool off/on),
+        // plus any spawn-refined variant of the grow choice.
+        assert!(a.candidates.len() >= 20, "{}", a.candidates.len());
+        assert!(a.predicted_reconf.is_finite() && a.predicted_reconf > 0.0);
+        // Span objective picks a blocking candidate by construction.
+        assert_eq!(a.choice.strategy, Strategy::Blocking);
+        // The choice is the predicted argmin over blocking candidates.
+        for cc in a.candidates.iter().filter(|c| c.candidate.strategy == Strategy::Blocking) {
+            assert!(
+                a.predicted_reconf <= cc.reconf_time() + 1e-15,
+                "{:?} beats the choice",
+                cc.candidate
+            );
+        }
+    }
+
+    #[test]
+    fn effective_objective_can_pick_a_background_strategy() {
+        // A big shrink with substantial iteration times: the overlap
+        // credit dominates and a background candidate must win the
+        // effective objective.
+        let mut inp = tiny_inputs(8, 4, false);
+        inp.decls[0].total_elems = 40_000_000;
+        inp.t_iter_src = 5e-3;
+        inp.t_iter_dst = 1e-2;
+        inp.objective = Objective::Effective;
+        let p = plan(&inp);
+        assert!(
+            p.choice.strategy.is_background(),
+            "expected a background pick, got {:?}",
+            p.choice
+        );
+        assert!(p.predicted.overlap_credit > 0.0);
+    }
+
+    #[test]
+    fn probed_plan_choice_is_the_probed_argmin() {
+        let inp = tiny_inputs(4, 2, true);
+        let p = plan(&inp);
+        assert_eq!(p.choice.strategy, Strategy::Blocking);
+        let choice_cost = p
+            .candidates
+            .iter()
+            .find(|cc| cc.candidate == p.choice)
+            .expect("choice must be in the candidate set");
+        let probed = choice_cost.probed_reconf.expect("blocking choice must be probed");
+        assert!(probed.is_finite() && probed > 0.0);
+        for cc in &p.candidates {
+            if let Some(other) = cc.probed_reconf {
+                assert!(
+                    probed <= other + 1e-12,
+                    "{:?} probed {} beats choice {}",
+                    cc.candidate,
+                    other,
+                    probed
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probes_are_bit_deterministic() {
+        let inp = tiny_inputs(3, 6, false);
+        let cand = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: WinPoolPolicy::off(),
+        };
+        let a = probe_reconfiguration(&inp, &cand);
+        let b = probe_reconfiguration(&inp, &cand);
+        assert_eq!(a.reconf_time.to_bits(), b.reconf_time.to_bits());
+        assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
+        assert!(a.reconf_time >= a.redist_time);
+    }
+
+    #[test]
+    fn warm_probe_is_cheaper_for_pooled_rma() {
+        let mut inp = tiny_inputs(6, 3, false);
+        inp.decls[0].total_elems = 2_000_000;
+        let cand = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: WinPoolPolicy::on(),
+        };
+        let cold = probe_reconfiguration(&inp, &cand);
+        inp.warm = true;
+        let warm = probe_reconfiguration(&inp, &cand);
+        assert!(
+            warm.reconf_time < cold.reconf_time,
+            "warm {} !< cold {}",
+            warm.reconf_time,
+            cold.reconf_time
+        );
+    }
+
+    #[test]
+    fn warm_prediction_prefers_pool_over_cold_rma() {
+        let mut inp = tiny_inputs(4, 8, false);
+        inp.warm = true;
+        let pooled = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: WinPoolPolicy::on(),
+        };
+        let cold = Candidate { win_pool: WinPoolPolicy::off(), ..pooled };
+        let pw = predict_candidate(&inp, &pooled);
+        let pc = predict_candidate(&inp, &cold);
+        assert!(pw.reconf_time < pc.reconf_time, "{pw:?} vs {pc:?}");
+    }
+
+    #[test]
+    fn grow_plans_refine_the_spawn_strategy() {
+        // Analytic path: with the decomposed spawn terms cheaper than
+        // the 0.25 s sequential constant, a grow plan must not keep
+        // Sequential.
+        let mut inp = tiny_inputs(8, 16, false);
+        inp.spawn_cost = 0.25;
+        let p = plan(&inp);
+        assert_ne!(p.choice.spawn_strategy, SpawnStrategy::Sequential, "{:?}", p.choice);
+        // Shrinks never spawn: strategy selection leaves Sequential.
+        let p = plan(&tiny_inputs(16, 8, false));
+        assert_eq!(p.choice.spawn_strategy, SpawnStrategy::Sequential);
+    }
+
+    #[test]
+    fn internal_resolution_is_deterministic_and_resolved() {
+        let inp = tiny_inputs(4, 8, false);
+        let base = ReconfigCfg { planner: PlannerMode::Auto, ..ReconfigCfg::default() };
+        let a = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base);
+        let b = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base);
+        assert_eq!(a.planner, PlannerMode::Fixed, "resolution must terminate");
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.spawn_strategy, b.spawn_strategy);
+        assert_eq!(a.win_pool, b.win_pool);
+        assert!(is_valid_version(a.method, a.strategy));
+    }
+}

@@ -32,6 +32,7 @@ use crate::simcluster::Time;
 use crate::simmpi::{CommId, MpiProc, Payload, ReqId};
 
 use super::collective as col;
+use super::planner::{self, PlannerMode};
 use super::registry::{DataDecl, DataKind, Registry};
 use super::rma::{self, RmaInit};
 use super::spawn::SpawnStrategy;
@@ -90,6 +91,16 @@ pub struct ReconfigCfg {
     /// windows so later resizes acquire them warm.  Off = the paper's
     /// cold `Win_create` path (seed behaviour).
     pub win_pool: WinPoolPolicy,
+    /// `Fixed` uses the fields above verbatim (seed behaviour).
+    /// `Auto` lets the cost-model planner override
+    /// method/strategy/spawn/pool per resize: `Mam` resolves it with
+    /// the analytic planner at every `reconfigure`/`drain_join` from
+    /// rank-independent inputs (declared sizes + calibrated network
+    /// parameters), so sources and spawned drains always agree.
+    /// Harnesses that know more (pool warmth, iteration times) resolve
+    /// with `mam::planner::plan` up front and pass a `Fixed`
+    /// configuration down instead.
+    pub planner: PlannerMode,
 }
 
 impl Default for ReconfigCfg {
@@ -100,6 +111,7 @@ impl Default for ReconfigCfg {
             spawn_cost: 0.25,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         }
     }
 }
@@ -137,6 +149,10 @@ pub struct Reconfiguration {
     pub merged: CommId,
     pub roles: Roles,
     pub started_at: Time,
+    /// The configuration actually executed by this resize — equal to
+    /// `Mam::cfg` under `PlannerMode::Fixed`, the planner's per-resize
+    /// choice under `Auto`.
+    pub cfg: ReconfigCfg,
     state: State,
     /// Registry indices being redistributed in this phase (§III: only
     /// *constant* data may move in the background; *variable* data is
@@ -177,6 +193,27 @@ impl Mam {
         self.inflight.as_ref().map(|r| r.roles)
     }
 
+    /// The configuration this resize executes: the configured fields
+    /// under `PlannerMode::Fixed`, the analytic planner's per-resize
+    /// choice under `Auto` (resolved from rank-independent inputs, so
+    /// every rank — including spawned drains running
+    /// [`Mam::drain_join`] with the same `Auto` configuration —
+    /// arrives at the same plan without communicating).
+    fn active_cfg(&self, proc: &MpiProc, ns: usize, nd: usize) -> ReconfigCfg {
+        if self.cfg.planner == PlannerMode::Auto {
+            planner::resolve_internal(
+                &proc.net_params(),
+                proc.cores_per_node(),
+                self.registry.decls(),
+                ns,
+                nd,
+                &self.cfg,
+            )
+        } else {
+            self.cfg.clone()
+        }
+    }
+
     /// Start a reconfiguration of `app_comm` (all current ranks call
     /// this) towards `nd` ranks.  `drain_body` is the main function of
     /// newly spawned processes (grow only).
@@ -193,16 +230,17 @@ impl Mam {
         assert!(self.inflight.is_none(), "reconfiguration already in progress");
         let ns = proc.size(app_comm);
         assert!(nd > 0 && nd != ns, "invalid target size {nd} (ns={ns})");
+        let cfg = self.active_cfg(proc, ns, nd);
         let t_begin = proc.now();
 
         // ---- Stage 2: process management (Merge).
         let merged = if nd > ns {
-            let sched = self.cfg.spawn_strategy.schedule(
+            let sched = cfg.spawn_strategy.schedule(
                 &proc.net_params(),
                 ns,
                 nd - ns,
                 nd,
-                self.cfg.spawn_cost,
+                cfg.spawn_cost,
             );
             proc.spawn_merge_scheduled(app_comm, nd - ns, &sched, drain_body)
         } else {
@@ -220,17 +258,18 @@ impl Mam {
         // everything now; background strategies move the *constant*
         // entries in the background (§III) and leave variable entries
         // to the blocking phase inside `finish`.
-        let which: Vec<usize> = if self.cfg.strategy == Strategy::Blocking {
+        let which: Vec<usize> = if cfg.strategy == Strategy::Blocking {
             (0..self.registry.len()).collect()
         } else {
             self.registry.of_kind(DataKind::Constant)
         };
-        let state = self.start_redistribution(proc, merged, &roles, &which);
+        let state = self.start_redistribution(proc, merged, &roles, &which, &cfg);
         let done = matches!(state, State::Done);
         self.inflight = Some(Reconfiguration {
             merged,
             roles,
             started_at: t_begin,
+            cfg,
             state,
             which,
             new_locals: None,
@@ -251,13 +290,14 @@ impl Mam {
         merged: CommId,
         roles: &Roles,
         which: &[usize],
+        cfg: &ReconfigCfg,
     ) -> State {
-        match (self.cfg.method, self.cfg.strategy) {
+        match (cfg.method, cfg.strategy) {
             // ------------------------------------------------ blocking
             (Method::Collective, Strategy::Blocking) => {
                 let locals =
                     col::redistribute_blocking(proc, merged, roles, &self.registry, which);
-                self.apply_locals(proc, which, locals, roles);
+                self.apply_locals(proc, which, locals, roles, cfg.win_pool);
                 State::Done
             }
             (m, Strategy::Blocking) => {
@@ -269,9 +309,9 @@ impl Mam {
                     &self.registry,
                     which,
                     lockall,
-                    self.cfg.win_pool,
+                    cfg.win_pool,
                 );
-                self.apply_locals(proc, which, locals, roles);
+                self.apply_locals(proc, which, locals, roles, cfg.win_pool);
                 State::Done
             }
             // -------------------------------------------- non-blocking
@@ -296,7 +336,7 @@ impl Mam {
                     &self.registry,
                     which,
                     lockall,
-                    self.cfg.win_pool,
+                    cfg.win_pool,
                 );
                 // Source-only ranks have no reads: they notify the
                 // others right away (Fig. 1) and keep computing.
@@ -315,7 +355,7 @@ impl Mam {
                 let reg = self.registry.clone();
                 let roles2 = *roles;
                 let which2 = which.to_vec();
-                let pool = self.cfg.win_pool;
+                let pool = cfg.win_pool;
                 proc.spawn_aux(move |aux| {
                     let locals = match m {
                         Method::Collective => {
@@ -344,6 +384,7 @@ impl Mam {
         let roles = rc.roles;
         let merged = rc.merged;
         let which = rc.which.clone();
+        let pool = rc.cfg.win_pool;
         // Already completed earlier (e.g. the app re-polls while other
         // ranks catch up): stay Completed without re-recording metrics.
         if matches!(rc.state, State::Done) && rc.new_locals.is_none() {
@@ -417,7 +458,7 @@ impl Mam {
         if done {
             if let Some(locals) = rc.new_locals.take() {
                 let roles = rc.roles;
-                self.apply_locals(proc, &which, locals, &roles);
+                self.apply_locals(proc, &which, locals, &roles, pool);
             }
             Self::record_done(proc);
             MamStatus::Completed
@@ -444,7 +485,7 @@ impl Mam {
         let rc = self.inflight.take().expect("no reconfiguration to finish");
         assert!(matches!(rc.state, State::Done), "finish() before completion");
         let roles = rc.roles;
-        if self.cfg.strategy.is_background() {
+        if rc.cfg.strategy.is_background() {
             let variable = self.registry.of_kind(DataKind::Variable);
             if !variable.is_empty() {
                 let locals = col::redistribute_blocking(
@@ -454,7 +495,7 @@ impl Mam {
                     &self.registry,
                     &variable,
                 );
-                self.apply_locals(proc, &variable, locals, &roles);
+                self.apply_locals(proc, &variable, locals, &roles, rc.cfg.win_pool);
             }
         }
         proc.metrics(|m| m.mark_max("mam.reconf_end", proc.now()));
@@ -489,19 +530,16 @@ impl Mam {
         which: &[usize],
         locals: Vec<Option<Payload>>,
         roles: &Roles,
+        pool: WinPoolPolicy,
     ) {
         assert_eq!(locals.len(), which.len());
         for (&i, l) in which.iter().zip(locals) {
             if let Some(p) = l {
                 debug_assert!(roles.is_drain());
                 self.registry.entry_mut(i).local = p;
-                if self.cfg.win_pool.enabled {
+                if pool.enabled {
                     let e = self.registry.entry(i);
-                    proc.pin_buffer(
-                        winpool::pin_token(&e.name),
-                        e.local.bytes(),
-                        self.cfg.win_pool.cap,
-                    );
+                    proc.pin_buffer(winpool::pin_token(&e.name), e.local.bytes(), pool.cap);
                 }
             }
         }
@@ -523,12 +561,16 @@ impl Mam {
         let mut mam = Mam::new(Registry::from_decls(decls), cfg);
         let roles = Roles { ns, nd, rank: proc.rank(merged) };
         assert!(roles.is_drain_only(), "drain_join is for spawned ranks");
-        let which: Vec<usize> = if mam.cfg.strategy == Strategy::Blocking {
+        // Mirror the sources' per-resize resolution: under
+        // `PlannerMode::Auto` the analytic planner runs on the same
+        // rank-independent inputs and lands on the same choice.
+        let active = mam.active_cfg(proc, ns, nd);
+        let which: Vec<usize> = if active.strategy == Strategy::Blocking {
             (0..mam.registry.len()).collect()
         } else {
             mam.registry.of_kind(DataKind::Constant)
         };
-        let locals = match (mam.cfg.method, mam.cfg.strategy) {
+        let locals = match (active.method, active.strategy) {
             // Blocking + Threading sources run the plain blocking
             // sequence on the merged comm (Threading just moves it to an
             // aux thread — same collective order).
@@ -542,7 +584,7 @@ impl Mam {
                 &mam.registry,
                 &which,
                 m == Method::RmaLockall,
-                mam.cfg.win_pool,
+                active.win_pool,
             ),
             (Method::Collective, Strategy::NonBlocking) => {
                 let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
@@ -568,7 +610,7 @@ impl Mam {
                     &mam.registry,
                     &which,
                     m == Method::RmaLockall,
-                    mam.cfg.win_pool,
+                    active.win_pool,
                 );
                 proc.req_waitall(&init.reqs);
                 rma::close_epochs(proc, &init);
@@ -579,17 +621,17 @@ impl Mam {
             }
             (_, Strategy::NonBlocking) => unreachable!("validated at reconfigure()"),
         };
-        mam.apply_locals(proc, &which, locals, &roles);
+        mam.apply_locals(proc, &which, locals, &roles, active.win_pool);
         Mam::record_done(proc);
         // Mirror the sources' `finish`: blocking redistribution of the
         // variable entries (background strategies only — blocking moved
         // everything already).
-        if mam.cfg.strategy.is_background() {
+        if active.strategy.is_background() {
             let variable = mam.registry.of_kind(DataKind::Variable);
             if !variable.is_empty() {
                 let locals =
                     col::redistribute_blocking(proc, merged, &roles, &mam.registry, &variable);
-                mam.apply_locals(proc, &variable, locals, &roles);
+                mam.apply_locals(proc, &variable, locals, &roles, active.win_pool);
             }
         }
         mam
@@ -638,6 +680,7 @@ mod tests {
                 spawn_cost: 0.01,
                 spawn_strategy,
                 win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
+                planner: PlannerMode::Fixed,
             };
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
@@ -856,6 +899,87 @@ mod tests {
         roundtrip_cfg(6, 2, Method::Collective, Strategy::Blocking, false, SpawnStrategy::Async);
     }
 
+    /// `planner: Auto` roundtrip: every rank resolves the plan itself
+    /// (sources in `reconfigure`, spawned drains in `drain_join`), so
+    /// the collective sequences must match and every continuing rank
+    /// must end with the exact ND-way block — regardless of the dummy
+    /// fixed fields the configuration carries.
+    fn roundtrip_auto(ns: usize, nd: usize) {
+        let total = 997u64;
+        let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
+        let checks = Arc::new(AtomicUsize::new(0));
+        let checks2 = checks.clone();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register(
+                "A",
+                DataKind::Constant,
+                total,
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect()),
+            );
+            let cfg = ReconfigCfg {
+                // Deliberately point the fixed fields at a background
+                // RMA version: Auto must override them per resize.
+                method: Method::RmaLockall,
+                strategy: Strategy::WaitDrains,
+                spawn_cost: 0.01,
+                spawn_strategy: SpawnStrategy::Sequential,
+                win_pool: WinPoolPolicy::off(),
+                planner: PlannerMode::Auto,
+            };
+            let decls = reg.decls();
+            let mut mam = Mam::new(reg, cfg.clone());
+            let checks3 = checks2.clone();
+            let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg.clone());
+                    let dr = dp.rank(merged);
+                    let nb = block_of(total, nd, dr);
+                    let got = dmam.registry.entry(0).local.as_slice().unwrap().to_vec();
+                    let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                    assert_eq!(got, want, "spawned drain {dr} wrong block under Auto");
+                    checks3.fetch_add(1, Ordering::SeqCst);
+                });
+            let mut status = mam.reconfigure(&p, WORLD, nd, drain_body);
+            let mut iters = 0;
+            while status == MamStatus::InProgress {
+                p.compute(1e-3);
+                status = mam.checkpoint(&p);
+                iters += 1;
+                assert!(iters < 100_000, "auto redistribution never completes");
+            }
+            let out = mam.finish(&p, WORLD);
+            // The Mam handle keeps the Auto configuration for the next
+            // resize — resolution is per-resize, not sticky.
+            assert_eq!(mam.cfg.planner, PlannerMode::Auto);
+            match out.app_comm {
+                Some(c) => {
+                    let nr = p.rank(c);
+                    let nb = block_of(total, nd, nr);
+                    let got = mam.registry.entry(0).local.as_slice().unwrap().to_vec();
+                    let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                    assert_eq!(got, want, "rank {nr} wrong block under Auto");
+                    checks2.fetch_add(1, Ordering::SeqCst);
+                }
+                None => assert!(r >= nd, "rank {r} wrongly retired"),
+            }
+        });
+        sim.run().unwrap();
+        assert_eq!(checks.load(Ordering::SeqCst), nd, "every drain must verify its block");
+    }
+
+    #[test]
+    fn auto_planner_roundtrips_grow() {
+        roundtrip_auto(3, 8);
+    }
+
+    #[test]
+    fn auto_planner_roundtrips_shrink() {
+        roundtrip_auto(8, 3);
+    }
+
     #[test]
     fn async_spawn_overlaps_spawn_with_registration() {
         // Blocking RMA grow with a large source exposure: under Async
@@ -879,6 +1003,7 @@ mod tests {
                     spawn_cost: 0.25,
                     spawn_strategy,
                     win_pool: WinPoolPolicy::off(),
+                    planner: PlannerMode::Fixed,
                 };
                 let decls = reg.decls();
                 let mut mam = Mam::new(reg, cfg.clone());
@@ -926,6 +1051,7 @@ mod tests {
                 spawn_cost: 0.0,
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::on(),
+                planner: PlannerMode::Fixed,
             };
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
@@ -981,6 +1107,7 @@ mod tests {
                     spawn_cost: 0.0,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    planner: PlannerMode::Fixed,
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
@@ -1022,6 +1149,7 @@ mod tests {
                     spawn_cost: 0.0,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    planner: PlannerMode::Fixed,
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
@@ -1082,6 +1210,7 @@ mod tests {
                     spawn_cost: 0.0,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    planner: PlannerMode::Fixed,
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});

@@ -115,6 +115,260 @@ impl SpawnSchedule {
     }
 }
 
+// ---------------------------------------------------------------------
+// Reconfiguration-cost prediction (planner API)
+// ---------------------------------------------------------------------
+
+/// Inputs describing one `NS → ND` reconfiguration for
+/// [`predict_reconfig`].  Everything is plain data so the planner
+/// layer (`mam::planner`) can build a case from its registry without
+/// this module depending on MaM types.
+#[derive(Clone, Debug)]
+pub struct ReconfigCase {
+    pub ns: usize,
+    pub nd: usize,
+    /// Cores per node of the allocation (the paper's testbed: 20).
+    pub cores_per_node: usize,
+    /// Global bytes of each structure moved in the main redistribution
+    /// phase (all entries for blocking strategies, the *constant*
+    /// entries for background ones, §III).
+    pub bulk_bytes: Vec<u64>,
+    /// Global bytes of each structure moved in the blocking tail at
+    /// `MAM_Finish` (the *variable* entries of background strategies;
+    /// empty for blocking).
+    pub tail_bytes: Vec<u64>,
+    /// Window pool warm for the source exposures (a previous resize
+    /// pinned the blocks; §VI register-on-receive).
+    pub warm: bool,
+    /// Application iteration time on the NS ranks (overlap modelling;
+    /// 0 disables the overlap terms).
+    pub t_iter_src: f64,
+    /// Application iteration time on the ND ranks (overlap credits).
+    pub t_iter_dst: f64,
+    /// Seconds every source stays blocked in the spawn phase (0 for
+    /// shrinks; [`SpawnSchedule::source_block`] for grows).
+    pub spawn_block: f64,
+}
+
+/// Structural knobs of one redistribution candidate — the shape of a
+/// `(method × strategy × pool)` version, without naming MaM's enums.
+#[derive(Clone, Copy, Debug)]
+pub struct RedistShape {
+    /// One-sided (RMA) reads instead of `MPI_Alltoallv`.
+    pub one_sided: bool,
+    /// One passive epoch per accessed target (RMA-Lock, Alg. 2) rather
+    /// than a single `lock_all` epoch (RMA-Lockall, Alg. 3).
+    pub lock_per_target: bool,
+    /// Background strategy (NB / WD): completion is detected once per
+    /// application iteration and variable data moves in a blocking
+    /// tail.
+    pub background: bool,
+    /// Auxiliary-thread strategy (§V-D): MT progress penalties apply.
+    pub threading: bool,
+    /// Persistent window pool (§VI): warm acquires skip registration,
+    /// releases skip deregistration, received blocks are re-pinned.
+    pub pool: bool,
+}
+
+/// Decomposed cost prediction of one reconfiguration candidate.
+///
+/// `reconf_time` estimates the full reconfiguration span (spawn +
+/// redistribution + blocking tail); `effective` subtracts the overlap
+/// credit — iterations of post-resize work a background strategy
+/// completes while the redistribution is in flight (the Eq. (2)
+/// accounting of §V-C).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostPrediction {
+    /// Source-blocked spawn phase (grow only).
+    pub spawn: f64,
+    /// Window registration on the collective critical path (RMA only).
+    pub registration: f64,
+    /// Bulk serialization time at the bottleneck NIC.
+    pub wire: f64,
+    /// Per-message software: epochs + Get initiation (RMA) or
+    /// pack/handshake (COL), plus collective synchronization rounds.
+    pub protocol: f64,
+    /// Window teardown (deregistration, or pooled release + the
+    /// register-on-receive pre-pins of §VI).
+    pub teardown: f64,
+    /// Blocking variable-data tail of background strategies.
+    pub tail: f64,
+    /// Redistribution span estimate (everything but spawn and tail).
+    pub redist: f64,
+    /// Predicted reconfiguration span: spawn + redist + tail.
+    pub reconf_time: f64,
+    /// Iterations the application overlaps with a background
+    /// redistribution (0 for blocking).
+    pub overlap_iters: f64,
+    /// Post-resize work completed during the overlap
+    /// (`overlap_iters × t_iter_dst`).
+    pub overlap_credit: f64,
+    /// `reconf_time − overlap_credit` — the Eq. (2)-style objective.
+    pub effective: f64,
+}
+
+/// Block `[ini, end)` of rank `r` in an `n`-way distribution of
+/// `total` bytes — mirrors MaM's block scheme (remainder spread over
+/// the first ranks), so predicted exposure/receive sizes match the
+/// simulated ones exactly.
+fn pred_block(total: u64, n: usize, r: usize) -> (u64, u64) {
+    let n64 = n as u64;
+    let base = total / n64;
+    let rem = total % n64;
+    let r64 = r as u64;
+    let ini = r64 * base + r64.min(rem);
+    (ini, ini + base + u64::from(r64 < rem))
+}
+
+/// Bytes that change ranks when `total` bytes move from an `ns`-way to
+/// an `nd`-way block distribution (rank `d`'s overlap with its own old
+/// block stays put).
+pub fn moved_bytes(total: u64, ns: usize, nd: usize) -> u64 {
+    let mut moved = 0u64;
+    for d in 0..nd {
+        let (ini, end) = pred_block(total, nd, d);
+        let keep = if d < ns {
+            let (si, se) = pred_block(total, ns, d);
+            end.min(se).saturating_sub(ini.max(si))
+        } else {
+            0
+        };
+        moved += (end - ini) - keep;
+    }
+    moved
+}
+
+/// Predict the cost of one reconfiguration candidate.
+///
+/// The prediction mirrors the structure of the simulated cost model:
+/// the *shared* terms (bulk wire time at the bottleneck NIC) are the
+/// same for every candidate, while the *differential* terms — window
+/// registration and teardown versus pack/handshake, epochs, pool
+/// pre-pins, MT penalties, overlap quantization — are computed from
+/// the same calibrated constants the simulator charges.  Rankings
+/// between candidates therefore track the simulator even where the
+/// absolute numbers drift; `mam::planner` refines the close calls with
+/// exact DES micro-probes.
+pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> CostPrediction {
+    assert!(c.ns > 0 && c.nd > 0, "degenerate reconfiguration");
+    let n = c.ns.max(c.nd);
+    let nodes = n.div_ceil(c.cores_per_node.max(1)).max(1);
+    let (alpha, beta) = if nodes == 1 {
+        (p.alpha_intra, p.beta_intra)
+    } else {
+        (p.alpha_inter, p.beta_inter)
+    };
+    // Sources a drain intersects under the block scheme (Algorithm 1).
+    let accessed = (c.ns.div_ceil(c.nd) + 1).clamp(1, c.ns);
+    let k = c.bulk_bytes.len() as f64;
+    // Bulk wire time: the bottleneck NIC serializes its share of the
+    // moved bytes (cyclic placement spreads both groups over all
+    // allocated nodes, §V-A).
+    let moved: u64 = c.bulk_bytes.iter().map(|&b| moved_bytes(b, c.ns, c.nd)).sum();
+    let mut wire = alpha + moved as f64 / nodes as f64 * beta;
+    // One synchronization (dissemination rounds of small messages) per
+    // collective call.
+    let rounds = (usize::BITS - (n - 1).leading_zeros()) as f64;
+    let sync = rounds * (alpha + 16.0 * beta);
+    let (registration, mut protocol, teardown) = if s.one_sided {
+        let mut registration = 0.0;
+        let mut teardown = 0.0;
+        for &b in &c.bulk_bytes {
+            // Win_create: everyone pins in parallel, the slowest rank
+            // (the largest source exposure — rank 0) gates the exit.
+            let (i0, e0) = pred_block(b, c.ns, 0);
+            let (d0, de) = pred_block(b, c.nd, 0);
+            let (src, recv) = ((e0 - i0) as f64, (de - d0) as f64);
+            registration += sync
+                + if s.pool && c.warm {
+                    p.win_setup
+                } else {
+                    p.win_setup + src * p.beta_register
+                };
+            teardown += sync
+                + if s.pool {
+                    // Release keeps memory pinned; drains then pre-pin
+                    // the received block (register-on-receive, §VI) —
+                    // cold only, and an investment that makes the next
+                    // resize warm.
+                    p.win_setup * 0.5
+                        + if c.warm { 0.0 } else { p.win_setup + recv * p.beta_register }
+                } else {
+                    p.win_setup * 0.5 + src * p.beta_register / 3.0
+                };
+        }
+        let epochs = if s.lock_per_target {
+            2.0 * p.epoch_cost * accessed as f64
+        } else {
+            4.0 * p.epoch_cost
+        };
+        let protocol = k * (epochs + (p.op_overhead + p.get_overhead) * accessed as f64);
+        (registration, protocol, teardown)
+    } else {
+        // Two-sided: per-message pack CPU (bounded by the eager
+        // threshold), the rendezvous handshake of bulk messages, one
+        // alltoallv synchronization per structure.
+        let msg = moved as f64 / (c.nd.max(1) * accessed) as f64;
+        let pack = msg.min(p.eager_threshold as f64) * p.beta_memcpy;
+        let protocol = k * (accessed as f64 * (p.op_overhead + pack) + p.rendezvous_rtt + sync);
+        let mut teardown = 0.0;
+        if s.pool {
+            // COL creates no windows, but register-on-receive still
+            // pins the received blocks inside the span when the pool
+            // is enabled (warming later RMA resizes).
+            for &b in &c.bulk_bytes {
+                let (d0, de) = pred_block(b, c.nd, 0);
+                teardown +=
+                    if c.warm { 0.0 } else { p.win_setup + (de - d0) as f64 * p.beta_register };
+            }
+        }
+        (0.0, protocol, teardown)
+    };
+    if s.threading {
+        // §V-D: MT passive-target progress is the worst MPICH path for
+        // RMA; collectives crawl under the contended global lock.
+        wire *= if s.one_sided { p.mt_rma_penalty } else { p.mt_coll_penalty };
+        protocol *= p.mt_coll_penalty;
+    }
+    let tail_moved: u64 = c.tail_bytes.iter().map(|&b| moved_bytes(b, c.ns, c.nd)).sum();
+    let tail = if c.tail_bytes.is_empty() {
+        0.0
+    } else {
+        alpha + tail_moved as f64 / nodes as f64 * beta + sync
+    };
+    let base_span = registration + wire + protocol + teardown;
+    // Background completion is polled once per application iteration:
+    // the span is quantized up by one (possibly slowed) iteration, and
+    // every overlapped iteration is post-resize work already done.
+    let (quantization, overlap_iters) = if s.background && c.t_iter_src > 0.0 {
+        let omega = if s.threading {
+            p.oversub_factor
+        } else {
+            1.0 + (p.small_lane_max_wait / c.t_iter_src).min(1.8)
+        };
+        let t_bg = c.t_iter_src * omega;
+        (t_bg, ((base_span + t_bg) / t_bg).ceil())
+    } else {
+        (0.0, 0.0)
+    };
+    let overlap_credit = overlap_iters * c.t_iter_dst;
+    let redist = base_span + quantization;
+    let reconf_time = c.spawn_block + redist + tail;
+    CostPrediction {
+        spawn: c.spawn_block,
+        registration,
+        wire,
+        protocol,
+        teardown,
+        tail,
+        redist,
+        reconf_time,
+        overlap_iters,
+        overlap_credit,
+        effective: reconf_time - overlap_credit,
+    }
+}
+
 /// Mutable cost model: parameters + NIC occupancy state.
 #[derive(Clone, Debug)]
 pub struct CostModel {
@@ -414,6 +668,136 @@ mod tests {
         assert_eq!(intercomm_merge_cost(&p, 17), 5.0 * p.merge_round);
         // Degenerate sizes clamp to one round.
         assert_eq!(intercomm_merge_cost(&p, 1), p.merge_round);
+    }
+
+    fn case(ns: usize, nd: usize) -> ReconfigCase {
+        ReconfigCase {
+            ns,
+            nd,
+            cores_per_node: 20,
+            bulk_bytes: vec![640_000_000, 320_000_000, 8_000_000],
+            tail_bytes: Vec::new(),
+            warm: false,
+            t_iter_src: 0.05,
+            t_iter_dst: 0.02,
+            spawn_block: 0.0,
+        }
+    }
+
+    fn shape(one_sided: bool) -> RedistShape {
+        RedistShape {
+            one_sided,
+            lock_per_target: false,
+            background: false,
+            threading: false,
+            pool: false,
+        }
+    }
+
+    #[test]
+    fn pred_block_matches_mam_block_of() {
+        // The predictor re-derives MaM's block scheme so the planner's
+        // exposure/receive sizes match the simulated ones exactly; this
+        // sweep pins the two implementations together.
+        for total in [0u64, 1, 7, 97, 1_000, 72_067_110] {
+            for n in [1usize, 2, 3, 7, 20, 160] {
+                for r in 0..n {
+                    let (ini, end) = pred_block(total, n, r);
+                    let b = crate::mam::block_of(total, n, r);
+                    assert_eq!((ini, end), (b.ini, b.end), "total={total} n={n} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moved_bytes_counts_only_cross_rank_traffic() {
+        // Same size: nothing moves.  NS ≠ ND: everything outside the
+        // per-rank overlap moves, bounded by the total.
+        assert_eq!(moved_bytes(1000, 4, 4), 0);
+        let m = moved_bytes(1000, 2, 4);
+        assert!(m > 0 && m <= 1000, "moved={m}");
+        // Doubling the data doubles the traffic.
+        assert_eq!(moved_bytes(2000, 2, 4), 2 * m);
+    }
+
+    #[test]
+    fn prediction_is_finite_positive_and_decomposes() {
+        let p = NetParams::sarteco25();
+        for (ns, nd) in [(20, 160), (160, 20), (40, 80), (160, 40)] {
+            for one_sided in [false, true] {
+                let pr = predict_reconfig(&p, &case(ns, nd), &shape(one_sided));
+                assert!(pr.reconf_time.is_finite() && pr.reconf_time > 0.0, "{pr:?}");
+                assert!(pr.redist > 0.0 && pr.wire > 0.0, "{pr:?}");
+                assert!(pr.effective <= pr.reconf_time + 1e-15, "{pr:?}");
+                let sum = pr.registration + pr.wire + pr.protocol + pr.teardown;
+                assert!((pr.redist - sum).abs() < 1e-12, "blocking redist must decompose");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_pool_prediction_drops_the_registration_term() {
+        let p = NetParams::sarteco25();
+        let mut s = shape(true);
+        s.pool = true;
+        let cold = predict_reconfig(&p, &case(20, 160), &s);
+        let mut c = case(20, 160);
+        c.warm = true;
+        let warm = predict_reconfig(&p, &c, &s);
+        assert!(warm.registration < cold.registration, "{warm:?} vs {cold:?}");
+        assert!(warm.reconf_time < cold.reconf_time);
+        // Warm registration is the fixed setup only: no per-byte term.
+        assert!(warm.registration < 3.0 * (p.win_setup + 1e-3));
+    }
+
+    #[test]
+    fn background_predictions_credit_overlap_and_never_shorten_the_span() {
+        let p = NetParams::sarteco25();
+        for one_sided in [false, true] {
+            let blk = predict_reconfig(&p, &case(160, 20), &shape(one_sided));
+            let mut s = shape(one_sided);
+            s.background = true;
+            let mut c = case(160, 20);
+            // Background: the variable entry moves in the blocking tail.
+            c.tail_bytes = vec![c.bulk_bytes.pop().unwrap()];
+            let bg = predict_reconfig(&p, &c, &s);
+            assert!(bg.overlap_iters >= 1.0, "{bg:?}");
+            assert!(bg.overlap_credit > 0.0);
+            // The span itself is never shorter than blocking: completion
+            // is iteration-quantized and the tail still moves.
+            assert!(bg.reconf_time >= blk.reconf_time - 1e-12, "{bg:?} vs {blk:?}");
+            // ...but the effective cost can be, which is the whole point.
+            assert!(bg.effective < bg.reconf_time);
+        }
+    }
+
+    #[test]
+    fn threading_prediction_pays_mt_penalties() {
+        let p = NetParams::sarteco25();
+        let base = predict_reconfig(&p, &case(20, 160), &shape(true));
+        let mut s = shape(true);
+        s.threading = true;
+        let t = predict_reconfig(&p, &case(20, 160), &s);
+        assert!(t.wire > base.wire, "MT must stretch one-sided wire time");
+    }
+
+    #[test]
+    fn registration_shifts_the_col_vs_rma_balance() {
+        // The paper's §VI premise, as seen by the predictor: at the
+        // calibrated registration rate RMA loses the cold grow, and a
+        // much faster registration rate flips the differential terms.
+        let p = NetParams::sarteco25();
+        let col = predict_reconfig(&p, &case(20, 160), &shape(false));
+        let rma = predict_reconfig(&p, &case(20, 160), &shape(true));
+        assert!(
+            rma.registration > col.registration,
+            "registration is the RMA-only term"
+        );
+        let mut fast = NetParams::sarteco25();
+        fast.beta_register = 1.0 / 400.0e9;
+        let rma_fast = predict_reconfig(&fast, &case(20, 160), &shape(true));
+        assert!(rma_fast.registration < rma.registration);
     }
 
     #[test]

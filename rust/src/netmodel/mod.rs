@@ -7,7 +7,8 @@
 //! * [`topology`]  — nodes, cores, rank placement (⌈N/20⌉ nodes, §V-A),
 //! * [`costmodel`] — α-β point-to-point costs, eager/rendezvous regimes,
 //!   two-lane NIC contention (bulk FIFO occupancy + small-message lane),
-//!   RMA window registration and epoch costs,
+//!   RMA window registration and epoch costs, plus the closed-form
+//!   reconfiguration-cost predictions driving `mam::planner`,
 //! * [`calibration`] — the constants and their derivations.
 
 pub mod calibration;
@@ -15,5 +16,8 @@ pub mod costmodel;
 pub mod topology;
 
 pub use calibration::NetParams;
-pub use costmodel::{intercomm_merge_cost, CostModel, SpawnSchedule, TransferClass};
+pub use costmodel::{
+    intercomm_merge_cost, moved_bytes, predict_reconfig, CostModel, CostPrediction, ReconfigCase,
+    RedistShape, SpawnSchedule, TransferClass,
+};
 pub use topology::{NodeId, Placement, Topology};

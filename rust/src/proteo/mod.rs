@@ -22,6 +22,7 @@
 
 use std::sync::Arc;
 
+use crate::mam::planner::{self, Objective, PlannerInputs, PlannerMode, ReconfigPlan};
 use crate::mam::{
     is_valid_version, version_label, Mam, MamStatus, Method, ReconfigCfg, Registry,
     SpawnStrategy, Strategy, WinPoolPolicy,
@@ -55,6 +56,11 @@ pub struct RunSpec {
     /// Persistent RMA window pool (§VI): `--win-pool on|off`.  Off is
     /// the paper's cold `Win_create` path.
     pub win_pool: WinPoolPolicy,
+    /// `--planner auto|fixed`: `Auto` lets the cost-model planner
+    /// override method/strategy/spawn/pool for this pair (resolved
+    /// once, before the simulation, with DES micro-probe refinement);
+    /// `Fixed` (default) is bit-identical to the seed behaviour.
+    pub planner: PlannerMode,
 }
 
 impl RunSpec {
@@ -74,6 +80,7 @@ impl RunSpec {
             spawn_strategy: SpawnStrategy::Sequential,
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         }
     }
 
@@ -114,8 +121,51 @@ pub struct RunResult {
     pub events: u64,
 }
 
+/// Resolve `--planner auto` into a concrete version for this pair.
+///
+/// Plan resolution is a harness-level step: every rank — and every
+/// spawned drain — must execute the same plan, so the choice is made
+/// once, from rank-independent inputs (declared sizes, calibrated
+/// parameters, iteration-time estimates), *before* the simulation
+/// launches, and the resolved spec is what both `source_body` and
+/// `drain_main` see.  Blocking candidates are refined with exact DES
+/// micro-probes (see `mam::planner`), so the chosen version's
+/// simulated reconfiguration time matches the best fixed version up
+/// to ties.
+pub fn resolve_spec(spec: &RunSpec) -> (RunSpec, Option<ReconfigPlan>) {
+    if spec.planner == PlannerMode::Fixed {
+        return (spec.clone(), None);
+    }
+    let sam = Sam::new(spec.sam.clone(), spec.seed, 0);
+    let mut reg = Registry::new();
+    sam.register_data(&mut reg, spec.ns, 0);
+    let inp = PlannerInputs {
+        decls: reg.decls(),
+        ns: spec.ns,
+        nd: spec.nd,
+        cores_per_node: spec.cores_per_node,
+        net: spec.net.clone(),
+        spawn_cost: spec.spawn_cost,
+        warm: false,
+        t_iter_src: spec.sam.iter_compute(spec.ns),
+        t_iter_dst: spec.sam.iter_compute(spec.nd),
+        objective: Objective::ReconfTime,
+        probe: true,
+    };
+    let plan = planner::plan(&inp);
+    let mut resolved = spec.clone();
+    resolved.planner = PlannerMode::Fixed;
+    resolved.method = plan.choice.method;
+    resolved.strategy = plan.choice.strategy;
+    resolved.spawn_strategy = plan.choice.spawn_strategy;
+    resolved.win_pool = plan.choice.win_pool;
+    (resolved, Some(plan))
+}
+
 /// Execute one run.
 pub fn run_once(spec: &RunSpec) -> RunResult {
+    let (resolved, plan) = resolve_spec(spec);
+    let spec = &resolved;
     assert!(
         is_valid_version(spec.method, spec.strategy),
         "invalid version {:?}×{:?}",
@@ -140,7 +190,10 @@ pub fn run_once(spec: &RunSpec) -> RunResult {
     let t_it_nd = m.series("sam.t_nd").map_or(f64::NAN, median);
     let n_it = m.mark_at("sam.n_it_max").unwrap_or(0.0);
     RunResult {
-        label: spec.label(),
+        label: match &plan {
+            Some(p) => format!("auto[{}]", p.label()),
+            None => spec.label(),
+        },
         ns: spec.ns,
         nd: spec.nd,
         redist_time,
@@ -158,6 +211,10 @@ pub fn run_once(spec: &RunSpec) -> RunResult {
 /// Median of `reps` runs with derived seeds (the paper uses 20 reps).
 pub fn run_median(spec: &RunSpec, reps: usize) -> RunResult {
     assert!(reps >= 1);
+    // Resolve the plan once for all repetitions (the planner inputs do
+    // not depend on the derived seeds).
+    let (resolved, plan) = resolve_spec(spec);
+    let spec = &resolved;
     let runs: Vec<RunResult> = (0..reps)
         .map(|i| {
             let mut s = spec.clone();
@@ -174,7 +231,10 @@ pub fn run_median(spec: &RunSpec, reps: usize) -> RunResult {
         }
     };
     RunResult {
-        label: spec.label(),
+        label: match &plan {
+            Some(p) => format!("auto[{}]", p.label()),
+            None => spec.label(),
+        },
         ns: spec.ns,
         nd: spec.nd,
         redist_time: med(|r| r.redist_time),
@@ -202,6 +262,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
         spawn_cost: spec.spawn_cost,
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
+        planner: spec.planner,
     };
     let mut mam = Mam::new(reg, mam_cfg.clone());
 
@@ -271,6 +332,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
         spawn_cost: spec.spawn_cost,
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
+        planner: spec.planner,
     };
     let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
     debug_assert!(mam
@@ -356,6 +418,7 @@ mod tests {
             spawn_strategy: SpawnStrategy::Sequential,
             seed: 1,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         }
     }
 
@@ -459,6 +522,34 @@ mod tests {
         let b = run_once(&spec);
         assert!(a.redist_time > 0.0 && a.t_it_nd > 0.0);
         assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn resolve_spec_fixed_is_the_identity() {
+        // `--planner fixed` (the default) must leave the spec alone —
+        // bit-identical seed behaviour, no planning work.
+        let spec = small_spec(Method::RmaLock, Strategy::WaitDrains);
+        let (r, plan) = resolve_spec(&spec);
+        assert!(plan.is_none());
+        assert_eq!(r.method, spec.method);
+        assert_eq!(r.strategy, spec.strategy);
+        assert_eq!(r.spawn_strategy, spec.spawn_strategy);
+        assert_eq!(r.win_pool, spec.win_pool);
+        assert_eq!(r.planner, PlannerMode::Fixed);
+    }
+
+    #[test]
+    fn auto_run_completes_deterministically_and_labels_the_choice() {
+        let mut spec = small_spec(Method::Collective, Strategy::Blocking);
+        spec.planner = PlannerMode::Auto;
+        let a = run_once(&spec);
+        assert!(a.label.starts_with("auto["), "label: {}", a.label);
+        assert!(a.redist_time > 0.0 && a.t_it_nd > 0.0);
+        let b = run_once(&spec);
+        assert_eq!(a.label, b.label, "plan choice must be deterministic");
+        assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
+        assert_eq!(a.virt_end.to_bits(), b.virt_end.to_bits());
         assert_eq!(a.events, b.events);
     }
 

@@ -19,7 +19,7 @@
 //! of `granularity` (the paper resizes in multiples of 20 — full
 //! nodes).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// A job known to the RMS.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -68,7 +68,9 @@ pub struct Rms {
     jobs: Vec<Job>,
     queue: VecDeque<Job>,
     next_id: usize,
-    plan_cursor: usize,
+    /// `Policy::Plan` progress, keyed by job id: each malleable job
+    /// consumes the scripted sizes independently.
+    plan_cursors: BTreeMap<usize, usize>,
 }
 
 impl Rms {
@@ -81,7 +83,7 @@ impl Rms {
             jobs: Vec::new(),
             queue: VecDeque::new(),
             next_id: 0,
-            plan_cursor: 0,
+            plan_cursors: BTreeMap::new(),
         }
     }
 
@@ -107,14 +109,16 @@ impl Rms {
         self.queue.len()
     }
 
-    /// Submit a job; starts immediately if `cores` fit, else queues.
-    /// Returns the job id.
+    /// Submit a job; starts immediately if `cores` fit **and** no
+    /// earlier job is still queued (FIFO, no backfilling — a fitting
+    /// newcomer must not overtake the queue head, or the head could be
+    /// starved by a stream of small jobs).  Returns the job id.
     pub fn submit(&mut self, name: &str, cores: usize, min: usize, max: usize) -> usize {
         assert!(min <= cores && cores <= max && max <= self.total_cores);
         let id = self.next_id;
         self.next_id += 1;
         let job = Job { id, name: name.to_string(), cores, min_cores: min, max_cores: max };
-        if cores <= self.idle_cores() {
+        if self.queue.is_empty() && cores <= self.idle_cores() {
             self.jobs.push(job);
         } else {
             self.queue.push_back(job);
@@ -177,9 +181,12 @@ impl Rms {
                 }
             }
             Policy::Plan(sizes) => {
-                if self.plan_cursor < sizes.len() {
-                    let t = sizes[self.plan_cursor];
-                    self.plan_cursor += 1;
+                // Per-job cursor: concurrent malleable jobs must not
+                // consume each other's scripted sizes.
+                let cursor = self.plan_cursors.entry(job_id).or_insert(0);
+                if *cursor < sizes.len() {
+                    let t = sizes[*cursor];
+                    *cursor += 1;
                     t.clamp(job.min_cores, job.max_cores)
                 } else {
                     job.cores
@@ -228,6 +235,34 @@ mod tests {
         assert_eq!(r.jobs().len(), 1);
         assert_eq!(r.jobs()[0].id, b);
         assert_eq!(r.queue_len(), 0);
+    }
+
+    #[test]
+    fn submit_never_backfills_past_a_queued_job() {
+        // Regression: a fitting newcomer must queue behind the queue
+        // head (FIFO, no backfilling) instead of starting immediately.
+        let mut r = rms(Policy::Static);
+        let a = r.submit("a", 100, 100, 100); // runs (160 total)
+        let b = r.submit("b", 100, 100, 100); // queued: only 60 idle
+        let c = r.submit("c", 20, 20, 20); // fits 60 idle, but behind b
+        assert_eq!(r.jobs().len(), 1, "c must not overtake b");
+        assert_eq!(r.queue_len(), 2);
+        r.finish(a);
+        // FIFO admission: b first, then c (both fit now).
+        assert_eq!(r.queue_len(), 0);
+        let ids: Vec<usize> = r.jobs().iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![b, c]);
+        assert_eq!(r.used_cores(), 120);
+    }
+
+    #[test]
+    fn submit_with_empty_queue_still_starts_immediately() {
+        let mut r = rms(Policy::Static);
+        let a = r.submit("a", 60, 60, 60);
+        let b = r.submit("b", 60, 60, 60);
+        assert_eq!(r.jobs().len(), 2);
+        assert_eq!(r.queue_len(), 0);
+        let _ = (a, b);
     }
 
     #[test]
@@ -285,6 +320,30 @@ mod tests {
         assert_eq!((d2.from, d2.to), (80, 20));
         r.apply(d2);
         assert!(r.checkpoint_decision(j).is_none(), "plan exhausted");
+    }
+
+    #[test]
+    fn plan_cursors_are_per_job() {
+        // Regression: two malleable jobs under Policy::Plan each walk
+        // the scripted sizes from the start — a shared cursor would
+        // hand job 2 the sizes job 1 already consumed.
+        let mut r = rms(Policy::Plan(vec![60, 20]));
+        let j1 = r.submit("m1", 40, 20, 160);
+        let j2 = r.submit("m2", 40, 20, 160);
+        let d1 = r.checkpoint_decision(j1).unwrap();
+        assert_eq!(d1.to, 60, "job 1 first scripted size");
+        r.apply(d1);
+        let d2 = r.checkpoint_decision(j2).unwrap();
+        assert_eq!(d2.to, 60, "job 2 must also start at the first size");
+        r.apply(d2);
+        let d1b = r.checkpoint_decision(j1).unwrap();
+        assert_eq!((d1b.from, d1b.to), (60, 20));
+        r.apply(d1b);
+        let d2b = r.checkpoint_decision(j2).unwrap();
+        assert_eq!((d2b.from, d2b.to), (60, 20));
+        r.apply(d2b);
+        assert!(r.checkpoint_decision(j1).is_none(), "plan exhausted per job");
+        assert!(r.checkpoint_decision(j2).is_none());
     }
 
     #[test]

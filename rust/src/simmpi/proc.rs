@@ -127,6 +127,12 @@ impl MpiProc {
         self.world.lock().unwrap().cost.params.clone()
     }
 
+    /// Cores per node of the simulated allocation (read-only; the
+    /// planner uses this to predict per-NIC contention).
+    pub fn cores_per_node(&self) -> usize {
+        self.world.lock().unwrap().placement.cores_per_node
+    }
+
     // --------------------------------------------- MPI call machinery
 
     /// Progress model (MPICH CH4): every MPI call drains one chunk of

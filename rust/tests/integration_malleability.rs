@@ -5,7 +5,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use proteo::mam::{
-    Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy, WinPoolPolicy,
+    Mam, MamStatus, Method, PlannerMode, ReconfigCfg, Registry, SpawnStrategy, Strategy,
+    WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::proteo::{run_once, RunSpec};
@@ -34,6 +35,7 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         spawn_strategy: SpawnStrategy::Sequential,
         seed: 11,
         win_pool: WinPoolPolicy::off(),
+        planner: PlannerMode::Fixed,
     }
 }
 
@@ -206,6 +208,7 @@ fn multi_resize_marathon_with_sam() {
                 spawn_cost: 0.01,
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::off(),
+                planner: PlannerMode::Fixed,
             },
         );
         run_stages(&p, WORLD, 0, &seq, &cfg0, &t2, &sz2, mam);

@@ -10,8 +10,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use proteo::mam::{
-    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry,
-    SpawnStrategy, Strategy, WinPoolPolicy,
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, PlannerMode, ReconfigCfg,
+    Registry, SpawnStrategy, Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -50,6 +50,7 @@ fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_
             spawn_cost: 0.01,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let totals3 = totals2.clone();

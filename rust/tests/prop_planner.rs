@@ -1,0 +1,140 @@
+//! Property tests for the reconfiguration planner: predictions are
+//! finite and positive over the whole input space, the chosen plan is
+//! always a member of the candidate set (and a valid version), and
+//! planning is a pure function of its inputs.
+
+use proteo::mam::planner::{plan, predict_candidate, Candidate, PlannerInputs};
+use proteo::mam::{
+    is_valid_version, DataDecl, DataKind, Method, Objective, SpawnStrategy, Strategy,
+    WinPoolPolicy,
+};
+use proteo::netmodel::NetParams;
+use proteo::util::proptest_lite::{check, one_of, usizes, Strategy as PropStrategy};
+
+fn inputs(ns: usize, nd: usize, elems: usize, warm: bool) -> PlannerInputs {
+    PlannerInputs {
+        decls: vec![
+            DataDecl {
+                name: "A".into(),
+                kind: DataKind::Constant,
+                total_elems: elems as u64,
+                real: false,
+            },
+            DataDecl {
+                name: "x".into(),
+                kind: DataKind::Variable,
+                total_elems: (elems as u64 / 8).max(1),
+                real: false,
+            },
+        ],
+        ns,
+        nd,
+        cores_per_node: 4,
+        net: NetParams::sarteco25(),
+        spawn_cost: 0.25,
+        warm,
+        t_iter_src: 1e-3,
+        t_iter_dst: 2e-3,
+        objective: Objective::ReconfTime,
+        probe: false,
+    }
+}
+
+/// Random (ns, nd, elems, warm) with ns ≠ nd.
+fn case_strategy() -> impl PropStrategy<Value = (usize, usize, usize, usize)> {
+    usizes(1, 24).pair(usizes(1, 24)).pair(usizes(1, 2_000_000).pair(usizes(0, 1))).map_gen(
+        |((ns, nd), (elems, warm))| (ns, nd, elems, warm),
+    )
+}
+
+#[test]
+fn predictions_are_finite_and_positive_for_every_candidate() {
+    check("predicted costs finite/positive", case_strategy(), |(ns, nd, elems, warm)| {
+        if ns == nd {
+            return true; // not a resize
+        }
+        let inp = inputs(ns, nd, elems, warm == 1);
+        for m in Method::all() {
+            for s in Strategy::all() {
+                if !is_valid_version(m, s) {
+                    continue;
+                }
+                for pool in [WinPoolPolicy::off(), WinPoolPolicy::on()] {
+                    for ss in SpawnStrategy::all() {
+                        let cand = Candidate {
+                            method: m,
+                            strategy: s,
+                            spawn_strategy: ss,
+                            win_pool: pool,
+                        };
+                        let p = predict_candidate(&inp, &cand);
+                        let ok = p.reconf_time.is_finite()
+                            && p.reconf_time > 0.0
+                            && p.redist > 0.0
+                            && p.effective.is_finite()
+                            && p.effective <= p.reconf_time + 1e-15
+                            && p.overlap_credit >= 0.0;
+                        if !ok {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn chosen_plan_is_always_in_the_candidate_set_and_valid() {
+    let objectives = one_of(&[0usize, 1]);
+    check(
+        "plan choice membership",
+        case_strategy().pair(objectives),
+        |((ns, nd, elems, warm), obj)| {
+            if ns == nd {
+                return true;
+            }
+            let mut inp = inputs(ns, nd, elems, warm == 1);
+            inp.objective = if obj == 0 { Objective::ReconfTime } else { Objective::Effective };
+            let p = plan(&inp);
+            let member = p.candidates.iter().any(|cc| cc.candidate == p.choice);
+            member
+                && is_valid_version(p.choice.method, p.choice.strategy)
+                && p.predicted_reconf.is_finite()
+                && p.predicted_reconf > 0.0
+                // Shrinks never spawn: the spawn strategy stays at the
+                // Sequential default.
+                && (nd > ns || p.choice.spawn_strategy == SpawnStrategy::Sequential)
+        },
+    );
+}
+
+#[test]
+fn planning_is_a_pure_function_of_its_inputs() {
+    check("plan determinism", case_strategy(), |(ns, nd, elems, warm)| {
+        if ns == nd {
+            return true;
+        }
+        let inp = inputs(ns, nd, elems, warm == 1);
+        let a = plan(&inp);
+        let b = plan(&inp);
+        a.choice == b.choice
+            && a.predicted_reconf.to_bits() == b.predicted_reconf.to_bits()
+            && a.candidates.len() == b.candidates.len()
+    });
+}
+
+#[test]
+fn span_objective_never_picks_a_background_strategy() {
+    // Background strategies cannot shorten the reconfiguration span
+    // (completion is iteration-quantized and the variable tail still
+    // moves), so the span objective must always land on Blocking.
+    check("span objective picks blocking", case_strategy(), |(ns, nd, elems, warm)| {
+        if ns == nd {
+            return true;
+        }
+        let p = plan(&inputs(ns, nd, elems, warm == 1));
+        p.choice.strategy == Strategy::Blocking
+    });
+}

@@ -8,8 +8,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use proteo::mam::{
-    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry,
-    SpawnStrategy, Strategy, WinPoolPolicy,
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, PlannerMode, ReconfigCfg,
+    Registry, SpawnStrategy, Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -47,6 +47,7 @@ fn run_and_collect(
             spawn_cost: 0.001,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let c3 = c2.clone();
@@ -167,6 +168,7 @@ fn prop_block_sizes_after_resize_match_block_of() {
                     spawn_cost: 0.001,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    planner: PlannerMode::Fixed,
                 };
                 let mut mam = Mam::new(reg, cfg.clone());
                 let c3 = c2.clone();
@@ -239,6 +241,7 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                         spawn_cost: 0.001,
                         spawn_strategy: SpawnStrategy::Sequential,
                         win_pool: WinPoolPolicy::off(),
+                        planner: PlannerMode::Fixed,
                     };
                     let mut mam = Mam::new(reg, cfg.clone());
                     let cfg2 = cfg.clone();

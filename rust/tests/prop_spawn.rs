@@ -8,8 +8,8 @@
 use std::sync::{Arc, Mutex};
 
 use proteo::mam::{
-    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, ReconfigCfg, Registry,
-    SpawnStrategy, Strategy, WinPoolPolicy,
+    block_of, is_valid_version, DataKind, Mam, MamStatus, Method, PlannerMode, ReconfigCfg,
+    Registry, SpawnStrategy, Strategy, WinPoolPolicy,
 };
 use proteo::netmodel::{NetParams, Topology};
 use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
@@ -45,6 +45,7 @@ fn run_grow(
             spawn_cost: 0.02,
             spawn_strategy,
             win_pool: WinPoolPolicy::off(),
+            planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let c3 = c2.clone();
