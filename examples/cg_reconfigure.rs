@@ -90,6 +90,7 @@ fn main() {
             spawn_cost: 0.1,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::on(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());

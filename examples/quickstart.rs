@@ -39,6 +39,7 @@ fn main() {
             spawn_cost: 0.05,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());

@@ -82,6 +82,14 @@ fn simmpi_benches(b: &mut Bench) {
         });
         s.run().unwrap();
     });
+    b.bench("simmpi: pipelined win create+free @160 ranks (64 segs)", || {
+        let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
+        s.launch(160, |p| {
+            let w = p.win_create_pipelined(WORLD, Payload::virt(1_000_000), 16_384);
+            p.win_free(w);
+        });
+        s.run().unwrap();
+    });
     b.bench("costmodel: 100k transfers", || {
         let topo = Topology::sarteco25();
         let pl = Placement::cyclic(&topo, 160);
@@ -166,4 +174,7 @@ fn main() {
     println!("{}", ablation::win_pool(&opts).render());
     // Spawn strategies: the other half of the initialization cost.
     println!("{}", ablation::spawn_strategies(&opts).render());
+    // Chunked pipelined registration: cold blocking vs pipelined vs
+    // warm, per chunk size (the `--rma-chunk` sweet-spot table).
+    println!("{}", ablation::rma_chunk(&opts).render());
 }

@@ -44,6 +44,9 @@ pub struct ExperimentConfig {
     /// Spawn strategy of the Merge grow path
     /// (`"spawn_strategy": "sequential" | "parallel" | "async"`).
     pub spawn_strategy: SpawnStrategy,
+    /// Chunked pipelined RMA registration (`"rma_chunk_kib": N`):
+    /// segment size in KiB, 0 = off (seed unchunked path).
+    pub rma_chunk_kib: u64,
     /// `"planner": "auto" | "fixed"` — `auto` lets the cost-model
     /// planner override method/strategy/spawn/pool per resize.
     pub planner: PlannerMode,
@@ -62,6 +65,7 @@ impl ExperimentConfig {
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
             spawn_strategy: SpawnStrategy::Sequential,
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
@@ -86,6 +90,7 @@ impl ExperimentConfig {
         spec.seed = self.seed;
         spec.win_pool = self.win_pool;
         spec.spawn_strategy = self.spawn_strategy;
+        spec.rma_chunk_kib = self.rma_chunk_kib;
         spec.planner = self.planner;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
@@ -149,6 +154,11 @@ impl ExperimentConfig {
             cfg.spawn_strategy = SpawnStrategy::parse(ss).ok_or_else(|| {
                 format!("bad spawn_strategy '{ss}' (sequential | parallel | async)")
             })?;
+        }
+        if let Some(ck) = doc.get("rma_chunk_kib") {
+            cfg.rma_chunk_kib = ck
+                .as_u64()
+                .ok_or("rma_chunk_kib must be a non-negative integer (KiB; 0 = off)")?;
         }
         if let Some(pl) = doc.get("planner") {
             let pl = pl.as_str().ok_or("planner must be a string")?;
@@ -224,6 +234,7 @@ impl ExperimentConfig {
             ("win_pool", Json::str(self.win_pool.label())),
             ("win_pool_cap", Json::num(self.win_pool.cap as f64)),
             ("spawn_strategy", Json::str(self.spawn_strategy.label())),
+            ("rma_chunk_kib", Json::num(self.rma_chunk_kib as f64)),
             ("planner", Json::str(self.planner.label())),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
@@ -406,6 +417,32 @@ mod tests {
         assert_eq!(
             cfg.to_json().get_path("win_pool_cap").unwrap().as_usize(),
             Some(8)
+        );
+    }
+
+    #[test]
+    fn rma_chunk_parses_propagates_and_rejects_bad_values() {
+        // Default: off (the seed unchunked path).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert_eq!(cfg.rma_chunk_kib, 0);
+        assert_eq!(cfg.spec_for(20, 40).rma_chunk_kib, 0);
+        // Round-trip into the per-pair run spec.
+        let cfg = ExperimentConfig::from_str(r#"{"rma_chunk_kib": 1024}"#).unwrap();
+        assert_eq!(cfg.rma_chunk_kib, 1024);
+        assert_eq!(cfg.spec_for(20, 160).rma_chunk_kib, 1024);
+        // Explicit zero is the seed path.
+        let cfg = ExperimentConfig::from_str(r#"{"rma_chunk_kib": 0}"#).unwrap();
+        assert_eq!(cfg.rma_chunk_kib, 0);
+        // Bad values error out with the grammar in the message.
+        let err = ExperimentConfig::from_str(r#"{"rma_chunk_kib": -4}"#).unwrap_err();
+        assert!(err.contains("rma_chunk_kib"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"rma_chunk_kib": 1.5}"#).is_err());
+        assert!(ExperimentConfig::from_str(r#"{"rma_chunk_kib": "big"}"#).is_err());
+        // Provenance carries the chunk size back out.
+        let cfg = ExperimentConfig::from_str(r#"{"rma_chunk_kib": 256}"#).unwrap();
+        assert_eq!(
+            cfg.to_json().get_path("rma_chunk_kib").unwrap().as_u64(),
+            Some(256)
         );
     }
 

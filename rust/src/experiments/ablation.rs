@@ -86,6 +86,8 @@ fn time_rma_blocking(
 /// one world under `policy`; returns each pass's redistribution time
 /// (max over ranks).  With the pool on, the first pass registers cold
 /// and later ones ride the pool — the §VI cold/warm comparison.
+/// (The unchunked special case of [`time_rma_chunk_passes`]: chunk 0
+/// delegates to the seed blocking path, bit for bit.)
 fn time_rma_passes(
     ns: usize,
     nd: usize,
@@ -94,11 +96,29 @@ fn time_rma_passes(
     policy: WinPoolPolicy,
     passes: u32,
 ) -> Vec<f64> {
+    time_rma_chunk_passes(ns, nd, sam, net, policy, 0, passes)
+}
+
+/// Run the blocking RMA-Lockall redistribution `passes` times in one
+/// world with chunked pipelined registration (`chunk_kib` KiB segments;
+/// 0 = the seed unchunked path) under `policy`; returns each pass's
+/// redistribution time.  Pass 1 is cold; with the pool on, pass 2 rides
+/// the registration cache (warm) and the pipeline collapses.
+fn time_rma_chunk_passes(
+    ns: usize,
+    nd: usize,
+    sam: &SamConfig,
+    net: &NetParams,
+    policy: WinPoolPolicy,
+    chunk_kib: u64,
+    passes: u32,
+) -> Vec<f64> {
     let n = ns.max(nd);
     let topo = Topology::new_cyclic(n.div_ceil(20).max(1), 20);
     let mut sim = MpiSim::new(topo, net.clone());
     let world = sim.world();
     let sam = sam.clone();
+    let chunk_elems = chunk_kib * 1024 / crate::simmpi::ELEM_BYTES;
     sim.launch(n, move |p: MpiProc| {
         let rank = p.rank(WORLD);
         let roles = Roles { ns, nd, rank };
@@ -124,16 +144,63 @@ fn time_rma_passes(
         let which = reg.of_kind(DataKind::Constant);
         for pass in 1..=passes {
             let t0 = p.now();
-            let _ = rma::redistribute_blocking(&p, WORLD, &roles, &reg, &which, true, policy);
+            let _ = rma::redistribute_pipelined(
+                &p, WORLD, &roles, &reg, &which, true, policy, chunk_elems,
+            );
             let dt = p.now() - t0;
-            p.metrics(|m| m.mark_max(&format!("ablation.redist{pass}"), dt));
+            p.metrics(|m| m.mark_max(&format!("ablation.chunk{pass}"), dt));
         }
     });
-    sim.run().expect("win-pool ablation sim failed");
+    sim.run().expect("rma-chunk ablation sim failed");
     let w = world.lock().unwrap();
     (1..=passes)
-        .map(|pass| w.metrics.mark_at(&format!("ablation.redist{pass}")).unwrap_or(f64::NAN))
+        .map(|pass| w.metrics.mark_at(&format!("ablation.chunk{pass}")).unwrap_or(f64::NAN))
         .collect()
+}
+
+/// Chunk sizes (KiB) swept by `proteo ablation rma-chunk`; index 0 is
+/// the unchunked blocking baseline.  Shared with the planner's search
+/// space so the ablation (and the `rmachunk.*` bench-gate metrics)
+/// always cover the sizes `--planner auto` can actually pick.
+pub use crate::mam::planner::CHUNK_CANDIDATES_KIB as RMA_CHUNK_SWEEP_KIB;
+
+/// Ablation: chunked pipelined RMA registration (`--rma-chunk`).  Per
+/// pair, a *cold* row (pool off: the paper's cold resize, where
+/// pipelining hides registration behind the wire) and a *warm* row
+/// (pool on, second pass: the pipeline collapses to pure wire time) —
+/// one column per chunk size, with chunk=0 (the seed blocking path) as
+/// the speedup baseline.  The cold sweet spot is the bench-smoke
+/// `rmachunk.*.best` metric.
+pub fn rma_chunk(opts: &FigOptions) -> FigureTable {
+    let cols: Vec<String> = RMA_CHUNK_SWEEP_KIB
+        .iter()
+        .map(|&k| if k == 0 { "blocking".to_string() } else { format!("{k}KiB") })
+        .collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(
+        "Ablation: chunked pipelined registration — cold vs warm, blocking RMA-Lockall",
+        "NS->ND",
+        &col_refs,
+        0,
+    );
+    for (ns, nd) in opts.pairs() {
+        let spec = opts.spec(ns, nd, Method::RmaLockall, Strategy::Blocking);
+        let cold: Vec<f64> = RMA_CHUNK_SWEEP_KIB
+            .iter()
+            .map(|&k| {
+                time_rma_chunk_passes(ns, nd, &spec.sam, &spec.net, WinPoolPolicy::off(), k, 1)[0]
+            })
+            .collect();
+        let warm: Vec<f64> = RMA_CHUNK_SWEEP_KIB
+            .iter()
+            .map(|&k| {
+                time_rma_chunk_passes(ns, nd, &spec.sam, &spec.net, WinPoolPolicy::on(), k, 2)[1]
+            })
+            .collect();
+        t.row(&format!("{ns}->{nd} cold"), cold);
+        t.row(&format!("{ns}->{nd} warm"), warm);
+    }
+    t
 }
 
 /// §VI ablation: the persistent window pool.  Per pair: the no-pool
@@ -349,6 +416,30 @@ mod tests {
             );
             assert!(par < seq, "{label}: parallel {par} !< sequential {seq}");
             assert!(asy < seq, "{label}: async {asy} !< sequential {seq}");
+        }
+    }
+
+    #[test]
+    fn rma_chunk_chunk0_matches_blocking_and_warm_collapses() {
+        let opts = FigOptions { pairs: vec![(8, 4)], scale: 10_000, ..FigOptions::quick() };
+        let spec = opts.spec(8, 4, Method::RmaLockall, Strategy::Blocking);
+        // chunk = 0 must be the plain blocking path, bit for bit.
+        let plain = time_rma_passes(8, 4, &spec.sam, &spec.net, WinPoolPolicy::off(), 1)[0];
+        let chunk0 =
+            time_rma_chunk_passes(8, 4, &spec.sam, &spec.net, WinPoolPolicy::off(), 0, 1)[0];
+        assert_eq!(plain.to_bits(), chunk0.to_bits());
+        let t = rma_chunk(&opts);
+        assert_eq!(t.rows.len(), 2, "cold + warm rows");
+        for c in 0..RMA_CHUNK_SWEEP_KIB.len() {
+            assert!(t.value(0, c).is_finite() && t.value(0, c) > 0.0);
+            assert!(t.value(1, c).is_finite() && t.value(1, c) > 0.0);
+            // Warm pass never loses to the cold pass of the same chunk.
+            assert!(
+                t.value(1, c) <= t.value(0, c) + 1e-9,
+                "col {c}: warm={} cold={}",
+                t.value(1, c),
+                t.value(0, c)
+            );
         }
     }
 

@@ -88,6 +88,8 @@ pub struct ScenarioSpec {
     pub strategy: Strategy,
     pub spawn_strategy: SpawnStrategy,
     pub win_pool: WinPoolPolicy,
+    /// Fixed version's pipelined registration chunk (KiB; 0 = off).
+    pub rma_chunk_kib: u64,
     pub planner: PlannerMode,
     pub spawn_cost: f64,
     pub seed: u64,
@@ -143,6 +145,7 @@ impl ScenarioSpec {
             strategy: Strategy::Blocking,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Auto,
             spawn_cost: 0.25,
             seed: 0xC0FFEE,
@@ -160,6 +163,7 @@ impl ScenarioSpec {
                 strategy: self.strategy,
                 spawn_strategy: self.spawn_strategy,
                 win_pool: self.win_pool,
+                rma_chunk_kib: self.rma_chunk_kib,
             }
             .label()
         }
@@ -284,6 +288,7 @@ fn resolve_resize(
             strategy: spec.strategy,
             spawn_strategy: spec.spawn_strategy,
             win_pool: spec.win_pool,
+            rma_chunk_kib: spec.rma_chunk_kib,
         };
         // Fixed mode: warmth only materializes if the fixed version
         // itself pools.
@@ -306,12 +311,30 @@ pub struct ResizeReport {
     /// Iterations the sources overlapped with a background
     /// redistribution (0 for blocking picks).
     pub n_it: f64,
+    /// Bytes registered with the NIC during this resize (window
+    /// creates, pipelined segment streams, register-on-receive pins).
+    pub reg_bytes: f64,
+    /// Virtual seconds of registration work those bytes cost, summed
+    /// over ranks.
+    pub reg_secs: f64,
 }
 
 impl ResizeReport {
     /// Relative prediction error (signed; + = model overestimates).
     pub fn rel_err(&self) -> f64 {
         (self.predicted_reconf - self.observed_reconf) / self.observed_reconf
+    }
+
+    /// Observed aggregate registration throughput
+    /// (`bytes_registered / reg_span`, B/s) — the measurement hook for
+    /// online `NetParams::beta_register` recalibration.  `None` when
+    /// the resize registered nothing (COL without the pool).
+    pub fn reg_throughput(&self) -> Option<f64> {
+        if self.reg_secs > 0.0 {
+            Some(self.reg_bytes / self.reg_secs)
+        } else {
+            None
+        }
     }
 }
 
@@ -337,12 +360,16 @@ impl ScenarioReport {
             self.name, self.label
         ));
         out.push_str(&format!(
-            "{:<4}{:<10}{:<26}{:>12}{:>12}{:>9}{:>6}\n",
-            "idx", "pair", "version", "predicted", "observed", "err%", "n_it"
+            "{:<4}{:<10}{:<26}{:>12}{:>12}{:>9}{:>6}{:>10}\n",
+            "idx", "pair", "version", "predicted", "observed", "err%", "n_it", "reg GB/s"
         ));
         for r in &self.resizes {
+            let reg = match r.reg_throughput() {
+                Some(t) => format!("{:.2}", t / 1e9),
+                None => "-".to_string(),
+            };
             out.push_str(&format!(
-                "r{:<3}{:<10}{:<26}{:>12}{:>12}{:>8.1}%{:>6.0}\n",
+                "r{:<3}{:<10}{:<26}{:>12}{:>12}{:>8.1}%{:>6.0}{:>10}\n",
                 r.index,
                 format!("{}->{}", r.from, r.to),
                 r.label,
@@ -350,6 +377,7 @@ impl ScenarioReport {
                 fmt_seconds(r.observed_reconf),
                 100.0 * r.rel_err(),
                 r.n_it,
+                reg,
             ));
         }
         out.push_str(&format!(
@@ -382,6 +410,14 @@ impl ScenarioReport {
                                 ("predicted_s", Json::num(r.predicted_reconf)),
                                 ("observed_s", Json::num(r.observed_reconf)),
                                 ("n_it", Json::num(r.n_it)),
+                                ("reg_bytes", Json::num(r.reg_bytes)),
+                                ("reg_time_s", Json::num(r.reg_secs)),
+                                (
+                                    "reg_gbps",
+                                    Json::num(
+                                        r.reg_throughput().map_or(0.0, |t| t / 1e9),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),
@@ -426,6 +462,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         spawn_cost: spec.spawn_cost,
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
+        rma_chunk_kib: spec.rma_chunk_kib,
         planner: PlannerMode::Fixed,
     };
     let start = spec.start_cores;
@@ -453,6 +490,20 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
                 .span(&format!("scen.r{}.start", r.index), &format!("scen.r{}.end", r.index))
                 .unwrap_or(f64::NAN),
             n_it: m.mark_at(&format!("scen.r{}.n_it", r.index)).unwrap_or(0.0),
+            reg_bytes: m
+                .span(
+                    &format!("scen.r{}.reg_bytes0", r.index),
+                    &format!("scen.r{}.reg_bytes1", r.index),
+                )
+                .unwrap_or(0.0)
+                .max(0.0),
+            reg_secs: m
+                .span(
+                    &format!("scen.r{}.reg_time0", r.index),
+                    &format!("scen.r{}.reg_time1", r.index),
+                )
+                .unwrap_or(0.0)
+                .max(0.0),
         })
         .collect();
     ScenarioReport {
@@ -483,7 +534,17 @@ fn app_loop(
     loop {
         if next < ctx.resizes.len() && count >= ctx.resizes[next].at_iter {
             let r = &ctx.resizes[next];
-            p.metrics(|m| m.mark_min(&format!("scen.r{}.start", r.index), p.now()));
+            p.metrics(|m| {
+                m.mark_min(&format!("scen.r{}.start", r.index), p.now());
+                // Registration-throughput hook: snapshot the cumulative
+                // registration counters before the resize (no rank has
+                // registered anything for it yet), so the post-resize
+                // delta is this resize's observed registration work.
+                let rb = m.counter("rma.reg_bytes").unwrap_or(0.0);
+                let rt = m.counter("rma.reg_time").unwrap_or(0.0);
+                m.mark_min(&format!("scen.r{}.reg_bytes0", r.index), rb);
+                m.mark_min(&format!("scen.r{}.reg_time0", r.index), rt);
+            });
             mam.cfg = r.cfg.clone();
             let ctx3 = ctx.clone();
             let ridx = next;
@@ -520,6 +581,10 @@ fn app_loop(
             p.metrics(|m| {
                 m.mark_max(&format!("scen.r{}.end", r.index), p.now());
                 m.mark_max(&format!("scen.r{}.n_it", r.index), n_it as f64);
+                let rb = m.counter("rma.reg_bytes").unwrap_or(0.0);
+                let rt = m.counter("rma.reg_time").unwrap_or(0.0);
+                m.mark_max(&format!("scen.r{}.reg_bytes1", r.index), rb);
+                m.mark_max(&format!("scen.r{}.reg_time1", r.index), rt);
             });
             next += 1;
             continue;
@@ -540,7 +605,13 @@ fn drain_entry(ctx: &Arc<ScenCtx>, dp: MpiProc, merged: CommId, ridx: usize) {
     let mam = Mam::drain_join(&dp, merged, r.from, r.to, &ctx.decls, r.cfg.clone());
     let sam = Sam::new(ctx.sam.clone(), ctx.seed, dp.gpid());
     let count = sync_count(&dp, merged, 0);
-    dp.metrics(|m| m.mark_max(&format!("scen.r{}.end", r.index), dp.now()));
+    dp.metrics(|m| {
+        m.mark_max(&format!("scen.r{}.end", r.index), dp.now());
+        let rb = m.counter("rma.reg_bytes").unwrap_or(0.0);
+        let rt = m.counter("rma.reg_time").unwrap_or(0.0);
+        m.mark_max(&format!("scen.r{}.reg_bytes1", r.index), rb);
+        m.mark_max(&format!("scen.r{}.reg_time1", r.index), rt);
+    });
     app_loop(ctx, &dp, merged, mam, sam, count, ridx + 1);
 }
 
@@ -557,23 +628,25 @@ fn sync_count(p: &MpiProc, comm: CommId, count: u64) -> u64 {
 /// Makespan comparison: the planner against the fixed anchor versions,
 /// one `run_scenario` per column.
 pub fn makespan_comparison(base: &ScenarioSpec) -> FigureTable {
-    let fixed: [(Method, Strategy, WinPoolPolicy); 5] = [
-        (Method::Collective, Strategy::Blocking, WinPoolPolicy::off()),
-        (Method::RmaLockall, Strategy::Blocking, WinPoolPolicy::off()),
-        (Method::RmaLockall, Strategy::Blocking, WinPoolPolicy::on()),
-        (Method::Collective, Strategy::WaitDrains, WinPoolPolicy::off()),
-        (Method::RmaLockall, Strategy::WaitDrains, WinPoolPolicy::on()),
+    let fixed: [(Method, Strategy, WinPoolPolicy, u64); 6] = [
+        (Method::Collective, Strategy::Blocking, WinPoolPolicy::off(), 0),
+        (Method::RmaLockall, Strategy::Blocking, WinPoolPolicy::off(), 0),
+        (Method::RmaLockall, Strategy::Blocking, WinPoolPolicy::off(), 1024),
+        (Method::RmaLockall, Strategy::Blocking, WinPoolPolicy::on(), 0),
+        (Method::Collective, Strategy::WaitDrains, WinPoolPolicy::off(), 0),
+        (Method::RmaLockall, Strategy::WaitDrains, WinPoolPolicy::on(), 0),
     ];
     let mut specs: Vec<ScenarioSpec> = Vec::new();
     let mut auto = base.clone();
     auto.planner = PlannerMode::Auto;
     specs.push(auto);
-    for (m, s, pool) in fixed {
+    for (m, s, pool, chunk) in fixed {
         let mut sp = base.clone();
         sp.planner = PlannerMode::Fixed;
         sp.method = m;
         sp.strategy = s;
         sp.win_pool = pool;
+        sp.rma_chunk_kib = chunk;
         sp.spawn_strategy = SpawnStrategy::Sequential;
         specs.push(sp);
     }
@@ -650,6 +723,47 @@ mod tests {
         }
         // Determinism across repetitions (probes included).
         let b = run_scenario(&spec);
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn scenario_reports_registration_throughput_for_rma() {
+        // Fixed RMA version: every resize registers windows, so the
+        // observed registration throughput is reportable per resize —
+        // the online-NetParams-recalibration input hook.
+        let mut spec = ScenarioSpec::rms_trace(true);
+        spec.planner = PlannerMode::Fixed;
+        spec.method = Method::RmaLockall;
+        spec.strategy = Strategy::Blocking;
+        let rep = run_scenario(&spec);
+        for r in &rep.resizes {
+            assert!(r.reg_bytes > 0.0, "resize {} registered nothing: {r:?}", r.index);
+            assert!(r.reg_secs > 0.0, "{r:?}");
+            let thr = r.reg_throughput().unwrap();
+            assert!(thr.is_finite() && thr > 0.0, "{r:?}");
+        }
+        // COL without the pool never registers: the column stays empty.
+        let mut col = ScenarioSpec::rms_trace(true);
+        col.planner = PlannerMode::Fixed;
+        let rep = run_scenario(&col);
+        for r in &rep.resizes {
+            assert_eq!(r.reg_throughput(), None, "{r:?}");
+        }
+        // The render carries the column either way.
+        assert!(rep.render().contains("reg GB/s"));
+    }
+
+    #[test]
+    fn chunked_fixed_scenario_runs_deterministically() {
+        let mut spec = ScenarioSpec::rms_trace(true);
+        spec.planner = PlannerMode::Fixed;
+        spec.method = Method::RmaLockall;
+        spec.strategy = Strategy::Blocking;
+        spec.rma_chunk_kib = 1; // tiny quick-mode blocks: force segmentation
+        assert!(spec.version_label().contains("+c1k"), "{}", spec.version_label());
+        let a = run_scenario(&spec);
+        let b = run_scenario(&spec);
+        assert!(a.makespan.is_finite() && a.makespan > 0.0);
         assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
     }
 

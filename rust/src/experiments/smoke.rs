@@ -53,6 +53,17 @@ pub fn collect(quick: bool) -> Json {
         }
     }
 
+    // Chunked pipelined registration: the 8→4 shrink's unchunked
+    // blocking baseline, the best chunked cold time over the sweep,
+    // and the best warm time — so the merge-base bench gate guards the
+    // pipelined path end to end.
+    let ck = ablation::rma_chunk(&o);
+    let chunk_cols = ablation::RMA_CHUNK_SWEEP_KIB.len();
+    let best = |row: usize| (1..chunk_cols).map(|c| ck.value(row, c)).fold(f64::INFINITY, f64::min);
+    entries.push(("rmachunk.8to4.blocking".to_string(), ck.value(0, 0)));
+    entries.push(("rmachunk.8to4.best_cold".to_string(), best(0)));
+    entries.push(("rmachunk.8to4.best_warm".to_string(), best(1)));
+
     // One end-to-end run per method family (redistribution time).
     for (name, m, s) in [
         ("col.blocking", Method::Collective, Strategy::Blocking),
@@ -130,5 +141,10 @@ mod tests {
         assert!(e("winpool.8to4.warm") < e("winpool.8to4.cold"));
         assert!(e("spawn.8to16.blk.parallel") < e("spawn.8to16.blk.sequential"));
         assert!(e("spawn.8to16.wd.async") < e("spawn.8to16.wd.sequential"));
+        // The chunked sweep's best warm pass never loses to its cold
+        // pass, and all three pipelined-path entries are present for
+        // the gate.
+        assert!(e("rmachunk.8to4.best_warm") <= e("rmachunk.8to4.best_cold") + 1e-12);
+        assert!(e("rmachunk.8to4.blocking") > 0.0);
     }
 }

@@ -49,6 +49,7 @@ fn cli() -> Cli {
                 .opt("win-pool", "off", "persistent RMA window pool (§VI): on | off")
                 .opt("win-pool-cap", "0", "per-rank pin-cache bound (0 = unbounded)")
                 .opt("spawn-strategy", "sequential", "sequential | parallel | async")
+                .opt("rma-chunk", "0", "pipelined RMA registration chunk (KiB; 0 = off)")
                 .opt("planner", "fixed", "fixed | auto (cost-model-driven version choice)")
                 .flag("json", "emit the result as JSON"),
             Command::new(
@@ -60,13 +61,14 @@ fn cli() -> Cli {
             .opt("strategy", "blocking", "fixed version: blocking | nb | wd | t")
             .opt("spawn-strategy", "sequential", "fixed version: sequential | parallel | async")
             .opt("win-pool", "off", "fixed version: on | off")
+            .opt("rma-chunk", "0", "fixed version: pipelined chunk (KiB; 0 = off)")
             .opt("seed", "12648430", "base RNG seed")
             .flag("quick", "CI-sized workload (10000x smaller problem)")
             .flag("compare", "also run the fixed anchor versions and print makespans")
             .flag("json", "emit the report as JSON"),
             Command::new(
                 "ablation",
-                "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn",
+                "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn | rma-chunk",
             )
             .opt("ns", "20", "source ranks (register-sweep)")
             .opt("nd", "160", "drain ranks (register-sweep)")
@@ -195,6 +197,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             .get("spawn-strategy")
             .and_then(SpawnStrategy::parse)
             .ok_or("bad --spawn-strategy (sequential | parallel | async)")?;
+        spec.rma_chunk_kib = args
+            .get("rma-chunk")
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or("bad --rma-chunk (KiB, non-negative integer; 0 = off)")?;
         spec.planner = args
             .get("planner")
             .and_then(PlannerMode::parse)
@@ -268,6 +274,7 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         }
         "win-pool" => println!("{}", ablation::win_pool(&opts).render()),
         "spawn" => println!("{}", ablation::spawn_strategies(&opts).render()),
+        "rma-chunk" => println!("{}", ablation::rma_chunk(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
     }
     Ok(())
@@ -291,6 +298,10 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
         .get("win-pool")
         .and_then(WinPoolPolicy::parse)
         .ok_or("bad --win-pool (on | off)")?;
+    spec.rma_chunk_kib = args
+        .get("rma-chunk")
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or("bad --rma-chunk (KiB, non-negative integer; 0 = off)")?;
     if spec.planner == PlannerMode::Fixed
         && !proteo::mam::is_valid_version(spec.method, spec.strategy)
     {
@@ -360,10 +371,18 @@ fn cmd_cg(args: &Args) -> Result<(), String> {
 
 fn cmd_bench_smoke(args: &Args) -> Result<(), String> {
     let out = args.get("out").unwrap_or("BENCH_pr.json").to_string();
-    let doc = smoke::collect(args.flag("quick"));
+    let t0 = std::time::Instant::now();
+    let mut doc = smoke::collect(args.flag("quick"));
+    let wall = t0.elapsed().as_secs_f64();
+    // Informational wall-clock provenance: never gated (bench-compare
+    // only reads "entries"/"schema"/"mode"), but recorded so regressions
+    // of the *simulator's own* speed are visible in the artifacts.
+    if let Json::Obj(o) = &mut doc {
+        o.insert("wall_s".to_string(), Json::Num(wall));
+    }
     std::fs::write(&out, doc.to_pretty()).map_err(|e| format!("{out}: {e}"))?;
     let n = doc.get("entries").and_then(|e| e.as_obj()).map_or(0, |o| o.len());
-    println!("wrote {n} deterministic bench entries to {out}");
+    println!("wrote {n} deterministic bench entries to {out} ({wall:.2}s wall)");
     Ok(())
 }
 

@@ -95,6 +95,11 @@ pub enum Objective {
     Effective,
 }
 
+/// Chunk sizes (KiB) the planner prices for the RMA methods — 0 is
+/// the unchunked seed path; the others trade per-segment setup
+/// overhead against registration/wire overlap.
+pub const CHUNK_CANDIDATES_KIB: [u64; 4] = [0, 256, 1024, 4096];
+
 /// One candidate version of the planner's search space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Candidate {
@@ -102,20 +107,50 @@ pub struct Candidate {
     pub strategy: Strategy,
     pub spawn_strategy: SpawnStrategy,
     pub win_pool: WinPoolPolicy,
+    /// Chunked pipelined registration segment size in KiB (0 = off;
+    /// always 0 for the COL method).
+    pub rma_chunk_kib: u64,
 }
 
 impl Candidate {
-    /// Figure-style label, e.g. `RMA-Lockall+pool+async`.
+    /// Figure-style label, e.g. `RMA-Lockall+pool+c1024k+async`.
     pub fn label(&self) -> String {
         let mut l = version_label(self.method, self.strategy);
         if self.win_pool.enabled {
             l.push_str("+pool");
+        }
+        if self.rma_chunk_kib > 0 {
+            l.push_str(&format!("+c{}k", self.rma_chunk_kib));
         }
         if self.spawn_strategy != SpawnStrategy::Sequential {
             l.push('+');
             l.push_str(self.spawn_strategy.label());
         }
         l
+    }
+
+    /// The probe-dedup identity: chunk variants of one
+    /// `(method × strategy × spawn × pool)` tuple all share it, so
+    /// adding chunk sizes to the search space cannot quadratically
+    /// inflate the number of DES micro-probes.
+    fn tuple_key(&self) -> (u8, u8, u8, bool) {
+        let m = match self.method {
+            Method::Collective => 0u8,
+            Method::RmaLock => 1,
+            Method::RmaLockall => 2,
+        };
+        let s = match self.strategy {
+            Strategy::Blocking => 0u8,
+            Strategy::NonBlocking => 1,
+            Strategy::WaitDrains => 2,
+            Strategy::Threading => 3,
+        };
+        let ss = match self.spawn_strategy {
+            SpawnStrategy::Sequential => 0u8,
+            SpawnStrategy::Parallel => 1,
+            SpawnStrategy::Async => 2,
+        };
+        (m, s, ss, self.win_pool.enabled)
     }
 
     /// Materialize a (resolved, `planner: Fixed`) reconfiguration
@@ -127,6 +162,7 @@ impl Candidate {
             spawn_cost,
             spawn_strategy: self.spawn_strategy,
             win_pool: self.win_pool,
+            rma_chunk_kib: self.rma_chunk_kib,
             planner: PlannerMode::Fixed,
         }
     }
@@ -237,6 +273,11 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
         background: cand.strategy.is_background(),
         threading: cand.strategy == Strategy::Threading,
         pool: cand.win_pool.enabled,
+        chunk_bytes: if cand.method.is_rma() {
+            cand.rma_chunk_kib.saturating_mul(1024)
+        } else {
+            0
+        },
     };
     predict_reconfig(&inp.net, &case, &shape)
 }
@@ -327,60 +368,141 @@ fn spawn_block_of(inp: &PlannerInputs, ss: SpawnStrategy) -> f64 {
         .source_block
 }
 
-/// Plan one resize: price every valid candidate, refine the blocking
+/// Plan one resize: price every valid candidate (chunk variants
+/// included for the RMA methods), refine the most promising blocking
 /// ones with micro-probes when requested, and return the argmin under
 /// the objective (stable first-wins tie-break in enumeration order).
+///
+/// Probe budget: candidates are deduped by their
+/// `(method × strategy × spawn × pool)` tuple — only the
+/// best-predicted chunk variant of each tuple is probe-eligible — and
+/// at most the analytic top-3 blocking tuples are probed up front.
+/// If the argmin then lands on an unprobed blocking candidate it is
+/// probed and the argmin re-taken (so the final choice is always
+/// probe-backed), which converges because every probe shrinks the
+/// unprobed set.
 pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
     assert!(inp.ns > 0 && inp.nd > 0 && inp.ns != inp.nd, "invalid resize");
     let grow = inp.nd > inp.ns;
     let mut candidates: Vec<CandidateCost> = Vec::new();
+    let mut seen: std::collections::BTreeSet<((u8, u8, u8, bool), u64)> =
+        std::collections::BTreeSet::new();
     for m in Method::all() {
         for s in Strategy::all() {
             if !is_valid_version(m, s) {
                 continue;
             }
             for pool in [WinPoolPolicy::off(), WinPoolPolicy::on()] {
-                let candidate = Candidate {
-                    method: m,
-                    strategy: s,
-                    spawn_strategy: SpawnStrategy::Sequential,
-                    win_pool: pool,
-                };
-                let predicted = predict_candidate(inp, &candidate);
-                candidates.push(CandidateCost { candidate, predicted, probed_reconf: None });
+                let chunks: &[u64] =
+                    if m.is_rma() { &CHUNK_CANDIDATES_KIB } else { &CHUNK_CANDIDATES_KIB[..1] };
+                for &chunk in chunks {
+                    let candidate = Candidate {
+                        method: m,
+                        strategy: s,
+                        spawn_strategy: SpawnStrategy::Sequential,
+                        win_pool: pool,
+                        rma_chunk_kib: chunk,
+                    };
+                    // Dedupe the full identity: enumeration changes
+                    // must never price one candidate twice.
+                    if !seen.insert((candidate.tuple_key(), chunk)) {
+                        continue;
+                    }
+                    let predicted = predict_candidate(inp, &candidate);
+                    candidates.push(CandidateCost { candidate, predicted, probed_reconf: None });
+                }
             }
         }
     }
     if inp.probe {
-        for cc in &mut candidates {
-            if cc.candidate.strategy == Strategy::Blocking {
-                cc.probed_reconf = Some(probe_reconfiguration(inp, &cc.candidate).reconf_time);
+        // Probe-eligible set: the best-predicted chunk variant per
+        // blocking (method × strategy × spawn × pool) tuple …
+        let mut best_of_tuple: std::collections::BTreeMap<(u8, u8, u8, bool), usize> =
+            std::collections::BTreeMap::new();
+        for (i, cc) in candidates.iter().enumerate() {
+            if cc.candidate.strategy != Strategy::Blocking {
+                continue;
             }
-        }
-    }
-    let mut best: Option<usize> = None;
-    let mut best_v = f64::INFINITY;
-    for (i, cc) in candidates.iter().enumerate() {
-        let v = match inp.objective {
-            // Span minimization restricts the pick to blocking
-            // candidates: background strategies cannot shorten the
-            // span (completion is iteration-quantized and the
-            // variable tail still moves) — they pay off via overlap,
-            // which is what `Effective` optimizes.
-            Objective::ReconfTime => {
-                if cc.candidate.strategy != Strategy::Blocking {
-                    continue;
+            let key = cc.candidate.tuple_key();
+            match best_of_tuple.get(&key) {
+                Some(&j) if candidates[j].predicted.reconf_time <= cc.predicted.reconf_time => {}
+                _ => {
+                    best_of_tuple.insert(key, i);
                 }
-                cc.reconf_time()
             }
-            Objective::Effective => cc.effective(),
-        };
-        if v < best_v {
-            best_v = v;
-            best = Some(i);
+        }
+        // … capped to the analytic top-3 tuples.
+        let mut reps: Vec<usize> = best_of_tuple.into_values().collect();
+        reps.sort_by(|&a, &b| {
+            candidates[a]
+                .predicted
+                .reconf_time
+                .partial_cmp(&candidates[b].predicted.reconf_time)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &i in reps.iter().take(3) {
+            candidates[i].probed_reconf =
+                Some(probe_reconfiguration(inp, &candidates[i].candidate).reconf_time);
         }
     }
-    let idx = best.expect("candidate set cannot be empty");
+    let argmin = |candidates: &[CandidateCost]| -> usize {
+        let mut best: Option<usize> = None;
+        let mut best_v = f64::INFINITY;
+        for (i, cc) in candidates.iter().enumerate() {
+            let v = match inp.objective {
+                // Span minimization restricts the pick to blocking
+                // candidates: background strategies cannot shorten the
+                // span (completion is iteration-quantized and the
+                // variable tail still moves) — they pay off via overlap,
+                // which is what `Effective` optimizes.
+                Objective::ReconfTime => {
+                    if cc.candidate.strategy != Strategy::Blocking {
+                        continue;
+                    }
+                    cc.reconf_time()
+                }
+                Objective::Effective => cc.effective(),
+            };
+            if v < best_v {
+                best_v = v;
+                best = Some(i);
+            }
+        }
+        best.expect("candidate set cannot be empty")
+    };
+    let mut idx = argmin(&candidates);
+    if inp.probe {
+        // Winner loop (bounded): a chosen blocking candidate must be
+        // probe-backed — predictions only shortlist, probes decide.
+        // Up to 3 extra probes chase a predicted-better unprobed
+        // candidate; past the budget the best *probed* blocking
+        // candidate wins (keeps the total probe count capped even when
+        // the closed-form model misranks a cluster of near-ties).
+        for _ in 0..3 {
+            if candidates[idx].candidate.strategy != Strategy::Blocking
+                || candidates[idx].probed_reconf.is_some()
+            {
+                break;
+            }
+            candidates[idx].probed_reconf =
+                Some(probe_reconfiguration(inp, &candidates[idx].candidate).reconf_time);
+            idx = argmin(&candidates);
+        }
+        if candidates[idx].candidate.strategy == Strategy::Blocking
+            && candidates[idx].probed_reconf.is_none()
+        {
+            idx = candidates
+                .iter()
+                .enumerate()
+                .filter(|(_, cc)| cc.probed_reconf.is_some())
+                .min_by(|(_, a), (_, b)| {
+                    a.reconf_time().partial_cmp(&b.reconf_time()).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(idx);
+        }
+    }
     let mut choice = candidates[idx].candidate;
     let mut predicted = candidates[idx].predicted;
     let mut predicted_reconf = candidates[idx].reconf_time();
@@ -520,6 +642,7 @@ mod tests {
             strategy: Strategy::Blocking,
             spawn_strategy: SpawnStrategy::Async,
             win_pool: WinPoolPolicy::on(),
+            rma_chunk_kib: 0,
         };
         assert_eq!(c.label(), "RMA-Lockall+pool+async");
         let c = Candidate {
@@ -527,6 +650,7 @@ mod tests {
             strategy: Strategy::WaitDrains,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
         };
         assert_eq!(c.label(), "COL-WD");
     }
@@ -552,6 +676,64 @@ mod tests {
                 cc.candidate
             );
         }
+    }
+
+    #[test]
+    fn chunk_variants_are_enumerated_without_duplicates() {
+        let p = plan(&tiny_inputs(4, 8, false));
+        // RMA methods get chunked variants; COL never does.
+        assert!(
+            p.candidates
+                .iter()
+                .any(|cc| cc.candidate.method.is_rma() && cc.candidate.rma_chunk_kib > 0),
+            "no chunked RMA candidates priced"
+        );
+        assert!(
+            p.candidates
+                .iter()
+                .all(|cc| cc.candidate.method.is_rma() || cc.candidate.rma_chunk_kib == 0),
+            "COL must not enumerate chunk variants"
+        );
+        // Full-identity dedupe: no candidate priced twice.
+        let mut seen = std::collections::BTreeSet::new();
+        for cc in &p.candidates {
+            let c = &cc.candidate;
+            let key = format!(
+                "{:?}|{:?}|{:?}|{:?}|{}",
+                c.method, c.strategy, c.spawn_strategy, c.win_pool, c.rma_chunk_kib
+            );
+            assert!(seen.insert(key), "duplicate candidate {c:?}");
+        }
+    }
+
+    #[test]
+    fn probe_budget_is_capped_and_the_choice_is_probe_backed() {
+        // Without the cap every blocking candidate would be probed
+        // (3 methods × 2 pools × chunk variants = 18 probes); the cap
+        // allows the analytic top-3 tuples plus the winner loop.
+        let p = plan(&tiny_inputs(4, 2, true));
+        let probed = p.candidates.iter().filter(|cc| cc.probed_reconf.is_some()).count();
+        assert!((1..=6).contains(&probed), "probe budget blew up: {probed}");
+        let chosen = p.candidates.iter().find(|cc| cc.candidate == p.choice).unwrap();
+        assert!(
+            chosen.candidate.strategy != Strategy::Blocking || chosen.probed_reconf.is_some(),
+            "blocking choice must be probe-backed"
+        );
+    }
+
+    #[test]
+    fn chunked_labels_compose() {
+        let c = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: WinPoolPolicy::on(),
+            rma_chunk_kib: 1024,
+        };
+        assert_eq!(c.label(), "RMA-Lockall+pool+c1024k");
+        let cfg = c.cfg(0.1);
+        assert_eq!(cfg.rma_chunk_kib, 1024);
+        assert_eq!(cfg.chunk_elems(), 1024 * 1024 / 8);
     }
 
     #[test]
@@ -606,6 +788,7 @@ mod tests {
             strategy: Strategy::Blocking,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
         };
         let a = probe_reconfiguration(&inp, &cand);
         let b = probe_reconfiguration(&inp, &cand);
@@ -623,6 +806,7 @@ mod tests {
             strategy: Strategy::Blocking,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::on(),
+            rma_chunk_kib: 0,
         };
         let cold = probe_reconfiguration(&inp, &cand);
         inp.warm = true;
@@ -644,6 +828,7 @@ mod tests {
             strategy: Strategy::Blocking,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::on(),
+            rma_chunk_kib: 0,
         };
         let cold = Candidate { win_pool: WinPoolPolicy::off(), ..pooled };
         let pw = predict_candidate(&inp, &pooled);

@@ -91,6 +91,14 @@ pub struct ReconfigCfg {
     /// windows so later resizes acquire them warm.  Off = the paper's
     /// cold `Win_create` path (seed behaviour).
     pub win_pool: WinPoolPolicy,
+    /// Chunked pipelined RMA registration (`--rma-chunk`): segment
+    /// size in KiB.  Each exposure registers segment by segment — only
+    /// the first segment gates the collective `Win_create`, later
+    /// segments register while earlier segments' reads are on the
+    /// wire, and drains read one `Get`/`Rget` per touched segment.
+    /// `0` (default) = the seed unchunked path, bit for bit.  Ignored
+    /// by the COL method (no windows to register).
+    pub rma_chunk_kib: u64,
     /// `Fixed` uses the fields above verbatim (seed behaviour).
     /// `Auto` lets the cost-model planner override
     /// method/strategy/spawn/pool per resize: `Mam` resolves it with
@@ -111,8 +119,18 @@ impl Default for ReconfigCfg {
             spawn_cost: 0.25,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         }
+    }
+}
+
+impl ReconfigCfg {
+    /// Segment size in elements of the chunked pipelined registration
+    /// (0 = unchunked).  Saturating: an absurdly large chunk degrades
+    /// to "one segment" (the unchunked path) instead of overflowing.
+    pub fn chunk_elems(&self) -> u64 {
+        self.rma_chunk_kib.saturating_mul(1024) / crate::simmpi::ELEM_BYTES
     }
 }
 
@@ -302,7 +320,7 @@ impl Mam {
             }
             (m, Strategy::Blocking) => {
                 let lockall = m == Method::RmaLockall;
-                let locals = rma::redistribute_blocking(
+                let locals = rma::redistribute_pipelined(
                     proc,
                     merged,
                     roles,
@@ -310,6 +328,7 @@ impl Mam {
                     which,
                     lockall,
                     cfg.win_pool,
+                    cfg.chunk_elems(),
                 );
                 self.apply_locals(proc, which, locals, roles, cfg.win_pool);
                 State::Done
@@ -337,6 +356,7 @@ impl Mam {
                     which,
                     lockall,
                     cfg.win_pool,
+                    cfg.chunk_elems(),
                 );
                 // Source-only ranks have no reads: they notify the
                 // others right away (Fig. 1) and keep computing.
@@ -356,16 +376,17 @@ impl Mam {
                 let roles2 = *roles;
                 let which2 = which.to_vec();
                 let pool = cfg.win_pool;
+                let chunk = cfg.chunk_elems();
                 proc.spawn_aux(move |aux| {
                     let locals = match m {
                         Method::Collective => {
                             col::redistribute_blocking(&aux, merged, &roles2, &reg, &which2)
                         }
-                        Method::RmaLock => rma::redistribute_blocking(
-                            &aux, merged, &roles2, &reg, &which2, false, pool,
+                        Method::RmaLock => rma::redistribute_pipelined(
+                            &aux, merged, &roles2, &reg, &which2, false, pool, chunk,
                         ),
-                        Method::RmaLockall => rma::redistribute_blocking(
-                            &aux, merged, &roles2, &reg, &which2, true, pool,
+                        Method::RmaLockall => rma::redistribute_pipelined(
+                            &aux, merged, &roles2, &reg, &which2, true, pool, chunk,
                         ),
                     };
                     *s2.lock().unwrap() = Some(locals);
@@ -577,7 +598,7 @@ impl Mam {
             (Method::Collective, Strategy::Blocking | Strategy::Threading) => {
                 col::redistribute_blocking(proc, merged, &roles, &mam.registry, &which)
             }
-            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_blocking(
+            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_pipelined(
                 proc,
                 merged,
                 &roles,
@@ -585,6 +606,7 @@ impl Mam {
                 &which,
                 m == Method::RmaLockall,
                 active.win_pool,
+                active.chunk_elems(),
             ),
             (Method::Collective, Strategy::NonBlocking) => {
                 let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
@@ -611,6 +633,7 @@ impl Mam {
                     &which,
                     m == Method::RmaLockall,
                     active.win_pool,
+                    active.chunk_elems(),
                 );
                 proc.req_waitall(&init.reqs);
                 rma::close_epochs(proc, &init);
@@ -651,14 +674,15 @@ mod tests {
     /// every continuing rank ends with the exact ND-way block.  The
     /// window-pool variant must be payload-identical to the cold path —
     /// the roundtrip assertions check the exact expected block either
-    /// way — and so must every spawn strategy.
-    fn roundtrip_cfg(
+    /// way — and so must every spawn strategy and every chunk size.
+    fn roundtrip_chunked(
         ns: usize,
         nd: usize,
         method: Method,
         strategy: Strategy,
         pool: bool,
         spawn_strategy: SpawnStrategy,
+        rma_chunk_kib: u64,
     ) {
         let total = 997u64;
         let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
@@ -680,6 +704,7 @@ mod tests {
                 spawn_cost: 0.01,
                 spawn_strategy,
                 win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
+                rma_chunk_kib,
                 planner: PlannerMode::Fixed,
             };
             let decls = reg.decls();
@@ -723,6 +748,17 @@ mod tests {
             nd,
             "every drain must verify its block"
         );
+    }
+
+    fn roundtrip_cfg(
+        ns: usize,
+        nd: usize,
+        method: Method,
+        strategy: Strategy,
+        pool: bool,
+        spawn_strategy: SpawnStrategy,
+    ) {
+        roundtrip_chunked(ns, nd, method, strategy, pool, spawn_strategy, 0);
     }
 
     fn roundtrip_pool(ns: usize, nd: usize, method: Method, strategy: Strategy, pool: bool) {
@@ -854,6 +890,50 @@ mod tests {
         roundtrip_pool(6, 2, Method::RmaLockall, Strategy::Threading, true);
     }
 
+    // ---- chunked pipelined registration (`rma_chunk_kib > 0`): the
+    // payloads must stay the exact ND-way blocks for every RMA method
+    // × strategy, grow and shrink, pool on and off — 1 KiB segments
+    // (128 elements) force real segmentation of the 997-element blocks.
+
+    /// 1-KiB chunks (128 elements) under the Sequential spawn — the
+    /// shape the pipelined roundtrips exercise.
+    fn roundtrip_c1(ns: usize, nd: usize, method: Method, strategy: Strategy, pool: bool) {
+        roundtrip_chunked(ns, nd, method, strategy, pool, SpawnStrategy::Sequential, 1);
+    }
+
+    #[test]
+    fn pipelined_grow_rma_blocking_roundtrips() {
+        roundtrip_c1(2, 5, Method::RmaLock, Strategy::Blocking, false);
+        roundtrip_c1(3, 8, Method::RmaLockall, Strategy::Blocking, false);
+    }
+
+    #[test]
+    fn pipelined_shrink_rma_blocking_roundtrips() {
+        roundtrip_c1(8, 3, Method::RmaLockall, Strategy::Blocking, false);
+        let seq = SpawnStrategy::Sequential;
+        roundtrip_chunked(6, 2, Method::RmaLock, Strategy::Blocking, true, seq, 2);
+    }
+
+    #[test]
+    fn pipelined_wd_roundtrips() {
+        roundtrip_c1(2, 7, Method::RmaLock, Strategy::WaitDrains, false);
+        roundtrip_c1(9, 4, Method::RmaLockall, Strategy::WaitDrains, true);
+    }
+
+    #[test]
+    fn pipelined_threading_roundtrips() {
+        roundtrip_c1(2, 6, Method::RmaLock, Strategy::Threading, false);
+        roundtrip_c1(6, 2, Method::RmaLockall, Strategy::Threading, true);
+    }
+
+    #[test]
+    fn pipelined_composes_with_spawn_strategies() {
+        let asy = SpawnStrategy::Async;
+        roundtrip_chunked(3, 8, Method::RmaLockall, Strategy::Blocking, false, asy, 1);
+        let par = SpawnStrategy::Parallel;
+        roundtrip_chunked(3, 8, Method::RmaLock, Strategy::WaitDrains, true, par, 1);
+    }
+
     // ---- spawn strategies: payloads must be identical to the
     // Sequential (seed) path for every method × strategy grow; the
     // roundtrip asserts the exact expected block per rank.
@@ -927,6 +1007,7 @@ mod tests {
                 spawn_cost: 0.01,
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::off(),
+                rma_chunk_kib: 0,
                 planner: PlannerMode::Auto,
             };
             let decls = reg.decls();
@@ -1003,6 +1084,7 @@ mod tests {
                     spawn_cost: 0.25,
                     spawn_strategy,
                     win_pool: WinPoolPolicy::off(),
+                    rma_chunk_kib: 0,
                     planner: PlannerMode::Fixed,
                 };
                 let decls = reg.decls();
@@ -1051,6 +1133,7 @@ mod tests {
                 spawn_cost: 0.0,
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::on(),
+                rma_chunk_kib: 0,
                 planner: PlannerMode::Fixed,
             };
             let decls = reg.decls();
@@ -1107,6 +1190,7 @@ mod tests {
                     spawn_cost: 0.0,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    rma_chunk_kib: 0,
                     planner: PlannerMode::Fixed,
                 },
             );
@@ -1149,6 +1233,7 @@ mod tests {
                     spawn_cost: 0.0,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    rma_chunk_kib: 0,
                     planner: PlannerMode::Fixed,
                 },
             );
@@ -1210,6 +1295,7 @@ mod tests {
                     spawn_cost: 0.0,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    rma_chunk_kib: 0,
                     planner: PlannerMode::Fixed,
                 },
             );

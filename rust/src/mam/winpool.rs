@@ -114,6 +114,40 @@ pub fn acquire_entry_window(
     }
 }
 
+/// Chunked pipelined variant of [`acquire_entry_window`]: the exposure
+/// registers in `chunk_elems`-element segments, only the first of
+/// which gates the collective (see
+/// [`MpiProc::win_create_pipelined`] / [`MpiProc::win_acquire_pipelined`]).
+/// `chunk_elems = 0` is the seed path, bit for bit.
+///
+/// [`MpiProc::win_create_pipelined`]: crate::simmpi::MpiProc::win_create_pipelined
+/// [`MpiProc::win_acquire_pipelined`]: crate::simmpi::MpiProc::win_acquire_pipelined
+pub fn acquire_entry_window_pipelined(
+    proc: &MpiProc,
+    comm: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    i: usize,
+    policy: WinPoolPolicy,
+    chunk_elems: u64,
+) -> WinId {
+    if chunk_elems == 0 {
+        return acquire_entry_window(proc, comm, roles, registry, i, policy);
+    }
+    let exposure = entry_exposure(roles, registry, i);
+    if policy.enabled {
+        proc.win_acquire_pipelined(
+            comm,
+            exposure,
+            pin_token(&registry.entry(i).name),
+            policy.cap,
+            chunk_elems,
+        )
+    } else {
+        proc.win_create_pipelined(comm, exposure, chunk_elems)
+    }
+}
+
 /// Collectively close a set of windows: `win_release` keeps the
 /// registrations pooled, `win_free` (pool off) deregisters.
 pub fn close_windows(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {

@@ -168,6 +168,13 @@ pub struct RedistShape {
     /// Persistent window pool (§VI): warm acquires skip registration,
     /// releases skip deregistration, received blocks are re-pinned.
     pub pool: bool,
+    /// Chunked pipelined registration (`--rma-chunk`): segment size in
+    /// bytes.  0 = unchunked; ignored for two-sided candidates.  Cold
+    /// registration then splits into a *fill* (first segment, on the
+    /// collective critical path) and a background stream overlapped
+    /// with the wire — only the stream's excess over the wire time (the
+    /// pipeline drain) stays serial.
+    pub chunk_bytes: u64,
 }
 
 /// Decomposed cost prediction of one reconfiguration candidate.
@@ -273,18 +280,35 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
     let (registration, mut protocol, teardown) = if s.one_sided {
         let mut registration = 0.0;
         let mut teardown = 0.0;
+        // Chunked pipelining: background-registered bytes accumulate
+        // here and are overlapped with the wire after the loop.
+        let chunk = s.chunk_bytes as f64;
+        let mut rest_total = 0.0;
+        let mut extra_get_ops = 0.0;
         for &b in &c.bulk_bytes {
             // Win_create: everyone pins in parallel, the slowest rank
             // (the largest source exposure — rank 0) gates the exit.
             let (i0, e0) = pred_block(b, c.ns, 0);
             let (d0, de) = pred_block(b, c.nd, 0);
             let (src, recv) = ((e0 - i0) as f64, (de - d0) as f64);
+            let warm = s.pool && c.warm;
             registration += sync
-                + if s.pool && c.warm {
+                + if warm {
                     p.win_setup
+                } else if chunk > 0.0 && src > chunk {
+                    // Fill: setup + the first segment only; the rest of
+                    // the exposure registers in the background (one
+                    // extra setup per later segment).
+                    let n_seg = (src / chunk).ceil();
+                    rest_total += (n_seg - 1.0) * p.win_setup + (src - chunk) * p.beta_register;
+                    p.win_setup + chunk * p.beta_register
                 } else {
                     p.win_setup + src * p.beta_register
                 };
+            if chunk > 0.0 && recv > chunk {
+                // One Get per touched segment instead of one per source.
+                extra_get_ops += ((recv / chunk).ceil() - accessed as f64).max(0.0);
+            }
             teardown += sync
                 + if s.pool {
                     // Release keeps memory pinned; drains then pre-pin
@@ -297,12 +321,18 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
                     p.win_setup * 0.5 + src * p.beta_register / 3.0
                 };
         }
+        if rest_total > 0.0 {
+            // Pipeline drain: the background stream runs concurrently
+            // with the wire — only its excess stays on the span.
+            registration += (rest_total - wire).max(0.0);
+        }
         let epochs = if s.lock_per_target {
             2.0 * p.epoch_cost * accessed as f64
         } else {
             4.0 * p.epoch_cost
         };
-        let protocol = k * (epochs + (p.op_overhead + p.get_overhead) * accessed as f64);
+        let protocol = k * (epochs + (p.op_overhead + p.get_overhead) * accessed as f64)
+            + extra_get_ops * (p.op_overhead + p.get_overhead);
         (registration, protocol, teardown)
     } else {
         // Two-sided: per-message pack CPU (bounded by the eager
@@ -691,6 +721,7 @@ mod tests {
             background: false,
             threading: false,
             pool: false,
+            chunk_bytes: 0,
         }
     }
 
@@ -734,6 +765,79 @@ mod tests {
                 assert!((pr.redist - sum).abs() < 1e-12, "blocking redist must decompose");
             }
         }
+    }
+
+    #[test]
+    fn chunked_prediction_hides_registration_behind_the_wire() {
+        let p = NetParams::sarteco25();
+        let blocking = predict_reconfig(&p, &case(20, 160), &shape(true));
+        let mut s = shape(true);
+        s.chunk_bytes = 1 << 20;
+        let piped = predict_reconfig(&p, &case(20, 160), &s);
+        // Cold grow from 20 sources: registration is substantial and
+        // the wire covers the background stream — the chunked span
+        // must drop by (almost) the whole serial registration term.
+        assert!(
+            piped.registration < 0.15 * blocking.registration,
+            "fill too large: {} vs {}",
+            piped.registration,
+            blocking.registration
+        );
+        assert!(piped.reconf_time < blocking.reconf_time, "{piped:?} vs {blocking:?}");
+        // The wire itself is untouched; the extra per-segment Gets only
+        // nudge the protocol term.
+        assert_eq!(piped.wire.to_bits(), blocking.wire.to_bits());
+        assert!(piped.protocol >= blocking.protocol);
+    }
+
+    #[test]
+    fn chunked_prediction_with_zero_chunk_is_bit_identical() {
+        let p = NetParams::sarteco25();
+        for one_sided in [false, true] {
+            let a = predict_reconfig(&p, &case(160, 20), &shape(one_sided));
+            let mut s = shape(one_sided);
+            s.chunk_bytes = 0;
+            let b = predict_reconfig(&p, &case(160, 20), &s);
+            assert_eq!(a.reconf_time.to_bits(), b.reconf_time.to_bits());
+            assert_eq!(a.registration.to_bits(), b.registration.to_bits());
+            assert_eq!(a.protocol.to_bits(), b.protocol.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_chunked_prediction_equals_warm_unchunked_registration() {
+        // All segments warm: the pipeline collapses — registration is
+        // the fixed setup either way.
+        let p = NetParams::sarteco25();
+        let mut c = case(20, 160);
+        c.warm = true;
+        let mut plain = shape(true);
+        plain.pool = true;
+        let mut chunked = plain;
+        chunked.chunk_bytes = 1 << 20;
+        let a = predict_reconfig(&p, &c, &plain);
+        let b = predict_reconfig(&p, &c, &chunked);
+        assert_eq!(a.registration.to_bits(), b.registration.to_bits());
+    }
+
+    #[test]
+    fn tiny_chunks_pay_their_setup_overhead() {
+        // The chunk-size tradeoff the ablation sweeps: absurdly small
+        // segments mean many per-segment setups — if the background
+        // stream outgrows the wire, the drain term shows up again.
+        let p = NetParams::sarteco25();
+        let mut small = shape(true);
+        small.chunk_bytes = 4 << 10; // 4 KiB: ~790k segments for 3.2 GB
+        let mut big = shape(true);
+        big.chunk_bytes = 16 << 20;
+        let a = predict_reconfig(&p, &case(20, 160), &small);
+        let b = predict_reconfig(&p, &case(20, 160), &big);
+        assert!(
+            a.reconf_time > b.reconf_time,
+            "4 KiB chunks should lose to 16 MiB: {} vs {}",
+            a.reconf_time,
+            b.reconf_time
+        );
     }
 
     #[test]

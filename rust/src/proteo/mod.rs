@@ -56,6 +56,9 @@ pub struct RunSpec {
     /// Persistent RMA window pool (§VI): `--win-pool on|off`.  Off is
     /// the paper's cold `Win_create` path.
     pub win_pool: WinPoolPolicy,
+    /// Chunked pipelined RMA registration (`--rma-chunk`): segment
+    /// size in KiB, 0 = off (the seed unchunked path, bit for bit).
+    pub rma_chunk_kib: u64,
     /// `--planner auto|fixed`: `Auto` lets the cost-model planner
     /// override method/strategy/spawn/pool for this pair (resolved
     /// once, before the simulation, with DES micro-probe refinement);
@@ -80,6 +83,7 @@ impl RunSpec {
             spawn_strategy: SpawnStrategy::Sequential,
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         }
     }
@@ -159,6 +163,7 @@ pub fn resolve_spec(spec: &RunSpec) -> (RunSpec, Option<ReconfigPlan>) {
     resolved.strategy = plan.choice.strategy;
     resolved.spawn_strategy = plan.choice.spawn_strategy;
     resolved.win_pool = plan.choice.win_pool;
+    resolved.rma_chunk_kib = plan.choice.rma_chunk_kib;
     (resolved, Some(plan))
 }
 
@@ -262,6 +267,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
         spawn_cost: spec.spawn_cost,
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
+        rma_chunk_kib: spec.rma_chunk_kib,
         planner: spec.planner,
     };
     let mut mam = Mam::new(reg, mam_cfg.clone());
@@ -332,6 +338,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
         spawn_cost: spec.spawn_cost,
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
+        rma_chunk_kib: spec.rma_chunk_kib,
         planner: spec.planner,
     };
     let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
@@ -418,6 +425,7 @@ mod tests {
             spawn_strategy: SpawnStrategy::Sequential,
             seed: 1,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         }
     }

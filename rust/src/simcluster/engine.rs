@@ -222,6 +222,9 @@ pub struct Engine {
     pub(crate) shared: Arc<EngineShared>,
     /// Livelock guard; configurable via [`Engine::set_event_limit`].
     event_limit: u64,
+    /// Reused scratch for deadlock detection (parked-activity ids) —
+    /// no per-detection allocation.
+    parked_scratch: Vec<ActivityId>,
 }
 
 impl Default for Engine {
@@ -241,6 +244,7 @@ impl Engine {
             alive: 0,
             shared: Arc::new(EngineShared { events_processed: AtomicU64::new(0) }),
             event_limit: 500_000_000,
+            parked_scratch: Vec::new(),
         }
     }
 
@@ -341,17 +345,26 @@ impl Engine {
         let mut processed: u64 = 0;
         while self.alive > 0 {
             let Some(ev) = self.heap.pop() else {
-                let parked: Vec<String> = self
-                    .activities
-                    .values()
-                    .filter(|a| a.parked && !a.done)
-                    .map(|a| a.label.clone())
-                    .collect();
-                return Err(EngineError::Deadlock {
-                    time: self.clock,
-                    parked: parked.len(),
-                    detail: parked.join(", "),
-                });
+                // Collect parked ids into the reusable scratch (no
+                // per-detection allocation; sorted so the report is
+                // deterministic despite HashMap iteration order).
+                let mut scratch = std::mem::take(&mut self.parked_scratch);
+                scratch.clear();
+                scratch.extend(
+                    self.activities
+                        .iter()
+                        .filter(|(_, a)| a.parked && !a.done)
+                        .map(|(id, _)| *id),
+                );
+                scratch.sort();
+                let detail = scratch
+                    .iter()
+                    .map(|id| self.activities[id].label.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                let parked = scratch.len();
+                self.parked_scratch = scratch;
+                return Err(EngineError::Deadlock { time: self.clock, parked, detail });
             };
             processed += 1;
             if processed > self.event_limit {
@@ -364,14 +377,19 @@ impl Engine {
             // Run the activity; immediate requests (Unpark/Spawn) keep
             // control in the same activity without a heap round-trip.
             loop {
-                let st = match self.activities.get_mut(&current) {
-                    Some(s) if !s.done => s,
+                let lease = self.heap.peek().map_or(f64::INFINITY, |e| e.time);
+                // §Perf: the handoff is borrowed for the step instead of
+                // Arc-cloned per resume — the engine thread blocks inside
+                // `engine_step`, nothing touches the activity table
+                // meanwhile, and the request is handled after the borrow
+                // ends.
+                let req = match self.activities.get_mut(&current) {
+                    Some(st) if !st.done => {
+                        st.parked = false;
+                        st.handoff.engine_step(Resume { now: self.clock, reply, lease })
+                    }
                     _ => break, // stale event for a finished activity
                 };
-                st.parked = false;
-                let handoff = st.handoff.clone();
-                let lease = self.heap.peek().map_or(f64::INFINITY, |e| e.time);
-                let req = handoff.engine_step(Resume { now: self.clock, reply, lease });
                 self.shared.events_processed.fetch_add(1, Ordering::Relaxed);
                 reply = 0;
                 match req {
@@ -417,7 +435,11 @@ impl Engine {
                         let st = self.activities.get_mut(&current).unwrap();
                         st.done = true;
                         st.parked = false;
-                        let label = st.label.clone();
+                        // The activity is done: move the label out
+                        // instead of cloning (it is only needed for the
+                        // panic report; done activities never appear in
+                        // deadlock details).
+                        let label = std::mem::take(&mut st.label);
                         if let Some(j) = st.join.take() {
                             let _ = j.join();
                         }

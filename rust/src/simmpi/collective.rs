@@ -26,6 +26,12 @@ pub(crate) enum Contrib {
     /// Win_create: local registration duration (already computed from
     /// the exposed size by the caller).
     RegTime(f64),
+    /// Chunked pipelined Win_create: only `first` (window setup + the
+    /// first segment's registration) gates the collective exit; `rest`
+    /// holds the remaining segments' durations, registered in the
+    /// background after the rank resumes — the pipelined-redistribution
+    /// mechanism that hides registration latency behind the wire.
+    RegPipeline { first: f64, rest: Vec<f64> },
     /// Allgather: this rank's block.
     Block(Payload),
     /// Alltoallv / Ialltoallv: payload destined to each member.
@@ -192,12 +198,15 @@ impl CollState {
                 // All ranks pin locally in parallel after arriving, then
                 // exchange rkeys (dissemination-style sync).  Everyone
                 // leaves at the same instant — Win_create is collective
-                // blocking, the paper's central RMA pain point.
+                // blocking, the paper's central RMA pain point.  A
+                // pipelined contribution gates the exit on its *first*
+                // segment only; the rest registers after the exit.
                 let regs: Vec<f64> = self
                     .contribs
                     .iter()
                     .map(|c| match c {
                         Some(Contrib::RegTime(r)) => *r,
+                        Some(Contrib::RegPipeline { first, .. }) => *first,
                         _ => panic!("win_create without RegTime"),
                     })
                     .collect();
@@ -528,6 +537,24 @@ mod tests {
         // Both leave only after the 5 s registration.
         assert!(cs.completion_of(0).unwrap() >= 5.0);
         assert!(cs.completion_of(1).unwrap() >= 5.0);
+    }
+
+    #[test]
+    fn pipelined_win_create_gates_on_the_first_segment_only() {
+        let (mut cost, pl, g) = setup(2);
+        let mut cs = CollState::new(CollKind::WinCreate, 2);
+        // Pipelined source: 0.1 s fill, 5 s of background segments.
+        cs.arrive(
+            0,
+            0.0,
+            Contrib::RegPipeline { first: 0.1, rest: vec![2.5, 2.5] },
+        );
+        cs.arrive(1, 0.0, Contrib::RegTime(0.05));
+        cs.schedule(&mut cost, &pl, &g);
+        // Exit is gated by the 0.1 s fill, not the 5 s stream.
+        assert!(cs.completion_of(0).unwrap() < 1.0);
+        assert!(cs.completion_of(1).unwrap() < 1.0);
+        assert!(cs.completion_of(0).unwrap() >= 0.1);
     }
 
     #[test]

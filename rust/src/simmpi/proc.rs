@@ -23,6 +23,64 @@ fn exposure_class(ws: &WinState) -> u32 {
     size_class(ws.exposures.iter().map(|e| e.bytes()).max().unwrap_or(0))
 }
 
+/// Segment-registration plan of one chunked pipelined exposure.
+struct SegPlan {
+    /// Setup + first segment — the only part gating the collective.
+    first: f64,
+    /// Remaining segments, registered in the background (0.0 = warm).
+    rest: Vec<f64>,
+    /// Total registration seconds charged (first + rest).
+    charged: f64,
+    /// Bytes that actually registered (cold segments only).
+    cold_bytes: u64,
+    cold_segs: u64,
+    warm_segs: u64,
+}
+
+/// Chunk an exposure of `elems` elements into `chunk`-element segments
+/// and price each segment's registration.  `warm_prefix_bytes` marks
+/// how many leading bytes a previous pin still covers (window-pool
+/// per-segment warmth): segments fully inside it cost nothing — the
+/// first one pays the fixed window setup only.
+fn segment_regs(
+    cost: &crate::netmodel::CostModel,
+    elems: u64,
+    chunk: u64,
+    warm_prefix_bytes: u64,
+) -> SegPlan {
+    let n_seg = elems.div_ceil(chunk);
+    let seg_len = |s: u64| (elems - s * chunk).min(chunk);
+    let seg_warm =
+        |s: u64| (s * chunk + seg_len(s)) * super::types::ELEM_BYTES <= warm_prefix_bytes;
+    let mut plan = SegPlan {
+        first: cost.window_acquire(seg_len(0) * super::types::ELEM_BYTES, seg_warm(0)),
+        rest: Vec::with_capacity(n_seg.saturating_sub(1) as usize),
+        charged: 0.0,
+        cold_bytes: 0,
+        cold_segs: 0,
+        warm_segs: 0,
+    };
+    if seg_warm(0) {
+        plan.warm_segs += 1;
+    } else {
+        plan.cold_segs += 1;
+        plan.cold_bytes += seg_len(0) * super::types::ELEM_BYTES;
+    }
+    for s in 1..n_seg {
+        let bytes = seg_len(s) * super::types::ELEM_BYTES;
+        if seg_warm(s) {
+            plan.warm_segs += 1;
+            plan.rest.push(0.0);
+        } else {
+            plan.cold_segs += 1;
+            plan.cold_bytes += bytes;
+            plan.rest.push(cost.window_registration(bytes));
+        }
+    }
+    plan.charged = plan.first + plan.rest.iter().sum::<f64>();
+    plan
+}
+
 /// Handle to one simulated MPI process (or its auxiliary thread).
 pub struct MpiProc {
     pub(crate) ctx: ActivityCtx,
@@ -362,6 +420,30 @@ impl MpiProc {
                 let MpiWorld { cost, placement, .. } = &mut *w;
                 cs.schedule(cost, placement, &gpids);
                 waiters = std::mem::take(&mut cs.waiters);
+                // Pipelined Win_create: materialize every rank's
+                // background segment-registration stream as absolute
+                // ready times *before any participant resumes* — Gets
+                // posted right after the collective gate on these (the
+                // chunked pipelined redistribution path).
+                if cs.kind == CollKind::WinCreate {
+                    if let (Some(win), Some(completion)) = (cs.win_id, cs.completion.as_ref()) {
+                        for (r, c) in cs.contribs.iter().enumerate() {
+                            if let Some(Contrib::RegPipeline { rest, .. }) = c {
+                                if rest.is_empty() {
+                                    continue;
+                                }
+                                let mut t = completion[r];
+                                let mut ready = Vec::with_capacity(rest.len() + 1);
+                                ready.push(t);
+                                for d in rest {
+                                    t += d;
+                                    ready.push(t);
+                                }
+                                w.windows[win.0].seg_ready[r] = ready;
+                            }
+                        }
+                    }
+                }
             }
             let completion = cs.completion.clone();
             w.colls.insert(key, cs);
@@ -615,15 +697,28 @@ impl MpiProc {
 
     // ------------------------------------------------------------ RMA
 
-    /// Shared body of `win_create`/`win_acquire`: the collective that
-    /// materializes the window (first arriver allocates — from the
-    /// pool's free list when `pooled` — every rank installs its
-    /// exposure) and charges `reg` seconds of per-rank setup time.
-    fn win_open(&self, comm: CommId, payload: Payload, reg: f64, pooled: bool) -> WinId {
+    /// Shared body of every window create (`win_create`/`win_acquire`
+    /// and their pipelined variants): the collective that materializes
+    /// the window (first arriver allocates — from the pool's free list
+    /// when `pooled` — every rank installs its exposure) and charges
+    /// this rank's registration `contrib`.  A pipelined contribution
+    /// (`Contrib::RegPipeline`) gates the collective on its first
+    /// segment only; the remaining segments register in the background
+    /// — their absolute ready times are filled in by the last arriver
+    /// (Gets gate on them per segment) and the stream runs as a real
+    /// `winreg` engine activity after the collective exits.
+    fn win_open(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        contrib: Contrib,
+        pooled: bool,
+        chunk_elems: u64,
+    ) -> WinId {
         let bytes = payload.bytes();
         let is_aux = self.is_aux;
         let gpid = self.gpid;
-        let (key, r) = self.coll_post(comm, CollKind::WinCreate, Contrib::RegTime(reg), {
+        let (key, r) = self.coll_post(comm, CollKind::WinCreate, contrib, {
             let payload = payload.clone();
             move |w, cs, my_rank| {
                 let win = *cs.win_id.get_or_insert_with(|| {
@@ -645,6 +740,12 @@ impl MpiProc {
                     }
                 });
                 w.windows[win.0].exposures[my_rank] = payload;
+                // Segmented ranks publish the window's chunk size;
+                // unsegmented participants (e.g. drains exposing NULL
+                // in a pipelined window) must not clear it.
+                if chunk_elems > 0 {
+                    w.windows[win.0].seg_elems = chunk_elems;
+                }
                 // Propagate the MT flag: accesses to a window created
                 // from a threaded context pay the MT penalty (§V-D).
                 if is_aux || w.procs[gpid].aux_alive {
@@ -658,6 +759,35 @@ impl MpiProc {
             w.colls.get(&key).and_then(|c| c.win_id).expect("win id")
         };
         self.coll_block(key, r);
+        // Pipelined contributions: materialize the background
+        // registration stream as a real engine activity walking a
+        // bounded sample of the segment ready times (empty for
+        // unsegmented contributions — nothing registers past the
+        // collective).  Gets gate on the precomputed per-segment ready
+        // times; `win_free`/`win_release` wait for the stream's end.
+        let stream: Vec<Time> = {
+            let w = self.world.lock().unwrap();
+            let ready = &w.windows[win.0].seg_ready[r];
+            if ready.len() <= 1 {
+                Vec::new()
+            } else {
+                let tail = &ready[1..];
+                let stride = tail.len().div_ceil(32).max(1);
+                let mut v: Vec<Time> = tail.iter().copied().step_by(stride).collect();
+                let last = *tail.last().unwrap();
+                if v.last() != Some(&last) {
+                    v.push(last);
+                }
+                v
+            }
+        };
+        if !stream.is_empty() {
+            self.ctx.spawn(format!("winreg-g{gpid}-w{}", win.0), move |ctx| {
+                for t in stream {
+                    ctx.advance_until(t);
+                }
+            });
+        }
         win
     }
 
@@ -669,12 +799,119 @@ impl MpiProc {
         self.mpi_prologue();
         self.progress_acquire();
         let reg = {
-            let w = self.world.lock().unwrap();
-            w.cost.window_registration(payload.bytes())
+            let mut w = self.world.lock().unwrap();
+            let reg = w.cost.window_registration(payload.bytes());
+            Self::note_registration(&mut w, payload.bytes(), reg);
+            reg
         };
-        let win = self.win_open(comm, payload, reg, false);
+        let win = self.win_open(comm, payload, Contrib::RegTime(reg), false, 0);
         self.progress_release();
         win
+    }
+
+    /// Record registration work into the world metrics — the observed
+    /// registration-throughput hook (`rma.reg_bytes` / `rma.reg_time`)
+    /// the scenario reports derive `bytes_registered / reg_span` from.
+    fn note_registration(w: &mut MpiWorld, bytes: u64, secs: f64) {
+        if bytes > 0 {
+            w.metrics.add_counter("rma.reg_bytes", bytes as f64);
+            w.metrics.add_counter("rma.reg_time", secs);
+        }
+    }
+
+    /// Chunked pipelined `MPI_Win_create` (§VI; the registration-cost
+    /// fix "Quo Vadis MPI RMA?" calls for): the exposure is split into
+    /// `chunk_elems`-element segments and only the first one registers
+    /// inside the collective — later segments register while Gets on
+    /// earlier ones are already flowing, dropping a cold resize from
+    /// `T_reg + T_wire` toward `max(T_reg, T_wire)` plus fill/drain.
+    /// `chunk_elems = 0` (or a single-segment exposure) falls back to
+    /// the seed [`MpiProc::win_create`] path bit-identically.
+    pub fn win_create_pipelined(&self, comm: CommId, payload: Payload, chunk_elems: u64) -> WinId {
+        if chunk_elems == 0 || payload.elems() <= chunk_elems {
+            return self.win_create(comm, payload);
+        }
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (first, rest) = {
+            let mut w = self.world.lock().unwrap();
+            let plan = segment_regs(&w.cost, payload.elems(), chunk_elems, 0);
+            Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
+            (plan.first, plan.rest)
+        };
+        let contrib = Contrib::RegPipeline { first, rest };
+        let win = self.win_open(comm, payload, contrib, false, chunk_elems);
+        self.progress_release();
+        win
+    }
+
+    /// Pooled chunked pipelined acquire: [`MpiProc::win_create_pipelined`]
+    /// through the persistent window pool, with *per-segment* warmth —
+    /// a previous pin covering a prefix of the exposure keeps those
+    /// segments free, only the tail registers (in the background).
+    /// When every segment is warm the pipeline collapses to the plain
+    /// warm acquire: pure wire time, no background stream at all.
+    pub fn win_acquire_pipelined(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        pin: u64,
+        cap: usize,
+        chunk_elems: u64,
+    ) -> WinId {
+        if chunk_elems == 0 || payload.elems() <= chunk_elems {
+            return self.win_acquire_capped(comm, payload, pin, cap);
+        }
+        self.mpi_prologue();
+        self.progress_acquire();
+        let bytes = payload.bytes();
+        let (first, rest) = {
+            let mut w = self.world.lock().unwrap();
+            if w.win_pool.is_warm(self.gpid, pin, bytes) {
+                // Whole exposure still pinned: identical to a plain
+                // warm acquire — fixed setup, no background stream.
+                let reg = w.cost.window_acquire(bytes, true);
+                let saved = w.cost.window_acquire(bytes, false) - reg;
+                w.win_pool.touch(self.gpid, pin);
+                w.win_pool.note_acquire(true, 0.0, saved);
+                (reg, Vec::new())
+            } else {
+                let prefix = w.win_pool.warm_prefix_bytes(self.gpid, pin);
+                let plan = segment_regs(&w.cost, payload.elems(), chunk_elems, prefix);
+                let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
+                w.win_pool.note_acquire(false, plan.charged, 0.0);
+                w.win_pool.note_pipelined(plan.cold_segs, plan.warm_segs);
+                Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
+                let mut first = plan.first;
+                for b in evicted {
+                    let dereg = w.cost.window_free(b);
+                    w.win_pool.note_evict_dereg(dereg);
+                    first += dereg;
+                }
+                (first, plan.rest)
+            }
+        };
+        let contrib = Contrib::RegPipeline { first, rest };
+        let win = self.win_open(comm, payload, contrib, true, chunk_elems);
+        self.progress_release();
+        win
+    }
+
+    /// Pipelined windows: block until this rank's background segment
+    /// registration finished — a window cannot be torn down while its
+    /// memory is still being pinned.  No-op for unsegmented windows.
+    fn await_reg_done(&self, win: WinId) {
+        let done = {
+            let w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            w.windows[win.0].reg_done(my_rank)
+        };
+        if let Some(t) = done {
+            if t > self.ctx.now() {
+                self.ctx.advance_until(t);
+            }
+        }
     }
 
     /// Pooled `MPI_Win_create` (§VI window pool): collective like
@@ -715,6 +952,7 @@ impl MpiProc {
             } else {
                 let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_acquire(false, reg, 0.0);
+                Self::note_registration(&mut w, bytes, reg);
                 // Cap evictions deregister the victims' buffers: the
                 // evicting rank pays the unpin before it is ready.
                 for b in evicted {
@@ -725,7 +963,7 @@ impl MpiProc {
             }
             reg
         };
-        let win = self.win_open(comm, payload, reg, true);
+        let win = self.win_open(comm, payload, Contrib::RegTime(reg), true, 0);
         self.progress_release();
         win
     }
@@ -736,6 +974,7 @@ impl MpiProc {
     pub fn win_release(&self, win: WinId) {
         self.mpi_prologue();
         self.progress_acquire();
+        self.await_reg_done(win);
         let (comm, dt) = {
             let mut w = self.world.lock().unwrap();
             let comm = w.windows[win.0].comm;
@@ -768,6 +1007,7 @@ impl MpiProc {
     /// synchronized; the last rank to release files the slot.
     pub fn win_release_local(&self, win: WinId) {
         self.mpi_prologue();
+        self.await_reg_done(win);
         let (dt, my_rank) = {
             let w = self.world.lock().unwrap();
             let comm = w.windows[win.0].comm;
@@ -800,6 +1040,7 @@ impl MpiProc {
                 let mut dt = w.cost.window_registration(bytes);
                 let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_pre_pin(dt);
+                Self::note_registration(&mut w, bytes, dt);
                 // Evicted victims are deregistered here, locally.
                 for b in evicted {
                     let dereg = w.cost.window_free(b);
@@ -823,6 +1064,7 @@ impl MpiProc {
     pub fn win_free(&self, win: WinId) {
         self.mpi_prologue();
         self.progress_acquire();
+        self.await_reg_done(win);
         let (comm, dereg) = {
             let mut w = self.world.lock().unwrap();
             let ws = &w.windows[win.0];
@@ -847,6 +1089,7 @@ impl MpiProc {
     /// synchronization already happened via MPI_Ibarrier, §IV-C).
     pub fn win_free_local(&self, win: WinId) {
         self.mpi_prologue();
+        self.await_reg_done(win);
         let (dereg, my_rank) = {
             let w = self.world.lock().unwrap();
             let comm = w.windows[win.0].comm;
@@ -901,26 +1144,35 @@ impl MpiProc {
             let target_gpid = w.comm(comm).gpids[target];
             let bytes = (count * super::types::ELEM_BYTES).max(1);
             let now = self.ctx.now();
+            // Pipelined windows: the flow cannot start before the last
+            // touched segment of the target's exposure is registered.
+            let start = match w.windows[win.0].seg_gate(target, disp, count) {
+                Some(g) if g > now => g,
+                _ => now,
+            };
             let MpiWorld { cost, placement, .. } = &mut *w;
             // One-sided read: data moves target → origin.
             let tt = cost.transfer(
-                now,
+                start,
                 placement,
                 target_gpid,
                 self.gpid,
                 bytes,
                 TransferClass::Rma,
             );
+            // The origin posts the Get now either way: its CPU charge
+            // is independent of the target-side registration gate.
+            let cpu_done = if start > now { now + (tt.cpu_done - start) } else { tt.cpu_done };
             // MT window (§V-D): passive-target progress crawls under
             // MPICH's contended lock — stretch the completion.
             let arrival = if w.windows[win.0].mt {
-                now + (tt.arrival - now) * w.cost.params.mt_rma_penalty
+                start + (tt.arrival - start) * w.cost.params.mt_rma_penalty
             } else {
                 tt.arrival
             };
             let data = w.windows[win.0].read(target, disp, count);
             w.windows[win.0].track_get(self.gpid, target, arrival);
-            (tt.cpu_done, data)
+            (cpu_done, data)
         };
         // Deliver data now (window exposures are constant during the
         // epoch); virtual-time completion is enforced by unlock.
@@ -953,18 +1205,25 @@ impl MpiProc {
             let target_gpid = w.comm(comm).gpids[target];
             let bytes = (count * super::types::ELEM_BYTES).max(1);
             let now = self.ctx.now();
+            // Pipelined windows: gate on the target segment's
+            // registration stream, as in `get`.
+            let start = match w.windows[win.0].seg_gate(target, disp, count) {
+                Some(g) if g > now => g,
+                _ => now,
+            };
             let MpiWorld { cost, placement, .. } = &mut *w;
             let tt = cost.transfer(
-                now,
+                start,
                 placement,
                 target_gpid,
                 self.gpid,
                 bytes,
                 TransferClass::Rma,
             );
+            let cpu_done = if start > now { now + (tt.cpu_done - start) } else { tt.cpu_done };
             // MT window (§V-D): stretched completion, as in `get`.
             let complete_at = if w.windows[win.0].mt {
-                now + (tt.arrival - now) * w.cost.params.mt_rma_penalty
+                start + (tt.arrival - start) * w.cost.params.mt_rma_penalty
             } else {
                 tt.arrival
             };
@@ -981,7 +1240,7 @@ impl MpiProc {
                     applied: false,
                 },
             ));
-            (tt.cpu_done, rid)
+            (cpu_done, rid)
         };
         self.ctx.advance_until(cpu_done);
         ReqId(rid)
@@ -1230,7 +1489,7 @@ impl MpiProc {
 mod tests {
     use super::*;
     use crate::netmodel::{NetParams, Topology};
-    use crate::simmpi::types::recv_buf_real;
+    use crate::simmpi::types::{recv_buf_real, recv_buf_virtual};
     use crate::simmpi::world::{MpiSim, WORLD};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -1722,6 +1981,178 @@ mod tests {
         assert_eq!(st.warm_acquires, 1, "{st:?}");
         assert!(st.evictions >= 1, "{st:?}");
         assert!(st.evict_dereg_time > 0.0, "evictions must charge dereg: {st:?}");
+    }
+
+    /// Shared body: rank 0 exposes `elems`, rank 1 reads everything in
+    /// `chunk`-sized Gets (same read pattern for the blocking control,
+    /// so only the window path differs); returns the final sim time.
+    fn pipelined_read_all(elems: u64, chunk: u64) -> f64 {
+        let mut s = sim(2, 1); // one rank per node: inter-node wire
+        s.launch(2, move |p| {
+            let r = p.rank(WORLD);
+            let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
+            let win = p.win_create_pipelined(WORLD, expose, chunk);
+            if r == 1 {
+                let dest = recv_buf_virtual();
+                let step = if chunk == 0 { 1_000_000 } else { chunk };
+                p.win_lock_all(win);
+                let mut off = 0u64;
+                while off < elems {
+                    let take = (elems - off).min(step);
+                    p.get(win, 0, off, take, &dest, 0);
+                    off += take;
+                }
+                p.win_unlock_all(win);
+            }
+            p.win_free(win);
+        });
+        s.run().unwrap()
+    }
+
+    #[test]
+    fn pipelined_create_hides_registration_behind_the_wire() {
+        // 100M elems = 0.8 GB: registration 0.8 s at 1 GB/s, wire 0.8 s
+        // at 1 GB/s.  Blocking pays reg + wire serially; pipelined pays
+        // fill + max(reg, wire) — a large, structural gap.
+        let elems = 100_000_000u64;
+        let blocking = pipelined_read_all(elems, 0);
+        let chunked = pipelined_read_all(elems, 1_000_000);
+        assert!(
+            chunked < blocking * 0.75,
+            "pipelining did not hide registration: chunked={chunked} blocking={blocking}"
+        );
+        // Correct lower bound: the wire still has to move every byte.
+        assert!(chunked > 0.5, "chunked={chunked} implausibly fast");
+    }
+
+    #[test]
+    fn pipelined_runs_are_bit_deterministic() {
+        let a = pipelined_read_all(4_000_000, 500_000);
+        let b = pipelined_read_all(4_000_000, 500_000);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn pipelined_chunk_zero_is_the_plain_create() {
+        // chunk = 0 (and single-segment exposures) must route through
+        // the seed win_create bit-identically.
+        fn plain(elems: u64) -> f64 {
+            let mut s = sim(2, 1);
+            s.launch(2, move |p| {
+                let r = p.rank(WORLD);
+                let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
+                let win = p.win_create(WORLD, expose);
+                p.win_free(win);
+            });
+            s.run().unwrap()
+        }
+        fn piped(elems: u64, chunk: u64) -> f64 {
+            let mut s = sim(2, 1);
+            s.launch(2, move |p| {
+                let r = p.rank(WORLD);
+                let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
+                let win = p.win_create_pipelined(WORLD, expose, chunk);
+                p.win_free(win);
+            });
+            s.run().unwrap()
+        }
+        assert_eq!(plain(1_000_000).to_bits(), piped(1_000_000, 0).to_bits());
+        // Exposure fits one segment: also the plain path.
+        assert_eq!(plain(1_000).to_bits(), piped(1_000, 2_000).to_bits());
+    }
+
+    #[test]
+    fn pipelined_create_roundtrips_data() {
+        let n = 1000u64;
+        let mut s = sim(2, 2);
+        s.launch(2, move |p| {
+            let r = p.rank(WORLD);
+            let expose = if r == 0 {
+                Payload::real((0..n).map(|i| i as f64 * 0.5).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let win = p.win_create_pipelined(WORLD, expose, 64);
+            if r == 1 {
+                let dest = recv_buf_real(n as usize);
+                p.win_lock_all(win);
+                let mut off = 0u64;
+                while off < n {
+                    let take = (n - off).min(64);
+                    p.get(win, 0, off, take, &dest, off);
+                    off += take;
+                }
+                p.win_unlock_all(win);
+                let d = dest.lock().unwrap();
+                let buf = d.as_ref().unwrap();
+                for (i, v) in buf.iter().enumerate() {
+                    assert_eq!(*v, i as f64 * 0.5, "element {i}");
+                }
+            }
+            p.win_free(win);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn pipelined_free_waits_for_background_registration() {
+        // Nobody reads the exposure: the free must still wait for the
+        // background stream (memory cannot be unpinned mid-pinning).
+        let elems = 100_000_000u64; // 0.8 s of registration
+        let mut s = sim(1, 1);
+        s.launch(1, move |p| {
+            let win = p.win_create_pipelined(WORLD, Payload::virt(elems), 1_000_000);
+            // The create itself exits after the fill only.
+            assert!(p.now() < 0.1, "create blocked on the full stream: {}", p.now());
+            p.win_free(win);
+            assert!(p.now() >= 0.79, "free did not wait for registration: {}", p.now());
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn warm_pipelined_acquire_collapses_to_pure_setup() {
+        let elems = 10_000_000u64; // 80 MB
+        let mut s = sim(1, 2);
+        let w = s.world();
+        s.launch(1, move |p| {
+            p.pin_buffer(0xA, elems * 8, 0);
+            let t0 = p.now();
+            let win = p.win_acquire_pipelined(WORLD, Payload::virt(elems), 0xA, 0, 1_000_000);
+            // All segments warm: fixed setup only, no background stream.
+            assert!(p.now() - t0 < 1e-3, "warm pipelined acquire cost {}", p.now() - t0);
+            let t1 = p.now();
+            p.win_release(win);
+            assert!(p.now() - t1 < 1e-3, "release waited on a phantom stream");
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        let st = w.win_pool_stats();
+        assert_eq!(st.warm_acquires, 1, "{st:?}");
+        assert_eq!(st.seg_cold_regs + st.seg_warm_regs, 0, "{st:?}");
+    }
+
+    #[test]
+    fn partially_warm_pipelined_acquire_skips_prefix_segments() {
+        let mut s = sim(1, 2);
+        let w = s.world();
+        s.launch(1, move |p| {
+            // Pin 4096 B (class 12): covers exactly the first segment.
+            p.pin_buffer(0xB, 4096, 0);
+            // 2048 elems = 16 KiB in 512-elem (4 KiB) segments → 4
+            // segments, the first warm, the tail cold.
+            let win = p.win_acquire_pipelined(WORLD, Payload::virt(2048), 0xB, 0, 512);
+            p.win_release(win);
+            // The grown pin makes a re-acquire fully warm.
+            let win = p.win_acquire_pipelined(WORLD, Payload::virt(2048), 0xB, 0, 512);
+            p.win_release(win);
+        });
+        s.run().unwrap();
+        let w = w.lock().unwrap();
+        let st = w.win_pool_stats();
+        assert_eq!(st.seg_warm_regs, 1, "{st:?}");
+        assert_eq!(st.seg_cold_regs, 3, "{st:?}");
+        assert_eq!(st.warm_acquires, 1, "re-acquire must ride the grown pin: {st:?}");
     }
 
     #[test]

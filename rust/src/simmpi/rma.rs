@@ -35,6 +35,16 @@ pub(crate) struct WinState {
     /// one-sided accesses crawl under MPICH's contended lock — their
     /// wire contribution is scaled by `mt_rma_penalty`.
     pub mt: bool,
+    /// Chunked pipelined registration: segment size in *elements*
+    /// (0 = unsegmented, the seed behaviour).
+    pub seg_elems: u64,
+    /// Per-rank absolute virtual times at which each of the rank's
+    /// exposure segments finishes registering (empty = everything
+    /// registered when the creating collective exits — unsegmented
+    /// windows and NULL exposures).  Gets targeting segment `s` cannot
+    /// start before `seg_ready[target][s]`; filled by the last arriver
+    /// of the pipelined `Win_create` before any participant resumes.
+    pub seg_ready: Vec<Vec<Time>>,
 }
 
 impl WinState {
@@ -46,6 +56,8 @@ impl WinState {
             freed_local: vec![false; n],
             freed: false,
             mt: false,
+            seg_elems: 0,
+            seg_ready: (0..n).map(|_| Vec::new()).collect(),
         }
     }
 
@@ -62,6 +74,32 @@ impl WinState {
         self.freed_local = vec![false; n];
         self.freed = false;
         self.mt = false;
+        self.seg_elems = 0;
+        self.seg_ready = (0..n).map(|_| Vec::new()).collect();
+    }
+
+    /// Earliest instant a Get of `[disp, disp+count)` from `target`'s
+    /// exposure may start flowing: the registration-ready time of the
+    /// last segment the range touches.  `None` for unsegmented windows
+    /// (and for targets whose whole exposure was registered inside the
+    /// creating collective) — the seed behaviour, no gating at all.
+    pub fn seg_gate(&self, target: usize, disp: u64, count: u64) -> Option<Time> {
+        let ready = &self.seg_ready[target];
+        if ready.is_empty() || self.seg_elems == 0 {
+            return None;
+        }
+        let last = (disp + count.max(1) - 1) / self.seg_elems;
+        // Ready times are cumulative, so the last touched segment
+        // dominates the whole range.
+        Some(ready[(last as usize).min(ready.len() - 1)])
+    }
+
+    /// When this rank's background segment registration finishes
+    /// (`None` = nothing registers in the background).  `Win_free` /
+    /// `win_release` must not run before this instant — a window
+    /// cannot be torn down while its memory is still being pinned.
+    pub fn reg_done(&self, rank: usize) -> Option<Time> {
+        self.seg_ready.get(rank).and_then(|v| v.last()).copied()
     }
 
     /// Read `count` elements at `disp` from `target`'s exposure;
@@ -165,6 +203,8 @@ mod tests {
         let mut w = WinState::new(CommId(0), 2);
         w.exposures[0] = Payload::real(vec![1.0]);
         w.mt = true;
+        w.seg_elems = 4;
+        w.seg_ready[0] = vec![1.0, 2.0];
         assert!(!w.free_local(0));
         assert!(w.free_local(1));
         w.reset(CommId(3), 3);
@@ -173,6 +213,28 @@ mod tests {
         assert!(w.exposures.iter().all(|e| e.elems() == 0));
         assert!(!w.freed && !w.mt);
         assert_eq!(w.freed_local, vec![false; 3]);
+        assert_eq!(w.seg_elems, 0);
+        assert!(w.seg_ready.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn seg_gate_selects_the_last_touched_segment() {
+        let mut w = WinState::new(CommId(0), 2);
+        // Unsegmented: never gates.
+        assert_eq!(w.seg_gate(0, 0, 100), None);
+        w.seg_elems = 10;
+        w.seg_ready[0] = vec![1.0, 2.0, 3.0];
+        // Range inside segment 0.
+        assert_eq!(w.seg_gate(0, 0, 10), Some(1.0));
+        // Range spanning segments 0..2 gates on the last one.
+        assert_eq!(w.seg_gate(0, 5, 20), Some(3.0));
+        // Past-the-end ranges clamp to the last segment.
+        assert_eq!(w.seg_gate(0, 25, 100), Some(3.0));
+        // A target without a stream never gates.
+        assert_eq!(w.seg_gate(1, 0, 10), None);
+        // Registration completion is the last segment's ready time.
+        assert_eq!(w.reg_done(0), Some(3.0));
+        assert_eq!(w.reg_done(1), None);
     }
 
     #[test]

@@ -70,6 +70,11 @@ pub struct WinPoolStats {
     pub evictions: u64,
     /// Virtual seconds spent deregistering evicted pins.
     pub evict_dereg_time: f64,
+    /// Segments registered cold by pipelined acquires (`--rma-chunk`).
+    pub seg_cold_regs: u64,
+    /// Segments skipped warm by pipelined acquires (per-segment
+    /// warmth: a previous pin covered them).
+    pub seg_warm_regs: u64,
 }
 
 /// One pinned token: its covered size class and an LRU stamp.
@@ -110,6 +115,24 @@ impl WinPool {
                 .pinned
                 .get(&(gpid, token))
                 .is_some_and(|e| e.class >= size_class(bytes))
+    }
+
+    /// Leading bytes of a buffer under `token` that a previous pin
+    /// still covers for `gpid` (0 = nothing pinned).  Pipelined
+    /// acquires use this for *per-segment* warmth: a re-exposure larger
+    /// than the cached class is cold only for the tail segments — the
+    /// pinned prefix rides the cache, exactly like [`WinPool::is_warm`]
+    /// does for whole exposures (`bytes <= 2^class`).
+    pub fn warm_prefix_bytes(&self, gpid: usize, token: u64) -> u64 {
+        self.pinned
+            .get(&(gpid, token))
+            .map_or(0, |e| 1u64.checked_shl(e.class).unwrap_or(u64::MAX))
+    }
+
+    /// Account one pipelined acquire's segment split.
+    pub fn note_pipelined(&mut self, cold_segs: u64, warm_segs: u64) {
+        self.stats.seg_cold_regs += cold_segs;
+        self.stats.seg_warm_regs += warm_segs;
     }
 
     /// Refresh a token's LRU recency (warm hits keep their pin young).
@@ -338,6 +361,33 @@ mod tests {
         for t in 12..16 {
             assert!(p.is_warm(1, t, 64), "token {t} should survive");
         }
+    }
+
+    #[test]
+    fn warm_prefix_tracks_the_pinned_class() {
+        let mut p = WinPool::new();
+        assert_eq!(p.warm_prefix_bytes(0, 7), 0);
+        p.record_pin(0, 7, 1000, 0); // class 10 → 1024 B covered
+        assert_eq!(p.warm_prefix_bytes(0, 7), 1024);
+        // Prefix is per (rank, token).
+        assert_eq!(p.warm_prefix_bytes(1, 7), 0);
+        assert_eq!(p.warm_prefix_bytes(0, 8), 0);
+        // Growing the pin grows the prefix.
+        p.record_pin(0, 7, 5000, 0); // class 13 → 8192 B
+        assert_eq!(p.warm_prefix_bytes(0, 7), 8192);
+        // Retirement clears it.
+        p.unpin_all(0);
+        assert_eq!(p.warm_prefix_bytes(0, 7), 0);
+    }
+
+    #[test]
+    fn pipelined_segment_stats_accumulate() {
+        let mut p = WinPool::new();
+        p.note_pipelined(3, 1);
+        p.note_pipelined(0, 4);
+        let s = p.stats();
+        assert_eq!(s.seg_cold_regs, 3);
+        assert_eq!(s.seg_warm_regs, 5);
     }
 
     #[test]

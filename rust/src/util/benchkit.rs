@@ -198,8 +198,16 @@ impl Bench {
             w = name_w
         ));
         for r in &self.results {
+            // Metric rows still carry the wall clock per run —
+            // informational (the gate compares virtual-time metrics
+            // only), but simulator-speed regressions stay visible.
             let (med, p05, p95, label) = match &r.metric {
-                Some((mname, m)) => (m.median, m.p05, m.p95, format!(" [{mname}]")),
+                Some((mname, m)) => (
+                    m.median,
+                    m.p05,
+                    m.p95,
+                    format!(" [{mname}] wall={}", fmt_seconds(r.wall.median)),
+                ),
                 None => (r.wall.median, r.wall.p05, r.wall.p95, String::new()),
             };
             out.push_str(&format!(
@@ -365,6 +373,14 @@ mod tests {
         assert!(rep.contains("alpha"));
         assert!(rep.contains("beta"));
         assert!(rep.contains("median"));
+    }
+
+    #[test]
+    fn metric_rows_report_wall_clock_too() {
+        let mut b = Bench { warmup_iters: 0, measure_iters: 2, results: vec![] };
+        b.bench_metric("m", "sim_s", || 1.0);
+        let rep = b.report("t");
+        assert!(rep.contains("[sim_s] wall="), "{rep}");
     }
 
     #[test]

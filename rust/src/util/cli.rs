@@ -264,6 +264,28 @@ mod tests {
     }
 
     #[test]
+    fn rma_chunk_option_round_trips() {
+        // The `--rma-chunk` grammar of `proteo run` / `proteo scenario`:
+        // a non-negative KiB count, default 0 (off).
+        let cli = Cli {
+            prog: "p",
+            about: "t",
+            commands: vec![Command::new("run", "r")
+                .opt("rma-chunk", "0", "pipelined RMA registration chunk (KiB; 0 = off)")],
+        };
+        let (_, a) = cli.parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.get("rma-chunk").and_then(|s| s.parse::<u64>().ok()), Some(0));
+        let (_, a) = cli.parse(&sv(&["run", "--rma-chunk", "1024"])).unwrap();
+        assert_eq!(a.get("rma-chunk").and_then(|s| s.parse::<u64>().ok()), Some(1024));
+        let (_, a) = cli.parse(&sv(&["run", "--rma-chunk=256"])).unwrap();
+        assert_eq!(a.get("rma-chunk").and_then(|s| s.parse::<u64>().ok()), Some(256));
+        // Negative / non-numeric values fail the u64 parse (the command
+        // layer turns this into the usage error).
+        let (_, a) = cli.parse(&sv(&["run", "--rma-chunk", "-1"])).unwrap();
+        assert_eq!(a.get("rma-chunk").and_then(|s| s.parse::<u64>().ok()), None);
+    }
+
+    #[test]
     fn explicit_options_are_distinguished_from_defaults() {
         let cli = test_cli();
         let (_, args) = cli.parse(&sv(&["run", "--method", "col"])).unwrap();

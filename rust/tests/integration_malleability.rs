@@ -35,6 +35,7 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         spawn_strategy: SpawnStrategy::Sequential,
         seed: 11,
         win_pool: WinPoolPolicy::off(),
+        rma_chunk_kib: 0,
         planner: PlannerMode::Fixed,
     }
 }
@@ -208,6 +209,7 @@ fn multi_resize_marathon_with_sam() {
                 spawn_cost: 0.01,
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::off(),
+                rma_chunk_kib: 0,
                 planner: PlannerMode::Fixed,
             },
         );

@@ -50,6 +50,7 @@ fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_
             spawn_cost: 0.01,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());

@@ -1,0 +1,208 @@
+//! Property tests for the chunked pipelined RMA redistribution
+//! (`rma_chunk_kib > 0`):
+//!
+//! * the pipelined path is **payload-byte-identical** to the blocking
+//!   path across random grow/shrink shapes, chunk sizes, epoch styles
+//!   and strategies — no element lost, duplicated, reordered or
+//!   altered by the per-segment reads;
+//! * `rma_chunk_kib = 0` reproduces the pre-existing path
+//!   **bit-identically, virtual times included** (the delegation
+//!   guard: chunk 0 must route through the exact seed code path).
+
+use std::sync::{Arc, Mutex};
+
+use proteo::mam::{
+    block_of, rma, DataKind, Mam, MamStatus, Method, PlannerMode, ReconfigCfg, Registry, Roles,
+    SpawnStrategy, Strategy, WinPoolPolicy,
+};
+use proteo::netmodel::{NetParams, Topology};
+use proteo::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
+use proteo::util::proptest_lite::{check_seeded, one_of, usizes, Strategy as PStrategy};
+
+/// Run one full Mam reconfiguration with the given chunk size and
+/// collect every continuing rank's final block of entry "A"; returns
+/// the reassembled global vector (None if any drain failed to report).
+fn run_and_collect(
+    ns: usize,
+    nd: usize,
+    total: u64,
+    method: Method,
+    strategy: Strategy,
+    pool: bool,
+    rma_chunk_kib: u64,
+) -> Option<Vec<f64>> {
+    let collected: Arc<Mutex<Vec<Option<Vec<f64>>>>> = Arc::new(Mutex::new(vec![None; nd]));
+    let c2 = collected.clone();
+    let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+    sim.launch(ns, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let b = block_of(total, ns, rank);
+        let mut reg = Registry::new();
+        reg.register(
+            "A",
+            DataKind::Constant,
+            total,
+            Payload::real((b.ini..b.end).map(|i| (i as f64) * 1.25 - 7.0).collect()),
+        );
+        let decls = reg.decls();
+        let cfg = ReconfigCfg {
+            method,
+            strategy,
+            spawn_cost: 0.001,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
+            rma_chunk_kib,
+            planner: PlannerMode::Fixed,
+        };
+        let mut mam = Mam::new(reg, cfg.clone());
+        let c3 = c2.clone();
+        let cfg2 = cfg.clone();
+        let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+            Arc::new(move |dp: MpiProc, merged: CommId| {
+                let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg2.clone());
+                let e = dmam.registry.entry(0);
+                c3.lock().unwrap()[dp.rank(merged)] =
+                    Some(e.local.as_slice().map(|s| s.to_vec()).unwrap_or_default());
+            });
+        let mut status = mam.reconfigure(&p, WORLD, nd, body);
+        while status == MamStatus::InProgress {
+            p.compute(1e-4);
+            status = mam.checkpoint(&p);
+        }
+        let out = mam.finish(&p, WORLD);
+        if let Some(comm) = out.app_comm {
+            let e = mam.registry.entry(0);
+            c2.lock().unwrap()[p.rank(comm)] =
+                Some(e.local.as_slice().map(|s| s.to_vec()).unwrap_or_default());
+        }
+    });
+    sim.run().expect("simulation failed");
+    let shards = collected.lock().unwrap();
+    if shards.iter().any(|s| s.is_none()) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(total as usize);
+    for s in shards.iter() {
+        out.extend_from_slice(s.as_ref().unwrap());
+    }
+    Some(out)
+}
+
+/// RMA versions the chunked path applies to.
+fn rma_versions() -> Vec<(Method, Strategy)> {
+    vec![
+        (Method::RmaLock, Strategy::Blocking),
+        (Method::RmaLockall, Strategy::Blocking),
+        (Method::RmaLock, Strategy::WaitDrains),
+        (Method::RmaLockall, Strategy::WaitDrains),
+        (Method::RmaLockall, Strategy::Threading),
+    ]
+}
+
+#[test]
+fn prop_pipelined_is_payload_byte_identical_to_blocking() {
+    let versions = rma_versions();
+    // 1 KiB = 128-element segments: totals up to 20k elements over up
+    // to 9 ranks give per-rank blocks well past one segment.
+    let chunks: Vec<u64> = vec![1, 2, 8];
+    check_seeded(
+        "chunked pipelined redistribution == blocking payloads",
+        usizes(1, 9)
+            .pair(usizes(1, 9))
+            .pair(usizes(0, 20_000))
+            .pair(one_of(&versions))
+            .pair(one_of(&chunks)),
+        |((((ns, nd), total), (m, s)), chunk_kib)| {
+            if ns == nd {
+                return true;
+            }
+            let total = total as u64;
+            let pool = (ns + nd + total as usize) % 2 == 0; // alternate pool on/off
+            let chunked = run_and_collect(ns, nd, total, m, s, pool, chunk_kib);
+            let blocking = run_and_collect(ns, nd, total, m, s, pool, 0);
+            let (Some(chunked), Some(blocking)) = (chunked, blocking) else {
+                return false;
+            };
+            if chunked.len() as u64 != total || chunked != blocking {
+                return false;
+            }
+            // Both must also be the identity repartition.
+            chunked
+                .iter()
+                .enumerate()
+                .all(|(i, v)| *v == (i as f64) * 1.25 - 7.0)
+        },
+        0x9A9A,
+    );
+}
+
+/// Simulated end time of one direct (harness-free) blocking RMA
+/// redistribution, via the seed function or the chunked entry point.
+fn direct_end_time(ns: usize, nd: usize, total: u64, lockall: bool, chunked_entry: bool) -> f64 {
+    let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+    sim.launch(ns.max(nd), move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let roles = Roles { ns, nd, rank };
+        let local = if roles.is_source() {
+            Payload::virt(block_of(total, ns, rank).len())
+        } else {
+            Payload::virt(0)
+        };
+        let mut reg = Registry::new();
+        reg.register("A", DataKind::Constant, total, local);
+        let _ = if chunked_entry {
+            rma::redistribute_pipelined(
+                &p,
+                WORLD,
+                &roles,
+                &reg,
+                &[0],
+                lockall,
+                WinPoolPolicy::off(),
+                0,
+            )
+        } else {
+            rma::redistribute_blocking(&p, WORLD, &roles, &reg, &[0], lockall, WinPoolPolicy::off())
+        };
+    });
+    sim.run().expect("simulation failed")
+}
+
+#[test]
+fn prop_chunk_zero_reproduces_the_seed_path_bit_identically() {
+    check_seeded(
+        "rma_chunk_kib = 0 == seed path, virtual times included",
+        usizes(1, 8).pair(usizes(1, 8)).pair(usizes(1, 10_000)).pair(one_of(&[false, true])),
+        |(((ns, nd), total), lockall)| {
+            if ns == nd {
+                return true;
+            }
+            let total = total as u64;
+            let a = direct_end_time(ns, nd, total, lockall, false);
+            let b = direct_end_time(ns, nd, total, lockall, true);
+            a.to_bits() == b.to_bits()
+        },
+        0xB1B1,
+    );
+}
+
+#[test]
+fn prop_pipelined_virtual_times_are_deterministic() {
+    // Two identical chunked runs must agree bit for bit (the
+    // background registration streams are deterministic activities).
+    let versions = rma_versions();
+    check_seeded(
+        "chunked runs are bit-deterministic",
+        usizes(1, 6).pair(usizes(1, 6)).pair(usizes(1, 8_000)).pair(one_of(&versions)),
+        |(((ns, nd), total), (m, s))| {
+            if ns == nd {
+                return true;
+            }
+            let total = total as u64;
+            let a = run_and_collect(ns, nd, total, m, s, false, 1);
+            let b = run_and_collect(ns, nd, total, m, s, false, 1);
+            a == b && a.is_some()
+        },
+        0xC2C2,
+    );
+}

@@ -66,6 +66,7 @@ fn predictions_are_finite_and_positive_for_every_candidate() {
                             strategy: s,
                             spawn_strategy: ss,
                             win_pool: pool,
+                            rma_chunk_kib: 0,
                         };
                         let p = predict_candidate(&inp, &cand);
                         let ok = p.reconf_time.is_finite()

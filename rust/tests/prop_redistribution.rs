@@ -47,6 +47,7 @@ fn run_and_collect(
             spawn_cost: 0.001,
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
@@ -168,6 +169,7 @@ fn prop_block_sizes_after_resize_match_block_of() {
                     spawn_cost: 0.001,
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
+                    rma_chunk_kib: 0,
                     planner: PlannerMode::Fixed,
                 };
                 let mut mam = Mam::new(reg, cfg.clone());
@@ -241,6 +243,7 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                         spawn_cost: 0.001,
                         spawn_strategy: SpawnStrategy::Sequential,
                         win_pool: WinPoolPolicy::off(),
+                        rma_chunk_kib: 0,
                         planner: PlannerMode::Fixed,
                     };
                     let mut mam = Mam::new(reg, cfg.clone());

@@ -45,6 +45,7 @@ fn run_grow(
             spawn_cost: 0.02,
             spawn_strategy,
             win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
