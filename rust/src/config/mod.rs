@@ -47,6 +47,10 @@ pub struct ExperimentConfig {
     /// Chunked pipelined RMA registration (`"rma_chunk_kib": N`):
     /// segment size in KiB, 0 = off (seed unchunked path).
     pub rma_chunk_kib: u64,
+    /// Pipelined deregistration (`"rma_dereg"`: bool or "on"/"off",
+    /// default on): the teardown half of the chunked lifecycle
+    /// pipeline.  Ignored when `rma_chunk_kib == 0`.
+    pub rma_dereg: bool,
     /// `"planner": "auto" | "fixed"` — `auto` lets the cost-model
     /// planner override method/strategy/spawn/pool per resize.
     pub planner: PlannerMode,
@@ -66,6 +70,7 @@ impl ExperimentConfig {
             win_pool: WinPoolPolicy::off(),
             spawn_strategy: SpawnStrategy::Sequential,
             rma_chunk_kib: 0,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
@@ -91,6 +96,7 @@ impl ExperimentConfig {
         spec.win_pool = self.win_pool;
         spec.spawn_strategy = self.spawn_strategy;
         spec.rma_chunk_kib = self.rma_chunk_kib;
+        spec.rma_dereg = self.rma_dereg;
         spec.planner = self.planner;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
@@ -159,6 +165,14 @@ impl ExperimentConfig {
             cfg.rma_chunk_kib = ck
                 .as_u64()
                 .ok_or("rma_chunk_kib must be a non-negative integer (KiB; 0 = off)")?;
+        }
+        if let Some(rd) = doc.get("rma_dereg") {
+            cfg.rma_dereg = match (rd.as_bool(), rd.as_str()) {
+                (Some(b), _) => b,
+                (_, Some(s)) => crate::util::cli::parse_toggle(s)
+                    .ok_or_else(|| format!("bad rma_dereg '{s}' (on | off)"))?,
+                _ => return Err("rma_dereg must be a bool or \"on\"/\"off\"".into()),
+            };
         }
         if let Some(pl) = doc.get("planner") {
             let pl = pl.as_str().ok_or("planner must be a string")?;
@@ -235,6 +249,7 @@ impl ExperimentConfig {
             ("win_pool_cap", Json::num(self.win_pool.cap as f64)),
             ("spawn_strategy", Json::str(self.spawn_strategy.label())),
             ("rma_chunk_kib", Json::num(self.rma_chunk_kib as f64)),
+            ("rma_dereg", Json::Bool(self.rma_dereg)),
             ("planner", Json::str(self.planner.label())),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
@@ -444,6 +459,31 @@ mod tests {
             cfg.to_json().get_path("rma_chunk_kib").unwrap().as_u64(),
             Some(256)
         );
+    }
+
+    #[test]
+    fn rma_dereg_parses_propagates_and_rejects_bad_values() {
+        // Default: on (the full lifecycle pipeline when chunked).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert!(cfg.rma_dereg);
+        assert!(cfg.spec_for(20, 40).rma_dereg);
+        // Bool and toggle-string spellings.
+        for (src, want) in [
+            (r#"{"rma_dereg": false}"#, false),
+            (r#"{"rma_dereg": true}"#, true),
+            (r#"{"rma_dereg": "off"}"#, false),
+            (r#"{"rma_dereg": "on"}"#, true),
+        ] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.rma_dereg, want, "{src}");
+            assert_eq!(cfg.spec_for(20, 160).rma_dereg, want, "{src}");
+        }
+        let err = ExperimentConfig::from_str(r#"{"rma_dereg": "sideways"}"#).unwrap_err();
+        assert!(err.contains("rma_dereg"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"rma_dereg": 3}"#).is_err());
+        // Provenance carries the flag back out.
+        let cfg = ExperimentConfig::from_str(r#"{"rma_dereg": "off"}"#).unwrap();
+        assert_eq!(cfg.to_json().get_path("rma_dereg").unwrap().as_bool(), Some(false));
     }
 
     #[test]

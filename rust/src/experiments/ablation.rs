@@ -113,12 +113,35 @@ fn time_rma_chunk_passes(
     chunk_kib: u64,
     passes: u32,
 ) -> Vec<f64> {
+    time_rma_lifecycle_passes(ns, nd, sam, net, policy, chunk_kib, true, passes)
+}
+
+/// [`time_rma_chunk_passes`] with the teardown pipeline explicit:
+/// `dereg = true` is the full lifecycle (registration *and*
+/// deregistration ride the wire), `dereg = false` the
+/// registration-only pipeline (the pre-teardown chunked behaviour).
+#[allow(clippy::too_many_arguments)]
+fn time_rma_lifecycle_passes(
+    ns: usize,
+    nd: usize,
+    sam: &SamConfig,
+    net: &NetParams,
+    policy: WinPoolPolicy,
+    chunk_kib: u64,
+    dereg: bool,
+    passes: u32,
+) -> Vec<f64> {
     let n = ns.max(nd);
     let topo = Topology::new_cyclic(n.div_ceil(20).max(1), 20);
     let mut sim = MpiSim::new(topo, net.clone());
     let world = sim.world();
     let sam = sam.clone();
     let chunk_elems = chunk_kib * 1024 / crate::simmpi::ELEM_BYTES;
+    let opts = if dereg {
+        rma::LifecycleOpts::full(chunk_elems)
+    } else {
+        rma::LifecycleOpts::reg_only(chunk_elems)
+    };
     sim.launch(n, move |p: MpiProc| {
         let rank = p.rank(WORLD);
         let roles = Roles { ns, nd, rank };
@@ -144,8 +167,8 @@ fn time_rma_chunk_passes(
         let which = reg.of_kind(DataKind::Constant);
         for pass in 1..=passes {
             let t0 = p.now();
-            let _ = rma::redistribute_pipelined(
-                &p, WORLD, &roles, &reg, &which, true, policy, chunk_elems,
+            let _ = rma::redistribute_lifecycle(
+                &p, WORLD, &roles, &reg, &which, true, policy, opts,
             );
             let dt = p.now() - t0;
             p.metrics(|m| m.mark_max(&format!("ablation.chunk{pass}"), dt));
@@ -199,6 +222,58 @@ pub fn rma_chunk(opts: &FigOptions) -> FigureTable {
             .collect();
         t.row(&format!("{ns}->{nd} cold"), cold);
         t.row(&format!("{ns}->{nd} warm"), warm);
+    }
+    t
+}
+
+/// Ablation: the shrink-side teardown sweet spot (`--rma-dereg`).
+/// Shrinks are where the serial `Win_free` teardown is the largest
+/// remaining RMA term once registration is pipelined, so per shrink
+/// pair this table shows two cold rows — the **full** lifecycle
+/// pipeline (registration + deregistration riding the wire) and the
+/// **reg-only** pipeline (the pre-teardown chunked behaviour, teardown
+/// still serial) — one column per chunk size with the unchunked
+/// blocking baseline first.  The gap between the rows is exactly what
+/// the background `windereg-*` streams buy; the full row's minimum is
+/// the shrink sweet spot fed to bench-smoke
+/// (`rmachunk.160to20.best_cold`).  Grow pairs in the options are
+/// ignored; the acceptance pair 160→20 is always included.
+pub fn rma_chunk_shrink(opts: &FigOptions) -> FigureTable {
+    let cols: Vec<String> = RMA_CHUNK_SWEEP_KIB
+        .iter()
+        .map(|&k| if k == 0 { "blocking".to_string() } else { format!("{k}KiB") })
+        .collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = FigureTable::new(
+        "Ablation: shrink teardown pipeline — full lifecycle vs reg-only, blocking RMA-Lockall",
+        "NS->ND",
+        &col_refs,
+        0,
+    );
+    let mut pairs: Vec<(usize, usize)> = vec![(160, 20)];
+    pairs.extend(
+        opts.pairs()
+            .into_iter()
+            .filter(|&(ns, nd)| ns > nd && (ns, nd) != (160, 20)),
+    );
+    for (ns, nd) in pairs {
+        let spec = opts.spec(ns, nd, Method::RmaLockall, Strategy::Blocking);
+        let time = |k: u64, dereg: bool| {
+            time_rma_lifecycle_passes(
+                ns,
+                nd,
+                &spec.sam,
+                &spec.net,
+                WinPoolPolicy::off(),
+                k,
+                dereg,
+                1,
+            )[0]
+        };
+        let full: Vec<f64> = RMA_CHUNK_SWEEP_KIB.iter().map(|&k| time(k, true)).collect();
+        let reg_only: Vec<f64> = RMA_CHUNK_SWEEP_KIB.iter().map(|&k| time(k, false)).collect();
+        t.row(&format!("{ns}->{nd} full"), full);
+        t.row(&format!("{ns}->{nd} reg-only"), reg_only);
     }
     t
 }
@@ -441,6 +516,37 @@ mod tests {
                 t.value(0, c)
             );
         }
+    }
+
+    #[test]
+    fn rma_chunk_shrink_full_lifecycle_never_loses_to_reg_only() {
+        let opts = FigOptions { pairs: vec![(8, 4)], scale: 10_000, ..FigOptions::quick() };
+        let t = rma_chunk_shrink(&opts);
+        // Rows: the forced 160->20 acceptance pair plus 8->4, full and
+        // reg-only each.
+        assert_eq!(t.rows.len(), 4, "two pairs x (full, reg-only)");
+        for pair in 0..2 {
+            let (full, reg_only) = (2 * pair, 2 * pair + 1);
+            for c in 0..RMA_CHUNK_SWEEP_KIB.len() {
+                let (f, r) = (t.value(full, c), t.value(reg_only, c));
+                assert!(f.is_finite() && f > 0.0, "row {full} col {c}: {f}");
+                assert!(
+                    f <= r + 1e-9,
+                    "pipelined teardown lost ground: full={f} reg-only={r} (col {c})"
+                );
+            }
+            // The unchunked blocking baseline is identical in both rows
+            // (the dereg flag is meaningless without segmentation).
+            assert_eq!(t.value(full, 0).to_bits(), t.value(reg_only, 0).to_bits());
+        }
+        // 8->4 at quick scale segments under the 256 KiB chunk: the
+        // teardown pipeline must buy a strictly positive saving there.
+        assert!(
+            t.value(2, 1) < t.value(3, 1),
+            "no teardown saving at 8->4/256KiB: full={} reg-only={}",
+            t.value(2, 1),
+            t.value(3, 1)
+        );
     }
 
     #[test]

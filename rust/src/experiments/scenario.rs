@@ -317,6 +317,12 @@ pub struct ResizeReport {
     /// Virtual seconds of registration work those bytes cost, summed
     /// over ranks.
     pub reg_secs: f64,
+    /// The resize ran a version that *can* register (an RMA method, or
+    /// any method with the window pool's register-on-receive) but
+    /// registered zero bytes: every window acquire and pre-pin rode
+    /// the registration cache.  Distinguishes "warm" from "never
+    /// registers" (COL without the pool) in the report.
+    pub warm: bool,
 }
 
 impl ResizeReport {
@@ -328,7 +334,10 @@ impl ResizeReport {
     /// Observed aggregate registration throughput
     /// (`bytes_registered / reg_span`, B/s) — the measurement hook for
     /// online `NetParams::beta_register` recalibration.  `None` when
-    /// the resize registered nothing (COL without the pool).
+    /// the resize registered nothing: either fully warm
+    /// ([`ResizeReport::warm`]) or a version that never registers (COL
+    /// without the pool).  Rendering a throughput of `0.00` for these
+    /// would be misleading — there was no registration to measure.
     pub fn reg_throughput(&self) -> Option<f64> {
         if self.reg_secs > 0.0 {
             Some(self.reg_bytes / self.reg_secs)
@@ -366,6 +375,7 @@ impl ScenarioReport {
         for r in &self.resizes {
             let reg = match r.reg_throughput() {
                 Some(t) => format!("{:.2}", t / 1e9),
+                None if r.warm => "warm".to_string(),
                 None => "-".to_string(),
             };
             out.push_str(&format!(
@@ -402,7 +412,7 @@ impl ScenarioReport {
                     self.resizes
                         .iter()
                         .map(|r| {
-                            Json::obj(vec![
+                            let mut fields = vec![
                                 ("index", Json::num(r.index as f64)),
                                 ("from", Json::num(r.from as f64)),
                                 ("to", Json::num(r.to as f64)),
@@ -412,13 +422,17 @@ impl ScenarioReport {
                                 ("n_it", Json::num(r.n_it)),
                                 ("reg_bytes", Json::num(r.reg_bytes)),
                                 ("reg_time_s", Json::num(r.reg_secs)),
-                                (
-                                    "reg_gbps",
-                                    Json::num(
-                                        r.reg_throughput().map_or(0.0, |t| t / 1e9),
-                                    ),
-                                ),
-                            ])
+                            ];
+                            // No registration → no throughput to report:
+                            // the key is absent (a 0.00 would read as a
+                            // measured rate), and fully-warm resizes say
+                            // so explicitly.
+                            if let Some(t) = r.reg_throughput() {
+                                fields.push(("reg_gbps", Json::num(t / 1e9)));
+                            } else if r.warm {
+                                fields.push(("reg_gbps", Json::str("warm")));
+                            }
+                            Json::obj(fields)
                         })
                         .collect(),
                 ),
@@ -463,6 +477,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
         rma_chunk_kib: spec.rma_chunk_kib,
+        rma_dereg: true,
         planner: PlannerMode::Fixed,
     };
     let start = spec.start_cores;
@@ -480,30 +495,37 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     let m = &w.metrics;
     let reports: Vec<ResizeReport> = resizes
         .iter()
-        .map(|r| ResizeReport {
-            index: r.index,
-            from: r.from,
-            to: r.to,
-            label: r.label.clone(),
-            predicted_reconf: r.predicted_reconf,
-            observed_reconf: m
-                .span(&format!("scen.r{}.start", r.index), &format!("scen.r{}.end", r.index))
-                .unwrap_or(f64::NAN),
-            n_it: m.mark_at(&format!("scen.r{}.n_it", r.index)).unwrap_or(0.0),
-            reg_bytes: m
-                .span(
-                    &format!("scen.r{}.reg_bytes0", r.index),
-                    &format!("scen.r{}.reg_bytes1", r.index),
-                )
-                .unwrap_or(0.0)
-                .max(0.0),
-            reg_secs: m
+        .map(|r| {
+            let reg_secs = m
                 .span(
                     &format!("scen.r{}.reg_time0", r.index),
                     &format!("scen.r{}.reg_time1", r.index),
                 )
                 .unwrap_or(0.0)
-                .max(0.0),
+                .max(0.0);
+            // The version registers (RMA windows, or register-on-receive
+            // pre-pins under the pool) but charged nothing: fully warm.
+            let registers = r.cfg.method.is_rma() || r.cfg.win_pool.enabled;
+            ResizeReport {
+                index: r.index,
+                from: r.from,
+                to: r.to,
+                label: r.label.clone(),
+                predicted_reconf: r.predicted_reconf,
+                observed_reconf: m
+                    .span(&format!("scen.r{}.start", r.index), &format!("scen.r{}.end", r.index))
+                    .unwrap_or(f64::NAN),
+                n_it: m.mark_at(&format!("scen.r{}.n_it", r.index)).unwrap_or(0.0),
+                reg_bytes: m
+                    .span(
+                        &format!("scen.r{}.reg_bytes0", r.index),
+                        &format!("scen.r{}.reg_bytes1", r.index),
+                    )
+                    .unwrap_or(0.0)
+                    .max(0.0),
+                reg_secs,
+                warm: registers && reg_secs == 0.0,
+            }
         })
         .collect();
     ScenarioReport {
@@ -751,6 +773,45 @@ mod tests {
         }
         // The render carries the column either way.
         assert!(rep.render().contains("reg GB/s"));
+    }
+
+    #[test]
+    fn fully_warm_resizes_render_warm_not_zero() {
+        // Pooled RMA: the first resize registers cold and
+        // register-on-receive pins every new block, so later no-spawn
+        // resizes ride the cache end to end — they must render "warm"
+        // (and mark the JSON throughput as such), never a misleading
+        // "0.00 reg GB/s".
+        let mut spec = ScenarioSpec::rms_trace(true);
+        spec.planner = PlannerMode::Fixed;
+        spec.method = Method::RmaLockall;
+        spec.strategy = Strategy::Blocking;
+        spec.win_pool = WinPoolPolicy::on();
+        let rep = run_scenario(&spec);
+        assert!(
+            rep.resizes[0].reg_secs > 0.0,
+            "first resize must register cold: {:?}",
+            rep.resizes[0]
+        );
+        assert!(!rep.resizes[0].warm);
+        let warm: Vec<&ResizeReport> = rep.resizes.iter().filter(|r| r.warm).collect();
+        assert!(!warm.is_empty(), "no fully-warm resize in the pooled trace: {:?}", rep.resizes);
+        for r in &warm {
+            assert_eq!(r.reg_throughput(), None, "{r:?}");
+            assert_eq!(r.reg_bytes, 0.0, "{r:?}");
+        }
+        let txt = rep.render();
+        assert!(txt.contains("warm"), "{txt}");
+        let j = rep.to_json().to_pretty();
+        assert!(j.contains("\"warm\""), "{j}");
+        // COL without the pool never registers: no "warm", and the
+        // throughput key stays absent rather than zero.
+        let mut col = ScenarioSpec::rms_trace(true);
+        col.planner = PlannerMode::Fixed;
+        let rep = run_scenario(&col);
+        assert!(rep.resizes.iter().all(|r| !r.warm), "{:?}", rep.resizes);
+        assert!(!rep.to_json().to_pretty().contains("reg_gbps"));
+        assert!(!rep.render().contains("warm"));
     }
 
     #[test]

@@ -64,6 +64,19 @@ pub fn collect(quick: bool) -> Json {
     entries.push(("rmachunk.8to4.best_cold".to_string(), best(0)));
     entries.push(("rmachunk.8to4.best_warm".to_string(), best(1)));
 
+    // Shrink-direction lifecycle pipeline: the 160→20 acceptance pair's
+    // unchunked baseline, the best full-lifecycle cold time, and the
+    // best registration-only time (teardown still serial) — the gap
+    // between the last two is the teardown pipeline's contribution,
+    // guarded end to end by the merge-base bench gate.
+    let cks = ablation::rma_chunk_shrink(&FigOptions { pairs: vec![(160, 20)], ..o.clone() });
+    let bestk = |row: usize| {
+        (1..chunk_cols).map(|c| cks.value(row, c)).fold(f64::INFINITY, f64::min)
+    };
+    entries.push(("rmachunk.160to20.blocking".to_string(), cks.value(0, 0)));
+    entries.push(("rmachunk.160to20.best_cold".to_string(), bestk(0)));
+    entries.push(("rmachunk.160to20.reg_only".to_string(), bestk(1)));
+
     // One end-to-end run per method family (redistribution time).
     for (name, m, s) in [
         ("col.blocking", Method::Collective, Strategy::Blocking),
@@ -146,5 +159,9 @@ mod tests {
         // the gate.
         assert!(e("rmachunk.8to4.best_warm") <= e("rmachunk.8to4.best_cold") + 1e-12);
         assert!(e("rmachunk.8to4.blocking") > 0.0);
+        // Shrink lifecycle: the full pipeline never loses to the
+        // registration-only one, and both beat nothing (finite).
+        assert!(e("rmachunk.160to20.best_cold") <= e("rmachunk.160to20.reg_only") + 1e-12);
+        assert!(e("rmachunk.160to20.blocking") > 0.0);
     }
 }

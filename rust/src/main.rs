@@ -50,6 +50,11 @@ fn cli() -> Cli {
                 .opt("win-pool-cap", "0", "per-rank pin-cache bound (0 = unbounded)")
                 .opt("spawn-strategy", "sequential", "sequential | parallel | async")
                 .opt("rma-chunk", "0", "pipelined RMA registration chunk (KiB; 0 = off)")
+                .opt(
+                    "rma-dereg",
+                    "on",
+                    "pipelined deregistration (teardown half of --rma-chunk): on | off",
+                )
                 .opt("planner", "fixed", "fixed | auto (cost-model-driven version choice)")
                 .flag("json", "emit the result as JSON"),
             Command::new(
@@ -68,7 +73,8 @@ fn cli() -> Cli {
             .flag("json", "emit the report as JSON"),
             Command::new(
                 "ablation",
-                "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn | rma-chunk",
+                "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn | \
+                 rma-chunk | rma-chunk-shrink",
             )
             .opt("ns", "20", "source ranks (register-sweep)")
             .opt("nd", "160", "drain ranks (register-sweep)")
@@ -201,6 +207,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             .get("rma-chunk")
             .and_then(|s| s.parse::<u64>().ok())
             .ok_or("bad --rma-chunk (KiB, non-negative integer; 0 = off)")?;
+        spec.rma_dereg = args
+            .get("rma-dereg")
+            .and_then(parse_toggle)
+            .ok_or("bad --rma-dereg (on | off)")?;
         spec.planner = args
             .get("planner")
             .and_then(PlannerMode::parse)
@@ -275,6 +285,7 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         "win-pool" => println!("{}", ablation::win_pool(&opts).render()),
         "spawn" => println!("{}", ablation::spawn_strategies(&opts).render()),
         "rma-chunk" => println!("{}", ablation::rma_chunk(&opts).render()),
+        "rma-chunk-shrink" => println!("{}", ablation::rma_chunk_shrink(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
     }
     Ok(())

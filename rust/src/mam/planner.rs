@@ -163,6 +163,7 @@ impl Candidate {
             spawn_strategy: self.spawn_strategy,
             win_pool: self.win_pool,
             rma_chunk_kib: self.rma_chunk_kib,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         }
     }
@@ -249,12 +250,21 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
             tail.push(bytes);
         }
     }
-    let spawn_block = if inp.nd > inp.ns {
-        cand.spawn_strategy
-            .schedule(&inp.net, inp.ns, inp.nd - inp.ns, inp.nd, inp.spawn_cost)
-            .source_block
+    let (spawn_block, spawn_tail) = if inp.nd > inp.ns {
+        let sched = cand.spawn_strategy.schedule(
+            &inp.net,
+            inp.ns,
+            inp.nd - inp.ns,
+            inp.nd,
+            inp.spawn_cost,
+        );
+        // Asynchronous spawning releases the sources before the last
+        // spawned rank is up: the remainder gates the redistribution
+        // (overlappable by one-sided registration — the spawn-overlap
+        // term of the lifecycle pipeline).
+        (sched.source_block, (sched.last_child_up() - sched.source_block).max(0.0))
     } else {
-        0.0
+        (0.0, 0.0)
     };
     let case = ReconfigCase {
         ns: inp.ns,
@@ -266,6 +276,7 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
         t_iter_src: inp.t_iter_src,
         t_iter_dst: inp.t_iter_dst,
         spawn_block,
+        spawn_tail,
     };
     let shape = RedistShape {
         one_sided: cand.method.is_rma(),

@@ -99,6 +99,15 @@ pub struct ReconfigCfg {
     /// `0` (default) = the seed unchunked path, bit for bit.  Ignored
     /// by the COL method (no windows to register).
     pub rma_chunk_kib: u64,
+    /// Teardown half of the chunked lifecycle pipeline
+    /// (`--rma-dereg`): with `rma_chunk_kib > 0`, pool-off `Win_free`s
+    /// deregister per segment in the background as the last reads
+    /// land (retiring ranks on a shrink exit after
+    /// `max(T_dereg, T_wire)` instead of `T_wire + T_dereg`).  `false`
+    /// keeps the registration-only pipeline (the pre-teardown chunked
+    /// behaviour).  Meaningless when `rma_chunk_kib == 0`.  Default:
+    /// `true`.
+    pub rma_dereg: bool,
     /// `Fixed` uses the fields above verbatim (seed behaviour).
     /// `Auto` lets the cost-model planner override
     /// method/strategy/spawn/pool per resize: `Mam` resolves it with
@@ -120,6 +129,7 @@ impl Default for ReconfigCfg {
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         }
     }
@@ -131,6 +141,24 @@ impl ReconfigCfg {
     /// to "one segment" (the unchunked path) instead of overflowing.
     pub fn chunk_elems(&self) -> u64 {
         self.rma_chunk_kib.saturating_mul(1024) / crate::simmpi::ELEM_BYTES
+    }
+
+    /// The RMA lifecycle-pipeline knobs this configuration implies for
+    /// a resize with `roles`: chunk size, pipelined teardown
+    /// (`rma_dereg`), and spawn-overlapped registration streams —
+    /// eager only for chunked *grows* under asynchronous spawning
+    /// (shrinks never spawn, and blocking spawn strategies leave no
+    /// startup window to overlap).  Rank-independent, so sources and
+    /// spawned drains derive the same opts without communicating.
+    pub fn lifecycle(&self, roles: &Roles) -> rma::LifecycleOpts {
+        let chunk_elems = self.chunk_elems();
+        rma::LifecycleOpts {
+            chunk_elems,
+            dereg_pipeline: chunk_elems > 0 && self.rma_dereg,
+            eager_reg: chunk_elems > 0
+                && roles.is_grow()
+                && self.spawn_strategy == SpawnStrategy::Async,
+        }
     }
 }
 
@@ -320,7 +348,7 @@ impl Mam {
             }
             (m, Strategy::Blocking) => {
                 let lockall = m == Method::RmaLockall;
-                let locals = rma::redistribute_pipelined(
+                let locals = rma::redistribute_lifecycle(
                     proc,
                     merged,
                     roles,
@@ -328,7 +356,7 @@ impl Mam {
                     which,
                     lockall,
                     cfg.win_pool,
-                    cfg.chunk_elems(),
+                    cfg.lifecycle(roles),
                 );
                 self.apply_locals(proc, which, locals, roles, cfg.win_pool);
                 State::Done
@@ -348,7 +376,7 @@ impl Mam {
             }
             (m, Strategy::WaitDrains) => {
                 let lockall = m == Method::RmaLockall;
-                let init = rma::init_rma(
+                let init = rma::init_rma_lifecycle(
                     proc,
                     merged,
                     roles,
@@ -356,7 +384,7 @@ impl Mam {
                     which,
                     lockall,
                     cfg.win_pool,
-                    cfg.chunk_elems(),
+                    cfg.lifecycle(roles),
                 );
                 // Source-only ranks have no reads: they notify the
                 // others right away (Fig. 1) and keep computing.
@@ -376,17 +404,17 @@ impl Mam {
                 let roles2 = *roles;
                 let which2 = which.to_vec();
                 let pool = cfg.win_pool;
-                let chunk = cfg.chunk_elems();
+                let opts = cfg.lifecycle(roles);
                 proc.spawn_aux(move |aux| {
                     let locals = match m {
                         Method::Collective => {
                             col::redistribute_blocking(&aux, merged, &roles2, &reg, &which2)
                         }
-                        Method::RmaLock => rma::redistribute_pipelined(
-                            &aux, merged, &roles2, &reg, &which2, false, pool, chunk,
+                        Method::RmaLock => rma::redistribute_lifecycle(
+                            &aux, merged, &roles2, &reg, &which2, false, pool, opts,
                         ),
-                        Method::RmaLockall => rma::redistribute_pipelined(
-                            &aux, merged, &roles2, &reg, &which2, true, pool, chunk,
+                        Method::RmaLockall => rma::redistribute_lifecycle(
+                            &aux, merged, &roles2, &reg, &which2, true, pool, opts,
                         ),
                     };
                     *s2.lock().unwrap() = Some(locals);
@@ -598,7 +626,7 @@ impl Mam {
             (Method::Collective, Strategy::Blocking | Strategy::Threading) => {
                 col::redistribute_blocking(proc, merged, &roles, &mam.registry, &which)
             }
-            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_pipelined(
+            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_lifecycle(
                 proc,
                 merged,
                 &roles,
@@ -606,7 +634,7 @@ impl Mam {
                 &which,
                 m == Method::RmaLockall,
                 active.win_pool,
-                active.chunk_elems(),
+                active.lifecycle(&roles),
             ),
             (Method::Collective, Strategy::NonBlocking) => {
                 let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
@@ -625,7 +653,7 @@ impl Mam {
             (m, Strategy::WaitDrains) => {
                 // Fig. 2 drain-only path: blocking local phase, then the
                 // global barrier, then the local frees.
-                let mut init = rma::init_rma(
+                let mut init = rma::init_rma_lifecycle(
                     proc,
                     merged,
                     &roles,
@@ -633,7 +661,7 @@ impl Mam {
                     &which,
                     m == Method::RmaLockall,
                     active.win_pool,
-                    active.chunk_elems(),
+                    active.lifecycle(&roles),
                 );
                 proc.req_waitall(&init.reqs);
                 rma::close_epochs(proc, &init);
@@ -684,6 +712,23 @@ mod tests {
         spawn_strategy: SpawnStrategy,
         rma_chunk_kib: u64,
     ) {
+        roundtrip_lifecycle(ns, nd, method, strategy, pool, spawn_strategy, rma_chunk_kib, true);
+    }
+
+    /// [`roundtrip_chunked`] with the teardown pipeline explicit
+    /// (`rma_dereg = false` exercises the registration-only pipeline's
+    /// Mam dispatch).
+    #[allow(clippy::too_many_arguments)]
+    fn roundtrip_lifecycle(
+        ns: usize,
+        nd: usize,
+        method: Method,
+        strategy: Strategy,
+        pool: bool,
+        spawn_strategy: SpawnStrategy,
+        rma_chunk_kib: u64,
+        rma_dereg: bool,
+    ) {
         let total = 997u64;
         let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
         let checks = Arc::new(AtomicUsize::new(0));
@@ -705,6 +750,7 @@ mod tests {
                 spawn_strategy,
                 win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
                 rma_chunk_kib,
+                rma_dereg,
                 planner: PlannerMode::Fixed,
             };
             let decls = reg.decls();
@@ -927,6 +973,16 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_teardown_off_roundtrips_identically() {
+        // `rma_dereg: false` (the registration-only pipeline) must
+        // still deliver the exact ND-way blocks — shrink and grow,
+        // blocking and WD — through the same Mam dispatch.
+        let seq = SpawnStrategy::Sequential;
+        roundtrip_lifecycle(8, 3, Method::RmaLockall, Strategy::Blocking, false, seq, 1, false);
+        roundtrip_lifecycle(3, 8, Method::RmaLock, Strategy::WaitDrains, false, seq, 1, false);
+    }
+
+    #[test]
     fn pipelined_composes_with_spawn_strategies() {
         let asy = SpawnStrategy::Async;
         roundtrip_chunked(3, 8, Method::RmaLockall, Strategy::Blocking, false, asy, 1);
@@ -1008,6 +1064,7 @@ mod tests {
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::off(),
                 rma_chunk_kib: 0,
+                rma_dereg: true,
                 planner: PlannerMode::Auto,
             };
             let decls = reg.decls();
@@ -1085,6 +1142,7 @@ mod tests {
                     spawn_strategy,
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
+                    rma_dereg: true,
                     planner: PlannerMode::Fixed,
                 };
                 let decls = reg.decls();
@@ -1134,6 +1192,7 @@ mod tests {
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::on(),
                 rma_chunk_kib: 0,
+                rma_dereg: true,
                 planner: PlannerMode::Fixed,
             };
             let decls = reg.decls();
@@ -1191,6 +1250,7 @@ mod tests {
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
+                    rma_dereg: true,
                     planner: PlannerMode::Fixed,
                 },
             );
@@ -1234,6 +1294,7 @@ mod tests {
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
+                    rma_dereg: true,
                     planner: PlannerMode::Fixed,
                 },
             );
@@ -1296,6 +1357,7 @@ mod tests {
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
+                    rma_dereg: true,
                     planner: PlannerMode::Fixed,
                 },
             );

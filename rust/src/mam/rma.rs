@@ -48,6 +48,38 @@ impl DrainReads {
     }
 }
 
+/// Per-redistribution knobs of the chunked RMA lifecycle pipeline
+/// (`--rma-chunk`): segment size plus which halves of the window
+/// lifecycle ride in the background.  `chunk_elems = 0` is the seed
+/// unchunked path regardless of the other flags.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LifecycleOpts {
+    /// Segment size in elements (0 = unchunked, the seed path).
+    pub chunk_elems: u64,
+    /// Pipelined deregistration (`--rma-dereg on`, the default for
+    /// chunked runs): pool-off frees deregister per segment as the
+    /// last reads land.  `false` reproduces the registration-only
+    /// pipeline (the pre-teardown behaviour), bit for bit.
+    pub dereg_pipeline: bool,
+    /// Spawn-overlapped registration: background streams start at each
+    /// rank's own fill end (set for chunked grows under
+    /// `--spawn-strategy async`; `false` everywhere else).
+    pub eager_reg: bool,
+}
+
+impl LifecycleOpts {
+    /// The registration-only pipeline of a given chunk size (teardown
+    /// blocking, streams starting at the collective exit).
+    pub fn reg_only(chunk_elems: u64) -> LifecycleOpts {
+        LifecycleOpts { chunk_elems, dereg_pipeline: false, eager_reg: false }
+    }
+
+    /// The full lifecycle pipeline of a given chunk size.
+    pub fn full(chunk_elems: u64) -> LifecycleOpts {
+        LifecycleOpts { chunk_elems, dereg_pipeline: true, eager_reg: false }
+    }
+}
+
 /// State carried between `Init_RMA` and `Complete_RMA` (§IV-C).
 pub struct RmaInit {
     /// One window per registry entry (all ranks).
@@ -62,6 +94,9 @@ pub struct RmaInit {
     /// Window-pool policy the windows were acquired under — the frees
     /// in `Complete_RMA` must match it (§VI window pool).
     pub policy: WinPoolPolicy,
+    /// Lifecycle pipeline the windows were opened under — the local
+    /// frees in `Complete_RMA` mirror its teardown half.
+    pub lifecycle: LifecycleOpts,
 }
 
 /// Allocate the drain-side receive buffer for one entry (Algorithm 1
@@ -190,7 +225,28 @@ pub fn redistribute_pipelined(
     policy: WinPoolPolicy,
     chunk_elems: u64,
 ) -> Vec<Option<Payload>> {
-    redistribute_rma(proc, merged, roles, registry, which, lockall, policy, chunk_elems)
+    let opts = LifecycleOpts::reg_only(chunk_elems);
+    redistribute_rma(proc, merged, roles, registry, which, lockall, policy, opts)
+}
+
+/// Full-lifecycle chunked RMA redistribution: the registration
+/// pipeline of [`redistribute_pipelined`] plus, per [`LifecycleOpts`],
+/// pipelined deregistration (segments unpin as their last reads land,
+/// so retiring ranks on a shrink exit after `max(T_dereg, T_wire)`)
+/// and spawn-overlapped registration streams (`eager_reg`).
+/// `chunk_elems = 0` is [`redistribute_blocking`], bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn redistribute_lifecycle(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+    policy: WinPoolPolicy,
+    opts: LifecycleOpts,
+) -> Vec<Option<Payload>> {
+    redistribute_rma(proc, merged, roles, registry, which, lockall, policy, opts)
 }
 
 /// The one blocking RMA redistribution loop behind both entry points:
@@ -206,13 +262,21 @@ fn redistribute_rma(
     which: &[usize],
     lockall: bool,
     policy: WinPoolPolicy,
-    chunk_elems: u64,
+    opts: LifecycleOpts,
 ) -> Vec<Option<Payload>> {
+    let chunk_elems = opts.chunk_elems;
     let wins: Vec<WinId> = which
         .iter()
         .map(|&i| {
-            winpool::acquire_entry_window_pipelined(
-                proc, merged, roles, registry, i, policy, chunk_elems,
+            winpool::acquire_entry_window_cfg(
+                proc,
+                merged,
+                roles,
+                registry,
+                i,
+                policy,
+                chunk_elems,
+                opts.eager_reg,
             )
         })
         .collect();
@@ -251,7 +315,7 @@ fn redistribute_rma(
             out.push(None);
         }
     }
-    winpool::close_windows(proc, &wins, policy);
+    winpool::close_windows_cfg(proc, &wins, policy, chunk_elems > 0 && opts.dereg_pipeline);
     out
 }
 
@@ -354,14 +418,40 @@ pub fn init_rma(
     policy: WinPoolPolicy,
     chunk_elems: u64,
 ) -> RmaInit {
+    let opts = LifecycleOpts::reg_only(chunk_elems);
+    init_rma_lifecycle(proc, merged, roles, registry, which, lockall, policy, opts)
+}
+
+/// [`init_rma`] under the full [`LifecycleOpts`]: spawn-overlapped
+/// registration streams at init time, pipelined deregistration at the
+/// `Complete_RMA` local frees.
+#[allow(clippy::too_many_arguments)]
+pub fn init_rma_lifecycle(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+    policy: WinPoolPolicy,
+    opts: LifecycleOpts,
+) -> RmaInit {
+    let chunk_elems = opts.chunk_elems;
     let mut wins = Vec::with_capacity(which.len());
     let mut reqs = Vec::new();
     let mut reads = Vec::with_capacity(which.len());
     let mut epochs = Vec::new();
     for (k, &i) in which.iter().enumerate() {
         let e = registry.entry(i);
-        let win = winpool::acquire_entry_window_pipelined(
-            proc, merged, roles, registry, i, policy, chunk_elems,
+        let win = winpool::acquire_entry_window_cfg(
+            proc,
+            merged,
+            roles,
+            registry,
+            i,
+            policy,
+            chunk_elems,
+            opts.eager_reg,
         );
         wins.push(win);
         if roles.is_drain() {
@@ -385,7 +475,7 @@ pub fn init_rma(
             reads.push(None);
         }
     }
-    RmaInit { wins, reqs, reads, epochs, policy }
+    RmaInit { wins, reqs, reads, epochs, policy, lifecycle: opts }
 }
 
 /// Close the epochs opened by [`init_rma`] (called once the drain's
@@ -406,9 +496,12 @@ pub fn close_epochs(proc: &MpiProc, init: &RmaInit) {
 
 /// Free every window locally (Wait-Drains path: the global barrier has
 /// already synchronized, §IV-C).  Pool-acquired windows are released
-/// back to the pool instead of deregistered.
+/// back to the pool instead of deregistered; under the lifecycle
+/// pipeline, pool-off frees charge only the dereg stream's residual
+/// (segments have been unpinning since their last reads landed).
 pub fn free_windows_local(proc: &MpiProc, init: &RmaInit) {
-    winpool::close_windows_local(proc, &init.wins, init.policy);
+    let piped = init.lifecycle.chunk_elems > 0 && init.lifecycle.dereg_pipeline;
+    winpool::close_windows_local_cfg(proc, &init.wins, init.policy, piped);
 }
 
 /// Turn completed drain reads into the new local payloads.

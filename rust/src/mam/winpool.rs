@@ -131,29 +131,74 @@ pub fn acquire_entry_window_pipelined(
     policy: WinPoolPolicy,
     chunk_elems: u64,
 ) -> WinId {
+    acquire_entry_window_cfg(proc, comm, roles, registry, i, policy, chunk_elems, false)
+}
+
+/// [`acquire_entry_window_pipelined`] with the spawn-overlap policy:
+/// `eager_reg` starts each rank's background registration stream at
+/// its own fill end instead of the collective exit — set for chunked
+/// RMA grows under `--spawn-strategy async`, where the sources'
+/// streams then overlap the spawned ranks' staggered startup (see
+/// [`MpiProc::win_create_pipelined_opts`]).
+///
+/// [`MpiProc::win_create_pipelined_opts`]: crate::simmpi::MpiProc::win_create_pipelined_opts
+#[allow(clippy::too_many_arguments)]
+pub fn acquire_entry_window_cfg(
+    proc: &MpiProc,
+    comm: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    i: usize,
+    policy: WinPoolPolicy,
+    chunk_elems: u64,
+    eager_reg: bool,
+) -> WinId {
     if chunk_elems == 0 {
         return acquire_entry_window(proc, comm, roles, registry, i, policy);
     }
     let exposure = entry_exposure(roles, registry, i);
     if policy.enabled {
-        proc.win_acquire_pipelined(
+        proc.win_acquire_pipelined_opts(
             comm,
             exposure,
             pin_token(&registry.entry(i).name),
             policy.cap,
             chunk_elems,
+            eager_reg,
         )
     } else {
-        proc.win_create_pipelined(comm, exposure, chunk_elems)
+        proc.win_create_pipelined_opts(comm, exposure, chunk_elems, eager_reg)
     }
 }
 
 /// Collectively close a set of windows: `win_release` keeps the
 /// registrations pooled, `win_free` (pool off) deregisters.
 pub fn close_windows(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
+    close_windows_cfg(proc, wins, policy, false)
+}
+
+/// [`close_windows`] with the teardown half of the `--rma-chunk`
+/// lifecycle pipeline: under `dereg_pipeline`, pool-off frees go
+/// through [`MpiProc::win_free_pipelined`] — segments deregister in
+/// the background as their last reads land instead of serially after
+/// the closing barrier.  Pooled releases skip per-byte deregistration
+/// entirely (the slot keeps its memory pinned; per-segment warmth via
+/// `warm_prefix_bytes` means a later pipelined acquire re-registers
+/// only what the pin no longer covers), so they take the plain release
+/// either way.
+///
+/// [`MpiProc::win_free_pipelined`]: crate::simmpi::MpiProc::win_free_pipelined
+pub fn close_windows_cfg(
+    proc: &MpiProc,
+    wins: &[WinId],
+    policy: WinPoolPolicy,
+    dereg_pipeline: bool,
+) {
     for win in wins {
         if policy.enabled {
             proc.win_release(*win);
+        } else if dereg_pipeline {
+            proc.win_free_pipelined(*win);
         } else {
             proc.win_free(*win);
         }
@@ -163,9 +208,22 @@ pub fn close_windows(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
 /// Local-only close (Wait-Drains path: the confirmation barrier
 /// already synchronized, §IV-C).
 pub fn close_windows_local(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
+    close_windows_local_cfg(proc, wins, policy, false)
+}
+
+/// [`close_windows_local`] with the pipelined-teardown policy of
+/// [`close_windows_cfg`].
+pub fn close_windows_local_cfg(
+    proc: &MpiProc,
+    wins: &[WinId],
+    policy: WinPoolPolicy,
+    dereg_pipeline: bool,
+) {
     for win in wins {
         if policy.enabled {
             proc.win_release_local(*win);
+        } else if dereg_pipeline {
+            proc.win_free_local_pipelined(*win);
         } else {
             proc.win_free_local(*win);
         }

@@ -148,6 +148,16 @@ pub struct ReconfigCase {
     /// Seconds every source stays blocked in the spawn phase (0 for
     /// shrinks; [`SpawnSchedule::source_block`] for grows).
     pub spawn_block: f64,
+    /// Seconds the spawn phase keeps running *after* the sources
+    /// resume (`last_child_up − source_block`, clamped at 0; nonzero
+    /// only for asynchronous spawning).  The redistribution's first
+    /// collective cannot complete before the last spawned rank is up,
+    /// so this gates the redistribution start — but one-sided
+    /// registration is local and overlaps it (sources pin while the
+    /// targets are still starting; with chunked registration the
+    /// background streams ride this window too — the spawn-overlap
+    /// term of the lifecycle pipeline).
+    pub spawn_tail: f64,
 }
 
 /// Structural knobs of one redistribution candidate — the shape of a
@@ -277,34 +287,58 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
     // collective call.
     let rounds = (usize::BITS - (n - 1).leading_zeros()) as f64;
     let sync = rounds * (alpha + 16.0 * beta);
-    let (registration, mut protocol, teardown) = if s.one_sided {
+    let (mut registration, mut protocol, teardown) = if s.one_sided {
         let mut registration = 0.0;
         let mut teardown = 0.0;
-        // Chunked pipelining: background-registered bytes accumulate
-        // here and are overlapped with the wire after the loop.
+        // Chunked pipelining: background-registered (and, on teardown,
+        // background-deregistered) bytes accumulate per source rank —
+        // each rank's stream runs on its own engine, so the bottleneck
+        // rank (the largest exposure) is what rides against the wire
+        // after the loop.  Pricing the fill per rank rather than from
+        // rank 0 alone keeps uneven shapes honest: the collective gate
+        // is the true per-rank maximum.
         let chunk = s.chunk_bytes as f64;
-        let mut rest_total = 0.0;
+        let mut rest_by_rank = vec![0.0f64; c.ns];
+        let mut dereg_by_rank = vec![0.0f64; c.ns];
         let mut extra_get_ops = 0.0;
         for &b in &c.bulk_bytes {
-            // Win_create: everyone pins in parallel, the slowest rank
-            // (the largest source exposure — rank 0) gates the exit.
-            let (i0, e0) = pred_block(b, c.ns, 0);
             let (d0, de) = pred_block(b, c.nd, 0);
-            let (src, recv) = ((e0 - i0) as f64, (de - d0) as f64);
+            let recv = (de - d0) as f64;
             let warm = s.pool && c.warm;
-            registration += sync
-                + if warm {
+            // Win_create: everyone pins in parallel after arriving; the
+            // slowest rank's fill gates the collective exit.
+            let mut fill_max = 0.0f64;
+            // Serial per-byte dereg of ranks the chunking leaves
+            // unsegmented (their exposure fits one segment).
+            let mut serial_dereg_max = 0.0f64;
+            for r in 0..c.ns {
+                let (i0, e0) = pred_block(b, c.ns, r);
+                let src = (e0 - i0) as f64;
+                let fill = if warm {
                     p.win_setup
                 } else if chunk > 0.0 && src > chunk {
                     // Fill: setup + the first segment only; the rest of
                     // the exposure registers in the background (one
                     // extra setup per later segment).
                     let n_seg = (src / chunk).ceil();
-                    rest_total += (n_seg - 1.0) * p.win_setup + (src - chunk) * p.beta_register;
+                    rest_by_rank[r] +=
+                        (n_seg - 1.0) * p.win_setup + (src - chunk) * p.beta_register;
                     p.win_setup + chunk * p.beta_register
                 } else {
                     p.win_setup + src * p.beta_register
                 };
+                fill_max = fill_max.max(fill);
+                if !s.pool {
+                    if chunk > 0.0 && src > chunk {
+                        // Pipelined teardown: this rank's per-byte
+                        // dereg rides the wire as a background stream.
+                        dereg_by_rank[r] += src * p.beta_register / 3.0;
+                    } else {
+                        serial_dereg_max = serial_dereg_max.max(src * p.beta_register / 3.0);
+                    }
+                }
+            }
+            registration += sync + fill_max;
             if chunk > 0.0 && recv > chunk {
                 // One Get per touched segment instead of one per source.
                 extra_get_ops += ((recv / chunk).ceil() - accessed as f64).max(0.0);
@@ -318,13 +352,25 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
                     p.win_setup * 0.5
                         + if c.warm { 0.0 } else { p.win_setup + recv * p.beta_register }
                 } else {
-                    p.win_setup * 0.5 + src * p.beta_register / 3.0
+                    p.win_setup * 0.5 + serial_dereg_max
                 };
         }
-        if rest_total > 0.0 {
-            // Pipeline drain: the background stream runs concurrently
-            // with the wire — only its excess stays on the span.
-            registration += (rest_total - wire).max(0.0);
+        let rest_max = rest_by_rank.iter().fold(0.0f64, |a, &b| a.max(b));
+        if rest_max > 0.0 {
+            // Pipeline drain: the bottleneck rank's background stream
+            // runs concurrently with the wire (and, under asynchronous
+            // spawning, with the spawn tail — the eager streams start
+            // at each rank's own fill) — only its excess stays serial.
+            let overlap = wire + if chunk > 0.0 { c.spawn_tail } else { 0.0 };
+            registration += (rest_max - overlap).max(0.0);
+        }
+        let dereg_max = dereg_by_rank.iter().fold(0.0f64, |a, &b| a.max(b));
+        if dereg_max > 0.0 {
+            // The dereg streams ride whatever wire the registration
+            // streams left uncovered; the rest is the teardown residual
+            // (the last segments' unpin after the final reads land).
+            let slack = (wire - rest_max).max(0.0);
+            teardown += (dereg_max - slack).max(0.0);
         }
         let epochs = if s.lock_per_target {
             2.0 * p.epoch_cost * accessed as f64
@@ -345,15 +391,32 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
         if s.pool {
             // COL creates no windows, but register-on-receive still
             // pins the received blocks inside the span when the pool
-            // is enabled (warming later RMA resizes).
+            // is enabled (warming later RMA resizes).  Priced per
+            // drain rank; the bottleneck (largest block) is the term.
             for &b in &c.bulk_bytes {
-                let (d0, de) = pred_block(b, c.nd, 0);
-                teardown +=
-                    if c.warm { 0.0 } else { p.win_setup + (de - d0) as f64 * p.beta_register };
+                let mut pin_max = 0.0f64;
+                for r in 0..c.nd {
+                    let (d0, de) = pred_block(b, c.nd, r);
+                    pin_max = pin_max
+                        .max(p.win_setup + (de - d0) as f64 * p.beta_register);
+                }
+                teardown += if c.warm { 0.0 } else { pin_max };
             }
         }
         (0.0, protocol, teardown)
     };
+    // Asynchronous spawning leaves the spawn phase running past the
+    // sources' release: the redistribution's first collective cannot
+    // complete before the last spawned rank is up.  One-sided
+    // registration is local and overlaps the tail (the gate is
+    // whichever is longer); two-sided candidates simply wait it out.
+    if c.spawn_tail > 0.0 {
+        if s.one_sided {
+            registration = registration.max(c.spawn_tail);
+        } else {
+            protocol += c.spawn_tail;
+        }
+    }
     if s.threading {
         // §V-D: MT passive-target progress is the worst MPICH path for
         // RMA; collectives crawl under the contended global lock.
@@ -711,6 +774,7 @@ mod tests {
             t_iter_src: 0.05,
             t_iter_dst: 0.02,
             spawn_block: 0.0,
+            spawn_tail: 0.0,
         }
     }
 
@@ -838,6 +902,79 @@ mod tests {
             a.reconf_time,
             b.reconf_time
         );
+    }
+
+    #[test]
+    fn chunked_prediction_pipelines_the_teardown_too() {
+        // Cold one-sided with large per-source exposures: the chunked
+        // shape's dereg streams ride the wire, so its teardown term
+        // must drop well below the unchunked serial dereg — down to
+        // the fixed per-window costs plus any residual.
+        let p = NetParams::sarteco25();
+        let blocking = predict_reconfig(&p, &case(20, 160), &shape(true));
+        let mut s = shape(true);
+        s.chunk_bytes = 4 << 20;
+        let piped = predict_reconfig(&p, &case(20, 160), &s);
+        assert!(
+            piped.teardown < 0.5 * blocking.teardown,
+            "teardown not pipelined: {} vs {}",
+            piped.teardown,
+            blocking.teardown
+        );
+        // The wire is untouched either way.
+        assert_eq!(piped.wire.to_bits(), blocking.wire.to_bits());
+    }
+
+    #[test]
+    fn per_rank_fill_pricing_matches_the_rank0_bottleneck_on_block_shapes() {
+        // Under the block scheme rank 0 always carries the largest
+        // exposure, so the per-rank maximum must coincide with the
+        // historical rank-0 pricing on even and uneven shapes alike —
+        // while staying finite/positive on degenerate ones (more
+        // sources than elements: some ranks expose nothing).
+        let p = NetParams::sarteco25();
+        for (ns, nd) in [(3usize, 7usize), (7, 3), (160, 20)] {
+            let mut c = case(ns, nd);
+            c.bulk_bytes = vec![1_000_003, 64];
+            for chunk in [0u64, 4 << 10] {
+                let mut s = shape(true);
+                s.chunk_bytes = chunk;
+                let pr = predict_reconfig(&p, &c, &s);
+                assert!(pr.registration.is_finite() && pr.registration > 0.0, "{pr:?}");
+                assert!(pr.teardown.is_finite() && pr.teardown > 0.0, "{pr:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn spawn_tail_gates_redistribution_but_overlaps_one_sided_registration() {
+        let p = NetParams::sarteco25();
+        let mut c = case(20, 160);
+        let base_rma = predict_reconfig(&p, &c, &shape(true));
+        let base_col = predict_reconfig(&p, &c, &shape(false));
+        c.spawn_tail = 10.0; // far beyond any registration time
+        let rma = predict_reconfig(&p, &c, &shape(true));
+        let col = predict_reconfig(&p, &c, &shape(false));
+        // Two-sided waits out the whole tail.
+        assert!(
+            col.reconf_time - base_col.reconf_time >= 10.0 - 1e-9,
+            "{} vs {}",
+            col.reconf_time,
+            base_col.reconf_time
+        );
+        // One-sided hides its registration inside the tail: the span
+        // grows by less than the tail (the registration overlapped).
+        assert!(rma.reconf_time > base_rma.reconf_time);
+        assert!(
+            rma.reconf_time - base_rma.reconf_time < 10.0,
+            "registration did not overlap the spawn tail: {} vs {}",
+            rma.reconf_time,
+            base_rma.reconf_time
+        );
+        // A tail shorter than the registration is fully hidden.
+        c.spawn_tail = base_rma.registration * 0.5;
+        let hidden = predict_reconfig(&p, &c, &shape(true));
+        assert_eq!(hidden.registration.to_bits(), base_rma.registration.to_bits());
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct RunSpec {
     /// Chunked pipelined RMA registration (`--rma-chunk`): segment
     /// size in KiB, 0 = off (the seed unchunked path, bit for bit).
     pub rma_chunk_kib: u64,
+    /// Teardown half of the chunked lifecycle pipeline
+    /// (`--rma-dereg`, default on): pool-off `Win_free`s deregister
+    /// per segment as the last reads land.  `false` keeps the
+    /// registration-only pipeline.  Ignored when `rma_chunk_kib == 0`.
+    pub rma_dereg: bool,
     /// `--planner auto|fixed`: `Auto` lets the cost-model planner
     /// override method/strategy/spawn/pool for this pair (resolved
     /// once, before the simulation, with DES micro-probe refinement);
@@ -84,6 +89,7 @@ impl RunSpec {
             seed: 0xC0FFEE,
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         }
     }
@@ -268,6 +274,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
         rma_chunk_kib: spec.rma_chunk_kib,
+        rma_dereg: spec.rma_dereg,
         planner: spec.planner,
     };
     let mut mam = Mam::new(reg, mam_cfg.clone());
@@ -339,6 +346,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
         spawn_strategy: spec.spawn_strategy,
         win_pool: spec.win_pool,
         rma_chunk_kib: spec.rma_chunk_kib,
+        rma_dereg: spec.rma_dereg,
         planner: spec.planner,
     };
     let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
@@ -426,6 +434,7 @@ mod tests {
             seed: 1,
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         }
     }

@@ -31,7 +31,20 @@ pub(crate) enum Contrib {
     /// holds the remaining segments' durations, registered in the
     /// background after the rank resumes — the pipelined-redistribution
     /// mechanism that hides registration latency behind the wire.
-    RegPipeline { first: f64, rest: Vec<f64> },
+    /// `eager` starts the background stream at this rank's *own* fill
+    /// end (`arrival + first`) instead of the collective exit: under
+    /// asynchronous spawning the sources' registration streams then
+    /// overlap the spawned ranks' staggered startup and merge round
+    /// (pinning is local — it needs no remote participant).
+    RegPipeline { first: f64, rest: Vec<f64>, eager: bool },
+    /// Chunked pipelined Win_free: the closing barrier alone gates the
+    /// dissemination schedule; the per-segment deregistrations (`segs`)
+    /// run as a background stream gated per segment on the last read
+    /// touching it (see `WinState::dereg_eligibility`), and only the
+    /// stream's excess over the barrier — plus the `fixed` window
+    /// teardown — lands on the rank's completion (computed by the last
+    /// arriver in `MpiProc::coll_post`, which has the window state).
+    DeregPipeline { segs: Vec<f64>, fixed: f64 },
     /// Allgather: this rank's block.
     Block(Payload),
     /// Alltoallv / Ialltoallv: payload destined to each member.
@@ -219,13 +232,19 @@ impl CollState {
                 (t, vec![CollResult::None; self.n])
             }
             CollKind::WinFree => {
-                // Deregistration after a closing barrier.
+                // Deregistration after a closing barrier.  Pipelined
+                // contributions add nothing here: their per-segment
+                // stream is reconciled against the window's read/
+                // registration record by the last arriver (coll_post),
+                // which raises the rank's completion only by the
+                // stream's residual.
                 let t0 = dissemination(cost, placement, gpids, &arrivals);
                 let t = t0
                     .iter()
                     .zip(self.contribs.iter())
                     .map(|(t, c)| match c {
                         Some(Contrib::RegTime(r)) => t + r,
+                        Some(Contrib::DeregPipeline { .. }) => *t,
                         _ => *t,
                     })
                     .collect();
@@ -547,7 +566,7 @@ mod tests {
         cs.arrive(
             0,
             0.0,
-            Contrib::RegPipeline { first: 0.1, rest: vec![2.5, 2.5] },
+            Contrib::RegPipeline { first: 0.1, rest: vec![2.5, 2.5], eager: false },
         );
         cs.arrive(1, 0.0, Contrib::RegTime(0.05));
         cs.schedule(&mut cost, &pl, &g);
@@ -555,6 +574,33 @@ mod tests {
         assert!(cs.completion_of(0).unwrap() < 1.0);
         assert!(cs.completion_of(1).unwrap() < 1.0);
         assert!(cs.completion_of(0).unwrap() >= 0.1);
+    }
+
+    #[test]
+    fn win_free_dereg_pipeline_gates_on_the_barrier_only() {
+        let (mut cost, pl, g) = setup(2);
+        // Blocking free: barrier + the full serial deregistration.
+        let mut blocking = CollState::new(CollKind::WinFree, 2);
+        blocking.arrive(0, 0.0, Contrib::RegTime(5.0));
+        blocking.arrive(1, 0.0, Contrib::RegTime(0.0));
+        blocking.schedule(&mut cost, &pl, &g);
+        let b0 = blocking.completion_of(0).unwrap();
+        // Pipelined free: the same 5 s of deregistration rides in the
+        // background — the schedule itself charges the barrier only
+        // (the residual is reconciled later by the last arriver).
+        let (mut cost2, pl2, g2) = setup(2);
+        let mut piped = CollState::new(CollKind::WinFree, 2);
+        piped.arrive(0, 0.0, Contrib::DeregPipeline { segs: vec![2.5, 2.5], fixed: 0.0 });
+        piped.arrive(1, 0.0, Contrib::RegTime(0.0));
+        piped.schedule(&mut cost2, &pl2, &g2);
+        let p0 = piped.completion_of(0).unwrap();
+        assert!(p0 < 1.0, "pipelined free must not serialize the dereg: {p0}");
+        assert!(b0 >= 5.0, "blocking free must serialize the dereg: {b0}");
+        assert_eq!(
+            piped.completion_of(1).unwrap().to_bits(),
+            blocking.completion_of(1).unwrap().to_bits(),
+            "non-pipelined participants see the same barrier"
+        );
     }
 
     #[test]

@@ -81,6 +81,49 @@ fn segment_regs(
     plan
 }
 
+/// Per-segment deregistration durations of a chunked exposure (the
+/// teardown mirror of [`segment_regs`]): segment `s`'s per-byte unpin
+/// time, aligned to the same chunk boundaries the registration stream
+/// used.  The fixed window-teardown cost is charged separately, once.
+fn segment_deregs(cost: &crate::netmodel::CostModel, elems: u64, chunk: u64) -> Vec<f64> {
+    let n_seg = elems.div_ceil(chunk);
+    (0..n_seg)
+        .map(|s| {
+            let len = (elems - s * chunk).min(chunk);
+            (len * super::types::ELEM_BYTES) as f64 * cost.params.beta_register / 3.0
+        })
+        .collect()
+}
+
+/// Serial walk of one rank's per-segment deregistration stream:
+/// segment `s` begins at `max(previous segment's end, elig[s])` and
+/// takes `segs[s]` seconds on the rank's dereg engine.  Returns each
+/// segment's absolute completion time (empty iff `segs` is empty).
+fn dereg_stream(elig: &[Time], segs: &[f64]) -> Vec<Time> {
+    let mut t = 0.0f64;
+    let mut done = Vec::with_capacity(segs.len());
+    for (s, d) in segs.iter().enumerate() {
+        t = t.max(elig.get(s).copied().unwrap_or(0.0)) + d;
+        done.push(t);
+    }
+    done
+}
+
+/// Bounded sample of a stream's completion times — the `winreg-*` /
+/// `windereg-*` engine activities walk these instead of every segment
+/// (keeps the event count O(1) per stream regardless of chunk count).
+fn sample_stream(done: &[Time]) -> Vec<Time> {
+    let Some(&last) = done.last() else {
+        return Vec::new();
+    };
+    let stride = done.len().div_ceil(32).max(1);
+    let mut pts: Vec<Time> = done.iter().copied().step_by(stride).collect();
+    if pts.last() != Some(&last) {
+        pts.push(last);
+    }
+    pts
+}
+
 /// Handle to one simulated MPI process (or its auxiliary thread).
 pub struct MpiProc {
     pub(crate) ctx: ActivityCtx,
@@ -424,15 +467,23 @@ impl MpiProc {
                 // background segment-registration stream as absolute
                 // ready times *before any participant resumes* — Gets
                 // posted right after the collective gate on these (the
-                // chunked pipelined redistribution path).
+                // chunked pipelined redistribution path).  An `eager`
+                // contribution starts its stream at the rank's own
+                // fill end instead of the collective exit: pinning is
+                // local, so under asynchronous spawning the sources
+                // register while the spawned ranks are still starting.
                 if cs.kind == CollKind::WinCreate {
                     if let (Some(win), Some(completion)) = (cs.win_id, cs.completion.as_ref()) {
                         for (r, c) in cs.contribs.iter().enumerate() {
-                            if let Some(Contrib::RegPipeline { rest, .. }) = c {
+                            if let Some(Contrib::RegPipeline { first, rest, eager }) = c {
                                 if rest.is_empty() {
                                     continue;
                                 }
-                                let mut t = completion[r];
+                                let mut t = if *eager {
+                                    cs.arrivals[r].expect("arrived") + first
+                                } else {
+                                    completion[r]
+                                };
                                 let mut ready = Vec::with_capacity(rest.len() + 1);
                                 ready.push(t);
                                 for d in rest {
@@ -440,6 +491,42 @@ impl MpiProc {
                                     ready.push(t);
                                 }
                                 w.windows[win.0].seg_ready[r] = ready;
+                            }
+                        }
+                    }
+                }
+                // Pipelined Win_free: the schedule above charged the
+                // closing barrier only.  Reconcile each pipelined
+                // rank's per-segment deregistration stream against the
+                // window's read/registration record: segment `s`
+                // deregisters once the last read touching it has
+                // landed (and its own registration finished), the
+                // stream runs serially on the rank's dereg engine as a
+                // `windereg-*` background activity, and only its
+                // excess over the barrier — plus the fixed teardown —
+                // lands on the rank's completion.  Retiring ranks on a
+                // shrink thus exit after `max(T_dereg, T_wire)`
+                // instead of `T_wire + T_dereg`.
+                if cs.kind == CollKind::WinFree {
+                    if let (Some(win), Some(completion)) = (cs.win_id, cs.completion.as_mut()) {
+                        for (r, c) in cs.contribs.iter().enumerate() {
+                            if let Some(Contrib::DeregPipeline { segs, fixed }) = c {
+                                let elig = w.windows[win.0].dereg_eligibility(r);
+                                let done = dereg_stream(&elig, segs);
+                                let end = done.last().copied().unwrap_or(0.0);
+                                completion[r] = completion[r].max(end) + fixed;
+                                let pts = sample_stream(&done);
+                                if !pts.is_empty() {
+                                    let gp = w.comm(comm).gpids[r];
+                                    self.ctx.spawn(
+                                        format!("windereg-g{gp}-w{}", win.0),
+                                        move |ctx| {
+                                            for t in pts {
+                                                ctx.advance_until(t);
+                                            }
+                                        },
+                                    );
+                                }
                             }
                         }
                     }
@@ -828,6 +915,23 @@ impl MpiProc {
     /// `chunk_elems = 0` (or a single-segment exposure) falls back to
     /// the seed [`MpiProc::win_create`] path bit-identically.
     pub fn win_create_pipelined(&self, comm: CommId, payload: Payload, chunk_elems: u64) -> WinId {
+        self.win_create_pipelined_opts(comm, payload, chunk_elems, false)
+    }
+
+    /// [`MpiProc::win_create_pipelined`] with an explicit stream-start
+    /// policy: `eager` starts this rank's background registration
+    /// stream at its *own* fill end instead of the collective exit
+    /// (pinning is local), so under `--spawn-strategy async` the
+    /// sources' streams overlap the spawned ranks' staggered startup
+    /// and merge round.  `eager = false` is bit-identical to
+    /// [`MpiProc::win_create_pipelined`].
+    pub fn win_create_pipelined_opts(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        chunk_elems: u64,
+        eager: bool,
+    ) -> WinId {
         if chunk_elems == 0 || payload.elems() <= chunk_elems {
             return self.win_create(comm, payload);
         }
@@ -839,7 +943,7 @@ impl MpiProc {
             Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
             (plan.first, plan.rest)
         };
-        let contrib = Contrib::RegPipeline { first, rest };
+        let contrib = Contrib::RegPipeline { first, rest, eager };
         let win = self.win_open(comm, payload, contrib, false, chunk_elems);
         self.progress_release();
         win
@@ -858,6 +962,20 @@ impl MpiProc {
         pin: u64,
         cap: usize,
         chunk_elems: u64,
+    ) -> WinId {
+        self.win_acquire_pipelined_opts(comm, payload, pin, cap, chunk_elems, false)
+    }
+
+    /// [`MpiProc::win_acquire_pipelined`] with the `eager` stream-start
+    /// policy of [`MpiProc::win_create_pipelined_opts`].
+    pub fn win_acquire_pipelined_opts(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        pin: u64,
+        cap: usize,
+        chunk_elems: u64,
+        eager: bool,
     ) -> WinId {
         if chunk_elems == 0 || payload.elems() <= chunk_elems {
             return self.win_acquire_capped(comm, payload, pin, cap);
@@ -883,16 +1001,31 @@ impl MpiProc {
                 w.win_pool.note_pipelined(plan.cold_segs, plan.warm_segs);
                 Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
                 let mut first = plan.first;
-                for b in evicted {
-                    let dereg = w.cost.window_free(b);
+                for ev in evicted {
+                    // A victim whose background registration stream is
+                    // still in flight cannot be deregistered yet: the
+                    // evicting rank waits out the remaining pinning
+                    // before charging the unpin.
+                    let dereg = w.cost.window_free(ev.bytes);
+                    let wait = (ev.reg_done_at - self.ctx.now()).max(0.0);
                     w.win_pool.note_evict_dereg(dereg);
-                    first += dereg;
+                    first += wait + dereg;
                 }
                 (first, plan.rest)
             }
         };
-        let contrib = Contrib::RegPipeline { first, rest };
+        let contrib = Contrib::RegPipeline { first, rest, eager };
         let win = self.win_open(comm, payload, contrib, true, chunk_elems);
+        // Record when this pin's background stream completes, so a
+        // later LRU eviction of the token cannot deregister segments
+        // that are still being pinned.
+        {
+            let mut w = self.world.lock().unwrap();
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            if let Some(t) = w.windows[win.0].reg_done(my_rank) {
+                w.win_pool.set_reg_done(self.gpid, pin, t);
+            }
+        }
         self.progress_release();
         win
     }
@@ -954,11 +1087,15 @@ impl MpiProc {
                 w.win_pool.note_acquire(false, reg, 0.0);
                 Self::note_registration(&mut w, bytes, reg);
                 // Cap evictions deregister the victims' buffers: the
-                // evicting rank pays the unpin before it is ready.
-                for b in evicted {
-                    let dereg = w.cost.window_free(b);
+                // evicting rank pays the unpin before it is ready —
+                // waiting out any still-running registration stream of
+                // the victim first (memory cannot be unpinned while it
+                // is still being pinned).
+                for ev in evicted {
+                    let dereg = w.cost.window_free(ev.bytes);
+                    let wait = (ev.reg_done_at - self.ctx.now()).max(0.0);
                     w.win_pool.note_evict_dereg(dereg);
-                    reg += dereg;
+                    reg += wait + dereg;
                 }
             }
             reg
@@ -1041,11 +1178,13 @@ impl MpiProc {
                 let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_pre_pin(dt);
                 Self::note_registration(&mut w, bytes, dt);
-                // Evicted victims are deregistered here, locally.
-                for b in evicted {
-                    let dereg = w.cost.window_free(b);
+                // Evicted victims are deregistered here, locally —
+                // after any in-flight registration stream of theirs.
+                for ev in evicted {
+                    let dereg = w.cost.window_free(ev.bytes);
+                    let wait = (ev.reg_done_at - self.ctx.now()).max(0.0);
                     w.win_pool.note_evict_dereg(dereg);
-                    dt += dereg;
+                    dt += wait + dereg;
                 }
                 dt
             }
@@ -1083,6 +1222,112 @@ impl MpiProc {
             w.windows[win.0].freed = true;
         }
         self.progress_release();
+    }
+
+    /// Chunked pipelined `MPI_Win_free` (the teardown half of the
+    /// `--rma-chunk` lifecycle pipeline): the closing synchronization
+    /// is the same collective as [`MpiProc::win_free`] — mixed
+    /// participants match — but this rank's per-byte deregistration
+    /// runs as a per-segment background stream (`windereg-*`, the
+    /// teardown mirror of `winreg-*`): segment `s` unpins once its own
+    /// registration finished and the last read touching it landed, so
+    /// on a shrink the retiring sources exit after
+    /// `max(T_dereg, T_wire)` instead of `T_wire + T_dereg`.  Ranks
+    /// whose exposure is unsegmented (NULL exposures, single-segment
+    /// exposures, unchunked windows) delegate to the seed
+    /// [`MpiProc::win_free`] path bit-identically.
+    pub fn win_free_pipelined(&self, win: WinId) {
+        if !self.teardown_segmented(win) {
+            return self.win_free(win);
+        }
+        self.mpi_prologue();
+        self.progress_acquire();
+        // No up-front await_reg_done: the per-segment eligibility
+        // (registration-ready ∨ last-read-done) gates the stream
+        // instead — that is exactly what makes the teardown overlap
+        // the wire.
+        let (comm, segs, fixed) = {
+            let mut w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            let elems = w.windows[win.0].exposures[my_rank].elems();
+            let chunk = w.windows[win.0].seg_elems;
+            let segs = segment_deregs(&w.cost, elems, chunk);
+            let fixed = w.cost.window_free(0);
+            w.windows[win.0].freed_local[my_rank] = true;
+            (comm, segs, fixed)
+        };
+        let (key, r) = self.coll_post(
+            comm,
+            CollKind::WinFree,
+            Contrib::DeregPipeline { segs, fixed },
+            move |_, cs, _| {
+                // The last arriver needs the window to reconcile the
+                // dereg streams (WinFree instances otherwise carry no
+                // window id).
+                if cs.win_id.is_none() {
+                    cs.win_id = Some(win);
+                }
+            },
+        );
+        self.coll_block(key, r);
+        {
+            let mut w = self.world.lock().unwrap();
+            w.windows[win.0].freed = true;
+        }
+        self.progress_release();
+    }
+
+    /// Local-only pipelined free (Wait-Drains path, the teardown
+    /// mirror of [`MpiProc::win_free_local`]): the confirmation
+    /// barrier already synchronized, and this rank's segments have
+    /// been deregistering in the background since their last reads
+    /// landed — only the stream's residual beyond `now` plus the
+    /// fixed teardown is charged.  Unsegmented ranks delegate to the
+    /// seed path bit-identically.
+    pub fn win_free_local_pipelined(&self, win: WinId) {
+        if !self.teardown_segmented(win) {
+            return self.win_free_local(win);
+        }
+        self.mpi_prologue();
+        let (end, fixed, my_rank, pts) = {
+            let w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            let elems = w.windows[win.0].exposures[my_rank].elems();
+            let chunk = w.windows[win.0].seg_elems;
+            let segs = segment_deregs(&w.cost, elems, chunk);
+            let elig = w.windows[win.0].dereg_eligibility(my_rank);
+            let done = dereg_stream(&elig, &segs);
+            let end = done.last().copied().unwrap_or(0.0);
+            (end, w.cost.window_free(0), my_rank, sample_stream(&done))
+        };
+        if !pts.is_empty() {
+            let gpid = self.gpid;
+            self.ctx.spawn(format!("windereg-g{gpid}-w{}", win.0), move |ctx| {
+                for t in pts {
+                    ctx.advance_until(t);
+                }
+            });
+        }
+        if end > self.ctx.now() {
+            self.ctx.advance_until(end);
+        }
+        self.ctx.advance(fixed);
+        let mut w = self.world.lock().unwrap();
+        w.windows[win.0].free_local(my_rank);
+    }
+
+    /// Precondition of the pipelined teardown: this rank's exposure in
+    /// `win` is segmented (more than one segment) and carries a
+    /// registration stream whose per-segment ready times gate the
+    /// deregistration.  Everything else takes the seed free path.
+    fn teardown_segmented(&self, win: WinId) -> bool {
+        let w = self.world.lock().unwrap();
+        let ws = &w.windows[win.0];
+        let comm = ws.comm;
+        let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+        ws.n_segs(my_rank) > 1 && !ws.seg_ready[my_rank].is_empty()
     }
 
     /// Local-only window release (Wait-Drains path: the closing
@@ -1172,6 +1417,9 @@ impl MpiProc {
             };
             let data = w.windows[win.0].read(target, disp, count);
             w.windows[win.0].track_get(self.gpid, target, arrival);
+            // Pipelined teardown bookkeeping: the target segment may
+            // deregister once this (and every other) read has landed.
+            w.windows[win.0].note_read(target, disp, count, arrival);
             (cpu_done, data)
         };
         // Deliver data now (window exposures are constant during the
@@ -1228,6 +1476,8 @@ impl MpiProc {
                 tt.arrival
             };
             let data = w.windows[win.0].read(target, disp, count);
+            // Pipelined teardown bookkeeping (as in `get`).
+            w.windows[win.0].note_read(target, disp, count, complete_at);
             let rid = w.requests.len();
             w.requests.push(ReqState::new(
                 self.gpid,
@@ -2108,6 +2358,128 @@ mod tests {
             assert!(p.now() >= 0.79, "free did not wait for registration: {}", p.now());
         });
         s.run().unwrap();
+    }
+
+    /// Shared body of the teardown tests: rank 0 exposes `elems`
+    /// chunked, rank 1 reads everything per segment, both free —
+    /// through the pipelined teardown or the seed blocking one.
+    fn lifecycle_end(elems: u64, chunk: u64, dereg_pipeline: bool) -> f64 {
+        let mut s = sim(2, 1); // one rank per node: inter-node wire
+        s.launch(2, move |p| {
+            let r = p.rank(WORLD);
+            let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
+            let win = p.win_create_pipelined(WORLD, expose, chunk);
+            if r == 1 {
+                let dest = recv_buf_virtual();
+                p.win_lock_all(win);
+                let mut off = 0u64;
+                while off < elems {
+                    let take = (elems - off).min(chunk);
+                    p.get(win, 0, off, take, &dest, 0);
+                    off += take;
+                }
+                p.win_unlock_all(win);
+            }
+            if dereg_pipeline {
+                p.win_free_pipelined(win);
+            } else {
+                p.win_free(win);
+            }
+        });
+        s.run().unwrap()
+    }
+
+    #[test]
+    fn pipelined_free_hides_dereg_behind_the_wire() {
+        // 100M elems = 0.8 GB: wire 0.8 s, dereg 0.8/3 ≈ 0.27 s.  The
+        // blocking free serializes the dereg after the last read; the
+        // pipelined free deregisters each segment as its last read
+        // lands, leaving only the final segment's residual.
+        let elems = 100_000_000u64;
+        let blocking = lifecycle_end(elems, 1_000_000, false);
+        let piped = lifecycle_end(elems, 1_000_000, true);
+        assert!(
+            piped < blocking - 0.2,
+            "pipelined teardown saved too little: piped={piped} blocking={blocking}"
+        );
+        // The wire still has to move every byte.
+        assert!(piped > 0.7, "piped={piped} implausibly fast");
+    }
+
+    #[test]
+    fn pipelined_free_is_deterministic_and_unsegmented_ranks_delegate() {
+        let a = lifecycle_end(4_000_000, 500_000, true);
+        let b = lifecycle_end(4_000_000, 500_000, true);
+        assert_eq!(a.to_bits(), b.to_bits());
+        // Single-segment exposures route through the seed win_free.
+        let plain = lifecycle_end(400_000, 500_000, false);
+        let via_pipe = lifecycle_end(400_000, 500_000, true);
+        assert_eq!(plain.to_bits(), via_pipe.to_bits());
+    }
+
+    #[test]
+    fn evicting_an_inflight_stream_waits_for_its_registration() {
+        // Token A's background registration stream runs ~0.8 s; a
+        // capped pin of token B evicts A while the stream is still
+        // pinning — the eviction must wait it out before charging the
+        // dereg (deregistering memory that is not yet registered would
+        // be nonsense).
+        let mut s = sim(1, 2);
+        s.launch(1, |p| {
+            let elems = 100_000_000u64; // 0.8 s of registration
+            let wa = p.win_acquire_pipelined(WORLD, Payload::virt(elems), 0xA, 1, 1_000_000);
+            assert!(p.now() < 0.1, "acquire must exit at the fill: {}", p.now());
+            let wb = p.win_acquire_pipelined(WORLD, Payload::virt(1_000_000), 0xB, 1, 1_000_000);
+            assert!(
+                p.now() >= 0.8,
+                "eviction must wait out A's in-flight stream: {}",
+                p.now()
+            );
+            p.win_release(wb);
+            p.win_release(wa);
+        });
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn eager_stream_starts_at_own_fill_end() {
+        // Two ranks arrive staggered at a pipelined create (the late
+        // rank stands in for a spawned process still starting).  Under
+        // the eager policy the early source's background stream starts
+        // at its own fill end instead of the collective exit, so the
+        // registration completes earlier and the free right after the
+        // create returns sooner.
+        fn end(eager: bool) -> f64 {
+            let mut s = sim(1, 2);
+            s.launch(2, move |p| {
+                let r = p.rank(WORLD);
+                if r == 1 {
+                    p.compute(0.5);
+                }
+                let expose = if r == 0 { Payload::virt(100_000_000) } else { Payload::virt(0) };
+                let win = p.win_create_pipelined_opts(WORLD, expose, 1_000_000, eager);
+                p.win_free(win); // waits for the stream
+            });
+            s.run().unwrap()
+        }
+        let lazy = end(false);
+        let eager = end(true);
+        assert!(eager < lazy - 0.3, "eager={eager} lazy={lazy}");
+        // The default policy is bit-identical to the 3-arg entry point.
+        fn end_default() -> f64 {
+            let mut s = sim(1, 2);
+            s.launch(2, move |p| {
+                let r = p.rank(WORLD);
+                if r == 1 {
+                    p.compute(0.5);
+                }
+                let expose = if r == 0 { Payload::virt(100_000_000) } else { Payload::virt(0) };
+                let win = p.win_create_pipelined(WORLD, expose, 1_000_000);
+                p.win_free(win);
+            });
+            s.run().unwrap()
+        }
+        assert_eq!(end(false).to_bits(), end_default().to_bits());
     }
 
     #[test]

@@ -45,6 +45,14 @@ pub(crate) struct WinState {
     /// start before `seg_ready[target][s]`; filled by the last arriver
     /// of the pipelined `Win_create` before any participant resumes.
     pub seg_ready: Vec<Vec<Time>>,
+    /// Per-rank, per-segment latest *read completion* targeting that
+    /// segment of the rank's exposure (empty = no segmented reads).
+    /// Unlike `pending_gets` this survives the epoch flush — it feeds
+    /// the pipelined teardown: a segment may deregister once its last
+    /// read has landed (and its own registration finished), so on
+    /// shrinks the `Win_free` per-byte deregistration rides the wire
+    /// instead of serializing after it.
+    pub seg_read_done: Vec<Vec<Time>>,
 }
 
 impl WinState {
@@ -58,6 +66,7 @@ impl WinState {
             mt: false,
             seg_elems: 0,
             seg_ready: (0..n).map(|_| Vec::new()).collect(),
+            seg_read_done: (0..n).map(|_| Vec::new()).collect(),
         }
     }
 
@@ -76,6 +85,55 @@ impl WinState {
         self.mt = false;
         self.seg_elems = 0;
         self.seg_ready = (0..n).map(|_| Vec::new()).collect();
+        self.seg_read_done = (0..n).map(|_| Vec::new()).collect();
+    }
+
+    /// Number of segments of `rank`'s exposure under the window's
+    /// chunking (0 for unsegmented windows and NULL exposures).
+    pub fn n_segs(&self, rank: usize) -> u64 {
+        if self.seg_elems == 0 {
+            0
+        } else {
+            self.exposures[rank].elems().div_ceil(self.seg_elems)
+        }
+    }
+
+    /// Record the completion of a read of `[disp, disp+count)` from
+    /// `target`'s exposure (pipelined teardown bookkeeping; no-op for
+    /// unsegmented windows).  Uses a commutative `max` per segment, so
+    /// the record is deterministic regardless of posting order.
+    pub fn note_read(&mut self, target: usize, disp: u64, count: u64, arrival: Time) {
+        if self.seg_elems == 0 || count == 0 {
+            return;
+        }
+        let n_seg = self.n_segs(target) as usize;
+        if n_seg == 0 {
+            return;
+        }
+        let done = &mut self.seg_read_done[target];
+        if done.is_empty() {
+            done.resize(n_seg, 0.0);
+        }
+        let first = (disp / self.seg_elems) as usize;
+        let last = ((disp + count - 1) / self.seg_elems) as usize;
+        for d in done.iter_mut().take(last + 1).skip(first) {
+            *d = d.max(arrival);
+        }
+    }
+
+    /// Per-segment earliest instants `rank`'s exposure segments may
+    /// deregister: a segment is eligible once its own background
+    /// registration finished (`seg_ready`) *and* the last read touching
+    /// it has landed (`seg_read_done`).  Empty for unsegmented ranks.
+    pub fn dereg_eligibility(&self, rank: usize) -> Vec<Time> {
+        let n_seg = self.n_segs(rank) as usize;
+        (0..n_seg)
+            .map(|s| {
+                let reg = self.seg_ready[rank].get(s).copied().unwrap_or(0.0);
+                let read = self.seg_read_done[rank].get(s).copied().unwrap_or(0.0);
+                reg.max(read)
+            })
+            .collect()
     }
 
     /// Earliest instant a Get of `[disp, disp+count)` from `target`'s
@@ -205,6 +263,7 @@ mod tests {
         w.mt = true;
         w.seg_elems = 4;
         w.seg_ready[0] = vec![1.0, 2.0];
+        w.seg_read_done[0] = vec![3.0, 4.0];
         assert!(!w.free_local(0));
         assert!(w.free_local(1));
         w.reset(CommId(3), 3);
@@ -215,6 +274,34 @@ mod tests {
         assert_eq!(w.freed_local, vec![false; 3]);
         assert_eq!(w.seg_elems, 0);
         assert!(w.seg_ready.iter().all(Vec::is_empty));
+        assert!(w.seg_read_done.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn note_read_tracks_latest_arrival_per_segment() {
+        let mut w = WinState::new(CommId(0), 2);
+        w.exposures[0] = Payload::virt(25);
+        // Unsegmented: nothing recorded.
+        w.note_read(0, 0, 10, 5.0);
+        assert!(w.seg_read_done[0].is_empty());
+        w.seg_elems = 10; // segments: [0,10), [10,20), [20,25)
+        assert_eq!(w.n_segs(0), 3);
+        assert_eq!(w.n_segs(1), 0, "NULL exposures have no segments");
+        w.note_read(0, 0, 10, 1.0); // seg 0
+        w.note_read(0, 5, 10, 2.0); // segs 0..=1
+        w.note_read(0, 22, 3, 4.0); // seg 2
+        w.note_read(0, 0, 5, 0.5); // earlier read must not regress seg 0
+        assert_eq!(w.seg_read_done[0], vec![2.0, 2.0, 4.0]);
+        // Eligibility: max of registration-ready and last read.
+        w.seg_ready[0] = vec![3.0, 1.0, 1.0];
+        assert_eq!(w.dereg_eligibility(0), vec![3.0, 2.0, 4.0]);
+        // A rank without a registration stream gates on reads only.
+        w.seg_ready[0].clear();
+        assert_eq!(w.dereg_eligibility(0), vec![2.0, 2.0, 4.0]);
+        // Never-read, never-streamed segments are immediately eligible.
+        w.seg_read_done[0].clear();
+        assert_eq!(w.dereg_eligibility(0), vec![0.0, 0.0, 0.0]);
+        assert!(w.dereg_eligibility(1).is_empty());
     }
 
     #[test]

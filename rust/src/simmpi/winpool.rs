@@ -82,6 +82,23 @@ pub struct WinPoolStats {
 struct PinEntry {
     class: u32,
     stamp: u64,
+    /// Absolute virtual time at which the token's background
+    /// registration stream finishes (0.0 = registered synchronously).
+    /// A pipelined acquire records it after the collective resolves;
+    /// an LRU eviction must not deregister segments that are still
+    /// being pinned, so the evicting rank waits past this instant
+    /// before charging the dereg.
+    reg_done_at: f64,
+}
+
+/// What an LRU eviction hands back to the evicting rank: the victim's
+/// pinned-region size (size-class bytes, for the dereg charge) and the
+/// absolute time its in-flight registration stream completes (0.0 if
+/// none) — the dereg cannot begin before that instant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvictedPin {
+    pub bytes: u64,
+    pub reg_done_at: f64,
 }
 
 /// The world-global window pool (one per [`MpiWorld`]).
@@ -148,19 +165,29 @@ impl WinPool {
     /// `cap` bounds how many tokens `gpid` may keep pinned
     /// (0 = unbounded); beyond it the least-recently-used token of
     /// this rank is evicted — deregistered, so its next acquire is
-    /// cold again.  Returns the pinned-region size (size-class bytes)
-    /// of every evicted token so the caller can charge the
-    /// deregistration time to the evicting rank.
-    pub fn record_pin(&mut self, gpid: usize, token: u64, bytes: u64, cap: usize) -> Vec<u64> {
+    /// cold again.  Returns every evicted token's pinned-region size
+    /// and in-flight registration deadline so the caller can charge
+    /// the deregistration (after any remaining pinning) to the
+    /// evicting rank.
+    pub fn record_pin(
+        &mut self,
+        gpid: usize,
+        token: u64,
+        bytes: u64,
+        cap: usize,
+    ) -> Vec<EvictedPin> {
         let class = size_class(bytes);
         self.tick += 1;
         let stamp = self.tick;
         let e = self
             .pinned
             .entry((gpid, token))
-            .or_insert(PinEntry { class, stamp });
+            .or_insert(PinEntry { class, stamp, reg_done_at: 0.0 });
         e.class = e.class.max(class);
         e.stamp = stamp;
+        // A re-pin starts a fresh registration; any previously recorded
+        // stream deadline is stale until the caller re-records it.
+        e.reg_done_at = 0.0;
         let mut evicted = Vec::new();
         if cap == 0 {
             return evicted;
@@ -179,13 +206,25 @@ impl WinPool {
                 .pinned
                 .range((gpid, u64::MIN)..=(gpid, u64::MAX))
                 .min_by_key(|(_, e)| e.stamp)
-                .map(|(&k, e)| (k, e.class))
+                .map(|(&k, e)| (k, *e))
                 .expect("over-cap cache cannot be empty");
             self.pinned.remove(&victim.0);
-            evicted.push(1u64.checked_shl(victim.1).unwrap_or(u64::MAX));
+            evicted.push(EvictedPin {
+                bytes: 1u64.checked_shl(victim.1.class).unwrap_or(u64::MAX),
+                reg_done_at: victim.1.reg_done_at,
+            });
             self.stats.evictions += 1;
         }
         evicted
+    }
+
+    /// Record when a token's background registration stream completes
+    /// (pipelined acquires call this once the collective resolves the
+    /// stream's absolute times).  Idempotent per pin; keeps the latest.
+    pub fn set_reg_done(&mut self, gpid: usize, token: u64, at: f64) {
+        if let Some(e) = self.pinned.get_mut(&(gpid, token)) {
+            e.reg_done_at = e.reg_done_at.max(at);
+        }
     }
 
     /// Drop every pin of `gpid` (process retirement: its memory is
@@ -336,7 +375,10 @@ mod tests {
         p.touch(0, 1);
         // The eviction reports the victim's pinned-region size (its
         // size-class bytes) so the caller can charge the unpin.
-        assert_eq!(p.record_pin(0, 3, 64, 2), vec![64]);
+        assert_eq!(
+            p.record_pin(0, 3, 64, 2),
+            vec![EvictedPin { bytes: 64, reg_done_at: 0.0 }]
+        );
         assert!(p.is_warm(0, 1, 64), "touched token must survive");
         assert!(!p.is_warm(0, 2, 64), "LRU token must be evicted");
         assert!(p.is_warm(0, 3, 64), "fresh pin never self-evicts");
@@ -388,6 +430,24 @@ mod tests {
         let s = p.stats();
         assert_eq!(s.seg_cold_regs, 3);
         assert_eq!(s.seg_warm_regs, 5);
+    }
+
+    #[test]
+    fn eviction_reports_the_victims_inflight_registration_deadline() {
+        let mut p = WinPool::new();
+        p.record_pin(0, 1, 64, 2);
+        // Token 1's background stream is still running until t=7.5.
+        p.set_reg_done(0, 1, 7.5);
+        p.record_pin(0, 2, 64, 2);
+        let ev = p.record_pin(0, 3, 64, 2);
+        assert_eq!(ev, vec![EvictedPin { bytes: 64, reg_done_at: 7.5 }]);
+        // Unknown tokens are ignored; re-pinning clears a stale deadline.
+        p.set_reg_done(0, 99, 1.0);
+        p.record_pin(0, 2, 64, 0); // re-pin: stale deadline cleared
+        p.set_reg_done(0, 2, 3.0);
+        p.touch(0, 3); // make token 2 the LRU victim
+        let ev = p.record_pin(0, 4, 64, 2);
+        assert_eq!(ev, vec![EvictedPin { bytes: 64, reg_done_at: 3.0 }]);
     }
 
     #[test]

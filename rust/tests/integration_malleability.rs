@@ -36,6 +36,7 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         seed: 11,
         win_pool: WinPoolPolicy::off(),
         rma_chunk_kib: 0,
+        rma_dereg: true,
         planner: PlannerMode::Fixed,
     }
 }
@@ -210,6 +211,7 @@ fn multi_resize_marathon_with_sam() {
                 spawn_strategy: SpawnStrategy::Sequential,
                 win_pool: WinPoolPolicy::off(),
                 rma_chunk_kib: 0,
+                rma_dereg: true,
                 planner: PlannerMode::Fixed,
             },
         );

@@ -31,6 +31,31 @@ fn run_and_collect(
     pool: bool,
     rma_chunk_kib: u64,
 ) -> Option<Vec<f64>> {
+    run_and_collect_cfg(
+        ns,
+        nd,
+        total,
+        method,
+        strategy,
+        pool,
+        rma_chunk_kib,
+        SpawnStrategy::Sequential,
+    )
+}
+
+/// [`run_and_collect`] with the spawn strategy explicit (Async grows
+/// exercise the spawn-overlapped eager registration streams).
+#[allow(clippy::too_many_arguments)]
+fn run_and_collect_cfg(
+    ns: usize,
+    nd: usize,
+    total: u64,
+    method: Method,
+    strategy: Strategy,
+    pool: bool,
+    rma_chunk_kib: u64,
+    spawn_strategy: SpawnStrategy,
+) -> Option<Vec<f64>> {
     let collected: Arc<Mutex<Vec<Option<Vec<f64>>>>> = Arc::new(Mutex::new(vec![None; nd]));
     let c2 = collected.clone();
     let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
@@ -49,9 +74,10 @@ fn run_and_collect(
             method,
             strategy,
             spawn_cost: 0.001,
-            spawn_strategy: SpawnStrategy::Sequential,
+            spawn_strategy,
             win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
             rma_chunk_kib,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
@@ -183,6 +209,90 @@ fn prop_chunk_zero_reproduces_the_seed_path_bit_identically() {
             a.to_bits() == b.to_bits()
         },
         0xB1B1,
+    );
+}
+
+/// Simulated end time of one direct blocking RMA-Lockall lifecycle run
+/// with the teardown pipeline on or off (registration pipeline on in
+/// both — the delta isolates the `windereg` streams).
+fn lifecycle_end_time(ns: usize, nd: usize, total: u64, chunk_kib: u64, dereg: bool) -> f64 {
+    let mut sim = MpiSim::new(Topology::new(4, 5), NetParams::test_simple());
+    sim.launch(ns.max(nd), move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let roles = Roles { ns, nd, rank };
+        let local = if roles.is_source() {
+            Payload::virt(block_of(total, ns, rank).len())
+        } else {
+            Payload::virt(0)
+        };
+        let mut reg = Registry::new();
+        reg.register("A", DataKind::Constant, total, local);
+        let chunk_elems = chunk_kib * 1024 / 8;
+        let opts = if dereg {
+            rma::LifecycleOpts::full(chunk_elems)
+        } else {
+            rma::LifecycleOpts::reg_only(chunk_elems)
+        };
+        let _ = rma::redistribute_lifecycle(
+            &p,
+            WORLD,
+            &roles,
+            &reg,
+            &[0],
+            true,
+            WinPoolPolicy::off(),
+            opts,
+        );
+    });
+    sim.run().expect("simulation failed")
+}
+
+#[test]
+fn prop_pipelined_teardown_never_slows_a_run() {
+    // Shrink-side acceptance property: across random shapes and chunk
+    // sizes, the background deregistration streams can only pull the
+    // virtual end time earlier (or tie) — segments unpin as their last
+    // reads land instead of serially after the closing barrier — and
+    // both paths stay bit-deterministic.
+    check_seeded(
+        "dereg-on end time <= dereg-off end time",
+        usizes(1, 8).pair(usizes(1, 8)).pair(usizes(1, 12_000)).pair(one_of(&[1u64, 2, 8])),
+        |(((ns, nd), total), chunk_kib)| {
+            if ns == nd {
+                return true;
+            }
+            let total = total as u64;
+            let on = lifecycle_end_time(ns, nd, total, chunk_kib, true);
+            let off = lifecycle_end_time(ns, nd, total, chunk_kib, false);
+            let on2 = lifecycle_end_time(ns, nd, total, chunk_kib, true);
+            on <= off + 1e-12 && on.to_bits() == on2.to_bits()
+        },
+        0xD3D3,
+    );
+}
+
+#[test]
+fn prop_async_spawn_overlap_preserves_payloads() {
+    // Spawn-overlapped (eager) registration streams change *when*
+    // segments register, never *what* the drains read: Async grows
+    // must produce the exact identity repartition that Sequential
+    // grows do, for every chunked RMA version.
+    let versions = rma_versions();
+    check_seeded(
+        "async eager streams == sequential payloads",
+        usizes(1, 6).pair(usizes(1, 6)).pair(usizes(0, 12_000)).pair(one_of(&versions)),
+        |(((ns, extra), total), (m, s))| {
+            let nd = ns + extra; // grows only: shrinks never spawn
+            let total = total as u64;
+            let asy = run_and_collect_cfg(ns, nd, total, m, s, false, 1, SpawnStrategy::Async);
+            let seq =
+                run_and_collect_cfg(ns, nd, total, m, s, false, 1, SpawnStrategy::Sequential);
+            let (Some(asy), Some(seq)) = (asy, seq) else {
+                return false;
+            };
+            asy == seq && asy.iter().enumerate().all(|(i, v)| *v == (i as f64) * 1.25 - 7.0)
+        },
+        0xE4E4,
     );
 }
 

@@ -48,6 +48,7 @@ fn run_and_collect(
             spawn_strategy: SpawnStrategy::Sequential,
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
@@ -170,6 +171,7 @@ fn prop_block_sizes_after_resize_match_block_of() {
                     spawn_strategy: SpawnStrategy::Sequential,
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
+                    rma_dereg: true,
                     planner: PlannerMode::Fixed,
                 };
                 let mut mam = Mam::new(reg, cfg.clone());
@@ -244,6 +246,7 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                         spawn_strategy: SpawnStrategy::Sequential,
                         win_pool: WinPoolPolicy::off(),
                         rma_chunk_kib: 0,
+                        rma_dereg: true,
                         planner: PlannerMode::Fixed,
                     };
                     let mut mam = Mam::new(reg, cfg.clone());

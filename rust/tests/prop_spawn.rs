@@ -46,6 +46,7 @@ fn run_grow(
             spawn_strategy,
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
+            rma_dereg: true,
             planner: PlannerMode::Fixed,
         };
         let mut mam = Mam::new(reg, cfg.clone());
