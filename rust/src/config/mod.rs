@@ -54,6 +54,11 @@ pub struct ExperimentConfig {
     /// `"planner": "auto" | "fixed"` — `auto` lets the cost-model
     /// planner override method/strategy/spawn/pool per resize.
     pub planner: PlannerMode,
+    /// `"recalib"`: bool or "on"/"off" (default off) — online
+    /// NetParams recalibration: the Auto planner consults a live
+    /// estimate fed by observed resize spans and registration
+    /// counters.  Off is bit-identical to the static planner.
+    pub recalib: bool,
     pub base: RunSpec,
 }
 
@@ -72,6 +77,7 @@ impl ExperimentConfig {
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
     }
@@ -98,6 +104,7 @@ impl ExperimentConfig {
         spec.rma_chunk_kib = self.rma_chunk_kib;
         spec.rma_dereg = self.rma_dereg;
         spec.planner = self.planner;
+        spec.recalib = self.recalib;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
             spec.sam.colind_elems /= self.scale;
@@ -179,6 +186,14 @@ impl ExperimentConfig {
             cfg.planner = PlannerMode::parse(pl)
                 .ok_or_else(|| format!("bad planner '{pl}' (fixed | auto)"))?;
         }
+        if let Some(rc) = doc.get("recalib") {
+            cfg.recalib = match (rc.as_bool(), rc.as_str()) {
+                (Some(b), _) => b,
+                (_, Some(s)) => crate::util::cli::parse_toggle(s)
+                    .ok_or_else(|| format!("bad recalib '{s}' (on | off)"))?,
+                _ => return Err("recalib must be a bool or \"on\"/\"off\"".into()),
+            };
+        }
         if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
             cfg.pairs = pairs
                 .iter()
@@ -251,6 +266,7 @@ impl ExperimentConfig {
             ("rma_chunk_kib", Json::num(self.rma_chunk_kib as f64)),
             ("rma_dereg", Json::Bool(self.rma_dereg)),
             ("planner", Json::str(self.planner.label())),
+            ("recalib", Json::Bool(self.recalib)),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
     }
@@ -484,6 +500,31 @@ mod tests {
         // Provenance carries the flag back out.
         let cfg = ExperimentConfig::from_str(r#"{"rma_dereg": "off"}"#).unwrap();
         assert_eq!(cfg.to_json().get_path("rma_dereg").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn recalib_parses_propagates_and_rejects_bad_values() {
+        // Default: off (bit-identical static planner path).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert!(!cfg.recalib);
+        assert!(!cfg.spec_for(20, 40).recalib);
+        // Bool and toggle-string spellings.
+        for (src, want) in [
+            (r#"{"recalib": true}"#, true),
+            (r#"{"recalib": false}"#, false),
+            (r#"{"recalib": "on"}"#, true),
+            (r#"{"recalib": "off"}"#, false),
+        ] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.recalib, want, "{src}");
+            assert_eq!(cfg.spec_for(20, 160).recalib, want, "{src}");
+        }
+        let err = ExperimentConfig::from_str(r#"{"recalib": "sideways"}"#).unwrap_err();
+        assert!(err.contains("recalib"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"recalib": 3}"#).is_err());
+        // Provenance carries the flag back out.
+        let cfg = ExperimentConfig::from_str(r#"{"recalib": "on"}"#).unwrap();
+        assert_eq!(cfg.to_json().get_path("recalib").unwrap().as_bool(), Some(true));
     }
 
     #[test]

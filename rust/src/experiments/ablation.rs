@@ -420,6 +420,37 @@ pub fn eager_sweep(opts: &FigOptions, ns: usize, nd: usize) -> FigureTable {
     t
 }
 
+/// Ablation: the static planner vs the online-recalibrating one on the
+/// three drift scenarios (miscalibrated seed, heterogeneous NICs,
+/// transient congestion).  One row per scenario — cumulative observed
+/// reconfiguration cost of each arm's choices, the speedup column being
+/// the recalibration win; the row label carries the resize index by
+/// which the recalibrated predictions settled under the 15% error bar
+/// (`K=…`, `K>n` when they never did).
+pub fn recalib(opts: &FigOptions) -> FigureTable {
+    // Drift scenarios fix their own shapes/sizes; the only knob taken
+    // from the options is the quick-vs-full workload (quick presets set
+    // scale > 1).
+    let quick = opts.scale > 1;
+    let mut t = FigureTable::new(
+        "Ablation: static vs online-recalibrating planner, cumulative reconfiguration cost",
+        "scenario",
+        &["static", "recalib"],
+        0,
+    );
+    for sc in super::drift::DriftScenario::all(quick) {
+        let rep = super::drift::run_drift(&sc);
+        let k = rep.converge_resizes();
+        let label = if k > rep.recalib_arm.episodes.len() {
+            format!("{} K>{}", rep.name, rep.recalib_arm.episodes.len())
+        } else {
+            format!("{} K={k}", rep.name)
+        };
+        t.row(&label, vec![rep.static_arm.cum_cost, rep.recalib_arm.cum_cost]);
+    }
+    t
+}
+
 // Arc is used by sibling experiment modules through re-export paths;
 // silence the lint locally where the closure-based launchers need it.
 #[allow(unused)]
@@ -547,6 +578,19 @@ mod tests {
             t.value(2, 1),
             t.value(3, 1)
         );
+    }
+
+    #[test]
+    fn recalib_ablation_wins_on_every_drift_scenario() {
+        let opts = FigOptions::quick();
+        let t = recalib(&opts);
+        assert_eq!(t.rows.len(), 3, "miscal, hetero, congest rows");
+        for r in 0..3 {
+            let (stat, rec) = (t.value(r, 0), t.value(r, 1));
+            assert!(stat.is_finite() && rec.is_finite() && stat > 0.0 && rec > 0.0);
+            assert!(rec < stat, "row {r}: recalib={rec} !< static={stat}");
+            assert!(t.rows[r].0.contains("K="), "label: {}", t.rows[r].0);
+        }
     }
 
     #[test]

@@ -1,0 +1,630 @@
+//! Drift scenarios: environments where the static planner's seed
+//! calibration picks the wrong version, and the online recalibrator
+//! ([`crate::mam::Recalibrator`]) converges to the right one within a
+//! few resizes.
+//!
+//! Each scenario is a sequence of isolated reconfiguration *episodes*
+//! (grows, cold windows).  Two arms run over the identical episode
+//! sequence:
+//!
+//! * **static** — plans every episode with the frozen seed belief;
+//! * **recalib** — plans with a live belief, then feeds the episode's
+//!   observed span, spawn block and registration counters back into
+//!   the estimator.
+//!
+//! Both arms pick the argmin over the same candidate set by DES
+//! micro-probe *under their own belief* (probes are exact, so once the
+//! belief matches the environment the prediction error collapses to
+//! the DES's own reproducibility: zero).  The environment executes the
+//! chosen candidate under the *true* drifted parameters.  The spawn
+//! axis makes the comparison provable: for blocking spawn strategies
+//! the redistribution is bit-identical regardless of the spawn choice,
+//! so a wrong spawn argmin costs exactly the spawn-block gap, every
+//! episode, until the belief catches up.
+//!
+//! The three drifts (ISSUE/ROADMAP PR-6):
+//!
+//! * `miscal` — the seed constants are simply ~2× optimistic
+//!   (`spawn_launch`, `spawn_per_proc`, `beta_register`): the belief
+//!   says parallel spawning beats the sequential constant; the real
+//!   machine says otherwise.
+//! * `hetero` — heterogeneous-NIC nodes: registration throughput 8×
+//!   worse and per-process startup 5× worse than the seed (slow
+//!   firmware path), flipping both the spawn argmin and the
+//!   chunk-size sweet spot.
+//! * `congest` — a congested-network transient: the first episode
+//!   really is 4× slower on the wire (and the belief was calibrated
+//!   then, with a panicked 20×-merge estimate); afterwards the fabric
+//!   drains and the static belief keeps over-charging parallel spawns
+//!   and the wire forever.
+
+use std::collections::BTreeMap;
+
+use crate::mam::planner::{self, Candidate, Objective, PlannerInputs};
+use crate::mam::{
+    DataDecl, DataKind, Method, Observation, Recalibrator, SpawnStrategy, Strategy,
+    WinPoolPolicy,
+};
+use crate::netmodel::{costmodel, NetParams};
+use crate::simmpi::ELEM_BYTES;
+use crate::util::json::Json;
+use crate::util::stats::fmt_seconds;
+
+/// One drift scenario: an episode sequence, the true (drifted)
+/// environment of each episode, the (mis)calibrated seed belief and
+/// the candidate set both arms choose from.
+#[derive(Clone, Debug)]
+pub struct DriftScenario {
+    pub name: &'static str,
+    pub title: &'static str,
+    /// Seed belief both arms start from (the static arm keeps it).
+    pub belief0: NetParams,
+    /// True environment parameters, one entry per episode (transients
+    /// like the congestion ramp vary them over the sequence).
+    pub env: Vec<NetParams>,
+    /// Episode resize shapes `(ns, nd)` — grows only.
+    pub shapes: Vec<(usize, usize)>,
+    /// Global bytes of the single redistributed structure.
+    pub total_bytes: u64,
+    pub candidates: Vec<Candidate>,
+    pub cores_per_node: usize,
+    /// Sequential-spawn constant (not a `NetParams` term — exact under
+    /// drift by construction, which is what makes it the safe harbor
+    /// the recalibrated planner falls back to).
+    pub spawn_cost: f64,
+}
+
+fn cand(method: Method, chunk_kib: u64, ss: SpawnStrategy) -> Candidate {
+    Candidate {
+        method,
+        strategy: Strategy::Blocking,
+        spawn_strategy: ss,
+        win_pool: WinPoolPolicy::off(),
+        rma_chunk_kib: chunk_kib,
+    }
+}
+
+impl DriftScenario {
+    /// ~2× miscalibrated seed constants.
+    pub fn miscal(quick: bool) -> DriftScenario {
+        let episodes = if quick { 6 } else { 12 };
+        let bytes: u64 = if quick { 16 << 20 } else { 128 << 20 };
+        let env = NetParams::sarteco25().with(|p| {
+            p.spawn_launch *= 2.0;
+            p.spawn_per_proc *= 2.0;
+            p.beta_register *= 2.0;
+        });
+        DriftScenario {
+            name: "miscal",
+            title: "2x-optimistic seed constants",
+            belief0: NetParams::sarteco25(),
+            env: vec![env; episodes],
+            shapes: (0..episodes).map(|k| if k % 2 == 0 { (2, 16) } else { (4, 16) }).collect(),
+            total_bytes: bytes,
+            candidates: vec![
+                cand(Method::Collective, 0, SpawnStrategy::Sequential),
+                cand(Method::Collective, 0, SpawnStrategy::Parallel),
+                cand(Method::RmaLockall, 1024, SpawnStrategy::Sequential),
+                cand(Method::RmaLockall, 1024, SpawnStrategy::Parallel),
+            ],
+            cores_per_node: 8,
+            spawn_cost: 0.25,
+        }
+    }
+
+    /// Heterogeneous-NIC nodes: slow registration/startup path.
+    pub fn hetero(quick: bool) -> DriftScenario {
+        let episodes = if quick { 6 } else { 10 };
+        let bytes: u64 = if quick { 32 << 20 } else { 512 << 20 };
+        let env = NetParams::sarteco25().with(|p| {
+            p.beta_register *= 8.0;
+            p.spawn_per_proc *= 5.0;
+            p.spawn_launch *= 1.5;
+        });
+        DriftScenario {
+            name: "hetero",
+            title: "heterogeneous-NIC nodes (8x slower registration)",
+            belief0: NetParams::sarteco25(),
+            env: vec![env; episodes],
+            shapes: (0..episodes).map(|k| if k % 2 == 0 { (4, 16) } else { (2, 16) }).collect(),
+            total_bytes: bytes,
+            candidates: vec![
+                cand(Method::RmaLockall, 0, SpawnStrategy::Sequential),
+                cand(Method::RmaLockall, 0, SpawnStrategy::Parallel),
+                cand(Method::RmaLockall, 1024, SpawnStrategy::Sequential),
+                cand(Method::RmaLockall, 1024, SpawnStrategy::Parallel),
+            ],
+            cores_per_node: 8,
+            spawn_cost: 0.25,
+        }
+    }
+
+    /// Congested-network calibration transient: the belief was taken
+    /// during the congestion (4× wire, panicked merge estimate); the
+    /// congestion clears after the first episode.
+    pub fn congest(quick: bool) -> DriftScenario {
+        let episodes = if quick { 5 } else { 8 };
+        let bytes: u64 = if quick { 32 << 20 } else { 256 << 20 };
+        let congested = NetParams::sarteco25().with(|p| p.beta_inter *= 4.0);
+        let clear = NetParams::sarteco25();
+        let belief0 = NetParams::sarteco25().with(|p| {
+            p.beta_inter *= 4.0;
+            p.merge_round = 0.04;
+        });
+        let env: Vec<NetParams> = (0..episodes)
+            .map(|k| if k == 0 { congested.clone() } else { clear.clone() })
+            .collect();
+        DriftScenario {
+            name: "congest",
+            title: "congested-network calibration transient",
+            belief0,
+            env,
+            shapes: vec![(4, 16); episodes],
+            total_bytes: bytes,
+            candidates: vec![
+                cand(Method::RmaLockall, 1024, SpawnStrategy::Sequential),
+                cand(Method::RmaLockall, 1024, SpawnStrategy::Parallel),
+            ],
+            cores_per_node: 8,
+            spawn_cost: 0.25,
+        }
+    }
+
+    pub fn all(quick: bool) -> Vec<DriftScenario> {
+        vec![Self::miscal(quick), Self::hetero(quick), Self::congest(quick)]
+    }
+
+    pub fn by_name(name: &str, quick: bool) -> Option<DriftScenario> {
+        match name {
+            "miscal" => Some(Self::miscal(quick)),
+            "hetero" => Some(Self::hetero(quick)),
+            "congest" => Some(Self::congest(quick)),
+            _ => None,
+        }
+    }
+
+    /// The single redistributed structure (names are stable so chunk
+    /// hints persist across episodes).
+    fn decls(&self) -> Vec<DataDecl> {
+        vec![DataDecl {
+            name: "A".into(),
+            kind: DataKind::Constant,
+            total_elems: (self.total_bytes / ELEM_BYTES).max(1),
+            real: false,
+        }]
+    }
+
+    fn inputs(&self, net: &NetParams, ns: usize, nd: usize, extra: Vec<u64>) -> PlannerInputs {
+        PlannerInputs {
+            decls: self.decls(),
+            ns,
+            nd,
+            cores_per_node: self.cores_per_node,
+            net: net.clone(),
+            spawn_cost: self.spawn_cost,
+            warm: false,
+            t_iter_src: 0.0,
+            t_iter_dst: 0.0,
+            objective: Objective::ReconfTime,
+            probe: false,
+            extra_chunks_kib: extra,
+        }
+    }
+}
+
+/// What one episode's environment execution measured.
+#[derive(Clone, Copy, Debug)]
+struct EpisodeMeasurement {
+    /// Full reconfiguration span under the true parameters.
+    reconf: f64,
+    /// Spawn-block portion (reconfigure entry → redistribution start).
+    spawn_block: f64,
+    reg_bytes: f64,
+    reg_secs: f64,
+}
+
+/// Execute one episode under `env`: the same isolated-DES body as the
+/// planner's micro-probe, read back with the registration counters and
+/// the spawn/redistribution split the recalibrator needs.
+fn run_episode(
+    sc: &DriftScenario,
+    env: &NetParams,
+    cand: &Candidate,
+    ns: usize,
+    nd: usize,
+) -> EpisodeMeasurement {
+    let inp = sc.inputs(env, ns, nd, Vec::new());
+    let (reconf, extras) = planner::probe_reconfiguration_extras(&inp, cand);
+    EpisodeMeasurement {
+        reconf,
+        spawn_block: extras.spawn_block,
+        reg_bytes: extras.reg_bytes,
+        reg_secs: extras.reg_secs,
+    }
+}
+
+/// One episode of one arm, as reported.
+#[derive(Clone, Debug)]
+pub struct EpisodeReport {
+    pub index: usize,
+    pub ns: usize,
+    pub nd: usize,
+    pub choice: String,
+    /// The arm's belief-probe prediction for its choice.
+    pub predicted: f64,
+    /// The environment's true span for that choice.
+    pub observed: f64,
+}
+
+impl EpisodeReport {
+    /// Unsigned relative prediction error.
+    pub fn rel_err(&self) -> f64 {
+        if self.observed > 0.0 {
+            ((self.predicted - self.observed) / self.observed).abs()
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One arm's full trajectory.
+#[derive(Clone, Debug)]
+pub struct ArmReport {
+    pub label: &'static str,
+    pub episodes: Vec<EpisodeReport>,
+    /// Sum of observed episode spans: the cumulative reconfiguration
+    /// cost this arm's choices actually paid.
+    pub cum_cost: f64,
+}
+
+/// Static-vs-recalibrating comparison on one drift scenario.
+#[derive(Clone, Debug)]
+pub struct DriftReport {
+    pub name: String,
+    pub title: String,
+    pub static_arm: ArmReport,
+    pub recalib_arm: ArmReport,
+}
+
+/// Convergence tolerance: per-episode predicted-vs-observed error the
+/// recalibrated planner must fall (and stay) below.
+pub const CONVERGE_TOL: f64 = 0.15;
+
+impl DriftReport {
+    /// Fraction of the static arm's cumulative cost the recalibrating
+    /// arm saved.
+    pub fn win_frac(&self) -> f64 {
+        if self.static_arm.cum_cost > 0.0 {
+            1.0 - self.recalib_arm.cum_cost / self.static_arm.cum_cost
+        } else {
+            0.0
+        }
+    }
+
+    /// First episode (1-based) from which every subsequent recalib-arm
+    /// prediction error stays below [`CONVERGE_TOL`]; `episodes + 1`
+    /// when the trajectory never settles.
+    pub fn converge_resizes(&self) -> usize {
+        let errs: Vec<f64> = self.recalib_arm.episodes.iter().map(|e| e.rel_err()).collect();
+        let mut k = errs.len();
+        while k > 0 && errs[k - 1] < CONVERGE_TOL {
+            k -= 1;
+        }
+        k + 1
+    }
+
+    pub fn render(&self, per_episode: bool) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== Drift {} ({}) ==\n", self.name, self.title));
+        if per_episode {
+            out.push_str(&format!(
+                "{:<4}{:<8}{:<26}{:>10}{:<26}{:>10}{:>10}{:>8}\n",
+                "ep", "pair", "static choice", "obs", "recalib choice", "pred", "obs", "err%"
+            ));
+            for (s, r) in self.static_arm.episodes.iter().zip(&self.recalib_arm.episodes) {
+                out.push_str(&format!(
+                    "e{:<3}{:<8}{:<26}{:>10}{:<26}{:>10}{:>10}{:>7.1}%\n",
+                    r.index,
+                    format!("{}->{}", r.ns, r.nd),
+                    s.choice,
+                    fmt_seconds(s.observed),
+                    r.choice,
+                    fmt_seconds(r.predicted),
+                    fmt_seconds(r.observed),
+                    100.0 * r.rel_err(),
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "cumulative: static {} recalib {} win {:.1}% converge@{} of {} episodes\n",
+            fmt_seconds(self.static_arm.cum_cost),
+            fmt_seconds(self.recalib_arm.cum_cost),
+            100.0 * self.win_frac(),
+            self.converge_resizes(),
+            self.recalib_arm.episodes.len(),
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arm = |a: &ArmReport| {
+            Json::obj(vec![
+                ("cum_cost_s", Json::num(a.cum_cost)),
+                (
+                    "episodes",
+                    Json::Arr(
+                        a.episodes
+                            .iter()
+                            .map(|e| {
+                                Json::obj(vec![
+                                    ("index", Json::num(e.index as f64)),
+                                    ("from", Json::num(e.ns as f64)),
+                                    ("to", Json::num(e.nd as f64)),
+                                    ("choice", Json::str(e.choice.clone())),
+                                    ("predicted_s", Json::num(e.predicted)),
+                                    ("observed_s", Json::num(e.observed)),
+                                    ("rel_err", Json::num(e.rel_err())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("title", Json::str(self.title.clone())),
+            ("static", arm(&self.static_arm)),
+            ("recalib", arm(&self.recalib_arm)),
+            ("win_frac", Json::num(self.win_frac())),
+            ("converge_resizes", Json::num(self.converge_resizes() as f64)),
+        ])
+    }
+}
+
+/// Run one arm over the episode sequence.
+fn run_arm(sc: &DriftScenario, recalib: bool) -> ArmReport {
+    let mut rc = Recalibrator::new(sc.belief0.clone());
+    let mut episodes: Vec<EpisodeReport> = Vec::new();
+    let mut cum = 0.0;
+    // The static arm's belief never moves, so its probe-argmin per
+    // shape is a constant: memoize it.
+    let mut static_memo: BTreeMap<(usize, usize), (usize, Vec<(Candidate, f64)>)> =
+        BTreeMap::new();
+    for (k, &(ns, nd)) in sc.shapes.iter().enumerate() {
+        let (choice_i, probed): (usize, Vec<(Candidate, f64)>) = if !recalib {
+            static_memo
+                .entry((ns, nd))
+                .or_insert_with(|| pick(sc, &sc.belief0, Vec::new(), ns, nd))
+                .clone()
+        } else {
+            pick(sc, &rc.params().clone(), rc.chunk_candidates(), ns, nd)
+        };
+        let mut choice_i = choice_i;
+        // One deterministic exploration step: on the very first
+        // episode, with no spawn observations yet, a Sequential argmin
+        // may just reflect an over-charged parallel-spawn belief (the
+        // congest transient).  Trying the best-believed Parallel
+        // candidate once bounds the regret by a single episode and
+        // hands the estimator the spawn terms it cannot otherwise see.
+        if recalib && k == 0 && probed[choice_i].0.spawn_strategy == SpawnStrategy::Sequential {
+            if let Some((i, _)) = probed
+                .iter()
+                .enumerate()
+                .filter(|(_, (c, _))| c.spawn_strategy == SpawnStrategy::Parallel)
+                .min_by(|(_, (_, a)), (_, (_, b))| a.total_cmp(b))
+            {
+                choice_i = i;
+            }
+        }
+        let (choice, predicted) = probed[choice_i].clone();
+        let meas = run_episode(sc, &sc.env[k], &choice, ns, nd);
+        cum += meas.reconf;
+        if recalib {
+            let n_new = nd - ns;
+            let sched =
+                choice.spawn_strategy.schedule(rc.params(), ns, n_new, nd, sc.spawn_cost);
+            let spawn_waves = match choice.spawn_strategy {
+                SpawnStrategy::Sequential => None,
+                SpawnStrategy::Parallel => {
+                    let waves = n_new.div_ceil(ns.max(1));
+                    let rounds = usize::BITS - (nd.max(2) - 1).leading_zeros();
+                    Some((waves as f64, rounds as f64))
+                }
+                SpawnStrategy::Async => Some((0.0, 0.0)),
+            };
+            let obs = Observation {
+                ns,
+                nd,
+                reconf: meas.reconf,
+                predicted,
+                spawn_block: meas.spawn_block,
+                predicted_spawn_block: sched.source_block,
+                spawn_waves,
+                reg_bytes: meas.reg_bytes,
+                reg_secs: meas.reg_secs,
+                wire_slope: costmodel::wire_slope(sc.total_bytes, ns, nd, sc.cores_per_node),
+            };
+            rc.observe(&obs);
+            rc.note_chunk("A", sc.total_bytes / ns.max(1) as u64);
+        }
+        episodes.push(EpisodeReport {
+            index: k,
+            ns,
+            nd,
+            choice: choice.label(),
+            predicted,
+            observed: meas.reconf,
+        });
+    }
+    ArmReport { label: if recalib { "recalib" } else { "static" }, episodes, cum_cost: cum }
+}
+
+/// Belief-probe argmin over the candidate set (plus the
+/// recalibrator's measured chunk variants): returns the chosen index
+/// and every candidate's probed belief cost, in enumeration order.
+fn pick(
+    sc: &DriftScenario,
+    belief: &NetParams,
+    extra_chunks: Vec<u64>,
+    ns: usize,
+    nd: usize,
+) -> (usize, Vec<(Candidate, f64)>) {
+    let mut set = sc.candidates.clone();
+    for &kib in &extra_chunks {
+        for c in &sc.candidates {
+            if c.method.is_rma() {
+                let mut v = *c;
+                v.rma_chunk_kib = kib;
+                if !set.contains(&v) {
+                    set.push(v);
+                }
+            }
+        }
+    }
+    let inp = sc.inputs(belief, ns, nd, Vec::new());
+    let probed: Vec<(Candidate, f64)> = set
+        .into_iter()
+        .map(|c| {
+            let cost = planner::probe_reconfiguration(&inp, &c).reconf_time;
+            (c, cost)
+        })
+        .collect();
+    let choice = probed
+        .iter()
+        .enumerate()
+        .min_by(|(_, (_, a)), (_, (_, b))| a.total_cmp(b))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    (choice, probed)
+}
+
+/// Run both arms on one scenario.
+pub fn run_drift(sc: &DriftScenario) -> DriftReport {
+    DriftReport {
+        name: sc.name.to_string(),
+        title: sc.title.to_string(),
+        static_arm: run_arm(sc, false),
+        recalib_arm: run_arm(sc, true),
+    }
+}
+
+/// Bench-smoke entries: cumulative costs of both arms plus the
+/// convergence episode count, per drift scenario.
+pub fn drift_bench_entries(quick: bool) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for sc in DriftScenario::all(quick) {
+        let rep = run_drift(&sc);
+        out.push((format!("drift.{}.static", sc.name), rep.static_arm.cum_cost));
+        out.push((format!("drift.{}.recalib", sc.name), rep.recalib_arm.cum_cost));
+        out.push((
+            format!("recalib.{}.converge_resizes", sc.name),
+            rep.converge_resizes() as f64,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_constructors_are_consistent() {
+        for quick in [true, false] {
+            for sc in DriftScenario::all(quick) {
+                assert_eq!(sc.env.len(), sc.shapes.len(), "{}", sc.name);
+                assert!(!sc.candidates.is_empty());
+                for &(ns, nd) in &sc.shapes {
+                    assert!(nd > ns, "{}: drift episodes are grows", sc.name);
+                }
+                assert!(DriftScenario::by_name(sc.name, quick).is_some());
+            }
+        }
+        assert!(DriftScenario::by_name("nope", true).is_none());
+    }
+
+    #[test]
+    fn quick_miscal_recalibration_beats_the_static_arm() {
+        // The spawn-axis separability argument in miniature: the env
+        // doubles the decomposed spawn terms, the belief says Parallel,
+        // the machine says Sequential; once the estimator sees one
+        // parallel spawn it must flip — and the flip is worth the
+        // spawn-block gap per remaining episode.
+        let rep = run_drift(&DriftScenario::miscal(true));
+        assert_eq!(rep.static_arm.episodes.len(), rep.recalib_arm.episodes.len());
+        assert!(
+            rep.recalib_arm.cum_cost < rep.static_arm.cum_cost,
+            "recalib {} !< static {}",
+            rep.recalib_arm.cum_cost,
+            rep.static_arm.cum_cost
+        );
+        // Both arms start from the same belief, so episode 0 costs the
+        // same (no exploration fires: the miscalibrated belief's
+        // argmin is already Parallel).
+        let s0 = &rep.static_arm.episodes[0];
+        let r0 = &rep.recalib_arm.episodes[0];
+        assert_eq!(s0.choice, r0.choice);
+        assert_eq!(s0.observed.to_bits(), r0.observed.to_bits());
+    }
+
+    #[test]
+    fn quick_congest_exploration_fires_once_and_only_there() {
+        // The congest belief over-charges parallel spawning, so its
+        // argmin is Sequential: without the one-shot exploration the
+        // estimator would never observe the spawn terms.  The first
+        // recalib episode must be a Parallel pick.
+        let rep = run_drift(&DriftScenario::congest(true));
+        assert!(
+            rep.recalib_arm.episodes[0].choice.contains("parallel"),
+            "{:?}",
+            rep.recalib_arm.episodes[0]
+        );
+        assert!(
+            rep.static_arm.episodes[0].choice.contains("parallel") == false,
+            "{:?}",
+            rep.static_arm.episodes[0]
+        );
+    }
+
+    #[test]
+    fn drift_runs_are_deterministic() {
+        let sc = DriftScenario::congest(true);
+        let a = run_drift(&sc);
+        let b = run_drift(&sc);
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+        assert!(a.render(true).contains("cumulative"));
+    }
+
+    #[test]
+    fn converge_index_is_the_last_excursion_plus_one() {
+        let ep = |i: usize, pred: f64, obs: f64| EpisodeReport {
+            index: i,
+            ns: 4,
+            nd: 16,
+            choice: "x".into(),
+            predicted: pred,
+            observed: obs,
+        };
+        let mk = |errs: &[f64]| DriftReport {
+            name: "t".into(),
+            title: "t".into(),
+            static_arm: ArmReport { label: "static", episodes: Vec::new(), cum_cost: 1.0 },
+            recalib_arm: ArmReport {
+                label: "recalib",
+                episodes: errs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &e)| ep(i, 1.0 + e, 1.0))
+                    .collect(),
+                cum_cost: 1.0,
+            },
+        };
+        // Errors [0.5, 0.05, 0.3, 0.01, 0.02] → settles at episode 4.
+        assert_eq!(mk(&[0.5, 0.05, 0.3, 0.01, 0.02]).converge_resizes(), 4);
+        // Immediately accurate → 1.
+        assert_eq!(mk(&[0.01, 0.02]).converge_resizes(), 1);
+        // Never settles → episodes + 1.
+        assert_eq!(mk(&[0.5, 0.4]).converge_resizes(), 3);
+    }
+}

@@ -34,13 +34,14 @@ use std::sync::Arc;
 
 use crate::mam::planner::{self, Candidate, Objective, PlannerInputs, PlannerMode};
 use crate::mam::{
-    DataDecl, Mam, MamStatus, Method, ReconfigCfg, Registry, SpawnStrategy, Strategy,
-    WinPoolPolicy,
+    DataDecl, Mam, MamStatus, Method, Observation, Recalibrator, ReconfigCfg, Registry,
+    SpawnStrategy, Strategy, WinPoolPolicy,
 };
-use crate::netmodel::{NetParams, Topology};
+use crate::monitor::Metrics;
+use crate::netmodel::{costmodel, NetParams, Topology};
 use crate::rms::{Policy, Rms};
 use crate::sam::{Sam, SamConfig};
-use crate::simmpi::{CommId, MpiProc, MpiSim, Payload, WORLD};
+use crate::simmpi::{CommId, MpiProc, MpiSim, Payload, ELEM_BYTES, WORLD};
 use crate::util::benchkit::FigureTable;
 use crate::util::json::Json;
 use crate::util::stats::fmt_seconds;
@@ -92,6 +93,13 @@ pub struct ScenarioSpec {
     pub rma_chunk_kib: u64,
     pub planner: PlannerMode,
     pub spawn_cost: f64,
+    /// Online recalibration (`--recalib on`): under the Auto planner,
+    /// every rank re-resolves each resize *in simulation* from a live
+    /// [`Recalibrator`] belief fed by the previous resizes' observed
+    /// spans and registration counters, instead of executing the
+    /// statically scheduled plan.  `false` leaves the execution path
+    /// bit-identical to the static harness.
+    pub recalib: bool,
     pub seed: u64,
 }
 
@@ -148,6 +156,7 @@ impl ScenarioSpec {
             rma_chunk_kib: 0,
             planner: PlannerMode::Auto,
             spawn_cost: 0.25,
+            recalib: false,
             seed: 0xC0FFEE,
         }
     }
@@ -156,7 +165,7 @@ impl ScenarioSpec {
     /// version's figure label).
     pub fn version_label(&self) -> String {
         if self.planner == PlannerMode::Auto {
-            "auto".to_string()
+            if self.recalib { "auto+recalib".to_string() } else { "auto".to_string() }
         } else {
             Candidate {
                 method: self.method,
@@ -274,6 +283,7 @@ fn resolve_resize(
         t_iter_dst: spec.sam.iter_compute(to),
         objective: Objective::ReconfTime,
         probe: spec.planner == PlannerMode::Auto,
+        extra_chunks_kib: Vec::new(),
     };
     if spec.planner == PlannerMode::Auto {
         let plan = planner::plan(&inputs);
@@ -448,6 +458,111 @@ struct ScenCtx {
     total_iters: u64,
     decls: Vec<DataDecl>,
     resizes: Vec<PlannedResize>,
+    cores_per_node: usize,
+    spawn_cost: f64,
+    /// Seed belief the in-sim recalibrators start from (the spec's
+    /// calibration — in the closed loop the environment and the seed
+    /// belief coincide, so the error trajectory measures pure model
+    /// residue, not drift).
+    net: NetParams,
+    /// Live in-sim re-resolution is armed (recalib on + Auto planner).
+    recalib_live: bool,
+}
+
+/// Resolve one resize analytically from a live belief (no probes —
+/// this runs *inside* the simulation, identically on every rank, so it
+/// must be a pure function of the belief and the shape).
+#[allow(clippy::too_many_arguments)]
+fn live_resolve(
+    net: &NetParams,
+    cores_per_node: usize,
+    sam: &SamConfig,
+    decls: &[DataDecl],
+    from: usize,
+    to: usize,
+    spawn_cost: f64,
+    extra_chunks_kib: Vec<u64>,
+) -> (ReconfigCfg, String, f64) {
+    let inp = PlannerInputs {
+        decls: decls.to_vec(),
+        ns: from,
+        nd: to,
+        cores_per_node,
+        net: net.clone(),
+        spawn_cost,
+        warm: false,
+        t_iter_src: sam.iter_compute(from),
+        t_iter_dst: sam.iter_compute(to),
+        objective: Objective::ReconfTime,
+        probe: false,
+        extra_chunks_kib,
+    };
+    let plan = planner::plan(&inp);
+    (plan.choice.cfg(spawn_cost), plan.label(), plan.predicted_reconf)
+}
+
+/// Reconstruct resize `index`'s calibration observation from the
+/// (final) global metric marks.  Callable both in-sim — after the
+/// post-resize barrier every mark of the resize is final, so all ranks
+/// read identical values and the replicated recalibrator beliefs stay
+/// bit-identical — and post-run, to replay the belief trajectory for
+/// reporting.
+fn observation_from(
+    m: &Metrics,
+    index: usize,
+    from: usize,
+    to: usize,
+    cores_per_node: usize,
+    decls: &[DataDecl],
+) -> Observation {
+    let delta = |a: String, b: String| m.span(&a, &b).unwrap_or(0.0).max(0.0);
+    let reconf = m
+        .span(&format!("scen.r{index}.start"), &format!("scen.r{index}.end"))
+        .unwrap_or(0.0)
+        .max(0.0);
+    let predicted = m.mark_at(&format!("scen.r{index}.live_pred")).unwrap_or(reconf);
+    let total: u64 = decls.iter().map(|d| d.total_elems * ELEM_BYTES).sum();
+    Observation {
+        ns: from,
+        nd: to,
+        reconf,
+        predicted,
+        // The closed loop drives the DES with the same spawn constants
+        // the belief carries, so there is no spawn drift to learn:
+        // leave the spawn axis out of the residual entirely.
+        spawn_block: 0.0,
+        predicted_spawn_block: 0.0,
+        spawn_waves: None,
+        reg_bytes: delta(
+            format!("scen.r{index}.reg_bytes0"),
+            format!("scen.r{index}.reg_bytes1"),
+        ),
+        reg_secs: delta(
+            format!("scen.r{index}.reg_time0"),
+            format!("scen.r{index}.reg_time1"),
+        ),
+        wire_slope: costmodel::wire_slope(total, from, to, cores_per_node),
+    }
+}
+
+/// Feed resize `index`'s observation (and per-structure chunk hints)
+/// into a recalibrator — the single shared definition of "one step of
+/// the belief", used by the in-sim loop, by drains replaying the
+/// resizes they missed, and by the post-run report replay.
+fn feed_observation(
+    rc: &mut Recalibrator,
+    m: &Metrics,
+    index: usize,
+    from: usize,
+    to: usize,
+    cores_per_node: usize,
+    decls: &[DataDecl],
+) {
+    let obs = observation_from(m, index, from, to, cores_per_node, decls);
+    rc.observe(&obs);
+    for d in decls {
+        rc.note_chunk(&d.name, d.total_elems * ELEM_BYTES / (to.max(1) as u64));
+    }
 }
 
 /// Stage 2: execute the scenario on the simulated cluster.
@@ -463,12 +578,17 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     let topo = Topology::new_cyclic(peak.div_ceil(cpn).max(1), cpn);
     let mut sim = MpiSim::new(topo, spec.net.clone());
     let world = sim.world();
+    let recalib_live = spec.recalib && spec.planner == PlannerMode::Auto;
     let ctx = Arc::new(ScenCtx {
         sam: spec.sam.clone(),
         seed: spec.seed,
         total_iters: spec.total_iters,
         decls: spec.decls(),
         resizes: resizes.clone(),
+        cores_per_node: cpn,
+        spawn_cost: spec.spawn_cost,
+        net: spec.net.clone(),
+        recalib_live,
     });
     let base_cfg = ReconfigCfg {
         method: spec.method,
@@ -479,6 +599,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         rma_chunk_kib: spec.rma_chunk_kib,
         rma_dereg: true,
         planner: PlannerMode::Fixed,
+        recalib: spec.recalib,
     };
     let start = spec.start_cores;
     let ctx2 = ctx.clone();
@@ -488,11 +609,41 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         let mut reg = Registry::new();
         sam.register_data(&mut reg, start, rank);
         let mam = Mam::new(reg, base_cfg.clone());
-        app_loop(&ctx2, &p, WORLD, mam, sam, 0, 0);
+        let recal =
+            if ctx2.recalib_live { Some(Recalibrator::new(ctx2.net.clone())) } else { None };
+        app_loop(&ctx2, &p, WORLD, mam, sam, 0, 0, recal);
     });
     let makespan = sim.run().expect("scenario simulation failed");
     let w = world.lock().unwrap();
     let m = &w.metrics;
+    // Under live recalibration the executed version is not the
+    // scheduled one: replay the belief trajectory against the final
+    // metrics (the exact sequence of pure-function steps every rank
+    // performed in-sim) to recover each resize's live choice.
+    let live: Option<Vec<(ReconfigCfg, String)>> = if recalib_live {
+        let mut rc = Recalibrator::new(spec.net.clone());
+        Some(
+            resizes
+                .iter()
+                .map(|r| {
+                    let (cfg, label, _pred) = live_resolve(
+                        rc.params(),
+                        cpn,
+                        &spec.sam,
+                        &ctx.decls,
+                        r.from,
+                        r.to,
+                        spec.spawn_cost,
+                        rc.chunk_candidates(),
+                    );
+                    feed_observation(&mut rc, m, r.index, r.from, r.to, cpn, &ctx.decls);
+                    (cfg, format!("live[{label}]"))
+                })
+                .collect(),
+        )
+    } else {
+        None
+    };
     let reports: Vec<ResizeReport> = resizes
         .iter()
         .map(|r| {
@@ -503,15 +654,21 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
                 )
                 .unwrap_or(0.0)
                 .max(0.0);
+            let (exec_cfg, label) = match &live {
+                Some(v) => (&v[r.index].0, v[r.index].1.clone()),
+                None => (&r.cfg, r.label.clone()),
+            };
             // The version registers (RMA windows, or register-on-receive
             // pre-pins under the pool) but charged nothing: fully warm.
-            let registers = r.cfg.method.is_rma() || r.cfg.win_pool.enabled;
+            let registers = exec_cfg.method.is_rma() || exec_cfg.win_pool.enabled;
             ResizeReport {
                 index: r.index,
                 from: r.from,
                 to: r.to,
-                label: r.label.clone(),
-                predicted_reconf: r.predicted_reconf,
+                label,
+                predicted_reconf: m
+                    .mark_at(&format!("scen.r{}.live_pred", r.index))
+                    .unwrap_or(r.predicted_reconf),
                 observed_reconf: m
                     .span(&format!("scen.r{}.start", r.index), &format!("scen.r{}.end", r.index))
                     .unwrap_or(f64::NAN),
@@ -552,12 +709,34 @@ fn app_loop(
     mut sam: Sam,
     mut count: u64,
     mut next: usize,
+    mut recal: Option<Recalibrator>,
 ) {
     loop {
         if next < ctx.resizes.len() && count >= ctx.resizes[next].at_iter {
             let r = &ctx.resizes[next];
+            // Live re-resolution: the belief — replicated bit-identically
+            // on every rank — replaces the statically scheduled plan.
+            let (exec_cfg, live_pred) = match recal.as_ref() {
+                Some(rc) => {
+                    let (cfg, _label, pred) = live_resolve(
+                        rc.params(),
+                        ctx.cores_per_node,
+                        &ctx.sam,
+                        &ctx.decls,
+                        r.from,
+                        r.to,
+                        ctx.spawn_cost,
+                        rc.chunk_candidates(),
+                    );
+                    (cfg, Some(pred))
+                }
+                None => (r.cfg.clone(), None),
+            };
             p.metrics(|m| {
                 m.mark_min(&format!("scen.r{}.start", r.index), p.now());
+                if let Some(pred) = live_pred {
+                    m.mark_min(&format!("scen.r{}.live_pred", r.index), pred);
+                }
                 // Registration-throughput hook: snapshot the cumulative
                 // registration counters before the resize (no rank has
                 // registered anything for it yet), so the post-resize
@@ -567,12 +746,13 @@ fn app_loop(
                 m.mark_min(&format!("scen.r{}.reg_bytes0", r.index), rb);
                 m.mark_min(&format!("scen.r{}.reg_time0", r.index), rt);
             });
-            mam.cfg = r.cfg.clone();
+            mam.cfg = exec_cfg.clone();
             let ctx3 = ctx.clone();
             let ridx = next;
+            let body_cfg = exec_cfg;
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
                 Arc::new(move |dp: MpiProc, merged: CommId| {
-                    drain_entry(&ctx3, dp, merged, ridx);
+                    drain_entry(&ctx3, dp, merged, ridx, body_cfg.clone());
                 });
             let status = mam.reconfigure(p, comm, r.to, body);
             let mut n_it = 0u64;
@@ -608,6 +788,16 @@ fn app_loop(
                 m.mark_max(&format!("scen.r{}.reg_bytes1", r.index), rb);
                 m.mark_max(&format!("scen.r{}.reg_time1", r.index), rt);
             });
+            if let Some(rc) = recal.as_mut() {
+                // Mark-finality barrier: every continuing rank (sources
+                // and fresh drains alike) has written its end/counter
+                // marks before any rank reads them, so the observation
+                // below is the same bit pattern everywhere.
+                let _ = sync_count(p, comm, 0);
+                p.metrics(|m| {
+                    feed_observation(rc, m, r.index, r.from, r.to, ctx.cores_per_node, &ctx.decls);
+                });
+            }
             next += 1;
             continue;
         }
@@ -620,11 +810,13 @@ fn app_loop(
 }
 
 /// Entry point of drains spawned at resize `ridx`: mirror the
-/// redistribution, adopt the iteration count, continue as a regular
+/// redistribution (under the same configuration the sources executed —
+/// captured in the drain body, since a live-resolved choice is not the
+/// scheduled one), adopt the iteration count, continue as a regular
 /// rank (possibly through further resizes).
-fn drain_entry(ctx: &Arc<ScenCtx>, dp: MpiProc, merged: CommId, ridx: usize) {
+fn drain_entry(ctx: &Arc<ScenCtx>, dp: MpiProc, merged: CommId, ridx: usize, cfg: ReconfigCfg) {
     let r = &ctx.resizes[ridx];
-    let mam = Mam::drain_join(&dp, merged, r.from, r.to, &ctx.decls, r.cfg.clone());
+    let mam = Mam::drain_join(&dp, merged, r.from, r.to, &ctx.decls, cfg);
     let sam = Sam::new(ctx.sam.clone(), ctx.seed, dp.gpid());
     let count = sync_count(&dp, merged, 0);
     dp.metrics(|m| {
@@ -634,7 +826,27 @@ fn drain_entry(ctx: &Arc<ScenCtx>, dp: MpiProc, merged: CommId, ridx: usize) {
         m.mark_max(&format!("scen.r{}.reg_bytes1", r.index), rb);
         m.mark_max(&format!("scen.r{}.reg_time1", r.index), rt);
     });
-    app_loop(ctx, &dp, merged, mam, sam, count, ridx + 1);
+    let recal = if ctx.recalib_live {
+        // Rebuild the belief a continuing source holds at this point:
+        // replay the resizes this drain missed (their marks are final —
+        // each was sealed by its own post-resize barrier before the
+        // next resize, and this drain exists because resize `ridx`
+        // started), then join the sources' barrier and observe `ridx`
+        // with everyone else.
+        let mut rc = Recalibrator::new(ctx.net.clone());
+        let _ = sync_count(&dp, merged, 0);
+        dp.metrics(|m| {
+            for j in 0..=ridx {
+                let rj = &ctx.resizes[j];
+                let (cpn, decls) = (ctx.cores_per_node, &ctx.decls);
+                feed_observation(&mut rc, m, rj.index, rj.from, rj.to, cpn, decls);
+            }
+        });
+        Some(rc)
+    } else {
+        None
+    };
+    app_loop(ctx, &dp, merged, mam, sam, count, ridx + 1, recal);
 }
 
 /// Post-resize count agreement: allgather each rank's iteration count
@@ -826,6 +1038,41 @@ mod tests {
         let b = run_scenario(&spec);
         assert!(a.makespan.is_finite() && a.makespan > 0.0);
         assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn recalib_scenario_resolves_live_and_runs_deterministically() {
+        let mut spec = ScenarioSpec::rms_trace(true); // planner: Auto
+        spec.recalib = true;
+        let a = run_scenario(&spec);
+        assert_eq!(a.label, "auto+recalib");
+        assert_eq!(a.resizes.len(), 5);
+        assert!(a.makespan.is_finite() && a.makespan > 0.0);
+        for r in &a.resizes {
+            // The reported choice is the live resolution, not the
+            // static schedule, and its in-sim prediction mark is the
+            // accuracy baseline.
+            assert!(r.label.starts_with("live["), "{r:?}");
+            assert!(r.predicted_reconf.is_finite() && r.predicted_reconf > 0.0, "{r:?}");
+            assert!(r.observed_reconf.is_finite() && r.observed_reconf > 0.0, "{r:?}");
+        }
+        // The replicated-belief protocol (per-rank recalibrators plus
+        // drain replay) must stay bit-deterministic across runs.
+        let b = run_scenario(&spec);
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn recalib_off_leaves_the_auto_scenario_label_and_plan_static() {
+        // The off path never marks live predictions and reports the
+        // scheduled labels — the recalib field rides along inert.
+        let spec = ScenarioSpec::rms_trace(true);
+        assert!(!spec.recalib);
+        let rep = run_scenario(&spec);
+        assert_eq!(rep.label, "auto");
+        for r in &rep.resizes {
+            assert!(!r.label.starts_with("live["), "{r:?}");
+        }
     }
 
     #[test]

@@ -105,6 +105,22 @@ pub fn collect(quick: bool) -> Json {
         entries.push((format!("scenario.rms.{name}.makespan"), rep.makespan));
     }
 
+    // The same trace with the in-sim online recalibrator on: the
+    // replicated-belief protocol and its live re-planning stay under
+    // the gate alongside the static planner.
+    {
+        let mut sp = base.clone();
+        sp.planner = PlannerMode::Auto;
+        sp.recalib = true;
+        let rep = scenario::run_scenario(&sp);
+        entries.push(("scenario.rms.auto_recalib.makespan".to_string(), rep.makespan));
+    }
+
+    // Drift benchmarks: cumulative reconfiguration cost of the static
+    // and recalibrating arms, plus the episode index at which the
+    // recalibrated predictions settle under the 15% error bar.
+    entries.extend(super::drift::drift_bench_entries(quick));
+
     let obj: Vec<(&str, Json)> = vec![
         ("schema", Json::num(SCHEMA as f64)),
         // Workload provenance: bench-compare refuses to compare
@@ -139,8 +155,20 @@ mod tests {
             "scenario.rms.auto.makespan",
             "scenario.rms.col_blocking.makespan",
             "scenario.rms.rma_lockall_wd.makespan",
+            "scenario.rms.auto_recalib.makespan",
         ] {
             assert!(entries.contains_key(key), "missing {key}");
+        }
+        // Drift benchmarks: both arms and the convergence index per
+        // scenario, with every recalib arm converging within the gate.
+        for name in ["miscal", "hetero", "congest"] {
+            assert!(entries.contains_key(&format!("drift.{name}.static")), "{name}");
+            assert!(entries.contains_key(&format!("drift.{name}.recalib")), "{name}");
+            let k = entries
+                .get(&format!("recalib.{name}.converge_resizes"))
+                .and_then(|v| v.as_f64())
+                .unwrap();
+            assert!((1.0..=5.0).contains(&k), "{name}: converge_resizes {k}");
         }
     }
 

@@ -5,6 +5,7 @@
 //! proteo run --ns 20 --nd 160 --method rma-lockall --strategy wd
 //! proteo run --ns 20 --nd 160 --planner auto   # cost-model-driven choice
 //! proteo scenario --quick --compare            # closed-loop RMS trace
+//! proteo scenario --drift all --quick          # static vs recalibrating planner
 //! proteo ablation single-window
 //! proteo ablation register-sweep --ns 20 --nd 160
 //! proteo cg --iters 200      # AOT JAX/Pallas CG through PJRT
@@ -14,7 +15,7 @@
 use std::process::ExitCode;
 
 use proteo::config::ExperimentConfig;
-use proteo::experiments::{self, ablation, scenario, smoke, FigOptions};
+use proteo::experiments::{self, ablation, drift, scenario, smoke, FigOptions};
 use proteo::linalg::EllMatrix;
 use proteo::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use proteo::netmodel::NetParams;
@@ -56,6 +57,7 @@ fn cli() -> Cli {
                     "pipelined deregistration (teardown half of --rma-chunk): on | off",
                 )
                 .opt("planner", "fixed", "fixed | auto (cost-model-driven version choice)")
+                .opt("recalib", "off", "online NetParams recalibration (auto planner): on | off")
                 .flag("json", "emit the result as JSON"),
             Command::new(
                 "scenario",
@@ -67,6 +69,8 @@ fn cli() -> Cli {
             .opt("spawn-strategy", "sequential", "fixed version: sequential | parallel | async")
             .opt("win-pool", "off", "fixed version: on | off")
             .opt("rma-chunk", "0", "fixed version: pipelined chunk (KiB; 0 = off)")
+            .opt("recalib", "off", "online NetParams recalibration (auto planner): on | off")
+            .opt("drift", "", "run a drift benchmark instead: miscal | hetero | congest | all")
             .opt("seed", "12648430", "base RNG seed")
             .flag("quick", "CI-sized workload (10000x smaller problem)")
             .flag("compare", "also run the fixed anchor versions and print makespans")
@@ -74,7 +78,7 @@ fn cli() -> Cli {
             Command::new(
                 "ablation",
                 "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn | \
-                 rma-chunk | rma-chunk-shrink",
+                 rma-chunk | rma-chunk-shrink | recalib",
             )
             .opt("ns", "20", "source ranks (register-sweep)")
             .opt("nd", "160", "drain ranks (register-sweep)")
@@ -215,6 +219,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             .get("planner")
             .and_then(PlannerMode::parse)
             .ok_or("bad --planner (fixed | auto)")?;
+        spec.recalib = args
+            .get("recalib")
+            .and_then(parse_toggle)
+            .ok_or("bad --recalib (on | off)")?;
         if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
             spec.seed = seed;
         }
@@ -286,12 +294,35 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         "spawn" => println!("{}", ablation::spawn_strategies(&opts).render()),
         "rma-chunk" => println!("{}", ablation::rma_chunk(&opts).render()),
         "rma-chunk-shrink" => println!("{}", ablation::rma_chunk_shrink(&opts).render()),
+        "recalib" => println!("{}", ablation::recalib(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
     }
     Ok(())
 }
 
 fn cmd_scenario(args: &Args) -> Result<(), String> {
+    if let Some(which) = args.get("drift").filter(|s| !s.is_empty()) {
+        // Drift benchmarks compare the static planner against the
+        // online-recalibrating one under a model/environment mismatch;
+        // they replace the RMS trace entirely.
+        let quick = args.flag("quick");
+        let scenarios = if which == "all" {
+            drift::DriftScenario::all(quick)
+        } else {
+            vec![drift::DriftScenario::by_name(which, quick).ok_or_else(|| {
+                format!("unknown drift scenario '{which}' (miscal | hetero | congest | all)")
+            })?]
+        };
+        for sc in &scenarios {
+            let report = drift::run_drift(sc);
+            if args.flag("json") {
+                println!("{}", report.to_json().to_pretty());
+            } else {
+                println!("{}", report.render(args.flag("compare")));
+            }
+        }
+        return Ok(());
+    }
     let mut spec = scenario::ScenarioSpec::rms_trace(args.flag("quick"));
     spec.planner = args
         .get("planner")
@@ -313,6 +344,10 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
         .get("rma-chunk")
         .and_then(|s| s.parse::<u64>().ok())
         .ok_or("bad --rma-chunk (KiB, non-negative integer; 0 = off)")?;
+    spec.recalib = args
+        .get("recalib")
+        .and_then(parse_toggle)
+        .ok_or("bad --recalib (on | off)")?;
     if spec.planner == PlannerMode::Fixed
         && !proteo::mam::is_valid_version(spec.method, spec.strategy)
     {
@@ -457,12 +492,18 @@ fn cmd_bench_promote(args: &Args) -> Result<(), String> {
          entry regresses by more than 10%. Re-promote a green run's BENCH_pr.json \
          artifact to refresh it."
     );
-    let out_doc = Json::obj(vec![
+    let mut fields = vec![
         ("entries", Json::Obj(entries.clone())),
         ("mode", doc.get("mode").cloned().unwrap_or_else(|| Json::str("quick"))),
         ("note", Json::str(note)),
         ("schema", doc.get("schema").cloned().unwrap_or(Json::Num(1.0))),
-    ]);
+    ];
+    // Carry the wall clock forward so the soft wall_s comparison in
+    // bench-compare has a baseline to warn against.
+    if let Some(w) = doc.get("wall_s").cloned() {
+        fields.push(("wall_s", w));
+    }
+    let out_doc = Json::obj(fields);
     std::fs::write(&out, out_doc.to_pretty()).map_err(|e| format!("{out}: {e}"))?;
     println!("promoted {} entries from {src} into {out}", entries.len());
     Ok(())

@@ -33,11 +33,15 @@
 //!   prices every `(method × strategy × spawn × pool)` candidate with
 //!   `netmodel`'s prediction API (refined by exact DES micro-probes)
 //!   and picks the version per resize (`--planner auto`),
+//! * [`recalib`]   — online recalibration of the planner's constants
+//!   from the spans/counters each resize already measures, plus the
+//!   measured-throughput adaptive chunk rule (`--recalib on`),
 //! * [`reconfig`]  — the reconfiguration driver tying it together.
 
 pub mod blockdist;
 pub mod collective;
 pub mod planner;
+pub mod recalib;
 pub mod reconfig;
 pub mod registry;
 pub mod rma;
@@ -46,6 +50,7 @@ pub mod winpool;
 
 pub use blockdist::{block_of, drain_plan, source_plan, Block, DrainPlan, SourcePlan};
 pub use planner::{Candidate, Objective, PlannerInputs, PlannerMode, ReconfigPlan};
+pub use recalib::{Observation, RecalibCfg, Recalibrator};
 pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
 pub use registry::{DataDecl, DataEntry, DataKind, Registry};
 pub use spawn::SpawnStrategy;

@@ -165,6 +165,7 @@ impl Candidate {
             rma_chunk_kib: self.rma_chunk_kib,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         }
     }
 }
@@ -236,6 +237,13 @@ pub struct PlannerInputs {
     pub objective: Objective,
     /// Refine blocking candidates with exact DES micro-probes.
     pub probe: bool,
+    /// Extra chunk sizes (KiB) to price for the RMA methods on top of
+    /// [`CHUNK_CANDIDATES_KIB`] — the online recalibrator injects its
+    /// measured-throughput per-structure choices here
+    /// ([`crate::mam::Recalibrator::chunk_candidates`]).  Duplicates
+    /// of the static grid are ignored; empty = the static grid alone
+    /// (bit-identical to the pre-recalibration enumeration).
+    pub extra_chunks_kib: Vec<u64>,
 }
 
 /// Price one candidate with the closed-form model.
@@ -302,6 +310,21 @@ pub struct ProbeCost {
     pub redist_time: f64,
 }
 
+/// Additional measurements of one probe, read by the drift harness:
+/// the spawn-block/redistribution split and the registration counters
+/// — exactly the feedback the online recalibrator
+/// ([`crate::mam::Recalibrator`]) consumes per resize.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeExtras {
+    /// Reconfigure entry → redistribution start (the spawn block; 0
+    /// for shrinks).
+    pub spawn_block: f64,
+    /// Cumulative `rma.reg_bytes` of the isolated world.
+    pub reg_bytes: f64,
+    /// Cumulative `rma.reg_time` of the isolated world.
+    pub reg_secs: f64,
+}
+
 /// Simulate exactly one reconfiguration of the declared data in a
 /// fresh world — same topology rule, same calibrated parameters, same
 /// collective sequence as the real run — and measure its span.  The
@@ -310,6 +333,40 @@ pub struct ProbeCost {
 /// the application will observe (warm-up skew shifts every candidate
 /// identically and cancels in the comparison).
 pub fn probe_reconfiguration(inp: &PlannerInputs, cand: &Candidate) -> ProbeCost {
+    probe_metrics(inp, cand, |m| ProbeCost {
+        reconf_time: m.span("mam.reconf_start", "mam.reconf_end").unwrap_or(f64::NAN),
+        redist_time: m.span("mam.redist_start", "mam.redist_end").unwrap_or(f64::NAN),
+    })
+}
+
+/// [`probe_reconfiguration`] plus the recalibration feedback: the same
+/// isolated episode, read back as `(reconf span, extras)`.
+pub fn probe_reconfiguration_extras(
+    inp: &PlannerInputs,
+    cand: &Candidate,
+) -> (f64, ProbeExtras) {
+    probe_metrics(inp, cand, |m| {
+        (
+            m.span("mam.reconf_start", "mam.reconf_end").unwrap_or(f64::NAN),
+            ProbeExtras {
+                spawn_block: m
+                    .span("mam.reconf_start", "mam.redist_start")
+                    .unwrap_or(0.0)
+                    .max(0.0),
+                reg_bytes: m.counter("rma.reg_bytes").unwrap_or(0.0),
+                reg_secs: m.counter("rma.reg_time").unwrap_or(0.0),
+            },
+        )
+    })
+}
+
+/// Shared probe body: run the isolated reconfiguration and hand the
+/// final world metrics to `read`.
+fn probe_metrics<R>(
+    inp: &PlannerInputs,
+    cand: &Candidate,
+    read: impl FnOnce(&crate::monitor::Metrics) -> R,
+) -> R {
     let (ns, nd) = (inp.ns, inp.nd);
     let n = ns.max(nd);
     let cpn = inp.cores_per_node.max(1);
@@ -357,16 +414,7 @@ pub fn probe_reconfiguration(inp: &PlannerInputs, cand: &Candidate) -> ProbeCost
     });
     sim.run().expect("planner probe simulation failed");
     let w = world.lock().unwrap();
-    ProbeCost {
-        reconf_time: w
-            .metrics
-            .span("mam.reconf_start", "mam.reconf_end")
-            .unwrap_or(f64::NAN),
-        redist_time: w
-            .metrics
-            .span("mam.redist_start", "mam.redist_end")
-            .unwrap_or(f64::NAN),
-    }
+    read(&w.metrics)
 }
 
 /// Analytic spawn-block time of one spawn strategy for this resize
@@ -398,6 +446,15 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
     let mut candidates: Vec<CandidateCost> = Vec::new();
     let mut seen: std::collections::BTreeSet<((u8, u8, u8, bool), u64)> =
         std::collections::BTreeSet::new();
+    // The static chunk grid, extended by any measured-throughput
+    // choices the recalibrator injected (appended, so the enumeration
+    // order — and hence every tie-break — is unchanged when empty).
+    let mut rma_chunks: Vec<u64> = CHUNK_CANDIDATES_KIB.to_vec();
+    for &k in &inp.extra_chunks_kib {
+        if !rma_chunks.contains(&k) {
+            rma_chunks.push(k);
+        }
+    }
     for m in Method::all() {
         for s in Strategy::all() {
             if !is_valid_version(m, s) {
@@ -405,7 +462,7 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
             }
             for pool in [WinPoolPolicy::off(), WinPoolPolicy::on()] {
                 let chunks: &[u64] =
-                    if m.is_rma() { &CHUNK_CANDIDATES_KIB } else { &CHUNK_CANDIDATES_KIB[..1] };
+                    if m.is_rma() { &rma_chunks } else { &CHUNK_CANDIDATES_KIB[..1] };
                 for &chunk in chunks {
                     let candidate = Candidate {
                         method: m,
@@ -599,6 +656,7 @@ pub fn resolve_internal(
         t_iter_dst: 0.0,
         objective: Objective::ReconfTime,
         probe: false,
+        extra_chunks_kib: Vec::new(),
     };
     plan(&inp).choice.cfg(base.spawn_cost)
 }
@@ -633,6 +691,7 @@ mod tests {
             t_iter_dst: 1e-3,
             objective: Objective::ReconfTime,
             probe,
+            extra_chunks_kib: Vec::new(),
         }
     }
 
@@ -715,6 +774,29 @@ mod tests {
             );
             assert!(seen.insert(key), "duplicate candidate {c:?}");
         }
+    }
+
+    #[test]
+    fn extra_chunks_extend_the_grid_without_perturbing_the_base() {
+        let base = plan(&tiny_inputs(4, 8, false));
+        // A novel measured chunk is enumerated for the RMA methods.
+        let mut inp = tiny_inputs(4, 8, false);
+        inp.extra_chunks_kib = vec![512];
+        let ext = plan(&inp);
+        assert!(
+            ext.candidates
+                .iter()
+                .any(|cc| cc.candidate.method.is_rma() && cc.candidate.rma_chunk_kib == 512),
+            "injected chunk not priced"
+        );
+        assert!(ext.candidates.len() > base.candidates.len());
+        // A duplicate of the static grid changes nothing at all.
+        let mut inp = tiny_inputs(4, 8, false);
+        inp.extra_chunks_kib = vec![1024, 0];
+        let dup = plan(&inp);
+        assert_eq!(dup.candidates.len(), base.candidates.len());
+        assert_eq!(dup.choice, base.choice);
+        assert_eq!(dup.predicted_reconf.to_bits(), base.predicted_reconf.to_bits());
     }
 
     #[test]

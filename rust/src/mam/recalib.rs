@@ -1,0 +1,525 @@
+//! Online recalibration of the planner's `NetParams` (ROADMAP item 1).
+//!
+//! PRs 1–5 plan every reconfiguration against seed-calibrated constants
+//! (`NetParams::sarteco25`) that are never updated, yet every resize
+//! already measures the inputs needed to fix them: the `rma.reg_bytes`
+//! / `rma.reg_time` counters expose the *actual* registration
+//! throughput, and the reconfiguration/spawn spans expose the actual
+//! wire and `MPI_Comm_spawn` costs.  [`Recalibrator`] closes that loop:
+//! after each resize the scenario harness feeds it one [`Observation`]
+//! and the next resize is planned against the updated belief.
+//!
+//! Three parameter groups are learned, each behind its own
+//! [`TermGate`] (confidence + freeze threshold, so one noisy resize
+//! cannot wreck the model):
+//!
+//! * **β_register** — directly observable as `reg_time / reg_bytes`
+//!   whenever the chosen method registered windows.
+//! * **spawn terms** (`spawn_launch`, `spawn_per_proc`, `merge_round`)
+//!   — the decomposed `MPI_Comm_spawn` model is affine in these with
+//!   known coefficients (`1`, `waves`, `merge rounds`), so a windowed
+//!   ridge least-squares over the observed spawn blocks recovers them.
+//! * **β_inter** — the residual span error after removing the spawn
+//!   and registration residuals is ≈ affine in β_inter with slope
+//!   given by the bottleneck node's serialized inter-node bytes
+//!   ([`crate::netmodel::costmodel::wire_slope`]); a trust-region
+//!   Newton step converges geometrically even with the slope
+//!   misestimated by ~2×.
+//!
+//! The same measured registration throughput also drives per-structure
+//! adaptive chunk sizing ([`Recalibrator::chunk_kib_for`]), replacing
+//! the static `rma_chunk_kib` ablation sweep: the pipelined-registration
+//! sweet spot balances the per-chunk `win_setup` overhead against the
+//! exposure of the first (unoverlapped) chunk, giving the classic
+//! square-root rule `c* = sqrt(bytes · win_setup / β_reg)`.
+
+use std::collections::BTreeMap;
+
+use crate::netmodel::calibration::NetParams;
+
+/// Tuning knobs of the estimator.  The defaults are what the drift
+/// scenarios and the RMS closed loop use.
+#[derive(Clone, Debug)]
+pub struct RecalibCfg {
+    /// Number of initial (trust-phase) observations per term during
+    /// which proposals are accepted as full steps (clamped by
+    /// `step_clamp`) instead of EWMA-blended.
+    pub min_obs: usize,
+    /// EWMA blend factor once a term has left its trust phase.
+    pub ewma: f64,
+    /// Relative deviation beyond which a post-trust proposal is
+    /// rejected as an outlier (the freeze threshold).
+    pub freeze: f64,
+    /// Number of consecutive *agreeing* outliers accepted as a regime
+    /// change (the network really did shift).
+    pub regime_hits: usize,
+    /// Per-step multiplicative trust region: a single update can move
+    /// a term by at most this factor (and at least its inverse).
+    pub step_clamp: f64,
+    /// Max spawn observations retained for the ridge solve.
+    pub spawn_window: usize,
+}
+
+impl Default for RecalibCfg {
+    fn default() -> Self {
+        RecalibCfg {
+            min_obs: 3,
+            ewma: 0.5,
+            freeze: 0.5,
+            regime_hits: 2,
+            step_clamp: 4.0,
+            spawn_window: 8,
+        }
+    }
+}
+
+/// One resize's worth of evidence, fed to [`Recalibrator::observe`].
+///
+/// All span fields are *virtual-time* seconds taken from the DES
+/// metrics of the resize (identical on every rank, so feeding one
+/// recalibrator per rank keeps the planner rank-independent).
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// Source / destination process counts of the resize.
+    pub ns: usize,
+    pub nd: usize,
+    /// Observed reconfiguration span (`mam.reconf_start..reconf_end`).
+    pub reconf: f64,
+    /// What the belief predicted for that span when the resize was
+    /// planned (probe or analytic — same model either way).
+    pub predicted: f64,
+    /// Observed spawn block (`mam.reconf_start..redist_start`); 0 for
+    /// shrinks.
+    pub spawn_block: f64,
+    /// The belief's prediction of `spawn_block`.
+    pub predicted_spawn_block: f64,
+    /// Coefficients of the decomposed spawn model for the strategy the
+    /// resize actually used: `Some((waves, merge_rounds))` for
+    /// Parallel, `Some((0, 0))` for Async (its source block is the bare
+    /// launch handshake), `None` for Sequential / shrinks (the atomic
+    /// 0.25 s constant is a `ReconfigCfg` field, not a `NetParam` —
+    /// nothing to learn).
+    pub spawn_waves: Option<(f64, f64)>,
+    /// Delta of the `rma.reg_bytes` / `rma.reg_time` counters across
+    /// the resize (0 for COL — no registration evidence).
+    pub reg_bytes: f64,
+    pub reg_secs: f64,
+    /// d(span)/d(β_inter) estimate for this resize's shape
+    /// ([`crate::netmodel::costmodel::wire_slope`]); ≤ 0 disables the
+    /// β_inter update for this observation.
+    pub wire_slope: f64,
+}
+
+/// Per-term confidence gate: trust phase → EWMA with freeze threshold
+/// → regime-change override.
+#[derive(Clone, Debug, Default)]
+struct TermGate {
+    /// Accepted updates so far.
+    n: usize,
+    /// Consecutive rejected proposals.
+    reject_streak: usize,
+    /// The first rejected proposal of the current streak.
+    held: f64,
+}
+
+impl TermGate {
+    /// Feed one proposal; returns the new belief for the term.
+    fn apply(&mut self, cfg: &RecalibCfg, current: f64, proposal: f64) -> f64 {
+        if !proposal.is_finite() || proposal <= 0.0 {
+            return current;
+        }
+        let clamp = |v: f64| v.clamp(current / cfg.step_clamp, current * cfg.step_clamp);
+        if self.n < cfg.min_obs {
+            // Trust phase: full (clamped) steps while evidence is thin.
+            self.n += 1;
+            self.reject_streak = 0;
+            return clamp(proposal);
+        }
+        let dev = (proposal - current).abs() / current.abs().max(1e-300);
+        if dev <= cfg.freeze {
+            self.n += 1;
+            self.reject_streak = 0;
+            return current + cfg.ewma * (proposal - current);
+        }
+        // Outlier.  A lone one is frozen out; `regime_hits` consecutive
+        // *agreeing* outliers are accepted as a genuine regime change.
+        let agrees = self.reject_streak > 0
+            && (proposal - self.held).abs() / self.held.abs().max(1e-300) <= cfg.freeze;
+        if agrees {
+            self.reject_streak += 1;
+            if self.reject_streak >= cfg.regime_hits {
+                self.n += 1;
+                self.reject_streak = 0;
+                return proposal; // confirmed regime: jump, no clamp
+            }
+        } else {
+            self.reject_streak = 1;
+            self.held = proposal;
+        }
+        current
+    }
+}
+
+/// The online estimator: owns the live `NetParams` belief plus the
+/// per-structure adaptive chunk hints.
+#[derive(Clone, Debug)]
+pub struct Recalibrator {
+    cfg: RecalibCfg,
+    params: NetParams,
+    gate_reg: TermGate,
+    gate_inter: TermGate,
+    gate_launch: TermGate,
+    gate_spp: TermGate,
+    gate_merge: TermGate,
+    /// Ring of spawn evidence rows: coefficients (1, waves, rounds)
+    /// against the observed spawn block.
+    spawn_rows: Vec<([f64; 3], f64)>,
+    /// Per-observation |observed − predicted| / observed trajectory.
+    errs: Vec<f64>,
+    /// Per-structure adaptive chunk choices (KiB), persisted across
+    /// resizes like the window pool itself.
+    chunk_hints: BTreeMap<String, u64>,
+}
+
+impl Recalibrator {
+    pub fn new(seed: NetParams) -> Recalibrator {
+        Recalibrator::with_cfg(seed, RecalibCfg::default())
+    }
+
+    pub fn with_cfg(seed: NetParams, cfg: RecalibCfg) -> Recalibrator {
+        Recalibrator {
+            cfg,
+            params: seed,
+            gate_reg: TermGate::default(),
+            gate_inter: TermGate::default(),
+            gate_launch: TermGate::default(),
+            gate_spp: TermGate::default(),
+            gate_merge: TermGate::default(),
+            spawn_rows: Vec::new(),
+            errs: Vec::new(),
+            chunk_hints: BTreeMap::new(),
+        }
+    }
+
+    /// The live belief.
+    pub fn params(&self) -> &NetParams {
+        &self.params
+    }
+
+    /// Predicted-vs-observed relative error per observation, in order.
+    pub fn rel_err_history(&self) -> &[f64] {
+        &self.errs
+    }
+
+    /// First 1-based observation index from which every relative error
+    /// (including later ones) stays below `tol`; `None` if the latest
+    /// error is still at or above `tol`.
+    pub fn converge_at(&self, tol: f64) -> Option<usize> {
+        if self.errs.is_empty() {
+            return None;
+        }
+        let mut idx = None;
+        for (i, e) in self.errs.iter().enumerate() {
+            if *e < tol {
+                if idx.is_none() {
+                    idx = Some(i + 1);
+                }
+            } else {
+                idx = None;
+            }
+        }
+        idx
+    }
+
+    /// Digest one resize's evidence into the belief.
+    pub fn observe(&mut self, obs: &Observation) {
+        if obs.reconf > 0.0 && obs.predicted.is_finite() {
+            self.errs.push((obs.reconf - obs.predicted).abs() / obs.reconf);
+        }
+
+        // --- β_register: directly observable throughput.  The secs
+        // counter includes the per-window/segment `win_setup`, a
+        // ≤ ~1% bias at the MB-scale exposures we care about.
+        let reg_before = self.params.beta_register;
+        if obs.reg_bytes > 0.0 && obs.reg_secs > 0.0 {
+            let proposal = obs.reg_secs / obs.reg_bytes;
+            self.params.beta_register =
+                self.gate_reg.apply(&self.cfg, self.params.beta_register, proposal);
+        }
+        let reg_moved =
+            (self.params.beta_register - reg_before).abs() / reg_before.abs().max(1e-300);
+
+        // --- Spawn terms: windowed ridge least-squares on the affine
+        // model  block = launch + waves·per_proc + rounds·merge_round.
+        if let Some((waves, rounds)) = obs.spawn_waves {
+            if obs.spawn_block > 0.0 {
+                if self.spawn_rows.len() >= self.cfg.spawn_window {
+                    self.spawn_rows.remove(0);
+                }
+                self.spawn_rows.push(([1.0, waves, rounds], obs.spawn_block));
+                let x0 = [
+                    self.params.spawn_launch,
+                    self.params.spawn_per_proc,
+                    self.params.merge_round,
+                ];
+                if let Some(x) = ridge_solve(&self.spawn_rows, x0) {
+                    let cl = |v: f64| v.clamp(1e-6, 10.0);
+                    self.params.spawn_launch =
+                        self.gate_launch.apply(&self.cfg, x0[0], cl(x[0]));
+                    self.params.spawn_per_proc =
+                        self.gate_spp.apply(&self.cfg, x0[1], cl(x[1]));
+                    self.params.merge_round =
+                        self.gate_merge.apply(&self.cfg, x0[2], cl(x[2]));
+                }
+            }
+        }
+
+        // --- β_inter: trust-region Newton on the wire residual.
+        // Staged learning: while β_register is still moving (> 20% this
+        // step) its share of the span residual is unreliable, so the
+        // wire update waits a round rather than chase it.
+        if obs.wire_slope > 0.0 && reg_moved <= 0.2 {
+            let spawn_resid = obs.spawn_block - obs.predicted_spawn_block;
+            let reg_resid = if obs.reg_bytes > 0.0 {
+                obs.reg_secs - obs.reg_bytes * reg_before
+            } else {
+                0.0
+            };
+            let wire_resid = (obs.reconf - obs.predicted) - spawn_resid - reg_resid;
+            if wire_resid.is_finite() {
+                let cur = self.params.beta_inter;
+                let proposal =
+                    (cur + wire_resid / obs.wire_slope).max(cur / self.cfg.step_clamp);
+                self.params.beta_inter = self.gate_inter.apply(&self.cfg, cur, proposal);
+            }
+        }
+    }
+
+    /// Adaptive pipelined-registration chunk for a structure whose
+    /// per-source exposure is `src_bytes`, from the *measured*
+    /// registration throughput: `c* = sqrt(bytes · win_setup / β_reg)`
+    /// balances per-chunk `win_setup` against first-chunk exposure.
+    /// Returns a power-of-two KiB in `[64, 16384]`, or 0 (unchunked)
+    /// when the exposure would not span even two chunks.
+    pub fn chunk_kib_for(&self, src_bytes: u64) -> u64 {
+        if src_bytes == 0 || self.params.beta_register <= 0.0 {
+            return 0;
+        }
+        let c = (src_bytes as f64 * self.params.win_setup / self.params.beta_register).sqrt();
+        let kib = (c / 1024.0).max(1.0);
+        // Round to the nearest power of two, then clamp to the range
+        // the chunked lifecycle was validated over (PR 4/5 ablations).
+        let pow2 = 2f64.powf(kib.log2().round());
+        let kib = (pow2 as u64).clamp(64, 16 * 1024);
+        if src_bytes <= 2 * kib * 1024 {
+            0
+        } else {
+            kib
+        }
+    }
+
+    /// Compute-and-persist: the hint survives across resizes alongside
+    /// the window pool, so later resizes of the same structure reuse it.
+    pub fn note_chunk(&mut self, name: &str, src_bytes: u64) -> u64 {
+        let kib = self.chunk_kib_for(src_bytes);
+        self.chunk_hints.insert(name.to_string(), kib);
+        kib
+    }
+
+    /// The persisted per-structure chunk hints (KiB; 0 = unchunked).
+    pub fn chunk_hints(&self) -> &BTreeMap<String, u64> {
+        &self.chunk_hints
+    }
+
+    /// Distinct non-zero chunk hints, for injection into the planner's
+    /// candidate enumeration ([`crate::mam::PlannerInputs`]'s
+    /// `extra_chunks_kib`).
+    pub fn chunk_candidates(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.chunk_hints.values().copied().filter(|k| *k > 0).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Solve `min ‖A x − b‖² + λ‖x − x0‖²` for the 3-term spawn model.
+/// The tiny ridge pins the under-determined directions to the current
+/// belief (min-deviation fit) while leaving the determined directions
+/// essentially exact.
+fn ridge_solve(rows: &[([f64; 3], f64)], x0: [f64; 3]) -> Option<[f64; 3]> {
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut atb = [0.0f64; 3];
+    for (a, b) in rows {
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += a[i] * a[j];
+            }
+            atb[i] += a[i] * b;
+        }
+    }
+    let trace = ata[0][0] + ata[1][1] + ata[2][2];
+    let lambda = 1e-6 * (1.0 + trace / 3.0);
+    for i in 0..3 {
+        ata[i][i] += lambda;
+        atb[i] += lambda * x0[i];
+    }
+    solve3(ata, atb)
+}
+
+/// Gaussian elimination with partial pivoting for a 3×3 system.
+fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        let piv = (col..3).max_by(|i, j| {
+            m[*i][col].abs().partial_cmp(&m[*j][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        m.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..3 {
+            let f = m[row][col] / m[col][col];
+            for k in col..3 {
+                m[row][k] -= f * m[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 3];
+    for col in (0..3).rev() {
+        let mut s = b[col];
+        for k in col + 1..3 {
+            s -= m[col][k] * x[k];
+        }
+        x[col] = s / m[col][col];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg_obs(bytes: f64, secs: f64) -> Observation {
+        Observation {
+            ns: 4,
+            nd: 16,
+            reconf: 1.0,
+            predicted: 1.0,
+            spawn_block: 0.0,
+            predicted_spawn_block: 0.0,
+            spawn_waves: None,
+            reg_bytes: bytes,
+            reg_secs: secs,
+            wire_slope: 0.0,
+        }
+    }
+
+    #[test]
+    fn beta_register_recovers_in_one_observation() {
+        let mut r = Recalibrator::new(NetParams::test_simple());
+        // 1 GB registered in 2 s → β̂ = 2e-9 (seed was 1e-9): a 2×
+        // trust-phase step lands exactly on the measurement.
+        r.observe(&reg_obs(1e9, 2.0));
+        let b = r.params().beta_register;
+        assert!((b - 2e-9).abs() / 2e-9 < 1e-12, "b={b}");
+    }
+
+    #[test]
+    fn spawn_terms_solve_exactly_from_three_shapes() {
+        let mut r = Recalibrator::new(NetParams::test_simple());
+        let (launch, spp, mr) = (0.16, 0.036, 2.0e-3);
+        let shapes: [(f64, f64); 3] = [(7.0, 4.0), (3.0, 4.0), (0.0, 0.0)];
+        // Two sweeps: the first may clamp individual components while
+        // evidence accumulates, the second (rows now span the space)
+        // settles every gate on the exact fit.
+        for _ in 0..2 {
+            for (w, rounds) in shapes {
+                let block = launch + w * spp + rounds * mr;
+                let mut o = reg_obs(0.0, 0.0);
+                o.spawn_block = block;
+                o.predicted_spawn_block = block;
+                o.spawn_waves = Some((w, rounds));
+                r.observe(&o);
+            }
+        }
+        let p = r.params();
+        assert!((p.spawn_launch - launch).abs() / launch < 0.01, "{}", p.spawn_launch);
+        assert!((p.spawn_per_proc - spp).abs() / spp < 0.01, "{}", p.spawn_per_proc);
+        assert!((p.merge_round - mr).abs() / mr < 0.01, "{}", p.merge_round);
+    }
+
+    #[test]
+    fn freeze_blocks_one_outlier_but_two_agreeing_shift_the_regime() {
+        let mut r = Recalibrator::new(NetParams::test_simple());
+        // Leave the trust phase with consistent observations.
+        for _ in 0..3 {
+            r.observe(&reg_obs(1e9, 1.0)); // β̂ = 1e-9 = seed
+        }
+        let settled = r.params().beta_register;
+        // One 10× outlier: frozen out, belief bit-unchanged.
+        r.observe(&reg_obs(1e9, 10.0));
+        assert_eq!(r.params().beta_register.to_bits(), settled.to_bits());
+        // A second agreeing outlier: genuine regime change, accepted.
+        r.observe(&reg_obs(1e9, 10.0));
+        let b = r.params().beta_register;
+        assert!((b - 1e-8).abs() / 1e-8 < 1e-12, "b={b}");
+    }
+
+    #[test]
+    fn beta_inter_newton_step_is_trust_clamped() {
+        let mut r = Recalibrator::new(NetParams::test_simple());
+        let seed = r.params().beta_inter;
+        // Residual implies a 100× jump; the trust region caps it at 4×.
+        let mut o = reg_obs(0.0, 0.0);
+        o.reconf = 2.0;
+        o.predicted = 1.0;
+        o.wire_slope = 1.0 / (99.0 * seed); // proposal = 100 × seed
+        r.observe(&o);
+        let b = r.params().beta_inter;
+        assert!((b - 4.0 * seed).abs() / seed < 1e-9, "b={b}");
+    }
+
+    #[test]
+    fn chunk_rule_scales_with_measured_throughput() {
+        let r = Recalibrator::new(NetParams::sarteco25());
+        // sarteco25: sqrt(256 MiB · 30 µs · 3.7 GB/s) ≈ 5.5 MB → 4 MiB.
+        let big = r.chunk_kib_for(256 * 1024 * 1024);
+        assert!((64..=16 * 1024).contains(&big), "big={big}");
+        assert!(big.is_power_of_two());
+        // 8× slower registration shrinks the sweet spot.
+        let mut slow = Recalibrator::new(NetParams::sarteco25());
+        slow.params.beta_register *= 8.0;
+        let s = slow.chunk_kib_for(256 * 1024 * 1024);
+        assert!(s <= big, "s={s} big={big}");
+        // Tiny exposures stay unchunked.
+        assert_eq!(r.chunk_kib_for(8 * 1024), 0);
+    }
+
+    #[test]
+    fn chunk_hints_persist_per_structure() {
+        let mut r = Recalibrator::new(NetParams::sarteco25());
+        let a = r.note_chunk("xs", 256 * 1024 * 1024);
+        let b = r.note_chunk("idx", 4 * 1024);
+        assert_eq!(r.chunk_hints().get("xs"), Some(&a));
+        assert_eq!(r.chunk_hints().get("idx"), Some(&b));
+        assert_eq!(b, 0);
+        assert_eq!(r.chunk_candidates(), vec![a]);
+    }
+
+    #[test]
+    fn converge_at_requires_staying_below_tol() {
+        let mut r = Recalibrator::new(NetParams::test_simple());
+        for (obs, pred) in [(1.0, 0.5), (1.0, 0.9), (1.0, 1.3), (1.0, 0.95), (1.0, 1.01)] {
+            let mut o = reg_obs(0.0, 0.0);
+            o.reconf = obs;
+            o.predicted = pred;
+            r.observe(&o);
+        }
+        // errs = [0.5, 0.1, 0.3, 0.05, 0.01] → stays < 0.15 from #4.
+        assert_eq!(r.converge_at(0.15), Some(4));
+        assert_eq!(r.converge_at(0.6), Some(1));
+        assert_eq!(r.converge_at(0.02), Some(5));
+        assert_eq!(r.converge_at(0.005), None);
+    }
+}

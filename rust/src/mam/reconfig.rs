@@ -118,6 +118,13 @@ pub struct ReconfigCfg {
     /// with `mam::planner::plan` up front and pass a `Fixed`
     /// configuration down instead.
     pub planner: PlannerMode,
+    /// Online recalibration (`--recalib`): when `true`, `Auto`
+    /// planning consults the live `NetParams` estimate installed via
+    /// [`Mam::set_live_params`] (fed by the scenario/RMS loop from the
+    /// spans and counters of completed resizes) instead of the static
+    /// calibration the simulation was launched with.  `false`
+    /// (default) is bit-identical to the pre-recalibration planner.
+    pub recalib: bool,
 }
 
 impl Default for ReconfigCfg {
@@ -131,6 +138,7 @@ impl Default for ReconfigCfg {
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         }
     }
 }
@@ -222,11 +230,24 @@ pub struct Mam {
     pub registry: Registry,
     pub cfg: ReconfigCfg,
     inflight: Option<Reconfiguration>,
+    /// Live recalibrated `NetParams` ([`ReconfigCfg::recalib`]): when
+    /// set and `cfg.recalib` is on, `Auto` planning prices candidates
+    /// against this belief instead of the simulation's static
+    /// calibration.  Must be fed identically on every rank (the
+    /// recalibrator digests global metrics, so it is) to preserve the
+    /// planner's rank-independence contract.
+    live: Option<crate::netmodel::calibration::NetParams>,
 }
 
 impl Mam {
     pub fn new(registry: Registry, cfg: ReconfigCfg) -> Mam {
-        Mam { registry, cfg, inflight: None }
+        Mam { registry, cfg, inflight: None, live: None }
+    }
+
+    /// Install the online estimator's current belief (no-op for
+    /// planning unless `cfg.recalib && cfg.planner == Auto`).
+    pub fn set_live_params(&mut self, p: crate::netmodel::calibration::NetParams) {
+        self.live = Some(p);
     }
 
     /// Is a background redistribution currently running?
@@ -247,8 +268,13 @@ impl Mam {
     /// arrives at the same plan without communicating).
     fn active_cfg(&self, proc: &MpiProc, ns: usize, nd: usize) -> ReconfigCfg {
         if self.cfg.planner == PlannerMode::Auto {
+            let static_params = proc.net_params();
+            let net = match (&self.live, self.cfg.recalib) {
+                (Some(live), true) => live,
+                _ => &static_params,
+            };
             planner::resolve_internal(
-                &proc.net_params(),
+                net,
                 proc.cores_per_node(),
                 self.registry.decls(),
                 ns,
@@ -752,6 +778,7 @@ mod tests {
                 rma_chunk_kib,
                 rma_dereg,
                 planner: PlannerMode::Fixed,
+                recalib: false,
             };
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
@@ -1066,6 +1093,7 @@ mod tests {
                 rma_chunk_kib: 0,
                 rma_dereg: true,
                 planner: PlannerMode::Auto,
+                recalib: false,
             };
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
@@ -1119,6 +1147,38 @@ mod tests {
     }
 
     #[test]
+    fn live_params_steer_auto_resolution_only_when_recalib_is_on() {
+        let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+        sim.launch(1, |p| {
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, 100_000, Payload::virt(100_000));
+            let cfg = ReconfigCfg {
+                spawn_cost: 0.25,
+                planner: PlannerMode::Auto,
+                ..ReconfigCfg::default()
+            };
+            let mut mam = Mam::new(reg, cfg);
+            let static_choice = mam.active_cfg(&p, 2, 8);
+            // Analytically, a grow's cheapest spawn block is Async's
+            // bare launch handshake (0.05 s < the 0.25 s sequential
+            // constant under `test_simple`).
+            assert_eq!(static_choice.spawn_strategy, SpawnStrategy::Async);
+            // An absurd live belief — launches cost 10 s, so no
+            // decomposed strategy can beat the sequential constant.
+            // It must be ignored while recalib is off...
+            mam.set_live_params(NetParams::test_simple().with(|n| n.spawn_launch = 10.0));
+            let off = mam.active_cfg(&p, 2, 8);
+            assert_eq!(off.spawn_strategy, static_choice.spawn_strategy);
+            assert_eq!(off.method, static_choice.method);
+            // ...and consulted once it is on.
+            mam.cfg.recalib = true;
+            let on = mam.active_cfg(&p, 2, 8);
+            assert_eq!(on.spawn_strategy, SpawnStrategy::Sequential);
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
     fn async_spawn_overlaps_spawn_with_registration() {
         // Blocking RMA grow with a large source exposure: under Async
         // the sources' window registration runs while the targets are
@@ -1144,6 +1204,7 @@ mod tests {
                     rma_chunk_kib: 0,
                     rma_dereg: true,
                     planner: PlannerMode::Fixed,
+                    recalib: false,
                 };
                 let decls = reg.decls();
                 let mut mam = Mam::new(reg, cfg.clone());
@@ -1194,6 +1255,7 @@ mod tests {
                 rma_chunk_kib: 0,
                 rma_dereg: true,
                 planner: PlannerMode::Fixed,
+                recalib: false,
             };
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
@@ -1252,6 +1314,7 @@ mod tests {
                     rma_chunk_kib: 0,
                     rma_dereg: true,
                     planner: PlannerMode::Fixed,
+                    recalib: false,
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
@@ -1296,6 +1359,7 @@ mod tests {
                     rma_chunk_kib: 0,
                     rma_dereg: true,
                     planner: PlannerMode::Fixed,
+                    recalib: false,
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
@@ -1359,6 +1423,7 @@ mod tests {
                     rma_chunk_kib: 0,
                     rma_dereg: true,
                     planner: PlannerMode::Fixed,
+                    recalib: false,
                 },
             );
             let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});

@@ -169,6 +169,14 @@ impl NetParams {
     pub fn inter_bandwidth(&self) -> f64 {
         1.0 / self.beta_inter
     }
+
+    /// Clone-and-tweak builder, used by the drift scenarios to derive
+    /// perturbed environments / miscalibrated beliefs from a seed:
+    /// `NetParams::sarteco25().with(|p| p.beta_inter *= 4.0)`.
+    pub fn with(mut self, f: impl FnOnce(&mut NetParams)) -> NetParams {
+        f(&mut self);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +202,19 @@ mod tests {
         // (the parallel-spawning premise).
         assert!(p.spawn_launch > p.spawn_per_proc);
         assert!(p.spawn_launch + p.spawn_per_proc + 8.0 * p.merge_round < 0.25);
+    }
+
+    #[test]
+    fn with_builder_perturbs_only_the_named_terms() {
+        let base = NetParams::sarteco25();
+        let p = NetParams::sarteco25().with(|p| {
+            p.beta_inter *= 4.0;
+            p.spawn_per_proc *= 5.0;
+        });
+        assert_eq!(p.beta_inter.to_bits(), (base.beta_inter * 4.0).to_bits());
+        assert_eq!(p.spawn_per_proc.to_bits(), (base.spawn_per_proc * 5.0).to_bits());
+        assert_eq!(p.beta_register.to_bits(), base.beta_register.to_bits());
+        assert_eq!(p.spawn_launch.to_bits(), base.spawn_launch.to_bits());
     }
 
     #[test]

@@ -255,6 +255,44 @@ pub fn moved_bytes(total: u64, ns: usize, nd: usize) -> u64 {
     moved
 }
 
+/// Sensitivity of a redistribution span to `beta_inter`:
+/// `d(span)/dβ ≈` the serialized inter-node byte count at the busiest
+/// NIC.  Ranks are mapped to `⌈max(ns,nd)/cpn⌉` nodes cyclically
+/// (`Topology::new_cyclic`'s scheme, rank → rank mod nodes); every
+/// cross-node overlap byte is charged to both endpoints' NICs and the
+/// maximum in+out total over nodes is returned.  Used by the online
+/// recalibrator ([`crate::mam::recalib`]) as the slope of its
+/// trust-region Newton update — a ≤ ~2× slope error only slows, never
+/// breaks, its geometric convergence.  Returns 0 for single-node
+/// shapes (the wire is intra-node there).
+pub fn wire_slope(total: u64, ns: usize, nd: usize, cores_per_node: usize) -> f64 {
+    let n = ns.max(nd).max(1);
+    let nodes = n.div_ceil(cores_per_node.max(1)).max(1);
+    if nodes <= 1 {
+        return 0.0;
+    }
+    let mut traffic = vec![0u64; nodes];
+    for s in 0..ns {
+        let (si, se) = pred_block(total, ns, s);
+        for d in 0..nd {
+            if s == d {
+                continue; // the overlap with its own old block stays put
+            }
+            let (di, de) = pred_block(total, nd, d);
+            let ov = se.min(de).saturating_sub(si.max(di));
+            if ov == 0 {
+                continue;
+            }
+            let (sn, dn) = (s % nodes, d % nodes);
+            if sn != dn {
+                traffic[sn] += ov;
+                traffic[dn] += ov;
+            }
+        }
+    }
+    traffic.into_iter().max().unwrap_or(0) as f64
+}
+
 /// Predict the cost of one reconfiguration candidate.
 ///
 /// The prediction mirrors the structure of the simulated cost model:
@@ -814,6 +852,21 @@ mod tests {
         assert!(m > 0 && m <= 1000, "moved={m}");
         // Doubling the data doubles the traffic.
         assert_eq!(moved_bytes(2000, 2, 4), 2 * m);
+    }
+
+    #[test]
+    fn wire_slope_tracks_cross_node_traffic() {
+        // Single node: β_inter is never exercised.
+        assert_eq!(wire_slope(1 << 20, 2, 4, 8), 0.0);
+        // Multi-node grows: positive, bounded by twice the moved bytes
+        // (each byte hits at most two NICs), and linear in the total.
+        let s = wire_slope(1 << 20, 4, 16, 8);
+        assert!(s > 0.0, "s={s}");
+        assert!(s <= 2.0 * moved_bytes(1 << 20, 4, 16) as f64);
+        let s2 = wire_slope(1 << 21, 4, 16, 8);
+        assert!((s2 - 2.0 * s).abs() < 1e-9, "s2={s2} s={s}");
+        // A same-shape resize moves nothing.
+        assert_eq!(wire_slope(1 << 20, 8, 8, 4), 0.0);
     }
 
     #[test]

@@ -69,6 +69,14 @@ pub struct RunSpec {
     /// once, before the simulation, with DES micro-probe refinement);
     /// `Fixed` (default) is bit-identical to the seed behaviour.
     pub planner: PlannerMode,
+    /// `--recalib on|off`: online recalibration of the planner's
+    /// `NetParams` from observed resizes (`mam::recalib`).  A single
+    /// run has no observation history, so here the flag only seeds
+    /// `ReconfigCfg::recalib` for the multi-resize harnesses
+    /// (`scenario`, `experiments::drift`) that feed the estimator;
+    /// `false` (default) is bit-identical to the pre-recalibration
+    /// behaviour everywhere.
+    pub recalib: bool,
 }
 
 impl RunSpec {
@@ -91,6 +99,7 @@ impl RunSpec {
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         }
     }
 
@@ -161,6 +170,7 @@ pub fn resolve_spec(spec: &RunSpec) -> (RunSpec, Option<ReconfigPlan>) {
         t_iter_dst: spec.sam.iter_compute(spec.nd),
         objective: Objective::ReconfTime,
         probe: true,
+        extra_chunks_kib: Vec::new(),
     };
     let plan = planner::plan(&inp);
     let mut resolved = spec.clone();
@@ -276,6 +286,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
         rma_chunk_kib: spec.rma_chunk_kib,
         rma_dereg: spec.rma_dereg,
         planner: spec.planner,
+        recalib: spec.recalib,
     };
     let mut mam = Mam::new(reg, mam_cfg.clone());
 
@@ -348,6 +359,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
         rma_chunk_kib: spec.rma_chunk_kib,
         rma_dereg: spec.rma_dereg,
         planner: spec.planner,
+        recalib: spec.recalib,
     };
     let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
     debug_assert!(mam
@@ -436,6 +448,7 @@ mod tests {
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         }
     }
 

@@ -15,7 +15,7 @@ use super::collective::{CollKind, CollResult, CollState, Contrib};
 use super::request::{ReqBody, ReqId, ReqState};
 use super::rma::WinState;
 use super::types::{CommId, Payload, RecvBuf, WinId};
-use super::winpool::{size_class, WinPoolStats};
+use super::winpool::{size_class, EvictedPin, WinPoolStats};
 use super::world::{MpiWorld, PendingMsg, RecvWait};
 
 /// Size class of a window's largest exposure (free-list filing key).
@@ -983,7 +983,7 @@ impl MpiProc {
         self.mpi_prologue();
         self.progress_acquire();
         let bytes = payload.bytes();
-        let (first, rest) = {
+        let (first, rest, evicted) = {
             let mut w = self.world.lock().unwrap();
             if w.win_pool.is_warm(self.gpid, pin, bytes) {
                 // Whole exposure still pinned: identical to a plain
@@ -992,7 +992,7 @@ impl MpiProc {
                 let saved = w.cost.window_acquire(bytes, false) - reg;
                 w.win_pool.touch(self.gpid, pin);
                 w.win_pool.note_acquire(true, 0.0, saved);
-                (reg, Vec::new())
+                (reg, Vec::new(), Vec::new())
             } else {
                 let prefix = w.win_pool.warm_prefix_bytes(self.gpid, pin);
                 let plan = segment_regs(&w.cost, payload.elems(), chunk_elems, prefix);
@@ -1000,20 +1000,10 @@ impl MpiProc {
                 w.win_pool.note_acquire(false, plan.charged, 0.0);
                 w.win_pool.note_pipelined(plan.cold_segs, plan.warm_segs);
                 Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
-                let mut first = plan.first;
-                for ev in evicted {
-                    // A victim whose background registration stream is
-                    // still in flight cannot be deregistered yet: the
-                    // evicting rank waits out the remaining pinning
-                    // before charging the unpin.
-                    let dereg = w.cost.window_free(ev.bytes);
-                    let wait = (ev.reg_done_at - self.ctx.now()).max(0.0);
-                    w.win_pool.note_evict_dereg(dereg);
-                    first += wait + dereg;
-                }
-                (first, plan.rest)
+                (plan.first, plan.rest, evicted)
             }
         };
+        self.spawn_evict_deregs(evicted);
         let contrib = Contrib::RegPipeline { first, rest, eager };
         let win = self.win_open(comm, payload, contrib, true, chunk_elems);
         // Record when this pin's background stream completes, so a
@@ -1074,32 +1064,23 @@ impl MpiProc {
         self.mpi_prologue();
         self.progress_acquire();
         let bytes = payload.bytes();
-        let reg = {
+        let (reg, evicted) = {
             let mut w = self.world.lock().unwrap();
             let warm = w.win_pool.is_warm(self.gpid, pin, bytes);
-            let mut reg = w.cost.window_acquire(bytes, warm);
+            let reg = w.cost.window_acquire(bytes, warm);
             if warm {
                 let saved = w.cost.window_acquire(bytes, false) - reg;
                 w.win_pool.touch(self.gpid, pin);
                 w.win_pool.note_acquire(true, 0.0, saved);
+                (reg, Vec::new())
             } else {
                 let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_acquire(false, reg, 0.0);
                 Self::note_registration(&mut w, bytes, reg);
-                // Cap evictions deregister the victims' buffers: the
-                // evicting rank pays the unpin before it is ready —
-                // waiting out any still-running registration stream of
-                // the victim first (memory cannot be unpinned while it
-                // is still being pinned).
-                for ev in evicted {
-                    let dereg = w.cost.window_free(ev.bytes);
-                    let wait = (ev.reg_done_at - self.ctx.now()).max(0.0);
-                    w.win_pool.note_evict_dereg(dereg);
-                    reg += wait + dereg;
-                }
+                (reg, evicted)
             }
-            reg
         };
+        self.spawn_evict_deregs(evicted);
         let win = self.win_open(comm, payload, Contrib::RegTime(reg), true, 0);
         self.progress_release();
         win
@@ -1168,29 +1149,46 @@ impl MpiProc {
     /// warm for every rank.  `cap` bounds this rank's pinned-token
     /// cache (0 = unbounded, LRU eviction otherwise).
     pub fn pin_buffer(&self, pin: u64, bytes: u64, cap: usize) {
-        let dt = {
+        let (dt, evicted) = {
             let mut w = self.world.lock().unwrap();
             if w.win_pool.is_warm(self.gpid, pin, bytes) {
                 w.win_pool.touch(self.gpid, pin);
-                0.0
+                (0.0, Vec::new())
             } else {
-                let mut dt = w.cost.window_registration(bytes);
+                let dt = w.cost.window_registration(bytes);
                 let evicted = w.win_pool.record_pin(self.gpid, pin, bytes, cap);
                 w.win_pool.note_pre_pin(dt);
                 Self::note_registration(&mut w, bytes, dt);
-                // Evicted victims are deregistered here, locally —
-                // after any in-flight registration stream of theirs.
-                for ev in evicted {
-                    let dereg = w.cost.window_free(ev.bytes);
-                    let wait = (ev.reg_done_at - self.ctx.now()).max(0.0);
-                    w.win_pool.note_evict_dereg(dereg);
-                    dt += wait + dereg;
-                }
-                dt
+                (dt, evicted)
             }
         };
+        self.spawn_evict_deregs(evicted);
         if dt > 0.0 {
             self.ctx.advance(dt);
+        }
+    }
+
+    /// Deregister LRU-evicted pins through the teardown pipeline: each
+    /// victim's unpin runs as a background `evictdereg-*` engine
+    /// activity — starting once the victim's in-flight registration
+    /// stream finishes (memory cannot be unpinned while it is still
+    /// being pinned), off the evicting rank's critical path, so an
+    /// eviction storm overlaps whatever the rank does next (including
+    /// the closing barrier) instead of serializing in front of it.
+    fn spawn_evict_deregs(&self, victims: Vec<EvictedPin>) {
+        for ev in victims {
+            let (seq, dereg) = {
+                let mut w = self.world.lock().unwrap();
+                let dereg = w.cost.window_free(ev.bytes);
+                w.win_pool.note_evict_dereg(dereg);
+                (w.win_pool.next_evict_seq(), dereg)
+            };
+            let start = ev.reg_done_at.max(self.ctx.now());
+            let gpid = self.gpid;
+            self.ctx.spawn(format!("evictdereg-g{gpid}-e{seq}"), move |ctx| {
+                ctx.advance_until(start);
+                ctx.advance(dereg);
+            });
         }
     }
 
@@ -2418,27 +2416,72 @@ mod tests {
     }
 
     #[test]
-    fn evicting_an_inflight_stream_waits_for_its_registration() {
+    fn evicting_an_inflight_stream_defers_its_dereg_to_background() {
         // Token A's background registration stream runs ~0.8 s; a
         // capped pin of token B evicts A while the stream is still
-        // pinning — the eviction must wait it out before charging the
-        // dereg (deregistering memory that is not yet registered would
-        // be nonsense).
+        // pinning.  The dereg still cannot begin before the stream ends
+        // (deregistering memory that is not yet registered would be
+        // nonsense), but it rides a background `evictdereg-*` activity:
+        // the evicting rank no longer blocks on it.
         let mut s = sim(1, 2);
+        let w = s.world();
         s.launch(1, |p| {
             let elems = 100_000_000u64; // 0.8 s of registration
             let wa = p.win_acquire_pipelined(WORLD, Payload::virt(elems), 0xA, 1, 1_000_000);
             assert!(p.now() < 0.1, "acquire must exit at the fill: {}", p.now());
             let wb = p.win_acquire_pipelined(WORLD, Payload::virt(1_000_000), 0xB, 1, 1_000_000);
             assert!(
-                p.now() >= 0.8,
-                "eviction must wait out A's in-flight stream: {}",
+                p.now() < 0.1,
+                "eviction must not block the evicting rank: {}",
                 p.now()
             );
             p.win_release(wb);
             p.win_release(wa);
         });
-        s.run().unwrap();
+        let end = s.run().unwrap();
+        let st = w.lock().unwrap().win_pool_stats();
+        assert_eq!(st.evictions, 1, "{st:?}");
+        assert!(st.evict_dereg_time > 0.0, "{st:?}");
+        // The background dereg started only after A's stream finished
+        // at ~0.8 s, so the engine ran past that point.
+        assert!(end >= 0.8 + st.evict_dereg_time - 1e-9, "end={end} {st:?}");
+    }
+
+    #[test]
+    fn eviction_storm_overlaps_the_closing_barrier() {
+        // Rank 0 pins three 800 MB tokens under cap 1 (each pin evicts
+        // the previous ~1 GiB-class victim), then a small token, then
+        // meets rank 1 at a barrier.  The storm's deregistrations ride
+        // background streams: the barrier closes on the registration
+        // timeline alone, with the last dereg (~0.36 s) still draining
+        // past it — before this change the deregs serialized in front
+        // of the barrier.
+        let mut s = sim(1, 2);
+        let w = s.world();
+        let exit = Arc::new(Mutex::new(0.0f64));
+        let e2 = exit.clone();
+        s.launch(2, move |p| {
+            if p.rank(WORLD) == 0 {
+                for token in 0..3u64 {
+                    p.pin_buffer(token, 100_000_000 * 8, 1);
+                }
+                p.pin_buffer(99, 1024, 1);
+            }
+            p.barrier(WORLD);
+            if p.rank(WORLD) == 0 {
+                *e2.lock().unwrap() = p.now();
+            }
+        });
+        let end = s.run().unwrap();
+        let exit = *exit.lock().unwrap();
+        let st = w.lock().unwrap().win_pool_stats();
+        assert_eq!(st.evictions, 3, "{st:?}");
+        // Barrier exit is gated by the three registrations (~2.4 s),
+        // not the deregs on top of them.
+        assert!(exit < 2.5, "deregs must not delay the barrier: exit={exit}");
+        // The final eviction's dereg stream drains past the barrier:
+        // the engine outlives the ranks by roughly one dereg.
+        assert!(end > exit + 0.3, "no overlap: end={end} exit={exit}");
     }
 
     #[test]

@@ -86,8 +86,8 @@ struct PinEntry {
     /// registration stream finishes (0.0 = registered synchronously).
     /// A pipelined acquire records it after the collective resolves;
     /// an LRU eviction must not deregister segments that are still
-    /// being pinned, so the evicting rank waits past this instant
-    /// before charging the dereg.
+    /// being pinned, so the victim's background dereg stream starts
+    /// only past this instant.
     reg_done_at: f64,
 }
 
@@ -115,6 +115,9 @@ pub struct WinPool {
     tick: u64,
     /// Released window slots: (comm, size class) → slot ids.
     free: BTreeMap<(CommId, u32), Vec<WinId>>,
+    /// Monotone id source for the background `evictdereg-*` engine
+    /// activities (unique, deterministic names).
+    evict_seq: u64,
     stats: WinPoolStats,
 }
 
@@ -166,9 +169,9 @@ impl WinPool {
     /// (0 = unbounded); beyond it the least-recently-used token of
     /// this rank is evicted — deregistered, so its next acquire is
     /// cold again.  Returns every evicted token's pinned-region size
-    /// and in-flight registration deadline so the caller can charge
-    /// the deregistration (after any remaining pinning) to the
-    /// evicting rank.
+    /// and in-flight registration deadline so the caller can launch
+    /// the deregistration (after any remaining pinning) as a
+    /// background stream.
     pub fn record_pin(
         &mut self,
         gpid: usize,
@@ -251,10 +254,17 @@ impl WinPool {
         self.stats.pre_pin_time += dt;
     }
 
-    /// Account the deregistration time of LRU-evicted pins (charged by
-    /// the caller to the evicting rank's clock).
+    /// Account the deregistration time of LRU-evicted pins (performed
+    /// by a background `evictdereg-*` stream off the evicting rank's
+    /// critical path).
     pub fn note_evict_dereg(&mut self, dt: f64) {
         self.stats.evict_dereg_time += dt;
+    }
+
+    /// Next unique id for a background eviction-deregistration stream.
+    pub fn next_evict_seq(&mut self) -> u64 {
+        self.evict_seq += 1;
+        self.evict_seq
     }
 
     /// Take a released slot usable for a window on `comm` whose largest

@@ -30,6 +30,16 @@ impl BenchComparison {
     }
 }
 
+/// Wall-clock keys are *soft* metrics: tracked, warned about, but
+/// never a gate failure — CI runner speed is too noisy to gate on.
+fn is_soft_metric(name: &str) -> bool {
+    name == "wall_s" || name.ends_with(".wall_s")
+}
+
+/// Relative slowdown above which a soft (wall-clock) metric draws a
+/// warning note from [`compare_bench`].
+pub const WALL_SOFT_TOL: f64 = 0.25;
+
 /// Compare a current bench-smoke document against a baseline: every
 /// baseline entry must exist in `current` and must not exceed
 /// `baseline * (1 + tol)`.  An empty baseline (`"entries": {}`) is the
@@ -39,8 +49,25 @@ impl BenchComparison {
 /// Documents carrying mismatched `schema` or `mode` (quick vs full
 /// workload) provenance are rejected outright — their virtual-time
 /// values are not comparable.
+///
+/// Wall-clock keys (`wall_s`, whether the top-level document field or
+/// any `*.wall_s` entry) are soft metrics: a slowdown beyond
+/// [`WALL_SOFT_TOL`] (25%) is warned about in `notes`, but can never
+/// fail the gate.
 pub fn compare_bench(baseline: &Json, current: &Json, tol: f64) -> BenchComparison {
     let mut cmp = BenchComparison { notes: Vec::new(), regressions: Vec::new(), compared: 0 };
+    if let (Some(bw), Some(cw)) = (
+        baseline.get("wall_s").and_then(|v| v.as_f64()),
+        current.get("wall_s").and_then(|v| v.as_f64()),
+    ) {
+        if cw > bw * (1.0 + WALL_SOFT_TOL) {
+            cmp.notes.push(format!(
+                "wall_s: {cw:.3} is more than {:.0}% over baseline {bw:.3} \
+                 (soft metric, not gated)",
+                WALL_SOFT_TOL * 100.0
+            ));
+        }
+    }
     for key in ["schema", "mode"] {
         let (b, c) = (baseline.get(key), current.get(key));
         if let (Some(b), Some(c)) = (b, c) {
@@ -69,8 +96,22 @@ pub fn compare_bench(baseline: &Json, current: &Json, tol: f64) -> BenchComparis
             cmp.regressions.push(format!("{name}: baseline value is not a number"));
             continue;
         };
+        let soft = is_soft_metric(name);
         match cur.get(name).and_then(|v| v.as_f64()) {
+            None if soft => cmp
+                .notes
+                .push(format!("{name}: missing from current run (soft metric, not gated)")),
             None => cmp.regressions.push(format!("{name}: missing from current run")),
+            Some(cv) if soft => {
+                cmp.compared += 1;
+                if cv > bv * (1.0 + WALL_SOFT_TOL) {
+                    cmp.notes.push(format!(
+                        "{name}: {cv:.6} is more than {:.0}% over baseline {bv:.6} \
+                         (soft metric, not gated)",
+                        WALL_SOFT_TOL * 100.0
+                    ));
+                }
+            }
             Some(cv) => {
                 cmp.compared += 1;
                 let limit = bv * (1.0 + tol);
@@ -464,6 +505,53 @@ mod tests {
         // A document without provenance still compares (back-compat).
         let cmp = compare_bench(&doc(&[("a", 1.0)]), &doc(&[("a", 1.0)]), 0.1);
         assert!(cmp.passed());
+    }
+
+    #[test]
+    fn wall_clock_metrics_warn_but_never_gate() {
+        // Top-level wall_s: a 2x slowdown draws a note, never a failure.
+        let mut base = doc(&[("a", 1.0)]);
+        let mut cur = doc(&[("a", 1.0)]);
+        if let (Json::Obj(b), Json::Obj(c)) = (&mut base, &mut cur) {
+            b.insert("wall_s".into(), Json::Num(1.0));
+            c.insert("wall_s".into(), Json::Num(2.0));
+        }
+        let cmp = compare_bench(&base, &cur, 0.10);
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("wall_s") && n.contains("soft")),
+            "{:?}",
+            cmp.notes
+        );
+        // Within the 25% soft tolerance: silent.
+        if let Json::Obj(c) = &mut cur {
+            c.insert("wall_s".into(), Json::Num(1.2));
+        }
+        let cmp = compare_bench(&base, &cur, 0.10);
+        assert!(cmp.passed());
+        assert!(!cmp.notes.iter().any(|n| n.contains("wall_s")), "{:?}", cmp.notes);
+    }
+
+    #[test]
+    fn wall_clock_entries_are_soft_even_when_missing() {
+        // `*.wall_s` entries regress or vanish without failing the gate;
+        // hard entries alongside them still gate normally.
+        let base = doc(&[("scenario.wall_s", 1.0), ("a", 1.0)]);
+        let cur = doc(&[("scenario.wall_s", 10.0), ("a", 1.0)]);
+        let cmp = compare_bench(&base, &cur, 0.10);
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        assert_eq!(cmp.compared, 2);
+        assert!(cmp.notes.iter().any(|n| n.contains("scenario.wall_s")), "{:?}", cmp.notes);
+        let cmp = compare_bench(&base, &doc(&[("a", 1.0)]), 0.10);
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        assert!(
+            cmp.notes.iter().any(|n| n.contains("missing") && n.contains("soft")),
+            "{:?}",
+            cmp.notes
+        );
+        // A *hard* entry vanishing still fails.
+        let cmp = compare_bench(&base, &doc(&[("scenario.wall_s", 1.0)]), 0.10);
+        assert!(!cmp.passed());
     }
 
     #[test]

@@ -38,6 +38,7 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         rma_chunk_kib: 0,
         rma_dereg: true,
         planner: PlannerMode::Fixed,
+        recalib: false,
     }
 }
 
@@ -213,6 +214,7 @@ fn multi_resize_marathon_with_sam() {
                 rma_chunk_kib: 0,
                 rma_dereg: true,
                 planner: PlannerMode::Fixed,
+                recalib: false,
             },
         );
         run_stages(&p, WORLD, 0, &seq, &cfg0, &t2, &sz2, mam);

@@ -1,0 +1,122 @@
+//! Integration: online NetParams recalibration end to end.
+//!
+//! The acceptance bar of the self-tuning planner: on every full-size
+//! drift scenario the recalibrating arm's cumulative reconfiguration
+//! cost beats the static planner's by at least 10% AND its per-resize
+//! predicted-vs-observed error falls below 15% within 5 resizes; with
+//! recalibration off, everything stays bit-identical to the static
+//! planner.
+
+use proteo::config::ExperimentConfig;
+use proteo::experiments::{drift, scenario};
+use proteo::mam::PlannerMode;
+use proteo::proteo::run_once;
+
+/// The headline acceptance criterion, on the full-size (non-quick)
+/// scenarios: in all three drift environments — a 2x-miscalibrated
+/// seed, heterogeneous NICs, and transient congestion — the online
+/// planner must save >= 10% of the static planner's cumulative cost
+/// and settle its prediction error under [`drift::CONVERGE_TOL`]
+/// within 5 resizes.
+#[test]
+fn full_size_drift_scenarios_meet_the_acceptance_bar() {
+    for sc in drift::DriftScenario::all(false) {
+        let rep = drift::run_drift(&sc);
+        let win = rep.win_frac();
+        let k = rep.converge_resizes();
+        assert!(
+            rep.static_arm.cum_cost.is_finite() && rep.static_arm.cum_cost > 0.0,
+            "{}: static arm cost {}",
+            sc.name,
+            rep.static_arm.cum_cost
+        );
+        assert!(
+            win >= 0.10,
+            "{}: recalibration saved only {:.1}% (static {}, recalib {})\n{}",
+            sc.name,
+            100.0 * win,
+            rep.static_arm.cum_cost,
+            rep.recalib_arm.cum_cost,
+            rep.render(true)
+        );
+        assert!(
+            k <= 5,
+            "{}: prediction error settled only at resize {k}\n{}",
+            sc.name,
+            rep.render(true)
+        );
+    }
+}
+
+/// Drift runs are pure functions of the scenario: two runs must agree
+/// bit for bit (the report JSON carries every predicted/observed span
+/// verbatim).
+#[test]
+fn drift_reports_are_bit_deterministic() {
+    for name in ["miscal", "hetero", "congest"] {
+        let sc = drift::DriftScenario::by_name(name, true).unwrap();
+        let a = drift::run_drift(&sc).to_json().to_pretty();
+        let b = drift::run_drift(&sc).to_json().to_pretty();
+        assert_eq!(a, b, "{name}: drift run not deterministic");
+    }
+}
+
+/// `"recalib": "off"` must change nothing: same config otherwise, same
+/// bits as a config that never mentions recalibration — under both the
+/// fixed and the auto planner.
+#[test]
+fn recalib_off_is_bit_identical_through_config_and_run() {
+    for planner in ["fixed", "auto"] {
+        let src_plain = format!(
+            r#"{{"preset": "tiny", "method": "rma-lockall", "strategy": "wd",
+                "planner": "{planner}", "pairs": [[8, 4]], "scale": 10000}}"#
+        );
+        let src_off = format!(
+            r#"{{"preset": "tiny", "method": "rma-lockall", "strategy": "wd",
+                "planner": "{planner}", "recalib": "off", "pairs": [[8, 4]], "scale": 10000}}"#
+        );
+        let plain = ExperimentConfig::from_str(&src_plain).unwrap();
+        let off = ExperimentConfig::from_str(&src_off).unwrap();
+        let (a, b) = (run_once(&plain.spec_for(8, 4)), run_once(&off.spec_for(8, 4)));
+        assert_eq!(a.label, b.label, "{planner}");
+        assert_eq!(
+            a.reconf_total.to_bits(),
+            b.reconf_total.to_bits(),
+            "{planner}: recalib-off diverged from the static planner"
+        );
+        assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits(), "{planner}");
+    }
+}
+
+/// The closed-loop RMS trace with recalibration off is byte-identical
+/// to the plain auto scenario — the off path takes no extra
+/// collectives and consults no live estimate.
+#[test]
+fn recalib_off_scenario_report_matches_the_plain_auto_scenario() {
+    let mut plain = scenario::ScenarioSpec::rms_trace(true);
+    plain.planner = PlannerMode::Auto;
+    let mut off = plain.clone();
+    off.recalib = false;
+    let a = scenario::run_scenario(&plain).to_json().to_pretty();
+    let b = scenario::run_scenario(&off).to_json().to_pretty();
+    assert_eq!(a, b);
+}
+
+/// Recalib-on on the same trace: deterministic across runs, every
+/// resize re-planned live, and the report still carries finite
+/// predicted/observed spans.
+#[test]
+fn recalib_on_scenario_is_deterministic_and_replans_live() {
+    let mut spec = scenario::ScenarioSpec::rms_trace(true);
+    spec.planner = PlannerMode::Auto;
+    spec.recalib = true;
+    let a = scenario::run_scenario(&spec);
+    let b = scenario::run_scenario(&spec);
+    assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    assert!(!a.resizes.is_empty());
+    for r in &a.resizes {
+        assert!(r.label.starts_with("live["), "label: {}", r.label);
+        assert!(r.predicted_reconf.is_finite() && r.predicted_reconf > 0.0);
+        assert!(r.observed_reconf.is_finite() && r.observed_reconf > 0.0);
+    }
+}

@@ -53,6 +53,7 @@ fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let totals3 = totals2.clone();

@@ -79,6 +79,7 @@ fn run_and_collect_cfg(
             rma_chunk_kib,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let c3 = c2.clone();

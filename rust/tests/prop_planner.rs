@@ -37,6 +37,7 @@ fn inputs(ns: usize, nd: usize, elems: usize, warm: bool) -> PlannerInputs {
         t_iter_dst: 2e-3,
         objective: Objective::ReconfTime,
         probe: false,
+        extra_chunks_kib: Vec::new(),
     }
 }
 
@@ -123,6 +124,32 @@ fn planning_is_a_pure_function_of_its_inputs() {
         a.choice == b.choice
             && a.predicted_reconf.to_bits() == b.predicted_reconf.to_bits()
             && a.candidates.len() == b.candidates.len()
+    });
+}
+
+#[test]
+fn recalib_off_is_bit_identical_to_the_static_planner() {
+    // `--recalib off` reaches the planner as an empty chunk injection
+    // (and the static calibration), i.e. exactly the pre-recalibration
+    // inputs; and a recalibrator that measured nothing beyond the
+    // static grid must leave every bit of the plan unchanged too.
+    check("recalib-off planner bit-identity", case_strategy(), |(ns, nd, elems, warm)| {
+        if ns == nd {
+            return true;
+        }
+        let base = plan(&inputs(ns, nd, elems, warm == 1));
+        let mut dup = inputs(ns, nd, elems, warm == 1);
+        dup.extra_chunks_kib = vec![0, 256, 1024, 4096]; // ⊆ static grid
+        let dup = plan(&dup);
+        let mut novel = inputs(ns, nd, elems, warm == 1);
+        novel.extra_chunks_kib = vec![512, 2048]; // measured sweet spots
+        let novel = plan(&novel);
+        dup.choice == base.choice
+            && dup.predicted_reconf.to_bits() == base.predicted_reconf.to_bits()
+            && dup.candidates.len() == base.candidates.len()
+            // A genuinely new measured chunk only ever widens the grid.
+            && novel.candidates.len() >= base.candidates.len()
+            && is_valid_version(novel.choice.method, novel.choice.strategy)
     });
 }
 

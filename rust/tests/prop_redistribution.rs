@@ -50,6 +50,7 @@ fn run_and_collect(
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let c3 = c2.clone();
@@ -173,6 +174,7 @@ fn prop_block_sizes_after_resize_match_block_of() {
                     rma_chunk_kib: 0,
                     rma_dereg: true,
                     planner: PlannerMode::Fixed,
+                    recalib: false,
                 };
                 let mut mam = Mam::new(reg, cfg.clone());
                 let c3 = c2.clone();
@@ -248,6 +250,7 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                         rma_chunk_kib: 0,
                         rma_dereg: true,
                         planner: PlannerMode::Fixed,
+                        recalib: false,
                     };
                     let mut mam = Mam::new(reg, cfg.clone());
                     let cfg2 = cfg.clone();

@@ -48,6 +48,7 @@ fn run_grow(
             rma_chunk_kib: 0,
             rma_dereg: true,
             planner: PlannerMode::Fixed,
+            recalib: false,
         };
         let mut mam = Mam::new(reg, cfg.clone());
         let c3 = c2.clone();
