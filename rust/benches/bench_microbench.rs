@@ -15,8 +15,8 @@ use proteo::mam::{drain_plan, source_plan, Method, Strategy};
 use proteo::netmodel::{CostModel, NetParams, Placement, Topology, TransferClass};
 use proteo::proteo::{run_once, RunSpec};
 use proteo::runtime::{artifacts_dir, runtime_available, CgRuntime, CgState};
-use proteo::simcluster::Engine;
-use proteo::simmpi::{MpiSim, Payload, WORLD};
+use proteo::simcluster::{Engine, LiteStep, QueueKind};
+use proteo::simmpi::{MpiSim, Payload, WinCreateOpts, WORLD};
 use proteo::util::benchkit::Bench;
 
 fn engine_benches(b: &mut Bench) {
@@ -40,6 +40,79 @@ fn engine_benches(b: &mut Bench) {
         }
         e.run().unwrap();
     });
+    // Queue microbenchmark: the same event mix through both queue
+    // implementations — the calendar queue's win over the seed heap is
+    // the measured quantity.  Timer offsets cycle a coarse grid so the
+    // calendar hits its bucket-rotation path, with equal-time ties.
+    for (name, kind) in [
+        ("queue: heap, 50k lite timers", QueueKind::Heap),
+        ("queue: calendar, 50k lite timers", QueueKind::Calendar),
+    ] {
+        b.bench(name, move || {
+            let mut e = Engine::with_queue(kind);
+            for i in 0..50_000u64 {
+                let mut fired = false;
+                let at = (i % 97) as f64 * 1e-5;
+                e.spawn_lite_at(at, "t", move |_| {
+                    if fired {
+                        return LiteStep::Done;
+                    }
+                    fired = true;
+                    LiteStep::AdvanceUntil(at + 1e-3)
+                });
+            }
+            e.run().unwrap();
+        });
+    }
+    // Batched collective wakeup vs. one queue event per rank, with the
+    // engine's counters attached to the rows (events, peak queue,
+    // batch sizes) — the observability satellite of the wakeup path.
+    for (name, batched) in [
+        ("engine: 10k-rank wakeup, batched", true),
+        ("engine: 10k-rank wakeup, per-rank events", false),
+    ] {
+        b.bench_metric_counters(name, "virt_s", move || {
+            let mut e = Engine::new();
+            let ids: Vec<_> = (0..10_000)
+                .map(|r| {
+                    let mut fresh = true;
+                    e.spawn_lite_at(0.0, format!("r{r}"), move |_| {
+                        if fresh {
+                            fresh = false;
+                            LiteStep::Park
+                        } else {
+                            LiteStep::Done
+                        }
+                    })
+                })
+                .collect();
+            e.spawn_lite_at(0.0, "root", move |ctx| {
+                if ids.is_empty() {
+                    return LiteStep::Done;
+                }
+                let now = ctx.now();
+                let entries: Vec<_> = ids.drain(..).map(|id| (id, now + 1.0)).collect();
+                if batched {
+                    ctx.unpark_batch(entries);
+                } else {
+                    for (id, at) in entries {
+                        ctx.unpark_at(id, at);
+                    }
+                }
+                LiteStep::Done
+            });
+            let t = e.run().unwrap();
+            let s = e.stats();
+            (
+                t,
+                vec![
+                    ("events".to_string(), s.events as f64),
+                    ("peak_queue".to_string(), s.peak_queue as f64),
+                    ("wakeup_max".to_string(), s.wakeup_max_batch as f64),
+                ],
+            )
+        });
+    }
 }
 
 fn simmpi_benches(b: &mut Bench) {
@@ -66,7 +139,7 @@ fn simmpi_benches(b: &mut Bench) {
     b.bench("simmpi: win create+free @160 ranks", || {
         let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
         s.launch(160, |p| {
-            let w = p.win_create(WORLD, Payload::virt(1_000_000));
+            let w = p.win_create_with(WORLD, Payload::virt(1_000_000), WinCreateOpts::blocking());
             p.win_free(w);
         });
         s.run().unwrap();
@@ -85,7 +158,7 @@ fn simmpi_benches(b: &mut Bench) {
     b.bench("simmpi: pipelined win create+free @160 ranks (64 segs)", || {
         let mut s = MpiSim::new(Topology::sarteco25(), NetParams::sarteco25());
         s.launch(160, |p| {
-            let w = p.win_create_pipelined(WORLD, Payload::virt(1_000_000), 16_384);
+            let w = p.win_create_with(WORLD, Payload::virt(1_000_000), WinCreateOpts::pipelined(16_384));
             p.win_free(w);
         });
         s.run().unwrap();

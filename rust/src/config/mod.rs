@@ -374,6 +374,43 @@ mod tests {
     }
 
     #[test]
+    fn spec_for_mam_cfg_propagates_every_knob() {
+        // A config with every reconfiguration knob off its default must
+        // reach the MaM layer intact through `spec_for` + the
+        // `ReconfigCfg` builder (`RunSpec::mam_cfg`).
+        let cfg = ExperimentConfig::from_str(
+            r#"{
+                "method": "rma-lockall", "strategy": "wd",
+                "spawn_strategy": "async",
+                "win_pool": "on", "win_pool_cap": 2,
+                "rma_chunk_kib": 256, "rma_dereg": false,
+                "planner": "auto", "recalib": true
+            }"#,
+        )
+        .unwrap();
+        let spec = cfg.spec_for(20, 40);
+        let mam = spec.mam_cfg();
+        assert_eq!(mam.method, Method::RmaLockall);
+        assert_eq!(mam.strategy, Strategy::WaitDrains);
+        assert_eq!(mam.spawn_strategy, SpawnStrategy::Async);
+        assert_eq!(mam.spawn_cost.to_bits(), spec.spawn_cost.to_bits());
+        assert!(mam.win_pool.enabled);
+        assert_eq!(mam.win_pool.cap, 2);
+        assert_eq!(mam.rma_chunk_kib, 256);
+        assert!(!mam.rma_dereg);
+        assert_eq!(mam.planner, PlannerMode::Auto);
+        assert!(mam.recalib);
+        // And the default config builds the default MaM cfg.
+        let def = ExperimentConfig::from_str("{}").unwrap().spec_for(4, 2).mam_cfg();
+        let base = crate::mam::ReconfigCfg::default();
+        assert_eq!(def.spawn_strategy, base.spawn_strategy);
+        assert_eq!(def.win_pool, base.win_pool);
+        assert_eq!(def.rma_chunk_kib, base.rma_chunk_kib);
+        assert_eq!(def.rma_dereg, base.rma_dereg);
+        assert_eq!(def.recalib, base.recalib);
+    }
+
+    #[test]
     fn win_pool_toggle_parses_and_propagates() {
         // Default: off (the paper's cold path).
         let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();

@@ -64,14 +64,13 @@ fn time_rma_blocking(
         let _ = if fused {
             rma::redistribute_blocking_fused(&p, WORLD, &roles, &reg, &which, lockall)
         } else {
-            rma::redistribute_blocking(
+            rma::redistribute_with(
                 &p,
                 WORLD,
                 &roles,
                 &reg,
                 &which,
-                lockall,
-                WinPoolPolicy::off(),
+                rma::RedistOpts::new(lockall, WinPoolPolicy::off()),
             )
         };
         let dt = p.now() - t0;
@@ -167,8 +166,13 @@ fn time_rma_lifecycle_passes(
         let which = reg.of_kind(DataKind::Constant);
         for pass in 1..=passes {
             let t0 = p.now();
-            let _ = rma::redistribute_lifecycle(
-                &p, WORLD, &roles, &reg, &which, true, policy, opts,
+            let _ = rma::redistribute_with(
+                &p,
+                WORLD,
+                &roles,
+                &reg,
+                &which,
+                rma::RedistOpts::new(true, policy).lifecycle(opts),
             );
             let dt = p.now() - t0;
             p.metrics(|m| m.mark_max(&format!("ablation.chunk{pass}"), dt));

@@ -394,6 +394,7 @@ pub mod ablation;
 pub mod drift;
 pub mod scenario;
 pub mod smoke;
+pub mod stress;
 
 #[cfg(test)]
 mod tests {

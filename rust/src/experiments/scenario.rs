@@ -367,6 +367,8 @@ pub struct ScenarioReport {
     pub total_iters: u64,
     pub resizes: Vec<ResizeReport>,
     pub events: u64,
+    /// Engine observability counters (`engine.*`), in a fixed order.
+    pub engine: Vec<(String, u64)>,
 }
 
 impl ScenarioReport {
@@ -416,6 +418,15 @@ impl ScenarioReport {
             ("label", Json::str(self.label.clone())),
             ("makespan_s", Json::num(self.makespan)),
             ("total_iters", Json::num(self.total_iters as f64)),
+            (
+                "engine",
+                Json::Obj(
+                    self.engine
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
             (
                 "resizes",
                 Json::Arr(
@@ -590,17 +601,11 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         net: spec.net.clone(),
         recalib_live,
     });
-    let base_cfg = ReconfigCfg {
-        method: spec.method,
-        strategy: spec.strategy,
-        spawn_cost: spec.spawn_cost,
-        spawn_strategy: spec.spawn_strategy,
-        win_pool: spec.win_pool,
-        rma_chunk_kib: spec.rma_chunk_kib,
-        rma_dereg: true,
-        planner: PlannerMode::Fixed,
-        recalib: spec.recalib,
-    };
+    let base_cfg = ReconfigCfg::version(spec.method, spec.strategy)
+        .with_spawn(spec.spawn_strategy, spec.spawn_cost)
+        .with_pool(spec.win_pool)
+        .with_chunk(spec.rma_chunk_kib)
+        .with_recalib(spec.recalib);
     let start = spec.start_cores;
     let ctx2 = ctx.clone();
     sim.launch(start, move |p: MpiProc| {
@@ -685,6 +690,19 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
             }
         })
         .collect();
+    let engine = [
+        "engine.events",
+        "engine.peak_queue",
+        "engine.wakeup_batches",
+        "engine.wakeup_ranks",
+        "engine.wakeup_max",
+        "engine.sweep_direct",
+        "engine.rollbacks",
+        "engine.snapshots",
+    ]
+    .iter()
+    .map(|k| (k.to_string(), m.counter(k).unwrap_or(0.0) as u64))
+    .collect::<Vec<_>>();
     ScenarioReport {
         name: spec.name.clone(),
         label: spec.version_label(),
@@ -692,6 +710,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         total_iters: spec.total_iters,
         resizes: reports,
         events: m.counter("engine.events").unwrap_or(0.0) as u64,
+        engine,
     }
 }
 

@@ -22,6 +22,12 @@ use super::{ablation, scenario, FigOptions};
 /// Schema version of the smoke-metrics JSON.
 pub const SCHEMA: u64 = 1;
 
+/// Elapsed wall seconds, clamped away from zero so the finiteness
+/// checks (`v > 0`) hold even on coarse clocks.
+fn wall_s(t0: std::time::Instant) -> f64 {
+    t0.elapsed().as_secs_f64().max(1e-9)
+}
+
 fn opts(quick: bool) -> FigOptions {
     FigOptions {
         reps: 1,
@@ -34,16 +40,23 @@ fn opts(quick: bool) -> FigOptions {
     }
 }
 
-/// Collect the deterministic smoke metrics (virtual seconds).
+/// Collect the deterministic smoke metrics (virtual seconds), plus
+/// `engine.*.wall_s` wall-clock rows tracking simulator speed itself.
+/// Wall-clock entries are *soft* metrics (see `util::benchkit`):
+/// bench-compare warns past 25% but never gates on them, and the
+/// determinism tests strip them before comparing documents.
 pub fn collect(quick: bool) -> Json {
     let o = opts(quick);
     let mut entries: Vec<(String, f64)> = Vec::new();
+    let t_all = std::time::Instant::now();
 
     // Window pool: no-pool vs cold vs warm on the 8→4 shrink.
+    let t0 = std::time::Instant::now();
     let wp = ablation::win_pool(&o);
     for (c, name) in ["no_pool", "cold", "warm"].iter().enumerate() {
         entries.push((format!("winpool.8to4.{name}"), wp.value(0, c)));
     }
+    entries.push(("engine.winpool_sweep.wall_s".to_string(), wall_s(t0)));
 
     // Spawn strategies: the 8→16 grow, blocking / WD / pool-aware WD.
     let sp = ablation::spawn_strategies(&FigOptions { pairs: vec![(8, 16)], ..o.clone() });
@@ -77,7 +90,10 @@ pub fn collect(quick: bool) -> Json {
     entries.push(("rmachunk.160to20.best_cold".to_string(), bestk(0)));
     entries.push(("rmachunk.160to20.reg_only".to_string(), bestk(1)));
 
-    // One end-to-end run per method family (redistribution time).
+    // One end-to-end run per method family (redistribution time), at
+    // the larger fig-sweep pair — the wall-clock row is the simulator
+    // throughput tripwire for the engine itself.
+    let t0 = std::time::Instant::now();
     for (name, m, s) in [
         ("col.blocking", Method::Collective, Strategy::Blocking),
         ("rma_lockall.wd", Method::RmaLockall, Strategy::WaitDrains),
@@ -88,9 +104,11 @@ pub fn collect(quick: bool) -> Json {
         entries.push((format!("run.20to40.{name}.redist"), r.redist_time));
         entries.push((format!("run.20to40.{name}.total"), r.reconf_total));
     }
+    entries.push(("engine.run_20to40.wall_s".to_string(), wall_s(t0)));
 
     // Closed-loop RMS scenario: total makespan under the planner and
     // two fixed anchors — the gate's planner-regression tripwire.
+    let t0 = std::time::Instant::now();
     let base = scenario::ScenarioSpec::rms_trace(quick);
     for (name, planner, m, s) in [
         ("auto", PlannerMode::Auto, Method::Collective, Strategy::Blocking),
@@ -104,6 +122,7 @@ pub fn collect(quick: bool) -> Json {
         let rep = scenario::run_scenario(&sp);
         entries.push((format!("scenario.rms.{name}.makespan"), rep.makespan));
     }
+    entries.push(("engine.scenario_rms.wall_s".to_string(), wall_s(t0)));
 
     // The same trace with the in-sim online recalibrator on: the
     // replicated-belief protocol and its live re-planning stay under
@@ -120,6 +139,7 @@ pub fn collect(quick: bool) -> Json {
     // and recalibrating arms, plus the episode index at which the
     // recalibrated predictions settle under the 15% error bar.
     entries.extend(super::drift::drift_bench_entries(quick));
+    entries.push(("engine.smoke_total.wall_s".to_string(), wall_s(t_all)));
 
     let obj: Vec<(&str, Json)> = vec![
         ("schema", Json::num(SCHEMA as f64)),
@@ -138,11 +158,27 @@ pub fn collect(quick: bool) -> Json {
 mod tests {
     use super::*;
 
+    /// Drop the soft `*.wall_s` entries: wall clocks differ run to run
+    /// by design, only the virtual-time entries are bit-deterministic.
+    fn strip_wall(doc: &Json) -> Json {
+        let mut d = doc.clone();
+        if let Json::Obj(top) = &mut d {
+            if let Some(Json::Obj(entries)) = top.get_mut("entries") {
+                entries.retain(|k, _| !k.ends_with(".wall_s"));
+            }
+        }
+        d
+    }
+
     #[test]
     fn collect_is_deterministic_and_finite() {
         let a = collect(true);
         let b = collect(true);
-        assert_eq!(a, b, "smoke metrics must be bit-deterministic");
+        assert_eq!(
+            strip_wall(&a),
+            strip_wall(&b),
+            "smoke metrics must be bit-deterministic"
+        );
         let entries = a.get("entries").and_then(|e| e.as_obj()).unwrap();
         assert!(entries.len() >= 15, "got {} entries", entries.len());
         for (k, v) in entries {
@@ -150,6 +186,15 @@ mod tests {
             assert!(v.is_finite() && v > 0.0, "{k} = {v}");
         }
         assert_eq!(a.get("schema").unwrap().as_u64(), Some(SCHEMA));
+        // The engine wall-clock rows ride along as soft metrics.
+        for key in [
+            "engine.winpool_sweep.wall_s",
+            "engine.run_20to40.wall_s",
+            "engine.scenario_rms.wall_s",
+            "engine.smoke_total.wall_s",
+        ] {
+            assert!(entries.contains_key(key), "missing {key}");
+        }
         // The scenario makespans feed the gate too.
         for key in [
             "scenario.rms.auto.makespan",

@@ -89,6 +89,13 @@ fn cli() -> Cli {
                 .opt("iters", "200", "max iterations")
                 .opt("tol", "1e-5", "relative residual target")
                 .opt("artifacts", "", "artifacts dir (default: $PROTEO_ARTIFACTS or artifacts/)"),
+            Command::new(
+                "engine-stress",
+                "million-rank DES stress: resize-shaped workload on lite activities",
+            )
+            .opt("ranks", "1048576", "post-resize rank count ND")
+            .opt("ns", "0", "pre-resize rank count NS (0 = ND/2)")
+            .opt("rounds", "4", "barrier rounds (resize commit at the middle one)"),
             Command::new("bench-smoke", "collect deterministic bench metrics as JSON")
                 .opt("out", "BENCH_pr.json", "output path")
                 .flag("quick", "CI-sized workload"),
@@ -415,6 +422,24 @@ fn cmd_cg(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_engine_stress(args: &Args) -> Result<(), String> {
+    let nd = args.get_usize("ranks").ok_or("bad --ranks")?;
+    let ns = match args.get_usize("ns").ok_or("bad --ns")? {
+        0 => (nd / 2).max(1),
+        n => n,
+    };
+    let rounds = args.get_usize("rounds").ok_or("bad --rounds")? as u64;
+    if ns > nd {
+        return Err(format!("--ns {ns} exceeds --ranks {nd}"));
+    }
+    if rounds < 2 {
+        return Err("--rounds must be at least 2".into());
+    }
+    let rep = proteo::experiments::stress::engine_stress(ns, nd, rounds);
+    print!("{}", rep.render());
+    Ok(())
+}
+
 fn cmd_bench_smoke(args: &Args) -> Result<(), String> {
     let out = args.get("out").unwrap_or("BENCH_pr.json").to_string();
     let t0 = std::time::Instant::now();
@@ -579,6 +604,7 @@ fn main() -> ExitCode {
         "scenario" => cmd_scenario(&args),
         "ablation" => cmd_ablation(&args),
         "cg" => cmd_cg(&args),
+        "engine-stress" => cmd_engine_stress(&args),
         "bench-smoke" => cmd_bench_smoke(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "bench-promote" => cmd_bench_promote(&args),

@@ -49,7 +49,7 @@ pub mod spawn;
 pub mod winpool;
 
 pub use blockdist::{block_of, drain_plan, source_plan, Block, DrainPlan, SourcePlan};
-pub use planner::{Candidate, Objective, PlannerInputs, PlannerMode, ReconfigPlan};
+pub use planner::{Candidate, Objective, PlannerInputs, PlannerMode, ProbeSession, ReconfigPlan};
 pub use recalib::{Observation, RecalibCfg, Recalibrator};
 pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
 pub use registry::{DataDecl, DataEntry, DataKind, Registry};

@@ -144,6 +144,52 @@ impl Default for ReconfigCfg {
 }
 
 impl ReconfigCfg {
+    /// Builder entry point: the given redistribution version over
+    /// default knobs.  Chain the `with_*` setters for the rest —
+    /// `ReconfigCfg::version(m, s).with_pool(pool).with_chunk(1024)`
+    /// replaces the nine-field struct literal harnesses used to spell
+    /// out.
+    pub fn version(method: Method, strategy: Strategy) -> ReconfigCfg {
+        ReconfigCfg { method, strategy, ..ReconfigCfg::default() }
+    }
+
+    /// Spawn strategy and the Sequential-model constant.
+    pub fn with_spawn(mut self, strategy: SpawnStrategy, cost: f64) -> ReconfigCfg {
+        self.spawn_strategy = strategy;
+        self.spawn_cost = cost;
+        self
+    }
+
+    /// Persistent window pool policy (§VI).
+    pub fn with_pool(mut self, pool: WinPoolPolicy) -> ReconfigCfg {
+        self.win_pool = pool;
+        self
+    }
+
+    /// Chunked pipelined registration segment size (KiB, 0 = off).
+    pub fn with_chunk(mut self, kib: u64) -> ReconfigCfg {
+        self.rma_chunk_kib = kib;
+        self
+    }
+
+    /// Pipelined teardown toggle (meaningful only when chunked).
+    pub fn with_dereg(mut self, dereg: bool) -> ReconfigCfg {
+        self.rma_dereg = dereg;
+        self
+    }
+
+    /// Planner mode (`Fixed` uses the fields verbatim).
+    pub fn with_planner(mut self, planner: PlannerMode) -> ReconfigCfg {
+        self.planner = planner;
+        self
+    }
+
+    /// Online recalibration toggle (`Auto` planning only).
+    pub fn with_recalib(mut self, recalib: bool) -> ReconfigCfg {
+        self.recalib = recalib;
+        self
+    }
+
     /// Segment size in elements of the chunked pipelined registration
     /// (0 = unchunked).  Saturating: an absurdly large chunk degrades
     /// to "one segment" (the unchunked path) instead of overflowing.
@@ -374,15 +420,13 @@ impl Mam {
             }
             (m, Strategy::Blocking) => {
                 let lockall = m == Method::RmaLockall;
-                let locals = rma::redistribute_lifecycle(
+                let locals = rma::redistribute_with(
                     proc,
                     merged,
                     roles,
                     &self.registry,
                     which,
-                    lockall,
-                    cfg.win_pool,
-                    cfg.lifecycle(roles),
+                    rma::RedistOpts::new(lockall, cfg.win_pool).lifecycle(cfg.lifecycle(roles)),
                 );
                 self.apply_locals(proc, which, locals, roles, cfg.win_pool);
                 State::Done
@@ -402,15 +446,13 @@ impl Mam {
             }
             (m, Strategy::WaitDrains) => {
                 let lockall = m == Method::RmaLockall;
-                let init = rma::init_rma_lifecycle(
+                let init = rma::init_rma_with(
                     proc,
                     merged,
                     roles,
                     &self.registry,
                     which,
-                    lockall,
-                    cfg.win_pool,
-                    cfg.lifecycle(roles),
+                    rma::RedistOpts::new(lockall, cfg.win_pool).lifecycle(cfg.lifecycle(roles)),
                 );
                 // Source-only ranks have no reads: they notify the
                 // others right away (Fig. 1) and keep computing.
@@ -436,11 +478,21 @@ impl Mam {
                         Method::Collective => {
                             col::redistribute_blocking(&aux, merged, &roles2, &reg, &which2)
                         }
-                        Method::RmaLock => rma::redistribute_lifecycle(
-                            &aux, merged, &roles2, &reg, &which2, false, pool, opts,
+                        Method::RmaLock => rma::redistribute_with(
+                            &aux,
+                            merged,
+                            &roles2,
+                            &reg,
+                            &which2,
+                            rma::RedistOpts::new(false, pool).lifecycle(opts),
                         ),
-                        Method::RmaLockall => rma::redistribute_lifecycle(
-                            &aux, merged, &roles2, &reg, &which2, true, pool, opts,
+                        Method::RmaLockall => rma::redistribute_with(
+                            &aux,
+                            merged,
+                            &roles2,
+                            &reg,
+                            &which2,
+                            rma::RedistOpts::new(true, pool).lifecycle(opts),
                         ),
                     };
                     *s2.lock().unwrap() = Some(locals);
@@ -652,15 +704,14 @@ impl Mam {
             (Method::Collective, Strategy::Blocking | Strategy::Threading) => {
                 col::redistribute_blocking(proc, merged, &roles, &mam.registry, &which)
             }
-            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_lifecycle(
+            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_with(
                 proc,
                 merged,
                 &roles,
                 &mam.registry,
                 &which,
-                m == Method::RmaLockall,
-                active.win_pool,
-                active.lifecycle(&roles),
+                rma::RedistOpts::new(m == Method::RmaLockall, active.win_pool)
+                    .lifecycle(active.lifecycle(&roles)),
             ),
             (Method::Collective, Strategy::NonBlocking) => {
                 let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
@@ -679,15 +730,14 @@ impl Mam {
             (m, Strategy::WaitDrains) => {
                 // Fig. 2 drain-only path: blocking local phase, then the
                 // global barrier, then the local frees.
-                let mut init = rma::init_rma_lifecycle(
+                let mut init = rma::init_rma_with(
                     proc,
                     merged,
                     &roles,
                     &mam.registry,
                     &which,
-                    m == Method::RmaLockall,
-                    active.win_pool,
-                    active.lifecycle(&roles),
+                    rma::RedistOpts::new(m == Method::RmaLockall, active.win_pool)
+                        .lifecycle(active.lifecycle(&roles)),
                 );
                 proc.req_waitall(&init.reqs);
                 rma::close_epochs(proc, &init);
@@ -723,6 +773,54 @@ mod tests {
     use crate::netmodel::{NetParams, Topology};
     use crate::simmpi::{MpiSim, WORLD};
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// The builder chain must reproduce the full nine-field struct
+    /// literal knob for knob, and `version()` alone must equal
+    /// `Default` with only the version overridden.
+    #[test]
+    fn builder_matches_struct_literal() {
+        let pool = WinPoolPolicy { enabled: true, cap: 3 };
+        let built = ReconfigCfg::version(Method::RmaLockall, Strategy::WaitDrains)
+            .with_spawn(SpawnStrategy::Async, 0.125)
+            .with_pool(pool)
+            .with_chunk(512)
+            .with_dereg(false)
+            .with_planner(PlannerMode::Auto)
+            .with_recalib(true);
+        let lit = ReconfigCfg {
+            method: Method::RmaLockall,
+            strategy: Strategy::WaitDrains,
+            spawn_cost: 0.125,
+            spawn_strategy: SpawnStrategy::Async,
+            win_pool: pool,
+            rma_chunk_kib: 512,
+            rma_dereg: false,
+            planner: PlannerMode::Auto,
+            recalib: true,
+        };
+        assert_eq!(built.method, lit.method);
+        assert_eq!(built.strategy, lit.strategy);
+        assert_eq!(built.spawn_cost.to_bits(), lit.spawn_cost.to_bits());
+        assert_eq!(built.spawn_strategy, lit.spawn_strategy);
+        assert_eq!(built.win_pool.enabled, lit.win_pool.enabled);
+        assert_eq!(built.win_pool.cap, lit.win_pool.cap);
+        assert_eq!(built.rma_chunk_kib, lit.rma_chunk_kib);
+        assert_eq!(built.rma_dereg, lit.rma_dereg);
+        assert_eq!(built.planner, lit.planner);
+        assert_eq!(built.recalib, lit.recalib);
+
+        let bare = ReconfigCfg::version(Method::RmaLock, Strategy::Threading);
+        let def = ReconfigCfg::default();
+        assert_eq!(bare.method, Method::RmaLock);
+        assert_eq!(bare.strategy, Strategy::Threading);
+        assert_eq!(bare.spawn_cost.to_bits(), def.spawn_cost.to_bits());
+        assert_eq!(bare.spawn_strategy, def.spawn_strategy);
+        assert_eq!(bare.win_pool.enabled, def.win_pool.enabled);
+        assert_eq!(bare.rma_chunk_kib, def.rma_chunk_kib);
+        assert_eq!(bare.rma_dereg, def.rma_dereg);
+        assert_eq!(bare.planner, def.planner);
+        assert_eq!(bare.recalib, def.recalib);
+    }
 
     /// Full grow-or-shrink reconfiguration over real payloads; verifies
     /// every continuing rank ends with the exact ND-way block.  The

@@ -189,10 +189,62 @@ fn post_rgets_chunked(proc: &MpiProc, win: WinId, reads: &DrainReads, chunk: u64
     reqs
 }
 
-/// Blocking RMA redistribution — Algorithm 2 (`lockall = false`) or
-/// Algorithm 3 (`lockall = true`), including the final collective
-/// `Win_free`.  Returns the drain's new local payloads (one per
-/// selected entry, in order; `None` for non-drain ranks).
+/// Options for the unified RMA redistribution entrypoints
+/// ([`redistribute_with`] / [`init_rma_with`]) — the single knob set
+/// the old `redistribute{_blocking,_pipelined,_lifecycle}` /
+/// `init_rma{,_lifecycle}` sprawl spread over five signatures.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RedistOpts {
+    /// Epoch style: one epoch over all targets (Algorithm 3,
+    /// `Win_lock_all`) vs one per accessed target (Algorithm 2,
+    /// `Win_lock`).
+    pub lockall: bool,
+    /// Window-pool policy (§VI) the windows are acquired — and must
+    /// later be freed — under.
+    pub policy: WinPoolPolicy,
+    /// Chunked lifecycle pipeline (`--rma-chunk`); the default
+    /// (`chunk_elems = 0`) is the seed unchunked path, bit for bit.
+    pub lifecycle: LifecycleOpts,
+}
+
+impl RedistOpts {
+    /// Blocking redistribution under `policy`, seed lifecycle.
+    pub fn new(lockall: bool, policy: WinPoolPolicy) -> RedistOpts {
+        RedistOpts { lockall, policy, lifecycle: LifecycleOpts::default() }
+    }
+
+    /// Attach a chunked lifecycle pipeline.
+    pub fn lifecycle(mut self, lifecycle: LifecycleOpts) -> RedistOpts {
+        self.lifecycle = lifecycle;
+        self
+    }
+}
+
+/// Unified blocking RMA redistribution — Algorithm 2
+/// (`opts.lockall = false`) or Algorithm 3 (`opts.lockall = true`),
+/// including the final collective close.  `opts.lifecycle` selects the
+/// chunked registration/deregistration pipeline (§VI):
+/// `chunk_elems > 0` registers each window in segments — only the
+/// first gates the collective `Win_create`, later segments register
+/// while earlier segments' `Get`s are already on the wire, each drain
+/// posts one `Get` per touched segment, `dereg_pipeline` unpins
+/// segments as their last reads land, and `eager_reg` starts streams
+/// at each rank's own fill end.  With the window pool, warm segments
+/// skip registration entirely.  Returns the drain's new local payloads
+/// (one per selected entry, in order; `None` for non-drain ranks).
+pub fn redistribute_with(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    opts: RedistOpts,
+) -> Vec<Option<Payload>> {
+    redistribute_rma(proc, merged, roles, registry, which, opts)
+}
+
+/// Blocking RMA redistribution (seed lifecycle).
+#[deprecated(note = "use redistribute_with(.., RedistOpts::new(lockall, policy))")]
 pub fn redistribute_blocking(
     proc: &MpiProc,
     merged: CommId,
@@ -202,18 +254,13 @@ pub fn redistribute_blocking(
     lockall: bool,
     policy: WinPoolPolicy,
 ) -> Vec<Option<Payload>> {
-    redistribute_rma(proc, merged, roles, registry, which, lockall, policy, 0)
+    redistribute_with(proc, merged, roles, registry, which, RedistOpts::new(lockall, policy))
 }
 
-/// Chunked pipelined RMA redistribution (`--rma-chunk`, §VI): like
-/// [`redistribute_blocking`], but each window registers in
-/// `chunk_elems`-element segments — only the first segment gates the
-/// collective `Win_create`, later segments register while earlier
-/// segments' `Get`s are already on the wire, and each drain posts one
-/// `Get` per touched segment so completions happen out of order.  With
-/// the window pool, warm segments skip registration entirely and the
-/// pipeline collapses to pure wire time.  `chunk_elems = 0` is
-/// [`redistribute_blocking`] — the seed path, bit for bit.
+/// Chunked pipelined RMA redistribution (registration pipeline only).
+#[deprecated(
+    note = "use redistribute_with(.., RedistOpts::new(lockall, policy).lifecycle(LifecycleOpts::reg_only(chunk_elems)))"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn redistribute_pipelined(
     proc: &MpiProc,
@@ -225,16 +272,20 @@ pub fn redistribute_pipelined(
     policy: WinPoolPolicy,
     chunk_elems: u64,
 ) -> Vec<Option<Payload>> {
-    let opts = LifecycleOpts::reg_only(chunk_elems);
-    redistribute_rma(proc, merged, roles, registry, which, lockall, policy, opts)
+    redistribute_with(
+        proc,
+        merged,
+        roles,
+        registry,
+        which,
+        RedistOpts::new(lockall, policy).lifecycle(LifecycleOpts::reg_only(chunk_elems)),
+    )
 }
 
-/// Full-lifecycle chunked RMA redistribution: the registration
-/// pipeline of [`redistribute_pipelined`] plus, per [`LifecycleOpts`],
-/// pipelined deregistration (segments unpin as their last reads land,
-/// so retiring ranks on a shrink exit after `max(T_dereg, T_wire)`)
-/// and spawn-overlapped registration streams (`eager_reg`).
-/// `chunk_elems = 0` is [`redistribute_blocking`], bit for bit.
+/// Full-lifecycle chunked RMA redistribution.
+#[deprecated(
+    note = "use redistribute_with(.., RedistOpts::new(lockall, policy).lifecycle(opts))"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn redistribute_lifecycle(
     proc: &MpiProc,
@@ -246,39 +297,34 @@ pub fn redistribute_lifecycle(
     policy: WinPoolPolicy,
     opts: LifecycleOpts,
 ) -> Vec<Option<Payload>> {
-    redistribute_rma(proc, merged, roles, registry, which, lockall, policy, opts)
+    redistribute_with(
+        proc,
+        merged,
+        roles,
+        registry,
+        which,
+        RedistOpts::new(lockall, policy).lifecycle(opts),
+    )
 }
 
-/// The one blocking RMA redistribution loop behind both entry points:
+/// The one blocking RMA redistribution loop behind the entry points:
 /// window acquisition, epochs and reads are identical — only the read
 /// posting (whole-range vs per-segment) and the window-create flavour
-/// switch on `chunk_elems`.
-#[allow(clippy::too_many_arguments)]
+/// switch on `lifecycle.chunk_elems`.
 fn redistribute_rma(
     proc: &MpiProc,
     merged: CommId,
     roles: &Roles,
     registry: &Registry,
     which: &[usize],
-    lockall: bool,
-    policy: WinPoolPolicy,
-    opts: LifecycleOpts,
+    opts: RedistOpts,
 ) -> Vec<Option<Payload>> {
-    let chunk_elems = opts.chunk_elems;
+    let RedistOpts { lockall, policy, lifecycle } = opts;
+    let chunk_elems = lifecycle.chunk_elems;
+    let create = crate::simmpi::WinCreateOpts::pipelined(chunk_elems).eager(lifecycle.eager_reg);
     let wins: Vec<WinId> = which
         .iter()
-        .map(|&i| {
-            winpool::acquire_entry_window_cfg(
-                proc,
-                merged,
-                roles,
-                registry,
-                i,
-                policy,
-                chunk_elems,
-                opts.eager_reg,
-            )
-        })
+        .map(|&i| winpool::acquire_entry_window_with(proc, merged, roles, registry, i, policy, create))
         .collect();
     let mut out: Vec<Option<Payload>> = Vec::with_capacity(which.len());
     for (&i, win) in which.iter().zip(&wins) {
@@ -315,7 +361,12 @@ fn redistribute_rma(
             out.push(None);
         }
     }
-    winpool::close_windows_cfg(proc, &wins, policy, chunk_elems > 0 && opts.dereg_pipeline);
+    winpool::close_windows_with(
+        proc,
+        &wins,
+        policy,
+        winpool::CloseOpts::collective().pipelined(chunk_elems > 0 && lifecycle.dereg_pipeline),
+    );
     out
 }
 
@@ -343,7 +394,7 @@ pub fn redistribute_blocking_fused(
     } else {
         Payload::virt(0)
     };
-    let win = proc.win_create(merged, exposure);
+    let win = proc.win_create_with(merged, exposure, crate::simmpi::WinCreateOpts::blocking());
     let mut out: Vec<Option<Payload>> = Vec::with_capacity(which.len());
     if roles.is_drain() {
         // Base offset of entry k inside *target*'s exposure = total of
@@ -397,62 +448,37 @@ pub fn redistribute_blocking_fused(
     out
 }
 
-/// `Init_RMA` (§IV-C, Fig. 1): per selected structure, collectively
-/// create its window and — on drains — immediately open the epoch and
-/// post the reads as `Rget`s before moving to the next structure.
-/// Interleaving reads with the successive window creations is the
-/// behaviour the paper observes ("some reads are also started during
-/// this creation […] many of them are already completed by the time
-/// all windows are created", §V-C).  `chunk_elems > 0` switches the
-/// window creates to the chunked pipelined registration and posts one
-/// `Rget` per touched segment (`0` = the seed path, bit for bit).
+/// Unified `Init_RMA` (§IV-C, Fig. 1): per selected structure,
+/// collectively create its window and — on drains — immediately open
+/// the epoch and post the reads as `Rget`s before moving to the next
+/// structure.  Interleaving reads with the successive window creations
+/// is the behaviour the paper observes ("some reads are also started
+/// during this creation […] many of them are already completed by the
+/// time all windows are created", §V-C).  `opts.lifecycle` selects the
+/// chunked pipeline exactly as in [`redistribute_with`]: spawn-
+/// overlapped registration streams at init time, one `Rget` per
+/// touched segment, pipelined deregistration at the `Complete_RMA`
+/// local frees (`chunk_elems = 0` = the seed path, bit for bit).
 /// Returns the in-flight state for `Complete_RMA`.
-#[allow(clippy::too_many_arguments)]
-pub fn init_rma(
+pub fn init_rma_with(
     proc: &MpiProc,
     merged: CommId,
     roles: &Roles,
     registry: &Registry,
     which: &[usize],
-    lockall: bool,
-    policy: WinPoolPolicy,
-    chunk_elems: u64,
+    opts: RedistOpts,
 ) -> RmaInit {
-    let opts = LifecycleOpts::reg_only(chunk_elems);
-    init_rma_lifecycle(proc, merged, roles, registry, which, lockall, policy, opts)
-}
-
-/// [`init_rma`] under the full [`LifecycleOpts`]: spawn-overlapped
-/// registration streams at init time, pipelined deregistration at the
-/// `Complete_RMA` local frees.
-#[allow(clippy::too_many_arguments)]
-pub fn init_rma_lifecycle(
-    proc: &MpiProc,
-    merged: CommId,
-    roles: &Roles,
-    registry: &Registry,
-    which: &[usize],
-    lockall: bool,
-    policy: WinPoolPolicy,
-    opts: LifecycleOpts,
-) -> RmaInit {
-    let chunk_elems = opts.chunk_elems;
+    let RedistOpts { lockall, policy, lifecycle } = opts;
+    let chunk_elems = lifecycle.chunk_elems;
+    let create = crate::simmpi::WinCreateOpts::pipelined(chunk_elems).eager(lifecycle.eager_reg);
     let mut wins = Vec::with_capacity(which.len());
     let mut reqs = Vec::new();
     let mut reads = Vec::with_capacity(which.len());
     let mut epochs = Vec::new();
     for (k, &i) in which.iter().enumerate() {
         let e = registry.entry(i);
-        let win = winpool::acquire_entry_window_cfg(
-            proc,
-            merged,
-            roles,
-            registry,
-            i,
-            policy,
-            chunk_elems,
-            opts.eager_reg,
-        );
+        let win =
+            winpool::acquire_entry_window_with(proc, merged, roles, registry, i, policy, create);
         wins.push(win);
         if roles.is_drain() {
             let dr = alloc_drain(e.total_elems, roles, e.local.is_real());
@@ -475,7 +501,48 @@ pub fn init_rma_lifecycle(
             reads.push(None);
         }
     }
-    RmaInit { wins, reqs, reads, epochs, policy, lifecycle: opts }
+    RmaInit { wins, reqs, reads, epochs, policy, lifecycle }
+}
+
+/// `Init_RMA` (registration pipeline only).
+#[deprecated(
+    note = "use init_rma_with(.., RedistOpts::new(lockall, policy).lifecycle(LifecycleOpts::reg_only(chunk_elems)))"
+)]
+#[allow(clippy::too_many_arguments)]
+pub fn init_rma(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+    policy: WinPoolPolicy,
+    chunk_elems: u64,
+) -> RmaInit {
+    init_rma_with(
+        proc,
+        merged,
+        roles,
+        registry,
+        which,
+        RedistOpts::new(lockall, policy).lifecycle(LifecycleOpts::reg_only(chunk_elems)),
+    )
+}
+
+/// `Init_RMA` under a full [`LifecycleOpts`].
+#[deprecated(note = "use init_rma_with(.., RedistOpts::new(lockall, policy).lifecycle(opts))")]
+#[allow(clippy::too_many_arguments)]
+pub fn init_rma_lifecycle(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    lockall: bool,
+    policy: WinPoolPolicy,
+    opts: LifecycleOpts,
+) -> RmaInit {
+    init_rma_with(proc, merged, roles, registry, which, RedistOpts::new(lockall, policy).lifecycle(opts))
 }
 
 /// Close the epochs opened by [`init_rma`] (called once the drain's
@@ -501,7 +568,12 @@ pub fn close_epochs(proc: &MpiProc, init: &RmaInit) {
 /// (segments have been unpinning since their last reads landed).
 pub fn free_windows_local(proc: &MpiProc, init: &RmaInit) {
     let piped = init.lifecycle.chunk_elems > 0 && init.lifecycle.dereg_pipeline;
-    winpool::close_windows_local_cfg(proc, &init.wins, init.policy, piped);
+    winpool::close_windows_with(
+        proc,
+        &init.wins,
+        init.policy,
+        winpool::CloseOpts::local_only().pipelined(piped),
+    );
 }
 
 /// Turn completed drain reads into the new local payloads.
@@ -534,7 +606,7 @@ mod tests {
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, local);
             let out =
-                redistribute_blocking(&p, WORLD, &roles, &reg, &[0], lockall, WinPoolPolicy::off());
+                redistribute_with(&p, WORLD, &roles, &reg, &[0], RedistOpts::new(lockall, WinPoolPolicy::off()));
             if roles.is_drain() {
                 let nb = super::super::blockdist::block_of(total, nd, r);
                 let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
@@ -590,7 +662,8 @@ mod tests {
             };
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, local);
-            let mut init = init_rma(&p, WORLD, &roles, &reg, &[0], false, WinPoolPolicy::off(), 0);
+            let mut init =
+                init_rma_with(&p, WORLD, &roles, &reg, &[0], RedistOpts::new(false, WinPoolPolicy::off()));
             // Everyone is a drain here (nd=3 covers all ranks).
             while !p.req_testall(&init.reqs) {
                 p.compute(1e-4);
@@ -631,11 +704,11 @@ mod tests {
             reg.register("A", DataKind::Constant, total, local);
             let pool = WinPoolPolicy::on();
             let t0 = p.now();
-            let first = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], true, pool);
+            let first = redistribute_with(&p, WORLD, &roles, &reg, &[0], RedistOpts::new(true, pool));
             let cold_dt = p.now() - t0;
             let s1 = p.win_pool_stats();
             let t1 = p.now();
-            let second = redistribute_blocking(&p, WORLD, &roles, &reg, &[0], true, pool);
+            let second = redistribute_with(&p, WORLD, &roles, &reg, &[0], RedistOpts::new(true, pool));
             let warm_dt = p.now() - t1;
             let s2 = p.win_pool_stats();
             assert_eq!(s2.cold_acquires, s1.cold_acquires, "second run must be all-warm");
@@ -669,15 +742,14 @@ mod tests {
             };
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, local);
-            let out = redistribute_pipelined(
+            let out = redistribute_with(
                 &p,
                 WORLD,
                 &roles,
                 &reg,
                 &[0],
-                lockall,
-                WinPoolPolicy::off(),
-                chunk,
+                RedistOpts::new(lockall, WinPoolPolicy::off())
+                    .lifecycle(LifecycleOpts::reg_only(chunk)),
             );
             if roles.is_drain() {
                 let nb = super::super::blockdist::block_of(total, nd, r);
@@ -723,18 +795,24 @@ mod tests {
                 let mut reg = Registry::new();
                 reg.register("A", DataKind::Constant, total, local);
                 let _ = if chunked {
-                    redistribute_pipelined(
+                    redistribute_with(
                         &p,
                         WORLD,
                         &roles,
                         &reg,
                         &[0],
-                        true,
-                        WinPoolPolicy::off(),
-                        0,
+                        RedistOpts::new(true, WinPoolPolicy::off())
+                            .lifecycle(LifecycleOpts::reg_only(0)),
                     )
                 } else {
-                    redistribute_blocking(&p, WORLD, &roles, &reg, &[0], true, WinPoolPolicy::off())
+                    redistribute_with(
+                        &p,
+                        WORLD,
+                        &roles,
+                        &reg,
+                        &[0],
+                        RedistOpts::new(true, WinPoolPolicy::off()),
+                    )
                 };
             });
             sim.run().unwrap()
@@ -759,7 +837,14 @@ mod tests {
             reg.register("A", DataKind::Constant, total, local);
             let pool = WinPoolPolicy::on();
             let chunk = 1000u64;
-            let first = redistribute_pipelined(&p, WORLD, &roles, &reg, &[0], true, pool, chunk);
+            let first = redistribute_with(
+                &p,
+                WORLD,
+                &roles,
+                &reg,
+                &[0],
+                RedistOpts::new(true, pool).lifecycle(LifecycleOpts::reg_only(chunk)),
+            );
             let s1 = p.win_pool_stats();
             // Install the received block and pre-pin it (what
             // Mam::apply_locals does), so the re-exposure is warm.
@@ -772,7 +857,14 @@ mod tests {
                 reg.entry(0).local.bytes(),
                 0,
             );
-            let _ = redistribute_pipelined(&p, WORLD, &roles2, &reg, &[0], true, pool, chunk);
+            let _ = redistribute_with(
+                &p,
+                WORLD,
+                &roles2,
+                &reg,
+                &[0],
+                RedistOpts::new(true, pool).lifecycle(LifecycleOpts::reg_only(chunk)),
+            );
             let s2 = p.win_pool_stats();
             assert!(
                 s2.cold_acquires == s1.cold_acquires,
@@ -804,7 +896,7 @@ mod tests {
                 Payload::real((b2.ini..b2.end).map(|i| 100.0 + i as f64).collect()),
             );
             let out =
-                redistribute_blocking(&p, WORLD, &roles, &reg, &[0, 1], true, WinPoolPolicy::off());
+                redistribute_with(&p, WORLD, &roles, &reg, &[0, 1], RedistOpts::new(true, WinPoolPolicy::off()));
             assert_eq!(out.len(), 2);
             let a = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
             let x = out[1].as_ref().unwrap().as_slice().unwrap().to_vec();
@@ -826,7 +918,7 @@ mod tests {
             let mut reg = Registry::new();
             reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
             let out =
-                redistribute_blocking(&p, WORLD, &roles, &reg, &[0], false, WinPoolPolicy::off());
+                redistribute_with(&p, WORLD, &roles, &reg, &[0], RedistOpts::new(false, WinPoolPolicy::off()));
             if roles.is_drain() {
                 let nb = super::super::blockdist::block_of(total, nd, r);
                 assert_eq!(out[0].as_ref().unwrap().elems(), nb.len());

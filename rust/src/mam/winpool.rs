@@ -21,7 +21,7 @@
 //! [`MpiProc::win_acquire`]: crate::simmpi::MpiProc::win_acquire
 //! [`MpiProc::win_release`]: crate::simmpi::MpiProc::win_release
 
-use crate::simmpi::{CommId, MpiProc, Payload, WinId};
+use crate::simmpi::{CommId, MpiProc, Payload, WinCreateOpts, WinId};
 
 use super::reconfig::Roles;
 use super::registry::Registry;
@@ -96,8 +96,33 @@ pub fn entry_exposure(roles: &Roles, registry: &Registry, i: usize) -> Payload {
     }
 }
 
-/// Collectively create (pool off) or acquire (pool on) the window of
-/// registry entry `i` over `comm`.
+/// Unified entry-window acquisition: collectively create (pool off) or
+/// acquire (pool on) the window of registry entry `i` over `comm`,
+/// with the registration strategy carried by [`WinCreateOpts`] —
+/// `blocking()` is the seed path bit for bit, `pipelined(chunk)`
+/// registers the exposure in segments behind the collective, and
+/// `.eager(true)` starts each rank's background stream at its own fill
+/// end (the spawn-overlap policy for chunked RMA grows under
+/// `--spawn-strategy async`).
+pub fn acquire_entry_window_with(
+    proc: &MpiProc,
+    comm: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    i: usize,
+    policy: WinPoolPolicy,
+    opts: WinCreateOpts,
+) -> WinId {
+    let exposure = entry_exposure(roles, registry, i);
+    if policy.enabled {
+        proc.win_acquire_with(comm, exposure, pin_token(&registry.entry(i).name), policy.cap, opts)
+    } else {
+        proc.win_create_with(comm, exposure, opts)
+    }
+}
+
+/// Blocking entry-window acquisition.
+#[deprecated(note = "use acquire_entry_window_with(.., WinCreateOpts::blocking())")]
 pub fn acquire_entry_window(
     proc: &MpiProc,
     comm: CommId,
@@ -106,22 +131,11 @@ pub fn acquire_entry_window(
     i: usize,
     policy: WinPoolPolicy,
 ) -> WinId {
-    let exposure = entry_exposure(roles, registry, i);
-    if policy.enabled {
-        proc.win_acquire_capped(comm, exposure, pin_token(&registry.entry(i).name), policy.cap)
-    } else {
-        proc.win_create(comm, exposure)
-    }
+    acquire_entry_window_with(proc, comm, roles, registry, i, policy, WinCreateOpts::blocking())
 }
 
-/// Chunked pipelined variant of [`acquire_entry_window`]: the exposure
-/// registers in `chunk_elems`-element segments, only the first of
-/// which gates the collective (see
-/// [`MpiProc::win_create_pipelined`] / [`MpiProc::win_acquire_pipelined`]).
-/// `chunk_elems = 0` is the seed path, bit for bit.
-///
-/// [`MpiProc::win_create_pipelined`]: crate::simmpi::MpiProc::win_create_pipelined
-/// [`MpiProc::win_acquire_pipelined`]: crate::simmpi::MpiProc::win_acquire_pipelined
+/// Chunked pipelined entry-window acquisition.
+#[deprecated(note = "use acquire_entry_window_with(.., WinCreateOpts::pipelined(chunk_elems))")]
 pub fn acquire_entry_window_pipelined(
     proc: &MpiProc,
     comm: CommId,
@@ -131,17 +145,22 @@ pub fn acquire_entry_window_pipelined(
     policy: WinPoolPolicy,
     chunk_elems: u64,
 ) -> WinId {
-    acquire_entry_window_cfg(proc, comm, roles, registry, i, policy, chunk_elems, false)
+    acquire_entry_window_with(
+        proc,
+        comm,
+        roles,
+        registry,
+        i,
+        policy,
+        WinCreateOpts::pipelined(chunk_elems),
+    )
 }
 
-/// [`acquire_entry_window_pipelined`] with the spawn-overlap policy:
-/// `eager_reg` starts each rank's background registration stream at
-/// its own fill end instead of the collective exit — set for chunked
-/// RMA grows under `--spawn-strategy async`, where the sources'
-/// streams then overlap the spawned ranks' staggered startup (see
-/// [`MpiProc::win_create_pipelined_opts`]).
-///
-/// [`MpiProc::win_create_pipelined_opts`]: crate::simmpi::MpiProc::win_create_pipelined_opts
+/// Chunked pipelined entry-window acquisition with a stream-start
+/// policy.
+#[deprecated(
+    note = "use acquire_entry_window_with(.., WinCreateOpts::pipelined(chunk_elems).eager(eager_reg))"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn acquire_entry_window_cfg(
     proc: &MpiProc,
@@ -153,81 +172,110 @@ pub fn acquire_entry_window_cfg(
     chunk_elems: u64,
     eager_reg: bool,
 ) -> WinId {
-    if chunk_elems == 0 {
-        return acquire_entry_window(proc, comm, roles, registry, i, policy);
+    acquire_entry_window_with(
+        proc,
+        comm,
+        roles,
+        registry,
+        i,
+        policy,
+        WinCreateOpts::pipelined(chunk_elems).eager(eager_reg),
+    )
+}
+
+/// Options for [`close_windows_with`] — the single window-teardown
+/// entrypoint the old `close_windows{,_cfg,_local,_local_cfg}` quartet
+/// collapsed into.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CloseOpts {
+    /// Route pool-off frees through the background deregistration
+    /// pipeline: segments deregister as their last reads land instead
+    /// of serially after the closing barrier.  Pooled releases skip
+    /// per-byte deregistration entirely (the slot keeps its memory
+    /// pinned), so they take the plain release either way.
+    pub dereg_pipeline: bool,
+    /// Local-only close (Wait-Drains path: the confirmation barrier
+    /// already synchronized, §IV-C) instead of the collective close.
+    pub local: bool,
+}
+
+impl CloseOpts {
+    /// Collective close, serial deregistration (the seed path).
+    pub fn collective() -> CloseOpts {
+        CloseOpts::default()
     }
-    let exposure = entry_exposure(roles, registry, i);
-    if policy.enabled {
-        proc.win_acquire_pipelined_opts(
-            comm,
-            exposure,
-            pin_token(&registry.entry(i).name),
-            policy.cap,
-            chunk_elems,
-            eager_reg,
-        )
-    } else {
-        proc.win_create_pipelined_opts(comm, exposure, chunk_elems, eager_reg)
+
+    /// Local-only close (Wait-Drains path).
+    pub fn local_only() -> CloseOpts {
+        CloseOpts { dereg_pipeline: false, local: true }
+    }
+
+    /// Set the pipelined-teardown policy.
+    pub fn pipelined(mut self, dereg_pipeline: bool) -> CloseOpts {
+        self.dereg_pipeline = dereg_pipeline;
+        self
     }
 }
 
-/// Collectively close a set of windows: `win_release` keeps the
-/// registrations pooled, `win_free` (pool off) deregisters.
+/// Unified window teardown: `win_release*` keeps the registrations
+/// pooled, `win_free*` (pool off) deregisters — serially or through
+/// the background pipeline, collectively or locally, per
+/// [`CloseOpts`].
+pub fn close_windows_with(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy, opts: CloseOpts) {
+    for win in wins {
+        match (policy.enabled, opts.local) {
+            (true, false) => proc.win_release(*win),
+            (true, true) => proc.win_release_local(*win),
+            (false, false) => {
+                if opts.dereg_pipeline {
+                    proc.win_free_pipelined(*win);
+                } else {
+                    proc.win_free(*win);
+                }
+            }
+            (false, true) => {
+                if opts.dereg_pipeline {
+                    proc.win_free_local_pipelined(*win);
+                } else {
+                    proc.win_free_local(*win);
+                }
+            }
+        }
+    }
+}
+
+/// Collective close, serial deregistration.
+#[deprecated(note = "use close_windows_with(.., CloseOpts::collective())")]
 pub fn close_windows(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
-    close_windows_cfg(proc, wins, policy, false)
+    close_windows_with(proc, wins, policy, CloseOpts::collective())
 }
 
-/// [`close_windows`] with the teardown half of the `--rma-chunk`
-/// lifecycle pipeline: under `dereg_pipeline`, pool-off frees go
-/// through [`MpiProc::win_free_pipelined`] — segments deregister in
-/// the background as their last reads land instead of serially after
-/// the closing barrier.  Pooled releases skip per-byte deregistration
-/// entirely (the slot keeps its memory pinned; per-segment warmth via
-/// `warm_prefix_bytes` means a later pipelined acquire re-registers
-/// only what the pin no longer covers), so they take the plain release
-/// either way.
-///
-/// [`MpiProc::win_free_pipelined`]: crate::simmpi::MpiProc::win_free_pipelined
+/// Collective close with the pipelined-teardown policy.
+#[deprecated(note = "use close_windows_with(.., CloseOpts::collective().pipelined(dereg_pipeline))")]
 pub fn close_windows_cfg(
     proc: &MpiProc,
     wins: &[WinId],
     policy: WinPoolPolicy,
     dereg_pipeline: bool,
 ) {
-    for win in wins {
-        if policy.enabled {
-            proc.win_release(*win);
-        } else if dereg_pipeline {
-            proc.win_free_pipelined(*win);
-        } else {
-            proc.win_free(*win);
-        }
-    }
+    close_windows_with(proc, wins, policy, CloseOpts::collective().pipelined(dereg_pipeline))
 }
 
-/// Local-only close (Wait-Drains path: the confirmation barrier
-/// already synchronized, §IV-C).
+/// Local-only close, serial deregistration.
+#[deprecated(note = "use close_windows_with(.., CloseOpts::local_only())")]
 pub fn close_windows_local(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
-    close_windows_local_cfg(proc, wins, policy, false)
+    close_windows_with(proc, wins, policy, CloseOpts::local_only())
 }
 
-/// [`close_windows_local`] with the pipelined-teardown policy of
-/// [`close_windows_cfg`].
+/// Local-only close with the pipelined-teardown policy.
+#[deprecated(note = "use close_windows_with(.., CloseOpts::local_only().pipelined(dereg_pipeline))")]
 pub fn close_windows_local_cfg(
     proc: &MpiProc,
     wins: &[WinId],
     policy: WinPoolPolicy,
     dereg_pipeline: bool,
 ) {
-    for win in wins {
-        if policy.enabled {
-            proc.win_release_local(*win);
-        } else if dereg_pipeline {
-            proc.win_free_local_pipelined(*win);
-        } else {
-            proc.win_free_local(*win);
-        }
-    }
+    close_windows_with(proc, wins, policy, CloseOpts::local_only().pipelined(dereg_pipeline))
 }
 
 #[cfg(test)]

@@ -108,6 +108,18 @@ impl RunSpec {
         self.ns.max(self.nd).div_ceil(self.cores_per_node)
     }
 
+    /// The MaM configuration this spec implies (shared by source and
+    /// drain bodies so they can never drift apart).
+    pub fn mam_cfg(&self) -> ReconfigCfg {
+        ReconfigCfg::version(self.method, self.strategy)
+            .with_spawn(self.spawn_strategy, self.spawn_cost)
+            .with_pool(self.win_pool)
+            .with_chunk(self.rma_chunk_kib)
+            .with_dereg(self.rma_dereg)
+            .with_planner(self.planner)
+            .with_recalib(self.recalib)
+    }
+
     pub fn label(&self) -> String {
         version_label(self.method, self.strategy)
     }
@@ -277,18 +289,7 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
     let mut sam = Sam::new(spec.sam.clone(), spec.seed, p.gpid());
     let mut reg = Registry::new();
     sam.register_data(&mut reg, spec.ns, rank);
-    let mam_cfg = ReconfigCfg {
-        method: spec.method,
-        strategy: spec.strategy,
-        spawn_cost: spec.spawn_cost,
-        spawn_strategy: spec.spawn_strategy,
-        win_pool: spec.win_pool,
-        rma_chunk_kib: spec.rma_chunk_kib,
-        rma_dereg: spec.rma_dereg,
-        planner: spec.planner,
-        recalib: spec.recalib,
-    };
-    let mut mam = Mam::new(reg, mam_cfg.clone());
+    let mut mam = Mam::new(reg, spec.mam_cfg());
 
     // ---- Warm-up on NS ranks: measure T_base.
     for _ in 0..spec.warmup_iters {
@@ -350,18 +351,7 @@ fn drain_main(spec: &RunSpec, dp: MpiProc, merged: CommId) {
     // Declarations are identical on every rank: rebuild from config.
     sam0.register_data(&mut reg, spec.ns, 0);
     let decls = reg.decls();
-    let mam_cfg = ReconfigCfg {
-        method: spec.method,
-        strategy: spec.strategy,
-        spawn_cost: spec.spawn_cost,
-        spawn_strategy: spec.spawn_strategy,
-        win_pool: spec.win_pool,
-        rma_chunk_kib: spec.rma_chunk_kib,
-        rma_dereg: spec.rma_dereg,
-        planner: spec.planner,
-        recalib: spec.recalib,
-    };
-    let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, mam_cfg);
+    let mam = Mam::drain_join(&dp, merged, spec.ns, spec.nd, &decls, spec.mam_cfg());
     debug_assert!(mam
         .registry
         .verify_blocks(spec.nd, dp.rank(merged))

@@ -54,7 +54,13 @@ impl ActivityCtx {
     }
 
     fn resumed(&self, r: crate::simcluster::engine::Resume) {
-        self.set_now(r.now);
+        if r.reset {
+            // First resume after an engine rollback: adopt the rewound
+            // clock even though it moves the local time backwards.
+            self.now.set(r.now);
+        } else {
+            self.set_now(r.now);
+        }
         self.lease.set(r.lease);
     }
 
@@ -109,6 +115,19 @@ impl ActivityCtx {
     /// Wake `target` "immediately" (at the current virtual time).
     pub fn unpark_now(&self, target: ActivityId) {
         self.unpark_at(target, self.now());
+    }
+
+    /// Schedule wakeups for many targets in one engine round-trip.
+    /// Ordering is identical to calling [`ActivityCtx::unpark_at`] for
+    /// each entry in order, but a collective release among N ranks
+    /// costs one engine event plus an O(N) sweep instead of N heap
+    /// operations.
+    pub fn unpark_batch(&self, entries: Vec<(ActivityId, Time)>) {
+        if entries.is_empty() {
+            return;
+        }
+        let r = self.handoff.activity_yield(Request::UnparkBatch(entries));
+        self.resumed(r);
     }
 
     /// Spawn a new activity starting at the current virtual time;

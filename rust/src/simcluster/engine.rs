@@ -1,14 +1,44 @@
-//! The discrete-event engine: virtual clock, event heap, and the
-//! thread handoff protocol that suspends/resumes simulated activities.
+//! The discrete-event engine: virtual clock, calendar event queue, and
+//! the thread handoff protocol that suspends/resumes simulated
+//! activities.
 //!
 //! ## Handoff protocol
 //!
-//! Every activity owns a [`Handoff`] slot (mutex + condvar).  The
-//! engine resumes an activity by storing `ToActivity` and waits for the
-//! slot to flip back to `ToEngine(request)`; the activity does the
-//! mirror image.  This gives strict alternation — at most one activity
-//! body executes at a time — which is what makes simulation runs
-//! deterministic regardless of OS scheduling.
+//! Every thread-backed activity owns a [`Handoff`] slot (mutex +
+//! condvar).  The engine resumes an activity by storing `ToActivity`
+//! and waits for the slot to flip back to `ToEngine(request)`; the
+//! activity does the mirror image.  This gives strict alternation — at
+//! most one activity body executes at a time — which is what makes
+//! simulation runs deterministic regardless of OS scheduling.
+//!
+//! ## Event queue
+//!
+//! Events live in a bucketed **calendar queue** ([`CalendarQueue`]) by
+//! default: each event is hashed into a time bucket by
+//! `floor(time / width)`, pops walk the cursor bucket-by-bucket, and
+//! the bucket count / width self-tune to keep occupancy near one event
+//! per bucket.  Pop order is the exact `(time, seq)` minimum, so the
+//! calendar is **bit-identical** to the seed `BinaryHeap` — the old
+//! heap is retained behind [`QueueKind::Heap`] and an equivalence
+//! harness asserts identical outputs across both.
+//!
+//! ## Activity arena
+//!
+//! Activities are arena-allocated: [`ActivityId`] is a dense index into
+//! a `Vec<ActivitySlot>` (ids are assigned sequentially at spawn), so
+//! every engine-side lookup is a bounds-checked array index instead of
+//! a `HashMap` probe.
+//!
+//! ## Batched wakeups
+//!
+//! A collective releasing N ranks costs **one** engine event plus an
+//! O(N) release sweep ([`Request::UnparkBatch`]): the batch is sorted
+//! once, its head is pushed as a single queue event, and each released
+//! rank that blocks again hands control directly to the next batch
+//! entry when that entry is already the global minimum (a "direct
+//! sweep" — zero queue operations).  Per-entry seq numbers are assigned
+//! exactly as N individual unparks would have been, so release order
+//! is bit-identical.
 //!
 //! ## Wakeups
 //!
@@ -17,10 +47,27 @@
 //! is never lost.  Higher layers are written condition-variable style:
 //! `while !condition { ctx.park(); }` — spurious wakeups are allowed
 //! and harmless.
+//!
+//! ## Snapshot / rollback
+//!
+//! [`Engine::run_until_idle`] returns (instead of reporting deadlock)
+//! when every live activity is parked, [`Engine::unpark`] re-releases
+//! activities from the host side, and [`Engine::rollback_to`] rewinds
+//! the virtual clock at quiescence.  Together these let the planner's
+//! DES micro-probes replay many candidates against one saved world
+//! instead of rebuilding threads + topology per candidate.
+//!
+//! ## Lite activities
+//!
+//! [`Engine::spawn_lite_at`] registers a *thread-less* activity: a
+//! state-machine closure the engine drives inline, one step per event.
+//! A lite activity costs ~200 bytes instead of an OS thread, which is
+//! what makes 10⁶-rank simulations routine (`proteo engine-stress`).
 
-use std::collections::{BinaryHeap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::activity::ActivityCtx;
 
@@ -28,6 +75,7 @@ use super::activity::ActivityCtx;
 pub type Time = f64;
 
 /// Identifier of a simulated activity (process or auxiliary thread).
+/// Dense: ids index the engine's activity arena in spawn order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ActivityId(pub usize);
 
@@ -65,6 +113,12 @@ pub(crate) enum Request {
     /// Schedule a wakeup for `target` at absolute time `at`, then
     /// continue running me immediately.
     Unpark { target: ActivityId, at: Time },
+    /// Schedule wakeups for many targets in one engine round-trip
+    /// (collective release), then continue running me immediately.
+    /// Per-entry ordering is identical to issuing the unparks one by
+    /// one, but the engine pays one event + an O(N) sweep instead of
+    /// N queue operations.
+    UnparkBatch(Vec<(ActivityId, Time)>),
     /// Spawn a new activity starting at `at` (the caller's local time,
     /// which may be ahead of the engine clock under a lease); reply
     /// with its id, continue me immediately.
@@ -90,6 +144,10 @@ pub(crate) struct Resume {
     /// dominant cost; leases remove it for every compute segment that
     /// fits before the next scheduled event.
     pub lease: Time,
+    /// Set on the first resume after [`Engine::rollback_to`]: the
+    /// activity must adopt `now` even though it moves its local clock
+    /// backwards.
+    pub reset: bool,
 }
 
 pub(crate) enum Slot {
@@ -143,14 +201,14 @@ impl Handoff {
     }
 
     /// Activity side: final request (Exit) — posts without waiting for
-    /// a resume, so the thread can return and be joined by the engine.
+    /// a resume, so the worker thread can move on to its next job.
     fn activity_finish(&self, req: Request) {
         let mut slot = self.slot.lock().unwrap();
         *slot = Slot::ToEngine(req);
         self.cv.notify_all();
     }
 
-    /// Activity side: first wait (thread start) — no request submitted.
+    /// Activity side: first wait (job start) — no request submitted.
     fn activity_wait_first(&self) -> Resume {
         let mut slot = self.slot.lock().unwrap();
         loop {
@@ -165,12 +223,55 @@ impl Handoff {
     }
 }
 
-/// Heap event: resume `activity` at `time`.  `seq` breaks ties FIFO so
+/// Which event-queue implementation an [`Engine`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    /// The seed binary heap (kept for equivalence testing).
+    Heap,
+    /// The bucketed calendar queue (default).
+    Calendar,
+}
+
+static DEFAULT_QUEUE_KIND: AtomicU8 = AtomicU8::new(1);
+
+/// Set the process-wide default queue kind used by [`Engine::new`].
+/// The equivalence harness flips this to run identical workloads on
+/// both implementations.
+pub fn set_default_queue_kind(kind: QueueKind) {
+    DEFAULT_QUEUE_KIND.store(
+        match kind {
+            QueueKind::Heap => 0,
+            QueueKind::Calendar => 1,
+        },
+        Ordering::SeqCst,
+    );
+}
+
+/// The process-wide default queue kind.
+pub fn default_queue_kind() -> QueueKind {
+    if DEFAULT_QUEUE_KIND.load(Ordering::SeqCst) == 0 {
+        QueueKind::Heap
+    } else {
+        QueueKind::Calendar
+    }
+}
+
+/// What a queued event resumes.
+#[derive(Clone, Copy, Debug)]
+enum EvTarget {
+    /// Resume one activity.
+    Act(ActivityId),
+    /// Resume the next pending entry of a wakeup batch (slab index).
+    Batch(usize),
+}
+
+/// Queue event: resume `target` at `time`.  `seq` breaks ties FIFO so
 /// equal-time events are processed in insertion order (determinism).
+#[derive(Clone, Copy, Debug)]
 struct Event {
     time: Time,
     seq: u64,
-    activity: ActivityId,
+    target: EvTarget,
 }
 
 impl PartialEq for Event {
@@ -195,14 +296,445 @@ impl Ord for Event {
     }
 }
 
-struct ActivityState {
-    label: String,
+/// `(time, seq)` strict ordering shared by both queue implementations.
+#[inline]
+fn key_lt(a: (Time, u64), b: (Time, u64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+const CAL_MIN_BUCKETS: usize = 64;
+
+struct CalEntry {
+    /// Precomputed absolute bucket index `floor(time / width)` —
+    /// computed once per push so float boundary arithmetic can never
+    /// disagree between push and pop.
+    abs: u64,
+    ev: Event,
+}
+
+/// Bucketed calendar queue with exact `(time, seq)` pop order.
+///
+/// The cursor `cur` is an *absolute* bucket index; the structural
+/// invariant is that no live entry has `abs < cur` (pushes clamp the
+/// cursor down, so it can never strand an entry behind itself).  Pops
+/// walk the cursor forward at most one lap before falling back to a
+/// global minimum scan (sparse far-future regions), and a memoized
+/// minimum makes the peek-then-pop pattern cost one scan per event.
+/// Width and bucket count self-tune from the live event spread.
+struct CalendarQueue {
+    buckets: Vec<Vec<CalEntry>>,
+    /// Bucket width in virtual seconds.
+    width: f64,
+    /// Absolute bucket index of the cursor; no entry is below it.
+    cur: u64,
+    len: usize,
+    /// Memoized minimum `(time, seq, bucket slot, position)`.  Valid
+    /// until the next pop: pushes keep it fresh (appends never move
+    /// entries), only `swap_remove` invalidates positions.
+    memo: Option<(Time, u64, usize, usize)>,
+    /// Entries + buckets examined by the last `ensure_memo` scan —
+    /// feeds the occupancy self-tuning.
+    scan_cost: usize,
+    pops: u64,
+    last_retune_pops: u64,
+}
+
+impl CalendarQueue {
+    fn new() -> CalendarQueue {
+        CalendarQueue {
+            buckets: (0..CAL_MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: 1e-5,
+            cur: 0,
+            len: 0,
+            memo: None,
+            scan_cost: 0,
+            pops: 0,
+            last_retune_pops: 0,
+        }
+    }
+
+    fn abs_bucket(&self, time: Time) -> u64 {
+        if time <= 0.0 {
+            return 0;
+        }
+        let b = time / self.width;
+        if b >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            b as u64
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        let abs = self.abs_bucket(ev.time);
+        if abs < self.cur {
+            self.cur = abs;
+        }
+        let slot = (abs % self.buckets.len() as u64) as usize;
+        let (t, s) = (ev.time, ev.seq);
+        self.buckets[slot].push(CalEntry { abs, ev });
+        let pos = self.buckets[slot].len() - 1;
+        if let Some((mt, ms, _, _)) = self.memo {
+            if key_lt((t, s), (mt, ms)) {
+                self.memo = Some((t, s, slot, pos));
+            }
+        }
+        // A memo of None stays None: the new entry may or may not be
+        // the minimum, and peek recomputes lazily.
+        self.len += 1;
+        if self.len > 4 * self.buckets.len() {
+            self.resize(self.buckets.len() * 2);
+        }
+    }
+
+    /// Locate the global minimum, advancing the cursor past empty
+    /// buckets, and memoize it.
+    fn ensure_memo(&mut self) -> Option<(Time, u64, usize, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.memo.is_some() {
+            return self.memo;
+        }
+        let n = self.buckets.len() as u64;
+        let mut cost = 0usize;
+        for _ in 0..self.buckets.len() {
+            let slot = (self.cur % n) as usize;
+            let mut best: Option<(Time, u64, usize)> = None;
+            cost += 1 + self.buckets[slot].len();
+            for (pos, e) in self.buckets[slot].iter().enumerate() {
+                if e.abs == self.cur {
+                    let k = (e.ev.time, e.ev.seq);
+                    if best.is_none() || key_lt(k, (best.unwrap().0, best.unwrap().1)) {
+                        best = Some((k.0, k.1, pos));
+                    }
+                }
+            }
+            if let Some((t, s, pos)) = best {
+                self.memo = Some((t, s, slot, pos));
+                self.scan_cost = cost;
+                return self.memo;
+            }
+            if self.cur == u64::MAX {
+                break;
+            }
+            self.cur += 1;
+        }
+        // Sparse far-future region: one global scan for the minimum,
+        // then jump the cursor to its bucket (a "calendar year" skip).
+        let mut best: Option<(u64, Time, u64, usize, usize)> = None;
+        for (slot, b) in self.buckets.iter().enumerate() {
+            cost += b.len();
+            for (pos, e) in b.iter().enumerate() {
+                let k = (e.ev.time, e.ev.seq);
+                let better = match best {
+                    None => true,
+                    Some((_, bt, bs, _, _)) => key_lt(k, (bt, bs)),
+                };
+                if better {
+                    best = Some((e.abs, k.0, k.1, slot, pos));
+                }
+            }
+        }
+        let (abs, t, s, slot, pos) = best.expect("len > 0 but no entries found");
+        self.cur = abs;
+        self.memo = Some((t, s, slot, pos));
+        self.scan_cost = cost;
+        self.memo
+    }
+
+    fn peek_key(&mut self) -> Option<(Time, u64)> {
+        self.ensure_memo().map(|(t, s, _, _)| (t, s))
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        let (_, _, slot, pos) = self.ensure_memo()?;
+        let e = self.buckets[slot].swap_remove(pos);
+        self.len -= 1;
+        self.memo = None;
+        self.cur = e.abs;
+        self.pops += 1;
+        if self.buckets.len() > CAL_MIN_BUCKETS && self.len < self.buckets.len() / 4 {
+            self.resize((self.buckets.len() / 2).max(CAL_MIN_BUCKETS));
+        } else if self.scan_cost > 8
+            && self.len > 32
+            && self.pops >= self.last_retune_pops + self.len as u64
+        {
+            // Expensive scans mean the width no longer matches the
+            // event spread (all clustered in one bucket, or spread so
+            // thin every pop laps the calendar).  Rebuild with a width
+            // re-derived from the live entries; amortized by requiring
+            // `len` pops between retunes.
+            self.last_retune_pops = self.pops;
+            let n = self.len.next_power_of_two().max(CAL_MIN_BUCKETS);
+            self.resize(n);
+        }
+        Some(e.ev)
+    }
+
+    fn resize(&mut self, n: usize) {
+        let mut all: Vec<CalEntry> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for e in &all {
+            if e.ev.time.is_finite() {
+                lo = lo.min(e.ev.time);
+                hi = hi.max(e.ev.time);
+            }
+        }
+        if hi > lo && all.len() > 1 {
+            let w = (hi - lo) / (all.len() as f64);
+            if w.is_finite() && w > 0.0 {
+                self.width = w;
+            }
+        }
+        self.buckets = (0..n).map(|_| Vec::new()).collect();
+        self.len = all.len();
+        self.memo = None;
+        self.cur = u64::MAX;
+        for e in all {
+            // Recompute abs under the (possibly) new width.
+            let abs = self.abs_bucket(e.ev.time);
+            if abs < self.cur {
+                self.cur = abs;
+            }
+            let slot = (abs % n as u64) as usize;
+            self.buckets[slot].push(CalEntry { abs, ev: e.ev });
+        }
+        if self.len == 0 {
+            self.cur = 0;
+        }
+    }
+
+    fn reset_cursor(&mut self, t: Time) {
+        debug_assert!(self.len == 0);
+        self.cur = self.abs_bucket(t);
+        self.memo = None;
+    }
+}
+
+/// The engine's event queue: the calendar queue by default, the seed
+/// binary heap behind [`QueueKind::Heap`] for equivalence testing.
+/// Both pop the exact `(time, seq)` minimum.
+enum EventQueue {
+    Heap(BinaryHeap<Event>),
+    Calendar(CalendarQueue),
+}
+
+impl EventQueue {
+    fn new(kind: QueueKind) -> EventQueue {
+        match kind {
+            QueueKind::Heap => EventQueue::Heap(BinaryHeap::new()),
+            QueueKind::Calendar => EventQueue::Calendar(CalendarQueue::new()),
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        match self {
+            EventQueue::Heap(h) => h.push(ev),
+            EventQueue::Calendar(c) => c.push(ev),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        match self {
+            EventQueue::Heap(h) => h.pop(),
+            EventQueue::Calendar(c) => c.pop(),
+        }
+    }
+
+    fn peek_key(&mut self) -> Option<(Time, u64)> {
+        match self {
+            EventQueue::Heap(h) => h.peek().map(|e| (e.time, e.seq)),
+            EventQueue::Calendar(c) => c.peek_key(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            EventQueue::Heap(h) => h.len(),
+            EventQueue::Calendar(c) => c.len,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn reset_cursor(&mut self, t: Time) {
+        if let EventQueue::Calendar(c) = self {
+            c.reset_cursor(t);
+        }
+    }
+}
+
+/// One step result of a lite activity's state machine.
+pub enum LiteStep {
+    /// Resume me at absolute virtual time `t`.
+    AdvanceUntil(Time),
+    /// Park until unparked.
+    Park,
+    /// Finished.
+    Done,
+}
+
+enum LiteEffect {
+    Unpark(ActivityId, Time),
+    UnparkBatch(Vec<(ActivityId, Time)>),
+}
+
+/// Context handle a lite activity's step closure runs against.
+/// Effects (unparks) are queued and applied in order by the engine
+/// right after the step returns, before the step result is handled.
+pub struct LiteCtx {
+    now: Time,
+    effects: Vec<LiteEffect>,
+}
+
+impl LiteCtx {
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule a wakeup for `target` at absolute time `at`.
+    pub fn unpark_at(&mut self, target: ActivityId, at: Time) {
+        self.effects.push(LiteEffect::Unpark(target, at));
+    }
+
+    /// Schedule wakeups for many targets in one batch.
+    pub fn unpark_batch(&mut self, entries: Vec<(ActivityId, Time)>) {
+        if !entries.is_empty() {
+            self.effects.push(LiteEffect::UnparkBatch(entries));
+        }
+    }
+}
+
+type LiteBody = Box<dyn FnMut(&mut LiteCtx) -> LiteStep + Send + 'static>;
+
+/// A worker-pool job: one activity body plus its handoff + context.
+struct Job {
     handoff: Arc<Handoff>,
-    join: Option<std::thread::JoinHandle<()>>,
+    ctx: ActivityCtx,
+    body: BodyFn,
+}
+
+/// Idle simulation worker threads, shared process-wide.  A fig sweep
+/// runs tens of thousands of short-lived simulated processes; reusing
+/// OS threads across them removes the dominant spawn/join cost.
+static WORKER_POOL: OnceLock<Mutex<Vec<mpsc::Sender<Job>>>> = OnceLock::new();
+const WORKER_POOL_CAP: usize = 1024;
+
+fn worker_pool() -> &'static Mutex<Vec<mpsc::Sender<Job>>> {
+    WORKER_POOL.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn worker_loop(rx: mpsc::Receiver<Job>) {
+    while let Ok(Job { handoff, ctx, body }) = rx.recv() {
+        let first = handoff.activity_wait_first();
+        ctx.set_now(first.now);
+        ctx.set_lease(first.lease);
+        let ctx2 = ctx.clone();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(ctx);
+        }));
+        let panic_msg = result.err().map(|e| {
+            e.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string())
+        });
+        // Final post: do not wait for a resume — the engine returns
+        // this worker to the pool right after handling Exit.  Carry
+        // the final local time so lease-advanced clocks are reflected
+        // in the engine clock.
+        handoff.activity_finish(Request::Exit { panic_msg, at: ctx2.now() });
+    }
+}
+
+/// Hand `job` to an idle pooled worker, or spawn a fresh one.
+fn dispatch_job(mut job: Job) -> mpsc::Sender<Job> {
+    loop {
+        let reused = worker_pool().lock().unwrap().pop();
+        let tx = match reused {
+            Some(tx) => tx,
+            None => {
+                let (tx, rx) = mpsc::channel::<Job>();
+                std::thread::Builder::new()
+                    .name("sim-worker".to_string())
+                    .stack_size(1 << 20)
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn simulation worker thread");
+                tx
+            }
+        };
+        match tx.send(job) {
+            Ok(()) => return tx,
+            Err(mpsc::SendError(j)) => job = j, // worker gone; try another
+        }
+    }
+}
+
+fn return_worker(tx: mpsc::Sender<Job>) {
+    let mut pool = worker_pool().lock().unwrap();
+    if pool.len() < WORKER_POOL_CAP {
+        pool.push(tx);
+    }
+}
+
+enum SlotBody {
+    /// Thread-backed activity (the default): handoff + the pooled
+    /// worker currently running its body.
+    Thread { handoff: Arc<Handoff>, worker: Option<mpsc::Sender<Job>> },
+    /// Thread-less state-machine activity driven inline by the engine.
+    /// `None` while the closure is checked out for a step (or done).
+    Lite(Option<LiteBody>),
+}
+
+struct ActivitySlot {
+    label: String,
+    body: SlotBody,
     /// Wakeups delivered while the activity was not parked.
     pending_wakes: VecDeque<Time>,
     parked: bool,
     done: bool,
+    /// Set by [`Engine::rollback_to`]; the next resume carries
+    /// `reset = true` so the activity adopts the rewound clock.
+    needs_reset: bool,
+}
+
+/// A pending collective release: entries sorted by `(time, seq)`,
+/// `next` pointing at the first undelivered one.  Exactly one queue
+/// event exists per batch (for `entries[next]`) unless the batch is
+/// mid-sweep.
+struct BatchRelease {
+    entries: Vec<(Time, u64, ActivityId)>,
+    next: usize,
+}
+
+/// Engine observability counters (see `util::benchkit` rows and the
+/// scenario JSON `engine` object).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Activity resumes processed (same metric the seed engine counted).
+    pub events: u64,
+    /// Peak event-queue depth.
+    pub peak_queue: usize,
+    /// Batched-wakeup requests handled.
+    pub wakeup_batches: u64,
+    /// Total wakeups delivered through batches.
+    pub wakeup_batched: u64,
+    /// Largest single wakeup batch.
+    pub wakeup_max_batch: usize,
+    /// Batch entries delivered by direct sweep (zero queue operations).
+    pub direct_sweeps: u64,
+    /// Host-side clock rollbacks (incremental probe reuse).
+    pub rollbacks: u64,
+    /// World snapshots taken against this engine (noted by the prober).
+    pub snapshots: u64,
 }
 
 /// Shared counters the [`ActivityCtx`] can read without a handoff.
@@ -213,18 +745,17 @@ pub(crate) struct EngineShared {
 
 /// The discrete-event engine.
 pub struct Engine {
-    heap: BinaryHeap<Event>,
+    queue: EventQueue,
     seq: u64,
     clock: Time,
-    activities: HashMap<ActivityId, ActivityState>,
-    next_id: usize,
+    activities: Vec<ActivitySlot>,
     alive: usize,
+    batches: Vec<Option<BatchRelease>>,
+    batch_free: Vec<usize>,
+    stats: EngineStats,
     pub(crate) shared: Arc<EngineShared>,
     /// Livelock guard; configurable via [`Engine::set_event_limit`].
     event_limit: u64,
-    /// Reused scratch for deadlock detection (parked-activity ids) —
-    /// no per-detection allocation.
-    parked_scratch: Vec<ActivityId>,
 }
 
 impl Default for Engine {
@@ -234,17 +765,24 @@ impl Default for Engine {
 }
 
 impl Engine {
+    /// Engine with the process-wide default queue kind.
     pub fn new() -> Engine {
+        Self::with_queue(default_queue_kind())
+    }
+
+    /// Engine with an explicit queue kind (equivalence testing).
+    pub fn with_queue(kind: QueueKind) -> Engine {
         Engine {
-            heap: BinaryHeap::new(),
+            queue: EventQueue::new(kind),
             seq: 0,
             clock: 0.0,
-            activities: HashMap::new(),
-            next_id: 0,
+            activities: Vec::new(),
             alive: 0,
+            batches: Vec::new(),
+            batch_free: Vec::new(),
+            stats: EngineStats::default(),
             shared: Arc::new(EngineShared { events_processed: AtomicU64::new(0) }),
             event_limit: 500_000_000,
-            parked_scratch: Vec::new(),
         }
     }
 
@@ -263,9 +801,30 @@ impl Engine {
         self.shared.events_processed.load(Ordering::Relaxed)
     }
 
+    /// Observability counters (events, queue depth, batching, rollback).
+    pub fn stats(&self) -> EngineStats {
+        let mut s = self.stats;
+        s.events = self.events_processed();
+        s
+    }
+
+    /// Mutable counters — the prober notes world snapshots here.
+    pub fn stats_mut(&mut self) -> &mut EngineStats {
+        &mut self.stats
+    }
+
+    fn push_ev(&mut self, ev: Event) {
+        self.queue.push(ev);
+        let d = self.queue.len();
+        if d > self.stats.peak_queue {
+            self.stats.peak_queue = d;
+        }
+    }
+
     fn push_event(&mut self, time: Time, activity: ActivityId) {
         self.seq += 1;
-        self.heap.push(Event { time, seq: self.seq, activity });
+        let seq = self.seq;
+        self.push_ev(Event { time, seq, target: EvTarget::Act(activity) });
     }
 
     /// Register an activity to start at virtual time `start`.
@@ -278,195 +837,406 @@ impl Engine {
         id
     }
 
-    /// Create the activity thread without scheduling it.
+    /// Hand the activity body to a pooled worker without scheduling it.
     fn spawn_suspended(&mut self, label: impl Into<String>, body: BodyFn) -> ActivityId {
-        let id = ActivityId(self.next_id);
-        self.next_id += 1;
-        let label = label.into();
+        let id = ActivityId(self.activities.len());
         let handoff = Handoff::new();
         let ctx = ActivityCtx::new(id, handoff.clone());
-        let thread_label = label.clone();
-        let h2 = handoff.clone();
-        let join = std::thread::Builder::new()
-            .name(format!("sim-{thread_label}"))
-            .stack_size(1 << 20)
-            .spawn(move || {
-                let first = h2.activity_wait_first();
-                ctx.set_now(first.now);
-                ctx.set_lease(first.lease);
-                let ctx2 = ctx.clone();
-                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    body(ctx);
-                }));
-                let panic_msg = result.err().map(|e| {
-                    e.downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "<non-string panic>".to_string())
-                });
-                // Final post: do not wait for a resume — the engine
-                // joins this thread right after handling Exit.  Carry
-                // the final local time so lease-advanced clocks are
-                // reflected in the engine clock.
-                h2.activity_finish(Request::Exit { panic_msg, at: ctx2.now() });
-            })
-            .expect("spawn simulation thread");
-        self.activities.insert(
-            id,
-            ActivityState {
-                label,
-                handoff,
-                join: Some(join),
-                pending_wakes: VecDeque::new(),
-                parked: false,
-                done: false,
-            },
-        );
+        let worker = dispatch_job(Job { handoff: handoff.clone(), ctx, body });
+        self.activities.push(ActivitySlot {
+            label: label.into(),
+            body: SlotBody::Thread { handoff, worker: Some(worker) },
+            pending_wakes: VecDeque::new(),
+            parked: false,
+            done: false,
+            needs_reset: false,
+        });
         self.alive += 1;
         id
     }
 
+    /// Register a thread-less state-machine activity starting at
+    /// `start`.  The engine calls `body` once per resume; the returned
+    /// [`LiteStep`] decides what happens next.  Costs ~200 bytes
+    /// instead of an OS thread — million-activity simulations are
+    /// routine (`proteo engine-stress`).
+    pub fn spawn_lite_at<F>(&mut self, start: Time, label: impl Into<String>, body: F) -> ActivityId
+    where
+        F: FnMut(&mut LiteCtx) -> LiteStep + Send + 'static,
+    {
+        let id = ActivityId(self.activities.len());
+        self.activities.push(ActivitySlot {
+            label: label.into(),
+            body: SlotBody::Lite(Some(Box::new(body))),
+            pending_wakes: VecDeque::new(),
+            parked: false,
+            done: false,
+            needs_reset: false,
+        });
+        self.alive += 1;
+        self.push_event(start, id);
+        id
+    }
+
+    /// Host-side wakeup (engine not running): used by the planner's
+    /// probe sessions to re-release ranks after [`Engine::rollback_to`].
+    pub fn unpark(&mut self, target: ActivityId, at: Time) {
+        self.handle_unpark(target, at);
+    }
+
+    /// Rewind the virtual clock to `t`.  Requires quiescence: an empty
+    /// event queue and every live activity parked (the state
+    /// [`Engine::run_until_idle`] returns in).  The next resume of each
+    /// live activity carries `reset` so its local clock adopts `t`.
+    pub fn rollback_to(&mut self, t: Time) {
+        assert!(self.queue.is_empty(), "rollback_to requires an empty event queue");
+        for st in self.activities.iter_mut() {
+            if !st.done {
+                assert!(st.parked, "rollback_to requires all live activities parked");
+                st.pending_wakes.clear();
+                st.needs_reset = true;
+            }
+        }
+        self.clock = t;
+        self.queue.reset_cursor(t);
+        self.stats.rollbacks += 1;
+    }
+
     /// Drive the simulation until every activity has finished.
     pub fn run(&mut self) -> Result<Time, EngineError> {
-        let result = self.run_inner();
-        // On error, detach remaining threads so we don't hang on drop:
-        // they are parked forever; marking done lets Drop skip joins.
+        let result = self.run_inner(false);
         if result.is_err() {
-            for st in self.activities.values_mut() {
-                st.done = true;
-                st.join = None; // detach
-            }
-            self.alive = 0;
+            self.abandon();
         }
         result
     }
 
-    fn run_inner(&mut self) -> Result<Time, EngineError> {
+    /// Drive the simulation until every activity has finished **or**
+    /// every live activity is parked with no pending events (returns
+    /// `Ok(clock)` at that quiescent point instead of reporting
+    /// deadlock).  The probe-session building block: park ranks, read
+    /// metrics, [`Engine::rollback_to`], [`Engine::unpark`], repeat.
+    pub fn run_until_idle(&mut self) -> Result<Time, EngineError> {
+        let result = self.run_inner(true);
+        if result.is_err() {
+            self.abandon();
+        }
+        result
+    }
+
+    /// On error, detach remaining activities so we don't hang on drop:
+    /// they are parked forever; marking done lets everything unwind.
+    /// Stuck workers (blocked in their handoff) are leaked, exactly as
+    /// the seed engine leaked detached threads; they hold no engine
+    /// locks, so this is safe.
+    fn abandon(&mut self) {
+        for st in self.activities.iter_mut() {
+            st.done = true;
+        }
+        self.alive = 0;
+    }
+
+    fn alloc_batch(&mut self, b: BatchRelease) -> usize {
+        if let Some(i) = self.batch_free.pop() {
+            self.batches[i] = Some(b);
+            i
+        } else {
+            self.batches.push(Some(b));
+            self.batches.len() - 1
+        }
+    }
+
+    fn free_batch(&mut self, i: usize) {
+        self.batches[i] = None;
+        self.batch_free.push(i);
+    }
+
+    fn handle_unpark(&mut self, target: ActivityId, at: Time) {
+        let at = at.max(self.clock);
+        if let Some(st) = self.activities.get_mut(target.0) {
+            if st.done {
+                // waking a finished activity is a no-op
+            } else if st.parked {
+                st.parked = false;
+                self.push_event(at, target);
+            } else {
+                st.pending_wakes.push_back(at);
+            }
+        }
+    }
+
+    fn handle_unpark_batch(&mut self, entries: Vec<(ActivityId, Time)>) {
+        self.stats.wakeup_batches += 1;
+        if entries.len() > self.stats.wakeup_max_batch {
+            self.stats.wakeup_max_batch = entries.len();
+        }
+        let mut rel: Vec<(Time, u64, ActivityId)> = Vec::new();
+        for (target, at) in entries {
+            let at = at.max(self.clock);
+            let Some(st) = self.activities.get_mut(target.0) else { continue };
+            if st.done {
+                continue;
+            }
+            if st.parked {
+                st.parked = false;
+                self.seq += 1;
+                rel.push((at, self.seq, target));
+            } else {
+                st.pending_wakes.push_back(at);
+            }
+        }
+        self.stats.wakeup_batched += rel.len() as u64;
+        if rel.is_empty() {
+            return;
+        }
+        // Stable sort by time keeps ascending seqs within equal times,
+        // so entry order is the exact (time, seq) order N individual
+        // unpark events would have popped in.
+        rel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let (t0, s0) = (rel[0].0, rel[0].1);
+        let bi = self.alloc_batch(BatchRelease { entries: rel, next: 0 });
+        self.push_ev(Event { time: t0, seq: s0, target: EvTarget::Batch(bi) });
+    }
+
+    /// Next-event lease for an activity being resumed: the queue
+    /// minimum, tightened by the current batch's next pending entry
+    /// (which is intentionally *not* in the queue mid-sweep).
+    fn lease_for(&mut self, cur_batch: Option<usize>) -> Time {
+        let mut lease = self.queue.peek_key().map_or(f64::INFINITY, |(t, _)| t);
+        if let Some(bi) = cur_batch {
+            if let Some(b) = &self.batches[bi] {
+                if b.next < b.entries.len() {
+                    lease = lease.min(b.entries[b.next].0);
+                }
+            }
+        }
+        lease
+    }
+
+    /// Run `current` until it blocks (advance/park/exit).  Immediate
+    /// requests (Unpark/UnparkBatch/Spawn) keep control in the same
+    /// activity without a queue round-trip.
+    fn resume_thread(
+        &mut self,
+        current: ActivityId,
+        cur_batch: Option<usize>,
+    ) -> Result<(), EngineError> {
+        let mut reply: usize = 0;
+        loop {
+            let lease = self.lease_for(cur_batch);
+            let now = self.clock;
+            // §Perf: the handoff is borrowed for the step instead of
+            // Arc-cloned per resume — the engine thread blocks inside
+            // `engine_step`, nothing touches the activity arena
+            // meanwhile, and the request is handled after the borrow
+            // ends.
+            let req = {
+                let st = &mut self.activities[current.0];
+                if st.done {
+                    return Ok(()); // stale event for a finished activity
+                }
+                st.parked = false;
+                let reset = std::mem::take(&mut st.needs_reset);
+                let SlotBody::Thread { handoff, .. } = &st.body else {
+                    unreachable!("thread resume on lite activity");
+                };
+                handoff.engine_step(Resume { now, reply, lease, reset })
+            };
+            self.shared.events_processed.fetch_add(1, Ordering::Relaxed);
+            reply = 0;
+            match req {
+                Request::AdvanceUntil(t) => {
+                    let t = t.max(self.clock);
+                    self.push_event(t, current);
+                    return Ok(());
+                }
+                Request::Park => {
+                    let st = &mut self.activities[current.0];
+                    if let Some(at) = st.pending_wakes.pop_front() {
+                        // A wake was already queued: resume at its
+                        // delivery time (>= now by construction).
+                        let t = at.max(self.clock);
+                        self.push_event(t, current);
+                    } else {
+                        st.parked = true;
+                    }
+                    return Ok(());
+                }
+                Request::Unpark { target, at } => {
+                    self.handle_unpark(target, at);
+                    // fall through: continue the same activity now
+                }
+                Request::UnparkBatch(entries) => {
+                    self.handle_unpark_batch(entries);
+                    // fall through: continue the same activity now
+                }
+                Request::Spawn { label, body, at } => {
+                    let new_id = self.spawn_suspended(label, body);
+                    self.push_event(at.max(self.clock), new_id);
+                    reply = new_id.0;
+                    // continue the same activity, replying the id
+                }
+                Request::Exit { panic_msg, at } => {
+                    self.clock = self.clock.max(at);
+                    let st = &mut self.activities[current.0];
+                    st.done = true;
+                    st.parked = false;
+                    // The activity is done: move the label out instead
+                    // of cloning (it is only needed for the panic
+                    // report; done activities never appear in deadlock
+                    // details).
+                    let label = std::mem::take(&mut st.label);
+                    if let SlotBody::Thread { worker, .. } = &mut st.body {
+                        if let Some(tx) = worker.take() {
+                            return_worker(tx);
+                        }
+                    }
+                    self.alive -= 1;
+                    if let Some(msg) = panic_msg {
+                        return Err(EngineError::ActivityPanic(current, label, msg));
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Drive one step of a lite activity's state machine.
+    fn resume_lite(&mut self, current: ActivityId) -> Result<(), EngineError> {
+        let mut body = {
+            let st = &mut self.activities[current.0];
+            if st.done {
+                return Ok(()); // stale event
+            }
+            st.parked = false;
+            st.needs_reset = false; // lites read time from LiteCtx each step
+            let SlotBody::Lite(b) = &mut st.body else {
+                unreachable!("lite resume on thread activity");
+            };
+            b.take().expect("lite body re-entered")
+        };
+        let mut lctx = LiteCtx { now: self.clock, effects: Vec::new() };
+        let step = body(&mut lctx);
+        self.shared.events_processed.fetch_add(1, Ordering::Relaxed);
+        {
+            let st = &mut self.activities[current.0];
+            let SlotBody::Lite(b) = &mut st.body else { unreachable!() };
+            *b = Some(body);
+        }
+        for eff in lctx.effects {
+            match eff {
+                LiteEffect::Unpark(target, at) => self.handle_unpark(target, at),
+                LiteEffect::UnparkBatch(entries) => self.handle_unpark_batch(entries),
+            }
+        }
+        match step {
+            LiteStep::AdvanceUntil(t) => {
+                let t = t.max(self.clock);
+                self.push_event(t, current);
+            }
+            LiteStep::Park => {
+                let st = &mut self.activities[current.0];
+                if let Some(at) = st.pending_wakes.pop_front() {
+                    let t = at.max(self.clock);
+                    self.push_event(t, current);
+                } else {
+                    st.parked = true;
+                }
+            }
+            LiteStep::Done => {
+                let st = &mut self.activities[current.0];
+                st.done = true;
+                st.parked = false;
+                st.body = SlotBody::Lite(None);
+                self.alive -= 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn resume_activity(
+        &mut self,
+        current: ActivityId,
+        cur_batch: Option<usize>,
+    ) -> Result<(), EngineError> {
+        let is_lite = matches!(self.activities[current.0].body, SlotBody::Lite(_));
+        if is_lite {
+            self.resume_lite(current)
+        } else {
+            self.resume_thread(current, cur_batch)
+        }
+    }
+
+    fn run_inner(&mut self, stop_at_idle: bool) -> Result<Time, EngineError> {
         let mut processed: u64 = 0;
         while self.alive > 0 {
-            let Some(ev) = self.heap.pop() else {
-                // Collect parked ids into the reusable scratch (no
-                // per-detection allocation; sorted so the report is
-                // deterministic despite HashMap iteration order).
-                let mut scratch = std::mem::take(&mut self.parked_scratch);
-                scratch.clear();
-                scratch.extend(
-                    self.activities
-                        .iter()
-                        .filter(|(_, a)| a.parked && !a.done)
-                        .map(|(id, _)| *id),
-                );
-                scratch.sort();
-                let detail = scratch
-                    .iter()
-                    .map(|id| self.activities[id].label.as_str())
-                    .collect::<Vec<_>>()
-                    .join(", ");
-                let parked = scratch.len();
-                self.parked_scratch = scratch;
+            let Some(ev) = self.queue.pop() else {
+                if stop_at_idle {
+                    return Ok(self.clock);
+                }
+                let mut parked = 0usize;
+                let mut detail = String::new();
+                for st in self.activities.iter() {
+                    if st.parked && !st.done {
+                        parked += 1;
+                        if !detail.is_empty() {
+                            detail.push_str(", ");
+                        }
+                        detail.push_str(&st.label);
+                    }
+                }
                 return Err(EngineError::Deadlock { time: self.clock, parked, detail });
             };
-            processed += 1;
-            if processed > self.event_limit {
-                return Err(EngineError::EventLimit(self.event_limit));
-            }
             debug_assert!(ev.time >= self.clock - 1e-12, "time went backwards");
             self.clock = self.clock.max(ev.time);
-            let current = ev.activity;
-            let mut reply: usize = 0;
-            // Run the activity; immediate requests (Unpark/Spawn) keep
-            // control in the same activity without a heap round-trip.
+            let (mut current, mut cur_batch) = match ev.target {
+                EvTarget::Act(a) => (a, None),
+                EvTarget::Batch(bi) => {
+                    let b = self.batches[bi].as_mut().expect("stale batch event");
+                    let (_, _, a) = b.entries[b.next];
+                    b.next += 1;
+                    if b.next >= b.entries.len() {
+                        self.free_batch(bi);
+                        (a, None)
+                    } else {
+                        (a, Some(bi))
+                    }
+                }
+            };
+            // Drive until control returns to the queue: the current
+            // activity runs until it blocks; if it came from a wakeup
+            // batch whose next entry is already the global minimum,
+            // sweep directly to that entry (zero queue operations).
             loop {
-                let lease = self.heap.peek().map_or(f64::INFINITY, |e| e.time);
-                // §Perf: the handoff is borrowed for the step instead of
-                // Arc-cloned per resume — the engine thread blocks inside
-                // `engine_step`, nothing touches the activity table
-                // meanwhile, and the request is handled after the borrow
-                // ends.
-                let req = match self.activities.get_mut(&current) {
-                    Some(st) if !st.done => {
-                        st.parked = false;
-                        st.handoff.engine_step(Resume { now: self.clock, reply, lease })
-                    }
-                    _ => break, // stale event for a finished activity
+                processed += 1;
+                if processed > self.event_limit {
+                    return Err(EngineError::EventLimit(self.event_limit));
+                }
+                self.resume_activity(current, cur_batch)?;
+                let Some(bi) = cur_batch else { break };
+                let b = self.batches[bi].as_ref().expect("live batch");
+                let (t2, s2, a2) = b.entries[b.next];
+                let due_now = match self.queue.peek_key() {
+                    None => true,
+                    Some(k) => key_lt((t2, s2), k),
                 };
-                self.shared.events_processed.fetch_add(1, Ordering::Relaxed);
-                reply = 0;
-                match req {
-                    Request::AdvanceUntil(t) => {
-                        let t = t.max(self.clock);
-                        self.push_event(t, current);
-                        break;
+                if due_now {
+                    self.stats.direct_sweeps += 1;
+                    let b = self.batches[bi].as_mut().unwrap();
+                    b.next += 1;
+                    if b.next >= b.entries.len() {
+                        self.free_batch(bi);
+                        cur_batch = None;
                     }
-                    Request::Park => {
-                        let st = self.activities.get_mut(&current).unwrap();
-                        if let Some(at) = st.pending_wakes.pop_front() {
-                            // A wake was already queued: resume at its
-                            // delivery time (>= now by construction).
-                            let t = at.max(self.clock);
-                            self.push_event(t, current);
-                        } else {
-                            st.parked = true;
-                        }
-                        break;
-                    }
-                    Request::Unpark { target, at } => {
-                        let at = at.max(self.clock);
-                        if let Some(tst) = self.activities.get_mut(&target) {
-                            if tst.done {
-                                // waking a finished activity is a no-op
-                            } else if tst.parked {
-                                tst.parked = false;
-                                self.push_event(at, target);
-                            } else {
-                                tst.pending_wakes.push_back(at);
-                            }
-                        }
-                        // fall through: continue the same activity now
-                    }
-                    Request::Spawn { label, body, at } => {
-                        let new_id = self.spawn_suspended(label, body);
-                        self.push_event(at.max(self.clock), new_id);
-                        reply = new_id.0;
-                        // continue the same activity, replying the id
-                    }
-                    Request::Exit { panic_msg, at } => {
-                        self.clock = self.clock.max(at);
-                        let st = self.activities.get_mut(&current).unwrap();
-                        st.done = true;
-                        st.parked = false;
-                        // The activity is done: move the label out
-                        // instead of cloning (it is only needed for the
-                        // panic report; done activities never appear in
-                        // deadlock details).
-                        let label = std::mem::take(&mut st.label);
-                        if let Some(j) = st.join.take() {
-                            let _ = j.join();
-                        }
-                        self.alive -= 1;
-                        if let Some(msg) = panic_msg {
-                            return Err(EngineError::ActivityPanic(current, label, msg));
-                        }
-                        break;
-                    }
+                    self.clock = self.clock.max(t2);
+                    current = a2;
+                } else {
+                    self.push_ev(Event { time: t2, seq: s2, target: EvTarget::Batch(bi) });
+                    break;
                 }
             }
         }
         Ok(self.clock)
-    }
-}
-
-impl Drop for Engine {
-    fn drop(&mut self) {
-        // Any threads still alive are parked in their handoff; they hold
-        // no engine locks, so leaking them on abnormal paths is safe.
-        for st in self.activities.values_mut() {
-            if let Some(j) = st.join.take() {
-                if st.done {
-                    let _ = j.join();
-                } // else: detached
-            }
-        }
     }
 }
 
@@ -663,5 +1433,227 @@ mod tests {
         }
         e.run().unwrap();
         assert_eq!(done.load(O::SeqCst), n);
+    }
+
+    /// The two queue kinds must order every workload identically.
+    #[test]
+    fn heap_and_calendar_order_identically() {
+        fn run_once(kind: QueueKind) -> Vec<(usize, u64)> {
+            let mut e = Engine::with_queue(kind);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            for i in 0..16 {
+                let l = log.clone();
+                e.spawn_at(0.0, format!("w{i}"), move |ctx| {
+                    // Mix of scales so entries cross calendar buckets,
+                    // plus exact equal-time ties via zero advances.
+                    let mut t = if i % 4 == 0 { 0.5 } else { 1e-6 * (i as f64 + 1.0) };
+                    for k in 0..40 {
+                        ctx.advance(t);
+                        if k % 7 == 0 {
+                            ctx.advance(0.0); // explicit yield point
+                        }
+                        t *= if i % 3 == 0 { 3.0 } else { 1.05 };
+                        l.lock().unwrap().push((i, ctx.now().to_bits()));
+                    }
+                });
+            }
+            e.run().unwrap();
+            let v = log.lock().unwrap().clone();
+            v
+        }
+        assert_eq!(run_once(QueueKind::Heap), run_once(QueueKind::Calendar));
+    }
+
+    /// A batched release resumes each rank at exactly the time an
+    /// individual unpark would have.
+    #[test]
+    fn unpark_batch_matches_individual_unparks() {
+        fn run_once(batched: bool) -> Vec<(usize, u64)> {
+            let mut e = Engine::new();
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let mut ids = Vec::new();
+            for i in 0..12 {
+                let l = log.clone();
+                ids.push(e.spawn_at(0.0, format!("r{i}"), move |ctx| {
+                    ctx.park();
+                    l.lock().unwrap().push((i, ctx.now().to_bits()));
+                    ctx.advance(1e-6 * (i as f64 + 1.0));
+                    l.lock().unwrap().push((i, ctx.now().to_bits()));
+                }));
+            }
+            e.spawn_at(0.0, "releaser", move |ctx| {
+                ctx.advance(1.0);
+                // Release times deliberately unsorted with ties.
+                let entries: Vec<_> = ids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, id)| (*id, 1.0 + 1e-7 * ((i * 5) % 3) as f64))
+                    .collect();
+                if batched {
+                    ctx.unpark_batch(entries);
+                } else {
+                    for (id, t) in entries {
+                        ctx.unpark_at(id, t);
+                    }
+                }
+            });
+            e.run().unwrap();
+            let v = log.lock().unwrap().clone();
+            v
+        }
+        assert_eq!(run_once(true), run_once(false));
+    }
+
+    /// Lite activities interleave with thread activities by time.
+    #[test]
+    fn lite_activities_run_and_interleave() {
+        let mut e = Engine::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l1 = log.clone();
+        let mut step = 0usize;
+        e.spawn_lite_at(0.0, "lite", move |lc| {
+            step += 1;
+            l1.lock().unwrap().push(("lite", lc.now()));
+            match step {
+                1 => LiteStep::AdvanceUntil(1.5),
+                2 => LiteStep::AdvanceUntil(2.5),
+                _ => LiteStep::Done,
+            }
+        });
+        let l2 = log.clone();
+        e.spawn_at(0.0, "thread", move |ctx| {
+            ctx.advance(2.0);
+            l2.lock().unwrap().push(("thread", ctx.now()));
+        });
+        let end = e.run().unwrap();
+        assert!((end - 2.5).abs() < 1e-12);
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec![("lite", 0.0), ("lite", 1.5), ("thread", 2.0), ("lite", 2.5)]
+        );
+    }
+
+    /// Lite park/unpark, including a lite-to-lite batch release.
+    #[test]
+    fn lite_park_and_batch_release() {
+        let mut e = Engine::new();
+        let released = Arc::new(Mutex::new(Vec::new()));
+        let mut members = Vec::new();
+        for i in 0..5 {
+            let r = released.clone();
+            let mut first = true;
+            members.push(e.spawn_lite_at(0.0, format!("m{i}"), move |lc| {
+                if first {
+                    first = false;
+                    return LiteStep::Park;
+                }
+                r.lock().unwrap().push((i, lc.now()));
+                LiteStep::Done
+            }));
+        }
+        let mut fired = false;
+        e.spawn_lite_at(0.0, "coord", move |lc| {
+            if !fired {
+                fired = true;
+                let entries: Vec<_> = members.iter().map(|m| (*m, 2.0)).collect();
+                lc.unpark_batch(entries);
+                return LiteStep::AdvanceUntil(3.0);
+            }
+            LiteStep::Done
+        });
+        e.run().unwrap();
+        assert_eq!(
+            *released.lock().unwrap(),
+            vec![(0, 2.0), (1, 2.0), (2, 2.0), (3, 2.0), (4, 2.0)]
+        );
+    }
+
+    /// run_until_idle + rollback_to + unpark replay a parked world.
+    #[test]
+    fn idle_rollback_unpark_replays() {
+        let mut e = Engine::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l = log.clone();
+        let worker = e.spawn_at(0.0, "w", move |ctx| loop {
+            ctx.park();
+            if ctx.now() > 90.0 {
+                break; // shutdown signal: a wake far in the future
+            }
+            ctx.advance(0.25);
+            l.lock().unwrap().push(ctx.now().to_bits());
+        });
+        let t = e.run_until_idle().unwrap();
+        assert_eq!(t, 0.0);
+        for _ in 0..3 {
+            e.unpark(worker, 1.0);
+            let t = e.run_until_idle().unwrap();
+            assert!((t - 1.25).abs() < 1e-12);
+            e.rollback_to(0.0);
+            assert_eq!(e.now(), 0.0);
+        }
+        // Identical wake → identical trajectory after every rollback.
+        let bits = log.lock().unwrap().clone();
+        assert_eq!(bits.len(), 3);
+        assert!(bits.windows(2).all(|w| w[0] == w[1]));
+        // Shutdown.
+        e.unpark(worker, 100.0);
+        e.run().unwrap();
+        assert_eq!(e.stats().rollbacks, 3);
+    }
+
+    /// Stats counters move and the batch machinery reports itself.
+    #[test]
+    fn stats_counters_track_batches() {
+        let mut e = Engine::new();
+        let mut ids = Vec::new();
+        for i in 0..8 {
+            ids.push(e.spawn_at(0.0, format!("r{i}"), move |ctx| {
+                ctx.park();
+                ctx.advance(1e-6);
+            }));
+        }
+        e.spawn_at(0.0, "rel", move |ctx| {
+            ctx.advance(1.0);
+            ctx.unpark_batch(ids.iter().map(|id| (*id, 1.0)).collect());
+        });
+        e.run().unwrap();
+        let s = e.stats();
+        assert_eq!(s.wakeup_batches, 1);
+        assert_eq!(s.wakeup_batched, 8);
+        assert_eq!(s.wakeup_max_batch, 8);
+        assert!(s.events > 0);
+        assert!(s.peak_queue >= 2);
+    }
+
+    /// Calendar queue survives adversarial spreads: huge jumps, dense
+    /// clusters, and the resizes they trigger.
+    #[test]
+    fn calendar_queue_handles_sparse_and_dense_mixes() {
+        fn run_once(kind: QueueKind) -> Vec<u64> {
+            let mut e = Engine::with_queue(kind);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            for i in 0..6 {
+                let l = log.clone();
+                e.spawn_at(0.0, format!("j{i}"), move |ctx| {
+                    // Dense microsecond phase …
+                    for _ in 0..30 {
+                        ctx.advance(1e-6);
+                        l.lock().unwrap().push(ctx.now().to_bits());
+                    }
+                    // … then a huge jump (bucket-lap + global scan), …
+                    ctx.advance(1e4 * (i as f64 + 1.0));
+                    l.lock().unwrap().push(ctx.now().to_bits());
+                    // … then dense again.
+                    for _ in 0..30 {
+                        ctx.advance(1e-3);
+                        l.lock().unwrap().push(ctx.now().to_bits());
+                    }
+                });
+            }
+            e.run().unwrap();
+            let v = log.lock().unwrap().clone();
+            v
+        }
+        assert_eq!(run_once(QueueKind::Heap), run_once(QueueKind::Calendar));
     }
 }

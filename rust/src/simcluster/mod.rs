@@ -2,14 +2,19 @@
 //!
 //! The paper evaluates on an 8-node / 160-core InfiniBand cluster that
 //! we do not have; `simcluster` is the substitute substrate (see
-//! DESIGN.md §1).  Simulated processes ("activities") are real OS
-//! threads running ordinary imperative Rust — the MaM redistribution
-//! algorithms read exactly like the paper's pseudocode — but they are
-//! *scheduled* by a central engine over a virtual clock: an activity
-//! blocks whenever it performs a simulated action (`advance`, `park`)
-//! and the engine resumes it at the right virtual time.  Exactly one
-//! activity body runs at any instant, so runs are fully deterministic
-//! and seed-stable.
+//! DESIGN.md §1).  Simulated processes ("activities") are pool-reused
+//! OS threads running ordinary imperative Rust — the MaM
+//! redistribution algorithms read exactly like the paper's pseudocode
+//! — but they are *scheduled* by a central engine over a virtual
+//! clock: an activity blocks whenever it performs a simulated action
+//! (`advance`, `park`) and the engine resumes it at the right virtual
+//! time.  Exactly one activity body runs at any instant, so runs are
+//! fully deterministic and seed-stable.  Events live in a bucketed
+//! calendar queue (bit-identical to the seed binary heap, which is
+//! retained behind [`QueueKind::Heap`] for equivalence testing);
+//! thread-less [`LiteStep`] state machines make million-activity
+//! simulations routine; `run_until_idle`/`rollback_to` give the
+//! planner incremental micro-probes.
 //!
 //! * [`engine`]  — the event loop, virtual clock and activity handoff.
 //! * [`activity`] — the context handle simulated code runs against.
@@ -18,4 +23,7 @@ pub mod activity;
 pub mod engine;
 
 pub use activity::ActivityCtx;
-pub use engine::{ActivityId, Engine, EngineError, Time};
+pub use engine::{
+    default_queue_kind, set_default_queue_kind, ActivityId, Engine, EngineError, EngineStats,
+    LiteCtx, LiteStep, QueueKind, Time,
+};

@@ -14,7 +14,7 @@ use crate::simcluster::{ActivityCtx, Time};
 use super::collective::{CollKind, CollResult, CollState, Contrib};
 use super::request::{ReqBody, ReqId, ReqState};
 use super::rma::WinState;
-use super::types::{CommId, Payload, RecvBuf, WinId};
+use super::types::{CommId, Payload, RecvBuf, WinCreateOpts, WinId};
 use super::winpool::{size_class, EvictedPin, WinPoolStats};
 use super::world::{MpiWorld, PendingMsg, RecvWait};
 
@@ -541,9 +541,13 @@ impl MpiProc {
                 .collect();
             (key, my_rank, waiters)
         };
-        for (aid, t) in waiters {
-            self.ctx.unpark_at(aid, t.max(self.ctx.now()));
-        }
+        // One engine event + O(N) release sweep for the whole
+        // collective, instead of N per-waiter handoff round-trips.
+        // Entry order and clamping match the seed per-waiter loop, so
+        // release order is bit-identical.
+        let now = self.ctx.now();
+        self.ctx
+            .unpark_batch(waiters.into_iter().map(|(aid, t)| (aid, t.max(now))).collect());
         (key, my_rank)
     }
 
@@ -878,11 +882,47 @@ impl MpiProc {
         win
     }
 
-    /// MPI_Win_create (collective; §IV-A).  Each rank exposes
-    /// `payload`; pass `Payload::virt(0)` to expose nothing (drain-only
-    /// ranks, §IV-B).  The registration cost of the exposed bytes is
-    /// what makes this the dominant RMA overhead (§V).
-    pub fn win_create(&self, comm: CommId, payload: Payload) -> WinId {
+    /// Unified `MPI_Win_create` entrypoint (collective; §IV-A).  Each
+    /// rank exposes `payload`; pass `Payload::virt(0)` to expose
+    /// nothing (drain-only ranks, §IV-B).  [`WinCreateOpts`] selects
+    /// the registration strategy:
+    ///
+    /// * `WinCreateOpts::blocking()` (the default) registers the whole
+    ///   exposure inside the collective — the paper's baseline, whose
+    ///   cost is the dominant RMA overhead (§V);
+    /// * `WinCreateOpts::pipelined(chunk)` splits the exposure into
+    ///   `chunk`-element segments and registers only the first one
+    ///   inside the collective (§VI) — later segments register while
+    ///   Gets on earlier ones are already flowing, dropping a cold
+    ///   resize from `T_reg + T_wire` toward `max(T_reg, T_wire)`;
+    /// * `.eager(true)` starts this rank's background stream at its
+    ///   *own* fill end instead of the collective exit (pinning is
+    ///   local), so under `--spawn-strategy async` source streams
+    ///   overlap the spawned ranks' staggered startup.
+    ///
+    /// `chunk_elems = 0` (or a single-segment exposure) is
+    /// bit-identical to the seed blocking path.
+    pub fn win_create_with(&self, comm: CommId, payload: Payload, opts: WinCreateOpts) -> WinId {
+        if opts.chunk_elems == 0 || payload.elems() <= opts.chunk_elems {
+            return self.win_create_blocking(comm, payload);
+        }
+        self.mpi_prologue();
+        self.progress_acquire();
+        let (first, rest) = {
+            let mut w = self.world.lock().unwrap();
+            let plan = segment_regs(&w.cost, payload.elems(), opts.chunk_elems, 0);
+            Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
+            (plan.first, plan.rest)
+        };
+        let contrib = Contrib::RegPipeline { first, rest, eager: opts.eager_reg };
+        let win = self.win_open(comm, payload, contrib, false, opts.chunk_elems);
+        self.progress_release();
+        win
+    }
+
+    /// The seed blocking body (`chunk_elems = 0` arm of
+    /// [`MpiProc::win_create_with`]).
+    fn win_create_blocking(&self, comm: CommId, payload: Payload) -> WinId {
         self.mpi_prologue();
         self.progress_acquire();
         let reg = {
@@ -896,6 +936,12 @@ impl MpiProc {
         win
     }
 
+    /// MPI_Win_create with blocking registration.
+    #[deprecated(note = "use win_create_with(comm, payload, WinCreateOpts::blocking())")]
+    pub fn win_create(&self, comm: CommId, payload: Payload) -> WinId {
+        self.win_create_blocking(comm, payload)
+    }
+
     /// Record registration work into the world metrics — the observed
     /// registration-throughput hook (`rma.reg_bytes` / `rma.reg_time`)
     /// the scenario reports derive `bytes_registered / reg_span` from.
@@ -906,25 +952,16 @@ impl MpiProc {
         }
     }
 
-    /// Chunked pipelined `MPI_Win_create` (§VI; the registration-cost
-    /// fix "Quo Vadis MPI RMA?" calls for): the exposure is split into
-    /// `chunk_elems`-element segments and only the first one registers
-    /// inside the collective — later segments register while Gets on
-    /// earlier ones are already flowing, dropping a cold resize from
-    /// `T_reg + T_wire` toward `max(T_reg, T_wire)` plus fill/drain.
-    /// `chunk_elems = 0` (or a single-segment exposure) falls back to
-    /// the seed [`MpiProc::win_create`] path bit-identically.
+    /// Chunked pipelined `MPI_Win_create`.
+    #[deprecated(note = "use win_create_with(comm, payload, WinCreateOpts::pipelined(chunk_elems))")]
     pub fn win_create_pipelined(&self, comm: CommId, payload: Payload, chunk_elems: u64) -> WinId {
-        self.win_create_pipelined_opts(comm, payload, chunk_elems, false)
+        self.win_create_with(comm, payload, WinCreateOpts::pipelined(chunk_elems))
     }
 
-    /// [`MpiProc::win_create_pipelined`] with an explicit stream-start
-    /// policy: `eager` starts this rank's background registration
-    /// stream at its *own* fill end instead of the collective exit
-    /// (pinning is local), so under `--spawn-strategy async` the
-    /// sources' streams overlap the spawned ranks' staggered startup
-    /// and merge round.  `eager = false` is bit-identical to
-    /// [`MpiProc::win_create_pipelined`].
+    /// Chunked pipelined `MPI_Win_create` with a stream-start policy.
+    #[deprecated(
+        note = "use win_create_with(comm, payload, WinCreateOpts::pipelined(chunk_elems).eager(eager))"
+    )]
     pub fn win_create_pipelined_opts(
         &self,
         comm: CommId,
@@ -932,51 +969,27 @@ impl MpiProc {
         chunk_elems: u64,
         eager: bool,
     ) -> WinId {
-        if chunk_elems == 0 || payload.elems() <= chunk_elems {
-            return self.win_create(comm, payload);
-        }
-        self.mpi_prologue();
-        self.progress_acquire();
-        let (first, rest) = {
-            let mut w = self.world.lock().unwrap();
-            let plan = segment_regs(&w.cost, payload.elems(), chunk_elems, 0);
-            Self::note_registration(&mut w, plan.cold_bytes, plan.charged);
-            (plan.first, plan.rest)
-        };
-        let contrib = Contrib::RegPipeline { first, rest, eager };
-        let win = self.win_open(comm, payload, contrib, false, chunk_elems);
-        self.progress_release();
-        win
+        self.win_create_with(comm, payload, WinCreateOpts::pipelined(chunk_elems).eager(eager))
     }
 
-    /// Pooled chunked pipelined acquire: [`MpiProc::win_create_pipelined`]
-    /// through the persistent window pool, with *per-segment* warmth —
-    /// a previous pin covering a prefix of the exposure keeps those
-    /// segments free, only the tail registers (in the background).
-    /// When every segment is warm the pipeline collapses to the plain
-    /// warm acquire: pure wire time, no background stream at all.
-    pub fn win_acquire_pipelined(
+    /// Unified pooled acquire: [`MpiProc::win_create_with`] through the
+    /// persistent window pool.  With `WinCreateOpts::pipelined(chunk)`
+    /// warmth is *per-segment* — a previous pin covering a prefix of
+    /// the exposure keeps those segments free, only the tail registers
+    /// (in the background); when every segment is warm the pipeline
+    /// collapses to the plain warm acquire: pure wire time, no
+    /// background stream at all.  `chunk_elems = 0` is the plain pooled
+    /// acquire ([`MpiProc::win_acquire_capped`], bit-identical).
+    pub fn win_acquire_with(
         &self,
         comm: CommId,
         payload: Payload,
         pin: u64,
         cap: usize,
-        chunk_elems: u64,
+        opts: WinCreateOpts,
     ) -> WinId {
-        self.win_acquire_pipelined_opts(comm, payload, pin, cap, chunk_elems, false)
-    }
-
-    /// [`MpiProc::win_acquire_pipelined`] with the `eager` stream-start
-    /// policy of [`MpiProc::win_create_pipelined_opts`].
-    pub fn win_acquire_pipelined_opts(
-        &self,
-        comm: CommId,
-        payload: Payload,
-        pin: u64,
-        cap: usize,
-        chunk_elems: u64,
-        eager: bool,
-    ) -> WinId {
+        let chunk_elems = opts.chunk_elems;
+        let eager = opts.eager_reg;
         if chunk_elems == 0 || payload.elems() <= chunk_elems {
             return self.win_acquire_capped(comm, payload, pin, cap);
         }
@@ -1018,6 +1031,35 @@ impl MpiProc {
         }
         self.progress_release();
         win
+    }
+
+    /// Pooled chunked pipelined acquire.
+    #[deprecated(note = "use win_acquire_with(.., WinCreateOpts::pipelined(chunk_elems))")]
+    pub fn win_acquire_pipelined(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        pin: u64,
+        cap: usize,
+        chunk_elems: u64,
+    ) -> WinId {
+        self.win_acquire_with(comm, payload, pin, cap, WinCreateOpts::pipelined(chunk_elems))
+    }
+
+    /// Pooled chunked pipelined acquire with a stream-start policy.
+    #[deprecated(
+        note = "use win_acquire_with(.., WinCreateOpts::pipelined(chunk_elems).eager(eager))"
+    )]
+    pub fn win_acquire_pipelined_opts(
+        &self,
+        comm: CommId,
+        payload: Payload,
+        pin: u64,
+        cap: usize,
+        chunk_elems: u64,
+        eager: bool,
+    ) -> WinId {
+        self.win_acquire_with(comm, payload, pin, cap, WinCreateOpts::pipelined(chunk_elems).eager(eager))
     }
 
     /// Pipelined windows: block until this rank's background segment
@@ -1889,7 +1931,7 @@ mod tests {
             } else {
                 Payload::virt(0)
             };
-            let win = p.win_create(WORLD, expose);
+            let win = p.win_create_with(WORLD, expose, WinCreateOpts::blocking());
             if r == 1 {
                 let dest = recv_buf_real(2);
                 p.win_lock(win, 0);
@@ -1910,7 +1952,7 @@ mod tests {
             s.launch(2, move |p| {
                 let r = p.rank(WORLD);
                 let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
-                let win = p.win_create(WORLD, expose);
+                let win = p.win_create_with(WORLD, expose, WinCreateOpts::blocking());
                 if r == 0 {
                     p.metrics(|m| m.mark("created", 0.0));
                 }
@@ -1938,7 +1980,7 @@ mod tests {
             } else {
                 Payload::virt(0)
             };
-            let win = p.win_create(WORLD, expose);
+            let win = p.win_create_with(WORLD, expose, WinCreateOpts::blocking());
             if r == 1 {
                 let dest = recv_buf_real(100);
                 p.win_lock_all(win);
@@ -2239,7 +2281,7 @@ mod tests {
         s.launch(2, move |p| {
             let r = p.rank(WORLD);
             let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
-            let win = p.win_create_pipelined(WORLD, expose, chunk);
+            let win = p.win_create_with(WORLD, expose, WinCreateOpts::pipelined(chunk));
             if r == 1 {
                 let dest = recv_buf_virtual();
                 let step = if chunk == 0 { 1_000_000 } else { chunk };
@@ -2289,7 +2331,7 @@ mod tests {
             s.launch(2, move |p| {
                 let r = p.rank(WORLD);
                 let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
-                let win = p.win_create(WORLD, expose);
+                let win = p.win_create_with(WORLD, expose, WinCreateOpts::blocking());
                 p.win_free(win);
             });
             s.run().unwrap()
@@ -2299,7 +2341,7 @@ mod tests {
             s.launch(2, move |p| {
                 let r = p.rank(WORLD);
                 let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
-                let win = p.win_create_pipelined(WORLD, expose, chunk);
+                let win = p.win_create_with(WORLD, expose, WinCreateOpts::pipelined(chunk));
                 p.win_free(win);
             });
             s.run().unwrap()
@@ -2320,7 +2362,7 @@ mod tests {
             } else {
                 Payload::real(Vec::new())
             };
-            let win = p.win_create_pipelined(WORLD, expose, 64);
+            let win = p.win_create_with(WORLD, expose, WinCreateOpts::pipelined(64));
             if r == 1 {
                 let dest = recv_buf_real(n as usize);
                 p.win_lock_all(win);
@@ -2349,7 +2391,7 @@ mod tests {
         let elems = 100_000_000u64; // 0.8 s of registration
         let mut s = sim(1, 1);
         s.launch(1, move |p| {
-            let win = p.win_create_pipelined(WORLD, Payload::virt(elems), 1_000_000);
+            let win = p.win_create_with(WORLD, Payload::virt(elems), WinCreateOpts::pipelined(1_000_000));
             // The create itself exits after the fill only.
             assert!(p.now() < 0.1, "create blocked on the full stream: {}", p.now());
             p.win_free(win);
@@ -2366,7 +2408,7 @@ mod tests {
         s.launch(2, move |p| {
             let r = p.rank(WORLD);
             let expose = if r == 0 { Payload::virt(elems) } else { Payload::virt(0) };
-            let win = p.win_create_pipelined(WORLD, expose, chunk);
+            let win = p.win_create_with(WORLD, expose, WinCreateOpts::pipelined(chunk));
             if r == 1 {
                 let dest = recv_buf_virtual();
                 p.win_lock_all(win);
@@ -2427,9 +2469,9 @@ mod tests {
         let w = s.world();
         s.launch(1, |p| {
             let elems = 100_000_000u64; // 0.8 s of registration
-            let wa = p.win_acquire_pipelined(WORLD, Payload::virt(elems), 0xA, 1, 1_000_000);
+            let wa = p.win_acquire_with(WORLD, Payload::virt(elems), 0xA, 1, WinCreateOpts::pipelined(1_000_000));
             assert!(p.now() < 0.1, "acquire must exit at the fill: {}", p.now());
-            let wb = p.win_acquire_pipelined(WORLD, Payload::virt(1_000_000), 0xB, 1, 1_000_000);
+            let wb = p.win_acquire_with(WORLD, Payload::virt(1_000_000), 0xB, 1, WinCreateOpts::pipelined(1_000_000));
             assert!(
                 p.now() < 0.1,
                 "eviction must not block the evicting rank: {}",
@@ -2500,7 +2542,7 @@ mod tests {
                     p.compute(0.5);
                 }
                 let expose = if r == 0 { Payload::virt(100_000_000) } else { Payload::virt(0) };
-                let win = p.win_create_pipelined_opts(WORLD, expose, 1_000_000, eager);
+                let win = p.win_create_with(WORLD, expose, WinCreateOpts::pipelined(1_000_000).eager(eager));
                 p.win_free(win); // waits for the stream
             });
             s.run().unwrap()
@@ -2517,7 +2559,7 @@ mod tests {
                     p.compute(0.5);
                 }
                 let expose = if r == 0 { Payload::virt(100_000_000) } else { Payload::virt(0) };
-                let win = p.win_create_pipelined(WORLD, expose, 1_000_000);
+                let win = p.win_create_with(WORLD, expose, WinCreateOpts::pipelined(1_000_000));
                 p.win_free(win);
             });
             s.run().unwrap()
@@ -2533,7 +2575,7 @@ mod tests {
         s.launch(1, move |p| {
             p.pin_buffer(0xA, elems * 8, 0);
             let t0 = p.now();
-            let win = p.win_acquire_pipelined(WORLD, Payload::virt(elems), 0xA, 0, 1_000_000);
+            let win = p.win_acquire_with(WORLD, Payload::virt(elems), 0xA, 0, WinCreateOpts::pipelined(1_000_000));
             // All segments warm: fixed setup only, no background stream.
             assert!(p.now() - t0 < 1e-3, "warm pipelined acquire cost {}", p.now() - t0);
             let t1 = p.now();
@@ -2556,10 +2598,10 @@ mod tests {
             p.pin_buffer(0xB, 4096, 0);
             // 2048 elems = 16 KiB in 512-elem (4 KiB) segments → 4
             // segments, the first warm, the tail cold.
-            let win = p.win_acquire_pipelined(WORLD, Payload::virt(2048), 0xB, 0, 512);
+            let win = p.win_acquire_with(WORLD, Payload::virt(2048), 0xB, 0, WinCreateOpts::pipelined(512));
             p.win_release(win);
             // The grown pin makes a re-acquire fully warm.
-            let win = p.win_acquire_pipelined(WORLD, Payload::virt(2048), 0xB, 0, 512);
+            let win = p.win_acquire_with(WORLD, Payload::virt(2048), 0xB, 0, WinCreateOpts::pipelined(512));
             p.win_release(win);
         });
         s.run().unwrap();

@@ -15,7 +15,7 @@ use super::types::{CommId, RecvBuf, WinId};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ReqId(pub usize);
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub(crate) enum ReqBody {
     /// Ibarrier / Ialltoallv: completion comes from the collective
     /// instance `(comm, seq)` at the owner's rank.
@@ -34,6 +34,7 @@ pub(crate) enum ReqBody {
     },
 }
 
+#[derive(Clone)]
 pub(crate) struct ReqState {
     /// Owning process (diagnostics).
     #[allow(dead_code)]

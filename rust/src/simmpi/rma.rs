@@ -21,6 +21,7 @@ use crate::simcluster::Time;
 use super::types::Payload;
 
 /// Per-window state.
+#[derive(Clone)]
 pub(crate) struct WinState {
     pub comm: super::types::CommId,
     /// Exposed payload per communicator rank (virt(0) = nothing).

@@ -114,6 +114,42 @@ impl Payload {
     }
 }
 
+/// Options for the unified window-creation entrypoints
+/// (`MpiProc::win_create_with` / `MpiProc::win_acquire_with`) — the
+/// single knob set the old `win_create` / `win_create_pipelined` /
+/// `win_create_pipelined_opts` trio spread over three signatures.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WinCreateOpts {
+    /// Segment size (elements) for chunked pipelined registration;
+    /// `0` registers the whole exposure inside the collective (the
+    /// seed blocking path, bit-identical).
+    pub chunk_elems: u64,
+    /// Start this rank's background registration stream at its *own*
+    /// fill end instead of the collective exit (pinning is local), so
+    /// under asynchronous spawning source streams overlap spawned-rank
+    /// startup.  Only meaningful when `chunk_elems > 0`.
+    pub eager_reg: bool,
+}
+
+impl WinCreateOpts {
+    /// The seed blocking registration (whole exposure in-collective).
+    pub fn blocking() -> WinCreateOpts {
+        WinCreateOpts::default()
+    }
+
+    /// Chunked pipelined registration with `chunk_elems`-element
+    /// segments (`0` falls back to blocking).
+    pub fn pipelined(chunk_elems: u64) -> WinCreateOpts {
+        WinCreateOpts { chunk_elems, eager_reg: false }
+    }
+
+    /// Set the eager stream-start policy.
+    pub fn eager(mut self, eager: bool) -> WinCreateOpts {
+        self.eager_reg = eager;
+        self
+    }
+}
+
 /// A destination buffer that deferred one-sided reads (Rget) write
 /// into at completion time.  `None` inside = virtual mode.
 pub type RecvBuf = Arc<Mutex<Option<Vec<f64>>>>;

@@ -104,7 +104,7 @@ pub struct EvictedPin {
 /// The world-global window pool (one per [`MpiWorld`]).
 ///
 /// [`MpiWorld`]: super::world::MpiWorld
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct WinPool {
     /// Registration cache: (gpid, pin token) → pinned size class + LRU
     /// stamp.  BTreeMaps keep every lookup order-deterministic — the

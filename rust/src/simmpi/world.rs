@@ -24,7 +24,7 @@ use super::winpool::{WinPool, WinPoolStats};
 pub const WORLD: CommId = CommId(0);
 
 /// A message posted to a destination process.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub(crate) struct PendingMsg {
     pub src_rank: usize, // rank within `comm`
     pub comm: CommId,
@@ -34,7 +34,7 @@ pub(crate) struct PendingMsg {
 }
 
 /// A receiver parked waiting for a matching message.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub(crate) struct RecvWait {
     pub src_rank: Option<usize>,
     pub comm: CommId,
@@ -43,6 +43,7 @@ pub(crate) struct RecvWait {
 }
 
 /// Per-process runtime state.
+#[derive(Clone)]
 pub(crate) struct ProcState {
     /// Global process id (== index in `procs`; kept for diagnostics).
     #[allow(dead_code)]
@@ -90,6 +91,7 @@ impl ProcState {
 }
 
 /// A communicator: ordered list of member gpids.
+#[derive(Clone)]
 pub(crate) struct CommState {
     pub gpids: Vec<usize>,
     /// Next collective sequence number, per member slot (local count —
@@ -210,6 +212,79 @@ impl MpiWorld {
     pub fn iters_of(&self, gpid: usize) -> u64 {
         self.procs[gpid].iters_done
     }
+
+    /// Deep-copy the persistent world state at quiescence.
+    ///
+    /// Panics if anything transient is in flight (open collectives,
+    /// parked receivers, undelivered messages, pending requests) —
+    /// a snapshot is only meaningful between engine runs, when every
+    /// live activity is parked and the world holds no cross-rank state.
+    /// Together with [`crate::simcluster::Engine::rollback_to`] this is
+    /// the planner's incremental-probe mechanism: capture the world
+    /// once after launch, then rewind instead of rebuilding per
+    /// candidate.
+    pub fn snapshot(&self) -> WorldSnapshot {
+        assert!(self.colls.is_empty(), "snapshot with in-flight collectives");
+        assert!(
+            self.derived_waiters.values().all(|w| w.is_empty()),
+            "snapshot with parked comm waiters"
+        );
+        assert!(
+            self.requests.iter().all(|r| r.done),
+            "snapshot with pending nonblocking requests"
+        );
+        for p in &self.procs {
+            assert!(p.inbox.is_empty(), "snapshot with undelivered messages");
+            assert!(p.recv_waits.is_empty(), "snapshot with parked receivers");
+            assert!(p.progress_waiters.is_empty() && p.aux_waiters.is_empty());
+            assert_eq!(p.aux_busy, 0, "snapshot while aux thread in MPI");
+        }
+        WorldSnapshot {
+            cost: self.cost.clone(),
+            placement: self.placement.clone(),
+            procs: self.procs.clone(),
+            comms: self.comms.clone(),
+            windows: self.windows.clone(),
+            win_pool: self.win_pool.clone(),
+            requests: self.requests.clone(),
+            derived_comms: self.derived_comms.clone(),
+            core_slots: self.core_slots.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Rewind the world to a previously captured [`WorldSnapshot`].
+    /// Transient maps are cleared; processes, communicators, windows,
+    /// the pool, request slots, the cost model's occupancy state and
+    /// the metrics all return to the captured instant bit-for-bit.
+    pub fn restore(&mut self, snap: &WorldSnapshot) {
+        self.cost = snap.cost.clone();
+        self.placement = snap.placement.clone();
+        self.procs = snap.procs.clone();
+        self.comms = snap.comms.clone();
+        self.windows = snap.windows.clone();
+        self.win_pool = snap.win_pool.clone();
+        self.requests = snap.requests.clone();
+        self.derived_comms = snap.derived_comms.clone();
+        self.core_slots = snap.core_slots.clone();
+        self.metrics = snap.metrics.clone();
+        self.colls.clear();
+        self.derived_waiters.clear();
+    }
+}
+
+/// A quiescent deep copy of [`MpiWorld`] (see [`MpiWorld::snapshot`]).
+pub struct WorldSnapshot {
+    cost: CostModel,
+    placement: Placement,
+    procs: Vec<ProcState>,
+    comms: Vec<CommState>,
+    windows: Vec<WinState>,
+    win_pool: WinPool,
+    requests: Vec<ReqState>,
+    derived_comms: HashMap<(CommId, u64), CommId>,
+    core_slots: Vec<Option<usize>>,
+    metrics: crate::monitor::Metrics,
 }
 
 /// Builder/driver: wires an [`Engine`] to a shared [`MpiWorld`] and
@@ -234,7 +309,9 @@ impl MpiSim {
 
     /// Launch the initial `n` ranks as communicator [`WORLD`].  Every
     /// rank runs `body`; use `proc.rank(WORLD)` inside to specialize.
-    pub fn launch<F>(&mut self, n: usize, body: F)
+    /// Returns the rank activity ids in rank order (probe sessions wake
+    /// parked ranks through them; normal callers ignore the result).
+    pub fn launch<F>(&mut self, n: usize, body: F) -> Vec<crate::simcluster::ActivityId>
     where
         F: Fn(MpiProc) + Send + Sync + 'static,
     {
@@ -246,28 +323,72 @@ impl MpiSim {
             assert_eq!(c, WORLD, "launch must create the first communicator");
             g
         };
+        let mut ids = Vec::with_capacity(n);
         for (rank, gpid) in gpids.into_iter().enumerate() {
             let world = self.world.clone();
             let b = body.clone();
-            self.engine.spawn_at(0.0, format!("rank{rank}"), move |ctx| {
+            ids.push(self.engine.spawn_at(0.0, format!("rank{rank}"), move |ctx| {
                 let proc = MpiProc::main(ctx, world, gpid);
                 b(proc.clone_handle());
                 proc.on_exit();
-            });
+            }));
         }
+        ids
+    }
+
+    /// Publish the engine's counters into the world metrics (read by
+    /// scenario reports and the bench harness).
+    fn publish_engine_stats(&self) {
+        let s = self.engine.stats();
+        let mut w = self.world.lock().unwrap();
+        w.metrics.set_counter("engine.events", s.events as f64);
+        w.metrics.set_counter("engine.peak_queue", s.peak_queue as f64);
+        w.metrics.set_counter("engine.wakeup_batches", s.wakeup_batches as f64);
+        w.metrics.set_counter("engine.wakeup_ranks", s.wakeup_batched as f64);
+        w.metrics.set_counter("engine.wakeup_max", s.wakeup_max_batch as f64);
+        w.metrics.set_counter("engine.sweep_direct", s.direct_sweeps as f64);
+        w.metrics.set_counter("engine.rollbacks", s.rollbacks as f64);
+        w.metrics.set_counter("engine.snapshots", s.snapshots as f64);
     }
 
     /// Drive the simulation to completion; returns the final virtual
     /// time.
     pub fn run(mut self) -> Result<Time, EngineError> {
         let t = self.engine.run()?;
-        let events = self.engine.events_processed();
-        self.world
-            .lock()
-            .unwrap()
-            .metrics
-            .set_counter("engine.events", events as f64);
+        self.publish_engine_stats();
         Ok(t)
+    }
+
+    /// Drive until every live activity is parked (quiescence) without
+    /// consuming the sim — the probe-session stepping primitive.  The
+    /// engine stays usable: park/`unpark`/run again, or [`Self::run`]
+    /// to finish.
+    pub fn run_until_idle(&mut self) -> Result<Time, EngineError> {
+        let t = self.engine.run_until_idle()?;
+        self.publish_engine_stats();
+        Ok(t)
+    }
+
+    /// Schedule a wakeup for a parked activity (host side).
+    pub fn unpark(&mut self, target: crate::simcluster::ActivityId, at: Time) {
+        self.engine.unpark(target, at);
+    }
+
+    /// Rewind the virtual clock to `t` (quiescence only; see
+    /// [`Engine::rollback_to`]).  Pair with [`MpiWorld::restore`].
+    pub fn rollback_to(&mut self, t: Time) {
+        self.engine.rollback_to(t);
+    }
+
+    /// Engine counters (events, queue depth, wakeup batching, …).
+    pub fn engine_stats(&self) -> crate::simcluster::EngineStats {
+        self.engine.stats()
+    }
+
+    /// Count a world snapshot against the engine's stats (the prober
+    /// calls this next to [`MpiWorld::snapshot`]).
+    pub fn note_snapshot(&mut self) {
+        self.engine.stats_mut().snapshots += 1;
     }
 
     /// Events processed so far (simulator throughput metric).

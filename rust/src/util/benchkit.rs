@@ -142,6 +142,10 @@ pub struct BenchResult {
     pub wall: Summary,
     /// Optional domain metric (e.g. simulated seconds, ops/s).
     pub metric: Option<(String, Summary)>,
+    /// Deterministic observability counters from the last measured
+    /// iteration (e.g. the engine's `events`/`peak_queue`/wakeup-batch
+    /// counters), appended to the table row.
+    pub extras: Vec<(String, f64)>,
 }
 
 /// Harness configuration.
@@ -186,6 +190,7 @@ impl Bench {
             name: name.to_string(),
             wall: Summary::of(&samples),
             metric: None,
+            extras: Vec::new(),
         });
         self.results.last().unwrap()
     }
@@ -214,6 +219,40 @@ impl Bench {
             name: name.to_string(),
             wall: Summary::of(&wall),
             metric: Some((metric_name.to_string(), Summary::of(&met))),
+            extras: Vec::new(),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Like [`Self::bench_metric`], but the closure also returns
+    /// observability counters (name → value); the last iteration's
+    /// counters are attached to the row and printed after it.  The DES
+    /// is deterministic, so the counters are identical across
+    /// iterations — keeping one copy is lossless.
+    pub fn bench_metric_counters<F: FnMut() -> (f64, Vec<(String, f64)>)>(
+        &mut self,
+        name: &str,
+        metric_name: &str,
+        mut f: F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut wall = Vec::with_capacity(self.measure_iters);
+        let mut met = Vec::with_capacity(self.measure_iters);
+        let mut extras = Vec::new();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            let (m, e) = f();
+            wall.push(t0.elapsed().as_secs_f64());
+            met.push(m);
+            extras = e;
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            wall: Summary::of(&wall),
+            metric: Some((metric_name.to_string(), Summary::of(&met))),
+            extras,
         });
         self.results.last().unwrap()
     }
@@ -251,6 +290,10 @@ impl Bench {
                 ),
                 None => (r.wall.median, r.wall.p05, r.wall.p95, String::new()),
             };
+            let mut label = label;
+            for (k, v) in &r.extras {
+                label.push_str(&format!(" {k}={v}"));
+            }
             out.push_str(&format!(
                 "{:<w$}  {:>12}  {:>12}  {:>12}  {:>10}{}\n",
                 r.name,
@@ -422,6 +465,18 @@ mod tests {
         b.bench_metric("m", "sim_s", || 1.0);
         let rep = b.report("t");
         assert!(rep.contains("[sim_s] wall="), "{rep}");
+    }
+
+    #[test]
+    fn metric_counter_rows_report_extras() {
+        let mut b = Bench { warmup_iters: 0, measure_iters: 2, results: vec![] };
+        b.bench_metric_counters("m", "sim_s", || {
+            (1.5, vec![("engine.events".to_string(), 42.0)])
+        });
+        let r = &b.results()[0];
+        assert_eq!(r.extras, vec![("engine.events".to_string(), 42.0)]);
+        let rep = b.report("t");
+        assert!(rep.contains("engine.events=42"), "{rep}");
     }
 
     #[test]

@@ -1,0 +1,76 @@
+//! Old-vs-new engine equivalence: the calendar-queue engine must be
+//! *byte-identical* to the seed binary-heap engine on every simulated
+//! output — same virtual times, same metrics documents, same scenario
+//! JSON.  The queue is swapped through the process-global default
+//! (`set_default_queue_kind`), so the tests serialize on a file-local
+//! mutex and restore the calendar default when done.
+
+use std::sync::Mutex;
+
+use proteo::experiments::{scenario, smoke};
+use proteo::simcluster::{set_default_queue_kind, QueueKind};
+use proteo::util::json::Json;
+
+/// Serializes queue-kind flips across the tests in this binary.
+static QUEUE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` under the given process-default queue kind, restoring the
+/// calendar default afterwards (also on panic).
+fn with_queue_kind<T>(kind: QueueKind, f: impl FnOnce() -> T) -> T {
+    let _guard = QUEUE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_default_queue_kind(QueueKind::Calendar);
+        }
+    }
+    let _restore = Restore;
+    set_default_queue_kind(kind);
+    f()
+}
+
+/// Drop the soft `*.wall_s` entries — wall clock is the one quantity
+/// allowed (expected, even) to differ across the queue swap.
+fn strip_wall(doc: &Json) -> Json {
+    let mut d = doc.clone();
+    if let Json::Obj(top) = &mut d {
+        if let Some(Json::Obj(entries)) = top.get_mut("entries") {
+            entries.retain(|k, _| !k.ends_with(".wall_s"));
+        }
+    }
+    d
+}
+
+/// The full bench-smoke document — window-pool ablations, spawn
+/// strategies, chunk sweeps, end-to-end runs, planner scenarios, drift
+/// benchmarks — is byte-identical across the queue swap.  This is the
+/// broadest single determinism surface the repo has: it exercises
+/// every method × strategy family, the planner's incremental probe
+/// sessions (snapshot/rollback) and the in-sim recalibrator.
+#[test]
+fn bench_smoke_is_byte_identical_across_queue_swap() {
+    let heap = with_queue_kind(QueueKind::Heap, || smoke::collect(true));
+    let cal = with_queue_kind(QueueKind::Calendar, || smoke::collect(true));
+    assert_eq!(
+        strip_wall(&heap).to_pretty(),
+        strip_wall(&cal).to_pretty(),
+        "calendar queue changed a virtual-time bench metric"
+    );
+}
+
+/// The closed-loop scenario JSON — per-resize predicted/observed
+/// spans, n_it, registration throughput, makespan *and* the engine
+/// observability counters — matches across the queue swap.  Counter
+/// equality is the strong half: events processed, peak queue depth and
+/// wakeup batching must not depend on the queue data structure.
+#[test]
+fn scenario_json_is_byte_identical_across_queue_swap() {
+    let run = || {
+        let mut sp = scenario::ScenarioSpec::rms_trace(true);
+        sp.planner = proteo::mam::PlannerMode::Auto;
+        scenario::run_scenario(&sp).to_json().to_pretty()
+    };
+    let heap = with_queue_kind(QueueKind::Heap, run);
+    let cal = with_queue_kind(QueueKind::Calendar, run);
+    assert_eq!(heap, cal, "calendar queue changed the scenario output");
+}

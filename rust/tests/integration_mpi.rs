@@ -6,7 +6,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use proteo::netmodel::{NetParams, Topology};
-use proteo::simmpi::{recv_buf_real, CommId, MpiProc, MpiSim, Payload, WORLD};
+use proteo::simmpi::{recv_buf_real, CommId, MpiProc, MpiSim, Payload, WinCreateOpts, WORLD};
 
 fn sim(nodes: usize, cores: usize) -> MpiSim {
     MpiSim::new(Topology::new(nodes, cores), NetParams::test_simple())
@@ -110,7 +110,7 @@ fn rma_epochs_interleave_with_two_sided_traffic() {
         } else {
             Payload::virt(0)
         };
-        let win = p.win_create(WORLD, expose);
+        let win = p.win_create_with(WORLD, expose, WinCreateOpts::blocking());
         let req = p.ibarrier(WORLD);
         match r {
             1 => {
@@ -148,7 +148,7 @@ fn rget_completion_is_ordered_with_virtual_time() {
         } else {
             Payload::virt(0)
         };
-        let win = p.win_create(WORLD, expose);
+        let win = p.win_create_with(WORLD, expose, WinCreateOpts::blocking());
         if r == 1 {
             let big = proteo::simmpi::recv_buf_virtual();
             let small = proteo::simmpi::recv_buf_virtual();

@@ -178,18 +178,24 @@ fn direct_end_time(ns: usize, nd: usize, total: u64, lockall: bool, chunked_entr
         let mut reg = Registry::new();
         reg.register("A", DataKind::Constant, total, local);
         let _ = if chunked_entry {
-            rma::redistribute_pipelined(
+            rma::redistribute_with(
                 &p,
                 WORLD,
                 &roles,
                 &reg,
                 &[0],
-                lockall,
-                WinPoolPolicy::off(),
-                0,
+                rma::RedistOpts::new(lockall, WinPoolPolicy::off())
+                    .lifecycle(rma::LifecycleOpts::reg_only(0)),
             )
         } else {
-            rma::redistribute_blocking(&p, WORLD, &roles, &reg, &[0], lockall, WinPoolPolicy::off())
+            rma::redistribute_with(
+                &p,
+                WORLD,
+                &roles,
+                &reg,
+                &[0],
+                rma::RedistOpts::new(lockall, WinPoolPolicy::off()),
+            )
         };
     });
     sim.run().expect("simulation failed")
@@ -234,15 +240,13 @@ fn lifecycle_end_time(ns: usize, nd: usize, total: u64, chunk_kib: u64, dereg: b
         } else {
             rma::LifecycleOpts::reg_only(chunk_elems)
         };
-        let _ = rma::redistribute_lifecycle(
+        let _ = rma::redistribute_with(
             &p,
             WORLD,
             &roles,
             &reg,
             &[0],
-            true,
-            WinPoolPolicy::off(),
-            opts,
+            rma::RedistOpts::new(true, WinPoolPolicy::off()).lifecycle(opts),
         );
     });
     sim.run().expect("simulation failed")
