@@ -26,6 +26,7 @@
 
 use crate::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::RunSpec;
+use crate::simmpi::RmaSync;
 use crate::sam::SamConfig;
 use crate::util::json::Json;
 
@@ -59,6 +60,16 @@ pub struct ExperimentConfig {
     /// estimate fed by observed resize spans and registration
     /// counters.  Off is bit-identical to the static planner.
     pub recalib: bool,
+    /// `"rma_sync": "epoch" | "notify"` — RMA completion
+    /// synchronization.  `epoch` (default) is the seed's passive
+    /// epochs + collective teardown, bit for bit; `notify` completes
+    /// on per-segment notification counters with local teardown.
+    pub rma_sync: RmaSync,
+    /// `"sched_cache"`: bool or "on"/"off" (default off) — persistent
+    /// redistribution schedules, built once per
+    /// `(from, to, structure, chunk)` and replayed for a validation
+    /// handshake.  Off recomputes per resize (seed, bit for bit).
+    pub sched_cache: bool,
     pub base: RunSpec,
 }
 
@@ -78,6 +89,8 @@ impl ExperimentConfig {
             rma_dereg: true,
             planner: PlannerMode::Fixed,
             recalib: false,
+            rma_sync: RmaSync::Epoch,
+            sched_cache: false,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
     }
@@ -105,6 +118,8 @@ impl ExperimentConfig {
         spec.rma_dereg = self.rma_dereg;
         spec.planner = self.planner;
         spec.recalib = self.recalib;
+        spec.rma_sync = self.rma_sync;
+        spec.sched_cache = self.sched_cache;
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
             spec.sam.colind_elems /= self.scale;
@@ -194,6 +209,19 @@ impl ExperimentConfig {
                 _ => return Err("recalib must be a bool or \"on\"/\"off\"".into()),
             };
         }
+        if let Some(rs) = doc.get("rma_sync") {
+            let rs = rs.as_str().ok_or("rma_sync must be a string")?;
+            cfg.rma_sync = RmaSync::parse(rs)
+                .ok_or_else(|| format!("bad rma_sync '{rs}' (epoch | notify)"))?;
+        }
+        if let Some(sc) = doc.get("sched_cache") {
+            cfg.sched_cache = match (sc.as_bool(), sc.as_str()) {
+                (Some(b), _) => b,
+                (_, Some(s)) => crate::util::cli::parse_toggle(s)
+                    .ok_or_else(|| format!("bad sched_cache '{s}' (on | off)"))?,
+                _ => return Err("sched_cache must be a bool or \"on\"/\"off\"".into()),
+            };
+        }
         if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
             cfg.pairs = pairs
                 .iter()
@@ -267,6 +295,8 @@ impl ExperimentConfig {
             ("rma_dereg", Json::Bool(self.rma_dereg)),
             ("planner", Json::str(self.planner.label())),
             ("recalib", Json::Bool(self.recalib)),
+            ("rma_sync", Json::str(self.rma_sync.label())),
+            ("sched_cache", Json::Bool(self.sched_cache)),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
     }
@@ -384,7 +414,8 @@ mod tests {
                 "spawn_strategy": "async",
                 "win_pool": "on", "win_pool_cap": 2,
                 "rma_chunk_kib": 256, "rma_dereg": false,
-                "planner": "auto", "recalib": true
+                "planner": "auto", "recalib": true,
+                "rma_sync": "notify", "sched_cache": true
             }"#,
         )
         .unwrap();
@@ -400,6 +431,8 @@ mod tests {
         assert!(!mam.rma_dereg);
         assert_eq!(mam.planner, PlannerMode::Auto);
         assert!(mam.recalib);
+        assert_eq!(mam.rma_sync, RmaSync::Notify);
+        assert!(mam.sched_cache);
         // And the default config builds the default MaM cfg.
         let def = ExperimentConfig::from_str("{}").unwrap().spec_for(4, 2).mam_cfg();
         let base = crate::mam::ReconfigCfg::default();
@@ -408,6 +441,63 @@ mod tests {
         assert_eq!(def.rma_chunk_kib, base.rma_chunk_kib);
         assert_eq!(def.rma_dereg, base.rma_dereg);
         assert_eq!(def.recalib, base.recalib);
+        assert_eq!(def.rma_sync, base.rma_sync);
+        assert_eq!(def.sched_cache, base.sched_cache);
+    }
+
+    #[test]
+    fn rma_sync_parses_propagates_and_rejects_bad_values() {
+        // Default: epoch (the seed's passive-epoch path, bit for bit).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert_eq!(cfg.rma_sync, RmaSync::Epoch);
+        assert_eq!(cfg.spec_for(20, 40).rma_sync, RmaSync::Epoch);
+        // All spellings the CLI accepts.
+        for (src, want) in [
+            (r#"{"rma_sync": "epoch"}"#, RmaSync::Epoch),
+            (r#"{"rma_sync": "epochs"}"#, RmaSync::Epoch),
+            (r#"{"rma_sync": "notify"}"#, RmaSync::Notify),
+            (r#"{"rma_sync": "notified"}"#, RmaSync::Notify),
+            (r#"{"rma_sync": "NOTIFY"}"#, RmaSync::Notify),
+        ] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.rma_sync, want, "{src}");
+            // Round-trip into the per-pair run spec and the MaM cfg.
+            assert_eq!(cfg.spec_for(20, 160).rma_sync, want, "{src}");
+            assert_eq!(cfg.spec_for(20, 160).mam_cfg().rma_sync, want, "{src}");
+        }
+        // Bad values error out with the grammar in the message.
+        let err = ExperimentConfig::from_str(r#"{"rma_sync": "psychic"}"#).unwrap_err();
+        assert!(err.contains("rma_sync"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"rma_sync": 2}"#).is_err());
+        // Provenance carries the mode back out.
+        let cfg = ExperimentConfig::from_str(r#"{"rma_sync": "notify"}"#).unwrap();
+        assert_eq!(cfg.to_json().get_path("rma_sync").unwrap().as_str(), Some("notify"));
+    }
+
+    #[test]
+    fn sched_cache_parses_propagates_and_rejects_bad_values() {
+        // Default: off (per-resize recompute, the seed path).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert!(!cfg.sched_cache);
+        assert!(!cfg.spec_for(20, 40).sched_cache);
+        // Bool and toggle-string spellings.
+        for (src, want) in [
+            (r#"{"sched_cache": true}"#, true),
+            (r#"{"sched_cache": false}"#, false),
+            (r#"{"sched_cache": "on"}"#, true),
+            (r#"{"sched_cache": "off"}"#, false),
+        ] {
+            let cfg = ExperimentConfig::from_str(src).unwrap();
+            assert_eq!(cfg.sched_cache, want, "{src}");
+            assert_eq!(cfg.spec_for(20, 160).sched_cache, want, "{src}");
+            assert_eq!(cfg.spec_for(20, 160).mam_cfg().sched_cache, want, "{src}");
+        }
+        let err = ExperimentConfig::from_str(r#"{"sched_cache": "sideways"}"#).unwrap_err();
+        assert!(err.contains("sched_cache"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"sched_cache": 3}"#).is_err());
+        // Provenance carries the flag back out.
+        let cfg = ExperimentConfig::from_str(r#"{"sched_cache": "on"}"#).unwrap();
+        assert_eq!(cfg.to_json().get_path("sched_cache").unwrap().as_bool(), Some(true));
     }
 
     #[test]

@@ -11,7 +11,9 @@
 
 use std::sync::Arc;
 
-use crate::mam::{block_of, rma, DataKind, Method, Registry, Roles, Strategy, WinPoolPolicy};
+use crate::mam::{
+    block_of, rma, DataKind, Method, Registry, Roles, SchedCache, Strategy, WinPoolPolicy,
+};
 use crate::netmodel::{NetParams, Topology};
 use crate::proteo::run_median;
 use crate::sam::{Sam, SamConfig};
@@ -183,6 +185,95 @@ fn time_rma_lifecycle_passes(
     (1..=passes)
         .map(|pass| w.metrics.mark_at(&format!("ablation.chunk{pass}")).unwrap_or(f64::NAN))
         .collect()
+}
+
+/// Run the blocking RMA-Lockall redistribution `passes` times in one
+/// world, each rank carrying a persistent [`SchedCache`] across the
+/// passes when `sched` is on; returns each pass's redistribution time.
+/// Pass 1 builds every schedule cold; pass 2 replays the identical
+/// `(from, to, structure, chunk)` shapes for a validation handshake.
+fn time_rma_sched_passes(
+    ns: usize,
+    nd: usize,
+    sam: &SamConfig,
+    net: &NetParams,
+    policy: WinPoolPolicy,
+    sched: bool,
+    passes: u32,
+) -> Vec<f64> {
+    let n = ns.max(nd);
+    let topo = Topology::new_cyclic(n.div_ceil(20).max(1), 20);
+    let mut sim = MpiSim::new(topo, net.clone());
+    let world = sim.world();
+    let sam = sam.clone();
+    sim.launch(n, move |p: MpiProc| {
+        let rank = p.rank(WORLD);
+        let roles = Roles { ns, nd, rank };
+        let mut reg = Registry::new();
+        let s = Sam::new(sam.clone(), 7, p.gpid());
+        if roles.is_source() {
+            s.register_data(&mut reg, ns, rank);
+        } else {
+            for (name, total) in [
+                ("A_vals", sam.matrix_elems),
+                ("A_cols", sam.colind_elems),
+                ("A_rowptr", sam.rowptr_elems),
+            ] {
+                reg.register(name, DataKind::Constant, total, crate::simmpi::Payload::virt(0));
+            }
+            reg.register(
+                "x",
+                DataKind::Variable,
+                sam.vector_elems,
+                crate::simmpi::Payload::virt(0),
+            );
+        }
+        let which = reg.of_kind(DataKind::Constant);
+        let mut cache = SchedCache::new();
+        for pass in 1..=passes {
+            let t0 = p.now();
+            let opts = rma::RedistOpts::new(true, policy).sched(sched);
+            let _ = if sched {
+                rma::redistribute_sched(&p, WORLD, &roles, &reg, &which, opts, &mut cache)
+            } else {
+                rma::redistribute_with(&p, WORLD, &roles, &reg, &which, opts)
+            };
+            let dt = p.now() - t0;
+            p.metrics(|m| m.mark_max(&format!("ablation.sched{pass}"), dt));
+        }
+    });
+    sim.run().expect("sched-cache ablation sim failed");
+    let w = world.lock().unwrap();
+    (1..=passes)
+        .map(|pass| w.metrics.mark_at(&format!("ablation.sched{pass}")).unwrap_or(f64::NAN))
+        .collect()
+}
+
+/// Ablation: the persistent-schedule cache (`--sched-cache`).  Per
+/// pair, the cache-off baseline, the cache's first (cold) pass — the
+/// same redistribution plus the schedule build — and the replay pass,
+/// which charges only the validation handshake.  The window pool stays
+/// off so the columns isolate the schedule term from registration
+/// warmth; the headline pair 20→160 is always included (its cold and
+/// replay times are the bench-smoke `schedcache.20to160.*` metrics).
+pub fn sched_cache(opts: &FigOptions) -> FigureTable {
+    let mut t = FigureTable::new(
+        "Ablation: schedule cache — off vs cold build vs warm replay, blocking RMA-Lockall",
+        "NS->ND",
+        &["cache-off", "cold", "replay"],
+        0,
+    );
+    let mut pairs: Vec<(usize, usize)> = vec![(20, 160)];
+    pairs.extend(opts.pairs().into_iter().filter(|&pr| pr != (20, 160)));
+    for (ns, nd) in pairs {
+        let spec = opts.spec(ns, nd, Method::RmaLockall, Strategy::Blocking);
+        let off =
+            time_rma_sched_passes(ns, nd, &spec.sam, &spec.net, WinPoolPolicy::off(), false, 1)[0];
+        let cached =
+            time_rma_sched_passes(ns, nd, &spec.sam, &spec.net, WinPoolPolicy::off(), true, 2);
+        t.row(&format!("{ns}->{nd}"), vec![off, cached[0], cached[1]]);
+    }
+    t
 }
 
 /// Chunk sizes (KiB) swept by `proteo ablation rma-chunk`; index 0 is
@@ -582,6 +673,24 @@ mod tests {
             t.value(2, 1),
             t.value(3, 1)
         );
+    }
+
+    #[test]
+    fn sched_cache_replay_undercuts_cold_build() {
+        let opts = FigOptions { pairs: vec![(8, 4)], scale: 10_000, ..FigOptions::quick() };
+        let t = sched_cache(&opts);
+        assert_eq!(t.rows.len(), 2, "forced 20->160 plus 8->4");
+        for r in 0..2 {
+            let (off, cold, replay) = (t.value(r, 0), t.value(r, 1), t.value(r, 2));
+            assert!(off.is_finite() && cold.is_finite() && replay.is_finite(), "row {r}");
+            // The cold pass pays the schedule build on top of the
+            // cache-off baseline; the replay keeps only the validation
+            // handshake — strictly cheaper than cold, never cheaper
+            // than off (pool off: registration repeats either way).
+            assert!(cold > off, "row {r}: cold={cold} !> off={off}");
+            assert!(replay < cold, "row {r}: replay={replay} !< cold={cold}");
+            assert!(replay >= off, "row {r}: replay={replay} < off={off}");
+        }
     }
 
     #[test]

@@ -208,6 +208,10 @@ impl DriftScenario {
             objective: Objective::ReconfTime,
             probe: false,
             extra_chunks_kib: extra,
+            rma_sync: crate::simmpi::RmaSync::Epoch,
+            sched_cache: false,
+            sched_warm: false,
+            future_resizes: 0,
         }
     }
 }

@@ -90,6 +90,15 @@ pub fn collect(quick: bool) -> Json {
     entries.push(("rmachunk.160to20.best_cold".to_string(), bestk(0)));
     entries.push(("rmachunk.160to20.reg_only".to_string(), bestk(1)));
 
+    // Persistent-schedule cache: the headline 20→160 grow's cold
+    // build and warm replay — the gate's guard on the schedule-cache
+    // pricing (replay must keep undercutting the cold build).
+    let t0 = std::time::Instant::now();
+    let sc = ablation::sched_cache(&FigOptions { pairs: vec![], ..o.clone() });
+    entries.push(("schedcache.20to160.cold".to_string(), sc.value(0, 1)));
+    entries.push(("schedcache.20to160.replay".to_string(), sc.value(0, 2)));
+    entries.push(("engine.schedcache.wall_s".to_string(), wall_s(t0)));
+
     // One end-to-end run per method family (redistribution time), at
     // the larger fig-sweep pair — the wall-clock row is the simulator
     // throughput tripwire for the engine itself.
@@ -134,6 +143,26 @@ pub fn collect(quick: bool) -> Json {
         let rep = scenario::run_scenario(&sp);
         entries.push(("scenario.rms.auto_recalib.makespan".to_string(), rep.makespan));
     }
+
+    // Oscillating 20↔160 trace: the pooled RMA makespan without and
+    // with the schedule cache + notified completion — the end-to-end
+    // tripwire for the persistent-schedule machinery.
+    let t0 = std::time::Instant::now();
+    {
+        let mut sp = scenario::ScenarioSpec::osc_trace(quick);
+        sp.planner = PlannerMode::Fixed;
+        sp.method = Method::RmaLockall;
+        sp.strategy = Strategy::Blocking;
+        sp.win_pool = WinPoolPolicy::on();
+        let rep = scenario::run_scenario(&sp);
+        entries.push(("scenario.osc.rma_pool.makespan".to_string(), rep.makespan));
+        let mut sp2 = sp.clone();
+        sp2.sched_cache = true;
+        sp2.rma_sync = crate::simmpi::RmaSync::Notify;
+        let rep2 = scenario::run_scenario(&sp2);
+        entries.push(("scenario.osc.rma_pool_sched_notify.makespan".to_string(), rep2.makespan));
+    }
+    entries.push(("engine.scenario_osc.wall_s".to_string(), wall_s(t0)));
 
     // Drift benchmarks: cumulative reconfiguration cost of the static
     // and recalibrating arms, plus the episode index at which the
@@ -201,6 +230,10 @@ mod tests {
             "scenario.rms.col_blocking.makespan",
             "scenario.rms.rma_lockall_wd.makespan",
             "scenario.rms.auto_recalib.makespan",
+            "scenario.osc.rma_pool.makespan",
+            "scenario.osc.rma_pool_sched_notify.makespan",
+            "schedcache.20to160.cold",
+            "schedcache.20to160.replay",
         ] {
             assert!(entries.contains_key(key), "missing {key}");
         }
@@ -236,5 +269,8 @@ mod tests {
         // registration-only one, and both beat nothing (finite).
         assert!(e("rmachunk.160to20.best_cold") <= e("rmachunk.160to20.reg_only") + 1e-12);
         assert!(e("rmachunk.160to20.blocking") > 0.0);
+        // Schedule cache: the warm replay keeps only the validation
+        // handshake, strictly under the cold build.
+        assert!(e("schedcache.20to160.replay") < e("schedcache.20to160.cold"));
     }
 }

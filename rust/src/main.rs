@@ -8,6 +8,7 @@
 //! proteo scenario --drift all --quick          # static vs recalibrating planner
 //! proteo ablation single-window
 //! proteo ablation register-sweep --ns 20 --nd 160
+//! proteo ablation sched-cache    # cold build vs warm replay vs cache off
 //! proteo cg --iters 200      # AOT JAX/Pallas CG through PJRT
 //! proteo info                # calibration, artifact manifest, versions
 //! ```
@@ -21,6 +22,7 @@ use proteo::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use proteo::netmodel::NetParams;
 use proteo::proteo::{run_median, RunSpec};
 use proteo::runtime::{artifacts_dir, CgRuntime};
+use proteo::simmpi::RmaSync;
 use proteo::util::benchkit::compare_bench;
 use proteo::util::cli::{parse_toggle, Args, Cli, Command};
 use proteo::util::json::Json;
@@ -58,6 +60,8 @@ fn cli() -> Cli {
                 )
                 .opt("planner", "fixed", "fixed | auto (cost-model-driven version choice)")
                 .opt("recalib", "off", "online NetParams recalibration (auto planner): on | off")
+                .opt("rma-sync", "epoch", "RMA completion sync: epoch | notify")
+                .opt("sched-cache", "off", "persistent redistribution schedules: on | off")
                 .flag("json", "emit the result as JSON"),
             Command::new(
                 "scenario",
@@ -70,6 +74,8 @@ fn cli() -> Cli {
             .opt("win-pool", "off", "fixed version: on | off")
             .opt("rma-chunk", "0", "fixed version: pipelined chunk (KiB; 0 = off)")
             .opt("recalib", "off", "online NetParams recalibration (auto planner): on | off")
+            .opt("rma-sync", "epoch", "RMA completion sync: epoch | notify")
+            .opt("sched-cache", "off", "persistent redistribution schedules: on | off")
             .opt("drift", "", "run a drift benchmark instead: miscal | hetero | congest | all")
             .opt("seed", "12648430", "base RNG seed")
             .flag("quick", "CI-sized workload (10000x smaller problem)")
@@ -78,7 +84,7 @@ fn cli() -> Cli {
             Command::new(
                 "ablation",
                 "ablations: single-window | register-sweep | eager-sweep | win-pool | spawn | \
-                 rma-chunk | rma-chunk-shrink | recalib",
+                 rma-chunk | rma-chunk-shrink | recalib | sched-cache",
             )
             .opt("ns", "20", "source ranks (register-sweep)")
             .opt("nd", "160", "drain ranks (register-sweep)")
@@ -230,6 +236,14 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             .get("recalib")
             .and_then(parse_toggle)
             .ok_or("bad --recalib (on | off)")?;
+        spec.rma_sync = args
+            .get("rma-sync")
+            .and_then(RmaSync::parse)
+            .ok_or("bad --rma-sync (epoch | notify)")?;
+        spec.sched_cache = args
+            .get("sched-cache")
+            .and_then(parse_toggle)
+            .ok_or("bad --sched-cache (on | off)")?;
         if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
             spec.seed = seed;
         }
@@ -302,6 +316,7 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         "rma-chunk" => println!("{}", ablation::rma_chunk(&opts).render()),
         "rma-chunk-shrink" => println!("{}", ablation::rma_chunk_shrink(&opts).render()),
         "recalib" => println!("{}", ablation::recalib(&opts).render()),
+        "sched-cache" => println!("{}", ablation::sched_cache(&opts).render()),
         other => return Err(format!("unknown ablation '{other}'")),
     }
     Ok(())
@@ -355,6 +370,14 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
         .get("recalib")
         .and_then(parse_toggle)
         .ok_or("bad --recalib (on | off)")?;
+    spec.rma_sync = args
+        .get("rma-sync")
+        .and_then(RmaSync::parse)
+        .ok_or("bad --rma-sync (epoch | notify)")?;
+    spec.sched_cache = args
+        .get("sched-cache")
+        .and_then(parse_toggle)
+        .ok_or("bad --sched-cache (on | off)")?;
     if spec.planner == PlannerMode::Fixed
         && !proteo::mam::is_valid_version(spec.method, spec.strategy)
     {

@@ -27,6 +27,10 @@
 //!   split `Init_RMA`/`Complete_RMA` used for background redistribution,
 //! * [`winpool`]   — the persistent window pool (§VI): entries pin
 //!   their windows so repeat resizes skip `Win_create` registration,
+//! * [`schedcache`] — persistent redistribution schedules: the
+//!   per-resize planning (targets, read lists, segment layout, sync
+//!   plan) built once per `(from, to, structure, chunk)` and replayed
+//!   for the cost of a validation handshake,
 //! * [`spawn`]     — spawn strategies for the Merge grow path
 //!   (sequential / parallel / async `MPI_Comm_spawn` modeling),
 //! * [`planner`]   — the cost-model-driven reconfiguration planner:
@@ -45,6 +49,7 @@ pub mod recalib;
 pub mod reconfig;
 pub mod registry;
 pub mod rma;
+pub mod schedcache;
 pub mod spawn;
 pub mod winpool;
 
@@ -53,6 +58,7 @@ pub use planner::{Candidate, Objective, PlannerInputs, PlannerMode, ProbeSession
 pub use recalib::{Observation, RecalibCfg, Recalibrator};
 pub use reconfig::{Mam, MamStatus, ReconfigCfg, Reconfiguration, Roles};
 pub use registry::{DataDecl, DataEntry, DataKind, Registry};
+pub use schedcache::{RedistSchedule, SchedCache, SchedKey, SchedRead};
 pub use spawn::SpawnStrategy;
 pub use winpool::WinPoolPolicy;
 

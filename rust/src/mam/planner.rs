@@ -47,7 +47,9 @@ use crate::netmodel::{
     predict_reconfig, CostPrediction, NetParams, ReconfigCase, RedistShape, Topology,
 };
 use crate::simcluster::ActivityId;
-use crate::simmpi::{CommId, MpiProc, MpiSim, MpiWorld, Payload, WorldSnapshot, ELEM_BYTES, WORLD};
+use crate::simmpi::{
+    CommId, MpiProc, MpiSim, MpiWorld, Payload, RmaSync, WorldSnapshot, ELEM_BYTES, WORLD,
+};
 
 use super::blockdist::block_of;
 use super::reconfig::{Mam, MamStatus, ReconfigCfg};
@@ -172,6 +174,12 @@ pub struct CandidateCost {
     /// Exact reconfiguration span from the DES micro-probe, when one
     /// ran (blocking candidates under `probe: true`).
     pub probed_reconf: Option<f64>,
+    /// Cross-resize investment credit: what this candidate's warmth
+    /// investments (pool register-on-receive pins, cold schedule
+    /// builds) are predicted to save over the harness's announced
+    /// future resizes ([`PlannerInputs::future_resizes`]).  Subtracted
+    /// in the argmin; 0 when the future is unknown.
+    pub future_credit: f64,
 }
 
 impl CandidateCost {
@@ -238,6 +246,24 @@ pub struct PlannerInputs {
     /// of the static grid are ignored; empty = the static grid alone
     /// (bit-identical to the pre-recalibration enumeration).
     pub extra_chunks_kib: Vec<u64>,
+    /// Session RMA synchronization mode (`--rma-sync`): notify replaces
+    /// the passive epochs with per-op notification flags in every
+    /// one-sided candidate's price.
+    pub rma_sync: RmaSync,
+    /// Persistent-schedule cache enabled (`--sched-cache`): one-sided
+    /// candidates price the cold schedule build — or, warm, only the
+    /// validation handshake.
+    pub sched_cache: bool,
+    /// A previous resize between these sizes already built and pinned
+    /// the redistribution schedules (warm replay: validation only).
+    pub sched_warm: bool,
+    /// Resizes the harness still expects after this one (0 = unknown,
+    /// the seed behaviour).  Candidates that invest in warmth — pool
+    /// register-on-receive pins, cold schedule builds — earn a credit
+    /// of their predicted cold-vs-warm gap per future resize, so a
+    /// small grow can value warm-pool / warm-schedule futures it pays
+    /// for now and harvests later.
+    pub future_resizes: u32,
 }
 
 /// Price one candidate with the closed-form model.
@@ -252,7 +278,7 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
             tail.push(bytes);
         }
     }
-    let (spawn_block, spawn_tail) = if inp.nd > inp.ns {
+    let (spawn_block, spawn_tail, spawn_waves) = if inp.nd > inp.ns {
         let sched = cand.spawn_strategy.schedule(
             &inp.net,
             inp.ns,
@@ -263,10 +289,21 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
         // Asynchronous spawning releases the sources before the last
         // spawned rank is up: the remainder gates the redistribution
         // (overlappable by one-sided registration — the spawn-overlap
-        // term of the lifecycle pipeline).
-        (sched.source_block, (sched.last_child_up() - sched.source_block).max(0.0))
+        // term of the lifecycle pipeline).  The per-wave offsets let
+        // the model price the eager registration stream wave by wave
+        // rather than against the last wave alone.
+        let tail = (sched.last_child_up() - sched.source_block).max(0.0);
+        let mut waves: Vec<f64> = sched
+            .child_up
+            .iter()
+            .map(|&u| (u - sched.source_block).max(0.0))
+            .filter(|&w| w > 0.0)
+            .collect();
+        waves.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        waves.dedup();
+        (sched.source_block, tail, waves)
     } else {
-        (0.0, 0.0)
+        (0.0, 0.0, Vec::new())
     };
     let case = ReconfigCase {
         ns: inp.ns,
@@ -275,10 +312,12 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
         bulk_bytes: bulk,
         tail_bytes: tail,
         warm: inp.warm,
+        sched_warm: inp.sched_warm,
         t_iter_src: inp.t_iter_src,
         t_iter_dst: inp.t_iter_dst,
         spawn_block,
         spawn_tail,
+        spawn_waves,
     };
     let shape = RedistShape {
         one_sided: cand.method.is_rma(),
@@ -291,8 +330,27 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
         } else {
             0
         },
+        notify_sync: inp.rma_sync == RmaSync::Notify && cand.method.is_rma(),
+        sched_cache: inp.sched_cache && cand.method.is_rma(),
     };
     predict_reconfig(&inp.net, &case, &shape)
+}
+
+/// Cross-resize investment credit of one candidate: the predicted
+/// cold-vs-warm gap — what the candidate's pool pins and schedule
+/// builds buy on a later resize — times the announced number of future
+/// resizes.  Exactly 0 for candidates that invest nothing (the warm
+/// prediction equals the cold one) and whenever the harness announced
+/// no future (`future_resizes == 0`, the seed behaviour).
+fn future_credit(inp: &PlannerInputs, cand: &Candidate, predicted: &CostPrediction) -> f64 {
+    if inp.future_resizes == 0 || (inp.warm && inp.sched_warm) {
+        return 0.0;
+    }
+    let mut warm_inp = inp.clone();
+    warm_inp.warm = true;
+    warm_inp.sched_warm = true;
+    let warm = predict_candidate(&warm_inp, cand);
+    (predicted.reconf_time - warm.reconf_time).max(0.0) * f64::from(inp.future_resizes)
 }
 
 /// Exact cost of one candidate from an isolated DES micro-probe.
@@ -620,7 +678,13 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
                         continue;
                     }
                     let predicted = predict_candidate(inp, &candidate);
-                    candidates.push(CandidateCost { candidate, predicted, probed_reconf: None });
+                    let credit = future_credit(inp, &candidate, &predicted);
+                    candidates.push(CandidateCost {
+                        candidate,
+                        predicted,
+                        probed_reconf: None,
+                        future_credit: credit,
+                    });
                 }
             }
         }
@@ -673,7 +737,7 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
                     cc.reconf_time()
                 }
                 Objective::Effective => cc.effective(),
-            };
+            } - cc.future_credit;
             if v < best_v {
                 best_v = v;
                 best = Some(i);
@@ -706,7 +770,9 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
                 .enumerate()
                 .filter(|(_, cc)| cc.probed_reconf.is_some())
                 .min_by(|(_, a), (_, b)| {
-                    a.reconf_time().partial_cmp(&b.reconf_time()).unwrap()
+                    (a.reconf_time() - a.future_credit)
+                        .partial_cmp(&(b.reconf_time() - b.future_credit))
+                        .unwrap()
                 })
                 .map(|(i, _)| i)
                 .unwrap_or(idx);
@@ -728,10 +794,12 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
                     predicted = pred;
                     predicted_reconf = probed;
                 }
+                let credit = future_credit(inp, &cand, &pred);
                 candidates.push(CandidateCost {
                     candidate: cand,
                     predicted: pred,
                     probed_reconf: Some(probed),
+                    future_credit: credit,
                 });
             }
         } else {
@@ -754,6 +822,7 @@ pub fn plan(inp: &PlannerInputs) -> ReconfigPlan {
                     candidate: choice,
                     predicted,
                     probed_reconf: None,
+                    future_credit: future_credit(inp, &choice, &predicted),
                 });
             }
         }
@@ -798,8 +867,18 @@ pub fn resolve_internal(
         objective: Objective::ReconfTime,
         probe: false,
         extra_chunks_kib: Vec::new(),
+        rma_sync: base.rma_sync,
+        sched_cache: base.sched_cache,
+        sched_warm: false,
+        future_resizes: 0,
     };
-    plan(&inp).choice.cfg(base.spawn_cost)
+    // The planner picks the version; the session-level sync/cache
+    // knobs ride through from the configured base.
+    plan(&inp)
+        .choice
+        .cfg(base.spawn_cost)
+        .with_sync(base.rma_sync)
+        .with_sched_cache(base.sched_cache)
 }
 
 #[cfg(test)]
@@ -833,6 +912,10 @@ mod tests {
             objective: Objective::ReconfTime,
             probe,
             extra_chunks_kib: Vec::new(),
+            rma_sync: RmaSync::Epoch,
+            sched_cache: false,
+            sched_warm: false,
+            future_resizes: 0,
         }
     }
 
@@ -1186,5 +1269,133 @@ mod tests {
         assert_eq!(a.spawn_strategy, b.spawn_strategy);
         assert_eq!(a.win_pool, b.win_pool);
         assert!(is_valid_version(a.method, a.strategy));
+    }
+
+    #[test]
+    fn sync_and_sched_knobs_flow_into_predictions() {
+        let mut inp = tiny_inputs(4, 8, false);
+        let rma = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Sequential,
+            win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
+        };
+        let col = Candidate { method: Method::Collective, ..rma };
+        let base_rma = predict_candidate(&inp, &rma);
+        let base_col = predict_candidate(&inp, &col);
+        // Notify replaces the passive epochs: cheaper protocol.
+        inp.rma_sync = RmaSync::Notify;
+        assert!(predict_candidate(&inp, &rma).protocol < base_rma.protocol);
+        // Schedule caching: cold pays the build, warm only validates.
+        inp.rma_sync = RmaSync::Epoch;
+        inp.sched_cache = true;
+        let cold = predict_candidate(&inp, &rma);
+        assert!(cold.protocol > base_rma.protocol);
+        inp.sched_warm = true;
+        let warm = predict_candidate(&inp, &rma);
+        assert!(warm.protocol < cold.protocol && warm.protocol > base_rma.protocol);
+        // Two-sided candidates are untouched by either knob.
+        inp.rma_sync = RmaSync::Notify;
+        let col_knobbed = predict_candidate(&inp, &col);
+        assert_eq!(col_knobbed.protocol.to_bits(), base_col.protocol.to_bits());
+        assert_eq!(col_knobbed.reconf_time.to_bits(), base_col.reconf_time.to_bits());
+    }
+
+    #[test]
+    fn future_resize_credit_values_warm_investments() {
+        // No announced future: every credit is exactly 0 and the plan
+        // is bit-identical to the seed enumeration.
+        let base = plan(&tiny_inputs(4, 8, false));
+        assert!(base.candidates.iter().all(|cc| cc.future_credit == 0.0));
+        // Announce a future: investing candidates (pool pins, cold
+        // schedule builds) earn a positive credit, non-investing COL
+        // without the pool earns exactly nothing.
+        let mut inp = tiny_inputs(4, 8, false);
+        inp.future_resizes = 4;
+        inp.sched_cache = true;
+        let fut = plan(&inp);
+        let pooled = fut
+            .candidates
+            .iter()
+            .find(|cc| {
+                cc.candidate.method == Method::RmaLockall
+                    && cc.candidate.strategy == Strategy::Blocking
+                    && cc.candidate.win_pool.enabled
+                    && cc.candidate.rma_chunk_kib == 0
+            })
+            .unwrap();
+        assert!(pooled.future_credit > 0.0, "{pooled:?}");
+        let bare_col = fut
+            .candidates
+            .iter()
+            .find(|cc| {
+                cc.candidate.method == Method::Collective
+                    && cc.candidate.strategy == Strategy::Blocking
+                    && !cc.candidate.win_pool.enabled
+            })
+            .unwrap();
+        assert_eq!(bare_col.future_credit, 0.0);
+        // The credit scales linearly with the announced horizon.
+        let mut inp8 = tiny_inputs(4, 8, false);
+        inp8.future_resizes = 8;
+        inp8.sched_cache = true;
+        let fut8 = plan(&inp8);
+        let pooled8 = fut8
+            .candidates
+            .iter()
+            .find(|cc| cc.candidate == pooled.candidate)
+            .unwrap();
+        assert!((pooled8.future_credit - 2.0 * pooled.future_credit).abs() < 1e-12);
+        // Already-warm sessions have nothing left to invest in.
+        let mut warm_inp = inp.clone();
+        warm_inp.warm = true;
+        warm_inp.sched_warm = true;
+        let warm_plan = plan(&warm_inp);
+        assert!(warm_plan.candidates.iter().all(|cc| cc.future_credit == 0.0));
+    }
+
+    #[test]
+    fn async_grow_predictions_price_spawn_waves() {
+        // The async spawn schedule leaves a tail; its per-wave offsets
+        // must reach the cost model (one attach handshake per wave on
+        // the eager registration stream), so the async prediction is
+        // never cheaper than wave-blind and stays finite/ordered.
+        let inp = tiny_inputs(4, 16, false);
+        let cand = Candidate {
+            method: Method::RmaLockall,
+            strategy: Strategy::Blocking,
+            spawn_strategy: SpawnStrategy::Async,
+            win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
+        };
+        let p = predict_candidate(&inp, &cand);
+        assert!(p.reconf_time.is_finite() && p.reconf_time > 0.0);
+        // A sequential-spawn variant has no tail and no waves at all.
+        let seq = Candidate { spawn_strategy: SpawnStrategy::Sequential, ..cand };
+        let ps = predict_candidate(&inp, &seq);
+        assert!(ps.reconf_time.is_finite());
+        // Shrinks never spawn: waves are empty, prediction unchanged
+        // relative to the spawn strategy.
+        let mut shrink = tiny_inputs(16, 4, false);
+        shrink.net = inp.net.clone();
+        let a = predict_candidate(&shrink, &cand);
+        let b = predict_candidate(&shrink, &seq);
+        assert_eq!(a.reconf_time.to_bits(), b.reconf_time.to_bits());
+    }
+
+    #[test]
+    fn internal_resolution_carries_sync_and_cache_knobs() {
+        let inp = tiny_inputs(4, 8, false);
+        let base = ReconfigCfg {
+            planner: PlannerMode::Auto,
+            rma_sync: RmaSync::Notify,
+            sched_cache: true,
+            ..ReconfigCfg::default()
+        };
+        let r = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base);
+        assert_eq!(r.planner, PlannerMode::Fixed);
+        assert_eq!(r.rma_sync, RmaSync::Notify);
+        assert!(r.sched_cache);
     }
 }

@@ -29,12 +29,13 @@
 use std::sync::{Arc, Mutex};
 
 use crate::simcluster::Time;
-use crate::simmpi::{CommId, MpiProc, Payload, ReqId};
+use crate::simmpi::{CommId, MpiProc, Payload, ReqId, RmaSync};
 
 use super::collective as col;
 use super::planner::{self, PlannerMode};
 use super::registry::{DataDecl, DataKind, Registry};
 use super::rma::{self, RmaInit};
+use super::schedcache::SchedCache;
 use super::spawn::SpawnStrategy;
 use super::winpool::{self, WinPoolPolicy};
 use super::{Method, Strategy};
@@ -108,6 +109,21 @@ pub struct ReconfigCfg {
     /// behaviour).  Meaningless when `rma_chunk_kib == 0`.  Default:
     /// `true`.
     pub rma_dereg: bool,
+    /// RMA completion synchronization (`--rma-sync`): `Epoch` (default)
+    /// is the paper's collective epoch/barrier protocol, bit-identical
+    /// to the seed; `Notify` replaces it with notified completion —
+    /// drains observe per-segment readiness through the windows'
+    /// notification counters, `Complete_RMA` gates teardown on
+    /// per-segment notify counts, and the confirmation barrier is
+    /// never issued.  Ignored by the COL method (no windows).
+    pub rma_sync: RmaSync,
+    /// Persistent redistribution schedules (`--sched-cache`): memoize
+    /// the block-distribution targets, per-drain read lists, segment
+    /// layout and sync plan per `(from, to, structure, chunk)` shape,
+    /// charging the cold schedule build once and only a validation
+    /// handshake on every replay.  Off (default) recomputes per resize
+    /// and charges nothing — the seed behaviour, bit for bit.
+    pub sched_cache: bool,
     /// `Fixed` uses the fields above verbatim (seed behaviour).
     /// `Auto` lets the cost-model planner override
     /// method/strategy/spawn/pool per resize: `Mam` resolves it with
@@ -137,6 +153,8 @@ impl Default for ReconfigCfg {
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
             rma_dereg: true,
+            rma_sync: RmaSync::Epoch,
+            sched_cache: false,
             planner: PlannerMode::Fixed,
             recalib: false,
         }
@@ -147,8 +165,8 @@ impl ReconfigCfg {
     /// Builder entry point: the given redistribution version over
     /// default knobs.  Chain the `with_*` setters for the rest —
     /// `ReconfigCfg::version(m, s).with_pool(pool).with_chunk(1024)`
-    /// replaces the nine-field struct literal harnesses used to spell
-    /// out.
+    /// replaces the eleven-field struct literal harnesses used to
+    /// spell out.
     pub fn version(method: Method, strategy: Strategy) -> ReconfigCfg {
         ReconfigCfg { method, strategy, ..ReconfigCfg::default() }
     }
@@ -175,6 +193,18 @@ impl ReconfigCfg {
     /// Pipelined teardown toggle (meaningful only when chunked).
     pub fn with_dereg(mut self, dereg: bool) -> ReconfigCfg {
         self.rma_dereg = dereg;
+        self
+    }
+
+    /// RMA completion-synchronization mode (`--rma-sync`).
+    pub fn with_sync(mut self, sync: RmaSync) -> ReconfigCfg {
+        self.rma_sync = sync;
+        self
+    }
+
+    /// Persistent-schedule cache toggle (`--sched-cache`).
+    pub fn with_sched_cache(mut self, sched: bool) -> ReconfigCfg {
+        self.sched_cache = sched;
         self
     }
 
@@ -213,6 +243,16 @@ impl ReconfigCfg {
                 && roles.is_grow()
                 && self.spawn_strategy == SpawnStrategy::Async,
         }
+    }
+
+    /// The full RMA redistribution options this configuration implies
+    /// for a resize with `roles`: lifecycle pipeline, completion
+    /// synchronization and schedule-cache routing.  Rank-independent.
+    pub fn rma_opts(&self, lockall: bool, roles: &Roles) -> rma::RedistOpts {
+        rma::RedistOpts::new(lockall, self.win_pool)
+            .lifecycle(self.lifecycle(roles))
+            .sync(self.rma_sync)
+            .sched(self.sched_cache)
     }
 }
 
@@ -283,11 +323,24 @@ pub struct Mam {
     /// recalibrator digests global metrics, so it is) to preserve the
     /// planner's rank-independence contract.
     live: Option<crate::netmodel::calibration::NetParams>,
+    /// Persistent redistribution schedules ([`ReconfigCfg::sched_cache`]):
+    /// the Rust-side memo of built plans, one per
+    /// `(from, to, structure, chunk)` shape this handle has resized
+    /// through.  The virtual-time warmth lives in the simulated world
+    /// (`MpiProc::sched_acquire`), keyed by rank slot so it survives
+    /// process churn.
+    sched: SchedCache,
 }
 
 impl Mam {
     pub fn new(registry: Registry, cfg: ReconfigCfg) -> Mam {
-        Mam { registry, cfg, inflight: None, live: None }
+        Mam { registry, cfg, inflight: None, live: None, sched: SchedCache::new() }
+    }
+
+    /// Schedule-memo counters `(hits, misses)` — the observable the
+    /// cross-resize investment credit is validated against.
+    pub fn sched_cache_counters(&self) -> (u64, u64) {
+        (self.sched.hits, self.sched.misses)
     }
 
     /// Install the online estimator's current belief (no-op for
@@ -420,13 +473,14 @@ impl Mam {
             }
             (m, Strategy::Blocking) => {
                 let lockall = m == Method::RmaLockall;
-                let locals = rma::redistribute_with(
+                let locals = rma::redistribute_sched(
                     proc,
                     merged,
                     roles,
                     &self.registry,
                     which,
-                    rma::RedistOpts::new(lockall, cfg.win_pool).lifecycle(cfg.lifecycle(roles)),
+                    cfg.rma_opts(lockall, roles),
+                    &mut self.sched,
                 );
                 self.apply_locals(proc, which, locals, roles, cfg.win_pool);
                 State::Done
@@ -446,17 +500,20 @@ impl Mam {
             }
             (m, Strategy::WaitDrains) => {
                 let lockall = m == Method::RmaLockall;
-                let init = rma::init_rma_with(
+                let init = rma::init_rma_sched(
                     proc,
                     merged,
                     roles,
                     &self.registry,
                     which,
-                    rma::RedistOpts::new(lockall, cfg.win_pool).lifecycle(cfg.lifecycle(roles)),
+                    cfg.rma_opts(lockall, roles),
+                    &mut self.sched,
                 );
                 // Source-only ranks have no reads: they notify the
                 // others right away (Fig. 1) and keep computing.
-                let barrier = if !roles.is_drain() {
+                // Notified completion never issues the barrier — every
+                // rank observes readiness through the notify counters.
+                let barrier = if cfg.rma_sync == RmaSync::Epoch && !roles.is_drain() {
                     Some(proc.ibarrier(merged))
                 } else {
                     None
@@ -471,28 +528,35 @@ impl Mam {
                 let reg = self.registry.clone();
                 let roles2 = *roles;
                 let which2 = which.to_vec();
-                let pool = cfg.win_pool;
-                let opts = cfg.lifecycle(roles);
+                // The aux thread gets its own (empty) schedule memo —
+                // the Rust-side memo is free in virtual time, and the
+                // warmth that matters lives in the simulated world's
+                // rank-slot pins, which the aux shares.
+                let lock_opts = cfg.rma_opts(false, roles);
+                let lockall_opts = cfg.rma_opts(true, roles);
                 proc.spawn_aux(move |aux| {
+                    let mut memo = SchedCache::new();
                     let locals = match m {
                         Method::Collective => {
                             col::redistribute_blocking(&aux, merged, &roles2, &reg, &which2)
                         }
-                        Method::RmaLock => rma::redistribute_with(
+                        Method::RmaLock => rma::redistribute_sched(
                             &aux,
                             merged,
                             &roles2,
                             &reg,
                             &which2,
-                            rma::RedistOpts::new(false, pool).lifecycle(opts),
+                            lock_opts,
+                            &mut memo,
                         ),
-                        Method::RmaLockall => rma::redistribute_with(
+                        Method::RmaLockall => rma::redistribute_sched(
                             &aux,
                             merged,
                             &roles2,
                             &reg,
                             &which2,
-                            rma::RedistOpts::new(true, pool).lifecycle(opts),
+                            lockall_opts,
+                            &mut memo,
                         ),
                     };
                     *s2.lock().unwrap() = Some(locals);
@@ -551,6 +615,27 @@ impl Mam {
                     }
                 }
             },
+            State::RmaWd { init, barrier: _ } if init.sync == RmaSync::Notify => {
+                // Notified completion (Fig. 2 without the barrier):
+                // local phase waits for this rank's own Rgets and
+                // charges the notification flags; the global phase
+                // polls the per-window notify counters — teardown
+                // proceeds as soon as every read into this rank's
+                // exposure has been posted, no collective required.
+                if rc.new_locals.is_none() {
+                    if proc.req_testall(&init.reqs) {
+                        proc.rma_notify_charge(init.n_reads);
+                        rc.new_locals = Some(rma::take_payloads(init));
+                    }
+                    false
+                } else if rma::notify_all_ready(proc, init) {
+                    rma::free_windows_local(proc, init);
+                    rc.state = State::Done;
+                    true
+                } else {
+                    false
+                }
+            }
             State::RmaWd { init, barrier } => match barrier {
                 None => {
                     // Local phase (drains): wait for own Rgets.
@@ -704,14 +789,14 @@ impl Mam {
             (Method::Collective, Strategy::Blocking | Strategy::Threading) => {
                 col::redistribute_blocking(proc, merged, &roles, &mam.registry, &which)
             }
-            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_with(
+            (m, Strategy::Blocking | Strategy::Threading) => rma::redistribute_sched(
                 proc,
                 merged,
                 &roles,
                 &mam.registry,
                 &which,
-                rma::RedistOpts::new(m == Method::RmaLockall, active.win_pool)
-                    .lifecycle(active.lifecycle(&roles)),
+                active.rma_opts(m == Method::RmaLockall, &roles),
+                &mut mam.sched,
             ),
             (Method::Collective, Strategy::NonBlocking) => {
                 let reqs = col::start_nonblocking(proc, merged, &roles, &mam.registry, &which);
@@ -729,21 +814,29 @@ impl Mam {
             }
             (m, Strategy::WaitDrains) => {
                 // Fig. 2 drain-only path: blocking local phase, then the
-                // global barrier, then the local frees.
-                let mut init = rma::init_rma_with(
+                // global sync (barrier, or the notify counters under
+                // notified completion), then the local frees.
+                let mut init = rma::init_rma_sched(
                     proc,
                     merged,
                     &roles,
                     &mam.registry,
                     &which,
-                    rma::RedistOpts::new(m == Method::RmaLockall, active.win_pool)
-                        .lifecycle(active.lifecycle(&roles)),
+                    active.rma_opts(m == Method::RmaLockall, &roles),
+                    &mut mam.sched,
                 );
                 proc.req_waitall(&init.reqs);
-                rma::close_epochs(proc, &init);
-                let b = proc.ibarrier(merged);
-                proc.req_wait(b);
-                rma::free_windows_local(proc, &init);
+                if init.sync == RmaSync::Notify {
+                    proc.rma_notify_charge(init.n_reads);
+                    // A spawned drain's own exposure is never read, so
+                    // the notified free returns as soon as it is armed.
+                    rma::free_windows_local(proc, &init);
+                } else {
+                    rma::close_epochs(proc, &init);
+                    let b = proc.ibarrier(merged);
+                    proc.req_wait(b);
+                    rma::free_windows_local(proc, &init);
+                }
                 rma::take_payloads(&mut init)
             }
             (_, Strategy::NonBlocking) => unreachable!("validated at reconfigure()"),
@@ -774,7 +867,7 @@ mod tests {
     use crate::simmpi::{MpiSim, WORLD};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
-    /// The builder chain must reproduce the full nine-field struct
+    /// The builder chain must reproduce the full eleven-field struct
     /// literal knob for knob, and `version()` alone must equal
     /// `Default` with only the version overridden.
     #[test]
@@ -785,6 +878,8 @@ mod tests {
             .with_pool(pool)
             .with_chunk(512)
             .with_dereg(false)
+            .with_sync(RmaSync::Notify)
+            .with_sched_cache(true)
             .with_planner(PlannerMode::Auto)
             .with_recalib(true);
         let lit = ReconfigCfg {
@@ -795,6 +890,8 @@ mod tests {
             win_pool: pool,
             rma_chunk_kib: 512,
             rma_dereg: false,
+            rma_sync: RmaSync::Notify,
+            sched_cache: true,
             planner: PlannerMode::Auto,
             recalib: true,
         };
@@ -806,6 +903,8 @@ mod tests {
         assert_eq!(built.win_pool.cap, lit.win_pool.cap);
         assert_eq!(built.rma_chunk_kib, lit.rma_chunk_kib);
         assert_eq!(built.rma_dereg, lit.rma_dereg);
+        assert_eq!(built.rma_sync, lit.rma_sync);
+        assert_eq!(built.sched_cache, lit.sched_cache);
         assert_eq!(built.planner, lit.planner);
         assert_eq!(built.recalib, lit.recalib);
 
@@ -818,6 +917,8 @@ mod tests {
         assert_eq!(bare.win_pool.enabled, def.win_pool.enabled);
         assert_eq!(bare.rma_chunk_kib, def.rma_chunk_kib);
         assert_eq!(bare.rma_dereg, def.rma_dereg);
+        assert_eq!(bare.rma_sync, RmaSync::Epoch);
+        assert!(!bare.sched_cache);
         assert_eq!(bare.planner, def.planner);
         assert_eq!(bare.recalib, def.recalib);
     }
@@ -839,6 +940,30 @@ mod tests {
         roundtrip_lifecycle(ns, nd, method, strategy, pool, spawn_strategy, rma_chunk_kib, true);
     }
 
+    /// [`roundtrip_chunked`] under notified completion and/or the
+    /// persistent-schedule cache: the payload assertions are the
+    /// sync-mode/cache parity check — every continuing rank must end
+    /// with the exact ND-way block either way.
+    fn roundtrip_sync(
+        ns: usize,
+        nd: usize,
+        method: Method,
+        strategy: Strategy,
+        pool: bool,
+        rma_chunk_kib: u64,
+        rma_sync: RmaSync,
+        sched_cache: bool,
+    ) {
+        roundtrip_cfg_full(ns, nd, pool, SpawnStrategy::Sequential, true, ReconfigCfg {
+            method,
+            strategy,
+            rma_chunk_kib,
+            rma_sync,
+            sched_cache,
+            ..ReconfigCfg::default()
+        });
+    }
+
     /// [`roundtrip_chunked`] with the teardown pipeline explicit
     /// (`rma_dereg = false` exercises the registration-only pipeline's
     /// Mam dispatch).
@@ -852,6 +977,24 @@ mod tests {
         spawn_strategy: SpawnStrategy,
         rma_chunk_kib: u64,
         rma_dereg: bool,
+    ) {
+        roundtrip_cfg_full(ns, nd, pool, spawn_strategy, rma_dereg, ReconfigCfg {
+            method,
+            strategy,
+            rma_chunk_kib,
+            ..ReconfigCfg::default()
+        });
+    }
+
+    /// The underlying roundtrip: `base` carries the method/strategy and
+    /// the new-knob fields; pool, spawn and dereg are layered on top.
+    fn roundtrip_cfg_full(
+        ns: usize,
+        nd: usize,
+        pool: bool,
+        spawn_strategy: SpawnStrategy,
+        rma_dereg: bool,
+        base: ReconfigCfg,
     ) {
         let total = 997u64;
         let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
@@ -867,17 +1010,11 @@ mod tests {
                 total,
                 Payload::real((b.ini..b.end).map(|i| i as f64).collect()),
             );
-            let cfg = ReconfigCfg {
-                method,
-                strategy,
-                spawn_cost: 0.01,
-                spawn_strategy,
-                win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
-                rma_chunk_kib,
-                rma_dereg,
-                planner: PlannerMode::Fixed,
-                recalib: false,
-            };
+            let cfg = base
+                .clone()
+                .with_spawn(spawn_strategy, 0.01)
+                .with_pool(if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() })
+                .with_dereg(rma_dereg);
             let decls = reg.decls();
             let mut mam = Mam::new(reg, cfg.clone());
             let checks3 = checks2.clone();
@@ -1115,6 +1252,46 @@ mod tests {
         roundtrip_chunked(3, 8, Method::RmaLock, Strategy::WaitDrains, true, par, 1);
     }
 
+    // ---- notified completion (`--rma-sync notify`): drains observe
+    // readiness through per-segment notification counters and the
+    // confirmation barrier is never issued.  The payloads must stay
+    // the exact ND-way blocks for grow and shrink, Blocking / WD /
+    // Threading, pool on and off, chunked and unchunked.
+
+    #[test]
+    fn notify_blocking_roundtrips() {
+        let n = RmaSync::Notify;
+        roundtrip_sync(3, 8, Method::RmaLockall, Strategy::Blocking, false, 0, n, false);
+        roundtrip_sync(6, 2, Method::RmaLock, Strategy::Blocking, true, 0, n, false);
+        roundtrip_sync(8, 3, Method::RmaLockall, Strategy::Blocking, false, 1, n, false);
+    }
+
+    #[test]
+    fn notify_wd_roundtrips() {
+        let n = RmaSync::Notify;
+        roundtrip_sync(2, 7, Method::RmaLock, Strategy::WaitDrains, false, 0, n, false);
+        roundtrip_sync(9, 4, Method::RmaLockall, Strategy::WaitDrains, true, 1, n, false);
+    }
+
+    #[test]
+    fn notify_threading_roundtrips() {
+        let n = RmaSync::Notify;
+        roundtrip_sync(2, 6, Method::RmaLock, Strategy::Threading, false, 0, n, false);
+        roundtrip_sync(6, 2, Method::RmaLockall, Strategy::Threading, true, 1, n, false);
+    }
+
+    // ---- persistent-schedule cache (`--sched-cache on`): schedule-
+    // driven posting must deliver the exact ND-way blocks under the
+    // epoch protocol and composed with notified completion.
+
+    #[test]
+    fn sched_cache_roundtrips_all_strategies() {
+        roundtrip_sync(2, 7, Method::RmaLock, Strategy::WaitDrains, false, 0, RmaSync::Epoch, true);
+        roundtrip_sync(8, 3, Method::RmaLockall, Strategy::Blocking, false, 1, RmaSync::Epoch, true);
+        roundtrip_sync(3, 8, Method::RmaLockall, Strategy::WaitDrains, true, 1, RmaSync::Notify, true);
+        roundtrip_sync(6, 2, Method::RmaLock, Strategy::Threading, false, 0, RmaSync::Notify, true);
+    }
+
     // ---- spawn strategies: payloads must be identical to the
     // Sequential (seed) path for every method × strategy grow; the
     // roundtrip asserts the exact expected block per rank.
@@ -1190,6 +1367,8 @@ mod tests {
                 win_pool: WinPoolPolicy::off(),
                 rma_chunk_kib: 0,
                 rma_dereg: true,
+                rma_sync: RmaSync::Epoch,
+                sched_cache: false,
                 planner: PlannerMode::Auto,
                 recalib: false,
             };
@@ -1301,6 +1480,8 @@ mod tests {
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
                     rma_dereg: true,
+                    rma_sync: RmaSync::Epoch,
+                    sched_cache: false,
                     planner: PlannerMode::Fixed,
                     recalib: false,
                 };
@@ -1352,6 +1533,8 @@ mod tests {
                 win_pool: WinPoolPolicy::on(),
                 rma_chunk_kib: 0,
                 rma_dereg: true,
+                rma_sync: RmaSync::Epoch,
+                sched_cache: false,
                 planner: PlannerMode::Fixed,
                 recalib: false,
             };
@@ -1395,6 +1578,89 @@ mod tests {
     }
 
     #[test]
+    fn schedule_cache_replays_warm_across_oscillations() {
+        // 4 -> 2 -> 4 -> 2 with the schedule cache on.  The third
+        // resize re-runs the first one's (4 -> 2) schedule: every rank
+        // slot finds a warm pin — including ranks 2 and 3, whose
+        // original processes were retired at resize 1 and respawned at
+        // resize 2 (schedules are keyed by rank slot, so they outlive
+        // process churn) — and charges only the validation handshake.
+        // No cold build enters the timeline after the grow.
+        let total = 40_000u64;
+        let (ns, nd) = (4usize, 2usize);
+        let mut sim = MpiSim::new(Topology::new(1, 8), NetParams::test_simple());
+        let world = sim.world();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+            let cfg = ReconfigCfg::version(Method::RmaLockall, Strategy::Blocking)
+                .with_spawn(SpawnStrategy::Sequential, 0.0)
+                .with_sched_cache(true);
+            let decls = reg.decls();
+            let mut mam = Mam::new(reg, cfg.clone());
+            let nobody: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            // Resize 1: 4 -> 2 — the (4, 2) schedule builds cold on
+            // every rank.
+            let st = mam.reconfigure(&p, WORLD, nd, nobody);
+            assert_eq!(st, MamStatus::Completed);
+            let out = mam.finish(&p, WORLD);
+            let Some(c1) = out.app_comm else {
+                return; // ranks 2 and 3 retire here
+            };
+            let s1 = p.sched_stats();
+            assert_eq!(s1.cold_builds, ns as u64, "resize 1 builds cold everywhere: {s1:?}");
+            assert_eq!(s1.warm_replays, 0, "{s1:?}");
+            assert!(s1.build_time > 0.0, "{s1:?}");
+            // Resize 2: grow back to 4 — a different shape (2, 4),
+            // cold again.  The spawned drains stay around to take part
+            // in resize 3 as retiring sources.
+            let cfg2 = cfg.clone();
+            let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let mut dmam = Mam::drain_join(&dp, merged, nd, ns, &decls, cfg2.clone());
+                    let nobody2: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                        Arc::new(|_, _| {});
+                    let st = dmam.reconfigure(&dp, merged, nd, nobody2);
+                    assert_eq!(st, MamStatus::Completed);
+                    let out = dmam.finish(&dp, merged);
+                    assert!(out.app_comm.is_none(), "spawned ranks retire at resize 3");
+                });
+            let st = mam.reconfigure(&p, c1, ns, drain_body);
+            assert_eq!(st, MamStatus::Completed);
+            let out = mam.finish(&p, c1);
+            let c2 = out.app_comm.expect("grow keeps every rank");
+            let s2 = p.sched_stats();
+            assert_eq!(s2.cold_builds, 2 * ns as u64, "resize 2 is a new shape: {s2:?}");
+            assert_eq!(s2.warm_replays, 0, "{s2:?}");
+            // Resize 3: 4 -> 2 again — pure replay of resize 1's
+            // schedule on all four rank slots.
+            let nobody3: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            let st = mam.reconfigure(&p, c2, nd, nobody3);
+            assert_eq!(st, MamStatus::Completed);
+            let _ = mam.finish(&p, c2);
+            let s3 = p.sched_stats();
+            assert_eq!(s3.cold_builds, s2.cold_builds, "replay must add no cold builds: {s3:?}");
+            assert_eq!(s3.warm_replays, ns as u64, "{s3:?}");
+            assert!(s3.validate_time > 0.0, "{s3:?}");
+            assert!(
+                s3.validate_time < s3.build_time,
+                "replays must be cheaper than builds: {s3:?}"
+            );
+            // The survivors' Rust-side memo saw (4,2) miss, (2,4) miss,
+            // then (4,2) hit — the observable the cross-resize
+            // investment credit is validated against.
+            assert_eq!(mam.sched_cache_counters(), (1, 2));
+        });
+        sim.run().unwrap();
+        let w = world.lock().unwrap();
+        let s = w.sched_stats();
+        assert_eq!(s.cold_builds, 8, "{s:?}");
+        assert_eq!(s.warm_replays, 4, "{s:?}");
+    }
+
+    #[test]
     #[should_panic(expected = "NB is undefined for RMA")]
     fn rma_nb_panics() {
         let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
@@ -1411,6 +1677,8 @@ mod tests {
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
                     rma_dereg: true,
+                    rma_sync: RmaSync::Epoch,
+                    sched_cache: false,
                     planner: PlannerMode::Fixed,
                     recalib: false,
                 },
@@ -1456,6 +1724,8 @@ mod tests {
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
                     rma_dereg: true,
+                    rma_sync: RmaSync::Epoch,
+                    sched_cache: false,
                     planner: PlannerMode::Fixed,
                     recalib: false,
                 },
@@ -1520,6 +1790,8 @@ mod tests {
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
                     rma_dereg: true,
+                    rma_sync: RmaSync::Epoch,
+                    sched_cache: false,
                     planner: PlannerMode::Fixed,
                     recalib: false,
                 },

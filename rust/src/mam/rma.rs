@@ -19,12 +19,13 @@
 //! local frees) is driven by [`reconfig`](super::reconfig).
 
 use crate::simmpi::{
-    recv_buf_real, recv_buf_virtual, CommId, MpiProc, Payload, RecvBuf, ReqId, WinId,
+    recv_buf_real, recv_buf_virtual, CommId, MpiProc, Payload, RecvBuf, ReqId, RmaSync, WinId,
 };
 
 use super::blockdist::{drain_plan, DrainPlan};
 use super::reconfig::Roles;
 use super::registry::Registry;
+use super::schedcache::{RedistSchedule, SchedCache, SchedKey};
 use super::winpool::{self, WinPoolPolicy};
 
 /// Per-entry read bookkeeping on the drain side.
@@ -97,18 +98,30 @@ pub struct RmaInit {
     /// Lifecycle pipeline the windows were opened under — the local
     /// frees in `Complete_RMA` mirror its teardown half.
     pub lifecycle: LifecycleOpts,
+    /// Sync mode the reads were posted under: `Notify` leaves `epochs`
+    /// empty and `Complete_RMA` gates teardown on per-segment notify
+    /// counts instead of the confirmation barrier.
+    pub sync: RmaSync,
+    /// Total read operations this rank posted (the notified-completion
+    /// flag charge at `Complete_RMA`; 0 for source-only ranks).
+    pub n_reads: u64,
 }
 
-/// Allocate the drain-side receive buffer for one entry (Algorithm 1
-/// also allocates the per-structure memory for each drain).
-fn alloc_drain(total: u64, roles: &Roles, real: bool) -> DrainReads {
-    let plan = drain_plan(total, roles.ns, roles.nd, roles.rank);
+/// Wrap an already-computed drain plan (fresh or from a cached
+/// schedule) with its receive buffer.
+fn drain_reads(plan: DrainPlan, real: bool) -> DrainReads {
     let buf = if real {
         recv_buf_real(plan.block.len() as usize)
     } else {
         recv_buf_virtual()
     };
     DrainReads { plan, buf, real }
+}
+
+/// Allocate the drain-side receive buffer for one entry (Algorithm 1
+/// also allocates the per-structure memory for each drain).
+fn alloc_drain(total: u64, roles: &Roles, real: bool) -> DrainReads {
+    drain_reads(drain_plan(total, roles.ns, roles.nd, roles.rank), real)
 }
 
 /// Post one drain's reads for one entry using blocking `Get`s
@@ -142,7 +155,7 @@ fn post_rgets(proc: &MpiProc, win: WinId, reads: &DrainReads) -> Vec<ReqId> {
 /// gates on exactly one segment of the registration stream — segment
 /// `k+1` registers while segment `k`'s read is in flight, and reads
 /// complete out of order per segment.
-fn for_each_chunk(
+pub(crate) fn for_each_chunk(
     pos: u64,
     count: u64,
     dest_off: u64,
@@ -189,6 +202,53 @@ fn post_rgets_chunked(proc: &MpiProc, win: WinId, reads: &DrainReads, chunk: u64
     reqs
 }
 
+/// Build (or fetch from `cache`) the persistent schedule of entry `i`
+/// for this resize.  Pure Rust-side bookkeeping — the simulated cost
+/// of cold builds vs warm replays is charged separately through
+/// `MpiProc::sched_acquire`.
+fn schedule_for(
+    roles: &Roles,
+    registry: &Registry,
+    i: usize,
+    chunk_elems: u64,
+    cache: Option<&mut SchedCache>,
+) -> RedistSchedule {
+    let e = registry.entry(i);
+    let key = SchedKey {
+        from: roles.ns,
+        to: roles.nd,
+        structure: winpool::pin_token(&e.name),
+        total_elems: e.total_elems,
+        chunk_elems,
+    };
+    match cache {
+        Some(c) => c.get_or_build(key, roles.rank).clone(),
+        None => RedistSchedule::build(key, roles.rank),
+    }
+}
+
+/// Post one drain's reads for one entry from its precomputed schedule
+/// (blocking `Get`s) — the same operations in the same order as
+/// [`post_gets`]/[`post_gets_chunked`], without replanning.
+fn post_sched_gets(proc: &MpiProc, win: WinId, sd: &RedistSchedule, reads: &DrainReads) {
+    for r in &sd.reads {
+        proc.get(win, r.target, r.disp, r.count, &reads.buf, r.dest_off);
+    }
+}
+
+/// Schedule-driven `Rget` posting; returns the requests.
+fn post_sched_rgets(
+    proc: &MpiProc,
+    win: WinId,
+    sd: &RedistSchedule,
+    reads: &DrainReads,
+) -> Vec<ReqId> {
+    sd.reads
+        .iter()
+        .map(|r| proc.rget(win, r.target, r.disp, r.count, &reads.buf, r.dest_off))
+        .collect()
+}
+
 /// Options for the unified RMA redistribution entrypoints
 /// ([`redistribute_with`] / [`init_rma_with`]) — the single knob set
 /// the old `redistribute{_blocking,_pipelined,_lifecycle}` /
@@ -205,17 +265,46 @@ pub struct RedistOpts {
     /// Chunked lifecycle pipeline (`--rma-chunk`); the default
     /// (`chunk_elems = 0`) is the seed unchunked path, bit for bit.
     pub lifecycle: LifecycleOpts,
+    /// Completion-synchronization mode (`--rma-sync`): passive-target
+    /// epochs + collective teardown (the default, bit-identical to the
+    /// pre-schedule paths) or notified completion — per-segment
+    /// notification counters, request-based drains, local teardown.
+    pub sync: RmaSync,
+    /// Route planning through the persistent-schedule machinery
+    /// (`--sched-cache on`): charge the cold schedule build on first
+    /// touch of a `(from, to, structure, chunk)` shape and only a
+    /// validation handshake on every replay.  Off charges nothing —
+    /// the seed recompute-every-time behaviour, bit for bit.
+    pub sched: bool,
 }
 
 impl RedistOpts {
     /// Blocking redistribution under `policy`, seed lifecycle.
     pub fn new(lockall: bool, policy: WinPoolPolicy) -> RedistOpts {
-        RedistOpts { lockall, policy, lifecycle: LifecycleOpts::default() }
+        RedistOpts {
+            lockall,
+            policy,
+            lifecycle: LifecycleOpts::default(),
+            sync: RmaSync::Epoch,
+            sched: false,
+        }
     }
 
     /// Attach a chunked lifecycle pipeline.
     pub fn lifecycle(mut self, lifecycle: LifecycleOpts) -> RedistOpts {
         self.lifecycle = lifecycle;
+        self
+    }
+
+    /// Select the completion-synchronization mode (`--rma-sync`).
+    pub fn sync(mut self, sync: RmaSync) -> RedistOpts {
+        self.sync = sync;
+        self
+    }
+
+    /// Enable the persistent-schedule cache (`--sched-cache`).
+    pub fn sched(mut self, sched: bool) -> RedistOpts {
+        self.sched = sched;
         self
     }
 }
@@ -240,7 +329,23 @@ pub fn redistribute_with(
     which: &[usize],
     opts: RedistOpts,
 ) -> Vec<Option<Payload>> {
-    redistribute_rma(proc, merged, roles, registry, which, opts)
+    redistribute_rma(proc, merged, roles, registry, which, opts, None)
+}
+
+/// [`redistribute_with`] backed by a persistent-schedule cache: plans
+/// built for a `(from, to, structure, chunk)` shape are memoized
+/// across resizes, and the simulated job replays warm schedules for
+/// only a validation handshake (`--sched-cache on`).
+pub fn redistribute_sched(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    opts: RedistOpts,
+    cache: &mut SchedCache,
+) -> Vec<Option<Payload>> {
+    redistribute_rma(proc, merged, roles, registry, which, opts, Some(cache))
 }
 
 /// Blocking RMA redistribution (seed lifecycle).
@@ -318,9 +423,11 @@ fn redistribute_rma(
     registry: &Registry,
     which: &[usize],
     opts: RedistOpts,
+    mut cache: Option<&mut SchedCache>,
 ) -> Vec<Option<Payload>> {
-    let RedistOpts { lockall, policy, lifecycle } = opts;
+    let RedistOpts { lockall, policy, lifecycle, sync, sched } = opts;
     let chunk_elems = lifecycle.chunk_elems;
+    let notify = sync == RmaSync::Notify;
     let create = crate::simmpi::WinCreateOpts::pipelined(chunk_elems).eager(lifecycle.eager_reg);
     let wins: Vec<WinId> = which
         .iter()
@@ -329,29 +436,55 @@ fn redistribute_rma(
     let mut out: Vec<Option<Payload>> = Vec::with_capacity(which.len());
     for (&i, win) in which.iter().zip(&wins) {
         let e = registry.entry(i);
+        // Persistent schedule: cold builds charge planning, warm
+        // replays only the validation handshake.  Notified sync always
+        // materializes the schedule — its sync plan arms the counters.
+        let sd = if sched || notify {
+            let sd = schedule_for(roles, registry, i, chunk_elems, cache.as_deref_mut());
+            if sched {
+                proc.sched_acquire(merged, sd.key.hash64(), sd.price_targets());
+            }
+            if notify {
+                proc.win_arm_notify(*win, sd.expected_here());
+            }
+            Some(sd)
+        } else {
+            None
+        };
         if roles.is_drain() {
-            let reads = alloc_drain(e.total_elems, roles, e.local.is_real());
-            let plan = &reads.plan;
-            let read = |proc: &MpiProc| {
-                if chunk_elems > 0 {
-                    post_gets_chunked(proc, *win, &reads, chunk_elems);
-                } else {
-                    post_gets(proc, *win, &reads);
-                }
+            let reads = match &sd {
+                Some(s) => drain_reads(s.plan.clone().expect("drain without plan"), e.local.is_real()),
+                None => alloc_drain(e.total_elems, roles, e.local.is_real()),
             };
-            if lockall {
-                // Algorithm 3: one epoch for everything.
-                proc.win_lock_all(*win);
-                read(proc);
-                proc.win_unlock_all(*win);
+            if notify {
+                // Notified completion: no epochs.  Post the reads as
+                // Rgets, wait on the requests, and charge the per-op
+                // notification flags riding the data packets.
+                let s = sd.as_ref().expect("notify without schedule");
+                let reqs = post_sched_rgets(proc, *win, s, &reads);
+                proc.req_waitall(&reqs);
+                proc.rma_notify_charge(reqs.len() as u64);
             } else {
-                // Algorithm 2: one epoch per accessed target.
-                for t in plan.first_source..plan.last_source {
-                    proc.win_lock(*win, t);
-                }
-                read(proc);
-                for t in plan.first_source..plan.last_source {
-                    proc.win_unlock(*win, t);
+                let read = |proc: &MpiProc| match &sd {
+                    Some(s) => post_sched_gets(proc, *win, s, &reads),
+                    None if chunk_elems > 0 => post_gets_chunked(proc, *win, &reads, chunk_elems),
+                    None => post_gets(proc, *win, &reads),
+                };
+                let plan = &reads.plan;
+                if lockall {
+                    // Algorithm 3: one epoch for everything.
+                    proc.win_lock_all(*win);
+                    read(proc);
+                    proc.win_unlock_all(*win);
+                } else {
+                    // Algorithm 2: one epoch per accessed target.
+                    for t in plan.first_source..plan.last_source {
+                        proc.win_lock(*win, t);
+                    }
+                    read(proc);
+                    for t in plan.first_source..plan.last_source {
+                        proc.win_unlock(*win, t);
+                    }
                 }
             }
             out.push(Some(reads.into_payload()));
@@ -361,12 +494,19 @@ fn redistribute_rma(
             out.push(None);
         }
     }
-    winpool::close_windows_with(
-        proc,
-        &wins,
-        policy,
-        winpool::CloseOpts::collective().pipelined(chunk_elems > 0 && lifecycle.dereg_pipeline),
-    );
+    if notify {
+        // Notified teardown: each rank leaves as soon as its own
+        // exposure's expected read count is reached — no closing
+        // collective at all.
+        winpool::close_windows_notified(proc, &wins, policy);
+    } else {
+        winpool::close_windows_with(
+            proc,
+            &wins,
+            policy,
+            winpool::CloseOpts::collective().pipelined(chunk_elems > 0 && lifecycle.dereg_pipeline),
+        );
+    }
     out
 }
 
@@ -468,40 +608,95 @@ pub fn init_rma_with(
     which: &[usize],
     opts: RedistOpts,
 ) -> RmaInit {
-    let RedistOpts { lockall, policy, lifecycle } = opts;
+    init_rma_impl(proc, merged, roles, registry, which, opts, None)
+}
+
+/// [`init_rma_with`] backed by a persistent-schedule cache (the
+/// background-redistribution counterpart of [`redistribute_sched`]).
+pub fn init_rma_sched(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    opts: RedistOpts,
+    cache: &mut SchedCache,
+) -> RmaInit {
+    init_rma_impl(proc, merged, roles, registry, which, opts, Some(cache))
+}
+
+fn init_rma_impl(
+    proc: &MpiProc,
+    merged: CommId,
+    roles: &Roles,
+    registry: &Registry,
+    which: &[usize],
+    opts: RedistOpts,
+    mut cache: Option<&mut SchedCache>,
+) -> RmaInit {
+    let RedistOpts { lockall, policy, lifecycle, sync, sched } = opts;
     let chunk_elems = lifecycle.chunk_elems;
+    let notify = sync == RmaSync::Notify;
     let create = crate::simmpi::WinCreateOpts::pipelined(chunk_elems).eager(lifecycle.eager_reg);
     let mut wins = Vec::with_capacity(which.len());
     let mut reqs = Vec::new();
     let mut reads = Vec::with_capacity(which.len());
     let mut epochs = Vec::new();
+    let mut n_reads = 0u64;
     for (k, &i) in which.iter().enumerate() {
         let e = registry.entry(i);
         let win =
             winpool::acquire_entry_window_with(proc, merged, roles, registry, i, policy, create);
         wins.push(win);
+        // Schedule + notify arming, as in the blocking path.
+        let sd = if sched || notify {
+            let sd = schedule_for(roles, registry, i, chunk_elems, cache.as_deref_mut());
+            if sched {
+                proc.sched_acquire(merged, sd.key.hash64(), sd.price_targets());
+            }
+            if notify {
+                proc.win_arm_notify(win, sd.expected_here());
+            }
+            Some(sd)
+        } else {
+            None
+        };
         if roles.is_drain() {
-            let dr = alloc_drain(e.total_elems, roles, e.local.is_real());
-            let plan = &dr.plan;
-            if lockall {
-                proc.win_lock_all(win);
+            let dr = match &sd {
+                Some(s) => drain_reads(s.plan.clone().expect("drain without plan"), e.local.is_real()),
+                None => alloc_drain(e.total_elems, roles, e.local.is_real()),
+            };
+            if notify {
+                // Notified sync: Rgets without epochs; teardown gates
+                // on the windows' notification counters instead.
+                let s = sd.as_ref().expect("notify without schedule");
+                let posted = post_sched_rgets(proc, win, s, &dr);
+                n_reads += posted.len() as u64;
+                reqs.extend(posted);
             } else {
-                for t in plan.first_source..plan.last_source {
-                    proc.win_lock(win, t);
+                let plan = &dr.plan;
+                if lockall {
+                    proc.win_lock_all(win);
+                } else {
+                    for t in plan.first_source..plan.last_source {
+                        proc.win_lock(win, t);
+                    }
                 }
+                match &sd {
+                    Some(s) => reqs.extend(post_sched_rgets(proc, win, s, &dr)),
+                    None if chunk_elems > 0 => {
+                        reqs.extend(post_rgets_chunked(proc, win, &dr, chunk_elems))
+                    }
+                    None => reqs.extend(post_rgets(proc, win, &dr)),
+                }
+                epochs.push((k, lockall, plan.first_source, plan.last_source));
             }
-            if chunk_elems > 0 {
-                reqs.extend(post_rgets_chunked(proc, win, &dr, chunk_elems));
-            } else {
-                reqs.extend(post_rgets(proc, win, &dr));
-            }
-            epochs.push((k, lockall, plan.first_source, plan.last_source));
             reads.push(Some(dr));
         } else {
             reads.push(None);
         }
     }
-    RmaInit { wins, reqs, reads, epochs, policy, lifecycle }
+    RmaInit { wins, reqs, reads, epochs, policy, lifecycle, sync, n_reads }
 }
 
 /// `Init_RMA` (registration pipeline only).
@@ -567,6 +762,12 @@ pub fn close_epochs(proc: &MpiProc, init: &RmaInit) {
 /// pipeline, pool-off frees charge only the dereg stream's residual
 /// (segments have been unpinning since their last reads landed).
 pub fn free_windows_local(proc: &MpiProc, init: &RmaInit) {
+    if init.sync == RmaSync::Notify {
+        // Notified teardown: gate on per-segment notify counts, not on
+        // the (never-issued) confirmation barrier.
+        winpool::close_windows_notified(proc, &init.wins, init.policy);
+        return;
+    }
     let piped = init.lifecycle.chunk_elems > 0 && init.lifecycle.dereg_pipeline;
     winpool::close_windows_with(
         proc,
@@ -574,6 +775,13 @@ pub fn free_windows_local(proc: &MpiProc, init: &RmaInit) {
         init.policy,
         winpool::CloseOpts::local_only().pipelined(piped),
     );
+}
+
+/// Are all of this rank's notified-teardown gates open?  (Poll used by
+/// the Wait-Drains driver before the local frees; epoch-mode inits are
+/// trivially ready — their gate is the confirmation barrier.)
+pub fn notify_all_ready(proc: &MpiProc, init: &RmaInit) -> bool {
+    init.sync != RmaSync::Notify || init.wins.iter().all(|w| proc.win_notify_ready(*w))
 }
 
 /// Turn completed drain reads into the new local payloads.
@@ -870,6 +1078,168 @@ mod tests {
                 s2.cold_acquires == s1.cold_acquires,
                 "warm pipelined rerun went cold: {s2:?}"
             );
+        });
+        sim.run().unwrap();
+    }
+
+    fn run_notify(ns: usize, nd: usize, total: u64, chunk: u64, pool: bool) {
+        let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+        let p_count = ns.max(nd);
+        sim.launch(p_count, move |p| {
+            let r = p.rank(WORLD);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if roles.is_source() {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let policy = if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() };
+            let mut opts = RedistOpts::new(false, policy).sync(crate::simmpi::RmaSync::Notify);
+            if chunk > 0 {
+                opts = opts.lifecycle(LifecycleOpts::full(chunk));
+            }
+            let out = redistribute_with(&p, WORLD, &roles, &reg, &[0], opts);
+            if roles.is_drain() {
+                let nb = super::super::blockdist::block_of(total, nd, r);
+                let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+                let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                assert_eq!(got, want, "drain {r} wrong block ({ns}->{nd} notify chunk {chunk})");
+            } else {
+                assert!(out[0].is_none());
+            }
+            assert!(p.now().is_finite() && p.now() > 0.0);
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn notify_payloads_match_epoch_across_shapes() {
+        // Notified completion must be a byte-identical repartition for
+        // grow, shrink, same-size, chunked and pooled variants.
+        run_notify(2, 5, 97, 0, false);
+        run_notify(6, 2, 103, 5, false);
+        run_notify(3, 7, 211, 16, false);
+        run_notify(2, 4, 97, 7, true);
+        run_notify(4, 4, 64, 0, false);
+    }
+
+    #[test]
+    fn sched_cache_replays_warm_with_identical_payloads() {
+        // Same resize twice under --sched-cache on: the first pass
+        // charges the cold schedule build on every rank, the replay
+        // only the validation handshake — and the data is unchanged.
+        let total = 97u64;
+        let (ns, nd) = (2usize, 4usize);
+        let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+        sim.launch(4, move |p| {
+            let r = p.rank(WORLD);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if roles.is_source() {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let mut cache = SchedCache::new();
+            let opts = RedistOpts::new(true, WinPoolPolicy::off()).sched(true);
+            let first = redistribute_sched(&p, WORLD, &roles, &reg, &[0], opts, &mut cache);
+            let s1 = p.sched_stats();
+            let second = redistribute_sched(&p, WORLD, &roles, &reg, &[0], opts, &mut cache);
+            let s2 = p.sched_stats();
+            // The collective window close of pass 1 synchronized all
+            // ranks past their sched_acquire, so s1 holds every cold
+            // build; replays must add none.
+            assert_eq!(s1.cold_builds, 4, "one cold build per rank");
+            assert_eq!(s2.cold_builds, s1.cold_builds, "replay rebuilt a schedule");
+            assert!(s2.warm_replays > s1.warm_replays);
+            assert!(s2.build_time > 0.0 && s2.validate_time > 0.0);
+            assert!(s2.validate_time < s2.build_time);
+            assert_eq!((cache.hits, cache.misses), (1, 1), "Rust-side memo must hit on replay");
+            if roles.is_drain() {
+                let nb = super::super::blockdist::block_of(total, nd, r);
+                let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                for out in [&first, &second] {
+                    assert_eq!(out[0].as_ref().unwrap().as_slice().unwrap().to_vec(), want);
+                }
+            }
+        });
+        sim.run().unwrap();
+    }
+
+    #[test]
+    fn sched_off_and_epoch_are_bit_identical_to_plain_opts() {
+        // The new knobs at their defaults add zero virtual-time charges
+        // anywhere: same end time, bit for bit, as the pre-schedule
+        // entry point.
+        fn end_time(explicit_defaults: bool) -> f64 {
+            let total = 50_000u64;
+            let (ns, nd) = (3usize, 6usize);
+            let mut sim = MpiSim::new(Topology::new(2, 4), NetParams::test_simple());
+            sim.launch(6, move |p| {
+                let r = p.rank(WORLD);
+                let roles = Roles { ns, nd, rank: r };
+                let b = super::super::blockdist::block_of(total, ns, r);
+                let local = if roles.is_source() { Payload::virt(b.len()) } else { Payload::virt(0) };
+                let mut reg = Registry::new();
+                reg.register("A", DataKind::Constant, total, local);
+                let opts = if explicit_defaults {
+                    RedistOpts::new(true, WinPoolPolicy::off())
+                        .sync(crate::simmpi::RmaSync::Epoch)
+                        .sched(false)
+                } else {
+                    RedistOpts::new(true, WinPoolPolicy::off())
+                };
+                let _ = redistribute_with(&p, WORLD, &roles, &reg, &[0], opts);
+                assert_eq!(p.sched_stats(), crate::simmpi::SchedStats::default());
+            });
+            sim.run().unwrap()
+        }
+        assert_eq!(end_time(false).to_bits(), end_time(true).to_bits());
+    }
+
+    #[test]
+    fn init_rma_notified_completion_end_to_end() {
+        // §IV-C split under --rma-sync notify: init posts epoch-less
+        // Rgets, completion waits the requests, charges the notify
+        // flags, and tears down through the notification gates.
+        let total = 60u64;
+        let mut sim = MpiSim::new(Topology::new(1, 4), NetParams::test_simple());
+        sim.launch(3, move |p| {
+            let r = p.rank(WORLD);
+            let (ns, nd) = (2usize, 3usize);
+            let roles = Roles { ns, nd, rank: r };
+            let local = if roles.is_source() {
+                let b = super::super::blockdist::block_of(total, ns, r);
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect())
+            } else {
+                Payload::real(Vec::new())
+            };
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, local);
+            let opts = RedistOpts::new(false, WinPoolPolicy::off())
+                .sync(crate::simmpi::RmaSync::Notify);
+            let mut init = init_rma_with(&p, WORLD, &roles, &reg, &[0], opts);
+            assert!(init.epochs.is_empty(), "notify sync must not open epochs");
+            assert!(init.n_reads > 0, "every rank drains here");
+            while !p.req_testall(&init.reqs) {
+                p.compute(1e-4);
+            }
+            p.rma_notify_charge(init.n_reads);
+            close_epochs(&p, &init); // no-op under notify
+            while !notify_all_ready(&p, &init) {
+                p.compute(1e-4);
+            }
+            free_windows_local(&p, &init);
+            let out = take_payloads(&mut init);
+            let nb = super::super::blockdist::block_of(total, nd, r);
+            let got = out[0].as_ref().unwrap().as_slice().unwrap().to_vec();
+            let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+            assert_eq!(got, want);
         });
         sim.run().unwrap();
     }

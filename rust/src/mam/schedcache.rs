@@ -1,0 +1,331 @@
+//! Persistent redistribution schedules (§VI outlook: what persistent
+//! collectives do for repeated communication, applied to resizing).
+//!
+//! Every RMA redistribution between the same pair of sizes moves the
+//! same elements along the same edges: the block-distribution targets,
+//! the per-drain read lists, the chunked segment layout and the
+//! completion plan are all pure functions of
+//! `(from_size, to_size, structure, total_elems, chunk)`.  The seed
+//! code recomputed them inside every `redistribute_*`/`init_rma*`
+//! call; this module extracts them into a first-class
+//! [`RedistSchedule`] built once and memoized in a [`SchedCache`], so
+//! an oscillating run (20 ↔ 160 ranks) pays the planning, target
+//! computation and sync setup once per direction and afterwards only a
+//! cheap validation handshake (`NetParams::sched_validate`) per
+//! replay.
+//!
+//! Two caches cooperate:
+//!
+//! * the **Rust-side memo** here (per `Mam` instance) avoids
+//!   recomputing plans — bookkeeping, free in virtual time;
+//! * the **virtual-time warmth** lives in the simulated world
+//!   (`MpiProc::sched_acquire`): a per-`(rank, key)` pin set that
+//!   charges `sched_build + sched_per_target·targets` on first touch
+//!   and `sched_validate` on every replay.  It is keyed by *rank
+//!   slot*, not process id, so a drain respawned at the same rank on
+//!   the next oscillation inherits the warm schedule — schedules, like
+//!   persistent collectives, outlive process churn.
+
+use std::collections::HashMap;
+
+use super::blockdist::{drain_plan, DrainPlan};
+
+/// Identity of one reusable redistribution schedule.  Everything a
+/// schedule contains is a pure function of these five values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SchedKey {
+    /// Source-side size (NS).
+    pub from: usize,
+    /// Drain-side size (ND).
+    pub to: usize,
+    /// Structure identity: the entry's pin token
+    /// ([`pin_token`](super::winpool::pin_token) of its name).
+    pub structure: u64,
+    /// Global element count of the structure.
+    pub total_elems: u64,
+    /// Segment size of the chunked lifecycle (0 = unchunked).
+    pub chunk_elems: u64,
+}
+
+impl SchedKey {
+    /// Stable 64-bit digest (FNV-1a over the fields) — the key of the
+    /// simulated world's schedule-pin set.
+    pub fn hash64(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [
+            self.from as u64,
+            self.to as u64,
+            self.structure,
+            self.total_elems,
+            self.chunk_elems,
+        ] {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+}
+
+/// One precomputed read: drain pulls `count` elements starting at
+/// local displacement `disp` of `target`'s exposure into its own
+/// buffer at `dest_off`.  Chunked schedules carry one read per touched
+/// segment, in exactly the order the seed code posts them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedRead {
+    pub target: usize,
+    pub disp: u64,
+    pub count: u64,
+    pub dest_off: u64,
+}
+
+/// A fully materialized redistribution schedule for one rank: its
+/// drain plan (if it drains), its chunk-split read list, and the
+/// global sync plan — how many read operations land in every rank's
+/// exposure (`expected`, what notified completion arms its counters
+/// with) and how many distinct drains touch each source (`fan_in`,
+/// what cold-build pricing scales with).
+#[derive(Clone, Debug)]
+pub struct RedistSchedule {
+    pub key: SchedKey,
+    /// Rank (in the merged communicator) this schedule was built for.
+    pub rank: usize,
+    /// Algorithm 1 output for this rank (None for pure sources).
+    pub plan: Option<DrainPlan>,
+    /// This rank's read list, chunk-split and ordered as posted.
+    pub reads: Vec<SchedRead>,
+    /// Expected read-op count into each rank's exposure
+    /// (len = `max(from, to)`); counts one op per posted Get/Rget,
+    /// i.e. per touched segment when chunked.
+    pub expected: Vec<u64>,
+    /// Number of distinct drains reading from each source
+    /// (len = `from`).
+    pub fan_in: Vec<u64>,
+}
+
+/// Read operations of one drain's `[pos, pos + count)` range into
+/// target-segment-aligned pieces of at most `chunk` elements
+/// (`chunk = 0` = one whole-range op).  Mirrors the splitting of
+/// `mam::rma::for_each_chunk` arithmetically, without enumerating.
+pub fn chunk_ops(pos: u64, count: u64, chunk: u64) -> u64 {
+    if count == 0 {
+        0
+    } else if chunk == 0 {
+        1
+    } else {
+        (pos + count - 1) / chunk - pos / chunk + 1
+    }
+}
+
+impl RedistSchedule {
+    /// Build the schedule for `rank` — deterministic, identical on
+    /// every rank for the shared parts (`expected`, `fan_in`).
+    pub fn build(key: SchedKey, rank: usize) -> RedistSchedule {
+        let (ns, nd) = (key.from, key.to);
+        let (total, chunk) = (key.total_elems, key.chunk_elems);
+        let mut expected = vec![0u64; ns.max(nd)];
+        let mut fan_in = vec![0u64; ns];
+        for d in 0..nd {
+            let dp = drain_plan(total, ns, nd, d);
+            let mut pos = dp.first_index;
+            for t in dp.first_source..dp.last_source {
+                fan_in[t] += 1;
+                expected[t] += chunk_ops(pos, dp.counts[t], chunk);
+                pos = 0;
+            }
+        }
+        let (plan, reads) = if rank < nd {
+            let dp = drain_plan(total, ns, nd, rank);
+            let mut reads = Vec::new();
+            let mut pos = dp.first_index;
+            for t in dp.first_source..dp.last_source {
+                if chunk > 0 {
+                    super::rma::for_each_chunk(
+                        pos,
+                        dp.counts[t],
+                        dp.displs[t],
+                        chunk,
+                        |disp, take, off| {
+                            reads.push(SchedRead { target: t, disp, count: take, dest_off: off });
+                        },
+                    );
+                } else {
+                    reads.push(SchedRead {
+                        target: t,
+                        disp: pos,
+                        count: dp.counts[t],
+                        dest_off: dp.displs[t],
+                    });
+                }
+                pos = 0;
+            }
+            (Some(dp), reads)
+        } else {
+            (None, Vec::new())
+        };
+        RedistSchedule { key, rank, plan, reads, expected, fan_in }
+    }
+
+    /// Number of distinct targets this rank reads from.
+    pub fn n_targets(&self) -> u64 {
+        self.plan
+            .as_ref()
+            .map(|p| p.last_source.saturating_sub(p.first_source) as u64)
+            .unwrap_or(0)
+    }
+
+    /// Expected read-op count into this rank's own exposure.
+    pub fn expected_here(&self) -> u64 {
+        self.expected.get(self.rank).copied().unwrap_or(0)
+    }
+
+    /// Edge count the cold build is priced over: targets this rank
+    /// reads from plus drains that read from it.
+    pub fn price_targets(&self) -> u64 {
+        self.n_targets() + self.fan_in.get(self.rank).copied().unwrap_or(0)
+    }
+}
+
+/// Per-process memo of built schedules with hit/miss accounting (the
+/// observable the cross-resize pool-investment credit is validated
+/// against).
+#[derive(Debug, Default)]
+pub struct SchedCache {
+    map: HashMap<SchedKey, RedistSchedule>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SchedCache {
+    pub fn new() -> SchedCache {
+        SchedCache::default()
+    }
+
+    /// Fetch the schedule for `key`, building it on first use.
+    pub fn get_or_build(&mut self, key: SchedKey, rank: usize) -> &RedistSchedule {
+        use std::collections::hash_map::Entry;
+        match self.map.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits += 1;
+                let s = e.into_mut();
+                debug_assert_eq!(s.rank, rank, "schedule cache shared across ranks");
+                s
+            }
+            Entry::Vacant(v) => {
+                self.misses += 1;
+                v.insert(RedistSchedule::build(key, rank))
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mam::blockdist::block_of;
+
+    fn key(from: usize, to: usize, total: u64, chunk: u64) -> SchedKey {
+        SchedKey { from, to, structure: 0x5EED, total_elems: total, chunk_elems: chunk }
+    }
+
+    #[test]
+    fn reads_cover_each_drain_block_exactly() {
+        for &(ns, nd, total, chunk) in &[
+            (2usize, 5usize, 97u64, 0u64),
+            (2, 5, 97, 7),
+            (6, 2, 103, 5),
+            (3, 7, 211, 1),
+            (4, 4, 64, 16),
+        ] {
+            for r in 0..nd {
+                let s = RedistSchedule::build(key(ns, nd, total, chunk), r);
+                let got: u64 = s.reads.iter().map(|x| x.count).sum();
+                assert_eq!(got, block_of(total, nd, r).len(), "{ns}->{nd} rank {r}");
+                // Destination offsets tile the drain buffer in order.
+                let mut next = 0u64;
+                for x in &s.reads {
+                    assert_eq!(x.dest_off, next, "{ns}->{nd} rank {r} gap");
+                    next += x.count;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expected_matches_sum_of_per_rank_reads() {
+        for &(ns, nd, total, chunk) in
+            &[(2usize, 5usize, 97u64, 0u64), (2, 5, 97, 16), (6, 2, 103, 64), (7, 3, 211, 5)]
+        {
+            let shared = RedistSchedule::build(key(ns, nd, total, chunk), 0);
+            let mut recount = vec![0u64; ns.max(nd)];
+            for r in 0..nd {
+                let s = RedistSchedule::build(key(ns, nd, total, chunk), r);
+                assert_eq!(s.expected, shared.expected, "expected differs across ranks");
+                for x in &s.reads {
+                    recount[x.target] += 1;
+                }
+            }
+            assert_eq!(recount, shared.expected, "{ns}->{nd} chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn chunk_ops_counts_touched_segments() {
+        assert_eq!(chunk_ops(0, 10, 0), 1);
+        assert_eq!(chunk_ops(5, 0, 4), 0);
+        assert_eq!(chunk_ops(0, 10, 10), 1);
+        assert_eq!(chunk_ops(0, 11, 10), 2);
+        assert_eq!(chunk_ops(9, 2, 10), 2); // straddles one boundary
+        assert_eq!(chunk_ops(10, 10, 10), 1); // aligned interior
+    }
+
+    #[test]
+    fn pure_sources_have_no_reads_but_share_the_sync_plan() {
+        // Shrink 6 -> 2: ranks 2..6 are pure sources.
+        let s = RedistSchedule::build(key(6, 2, 103, 8), 4);
+        assert!(s.plan.is_none());
+        assert!(s.reads.is_empty());
+        assert_eq!(s.n_targets(), 0);
+        assert!(s.expected_here() > 0, "rank 4's exposure is read");
+        assert!(s.price_targets() > 0);
+    }
+
+    #[test]
+    fn cache_hits_after_first_build() {
+        let mut c = SchedCache::new();
+        let k = key(2, 4, 100, 0);
+        assert_eq!(c.get_or_build(k, 1).reads.len(), 1);
+        assert_eq!((c.hits, c.misses), (0, 1));
+        let _ = c.get_or_build(k, 1);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        let _ = c.get_or_build(key(4, 2, 100, 0), 1);
+        assert_eq!((c.hits, c.misses), (1, 2));
+        assert_eq!(c.len(), 2);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn key_hashes_are_stable_and_sensitive() {
+        let k = key(20, 160, 1_000_000, 4096);
+        assert_eq!(k.hash64(), k.hash64());
+        assert_ne!(k.hash64(), key(160, 20, 1_000_000, 4096).hash64());
+        assert_ne!(k.hash64(), key(20, 160, 1_000_000, 0).hash64());
+        let mut other = k;
+        other.structure ^= 1;
+        assert_ne!(k.hash64(), other.hash64());
+    }
+}

@@ -244,6 +244,20 @@ pub fn close_windows_with(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy,
     }
 }
 
+/// Notified window teardown (`--rma-sync notify`): no closing
+/// collective — each rank waits until its own exposure's expected
+/// notification count is reached (armed from the redistribution
+/// schedule's sync plan), then frees or releases locally.
+pub fn close_windows_notified(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {
+    for win in wins {
+        if policy.enabled {
+            proc.win_release_notified(*win);
+        } else {
+            proc.win_free_notified(*win);
+        }
+    }
+}
+
 /// Collective close, serial deregistration.
 #[deprecated(note = "use close_windows_with(.., CloseOpts::collective())")]
 pub fn close_windows(proc: &MpiProc, wins: &[WinId], policy: WinPoolPolicy) {

@@ -56,6 +56,24 @@ pub struct NetParams {
     pub epoch_cost: f64,
     /// Per-Get software initiation cost at the origin (s).
     pub get_overhead: f64,
+    /// Origin-side cost of one notified RMA operation (s): flagging the
+    /// target's notification counter rides the same packet as the data,
+    /// so only a small software term remains — well under a passive
+    /// epoch open/close pair (Quo Vadis MPI RMA?, notified access).
+    pub notify_overhead: f64,
+
+    // ------------------------------------ persistent schedules
+    /// Fixed cost (s) of building one persistent redistribution
+    /// schedule descriptor: allocating the descriptor, hashing the
+    /// structure, publishing it to the job-level cache.
+    pub sched_build: f64,
+    /// Per-accessed-target cost (s) of the cold schedule build: block
+    /// targets, read lists and segment layout are computed once per
+    /// source this rank will touch.
+    pub sched_per_target: f64,
+    /// Cost (s) of validating a cached schedule on warm replay (shape
+    /// and epoch check against the descriptor — no recomputation).
+    pub sched_validate: f64,
 
     // ------------------------------------------------------ threading
     /// Compute-slowdown factor when a rank's core is shared with a
@@ -118,6 +136,16 @@ impl NetParams {
             win_setup: 30.0e-6,
             epoch_cost: 0.5e-6,
             get_overhead: 0.4e-6,
+            // Notified completion: the counter update piggybacks on the
+            // data packet; the origin pays a fraction of an epoch.
+            notify_overhead: 0.05e-6,
+            // Persistent-schedule terms: building a descriptor costs a
+            // few µs plus a per-target term (the planning/targets work
+            // the paper pays every resize); validating a cached one is
+            // a single hash-and-compare.
+            sched_build: 5.0e-6,
+            sched_per_target: 0.2e-6,
+            sched_validate: 1.0e-6,
             oversub_factor: 2.0,
             mt_coll_penalty: 2.0,
             mt_rma_penalty: 2.5,
@@ -155,6 +183,10 @@ impl NetParams {
             win_setup: 1e-4,
             epoch_cost: 1e-5,
             get_overhead: 1e-6,
+            notify_overhead: 1e-6,
+            sched_build: 5e-5,
+            sched_per_target: 2e-6,
+            sched_validate: 1e-5,
             oversub_factor: 2.0,
             mt_coll_penalty: 4.0,
             mt_rma_penalty: 8.0,
@@ -202,6 +234,11 @@ mod tests {
         // (the parallel-spawning premise).
         assert!(p.spawn_launch > p.spawn_per_proc);
         assert!(p.spawn_launch + p.spawn_per_proc + 8.0 * p.merge_round < 0.25);
+        // Notified completion must undercut an epoch pair, and a warm
+        // schedule validation must undercut the cold build — otherwise
+        // neither mechanism could ever pay off.
+        assert!(p.notify_overhead < p.epoch_cost);
+        assert!(p.sched_validate < p.sched_build);
     }
 
     #[test]

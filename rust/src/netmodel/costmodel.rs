@@ -140,6 +140,10 @@ pub struct ReconfigCase {
     /// Window pool warm for the source exposures (a previous resize
     /// pinned the blocks; §VI register-on-receive).
     pub warm: bool,
+    /// Persistent redistribution schedule warm for this `(NS, ND)`
+    /// shape (a previous resize between the same sizes built and
+    /// pinned it): replays charge only the validation handshake.
+    pub sched_warm: bool,
     /// Application iteration time on the NS ranks (overlap modelling;
     /// 0 disables the overlap terms).
     pub t_iter_src: f64,
@@ -158,6 +162,15 @@ pub struct ReconfigCase {
     /// background streams ride this window too — the spawn-overlap
     /// term of the lifecycle pipeline).
     pub spawn_tail: f64,
+    /// Per-wave start offsets of the spawned ranks *past the sources'
+    /// release* (ascending, deduplicated; nonzero waves only under
+    /// asynchronous spawning).  When present, the eager spawn-overlap
+    /// registration stream is priced wave by wave — it runs through
+    /// the inter-wave gaps and each wave's merge attach stalls it for
+    /// one software handshake — instead of as a single tail gate.
+    /// Empty = the legacy `max(registration, spawn_tail)` term, bit
+    /// for bit.
+    pub spawn_waves: Vec<f64>,
 }
 
 /// Structural knobs of one redistribution candidate — the shape of a
@@ -185,6 +198,15 @@ pub struct RedistShape {
     /// with the wire — only the stream's excess over the wire time (the
     /// pipeline drain) stays serial.
     pub chunk_bytes: u64,
+    /// Notified completion (`--rma-sync notify`): per-op notification
+    /// flags replace the passive epochs and teardown is local —
+    /// windows close on per-segment notify counts, without the
+    /// collective sync round or the confirmation barrier.
+    pub notify_sync: bool,
+    /// Persistent-schedule cache (`--sched-cache on`): charge the cold
+    /// schedule build (or, warm, only the validation handshake) per
+    /// structure.  Off charges nothing — the seed recompute path.
+    pub sched_cache: bool,
 }
 
 /// Decomposed cost prediction of one reconfiguration candidate.
@@ -336,6 +358,10 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
         // rank 0 alone keeps uneven shapes honest: the collective gate
         // is the true per-rank maximum.
         let chunk = s.chunk_bytes as f64;
+        // Notified teardown is local: windows close once the per-segment
+        // notify counts match, without the collective sync round or the
+        // confirmation barrier.  (Window *creation* stays collective.)
+        let tear_sync = if s.notify_sync { 0.0 } else { sync };
         let mut rest_by_rank = vec![0.0f64; c.ns];
         let mut dereg_by_rank = vec![0.0f64; c.ns];
         let mut extra_get_ops = 0.0;
@@ -381,7 +407,7 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
                 // One Get per touched segment instead of one per source.
                 extra_get_ops += ((recv / chunk).ceil() - accessed as f64).max(0.0);
             }
-            teardown += sync
+            teardown += tear_sync
                 + if s.pool {
                     // Release keeps memory pinned; drains then pre-pin
                     // the received block (register-on-receive, §VI) —
@@ -410,13 +436,31 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
             let slack = (wire - rest_max).max(0.0);
             teardown += (dereg_max - slack).max(0.0);
         }
-        let epochs = if s.lock_per_target {
+        let sync_sw = if s.notify_sync {
+            // Notified completion: one flag per posted read plus the
+            // arm of the expected count — no passive epochs at all.
+            p.notify_overhead * (accessed as f64 + 1.0)
+        } else if s.lock_per_target {
             2.0 * p.epoch_cost * accessed as f64
         } else {
             4.0 * p.epoch_cost
         };
-        let protocol = k * (epochs + (p.op_overhead + p.get_overhead) * accessed as f64)
-            + extra_get_ops * (p.op_overhead + p.get_overhead);
+        let extra_op = p.op_overhead
+            + p.get_overhead
+            + if s.notify_sync { p.notify_overhead } else { 0.0 };
+        let mut protocol = k * (sync_sw + (p.op_overhead + p.get_overhead) * accessed as f64)
+            + extra_get_ops * extra_op;
+        if s.sched_cache {
+            // Persistent redistribution schedules: the cold build pays
+            // the planning (targets, read lists, segment layout, sync
+            // plan) once per structure; warm replays charge only the
+            // validation handshake.
+            protocol += k * if c.sched_warm {
+                p.sched_validate
+            } else {
+                p.sched_build + p.sched_per_target * 2.0 * accessed as f64
+            };
+        }
         (registration, protocol, teardown)
     } else {
         // Two-sided: per-message pack CPU (bounded by the eager
@@ -450,7 +494,24 @@ pub fn predict_reconfig(p: &NetParams, c: &ReconfigCase, s: &RedistShape) -> Cos
     // whichever is longer); two-sided candidates simply wait it out.
     if c.spawn_tail > 0.0 {
         if s.one_sided {
-            registration = registration.max(c.spawn_tail);
+            if c.spawn_waves.is_empty() {
+                registration = registration.max(c.spawn_tail);
+            } else {
+                // Per-wave pricing of the eager spawn-overlap stream:
+                // registration work runs through the inter-wave gaps,
+                // and each wave's merge attach stalls the stream for
+                // one software handshake.  The collective still gates
+                // on the last wave; only the stream seconds the gaps
+                // absorbed come off the serial registration term.
+                let mut t = 0.0f64; // clock past the sources' release
+                let mut run = 0.0f64; // stream seconds already executed
+                for &w in &c.spawn_waves {
+                    run += (w - t).max(0.0);
+                    t = t.max(w) + p.op_overhead;
+                }
+                t = t.max(c.spawn_tail);
+                registration = t + (registration - run).max(0.0);
+            }
         } else {
             protocol += c.spawn_tail;
         }
@@ -809,10 +870,12 @@ mod tests {
             bulk_bytes: vec![640_000_000, 320_000_000, 8_000_000],
             tail_bytes: Vec::new(),
             warm: false,
+            sched_warm: false,
             t_iter_src: 0.05,
             t_iter_dst: 0.02,
             spawn_block: 0.0,
             spawn_tail: 0.0,
+            spawn_waves: Vec::new(),
         }
     }
 
@@ -824,6 +887,8 @@ mod tests {
             threading: false,
             pool: false,
             chunk_bytes: 0,
+            notify_sync: false,
+            sched_cache: false,
         }
     }
 
@@ -1043,6 +1108,94 @@ mod tests {
         assert!(warm.reconf_time < cold.reconf_time);
         // Warm registration is the fixed setup only: no per-byte term.
         assert!(warm.registration < 3.0 * (p.win_setup + 1e-3));
+    }
+
+    #[test]
+    fn notify_sync_replaces_epochs_and_localizes_teardown() {
+        let p = NetParams::sarteco25();
+        let epoch = predict_reconfig(&p, &case(20, 160), &shape(true));
+        let mut s = shape(true);
+        s.notify_sync = true;
+        let notify = predict_reconfig(&p, &case(20, 160), &s);
+        // Per-op flags are orders of magnitude cheaper than passive
+        // epochs at the calibrated constants, and teardown loses its
+        // collective sync round.
+        assert!(notify.protocol < epoch.protocol, "{notify:?} vs {epoch:?}");
+        assert!(notify.teardown < epoch.teardown, "{notify:?} vs {epoch:?}");
+        // Wire and registration are sync-mode independent.
+        assert_eq!(notify.wire.to_bits(), epoch.wire.to_bits());
+        assert_eq!(notify.registration.to_bits(), epoch.registration.to_bits());
+        // Per-target epochs (RMA-Lock) gain even more from notify.
+        let mut lk = shape(true);
+        lk.lock_per_target = true;
+        let lk_epoch = predict_reconfig(&p, &case(20, 160), &lk);
+        lk.notify_sync = true;
+        let lk_notify = predict_reconfig(&p, &case(20, 160), &lk);
+        assert!(
+            lk_epoch.protocol - lk_notify.protocol >= epoch.protocol - notify.protocol - 1e-15
+        );
+        // An absurd per-flag cost flips the comparison: the term is
+        // really priced, not dropped.
+        let mut slow = NetParams::sarteco25();
+        slow.notify_overhead = 1.0;
+        assert!(predict_reconfig(&slow, &case(20, 160), &s).protocol > epoch.protocol);
+    }
+
+    #[test]
+    fn sched_cache_prices_cold_build_and_warm_replay() {
+        let p = NetParams::sarteco25();
+        let off = predict_reconfig(&p, &case(20, 160), &shape(true));
+        let mut s = shape(true);
+        s.sched_cache = true;
+        let cold = predict_reconfig(&p, &case(20, 160), &s);
+        let mut c = case(20, 160);
+        c.sched_warm = true;
+        let warm = predict_reconfig(&p, &c, &s);
+        // Off charges nothing; cold pays the build, warm only the
+        // validation handshake.
+        assert!(cold.protocol > off.protocol);
+        assert!(warm.protocol > off.protocol);
+        assert!(warm.protocol < cold.protocol, "{warm:?} vs {cold:?}");
+        let k = 3.0; // structures in case()
+        assert!((warm.protocol - off.protocol - k * p.sched_validate).abs() < 1e-12);
+        let accessed = 2.0; // 20 → 160 grow: ⌈20/160⌉ + 1
+        let build = k * (p.sched_build + p.sched_per_target * 2.0 * accessed);
+        assert!((cold.protocol - off.protocol - build).abs() < 1e-12);
+        // Two-sided candidates never carry schedules: the flag is inert.
+        let mut col = shape(false);
+        col.sched_cache = true;
+        assert_eq!(
+            predict_reconfig(&p, &case(20, 160), &col).protocol.to_bits(),
+            predict_reconfig(&p, &case(20, 160), &shape(false)).protocol.to_bits()
+        );
+    }
+
+    #[test]
+    fn per_wave_spawn_pricing_refines_the_single_tail_gate() {
+        let p = NetParams::sarteco25();
+        let mut c = case(20, 160);
+        c.spawn_tail = 10.0; // far beyond any registration time
+        let single = predict_reconfig(&p, &c, &shape(true));
+        // One wave at the tail: the same gate plus one attach handshake.
+        c.spawn_waves = vec![10.0];
+        let one = predict_reconfig(&p, &c, &shape(true));
+        assert!(
+            (one.registration - (single.registration + p.op_overhead)).abs() < 1e-9,
+            "{} vs {}",
+            one.registration,
+            single.registration
+        );
+        // Many waves: every merge attach stalls the eager stream, so
+        // the gate can only grow with the wave count.
+        c.spawn_waves = (1..=8).map(|j| 10.0 * j as f64 / 8.0).collect();
+        let many = predict_reconfig(&p, &c, &shape(true));
+        assert!(many.registration >= one.registration - 1e-12);
+        assert!(many.registration >= 10.0);
+        // Empty waves stay bit-identical to the legacy tail term.
+        c.spawn_waves.clear();
+        let legacy = predict_reconfig(&p, &c, &shape(true));
+        assert_eq!(legacy.registration.to_bits(), single.registration.to_bits());
+        assert_eq!(legacy.reconf_time.to_bits(), single.reconf_time.to_bits());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::mam::{
 };
 use crate::netmodel::{NetParams, Topology};
 use crate::sam::{Sam, SamConfig};
-use crate::simmpi::{CommId, MpiProc, MpiSim, WORLD};
+use crate::simmpi::{CommId, MpiProc, MpiSim, RmaSync, WORLD};
 use crate::util::stats::median;
 
 /// Full specification of one experimental run.
@@ -77,6 +77,17 @@ pub struct RunSpec {
     /// `false` (default) is bit-identical to the pre-recalibration
     /// behaviour everywhere.
     pub recalib: bool,
+    /// `--rma-sync epoch|notify`: RMA completion synchronization.
+    /// `Epoch` (default) is the seed's passive epochs + collective
+    /// teardown, bit for bit; `Notify` completes drains on per-segment
+    /// notification counters and tears windows down locally.
+    pub rma_sync: RmaSync,
+    /// `--sched-cache on|off`: persistent redistribution schedules.
+    /// Off (default) recomputes targets/read lists per resize (seed
+    /// behaviour, bit for bit); on builds the schedule once per
+    /// `(from, to, structure, chunk)` and replays it for a validation
+    /// handshake on later resizes between the same sizes.
+    pub sched_cache: bool,
 }
 
 impl RunSpec {
@@ -100,6 +111,8 @@ impl RunSpec {
             rma_dereg: true,
             planner: PlannerMode::Fixed,
             recalib: false,
+            rma_sync: RmaSync::Epoch,
+            sched_cache: false,
         }
     }
 
@@ -118,6 +131,8 @@ impl RunSpec {
             .with_dereg(self.rma_dereg)
             .with_planner(self.planner)
             .with_recalib(self.recalib)
+            .with_sync(self.rma_sync)
+            .with_sched_cache(self.sched_cache)
     }
 
     pub fn label(&self) -> String {
@@ -183,6 +198,10 @@ pub fn resolve_spec(spec: &RunSpec) -> (RunSpec, Option<ReconfigPlan>) {
         objective: Objective::ReconfTime,
         probe: true,
         extra_chunks_kib: Vec::new(),
+        rma_sync: spec.rma_sync,
+        sched_cache: spec.sched_cache,
+        sched_warm: false,
+        future_resizes: 0,
     };
     let plan = planner::plan(&inp);
     let mut resolved = spec.clone();
@@ -439,6 +458,8 @@ mod tests {
             rma_dereg: true,
             planner: PlannerMode::Fixed,
             recalib: false,
+            rma_sync: RmaSync::Epoch,
+            sched_cache: false,
         }
     }
 
@@ -571,6 +592,37 @@ mod tests {
         assert_eq!(a.redist_time.to_bits(), b.redist_time.to_bits());
         assert_eq!(a.virt_end.to_bits(), b.virt_end.to_bits());
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn notify_and_sched_cache_runs_complete_deterministically() {
+        for (m, s) in [
+            (Method::RmaLockall, Strategy::Blocking),
+            (Method::RmaLock, Strategy::WaitDrains),
+            (Method::RmaLockall, Strategy::Threading),
+        ] {
+            let mut spec = small_spec(m, s);
+            spec.rma_sync = RmaSync::Notify;
+            spec.sched_cache = true;
+            let a = run_once(&spec);
+            let b = run_once(&spec);
+            assert!(a.redist_time > 0.0 && a.t_it_nd > 0.0, "{m:?}{s:?}: {a:?}");
+            assert_eq!(a.virt_end.to_bits(), b.virt_end.to_bits());
+            assert_eq!(a.events, b.events);
+        }
+    }
+
+    #[test]
+    fn sync_knob_is_inert_for_collective_runs() {
+        // COL never opens windows: the sync mode must not perturb a
+        // two-sided run in any observable way.
+        let mut spec = small_spec(Method::Collective, Strategy::Blocking);
+        spec.rma_sync = RmaSync::Notify;
+        let n = run_once(&spec);
+        let d = run_once(&small_spec(Method::Collective, Strategy::Blocking));
+        assert_eq!(n.virt_end.to_bits(), d.virt_end.to_bits());
+        assert_eq!(n.redist_time.to_bits(), d.redist_time.to_bits());
+        assert_eq!(n.events, d.events);
     }
 
     #[test]

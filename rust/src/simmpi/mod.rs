@@ -41,9 +41,10 @@ pub mod world;
 
 pub use proc::MpiProc;
 pub use request::ReqId;
+pub use rma::SchedStats;
 pub use types::{
-    recv_buf_real, recv_buf_virtual, CommId, MpiError, Payload, RecvBuf, WinCreateOpts, WinId,
-    ELEM_BYTES,
+    recv_buf_real, recv_buf_virtual, CommId, MpiError, Payload, RecvBuf, RmaSync, WinCreateOpts,
+    WinId, ELEM_BYTES,
 };
 pub use winpool::WinPoolStats;
 pub use world::{MpiSim, MpiWorld, WorldSnapshot, WORLD};

@@ -1387,13 +1387,161 @@ impl MpiProc {
         w.windows[win.0].free_local(my_rank);
     }
 
+    // ------------------------------------------- notified completion
+
+    /// Arm the notified teardown (`--rma-sync notify`) for this rank's
+    /// exposure in `win`: the redistribution schedule's sync plan says
+    /// exactly `expected` read operations will target it.  Pure
+    /// bookkeeping — the expectation rides the schedule descriptor, so
+    /// no time is charged here.
+    pub fn win_arm_notify(&self, win: WinId, expected: u64) {
+        let wake = {
+            let mut w = self.world.lock().unwrap();
+            let comm = w.windows[win.0].comm;
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+            w.windows[win.0].arm_notify(my_rank, expected)
+        };
+        for aid in wake {
+            self.ctx.unpark_now(aid);
+        }
+    }
+
+    /// Nonblocking probe of the notified teardown gate: has this
+    /// rank's armed notification count been reached?  (A local flag
+    /// read — the NIC delivered the counters with the data, so nothing
+    /// is charged.)
+    pub fn win_notify_ready(&self, win: WinId) -> bool {
+        let w = self.world.lock().unwrap();
+        let comm = w.windows[win.0].comm;
+        let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+        w.windows[win.0].notify_ready(my_rank).is_some()
+    }
+
+    /// Park until this rank's armed notification count is reached,
+    /// then drain to the last read's completion instant.  The Get/Rget
+    /// that satisfies the expectation wakes the parked rank.
+    fn notify_wait(&self, win: WinId) {
+        loop {
+            let state: Option<Time> = {
+                let mut w = self.world.lock().unwrap();
+                let comm = w.windows[win.0].comm;
+                let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
+                match w.windows[win.0].notify_ready(my_rank) {
+                    Some(t) => Some(t),
+                    None => {
+                        debug_assert!(
+                            w.windows[win.0].notify_expected[my_rank].is_some(),
+                            "notified free without arming — would park forever"
+                        );
+                        let aid = self.ctx.id();
+                        w.windows[win.0].notify_waiters.push((my_rank, aid));
+                        None
+                    }
+                }
+            };
+            match state {
+                Some(t) => {
+                    if t > self.ctx.now() {
+                        self.ctx.advance_until(t);
+                    }
+                    return;
+                }
+                None => self.ctx.park(),
+            }
+        }
+    }
+
+    /// Notified `MPI_Win_free`: no closing collective at all.  Each
+    /// rank waits (locally) until its own exposure's expected
+    /// notification count is reached, then deregisters — through the
+    /// per-segment teardown stream when the exposure is segmented.
+    /// Drain-only ranks (NULL exposures, zero expected reads) free
+    /// immediately; sources leave as soon as *their* data has been
+    /// drained, not when the slowest rank's has.
+    pub fn win_free_notified(&self, win: WinId) {
+        self.notify_wait(win);
+        if self.teardown_segmented(win) {
+            self.win_free_local_pipelined(win)
+        } else {
+            self.win_free_local(win)
+        }
+    }
+
+    /// Notified release of a pooled window (the notify analog of
+    /// [`MpiProc::win_release_local`]): wait for this rank's expected
+    /// notification count, pay the fixed release, and let the last
+    /// releasing rank file the slot back into the pool.
+    pub fn win_release_notified(&self, win: WinId) {
+        self.notify_wait(win);
+        self.win_release_local(win)
+    }
+
+    /// Charge the origin-side software cost of `n_ops` notified read
+    /// operations (`--rma-sync notify`): the per-op counter flag rides
+    /// the data packet, replacing the epoch open/close bookkeeping.
+    pub fn rma_notify_charge(&self, n_ops: u64) {
+        if n_ops == 0 {
+            return;
+        }
+        let dt = {
+            let mut w = self.world.lock().unwrap();
+            let dt = w.cost.params.notify_overhead * n_ops as f64;
+            w.metrics.add_counter("rma.sync_time", dt);
+            dt
+        };
+        self.ctx.advance(dt);
+    }
+
+    // ------------------------------------------ persistent schedules
+
+    /// Job-level persistent-schedule cache (mechanism half; policy
+    /// lives in `mam::schedcache`).  Looks up the descriptor keyed by
+    /// (this rank's slot in `comm`, `key`): a miss charges the cold
+    /// build — fixed term plus `targets` per-target computations — and
+    /// publishes the descriptor; a hit charges only the validation
+    /// handshake.  Returns `true` on a warm replay.
+    ///
+    /// Keyed by *rank slot*, not process id: a drain respawned into
+    /// the same slot on an oscillating trace inherits the schedule its
+    /// predecessor negotiated (persistent collectives survive process
+    /// churn at the job level).
+    pub fn sched_acquire(&self, comm: CommId, key: u64, targets: u64) -> bool {
+        let (warm, dt) = {
+            let mut w = self.world.lock().unwrap();
+            let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in comm");
+            let warm = !w.sched_pins.insert((my_rank, key));
+            let dt = if warm {
+                w.sched_stats.warm_replays += 1;
+                w.sched_stats.validate_time += w.cost.params.sched_validate;
+                w.cost.params.sched_validate
+            } else {
+                let dt = w.cost.params.sched_build
+                    + w.cost.params.sched_per_target * targets as f64;
+                w.sched_stats.cold_builds += 1;
+                w.sched_stats.build_time += dt;
+                dt
+            };
+            w.metrics.add_counter("sched.time", dt);
+            (warm, dt)
+        };
+        self.ctx.advance(dt);
+        warm
+    }
+
+    /// Snapshot of the persistent-schedule cache's accounting.
+    pub fn sched_stats(&self) -> super::rma::SchedStats {
+        self.world.lock().unwrap().sched_stats
+    }
+
     /// MPI_Win_lock (shared + MPI_MODE_NOCHECK: local bookkeeping only).
     pub fn win_lock(&self, win: WinId, _target: usize) {
         self.mpi_prologue();
         let dt = {
-            let w = self.world.lock().unwrap();
+            let mut w = self.world.lock().unwrap();
             assert!(!w.windows[win.0].freed, "lock on freed window");
-            w.cost.params.epoch_cost
+            let dt = w.cost.params.epoch_cost;
+            w.metrics.add_counter("rma.sync_time", dt);
+            dt
         };
         self.ctx.advance(dt);
     }
@@ -1402,10 +1550,12 @@ impl MpiProc {
     pub fn win_lock_all(&self, win: WinId) {
         self.mpi_prologue();
         let dt = {
-            let w = self.world.lock().unwrap();
+            let mut w = self.world.lock().unwrap();
             assert!(!w.windows[win.0].freed, "lock_all on freed window");
             // Cheaper than per-target: one local epoch + amortized setup.
-            w.cost.params.epoch_cost * 2.0
+            let dt = w.cost.params.epoch_cost * 2.0;
+            w.metrics.add_counter("rma.sync_time", dt);
+            dt
         };
         self.ctx.advance(dt);
     }
@@ -1423,7 +1573,7 @@ impl MpiProc {
         dest_off: u64,
     ) {
         self.mpi_prologue();
-        let (cpu_done, data) = {
+        let (cpu_done, data, wake) = {
             let mut w = self.world.lock().unwrap();
             let comm = w.windows[win.0].comm;
             let target_gpid = w.comm(comm).gpids[target];
@@ -1460,8 +1610,15 @@ impl MpiProc {
             // Pipelined teardown bookkeeping: the target segment may
             // deregister once this (and every other) read has landed.
             w.windows[win.0].note_read(target, disp, count, arrival);
-            (cpu_done, data)
+            // Notified completion: count the read against the target's
+            // notification record and collect any parked notified
+            // teardowns this read satisfies (no-op under epoch sync).
+            let wake = w.windows[win.0].note_notify(target, arrival);
+            (cpu_done, data, wake)
         };
+        for aid in wake {
+            self.ctx.unpark_now(aid);
+        }
         // Deliver data now (window exposures are constant during the
         // epoch); virtual-time completion is enforced by unlock.
         if let Some(src) = data {
@@ -1487,7 +1644,7 @@ impl MpiProc {
         dest_off: u64,
     ) -> ReqId {
         self.mpi_prologue();
-        let (cpu_done, rid) = {
+        let (cpu_done, rid, wake) = {
             let mut w = self.world.lock().unwrap();
             let comm = w.windows[win.0].comm;
             let target_gpid = w.comm(comm).gpids[target];
@@ -1518,6 +1675,8 @@ impl MpiProc {
             let data = w.windows[win.0].read(target, disp, count);
             // Pipelined teardown bookkeeping (as in `get`).
             w.windows[win.0].note_read(target, disp, count, complete_at);
+            // Notified completion bookkeeping (as in `get`).
+            let wake = w.windows[win.0].note_notify(target, complete_at);
             let rid = w.requests.len();
             w.requests.push(ReqState::new(
                 self.gpid,
@@ -1530,8 +1689,11 @@ impl MpiProc {
                     applied: false,
                 },
             ));
-            (cpu_done, rid)
+            (cpu_done, rid, wake)
         };
+        for aid in wake {
+            self.ctx.unpark_now(aid);
+        }
         self.ctx.advance_until(cpu_done);
         ReqId(rid)
     }
@@ -1544,7 +1706,9 @@ impl MpiProc {
         let (flush_t, epoch) = {
             let mut w = self.world.lock().unwrap();
             let t = w.windows[win.0].flush_target(self.gpid, target);
-            (t, w.cost.params.epoch_cost)
+            let epoch = w.cost.params.epoch_cost;
+            w.metrics.add_counter("rma.sync_time", epoch);
+            (t, epoch)
         };
         if let Some(t) = flush_t {
             self.ctx.advance_until(t);
@@ -1560,7 +1724,9 @@ impl MpiProc {
         let (flush_t, epoch) = {
             let mut w = self.world.lock().unwrap();
             let t = w.windows[win.0].flush_all(self.gpid);
-            (t, w.cost.params.epoch_cost)
+            let epoch = w.cost.params.epoch_cost;
+            w.metrics.add_counter("rma.sync_time", epoch);
+            (t, epoch)
         };
         if let Some(t) = flush_t {
             self.ctx.advance_until(t);

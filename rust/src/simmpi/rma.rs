@@ -16,9 +16,23 @@
 
 use std::collections::HashMap;
 
-use crate::simcluster::Time;
+use crate::simcluster::{ActivityId, Time};
 
 use super::types::Payload;
+
+/// Warm/cold accounting of the job-level persistent-schedule cache
+/// (the schedule analog of `WinPoolStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SchedStats {
+    /// Cold schedule builds (first occurrence of a shape per rank).
+    pub cold_builds: u64,
+    /// Warm replays (descriptor found — only a validation was charged).
+    pub warm_replays: u64,
+    /// Virtual seconds charged building cold descriptors.
+    pub build_time: f64,
+    /// Virtual seconds charged validating cached descriptors.
+    pub validate_time: f64,
+}
 
 /// Per-window state.
 #[derive(Clone)]
@@ -54,6 +68,21 @@ pub(crate) struct WinState {
     /// shrinks the `Win_free` per-byte deregistration rides the wire
     /// instead of serializing after it.
     pub seg_read_done: Vec<Vec<Time>>,
+    /// Notified-completion sync (`--rma-sync notify`): the number of
+    /// read operations each rank *expects* against its own exposure,
+    /// armed from the redistribution schedule's sync plan (`None` =
+    /// not armed — epoch mode, or the schedule has not arrived yet).
+    pub notify_expected: Vec<Option<u64>>,
+    /// Read operations posted so far against each rank's exposure.
+    /// Counted unconditionally (a counter bump charges nothing), so
+    /// arming order does not matter and epoch mode is unaffected.
+    pub notify_seen: Vec<u64>,
+    /// Latest read-completion instant per target rank (the notified
+    /// teardown drains to this before deregistering).
+    pub notify_last: Vec<Time>,
+    /// Ranks parked in a notified free, waiting for their expected
+    /// count — woken by the Get/Rget that reaches it.
+    pub notify_waiters: Vec<(usize, ActivityId)>,
 }
 
 impl WinState {
@@ -68,6 +97,10 @@ impl WinState {
             seg_elems: 0,
             seg_ready: (0..n).map(|_| Vec::new()).collect(),
             seg_read_done: (0..n).map(|_| Vec::new()).collect(),
+            notify_expected: vec![None; n],
+            notify_seen: vec![0; n],
+            notify_last: vec![0.0; n],
+            notify_waiters: Vec::new(),
         }
     }
 
@@ -87,6 +120,54 @@ impl WinState {
         self.seg_elems = 0;
         self.seg_ready = (0..n).map(|_| Vec::new()).collect();
         self.seg_read_done = (0..n).map(|_| Vec::new()).collect();
+        debug_assert!(self.notify_waiters.is_empty(), "reset with notify waiters");
+        self.notify_expected = vec![None; n];
+        self.notify_seen = vec![0; n];
+        self.notify_last = vec![0.0; n];
+        self.notify_waiters.clear();
+    }
+
+    /// Arm the notified teardown for `rank`'s exposure: the schedule's
+    /// sync plan says exactly `expected` read operations will target
+    /// it.  Returns the parked waiters to wake if the count is already
+    /// met (reads may have been posted before the schedule arrived).
+    pub fn arm_notify(&mut self, rank: usize, expected: u64) -> Vec<ActivityId> {
+        self.notify_expected[rank] = Some(expected);
+        self.take_notify_waiters(rank)
+    }
+
+    /// Count one posted read operation against `target`'s exposure and
+    /// fold its completion instant into the notification record.
+    /// Returns the waiters to wake when the expected count is reached.
+    pub fn note_notify(&mut self, target: usize, arrival: Time) -> Vec<ActivityId> {
+        self.notify_seen[target] += 1;
+        self.notify_last[target] = self.notify_last[target].max(arrival);
+        self.take_notify_waiters(target)
+    }
+
+    /// `Some(latest read completion)` once `rank`'s armed expectation
+    /// is met; `None` while reads are still outstanding (or unarmed).
+    pub fn notify_ready(&self, rank: usize) -> Option<Time> {
+        match self.notify_expected[rank] {
+            Some(exp) if self.notify_seen[rank] >= exp => Some(self.notify_last[rank]),
+            _ => None,
+        }
+    }
+
+    fn take_notify_waiters(&mut self, rank: usize) -> Vec<ActivityId> {
+        if self.notify_ready(rank).is_none() {
+            return Vec::new();
+        }
+        let mut woken = Vec::new();
+        self.notify_waiters.retain(|(r, aid)| {
+            if *r == rank {
+                woken.push(*aid);
+                false
+            } else {
+                true
+            }
+        });
+        woken
     }
 
     /// Number of segments of `rank`'s exposure under the window's
@@ -323,6 +404,41 @@ mod tests {
         // Registration completion is the last segment's ready time.
         assert_eq!(w.reg_done(0), Some(3.0));
         assert_eq!(w.reg_done(1), None);
+    }
+
+    #[test]
+    fn notify_counts_and_arming_commute() {
+        let mut w = WinState::new(CommId(0), 2);
+        // Reads before arming count silently.
+        assert!(w.note_notify(0, 2.0).is_empty());
+        assert!(w.note_notify(0, 5.0).is_empty());
+        assert_eq!(w.notify_ready(0), None, "unarmed ranks never report ready");
+        // Arming after the fact sees the count already met.
+        assert!(w.arm_notify(0, 2).is_empty());
+        assert_eq!(w.notify_ready(0), Some(5.0));
+        // Arming first, counting after.
+        assert!(w.arm_notify(1, 2).is_empty());
+        assert_eq!(w.notify_ready(1), None);
+        assert!(w.note_notify(1, 1.0).is_empty());
+        assert_eq!(w.notify_ready(1), None);
+        assert!(w.note_notify(1, 3.0).is_empty());
+        assert_eq!(w.notify_ready(1), Some(3.0));
+        // Zero-expectation ranks (NULL exposures) are ready at once.
+        let mut v = WinState::new(CommId(0), 1);
+        assert!(v.arm_notify(0, 0).is_empty());
+        assert_eq!(v.notify_ready(0), Some(0.0));
+    }
+
+    #[test]
+    fn notify_reset_clears_counters() {
+        let mut w = WinState::new(CommId(0), 2);
+        w.arm_notify(0, 1);
+        w.note_notify(0, 4.0);
+        w.reset(CommId(1), 2);
+        assert_eq!(w.notify_expected, vec![None, None]);
+        assert_eq!(w.notify_seen, vec![0, 0]);
+        assert_eq!(w.notify_last, vec![0.0, 0.0]);
+        assert_eq!(w.notify_ready(0), None);
     }
 
     #[test]

@@ -150,6 +150,45 @@ impl WinCreateOpts {
     }
 }
 
+/// Completion-synchronization mode of one redistribution epoch.
+///
+/// `Epoch` is the paper's passive-target pattern: drains bracket their
+/// Gets in `Win_lock`/`Win_unlock` (or `lock_all`) and teardown closes
+/// with a collective.  `Notify` models notified access (Quo Vadis MPI
+/// RMA?): each Get flags a per-target notification counter, drains
+/// complete through plain request waits, and sources tear their window
+/// down as soon as their own exposure's expected notification count is
+/// reached — no epochs, no closing collective.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RmaSync {
+    /// Passive-target epochs + collective teardown (seed behavior).
+    #[default]
+    Epoch,
+    /// Per-segment notification counters; local notified teardown.
+    Notify,
+}
+
+impl RmaSync {
+    pub fn parse(s: &str) -> Option<RmaSync> {
+        match s.to_ascii_lowercase().as_str() {
+            "epoch" | "epochs" => Some(RmaSync::Epoch),
+            "notify" | "notified" => Some(RmaSync::Notify),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RmaSync::Epoch => "epoch",
+            RmaSync::Notify => "notify",
+        }
+    }
+
+    pub fn all() -> [RmaSync; 2] {
+        [RmaSync::Epoch, RmaSync::Notify]
+    }
+}
+
 /// A destination buffer that deferred one-sided reads (Rget) write
 /// into at completion time.  `None` inside = virtual mode.
 pub type RecvBuf = Arc<Mutex<Option<Vec<f64>>>>;
@@ -203,6 +242,16 @@ mod tests {
         let c = Payload::concat(&[Payload::real(vec![1.0]), Payload::virt(2)]);
         assert!(!c.is_real());
         assert_eq!(c.elems(), 3);
+    }
+
+    #[test]
+    fn rma_sync_parse_roundtrips_labels() {
+        for s in RmaSync::all() {
+            assert_eq!(RmaSync::parse(s.label()), Some(s));
+        }
+        assert_eq!(RmaSync::parse("notified"), Some(RmaSync::Notify));
+        assert_eq!(RmaSync::parse("fence"), None);
+        assert_eq!(RmaSync::default(), RmaSync::Epoch);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! one activity at a time, the mutex is uncontended in practice — it
 //! exists to satisfy `Send`/`Sync`, not for parallelism.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::netmodel::{CostModel, NetParams, Placement, Topology};
@@ -16,7 +16,7 @@ use crate::simcluster::{ActivityId, Engine, EngineError, Time};
 use super::collective::CollState;
 use super::proc::MpiProc;
 use super::request::ReqState;
-use super::rma::WinState;
+use super::rma::{SchedStats, WinState};
 use super::types::{CommId, Payload};
 use super::winpool::{WinPool, WinPoolStats};
 
@@ -117,6 +117,15 @@ pub struct MpiWorld {
     /// Persistent window pool: registration cache + released slots
     /// (§VI; see [`crate::simmpi::winpool`]).
     pub(crate) win_pool: WinPool,
+    /// Job-level persistent-schedule descriptors, keyed by (merged
+    /// rank, schedule-key hash).  Rank-keyed rather than gpid-keyed:
+    /// the descriptor is a property of the *job's* rank slot — a drain
+    /// respawned into the same slot on an oscillating trace inherits
+    /// the schedule negotiated by its predecessor and only validates
+    /// it (the persistent-collective model of arXiv 2604.05099).
+    pub(crate) sched_pins: HashSet<(usize, u64)>,
+    /// Warm/cold accounting of the schedule cache.
+    pub(crate) sched_stats: SchedStats,
     pub(crate) colls: HashMap<(CommId, u64), CollState>,
     pub(crate) requests: Vec<ReqState>,
     /// Communicators produced by `spawn_merge` / `comm_sub`, keyed by
@@ -147,6 +156,8 @@ impl MpiWorld {
             comms: Vec::new(),
             windows: Vec::new(),
             win_pool: WinPool::new(),
+            sched_pins: HashSet::new(),
+            sched_stats: SchedStats::default(),
             colls: HashMap::new(),
             requests: Vec::new(),
             derived_comms: HashMap::new(),
@@ -186,6 +197,11 @@ impl MpiWorld {
     /// read this through the world handle after `run`).
     pub fn win_pool_stats(&self) -> WinPoolStats {
         self.win_pool.stats()
+    }
+
+    /// Warm/cold accounting of the persistent-schedule cache.
+    pub fn sched_stats(&self) -> SchedStats {
+        self.sched_stats
     }
 
     /// Create a communicator over the given gpids; returns its id.
@@ -246,6 +262,8 @@ impl MpiWorld {
             comms: self.comms.clone(),
             windows: self.windows.clone(),
             win_pool: self.win_pool.clone(),
+            sched_pins: self.sched_pins.clone(),
+            sched_stats: self.sched_stats,
             requests: self.requests.clone(),
             derived_comms: self.derived_comms.clone(),
             core_slots: self.core_slots.clone(),
@@ -264,6 +282,8 @@ impl MpiWorld {
         self.comms = snap.comms.clone();
         self.windows = snap.windows.clone();
         self.win_pool = snap.win_pool.clone();
+        self.sched_pins = snap.sched_pins.clone();
+        self.sched_stats = snap.sched_stats;
         self.requests = snap.requests.clone();
         self.derived_comms = snap.derived_comms.clone();
         self.core_slots = snap.core_slots.clone();
@@ -281,6 +301,8 @@ pub struct WorldSnapshot {
     comms: Vec<CommState>,
     windows: Vec<WinState>,
     win_pool: WinPool,
+    sched_pins: HashSet<(usize, u64)>,
+    sched_stats: SchedStats,
     requests: Vec<ReqState>,
     derived_comms: HashMap<(CommId, u64), CommId>,
     core_slots: Vec<Option<usize>>,

@@ -38,6 +38,10 @@ fn inputs(ns: usize, nd: usize, elems: usize, warm: bool) -> PlannerInputs {
         objective: Objective::ReconfTime,
         probe: false,
         extra_chunks_kib: Vec::new(),
+        rma_sync: proteo::simmpi::RmaSync::Epoch,
+        sched_cache: false,
+        sched_warm: false,
+        future_resizes: 0,
     }
 }
 
