@@ -26,7 +26,7 @@
 
 use crate::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::RunSpec;
-use crate::simmpi::RmaSync;
+use crate::simmpi::{FaultSpec, RmaSync};
 use crate::sam::SamConfig;
 use crate::util::json::Json;
 
@@ -70,6 +70,11 @@ pub struct ExperimentConfig {
     /// `(from, to, structure, chunk)` and replayed for a validation
     /// handshake.  Off recomputes per resize (seed, bit for bit).
     pub sched_cache: bool,
+    /// `"faults": "spawn=first1,mode=wave,..."` — deterministic fault
+    /// injection (same `k=v,...` grammar as `--faults`).  Absent or
+    /// inactive specs leave every run bit-identical to the healthy
+    /// path.
+    pub faults: Option<FaultSpec>,
     pub base: RunSpec,
 }
 
@@ -91,6 +96,7 @@ impl ExperimentConfig {
             recalib: false,
             rma_sync: RmaSync::Epoch,
             sched_cache: false,
+            faults: None,
             base: RunSpec::sarteco25(20, 160, Method::Collective, Strategy::Blocking),
         }
     }
@@ -120,6 +126,7 @@ impl ExperimentConfig {
         spec.recalib = self.recalib;
         spec.rma_sync = self.rma_sync;
         spec.sched_cache = self.sched_cache;
+        spec.faults = self.faults.clone();
         if self.scale > 1 {
             spec.sam.matrix_elems /= self.scale;
             spec.sam.colind_elems /= self.scale;
@@ -222,6 +229,14 @@ impl ExperimentConfig {
                 _ => return Err("sched_cache must be a bool or \"on\"/\"off\"".into()),
             };
         }
+        if let Some(f) = doc.get("faults") {
+            let f = f.as_str().ok_or("faults must be a spec string (k=v,...)")?;
+            cfg.faults = if f.is_empty() {
+                None
+            } else {
+                Some(FaultSpec::parse(f).map_err(|e| format!("bad faults: {e}"))?)
+            };
+        }
         if let Some(pairs) = doc.get("pairs").and_then(|v| v.as_arr()) {
             cfg.pairs = pairs
                 .iter()
@@ -297,6 +312,12 @@ impl ExperimentConfig {
             ("recalib", Json::Bool(self.recalib)),
             ("rma_sync", Json::str(self.rma_sync.label())),
             ("sched_cache", Json::Bool(self.sched_cache)),
+            (
+                "faults",
+                self.faults
+                    .as_ref()
+                    .map_or(Json::Null, |f| Json::str(f.to_spec_string())),
+            ),
             ("total_bytes", Json::num(self.base.sam.total_bytes() as f64)),
         ])
     }
@@ -675,6 +696,42 @@ mod tests {
         // Provenance carries the mode back out.
         let cfg = ExperimentConfig::from_str(r#"{"planner": "auto"}"#).unwrap();
         assert_eq!(cfg.to_json().get_path("planner").unwrap().as_str(), Some("auto"));
+    }
+
+    #[test]
+    fn faults_parse_propagate_and_reject_bad_values() {
+        // Default: no injection (the healthy path, bit for bit).
+        let cfg = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert!(cfg.faults.is_none());
+        assert!(cfg.spec_for(20, 40).faults.is_none());
+        // Empty string is an explicit off.
+        let cfg = ExperimentConfig::from_str(r#"{"faults": ""}"#).unwrap();
+        assert!(cfg.faults.is_none());
+        // A spec string round-trips into the per-pair run spec.
+        let cfg = ExperimentConfig::from_str(
+            r#"{"faults": "spawn=first2,mode=wave,retries=3,seed=7"}"#,
+        )
+        .unwrap();
+        let f = cfg.faults.clone().unwrap();
+        assert_eq!(f.spawn_fail_first, 2);
+        assert_eq!(f.retries, 3);
+        assert_eq!(f.seed, 7);
+        assert_eq!(
+            cfg.spec_for(20, 160).faults.unwrap().to_spec_string(),
+            f.to_spec_string()
+        );
+        // Bad values error out with the grammar in the message.
+        let err = ExperimentConfig::from_str(r#"{"faults": "spawn=backwards"}"#).unwrap_err();
+        assert!(err.contains("faults"), "{err}");
+        assert!(ExperimentConfig::from_str(r#"{"faults": 3}"#).is_err());
+        // Provenance carries the canonical spec string back out (and
+        // null when off).
+        assert_eq!(
+            cfg.to_json().get_path("faults").unwrap().as_str().map(String::from),
+            Some(f.to_spec_string())
+        );
+        let off = ExperimentConfig::from_str(r#"{}"#).unwrap();
+        assert!(matches!(off.to_json().get_path("faults"), Some(&Json::Null)));
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! `proteo chaos` — fault-injection sweep over the closed-loop RMS
+//! scenario.
+//!
+//! Each cell of the fault matrix runs the [`scenario`] trace under one
+//! deterministic [`FaultSpec`] (seeded spawn failures with
+//! retry/backoff, hung attempts, slowed registration streams, lost
+//! notify counters, stragglers) and reports how the recovery machinery
+//! fared against the healthy baseline: completed-resize rate, rollback
+//! count, spawn retries, and the makespan the faults added.  Everything
+//! is bit-deterministic — the same seed produces the same failures,
+//! the same recoveries and the same byte-identical report — so the
+//! headline cells feed the CI bench gate (`proteo bench-smoke`).
+
+use crate::mam::{Method, PlannerMode, Strategy};
+use crate::simmpi::{FaultSpec, RmaSync};
+use crate::util::json::Json;
+use crate::util::stats::fmt_seconds;
+
+use super::scenario::{run_scenario, ScenarioSpec};
+
+/// The fault matrix: `(cell name, fault spec)`.  Quick mode keeps the
+/// three headline cells; the full sweep adds per-rank, notify-loss and
+/// straggler-only columns.
+pub fn fault_matrix(quick: bool) -> Vec<(&'static str, &'static str)> {
+    let mut m = vec![
+        // Every grow's first spawn attempt fails and the retry heals it:
+        // the recovery path with zero rollbacks.
+        ("spawnfail", "spawn=first1,mode=wave"),
+        // Every spawn attempt of every dispatch fails: each grow aborts
+        // and rolls back until the RMS abandons it.
+        ("spawnfail_hard", "spawn=1.0,mode=wave,retries=1"),
+        // Compound weather: a healed spawn failure detected via hang
+        // timeout, every registration stream slowed 2x, and half the
+        // sources straggling into the resize.
+        ("mixed", "spawn=first1,mode=wave,kind=hang,reg=1.0x2.0,straggler=0.5@0.02"),
+    ];
+    if !quick {
+        m.push(("rankfail", "spawn=0.5,mode=rank"));
+        m.push(("notifyloss", "notify=1.0"));
+        m.push(("stragglers", "straggler=1.0@0.05"));
+    }
+    m
+}
+
+/// One cell's outcome.
+#[derive(Clone, Debug)]
+pub struct CellReport {
+    pub name: String,
+    /// Canonical spec string (provenance).
+    pub spec: String,
+    pub makespan: f64,
+    /// Makespan delta against the healthy baseline (can be negative:
+    /// an abandoned grow also skips the redistribution it priced).
+    pub added_makespan: f64,
+    /// Completed / scheduled resizes.
+    pub completed_rate: f64,
+    pub rollbacks: u64,
+    pub spawn_retries: u64,
+}
+
+/// Full sweep outcome.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Healthy (faults-off) makespan of the same trace.
+    pub baseline_makespan: f64,
+    pub cells: Vec<CellReport>,
+}
+
+impl ChaosReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "\n== Chaos sweep: RMS trace under fault injection (healthy makespan {}) ==\n",
+            fmt_seconds(self.baseline_makespan)
+        ));
+        out.push_str(&format!(
+            "{:<16}{:>12}{:>12}{:>11}{:>11}{:>9}\n",
+            "cell", "makespan", "added", "completed", "rollbacks", "retries"
+        ));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:<16}{:>12}{:>12}{:>10.0}%{:>11}{:>9}\n",
+                c.name,
+                fmt_seconds(c.makespan),
+                fmt_seconds(c.added_makespan),
+                100.0 * c.completed_rate,
+                c.rollbacks,
+                c.spawn_retries,
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("baseline_makespan_s", Json::num(self.baseline_makespan)),
+            (
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("name", Json::str(c.name.clone())),
+                                ("faults", Json::str(c.spec.clone())),
+                                ("makespan_s", Json::num(c.makespan)),
+                                ("added_makespan_s", Json::num(c.added_makespan)),
+                                ("completed_rate", Json::num(c.completed_rate)),
+                                ("rollbacks", Json::num(c.rollbacks as f64)),
+                                ("spawn_retries", Json::num(c.spawn_retries as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The base trace every cell runs: the fixed RMA version, so spawn,
+/// registration and sync faults all land on exercised paths.
+fn base_spec(quick: bool) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::rms_trace(quick);
+    spec.planner = PlannerMode::Fixed;
+    spec.method = Method::RmaLockall;
+    spec.strategy = Strategy::Blocking;
+    spec
+}
+
+/// Run the whole matrix (plus the healthy baseline).
+pub fn run_chaos(quick: bool) -> ChaosReport {
+    let base = base_spec(quick);
+    let healthy = run_scenario(&base);
+    let cells = fault_matrix(quick)
+        .into_iter()
+        .map(|(name, s)| {
+            let faults = FaultSpec::parse(s).expect("built-in fault matrix spec");
+            let mut sp = base.clone();
+            // Lost notify counters only exist under notified sync.
+            if name == "notifyloss" {
+                sp.rma_sync = RmaSync::Notify;
+            }
+            sp.faults = Some(faults.clone());
+            let rep = run_scenario(&sp);
+            let f = rep.faults.expect("active faults must produce a summary");
+            CellReport {
+                name: name.to_string(),
+                spec: faults.to_spec_string(),
+                makespan: rep.makespan,
+                added_makespan: rep.makespan - healthy.makespan,
+                completed_rate: f.completed_resizes as f64 / f.scheduled_resizes.max(1) as f64,
+                rollbacks: f.rollbacks,
+                spawn_retries: f.spawn_retries,
+            }
+        })
+        .collect();
+    ChaosReport { baseline_makespan: healthy.makespan, cells }
+}
+
+/// Bench-smoke entries: the recovery headline (every resize completes
+/// under a healed spawn failure), the rollback headline (the hard cell
+/// rolls back), the faulty makespan, and a soft wall-clock row.
+pub fn chaos_bench_entries(quick: bool) -> Vec<(String, f64)> {
+    let t0 = std::time::Instant::now();
+    let rep = run_chaos(quick);
+    let cell = |n: &str| {
+        rep.cells.iter().find(|c| c.name == n).expect("headline cell missing from the matrix")
+    };
+    vec![
+        ("chaos.spawnfail.completed_rate".to_string(), cell("spawnfail").completed_rate),
+        ("chaos.spawnfail.rollbacks".to_string(), cell("spawnfail_hard").rollbacks as f64),
+        ("scenario.faulty.makespan".to_string(), cell("spawnfail").makespan),
+        ("chaos.wall_s".to_string(), t0.elapsed().as_secs_f64().max(1e-9)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_specs_parse_active_and_unique() {
+        for quick in [true, false] {
+            let m = fault_matrix(quick);
+            let names: std::collections::BTreeSet<&str> = m.iter().map(|(n, _)| *n).collect();
+            assert_eq!(names.len(), m.len(), "duplicate cell names");
+            for (n, s) in m {
+                let spec = FaultSpec::parse(s).unwrap_or_else(|e| panic!("{n}: {e}"));
+                assert!(spec.is_active(), "{n}: inactive spec injects nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn quick_sweep_recovers_where_it_can_and_rolls_back_where_it_cannot() {
+        let a = run_chaos(true);
+        assert!(a.baseline_makespan.is_finite() && a.baseline_makespan > 0.0);
+        let cell = |n: &str| a.cells.iter().find(|c| c.name == n).unwrap();
+        // Healed spawn failures: all resizes complete, retries charged,
+        // nothing rolled back — and the recovery is not free.
+        let heal = cell("spawnfail");
+        assert_eq!(heal.completed_rate, 1.0, "{heal:?}");
+        assert_eq!(heal.rollbacks, 0, "{heal:?}");
+        assert!(heal.spawn_retries > 0, "{heal:?}");
+        assert!(heal.added_makespan > 0.0, "{heal:?}");
+        // Unrecoverable failures: rollbacks, nothing completes.
+        let hard = cell("spawnfail_hard");
+        assert!(hard.rollbacks > 0, "{hard:?}");
+        assert_eq!(hard.completed_rate, 0.0, "{hard:?}");
+        // Deterministic byte for byte.
+        let b = run_chaos(true);
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+}

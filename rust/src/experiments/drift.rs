@@ -212,6 +212,7 @@ impl DriftScenario {
             sched_cache: false,
             sched_warm: false,
             future_resizes: 0,
+            fail_p: 0.0,
         }
     }
 }

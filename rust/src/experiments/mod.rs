@@ -391,6 +391,7 @@ pub fn by_name(name: &str, opts: &FigOptions) -> Option<FigureTable> {
 }
 
 pub mod ablation;
+pub mod chaos;
 pub mod drift;
 pub mod scenario;
 pub mod smoke;

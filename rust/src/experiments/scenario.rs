@@ -41,10 +41,19 @@ use crate::monitor::Metrics;
 use crate::netmodel::{costmodel, NetParams, Topology};
 use crate::rms::{Policy, Rms};
 use crate::sam::{Sam, SamConfig};
-use crate::simmpi::{CommId, MpiProc, MpiSim, Payload, RmaSync, ELEM_BYTES, WORLD};
+use crate::simmpi::{
+    CommId, FaultPlan, FaultSpec, MpiProc, MpiSim, Payload, RmaSync, ELEM_BYTES, WORLD,
+};
 use crate::util::benchkit::FigureTable;
 use crate::util::json::Json;
 use crate::util::stats::fmt_seconds;
+
+/// Fault-injection re-queue policy: an aborted resize is re-dispatched
+/// by the RMS up to this many times before being abandoned…
+const MAX_DISPATCHES: u64 = 3;
+/// …and between dispatches the job breathes this many application
+/// iterations on the layout it still owns.
+const REQUEUE_ITERS: u64 = 2;
 
 /// One rigid-job event of the trace, applied right before the RMS
 /// checkpoint it is attached to.
@@ -107,6 +116,12 @@ pub struct ScenarioSpec {
     /// bit-identical to the static harness.
     pub recalib: bool,
     pub seed: u64,
+    /// Deterministic fault injection (`--faults`): spawn failures with
+    /// retry/backoff at every grow, abort-and-rollback when the retry
+    /// budget runs out (the RMS re-queues the resize, re-anchored at
+    /// the size the job actually holds).  `None` (default) executes
+    /// the healthy paths bit for bit.
+    pub faults: Option<FaultSpec>,
 }
 
 impl ScenarioSpec {
@@ -166,6 +181,7 @@ impl ScenarioSpec {
             spawn_cost: 0.25,
             recalib: false,
             seed: 0xC0FFEE,
+            faults: None,
         }
     }
 
@@ -352,6 +368,7 @@ fn resolve_resize(
         sched_cache: spec.sched_cache,
         sched_warm,
         future_resizes,
+        fail_p: spec.faults.as_ref().map_or(0.0, |f| f.spawn_fail_p),
     };
     if spec.planner == PlannerMode::Auto {
         let plan = planner::plan(&inputs);
@@ -416,6 +433,13 @@ pub struct ResizeReport {
     /// the registration cache.  Distinguishes "warm" from "never
     /// registers" (COL without the pool) in the report.
     pub warm: bool,
+    /// Times the RMS dispatched this resize (1 when healthy; >1 when
+    /// aborted dispatches forced re-queues; 0 when an earlier skipped
+    /// resize already left the job at this target).
+    pub dispatches: u64,
+    /// The resize eventually went through (false: abandoned after the
+    /// dispatch cap, or a no-op re-target).
+    pub completed: bool,
 }
 
 impl ResizeReport {
@@ -440,6 +464,21 @@ impl ResizeReport {
     }
 }
 
+/// Fault-injection outcome of a scenario (`--faults`): how the
+/// recovery machinery fared across the whole trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// Resizes that aborted and rolled back (caches poisoned, app
+    /// resumed on the old communicator) — summed over re-dispatches.
+    pub rollbacks: u64,
+    /// Failed spawn attempts that were retried within a dispatch.
+    pub spawn_retries: u64,
+    /// Resizes that eventually went through.
+    pub completed_resizes: u64,
+    /// Resizes the RMS trace scheduled.
+    pub scheduled_resizes: u64,
+}
+
 /// Full scenario outcome.
 #[derive(Clone, Debug)]
 pub struct ScenarioReport {
@@ -452,6 +491,10 @@ pub struct ScenarioReport {
     pub events: u64,
     /// Engine observability counters (`engine.*`), in a fixed order.
     pub engine: Vec<(String, u64)>,
+    /// Present only when fault injection was active — the healthy
+    /// report (text and JSON) stays byte-identical to the fault-free
+    /// build.
+    pub faults: Option<FaultSummary>,
 }
 
 impl ScenarioReport {
@@ -491,16 +534,35 @@ impl ScenarioReport {
             self.total_iters,
             self.resizes.len()
         ));
+        if let Some(f) = &self.faults {
+            out.push_str(&format!(
+                "faults: {} rollback(s), {} spawn retrie(s), {}/{} resizes completed\n",
+                f.rollbacks, f.spawn_retries, f.completed_resizes, f.scheduled_resizes
+            ));
+        }
         out
     }
 
     /// JSON export (CI artifacts, determinism checks).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut top = vec![
             ("name", Json::str(self.name.clone())),
             ("label", Json::str(self.label.clone())),
             ("makespan_s", Json::num(self.makespan)),
             ("total_iters", Json::num(self.total_iters as f64)),
+        ];
+        if let Some(f) = &self.faults {
+            top.push((
+                "faults",
+                Json::obj(vec![
+                    ("rollbacks", Json::num(f.rollbacks as f64)),
+                    ("spawn_retries", Json::num(f.spawn_retries as f64)),
+                    ("completed_resizes", Json::num(f.completed_resizes as f64)),
+                    ("scheduled_resizes", Json::num(f.scheduled_resizes as f64)),
+                ]),
+            ));
+        }
+        top.extend(vec![
             (
                 "engine",
                 Json::Obj(
@@ -537,12 +599,20 @@ impl ScenarioReport {
                             } else if r.warm {
                                 fields.push(("reg_gbps", Json::str("warm")));
                             }
+                            // Dispatch accounting exists only under
+                            // fault injection: the healthy JSON stays
+                            // byte-identical to the fault-free build.
+                            if self.faults.is_some() {
+                                fields.push(("dispatches", Json::num(r.dispatches as f64)));
+                                fields.push(("completed", Json::Bool(r.completed)));
+                            }
                             Json::obj(fields)
                         })
                         .collect(),
                 ),
             ),
-        ])
+        ]);
+        Json::obj(top)
     }
 }
 
@@ -566,6 +636,9 @@ struct ScenCtx {
     /// choices (the belief replaces the plan, not the configuration).
     rma_sync: RmaSync,
     sched_cache: bool,
+    /// Spawn-failure probability the planner prices retries with
+    /// (0.0 when faults are off — the healthy planner, bit for bit).
+    fail_p: f64,
 }
 
 /// Resolve one resize analytically from a live belief (no probes —
@@ -599,6 +672,7 @@ fn live_resolve(
         // credit stays with the static schedule, which knows the trace.
         sched_warm: false,
         future_resizes: 0,
+        fail_p: ctx.fail_p,
     };
     let plan = planner::plan(&inp);
     let cfg = plan
@@ -685,6 +759,9 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     let cpn = spec.cores_per_node.max(1);
     let topo = Topology::new_cyclic(peak.div_ceil(cpn).max(1), cpn);
     let mut sim = MpiSim::new(topo, spec.net.clone());
+    if let Some(f) = &spec.faults {
+        sim.set_faults(FaultPlan::new(f.clone()));
+    }
     let world = sim.world();
     let recalib_live = spec.recalib && spec.planner == PlannerMode::Auto;
     let ctx = Arc::new(ScenCtx {
@@ -699,6 +776,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         recalib_live,
         rma_sync: spec.rma_sync,
         sched_cache: spec.sched_cache,
+        fail_p: spec.faults.as_ref().map_or(0.0, |f| f.spawn_fail_p),
     });
     let base_cfg = ReconfigCfg::version(spec.method, spec.strategy)
         .with_spawn(spec.spawn_strategy, spec.spawn_cost)
@@ -791,6 +869,10 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
                 reg_secs,
                 setup_secs,
                 warm: registers && reg_secs == 0.0,
+                dispatches: m
+                    .mark_at(&format!("scen.r{}.dispatches", r.index))
+                    .unwrap_or(1.0) as u64,
+                completed: m.mark_at(&format!("scen.r{}.completed", r.index)).is_some(),
             }
         })
         .collect();
@@ -807,6 +889,12 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     .iter()
     .map(|k| (k.to_string(), m.counter(k).unwrap_or(0.0) as u64))
     .collect::<Vec<_>>();
+    let faults = spec.faults.as_ref().filter(|f| f.is_active()).map(|_| FaultSummary {
+        rollbacks: m.counter("faults.rollbacks").unwrap_or(0.0) as u64,
+        spawn_retries: m.counter("faults.spawn_retries").unwrap_or(0.0) as u64,
+        completed_resizes: reports.iter().filter(|r| r.completed).count() as u64,
+        scheduled_resizes: reports.len() as u64,
+    });
     ScenarioReport {
         name: spec.name.clone(),
         label: spec.version_label(),
@@ -815,6 +903,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         resizes: reports,
         events: m.counter("engine.events").unwrap_or(0.0) as u64,
         engine,
+        faults,
     }
 }
 
@@ -837,6 +926,21 @@ fn app_loop(
     loop {
         if next < ctx.resizes.len() && count >= ctx.resizes[next].at_iter {
             let r = &ctx.resizes[next];
+            // Fault-aware re-anchoring: an earlier abandoned resize
+            // leaves the job on a stale size, so each dispatch starts
+            // from the size the job actually holds — and a resize whose
+            // target the job already holds is a no-op.  Fault-free runs
+            // always see `from_now == r.from`.
+            let from_now = p.size(comm);
+            if from_now == r.to {
+                p.metrics(|m| {
+                    m.mark_min(&format!("scen.r{}.start", r.index), p.now());
+                    m.mark_max(&format!("scen.r{}.end", r.index), p.now());
+                    m.mark_max(&format!("scen.r{}.dispatches", r.index), 0.0);
+                });
+                next += 1;
+                continue;
+            }
             // Live re-resolution: the belief — replicated bit-identically
             // on every rank — replaces the statically scheduled plan.
             let (exec_cfg, live_pred) = match recal.as_ref() {
@@ -845,7 +949,7 @@ fn app_loop(
                         ctx,
                         rc.params(),
                         &ctx.decls,
-                        r.from,
+                        from_now,
                         r.to,
                         rc.chunk_candidates(),
                     );
@@ -874,33 +978,63 @@ fn app_loop(
                     + m.counter("rma.sync_time").unwrap_or(0.0);
                 m.mark_min(&format!("scen.r{}.setup0", r.index), setup);
             });
-            mam.cfg = exec_cfg.clone();
-            let ctx3 = ctx.clone();
-            let ridx = next;
-            let body_cfg = exec_cfg;
-            let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
-                Arc::new(move |dp: MpiProc, merged: CommId| {
-                    drain_entry(&ctx3, dp, merged, ridx, body_cfg.clone());
-                });
-            let status = mam.reconfigure(p, comm, r.to, body);
-            let mut n_it = 0u64;
-            if status == MamStatus::InProgress {
-                let mut local_done = false;
-                loop {
-                    let (_dur, all_done) = sam.iteration_with_flag(p, comm, local_done);
-                    if !local_done {
+            let mut dispatch: u64 = 0;
+            let outcome = loop {
+                mam.cfg = exec_cfg.clone();
+                mam.set_fault_ctx(r.index as u64, dispatch);
+                let ctx3 = ctx.clone();
+                let ridx = next;
+                let body_cfg = exec_cfg.clone();
+                let body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                    Arc::new(move |dp: MpiProc, merged: CommId| {
+                        drain_entry(&ctx3, dp, merged, ridx, from_now, body_cfg.clone());
+                    });
+                let status = mam.reconfigure(p, comm, r.to, body);
+                if status == MamStatus::Aborted {
+                    // Rollback: the schedule/window caches are poisoned
+                    // and the app still owns the old communicator.  The
+                    // RMS re-queues the resize after a breather, up to
+                    // the dispatch cap.
+                    dispatch += 1;
+                    if dispatch >= MAX_DISPATCHES {
+                        break None;
+                    }
+                    for _ in 0..REQUEUE_ITERS {
+                        let _ = sam.iteration(p, comm);
                         count += 1;
-                        n_it += 1;
-                        if mam.checkpoint(p) == MamStatus::Completed {
-                            local_done = true;
+                    }
+                    continue;
+                }
+                let mut n_it = 0u64;
+                if status == MamStatus::InProgress {
+                    let mut local_done = false;
+                    loop {
+                        let (_dur, all_done) = sam.iteration_with_flag(p, comm, local_done);
+                        if !local_done {
+                            count += 1;
+                            n_it += 1;
+                            if mam.checkpoint(p) == MamStatus::Completed {
+                                local_done = true;
+                            }
+                        }
+                        if all_done {
+                            break;
                         }
                     }
-                    if all_done {
-                        break;
-                    }
                 }
-            }
-            let out = mam.finish(p, comm);
+                break Some((mam.finish(p, comm), n_it));
+            };
+            let Some((out, n_it)) = outcome else {
+                // Abandoned after the dispatch cap: record the failed
+                // dispatches and move on — the job keeps the layout it
+                // owns, and later resizes re-anchor on it.
+                p.metrics(|m| {
+                    m.mark_max(&format!("scen.r{}.dispatches", r.index), dispatch as f64);
+                    m.mark_max(&format!("scen.r{}.end", r.index), p.now());
+                });
+                next += 1;
+                continue;
+            };
             let Some(c) = out.app_comm else {
                 return; // retired by the shrink
             };
@@ -911,6 +1045,8 @@ fn app_loop(
             p.metrics(|m| {
                 m.mark_max(&format!("scen.r{}.end", r.index), p.now());
                 m.mark_max(&format!("scen.r{}.n_it", r.index), n_it as f64);
+                m.mark_max(&format!("scen.r{}.dispatches", r.index), (dispatch + 1) as f64);
+                m.mark_max(&format!("scen.r{}.completed", r.index), 1.0);
                 let rb = m.counter("rma.reg_bytes").unwrap_or(0.0);
                 let rt = m.counter("rma.reg_time").unwrap_or(0.0);
                 m.mark_max(&format!("scen.r{}.reg_bytes1", r.index), rb);
@@ -946,9 +1082,16 @@ fn app_loop(
 /// captured in the drain body, since a live-resolved choice is not the
 /// scheduled one), adopt the iteration count, continue as a regular
 /// rank (possibly through further resizes).
-fn drain_entry(ctx: &Arc<ScenCtx>, dp: MpiProc, merged: CommId, ridx: usize, cfg: ReconfigCfg) {
+fn drain_entry(
+    ctx: &Arc<ScenCtx>,
+    dp: MpiProc,
+    merged: CommId,
+    ridx: usize,
+    from: usize,
+    cfg: ReconfigCfg,
+) {
     let r = &ctx.resizes[ridx];
-    let mam = Mam::drain_join(&dp, merged, r.from, r.to, &ctx.decls, cfg);
+    let mam = Mam::drain_join(&dp, merged, from, r.to, &ctx.decls, cfg);
     let sam = Sam::new(ctx.sam.clone(), ctx.seed, dp.gpid());
     let count = sync_count(&dp, merged, 0);
     dp.metrics(|m| {
@@ -1281,5 +1424,66 @@ mod tests {
         for r in &rep.resizes {
             assert!(r.n_it >= 1.0, "resize {} overlapped nothing: {r:?}", r.index);
         }
+    }
+
+    #[test]
+    fn recoverable_faults_complete_every_resize_and_report_retries() {
+        // Every grow's first spawn attempt fails; the second succeeds
+        // within the default retry budget, so no resize rolls back.
+        let mut spec = ScenarioSpec::rms_trace(true);
+        spec.planner = PlannerMode::Fixed;
+        spec.faults = Some(FaultSpec::parse("spawn=first1,mode=wave").unwrap());
+        let rep = run_scenario(&spec);
+        let f = rep.faults.clone().expect("fault summary must be present when faults are on");
+        assert_eq!(f.scheduled_resizes, 5);
+        assert_eq!(f.completed_resizes, 5, "{rep:?}");
+        assert_eq!(f.rollbacks, 0, "{f:?}");
+        assert!(f.spawn_retries > 0, "{f:?}");
+        for r in &rep.resizes {
+            assert_eq!(r.dispatches, 1, "{r:?}");
+            assert!(r.completed, "{r:?}");
+        }
+        let j = rep.to_json().to_pretty();
+        assert!(j.contains("\"rollbacks\"") && j.contains("\"dispatches\""), "{j}");
+        // Faults off: no fault keys anywhere — the JSON shape is the
+        // fault-free build's, byte for byte.
+        let mut off = ScenarioSpec::rms_trace(true);
+        off.planner = PlannerMode::Fixed;
+        let rep = run_scenario(&off);
+        assert!(rep.faults.is_none());
+        let j = rep.to_json().to_pretty();
+        assert!(!j.contains("rollbacks") && !j.contains("dispatches"), "{j}");
+    }
+
+    #[test]
+    fn unrecoverable_faults_requeue_retarget_and_the_job_still_finishes() {
+        // Every spawn attempt of every dispatch fails: each grow aborts
+        // and rolls back MAX_DISPATCHES times, then is abandoned; the
+        // shrink to a size the job already holds becomes a no-op; the
+        // job completes its whole iteration budget on the layout it
+        // owns.  No panic, no deadlock, deterministic output.
+        let mut spec = ScenarioSpec::rms_trace(true);
+        spec.planner = PlannerMode::Fixed;
+        spec.faults = Some(FaultSpec::parse("spawn=1.0,mode=wave,retries=1").unwrap());
+        let a = run_scenario(&spec);
+        assert!(a.makespan.is_finite() && a.makespan > 0.0);
+        let f = a.faults.clone().unwrap();
+        assert!(f.rollbacks > 0, "{f:?}");
+        assert_eq!(f.completed_resizes, 0, "nothing can spawn: {f:?}");
+        assert_eq!(f.scheduled_resizes, 5);
+        // r0 (8→16) is dispatched up to the cap, each dispatch rolls
+        // back; r1 (16→8) finds the job already at 8 and is a no-op.
+        assert_eq!(a.resizes[0].dispatches, MAX_DISPATCHES, "{:?}", a.resizes[0]);
+        assert!(!a.resizes[0].completed);
+        assert_eq!(a.resizes[1].dispatches, 0, "{:?}", a.resizes[1]);
+        // The abandoned resize's span covers its failed dispatches:
+        // that is the rollback tax the report carries.
+        assert!(a.resizes[0].observed_reconf > 0.0, "{:?}", a.resizes[0]);
+        let b = run_scenario(&spec);
+        assert_eq!(
+            a.to_json().to_pretty(),
+            b.to_json().to_pretty(),
+            "faulty scenarios must stay byte-deterministic"
+        );
     }
 }

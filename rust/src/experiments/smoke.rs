@@ -168,6 +168,11 @@ pub fn collect(quick: bool) -> Json {
     // and recalibrating arms, plus the episode index at which the
     // recalibrated predictions settle under the 15% error bar.
     entries.extend(super::drift::drift_bench_entries(quick));
+
+    // Chaos benchmarks: the fault-injection recovery headlines — the
+    // completed-resize rate and faulty makespan under healed spawn
+    // failures, and the rollback count of the unrecoverable cell.
+    entries.extend(super::chaos::chaos_bench_entries(quick));
     entries.push(("engine.smoke_total.wall_s".to_string(), wall_s(t_all)));
 
     let obj: Vec<(&str, Json)> = vec![
@@ -247,6 +252,16 @@ mod tests {
                 .and_then(|v| v.as_f64())
                 .unwrap();
             assert!((1.0..=5.0).contains(&k), "{name}: converge_resizes {k}");
+        }
+        // Chaos headlines: recovery rate, rollback count, faulty
+        // makespan (the soft chaos.wall_s rides along too).
+        for key in [
+            "chaos.spawnfail.completed_rate",
+            "chaos.spawnfail.rollbacks",
+            "scenario.faulty.makespan",
+            "chaos.wall_s",
+        ] {
+            assert!(entries.contains_key(key), "missing {key}");
         }
     }
 

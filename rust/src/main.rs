@@ -6,6 +6,8 @@
 //! proteo run --ns 20 --nd 160 --planner auto   # cost-model-driven choice
 //! proteo scenario --quick --compare            # closed-loop RMS trace
 //! proteo scenario --drift all --quick          # static vs recalibrating planner
+//! proteo scenario --faults spawn=first1 --quick  # deterministic fault injection
+//! proteo chaos --quick       # fault-matrix sweep: recovery vs rollback
 //! proteo ablation single-window
 //! proteo ablation register-sweep --ns 20 --nd 160
 //! proteo ablation sched-cache    # cold build vs warm replay vs cache off
@@ -16,13 +18,13 @@
 use std::process::ExitCode;
 
 use proteo::config::ExperimentConfig;
-use proteo::experiments::{self, ablation, drift, scenario, smoke, FigOptions};
+use proteo::experiments::{self, ablation, chaos, drift, scenario, smoke, FigOptions};
 use proteo::linalg::EllMatrix;
 use proteo::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use proteo::netmodel::NetParams;
 use proteo::proteo::{run_median, RunSpec};
 use proteo::runtime::{artifacts_dir, CgRuntime};
-use proteo::simmpi::RmaSync;
+use proteo::simmpi::{FaultSpec, RmaSync};
 use proteo::util::benchkit::compare_bench;
 use proteo::util::cli::{parse_toggle, Args, Cli, Command};
 use proteo::util::json::Json;
@@ -62,6 +64,7 @@ fn cli() -> Cli {
                 .opt("recalib", "off", "online NetParams recalibration (auto planner): on | off")
                 .opt("rma-sync", "epoch", "RMA completion sync: epoch | notify")
                 .opt("sched-cache", "off", "persistent redistribution schedules: on | off")
+                .opt("faults", "", "deterministic fault injection spec: k=v,... or @file")
                 .flag("json", "emit the result as JSON"),
             Command::new(
                 "scenario",
@@ -76,10 +79,17 @@ fn cli() -> Cli {
             .opt("recalib", "off", "online NetParams recalibration (auto planner): on | off")
             .opt("rma-sync", "epoch", "RMA completion sync: epoch | notify")
             .opt("sched-cache", "off", "persistent redistribution schedules: on | off")
+            .opt("faults", "", "deterministic fault injection spec: k=v,... or @file")
             .opt("drift", "", "run a drift benchmark instead: miscal | hetero | congest | all")
             .opt("seed", "12648430", "base RNG seed")
             .flag("quick", "CI-sized workload (10000x smaller problem)")
             .flag("compare", "also run the fixed anchor versions and print makespans")
+            .flag("json", "emit the report as JSON"),
+            Command::new(
+                "chaos",
+                "fault-injection sweep: the closed-loop RMS trace under a matrix of fault specs",
+            )
+            .flag("quick", "CI-sized workload (10000x smaller problem)")
             .flag("json", "emit the report as JSON"),
             Command::new(
                 "ablation",
@@ -132,6 +142,21 @@ fn parse_pairs(s: &str) -> Result<Vec<(usize, usize)>, String> {
             Ok((ns, nd))
         })
         .collect()
+}
+
+/// Parse a `--faults` argument: empty = off, `@path` reads the spec
+/// from a file (trailing whitespace/newline trimmed), anything else is
+/// the `k=v,...` spec itself.
+fn parse_faults(args: &Args) -> Result<Option<FaultSpec>, String> {
+    let s = args.get("faults").unwrap_or("");
+    if s.is_empty() {
+        return Ok(None);
+    }
+    let text = match s.strip_prefix('@') {
+        Some(path) => std::fs::read_to_string(path).map_err(|e| format!("--faults {path}: {e}"))?,
+        None => s.to_string(),
+    };
+    FaultSpec::parse(text.trim()).map(Some).map_err(|e| format!("bad --faults: {e}"))
 }
 
 fn fig_options(args: &Args) -> Result<FigOptions, String> {
@@ -244,6 +269,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             .get("sched-cache")
             .and_then(parse_toggle)
             .ok_or("bad --sched-cache (on | off)")?;
+        spec.faults = parse_faults(args)?;
         if let Some(seed) = args.get("seed").and_then(|s| s.parse::<u64>().ok()) {
             spec.seed = seed;
         }
@@ -378,6 +404,7 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
         .get("sched-cache")
         .and_then(parse_toggle)
         .ok_or("bad --sched-cache (on | off)")?;
+    spec.faults = parse_faults(args)?;
     if spec.planner == PlannerMode::Fixed
         && !proteo::mam::is_valid_version(spec.method, spec.strategy)
     {
@@ -398,6 +425,16 @@ fn cmd_scenario(args: &Args) -> Result<(), String> {
         println!("{}", report.to_json().to_pretty());
     } else {
         println!("{}", report.render());
+    }
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> Result<(), String> {
+    let report = chaos::run_chaos(args.flag("quick"));
+    if args.flag("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render());
     }
     Ok(())
 }
@@ -625,6 +662,7 @@ fn main() -> ExitCode {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
         "scenario" => cmd_scenario(&args),
+        "chaos" => cmd_chaos(&args),
         "ablation" => cmd_ablation(&args),
         "cg" => cmd_cg(&args),
         "engine-stress" => cmd_engine_stress(&args),

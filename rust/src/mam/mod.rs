@@ -40,6 +40,8 @@
 //! * [`recalib`]   — online recalibration of the planner's constants
 //!   from the spans/counters each resize already measures, plus the
 //!   measured-throughput adaptive chunk rule (`--recalib on`),
+//! * [`resilience`] — spawn retry/backoff and the abort-and-rollback
+//!   recovery path exercised under `--faults`,
 //! * [`reconfig`]  — the reconfiguration driver tying it together.
 
 pub mod blockdist;
@@ -48,6 +50,7 @@ pub mod planner;
 pub mod recalib;
 pub mod reconfig;
 pub mod registry;
+pub mod resilience;
 pub mod rma;
 pub mod schedcache;
 pub mod spawn;

@@ -44,8 +44,10 @@
 use std::sync::{Arc, Mutex};
 
 use crate::netmodel::{
-    predict_reconfig, CostPrediction, NetParams, ReconfigCase, RedistShape, Topology,
+    expected_spawn_retry_tail, predict_reconfig, CostPrediction, NetParams, ReconfigCase,
+    RedistShape, Topology,
 };
+use crate::simcluster::faults::FaultSpec;
 use crate::simcluster::ActivityId;
 use crate::simmpi::{
     CommId, MpiProc, MpiSim, MpiWorld, Payload, RmaSync, WorldSnapshot, ELEM_BYTES, WORLD,
@@ -264,6 +266,13 @@ pub struct PlannerInputs {
     /// small grow can value warm-pool / warm-schedule futures it pays
     /// for now and harvests later.
     pub future_resizes: u32,
+    /// Per-attempt probability that a grow's spawn wave fails
+    /// (`--faults spawn=<p>`; 0 = healthy, the seed behaviour).  Grow
+    /// candidates price the expected retry tail — detection latency at
+    /// the strategy's observation point plus backoff plus the
+    /// re-dispatched block — so late-detecting Async loses its edge
+    /// over Sequential/Parallel as the failure rate climbs.
+    pub fail_p: f64,
 }
 
 /// Price one candidate with the closed-form model.
@@ -301,7 +310,31 @@ pub fn predict_candidate(inp: &PlannerInputs, cand: &Candidate) -> CostPredictio
             .collect();
         waves.sort_by(|a, b| a.partial_cmp(b).unwrap());
         waves.dedup();
-        (sched.source_block, tail, waves)
+        let mut block = sched.source_block;
+        if inp.fail_p > 0.0 {
+            // Expected retry tail under the configured wave-failure
+            // probability, using the retry discipline's defaults
+            // (`FaultSpec`): Sequential notices at the first child's
+            // slot, Parallel at the end of the blocking launch, Async
+            // only once the last child was due up.
+            let spec = FaultSpec::default();
+            let detect = match cand.spawn_strategy {
+                SpawnStrategy::Sequential => {
+                    sched.source_block / (inp.nd - inp.ns).max(1) as f64
+                }
+                SpawnStrategy::Parallel => sched.source_block,
+                SpawnStrategy::Async => sched.last_child_up(),
+            };
+            block += expected_spawn_retry_tail(
+                inp.fail_p,
+                spec.retries,
+                detect,
+                spec.backoff,
+                spec.backoff_cap,
+                sched.source_block,
+            );
+        }
+        (block, tail, waves)
     } else {
         (0.0, 0.0, Vec::new())
     };
@@ -853,6 +886,7 @@ pub fn resolve_internal(
     ns: usize,
     nd: usize,
     base: &ReconfigCfg,
+    fail_p: f64,
 ) -> ReconfigCfg {
     let inp = PlannerInputs {
         decls,
@@ -871,6 +905,7 @@ pub fn resolve_internal(
         sched_cache: base.sched_cache,
         sched_warm: false,
         future_resizes: 0,
+        fail_p,
     };
     // The planner picks the version; the session-level sync/cache
     // knobs ride through from the configured base.
@@ -916,7 +951,39 @@ mod tests {
             sched_cache: false,
             sched_warm: false,
             future_resizes: 0,
+            fail_p: 0.0,
         }
+    }
+
+    #[test]
+    fn failure_probability_taxes_late_detecting_strategies_hardest() {
+        let cand = |s| Candidate {
+            method: Method::Collective,
+            strategy: Strategy::Blocking,
+            spawn_strategy: s,
+            win_pool: WinPoolPolicy::off(),
+            rma_chunk_kib: 0,
+        };
+        let healthy = tiny_inputs(4, 8, false);
+        let mut lossy = tiny_inputs(4, 8, false);
+        lossy.fail_p = 0.9;
+        let s0 = predict_candidate(&healthy, &cand(SpawnStrategy::Sequential));
+        let s1 = predict_candidate(&lossy, &cand(SpawnStrategy::Sequential));
+        let a0 = predict_candidate(&healthy, &cand(SpawnStrategy::Async));
+        let a1 = predict_candidate(&lossy, &cand(SpawnStrategy::Async));
+        let seq_tax = s1.reconf_time - s0.reconf_time;
+        let asy_tax = a1.reconf_time - a0.reconf_time;
+        assert!(seq_tax > 0.0, "retry tail must cost something: {seq_tax}");
+        assert!(
+            asy_tax > seq_tax,
+            "Async detects failures last and must pay the heavier tail: {asy_tax} vs {seq_tax}"
+        );
+        // Shrinks have no spawn phase — fail_p prices nothing.
+        let mut shrink = tiny_inputs(8, 4, false);
+        shrink.fail_p = 0.9;
+        let sh0 = predict_candidate(&tiny_inputs(8, 4, false), &cand(SpawnStrategy::Sequential));
+        let sh1 = predict_candidate(&shrink, &cand(SpawnStrategy::Sequential));
+        assert_eq!(sh0.reconf_time.to_bits(), sh1.reconf_time.to_bits());
     }
 
     #[test]
@@ -1261,8 +1328,8 @@ mod tests {
     fn internal_resolution_is_deterministic_and_resolved() {
         let inp = tiny_inputs(4, 8, false);
         let base = ReconfigCfg { planner: PlannerMode::Auto, ..ReconfigCfg::default() };
-        let a = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base);
-        let b = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base);
+        let a = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base, 0.0);
+        let b = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base, 0.0);
         assert_eq!(a.planner, PlannerMode::Fixed, "resolution must terminate");
         assert_eq!(a.method, b.method);
         assert_eq!(a.strategy, b.strategy);
@@ -1393,7 +1460,7 @@ mod tests {
             sched_cache: true,
             ..ReconfigCfg::default()
         };
-        let r = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base);
+        let r = resolve_internal(&inp.net, 4, inp.decls.clone(), 4, 8, &base, 0.0);
         assert_eq!(r.planner, PlannerMode::Fixed);
         assert_eq!(r.rma_sync, RmaSync::Notify);
         assert!(r.sched_cache);

@@ -28,14 +28,16 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::simcluster::faults::FaultPlan;
 use crate::simcluster::Time;
 use crate::simmpi::{CommId, MpiProc, Payload, ReqId, RmaSync};
 
 use super::collective as col;
 use super::planner::{self, PlannerMode};
 use super::registry::{DataDecl, DataKind, Registry};
+use super::resilience;
 use super::rma::{self, RmaInit};
-use super::schedcache::SchedCache;
+use super::schedcache::{SchedCache, SchedKey};
 use super::spawn::SpawnStrategy;
 use super::winpool::{self, WinPoolPolicy};
 use super::{Method, Strategy};
@@ -265,6 +267,11 @@ pub enum MamStatus {
     InProgress,
     /// Redistribution done; call [`Mam::finish`].
     Completed,
+    /// The resize unwound to the previous layout (`--faults`: spawn
+    /// retries exhausted).  The application resumes on its *old*
+    /// communicator; do **not** call [`Mam::finish`].  The RMS loop
+    /// may re-queue or re-target the resize.
+    Aborted,
 }
 
 /// Background-redistribution progress state.
@@ -330,11 +337,32 @@ pub struct Mam {
     /// (`MpiProc::sched_acquire`), keyed by rank slot so it survives
     /// process churn.
     sched: SchedCache,
+    /// Fault-decision context (`--faults`): the `(resize, dispatch)`
+    /// pair identifying the current reconfiguration attempt.  Set by
+    /// the harness before each `reconfigure` so fault draws agree
+    /// across ranks and change on every re-dispatch of an aborted
+    /// resize; `(0, 0)` when the harness never resizes twice.
+    fault_ctx: (u64, u64),
 }
 
 impl Mam {
     pub fn new(registry: Registry, cfg: ReconfigCfg) -> Mam {
-        Mam { registry, cfg, inflight: None, live: None, sched: SchedCache::new() }
+        Mam {
+            registry,
+            cfg,
+            inflight: None,
+            live: None,
+            sched: SchedCache::new(),
+            fault_ctx: (0, 0),
+        }
+    }
+
+    /// Identify the upcoming reconfiguration attempt for fault
+    /// injection: `resize` is the scenario-level resize index,
+    /// `dispatch` counts re-dispatches of the same resize after
+    /// aborts.  Must be called identically on every source rank.
+    pub fn set_fault_ctx(&mut self, resize: u64, dispatch: u64) {
+        self.fault_ctx = (resize, dispatch);
     }
 
     /// Schedule-memo counters `(hits, misses)` — the observable the
@@ -372,6 +400,11 @@ impl Mam {
                 (Some(live), true) => live,
                 _ => &static_params,
             };
+            // An installed fault plan's wave-failure probability flows
+            // into the pricing so Auto stops preferring late-detecting
+            // Async under lossy spawns (same pure inputs on every
+            // rank, drains included — the plan is world-global).
+            let fail_p = proc.fault_plan().map_or(0.0, |pl| pl.spec.spawn_fail_p);
             planner::resolve_internal(
                 net,
                 proc.cores_per_node(),
@@ -379,9 +412,95 @@ impl Mam {
                 ns,
                 nd,
                 &self.cfg,
+                fail_p,
             )
         } else {
             self.cfg.clone()
+        }
+    }
+
+    /// Pre-spawn fault charges at resize entry (`--faults`): this
+    /// source rank's straggler delay and — for RMA methods — the
+    /// extra registration time of a slowed NIC, modeled as local
+    /// compute so downstream collectives observe the skew.  Pure
+    /// per-rank draws; ranks that draw nothing charge nothing.
+    fn charge_entry_faults(
+        &self,
+        proc: &MpiProc,
+        app_comm: CommId,
+        cfg: &ReconfigCfg,
+        plan: &FaultPlan,
+    ) {
+        let (resize, dispatch) = self.fault_ctx;
+        let me = proc.rank(app_comm);
+        let straggle = plan.straggler_delay(resize, dispatch, me);
+        if straggle > 0.0 {
+            proc.metrics(|m| m.add_counter("faults.straggler_secs", straggle));
+            proc.compute(straggle);
+        }
+        if cfg.method != Method::Collective {
+            let f = plan.reg_slow_factor(resize, dispatch, me);
+            if f > 1.0 {
+                let bytes: u64 = (0..self.registry.len())
+                    .map(|i| self.registry.entry(i).local.bytes())
+                    .sum();
+                let extra = bytes as f64 * proc.net_params().beta_register * (f - 1.0);
+                if extra > 0.0 {
+                    proc.metrics(|m| m.add_counter("faults.reg_extra_secs", extra));
+                    proc.compute(extra);
+                }
+            }
+        }
+    }
+
+    /// Lost notify counters (`--faults notify=`): the decision is a
+    /// pure function of the resize shape, so sources and the
+    /// independently spawned drains (via [`Mam::drain_join`]) agree on
+    /// the epoch-sync fallback without communicating.  Every rank pays
+    /// the detection timeout before switching protocols.
+    fn apply_notify_fallback(
+        proc: &MpiProc,
+        ns: usize,
+        nd: usize,
+        cfg: &mut ReconfigCfg,
+        plan: &FaultPlan,
+    ) {
+        if cfg.rma_sync == RmaSync::Notify
+            && cfg.method != Method::Collective
+            && plan.notify_lost(ns, nd)
+        {
+            proc.metrics(|m| m.add_counter("faults.notify_timeouts", 1.0));
+            proc.compute(plan.spec.notify_timeout);
+            cfg.rma_sync = RmaSync::Epoch;
+        }
+    }
+
+    /// Abort-and-rollback invalidation: drop every `ns → nd` schedule
+    /// from the Rust-side memo *and* the simulated world's rank-slot
+    /// pin set, and drop the window pool's pins for every registered
+    /// structure.  Conservative by design — warm state that merely
+    /// *might* span the aborted dispatch is repriced cold on the next
+    /// occurrence rather than replayed.
+    fn poison_on_abort(&mut self, proc: &MpiProc, ns: usize, nd: usize, cfg: &ReconfigCfg) {
+        for h in self.sched.poison(ns, nd) {
+            proc.sched_invalidate(h);
+        }
+        let chunk = cfg.chunk_elems();
+        for i in 0..self.registry.len() {
+            let e = self.registry.entry(i);
+            // The shape may never have entered this handle's memo
+            // (fresh Mam after churn) while the world still holds its
+            // rank-slot descriptor — invalidate by reconstructed key
+            // too.
+            let key = SchedKey {
+                from: ns,
+                to: nd,
+                structure: winpool::pin_token(&e.name),
+                total_elems: e.total_elems,
+                chunk_elems: chunk,
+            };
+            proc.sched_invalidate(key.hash64());
+            proc.win_pool_poison(winpool::pin_token(&e.name));
         }
     }
 
@@ -401,19 +520,66 @@ impl Mam {
         assert!(self.inflight.is_none(), "reconfiguration already in progress");
         let ns = proc.size(app_comm);
         assert!(nd > 0 && nd != ns, "invalid target size {nd} (ns={ns})");
-        let cfg = self.active_cfg(proc, ns, nd);
+        let mut cfg = self.active_cfg(proc, ns, nd);
         let t_begin = proc.now();
+        let plan = proc.fault_plan();
+        if let Some(plan) = &plan {
+            self.charge_entry_faults(proc, app_comm, &cfg, plan);
+            Self::apply_notify_fallback(proc, ns, nd, &mut cfg, plan);
+        }
 
         // ---- Stage 2: process management (Merge).
         let merged = if nd > ns {
-            let sched = cfg.spawn_strategy.schedule(
-                &proc.net_params(),
-                ns,
-                nd - ns,
-                nd,
-                cfg.spawn_cost,
-            );
-            proc.spawn_merge_scheduled(app_comm, nd - ns, &sched, drain_body)
+            match &plan {
+                None => {
+                    let sched = cfg.spawn_strategy.schedule(
+                        &proc.net_params(),
+                        ns,
+                        nd - ns,
+                        nd,
+                        cfg.spawn_cost,
+                    );
+                    proc.spawn_merge_scheduled(app_comm, nd - ns, &sched, drain_body)
+                }
+                Some(plan) => {
+                    let out = resilience::spawn_with_recovery(
+                        proc,
+                        app_comm,
+                        ns,
+                        nd,
+                        &cfg,
+                        drain_body,
+                        plan,
+                        self.fault_ctx,
+                    );
+                    if out.failed_attempts > 0 && proc.rank(app_comm) == 0 {
+                        let (tries, ranks) = (out.failed_attempts, out.failed_ranks);
+                        proc.metrics(|m| {
+                            m.add_counter("faults.spawn_retries", f64::from(tries));
+                            m.add_counter("faults.spawn_failed", ranks as f64);
+                        });
+                    }
+                    match out.merged {
+                        Some(mc) => mc,
+                        None => {
+                            // Retries exhausted: unwind to the previous
+                            // layout.  Nothing was spawned and nothing
+                            // rebuilt, but this shape's memoized
+                            // schedules and window pins can no longer be
+                            // trusted warm — poison them so the next
+                            // occurrence rebuilds cold, then hand the
+                            // decision back to the caller (re-queue,
+                            // re-target or give up), app still on its
+                            // old communicator.
+                            self.poison_on_abort(proc, ns, nd, &cfg);
+                            if proc.rank(app_comm) == 0 {
+                                proc.metrics(|m| m.add_counter("faults.rollbacks", 1.0));
+                            }
+                            return MamStatus::Aborted;
+                        }
+                    }
+                }
+            }
         } else {
             // Duplicate so redistribution traffic cannot cross-match
             // with application collectives on `app_comm`.
@@ -775,8 +941,12 @@ impl Mam {
         assert!(roles.is_drain_only(), "drain_join is for spawned ranks");
         // Mirror the sources' per-resize resolution: under
         // `PlannerMode::Auto` the analytic planner runs on the same
-        // rank-independent inputs and lands on the same choice.
-        let active = mam.active_cfg(proc, ns, nd);
+        // rank-independent inputs and lands on the same choice — and
+        // the same shape-keyed notify-loss fallback decision.
+        let mut active = mam.active_cfg(proc, ns, nd);
+        if let Some(plan) = proc.fault_plan() {
+            Self::apply_notify_fallback(proc, ns, nd, &mut active, &plan);
+        }
         let which: Vec<usize> = if active.strategy == Strategy::Blocking {
             (0..mam.registry.len()).collect()
         } else {
@@ -1658,6 +1828,180 @@ mod tests {
         let s = w.sched_stats();
         assert_eq!(s.cold_builds, 8, "{s:?}");
         assert_eq!(s.warm_replays, 4, "{s:?}");
+    }
+
+    #[test]
+    fn all_wave_spawn_failure_recovers_within_the_retry_budget() {
+        // Acceptance bar: `spawn=first2` with the default retries=2
+        // fails the grow's first two launch attempts whole-wave; the
+        // third succeeds and the resize completes with exact payload
+        // identity on every drain — the faults cost time, never data.
+        use crate::simmpi::{FaultPlan, FaultSpec};
+        let total = 997u64;
+        let (ns, nd) = (2usize, 5usize);
+        let mut sim = MpiSim::new(Topology::new(2, 6), NetParams::test_simple());
+        sim.set_faults(FaultPlan::new(FaultSpec::parse("spawn=first2,mode=wave").unwrap()));
+        let world = sim.world();
+        let checks = Arc::new(AtomicUsize::new(0));
+        let checks2 = checks.clone();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register(
+                "A",
+                DataKind::Constant,
+                total,
+                Payload::real((b.ini..b.end).map(|i| i as f64).collect()),
+            );
+            let cfg = ReconfigCfg::version(Method::RmaLockall, Strategy::Blocking)
+                .with_spawn(SpawnStrategy::Sequential, 0.01);
+            let decls = reg.decls();
+            let mut mam = Mam::new(reg, cfg.clone());
+            mam.set_fault_ctx(0, 0);
+            let checks3 = checks2.clone();
+            let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let dmam = Mam::drain_join(&dp, merged, ns, nd, &decls, cfg.clone());
+                    let dr = dp.rank(merged);
+                    let nb = block_of(total, nd, dr);
+                    let got = dmam.registry.entry(0).local.as_slice().unwrap().to_vec();
+                    let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+                    assert_eq!(got, want, "spawned drain {dr} wrong block");
+                    checks3.fetch_add(1, Ordering::SeqCst);
+                });
+            let t0 = p.now();
+            let status = mam.reconfigure(&p, WORLD, nd, drain_body);
+            assert_eq!(status, MamStatus::Completed);
+            assert!(
+                p.now() - t0 > 0.01,
+                "two failed attempts must cost detection + backoff time"
+            );
+            let out = mam.finish(&p, WORLD);
+            let c = out.app_comm.expect("grow keeps every rank");
+            let nr = p.rank(c);
+            let nb = block_of(total, nd, nr);
+            let got = mam.registry.entry(0).local.as_slice().unwrap().to_vec();
+            let want: Vec<f64> = (nb.ini..nb.end).map(|i| i as f64).collect();
+            assert_eq!(got, want, "rank {nr} wrong block after recovery");
+            checks2.fetch_add(1, Ordering::SeqCst);
+        });
+        sim.run().unwrap();
+        assert_eq!(checks.load(Ordering::SeqCst), nd, "every drain must verify its block");
+        let w = world.lock().unwrap();
+        assert_eq!(w.metrics.counter("faults.spawn_retries"), Some(2.0));
+        assert_eq!(w.metrics.counter("faults.spawn_failed"), Some(2.0 * (nd - ns) as f64));
+        assert_eq!(w.metrics.counter("faults.rollbacks"), None, "recovered, not rolled back");
+    }
+
+    #[test]
+    fn abort_poisons_warm_schedules_and_the_next_occurrence_rebuilds_cold() {
+        // 4 -> 2 -> 4 -> 2, then an *aborted* 2 -> 4, then 2 -> 4 again.
+        // The abort must unwind cleanly (status Aborted, nothing
+        // inflight, app still on its old communicator) and poison the
+        // warm (2, 4) schedule state everywhere: the retried grow
+        // rebuilds cold instead of replaying a pin that spans the
+        // aborted dispatch.  `spawn=first3` with retries=2 exhausts
+        // dispatch 0 of the grow and heals dispatch 1 (the firstK
+        // count is cumulative across dispatches).
+        use crate::simmpi::{FaultPlan, FaultSpec};
+        let total = 40_000u64;
+        let (ns, nd) = (4usize, 2usize);
+        let mut sim = MpiSim::new(Topology::new(1, 8), NetParams::test_simple());
+        sim.set_faults(FaultPlan::new(FaultSpec::parse("spawn=first3,mode=wave").unwrap()));
+        let world = sim.world();
+        sim.launch(ns, move |p| {
+            let r = p.rank(WORLD);
+            let b = block_of(total, ns, r);
+            let mut reg = Registry::new();
+            reg.register("A", DataKind::Constant, total, Payload::virt(b.len()));
+            let cfg = ReconfigCfg::version(Method::RmaLockall, Strategy::Blocking)
+                .with_spawn(SpawnStrategy::Sequential, 0.0)
+                .with_sched_cache(true);
+            let decls = reg.decls();
+            let mut mam = Mam::new(reg, cfg.clone());
+            let nobody: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            // Resize 1: 4 -> 2 — (4, 2) builds cold (shrink: no spawn,
+            // no fault surface).
+            mam.set_fault_ctx(0, 0);
+            let st = mam.reconfigure(&p, WORLD, nd, nobody);
+            assert_eq!(st, MamStatus::Completed);
+            let out = mam.finish(&p, WORLD);
+            let Some(c1) = out.app_comm else {
+                return; // ranks 2 and 3 retire here
+            };
+            // Resize 2: grow back to 4.  Dispatch 1 keeps the firstK
+            // counter past the failure window — this grow is healthy;
+            // its drains stick around to retire in resize 3.
+            mam.set_fault_ctx(1, 1);
+            let cfg2 = cfg.clone();
+            let drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let mut dmam = Mam::drain_join(&dp, merged, nd, ns, &decls, cfg2.clone());
+                    let nobody2: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                        Arc::new(|_, _| {});
+                    dmam.set_fault_ctx(2, 0);
+                    let st = dmam.reconfigure(&dp, merged, nd, nobody2);
+                    assert_eq!(st, MamStatus::Completed);
+                    let out = dmam.finish(&dp, merged);
+                    assert!(out.app_comm.is_none(), "spawned ranks retire at resize 3");
+                });
+            let st = mam.reconfigure(&p, c1, ns, drain_body);
+            assert_eq!(st, MamStatus::Completed);
+            let out = mam.finish(&p, c1);
+            let c2 = out.app_comm.expect("grow keeps every rank");
+            // Resize 3: 4 -> 2 — (4, 2) replays warm, proving warmth
+            // was established before the abort.
+            mam.set_fault_ctx(2, 0);
+            let nobody3: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            let st = mam.reconfigure(&p, c2, nd, nobody3);
+            assert_eq!(st, MamStatus::Completed);
+            let out = mam.finish(&p, c2);
+            let c3 = out.app_comm.expect("ranks 0 and 1 survive the shrink");
+            let s3 = p.sched_stats();
+            assert_eq!(s3.warm_replays, ns as u64, "resize 3 replays warm: {s3:?}");
+            let cold_before_abort = s3.cold_builds;
+            let memo_before_abort = mam.sched_cache_counters();
+            // Resize 4: 2 -> 4 again, dispatch 0 — all three attempts
+            // fail, retries exhaust, the resize aborts and rolls back.
+            mam.set_fault_ctx(3, 0);
+            let nobody4: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> = Arc::new(|_, _| {});
+            let st = mam.reconfigure(&p, c3, ns, nobody4);
+            assert_eq!(st, MamStatus::Aborted);
+            assert!(!mam.in_progress(), "an aborted resize must leave nothing inflight");
+            assert_eq!(p.size(c3), nd, "the app resumes on its old communicator");
+            assert_eq!(
+                mam.sched_cache_counters().0,
+                memo_before_abort.0,
+                "abort must not touch the memo counters"
+            );
+            // Resize 5: the re-dispatched grow succeeds — and must
+            // rebuild the poisoned (2, 4) schedule cold, not replay it.
+            mam.set_fault_ctx(3, 1);
+            let cfg5 = cfg.clone();
+            let decls5 = mam.registry.decls();
+            let drain_body5: Arc<dyn Fn(MpiProc, CommId) + Send + Sync> =
+                Arc::new(move |dp: MpiProc, merged: CommId| {
+                    let _ = Mam::drain_join(&dp, merged, nd, ns, &decls5, cfg5.clone());
+                });
+            let st = mam.reconfigure(&p, c3, ns, drain_body5);
+            assert_eq!(st, MamStatus::Completed);
+            let _ = mam.finish(&p, c3);
+            let s5 = p.sched_stats();
+            assert_eq!(
+                s5.cold_builds,
+                cold_before_abort + ns as u64,
+                "poisoned schedules must rebuild cold on sources and drains: {s5:?}"
+            );
+            assert_eq!(s5.warm_replays, ns as u64, "no new warm replays: {s5:?}");
+            // The survivors' memo saw the poisoned (2, 4) miss again.
+            assert_eq!(mam.sched_cache_counters().1, memo_before_abort.1 + 1);
+        });
+        sim.run().unwrap();
+        let w = world.lock().unwrap();
+        assert_eq!(w.metrics.counter("faults.rollbacks"), Some(1.0));
+        assert_eq!(w.metrics.counter("faults.spawn_retries"), Some(3.0));
+        assert!(w.win_pool_stats().poisoned == 0, "pool off: nothing to poison");
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Recovery policy for faulty reconfigurations (`--faults`).
+//!
+//! The seed model assumed spawning always succeeds; real RMS-driven
+//! malleability loses launches to node failures, stale allocations and
+//! slow daemons.  This module wraps the Merge grow path's spawn phase
+//! with the retry discipline the resize driver ([`Mam::reconfigure`])
+//! applies when a [`FaultPlan`] is installed:
+//!
+//! * every attempt asks the plan how many of the `nd − ns` targets
+//!   fail (a pure function of `(resize, dispatch, attempt)`, so every
+//!   source rank agrees without communicating),
+//! * a failed attempt is *charge-only*: the sources block for the
+//!   failed subset's launch up to the strategy's detection point
+//!   (plus the hang timeout for `kind=hang` faults), then for the
+//!   capped exponential backoff before the retry — no half-created
+//!   activities are ever torn down, so virtual time stays exact and
+//!   runs stay byte-deterministic,
+//! * the first healthy attempt performs the one real
+//!   [`spawn_merge_scheduled`] for the full wave.  Under `Async` /
+//!   rank-mode faults only the failed subset is re-dispatched, which
+//!   the model prices through the subset-sized schedules of the
+//!   failed attempts (the economy the planner's retry-tail term
+//!   mirrors),
+//! * exhausting `retries` yields no communicator: the caller unwinds
+//!   via abort-and-rollback instead of panicking the simulation.
+//!
+//! Detection latency differs per strategy and is what makes `Async`
+//! risky under high failure probability: `Sequential` notices at the
+//! first child's slot, `Parallel` at the end of the blocking launch,
+//! but `Async` sources have already resumed and only learn of the
+//! failure once the last child was due up.
+//!
+//! [`Mam::reconfigure`]: super::reconfig::Mam::reconfigure
+//! [`FaultPlan`]: crate::simcluster::faults::FaultPlan
+//! [`spawn_merge_scheduled`]: crate::simmpi::MpiProc::spawn_merge_scheduled
+
+use std::sync::Arc;
+
+use crate::netmodel::SpawnSchedule;
+use crate::simcluster::faults::FaultPlan;
+use crate::simmpi::{CommId, MpiProc};
+
+use super::reconfig::ReconfigCfg;
+use super::spawn::SpawnStrategy;
+
+/// Outcome of the fault-aware spawn phase.
+pub struct SpawnOutcome {
+    /// The merged communicator (`None` = retries exhausted, abort).
+    pub merged: Option<CommId>,
+    /// Attempts that failed before the outcome (0 on the healthy path).
+    pub failed_attempts: u32,
+    /// Total target ranks lost across the failed attempts.
+    pub failed_ranks: u64,
+}
+
+/// Virtual time at which the sources *detect* a failed launch, given
+/// the failed subset's schedule.  Base latency only — `kind=hang`
+/// extends it to the configured timeout via
+/// [`FaultPlan::detect_latency`].
+fn detect_base(strategy: SpawnStrategy, sched: &SpawnSchedule, n_failed: usize) -> f64 {
+    match strategy {
+        // One child per sequential slot: the failure surfaces at the
+        // first slot that does not come up.
+        SpawnStrategy::Sequential => sched.source_block / n_failed.max(1) as f64,
+        // Sources are blocked through the whole launch either way.
+        SpawnStrategy::Parallel => sched.source_block,
+        // Sources resumed at initiation; the miss is only observable
+        // once the last child was due up — late detection is Async's
+        // failure-mode tax.
+        SpawnStrategy::Async => sched.last_child_up(),
+    }
+}
+
+/// Execute the grow-path spawn under `plan`, retrying with capped
+/// exponential backoff up to `plan.spec.retries` times.  `ctx` is the
+/// `(resize, dispatch)` fault context (see `Mam::set_fault_ctx`); all
+/// sources must call this collectively with identical arguments.
+pub fn spawn_with_recovery(
+    proc: &MpiProc,
+    app_comm: CommId,
+    ns: usize,
+    nd: usize,
+    cfg: &ReconfigCfg,
+    drain_body: Arc<dyn Fn(MpiProc, CommId) + Send + Sync>,
+    plan: &FaultPlan,
+    ctx: (u64, u64),
+) -> SpawnOutcome {
+    let n_new = nd - ns;
+    let params = proc.net_params();
+    let (resize, dispatch) = ctx;
+    let mut failed_attempts = 0u32;
+    let mut failed_ranks = 0u64;
+    for attempt in 0..=plan.spec.retries {
+        let n_failed = plan.spawn_failures(resize, dispatch, attempt, n_new);
+        if n_failed == 0 {
+            let sched = cfg.spawn_strategy.schedule(&params, ns, n_new, nd, cfg.spawn_cost);
+            let merged = proc.spawn_merge_scheduled(app_comm, n_new, &sched, drain_body);
+            return SpawnOutcome { merged: Some(merged), failed_attempts, failed_ranks };
+        }
+        failed_attempts += 1;
+        failed_ranks += n_failed as u64;
+        // Charge-only failed attempt: block every source for the
+        // failed subset's launch up to the detection point plus the
+        // pre-retry backoff.  The charge is identical on all sources
+        // (pure function of shared inputs), so the job stays
+        // collectively consistent without creating — and then tearing
+        // down — real activities.  Re-dispatching only the failed
+        // subset (Async / rank-mode) is what keeps retries of partial
+        // failures cheaper than the first full wave.
+        let subset = n_failed.min(n_new);
+        let sched = cfg.spawn_strategy.schedule(&params, ns, subset, ns + subset, cfg.spawn_cost);
+        let detect = plan.detect_latency(detect_base(cfg.spawn_strategy, &sched, subset));
+        proc.compute(detect + plan.backoff_before(attempt + 1));
+    }
+    SpawnOutcome { merged: None, failed_attempts, failed_ranks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::NetParams;
+    use crate::simcluster::faults::FaultSpec;
+
+    #[test]
+    fn detection_is_latest_under_async_and_earliest_under_sequential() {
+        let p = NetParams::sarteco25();
+        let seq = SpawnStrategy::Sequential.schedule(&p, 8, 8, 16, 0.25);
+        let par = SpawnStrategy::Parallel.schedule(&p, 8, 8, 16, 0.25);
+        let asy = SpawnStrategy::Async.schedule(&p, 8, 8, 16, 0.25);
+        let d_seq = detect_base(SpawnStrategy::Sequential, &seq, 8);
+        let d_par = detect_base(SpawnStrategy::Parallel, &par, 8);
+        let d_asy = detect_base(SpawnStrategy::Async, &asy, 8);
+        assert!(d_seq > 0.0 && d_seq < seq.source_block, "first-slot detection");
+        assert_eq!(d_par.to_bits(), par.source_block.to_bits());
+        assert_eq!(d_asy.to_bits(), asy.last_child_up().to_bits());
+    }
+
+    #[test]
+    fn hang_faults_stretch_detection_to_the_timeout() {
+        let plan = FaultPlan::new(FaultSpec::parse("spawn=first1,kind=hang,timeout=2.0").unwrap());
+        let p = NetParams::test_simple();
+        let sched = SpawnStrategy::Parallel.schedule(&p, 4, 4, 8, 0.25);
+        let base = detect_base(SpawnStrategy::Parallel, &sched, 4);
+        assert!(base < 2.0, "premise: the launch itself is fast");
+        assert!((plan.detect_latency(base) - 2.0).abs() < 1e-12);
+    }
+}

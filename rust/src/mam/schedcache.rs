@@ -219,6 +219,26 @@ impl SchedCache {
         }
     }
 
+    /// Abort-and-rollback poison: drop every memoized schedule with
+    /// shape `from → to`, returning the dropped keys' world digests
+    /// (sorted) so the caller can also invalidate the simulated
+    /// world's rank-slot pins.  A half-dispatched resize must never be
+    /// replayed warm — the next occurrence of the shape rebuilds cold.
+    pub fn poison(&mut self, from: usize, to: usize) -> Vec<u64> {
+        let keys: Vec<SchedKey> = self
+            .map
+            .keys()
+            .filter(|k| k.from == from && k.to == to)
+            .copied()
+            .collect();
+        let mut digests: Vec<u64> = keys.iter().map(|k| k.hash64()).collect();
+        digests.sort_unstable();
+        for k in &keys {
+            self.map.remove(k);
+        }
+        digests
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -301,6 +321,26 @@ mod tests {
         assert_eq!(s.n_targets(), 0);
         assert!(s.expected_here() > 0, "rank 4's exposure is read");
         assert!(s.price_targets() > 0);
+    }
+
+    #[test]
+    fn poison_drops_only_the_matching_shape_and_forces_a_rebuild() {
+        let mut c = SchedCache::new();
+        let grow = key(2, 4, 100, 0);
+        let shrink = key(4, 2, 100, 0);
+        let _ = c.get_or_build(grow, 1);
+        let _ = c.get_or_build(shrink, 1);
+        assert_eq!((c.hits, c.misses), (0, 2));
+        let dropped = c.poison(2, 4);
+        assert_eq!(dropped, vec![grow.hash64()]);
+        assert_eq!(c.len(), 1, "the other shape survives");
+        // The poisoned shape is rebuilt (a miss), not replayed.
+        let _ = c.get_or_build(grow, 1);
+        assert_eq!((c.hits, c.misses), (0, 3));
+        // The surviving shape still replays warm.
+        let _ = c.get_or_build(shrink, 1);
+        assert_eq!((c.hits, c.misses), (1, 3));
+        assert!(c.poison(9, 9).is_empty(), "unknown shape poisons nothing");
     }
 
     #[test]

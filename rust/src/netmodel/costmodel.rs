@@ -115,6 +115,38 @@ impl SpawnSchedule {
     }
 }
 
+/// Expected extra spawn-phase seconds spent on failed launch attempts
+/// under per-attempt failure probability `q_eff`, with up to `retries`
+/// retries: Σ_{k=1..retries} qᵏ · (detect + backoff(k) + reblock),
+/// where `backoff(k)` is the capped exponential `min(backoff0·2ᵏ⁻¹,
+/// backoff_cap)`, `detect` is the strategy's failure-detection latency
+/// and `reblock` the re-dispatched launch's source block.  The tail is
+/// what the planner adds to a candidate's spawn block when a failure
+/// probability is configured (`--faults` + `fail_p`): late-detecting
+/// strategies (Async) buy their healthy-path overlap with a heavier
+/// tail, which is exactly the trade the chaos sweep measures.
+pub fn expected_spawn_retry_tail(
+    q_eff: f64,
+    retries: u32,
+    detect: f64,
+    backoff0: f64,
+    backoff_cap: f64,
+    reblock: f64,
+) -> f64 {
+    if q_eff <= 0.0 {
+        return 0.0;
+    }
+    let q = q_eff.min(1.0);
+    let mut tail = 0.0;
+    let mut qk = 1.0;
+    for k in 1..=retries.max(1) {
+        qk *= q;
+        let backoff = (backoff0 * f64::powi(2.0, k as i32 - 1)).min(backoff_cap);
+        tail += qk * (detect + backoff + reblock);
+    }
+    tail
+}
+
 // ---------------------------------------------------------------------
 // Reconfiguration-cost prediction (planner API)
 // ---------------------------------------------------------------------
@@ -699,6 +731,20 @@ mod tests {
         let topo = Topology::new(4, 4);
         let placement = Placement::block(&topo, 16);
         (CostModel::new(NetParams::test_simple(), 4), placement)
+    }
+
+    #[test]
+    fn retry_tail_is_zero_when_healthy_and_grows_with_q_and_detection() {
+        assert_eq!(expected_spawn_retry_tail(0.0, 3, 0.1, 0.02, 0.16, 0.05), 0.0);
+        let low = expected_spawn_retry_tail(0.1, 2, 0.1, 0.02, 0.16, 0.05);
+        let high = expected_spawn_retry_tail(0.5, 2, 0.1, 0.02, 0.16, 0.05);
+        assert!(low > 0.0 && high > low, "tail must grow with q: {low} vs {high}");
+        // Late detection (Async-style) costs more than early detection.
+        let late = expected_spawn_retry_tail(0.5, 2, 0.4, 0.02, 0.16, 0.05);
+        assert!(late > high);
+        // One exact term: q=1, one retry, capped backoff.
+        let t = expected_spawn_retry_tail(1.0, 1, 0.1, 0.5, 0.2, 0.05);
+        assert!((t - (0.1 + 0.2 + 0.05)).abs() < 1e-12, "{t}");
     }
 
     #[test]

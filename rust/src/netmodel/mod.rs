@@ -17,7 +17,7 @@ pub mod topology;
 
 pub use calibration::NetParams;
 pub use costmodel::{
-    intercomm_merge_cost, moved_bytes, predict_reconfig, CostModel, CostPrediction, ReconfigCase,
-    RedistShape, SpawnSchedule, TransferClass,
+    expected_spawn_retry_tail, intercomm_merge_cost, moved_bytes, predict_reconfig, CostModel,
+    CostPrediction, ReconfigCase, RedistShape, SpawnSchedule, TransferClass,
 };
 pub use topology::{NodeId, Placement, Topology};

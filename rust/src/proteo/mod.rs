@@ -29,7 +29,7 @@ use crate::mam::{
 };
 use crate::netmodel::{NetParams, Topology};
 use crate::sam::{Sam, SamConfig};
-use crate::simmpi::{CommId, MpiProc, MpiSim, RmaSync, WORLD};
+use crate::simmpi::{CommId, FaultPlan, FaultSpec, MpiProc, MpiSim, RmaSync, WORLD};
 use crate::util::stats::median;
 
 /// Full specification of one experimental run.
@@ -88,6 +88,11 @@ pub struct RunSpec {
     /// `(from, to, structure, chunk)` and replays it for a validation
     /// handshake on later resizes between the same sizes.
     pub sched_cache: bool,
+    /// `--faults <spec>`: deterministic seeded fault injection
+    /// (spawn failures with retry/backoff, slowed registration, lost
+    /// notify counters, stragglers).  `None` (default) executes the
+    /// healthy paths bit for bit.
+    pub faults: Option<FaultSpec>,
 }
 
 impl RunSpec {
@@ -113,6 +118,7 @@ impl RunSpec {
             recalib: false,
             rma_sync: RmaSync::Epoch,
             sched_cache: false,
+            faults: None,
         }
     }
 
@@ -202,6 +208,7 @@ pub fn resolve_spec(spec: &RunSpec) -> (RunSpec, Option<ReconfigPlan>) {
         sched_cache: spec.sched_cache,
         sched_warm: false,
         future_resizes: 0,
+        fail_p: spec.faults.as_ref().map_or(0.0, |f| f.spawn_fail_p),
     };
     let plan = planner::plan(&inp);
     let mut resolved = spec.clone();
@@ -228,6 +235,9 @@ pub fn run_once(spec: &RunSpec) -> RunResult {
     // (§V-A) and both rank groups spread over every allocated node.
     let topo = Topology::new_cyclic(spec.nodes().max(1), spec.cores_per_node);
     let mut sim = MpiSim::new(topo, spec.net.clone());
+    if let Some(f) = &spec.faults {
+        sim.set_faults(FaultPlan::new(f.clone()));
+    }
     let world = sim.world();
     let spec2 = spec.clone();
     sim.launch(spec.ns, move |p| source_body(&spec2, p));
@@ -324,6 +334,20 @@ fn source_body(spec: &RunSpec, p: MpiProc) {
             drain_main(&spec_d, dp, merged);
         });
     let status = mam.reconfigure(&p, WORLD, nd, drain_body);
+    if status == MamStatus::Aborted {
+        // `--faults`: spawn retries exhausted, the resize rolled back.
+        // The run continues — and reports — on the original layout; no
+        // redistribution marks are recorded, so R stays NaN.
+        p.metrics(|m| {
+            m.mark_max("sam.n_it_max", 0.0);
+            m.push_series("sam.n_it", 0.0);
+        });
+        for _ in 0..spec.post_iters {
+            let dur = sam.iteration(&p, WORLD);
+            p.metrics(|m| m.push_series("sam.t_nd", dur));
+        }
+        return;
+    }
 
     // ---- Overlap loop (background strategies): the application keeps
     // iterating; all ranks leave together via the flag allgather.
@@ -460,6 +484,7 @@ mod tests {
             recalib: false,
             rma_sync: RmaSync::Epoch,
             sched_cache: false,
+            faults: None,
         }
     }
 
@@ -623,6 +648,29 @@ mod tests {
         assert_eq!(n.virt_end.to_bits(), d.virt_end.to_bits());
         assert_eq!(n.redist_time.to_bits(), d.redist_time.to_bits());
         assert_eq!(n.events, d.events);
+    }
+
+    #[test]
+    fn faulty_run_recovers_and_unrecoverable_run_aborts_cleanly() {
+        // Recoverable: first2 within the default retry budget — the
+        // resize completes, payload identity checked by the body's
+        // verify_blocks debug asserts.
+        let mut rec = small_spec(Method::RmaLockall, Strategy::Blocking);
+        rec.ns = 3;
+        rec.nd = 6;
+        rec.faults = Some(FaultSpec::parse("spawn=first2,mode=wave").unwrap());
+        let r = run_once(&rec);
+        assert!(r.redist_time > 0.0 && r.t_it_nd > 0.0, "{r:?}");
+        // Unrecoverable: every attempt fails — abort-and-rollback, the
+        // run finishes on the old layout with no redistribution marks.
+        let mut bad = rec.clone();
+        bad.faults = Some(FaultSpec::parse("spawn=1.0,mode=wave,retries=1").unwrap());
+        let a = run_once(&bad);
+        assert!(a.redist_time.is_nan(), "aborted resize must not redistribute: {a:?}");
+        assert!(a.t_base > 0.0 && a.t_it_nd > 0.0, "app continues on the old layout");
+        let b = run_once(&bad);
+        assert_eq!(a.virt_end.to_bits(), b.virt_end.to_bits(), "faulty runs stay deterministic");
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! Deterministic, seeded fault injection (`--faults`).
+//!
+//! Every resize simulated before PR 9 assumed a perfect cluster:
+//! spawns always succeed, NICs never stall, notify counters never get
+//! lost.  This module is the substrate half of the fault-tolerance
+//! story: a [`FaultSpec`] (parsed from the `--faults` CLI grammar)
+//! compiled into a [`FaultPlan`] whose every decision is a **pure
+//! function of `(seed, decision keys)`** — no hidden stream state, no
+//! draw-order coupling.  Two consequences fall out of that purity:
+//!
+//! * runs stay byte-deterministic per seed — injected faults are
+//!   ordinary engine events at exact virtual times, replayed
+//!   identically on every rerun;
+//! * SPMD agreement is free — every rank evaluating the same decision
+//!   keys (e.g. "is the notify counter of resize 20→160 lost?")
+//!   computes the same answer locally, with no extra synchronization
+//!   that would perturb the fault-free timing.
+//!
+//! Each decision hashes `(seed, tag, keys…)` through FNV-1a and seeds
+//! a fresh xoshiro generator from the digest — adjacent keys give
+//! statistically independent draws, and adding a new fault class never
+//! shifts the draws of an existing one.
+//!
+//! Recovery policy (retry budgets, backoff, rollback) lives in
+//! [`mam::resilience`](../mam/resilience/index.html); this module only
+//! answers "does X fail?".
+
+use crate::util::rng::Rng;
+
+/// Decision-class tags (first FNV word, keeps classes independent).
+const TAG_SPAWN: u64 = 0x5350_4157; // "SPAW"
+const TAG_NOTIFY: u64 = 0x4e4f_5446; // "NOTF"
+const TAG_STRAGGLER: u64 = 0x5354_5247; // "STRG"
+const TAG_REG: u64 = 0x5245_4753; // "REGS"
+
+/// Parsed `--faults` specification.  Grammar: comma-separated `k=v`
+/// pairs (order-free), e.g.
+///
+/// ```text
+/// seed=42,spawn=0.3,mode=rank,kind=hang,timeout=0.25,retries=2,
+/// backoff=0.02,backoff-cap=0.16,reg=0.1x4,notify=0.2,straggler=0.1@0.05
+/// ```
+///
+/// * `seed=<u64>` — decision seed (default 42).
+/// * `spawn=<p|firstK>` — spawn-failure probability in `[0,1]`, or the
+///   deterministic form `firstK`: the first `K` attempts of every
+///   spawn fail outright (what the acceptance test uses).
+/// * `mode=wave|rank` — whole-wave failures vs independent per-rank
+///   failures (Async re-dispatches only the failed subset).
+/// * `kind=fast|hang` — failed spawns report immediately vs hang until
+///   `timeout=<secs>` expires.
+/// * `retries=<n>`, `backoff=<secs>`, `backoff-cap=<secs>` — recovery
+///   budget: capped exponential backoff between attempts.
+/// * `reg=<p>x<factor>` — each source's registration runs `factor`×
+///   slower with probability `p` (NIC pinning stall).
+/// * `notify=<p>` (+ `notify-timeout=<secs>`) — the notify counters of
+///   a resize are lost with probability `p`; ranks time out and fall
+///   back to epoch sync.
+/// * `straggler=<p>@<max>` — each source rank enters the resize up to
+///   `max` seconds late with probability `p`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    /// Probability a spawn attempt fails (per wave, or per rank under
+    /// `mode=rank`).  Ignored when `spawn_fail_first > 0`.
+    pub spawn_fail_p: f64,
+    /// Deterministic mode: the first K attempts of every spawn fail
+    /// (0 = probabilistic via `spawn_fail_p`).
+    pub spawn_fail_first: u32,
+    /// Per-rank failures instead of whole-wave.
+    pub per_rank: bool,
+    /// Failed spawns hang until `hang_timeout` instead of failing fast.
+    pub hang: bool,
+    /// Detection latency of a hung spawn attempt.
+    pub hang_timeout: f64,
+    /// Retry budget per spawn phase (attempts = 1 + retries).
+    pub retries: u32,
+    /// Initial backoff before a retry; doubles per attempt.
+    pub backoff: f64,
+    /// Backoff ceiling.
+    pub backoff_cap: f64,
+    /// Probability a source's registration segment stream is slowed.
+    pub reg_slow_p: f64,
+    /// Stretch factor of a slowed registration (≥ 1).
+    pub reg_slow_factor: f64,
+    /// Probability the notify counters of a resize are lost
+    /// (`--rma-sync notify` falls back to epoch sync after a timeout).
+    pub notify_loss_p: f64,
+    /// Detection latency of lost notify counters.
+    pub notify_timeout: f64,
+    /// Probability a source rank straggles into the resize.
+    pub straggler_p: f64,
+    /// Maximum straggler delay (uniform in `(0, max]`).
+    pub straggler_max: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 42,
+            spawn_fail_p: 0.0,
+            spawn_fail_first: 0,
+            per_rank: false,
+            hang: false,
+            hang_timeout: 0.25,
+            retries: 2,
+            backoff: 0.02,
+            backoff_cap: 0.16,
+            reg_slow_p: 0.0,
+            reg_slow_factor: 4.0,
+            notify_loss_p: 0.0,
+            notify_timeout: 0.2,
+            straggler_p: 0.0,
+            straggler_max: 0.1,
+        }
+    }
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p: f64 = v.parse().map_err(|_| format!("--faults: bad {key}={v}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("--faults: {key}={v} outside [0,1]"));
+    }
+    Ok(p)
+}
+
+fn parse_secs(key: &str, v: &str) -> Result<f64, String> {
+    let s: f64 = v.parse().map_err(|_| format!("--faults: bad {key}={v}"))?;
+    if !s.is_finite() || s < 0.0 {
+        return Err(format!("--faults: {key}={v} must be >= 0"));
+    }
+    Ok(s)
+}
+
+impl FaultSpec {
+    /// Parse the comma-separated `k=v` grammar (see type docs).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--faults: expected k=v, got '{part}'"))?;
+            match k {
+                "seed" => {
+                    spec.seed =
+                        v.parse().map_err(|_| format!("--faults: bad seed={v}"))?;
+                }
+                "spawn" => {
+                    if let Some(kk) = v.strip_prefix("first") {
+                        spec.spawn_fail_first = kk
+                            .parse()
+                            .map_err(|_| format!("--faults: bad spawn={v}"))?;
+                        spec.spawn_fail_p = 0.0;
+                    } else {
+                        spec.spawn_fail_p = parse_prob("spawn", v)?;
+                        spec.spawn_fail_first = 0;
+                    }
+                }
+                "mode" => match v {
+                    "wave" => spec.per_rank = false,
+                    "rank" => spec.per_rank = true,
+                    _ => return Err(format!("--faults: mode={v} (wave|rank)")),
+                },
+                "kind" => match v {
+                    "fast" => spec.hang = false,
+                    "hang" => spec.hang = true,
+                    _ => return Err(format!("--faults: kind={v} (fast|hang)")),
+                },
+                "timeout" => spec.hang_timeout = parse_secs("timeout", v)?,
+                "retries" => {
+                    spec.retries =
+                        v.parse().map_err(|_| format!("--faults: bad retries={v}"))?;
+                }
+                "backoff" => spec.backoff = parse_secs("backoff", v)?,
+                "backoff-cap" => spec.backoff_cap = parse_secs("backoff-cap", v)?,
+                "reg" => {
+                    let (p, f) = v
+                        .split_once('x')
+                        .ok_or_else(|| format!("--faults: reg={v} (want <p>x<factor>)"))?;
+                    spec.reg_slow_p = parse_prob("reg", p)?;
+                    spec.reg_slow_factor =
+                        f.parse().map_err(|_| format!("--faults: bad reg factor {f}"))?;
+                    if !(spec.reg_slow_factor >= 1.0) {
+                        return Err(format!("--faults: reg factor {f} must be >= 1"));
+                    }
+                }
+                "notify" => spec.notify_loss_p = parse_prob("notify", v)?,
+                "notify-timeout" => spec.notify_timeout = parse_secs("notify-timeout", v)?,
+                "straggler" => {
+                    let (p, d) = v
+                        .split_once('@')
+                        .ok_or_else(|| format!("--faults: straggler={v} (want <p>@<max>)"))?;
+                    spec.straggler_p = parse_prob("straggler", p)?;
+                    spec.straggler_max = parse_secs("straggler", d)?;
+                }
+                _ => return Err(format!("--faults: unknown key '{k}'")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Does this spec inject anything at all?  Inactive specs must
+    /// leave every simulated timing bit-identical to a run with no
+    /// spec installed.
+    pub fn is_active(&self) -> bool {
+        self.spawn_fail_p > 0.0
+            || self.spawn_fail_first > 0
+            || self.reg_slow_p > 0.0
+            || self.notify_loss_p > 0.0
+            || self.straggler_p > 0.0
+    }
+
+    /// Canonical spec string (parse ∘ to_spec_string is identity on
+    /// the fields; used by provenance JSON).
+    pub fn to_spec_string(&self) -> String {
+        let spawn = if self.spawn_fail_first > 0 {
+            format!("first{}", self.spawn_fail_first)
+        } else {
+            format!("{}", self.spawn_fail_p)
+        };
+        format!(
+            "seed={},spawn={},mode={},kind={},timeout={},retries={},backoff={},\
+             backoff-cap={},reg={}x{},notify={},notify-timeout={},straggler={}@{}",
+            self.seed,
+            spawn,
+            if self.per_rank { "rank" } else { "wave" },
+            if self.hang { "hang" } else { "fast" },
+            self.hang_timeout,
+            self.retries,
+            self.backoff,
+            self.backoff_cap,
+            self.reg_slow_p,
+            self.reg_slow_factor,
+            self.notify_loss_p,
+            self.notify_timeout,
+            self.straggler_p,
+            self.straggler_max,
+        )
+    }
+}
+
+/// Compiled fault plan: the spec plus its keyed decision functions.
+/// Immutable and shared (`Arc<FaultPlan>` lives in the `MpiWorld`);
+/// deliberately *not* part of world snapshots — it is configuration,
+/// not simulation state.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan { spec }
+    }
+
+    /// Seed a fresh generator from `(seed, tag, keys…)` via FNV-1a.
+    /// Fresh per decision: no draw-order coupling between decisions.
+    fn draw(&self, tag: u64, keys: &[u64]) -> Rng {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.spec.seed;
+        for v in std::iter::once(tag).chain(keys.iter().copied()) {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        Rng::new(h)
+    }
+
+    /// Number of spawned ranks failing on `attempt` (0-based) of the
+    /// spawn keyed `(resize, dispatch)`.  Wave mode fails all or none;
+    /// rank mode draws each of the `n_new` ranks independently.
+    ///
+    /// `spawn=firstK` counts attempts *cumulatively across dispatches
+    /// of the same resize*: a re-queued resize that already burned its
+    /// retry budget (retries + 1 attempts per dispatch) resumes the
+    /// count where the aborted dispatch left it, so `first3` with
+    /// `retries=2` aborts dispatch 0 and succeeds on dispatch 1 —
+    /// exactly the abort-then-recover trace the rollback tests need.
+    pub fn spawn_failures(
+        &self,
+        resize: u64,
+        dispatch: u64,
+        attempt: u32,
+        n_new: usize,
+    ) -> usize {
+        if n_new == 0 {
+            return 0;
+        }
+        if self.spec.spawn_fail_first > 0 {
+            let per_dispatch = u64::from(self.spec.retries) + 1;
+            let global = dispatch
+                .saturating_mul(per_dispatch)
+                .saturating_add(u64::from(attempt));
+            return if global < u64::from(self.spec.spawn_fail_first) { n_new } else { 0 };
+        }
+        if self.spec.spawn_fail_p <= 0.0 {
+            return 0;
+        }
+        let mut rng = self.draw(TAG_SPAWN, &[resize, dispatch, u64::from(attempt)]);
+        if self.spec.per_rank {
+            (0..n_new).filter(|_| rng.gen_bool(self.spec.spawn_fail_p)).count()
+        } else if rng.gen_bool(self.spec.spawn_fail_p) {
+            n_new
+        } else {
+            0
+        }
+    }
+
+    /// Are the notify counters of the `ns → nd` redistribution lost?
+    /// Keyed by the shape only, so sources and (independently spawned)
+    /// drains agree on the epoch-sync fallback without communicating.
+    pub fn notify_lost(&self, ns: usize, nd: usize) -> bool {
+        if self.spec.notify_loss_p <= 0.0 {
+            return false;
+        }
+        self.draw(TAG_NOTIFY, &[ns as u64, nd as u64])
+            .gen_bool(self.spec.notify_loss_p)
+    }
+
+    /// Straggler delay of `rank` entering the resize (0.0 = on time).
+    pub fn straggler_delay(&self, resize: u64, dispatch: u64, rank: usize) -> f64 {
+        if self.spec.straggler_p <= 0.0 || self.spec.straggler_max <= 0.0 {
+            return 0.0;
+        }
+        let mut rng = self.draw(TAG_STRAGGLER, &[resize, dispatch, rank as u64]);
+        if rng.gen_bool(self.spec.straggler_p) {
+            rng.gen_range_f64(0.0, self.spec.straggler_max).max(f64::MIN_POSITIVE)
+        } else {
+            0.0
+        }
+    }
+
+    /// Registration stretch factor of `rank`'s segment stream for this
+    /// resize (1.0 = healthy NIC).
+    pub fn reg_slow_factor(&self, resize: u64, dispatch: u64, rank: usize) -> f64 {
+        if self.spec.reg_slow_p <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = self.draw(TAG_REG, &[resize, dispatch, rank as u64]);
+        if rng.gen_bool(self.spec.reg_slow_p) {
+            self.spec.reg_slow_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Virtual seconds before a failed attempt is *detected*: fail-fast
+    /// reports at `base` (the strategy-dependent launch latency), a
+    /// hang is only noticed when the timeout expires.
+    pub fn detect_latency(&self, base: f64) -> f64 {
+        if self.spec.hang {
+            self.spec.hang_timeout.max(base)
+        } else {
+            base
+        }
+    }
+
+    /// Backoff before retry attempt `attempt` (1-based): capped
+    /// exponential, `backoff · 2^(attempt-1)` clamped to the cap.
+    pub fn backoff_before(&self, attempt: u32) -> f64 {
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(30) as i32);
+        (self.spec.backoff * exp).min(self.spec.backoff_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_through_the_canonical_string() {
+        let s = FaultSpec::parse(
+            "seed=7,spawn=0.3,mode=rank,kind=hang,timeout=0.5,retries=3,\
+             backoff=0.01,backoff-cap=0.08,reg=0.1x4,notify=0.2,\
+             notify-timeout=0.3,straggler=0.15@0.05",
+        )
+        .unwrap();
+        assert_eq!(s.seed, 7);
+        assert!((s.spawn_fail_p - 0.3).abs() < 1e-12);
+        assert!(s.per_rank && s.hang);
+        assert_eq!(s.retries, 3);
+        assert_eq!(FaultSpec::parse(&s.to_spec_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn parse_first_k_and_defaults() {
+        let s = FaultSpec::parse("spawn=first2").unwrap();
+        assert_eq!(s.spawn_fail_first, 2);
+        assert_eq!(s.spawn_fail_p, 0.0);
+        assert_eq!(s.seed, 42);
+        assert!(s.is_active());
+        assert!(!FaultSpec::default().is_active());
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultSpec::parse("spawn").is_err());
+        assert!(FaultSpec::parse("spawn=1.5").is_err());
+        assert!(FaultSpec::parse("mode=sideways").is_err());
+        assert!(FaultSpec::parse("reg=0.5").is_err());
+        assert!(FaultSpec::parse("reg=0.5x0.5").is_err());
+        assert!(FaultSpec::parse("straggler=0.5").is_err());
+        assert!(FaultSpec::parse("warp=9").is_err());
+        assert!(FaultSpec::parse("timeout=-1").is_err());
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_seed_and_keys() {
+        let p = FaultPlan::new(
+            FaultSpec::parse("seed=5,spawn=0.5,reg=0.5x4,notify=0.5,straggler=0.5@0.1").unwrap(),
+        );
+        for _ in 0..3 {
+            assert_eq!(p.spawn_failures(1, 0, 0, 8), p.spawn_failures(1, 0, 0, 8));
+            assert_eq!(p.notify_lost(20, 160), p.notify_lost(20, 160));
+            assert_eq!(
+                p.straggler_delay(2, 1, 3).to_bits(),
+                p.straggler_delay(2, 1, 3).to_bits()
+            );
+            assert_eq!(
+                p.reg_slow_factor(2, 1, 3).to_bits(),
+                p.reg_slow_factor(2, 1, 3).to_bits()
+            );
+        }
+        // Different seeds decide differently somewhere.
+        let q = FaultPlan::new(FaultSpec::parse("seed=6,spawn=0.5").unwrap());
+        let diverge = (0..64)
+            .any(|a| p.spawn_failures(a, 0, 0, 1) != q.spawn_failures(a, 0, 0, 1));
+        assert!(diverge);
+    }
+
+    #[test]
+    fn inactive_plan_injects_nothing() {
+        let p = FaultPlan::new(FaultSpec::default());
+        for r in 0..32 {
+            assert_eq!(p.spawn_failures(r, 0, 0, 16), 0);
+            assert_eq!(p.straggler_delay(r, 0, 0), 0.0);
+            assert_eq!(p.reg_slow_factor(r, 0, 0), 1.0);
+        }
+        assert!(!p.notify_lost(20, 160));
+    }
+
+    #[test]
+    fn first_k_fails_exactly_the_first_k_attempts() {
+        let p = FaultPlan::new(FaultSpec::parse("spawn=first2").unwrap());
+        assert_eq!(p.spawn_failures(0, 0, 0, 4), 4);
+        assert_eq!(p.spawn_failures(0, 0, 1, 4), 4);
+        assert_eq!(p.spawn_failures(0, 0, 2, 4), 0);
+        assert_eq!(p.spawn_failures(9, 0, 0, 4), 4, "every resize's first dispatch");
+        // A re-dispatch resumes the cumulative attempt count: with the
+        // default retries=2 a dispatch burns 3 attempts, so dispatch 1
+        // starts at global attempt 3 — past first2, all healthy.
+        assert_eq!(p.spawn_failures(0, 1, 0, 4), 0);
+        // first3 + retries=2: dispatch 0 exhausts (attempts 0..=2 all
+        // fail, abort), dispatch 1 recovers immediately.
+        let q = FaultPlan::new(FaultSpec::parse("spawn=first3").unwrap());
+        assert_eq!(q.spawn_failures(0, 0, 2, 4), 4);
+        assert_eq!(q.spawn_failures(0, 1, 0, 4), 0);
+    }
+
+    #[test]
+    fn wave_mode_is_all_or_none_rank_mode_is_a_subset() {
+        let wave = FaultPlan::new(FaultSpec::parse("spawn=0.5,mode=wave").unwrap());
+        for r in 0..32 {
+            let f = wave.spawn_failures(r, 0, 0, 8);
+            assert!(f == 0 || f == 8, "wave failure must be whole-wave, got {f}");
+        }
+        let rank = FaultPlan::new(FaultSpec::parse("spawn=0.5,mode=rank").unwrap());
+        let counts: Vec<usize> = (0..32).map(|r| rank.spawn_failures(r, 0, 0, 8)).collect();
+        assert!(counts.iter().all(|&f| f <= 8));
+        assert!(counts.iter().any(|&f| f > 0 && f < 8), "partial waves expected");
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_and_hang_extends_detection() {
+        let p = FaultPlan::new(
+            FaultSpec::parse("kind=hang,timeout=0.5,backoff=0.02,backoff-cap=0.05").unwrap(),
+        );
+        assert!((p.backoff_before(1) - 0.02).abs() < 1e-12);
+        assert!((p.backoff_before(2) - 0.04).abs() < 1e-12);
+        assert!((p.backoff_before(3) - 0.05).abs() < 1e-12, "capped");
+        assert!((p.backoff_before(9) - 0.05).abs() < 1e-12);
+        assert_eq!(p.detect_latency(0.1), 0.5);
+        assert_eq!(p.detect_latency(0.9), 0.9, "slow launch dominates the timeout");
+        let fast = FaultPlan::new(FaultSpec::default());
+        assert_eq!(fast.detect_latency(0.1), 0.1);
+    }
+}

@@ -18,11 +18,14 @@
 //!
 //! * [`engine`]  — the event loop, virtual clock and activity handoff.
 //! * [`activity`] — the context handle simulated code runs against.
+//! * [`faults`]  — deterministic seeded fault injection (`--faults`).
 
 pub mod activity;
 pub mod engine;
+pub mod faults;
 
 pub use activity::ActivityCtx;
+pub use faults::{FaultPlan, FaultSpec};
 pub use engine::{
     default_queue_kind, set_default_queue_kind, ActivityId, Engine, EngineError, EngineStats,
     LiteCtx, LiteStep, QueueKind, Time,

@@ -39,6 +39,7 @@ pub mod types;
 pub mod winpool;
 pub mod world;
 
+pub use crate::simcluster::faults::{FaultPlan, FaultSpec};
 pub use proc::MpiProc;
 pub use request::ReqId;
 pub use rma::SchedStats;

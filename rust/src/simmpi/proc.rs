@@ -1239,6 +1239,28 @@ impl MpiProc {
         self.world.lock().unwrap().win_pool.stats()
     }
 
+    /// The installed fault plan, if any (`--faults`; None = the
+    /// fault-free fast path, bit-identical to pre-fault builds).
+    pub fn fault_plan(&self) -> Option<Arc<crate::simcluster::faults::FaultPlan>> {
+        self.world.lock().unwrap().faults.clone()
+    }
+
+    /// Poison every rank's window-pool pin of `token` (abort-and-
+    /// rollback: a half-registered structure must re-register cold).
+    /// Returns the number of pins dropped.
+    pub fn win_pool_poison(&self, token: u64) -> u64 {
+        self.world.lock().unwrap().win_pool.poison_token(token)
+    }
+
+    /// Invalidate the job-level persistent-schedule descriptor `key`
+    /// for **every** rank slot (abort-and-rollback): an aborted resize
+    /// may have left the negotiated schedule half-built on any subset
+    /// of slots, so the next occurrence must cold-build, not replay.
+    pub fn sched_invalidate(&self, key: u64) {
+        let mut w = self.world.lock().unwrap();
+        w.sched_pins.retain(|&(_, k)| k != key);
+    }
+
     /// MPI_Win_free (collective): closing barrier + local deregistration.
     pub fn win_free(&self, win: WinId) {
         self.mpi_prologue();
@@ -1292,7 +1314,7 @@ impl MpiProc {
             let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
             let elems = w.windows[win.0].exposures[my_rank].elems();
             let chunk = w.windows[win.0].seg_elems;
-            let segs = segment_deregs(&w.cost, elems, chunk);
+            let segs = Self::mt_stretch_segs(&w, self.gpid, segment_deregs(&w.cost, elems, chunk));
             let fixed = w.cost.window_free(0);
             w.windows[win.0].freed_local[my_rank] = true;
             (comm, segs, fixed)
@@ -1336,7 +1358,7 @@ impl MpiProc {
             let my_rank = w.comm(comm).rank_of(self.gpid).expect("not in win comm");
             let elems = w.windows[win.0].exposures[my_rank].elems();
             let chunk = w.windows[win.0].seg_elems;
-            let segs = segment_deregs(&w.cost, elems, chunk);
+            let segs = Self::mt_stretch_segs(&w, self.gpid, segment_deregs(&w.cost, elems, chunk));
             let elig = w.windows[win.0].dereg_eligibility(my_rank);
             let done = dereg_stream(&elig, &segs);
             let end = done.last().copied().unwrap_or(0.0);
@@ -1356,6 +1378,22 @@ impl MpiProc {
         self.ctx.advance(fixed);
         let mut w = self.world.lock().unwrap();
         w.windows[win.0].free_local(my_rank);
+    }
+
+    /// MT-stretch of a deregistration stream (Threading, §V-D): while
+    /// this process's auxiliary thread is alive the unpin work shares
+    /// the oversubscribed core, so every segment's duration stretches
+    /// by the same factor [`MpiProc::compute`] applies — the teardown
+    /// mirror of the compute stretch.  A no-op (the exact same `Vec`)
+    /// without a live aux thread.
+    fn mt_stretch_segs(w: &MpiWorld, gpid: usize, mut segs: Vec<f64>) -> Vec<f64> {
+        if w.oversubscription && w.procs[gpid].aux_alive {
+            let f = w.cost.params.oversub_factor;
+            for s in &mut segs {
+                *s *= f;
+            }
+        }
+        segs
     }
 
     /// Precondition of the pipelined teardown: this rank's exposure in
@@ -2621,6 +2659,45 @@ mod tests {
         let plain = lifecycle_end(400_000, 500_000, false);
         let via_pipe = lifecycle_end(400_000, 500_000, true);
         assert_eq!(plain.to_bits(), via_pipe.to_bits());
+    }
+
+    #[test]
+    fn mt_dereg_stream_is_stretched_across_the_aux_window() {
+        // Threading strategy: while the auxiliary thread is alive the
+        // dereg stream shares the oversubscribed core, so each
+        // segment's unpin stretches by the same factor `compute` uses.
+        // Free promptly after the pipelined create so the stream is
+        // gated by live eligibility times (a long-idle window's stream
+        // completes in the past and the stretch would be unobservable).
+        fn free_exit(with_aux: bool) -> f64 {
+            let mut s = sim(1, 2);
+            let exit = Arc::new(Mutex::new(0.0f64));
+            let e2 = exit.clone();
+            s.launch(1, move |p| {
+                let elems = 100_000_000u64; // ~0.8 s registration stream
+                let opts = WinCreateOpts::pipelined(1_000_000);
+                let win = p.win_create_with(WORLD, Payload::virt(elems), opts);
+                if with_aux {
+                    // Pure compute: holds aux_alive through the free
+                    // without touching the MPI progress token.
+                    p.spawn_aux(|aux| aux.compute(10.0));
+                }
+                p.win_free_local_pipelined(win);
+                *e2.lock().unwrap() = p.now();
+                p.aux_join();
+            });
+            s.run().unwrap();
+            let t = exit.lock().unwrap();
+            *t
+        }
+        let plain = free_exit(false);
+        let stretched = free_exit(true);
+        assert!(
+            stretched > plain + 1e-9,
+            "aux window must stretch the dereg stream: plain={plain} stretched={stretched}"
+        );
+        // Determinism of the stretched path.
+        assert_eq!(free_exit(true).to_bits(), stretched.to_bits());
     }
 
     #[test]

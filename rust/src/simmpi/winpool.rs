@@ -75,6 +75,9 @@ pub struct WinPoolStats {
     /// Segments skipped warm by pipelined acquires (per-segment
     /// warmth: a previous pin covered them).
     pub seg_warm_regs: u64,
+    /// Pins invalidated by an aborted resize (`FaultPlan` rollback):
+    /// a half-registered window must not be treated as warm later.
+    pub poisoned: u64,
 }
 
 /// One pinned token: its covered size class and an LRU stamp.
@@ -234,6 +237,21 @@ impl WinPool {
     /// gone, a later process reusing the gpid must re-register).
     pub fn unpin_all(&mut self, gpid: usize) {
         self.pinned.retain(|&(g, _), _| g != gpid);
+    }
+
+    /// Poison every rank's pin of `token` (abort-and-rollback): an
+    /// aborted resize may have left the structure's registration
+    /// half-complete on any subset of ranks, and pins survive
+    /// `retire_proc` only for ranks that stay — so the safe
+    /// invalidation is global per structure.  The next acquire under
+    /// the token is cold (rebuilt, not replayed).  Returns the number
+    /// of pins dropped.
+    pub fn poison_token(&mut self, token: u64) -> u64 {
+        let before = self.pinned.len();
+        self.pinned.retain(|&(_, t), _| t != token);
+        let dropped = (before - self.pinned.len()) as u64;
+        self.stats.poisoned += dropped;
+        dropped
     }
 
     /// Account one acquire.  `saved` is the registration time a warm
@@ -458,6 +476,20 @@ mod tests {
         p.touch(0, 3); // make token 2 the LRU victim
         let ev = p.record_pin(0, 4, 64, 2);
         assert_eq!(ev, vec![EvictedPin { bytes: 64, reg_done_at: 3.0 }]);
+    }
+
+    #[test]
+    fn poisoning_a_token_clears_every_ranks_pin() {
+        let mut p = WinPool::new();
+        p.record_pin(0, 7, 64, 0);
+        p.record_pin(1, 7, 64, 0);
+        p.record_pin(0, 8, 64, 0);
+        assert_eq!(p.poison_token(7), 2);
+        assert!(!p.is_warm(0, 7, 64));
+        assert!(!p.is_warm(1, 7, 64));
+        assert!(p.is_warm(0, 8, 64), "other tokens survive");
+        assert_eq!(p.stats().poisoned, 2);
+        assert_eq!(p.poison_token(7), 0, "idempotent");
     }
 
     #[test]

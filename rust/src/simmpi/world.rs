@@ -11,6 +11,7 @@ use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::netmodel::{CostModel, NetParams, Placement, Topology};
+use crate::simcluster::faults::FaultPlan;
 use crate::simcluster::{ActivityId, Engine, EngineError, Time};
 
 use super::collective::CollState;
@@ -139,6 +140,10 @@ pub struct MpiWorld {
     pub metrics: crate::monitor::Metrics,
     /// Oversubscription model toggle (always on; tests may disable).
     pub oversubscription: bool,
+    /// Installed fault plan (`--faults`).  Immutable configuration —
+    /// deliberately excluded from [`WorldSnapshot`]: a rollback must
+    /// not change which faults fire.
+    pub(crate) faults: Option<Arc<FaultPlan>>,
 }
 
 impl MpiWorld {
@@ -164,6 +169,7 @@ impl MpiWorld {
             derived_waiters: HashMap::new(),
             metrics: crate::monitor::Metrics::new(),
             oversubscription: true,
+            faults: None,
         }
     }
 
@@ -327,6 +333,14 @@ impl MpiSim {
     /// Shared handle to the world (inspect metrics after `run`).
     pub fn world(&self) -> Arc<Mutex<MpiWorld>> {
         self.world.clone()
+    }
+
+    /// Install a fault plan (`--faults`).  Must be called before
+    /// `launch`-ed bodies start reading it; inactive plans are not
+    /// installed at all, so the fault-free fast path stays untouched.
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        let mut w = self.world.lock().unwrap();
+        w.faults = plan.spec.is_active().then(|| Arc::new(plan));
     }
 
     /// Launch the initial `n` ranks as communicator [`WORLD`].  Every

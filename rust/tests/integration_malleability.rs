@@ -12,7 +12,7 @@ use proteo::netmodel::{NetParams, Topology};
 use proteo::proteo::{run_once, RunSpec};
 use proteo::rms::{Policy, Rms};
 use proteo::sam::{Sam, SamConfig};
-use proteo::simmpi::{CommId, MpiProc, MpiSim, WORLD};
+use proteo::simmpi::{CommId, MpiProc, MpiSim, RmaSync, WORLD};
 
 fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
     let mut sam = SamConfig::sarteco25();
@@ -39,6 +39,9 @@ fn tiny_spec(ns: usize, nd: usize, m: Method, s: Strategy) -> RunSpec {
         rma_dereg: true,
         planner: PlannerMode::Fixed,
         recalib: false,
+        rma_sync: RmaSync::Epoch,
+        sched_cache: false,
+        faults: None,
     }
 }
 
@@ -213,6 +216,8 @@ fn multi_resize_marathon_with_sam() {
                 win_pool: WinPoolPolicy::off(),
                 rma_chunk_kib: 0,
                 rma_dereg: true,
+                rma_sync: RmaSync::Epoch,
+                sched_cache: false,
                 planner: PlannerMode::Fixed,
                 recalib: false,
             },

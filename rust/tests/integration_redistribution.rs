@@ -52,6 +52,8 @@ fn verify_roundtrip(ns: usize, nd: usize, method: Method, strategy: Strategy, n_
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
             rma_dereg: true,
+            rma_sync: proteo::simmpi::RmaSync::Epoch,
+            sched_cache: false,
             planner: PlannerMode::Fixed,
             recalib: false,
         };

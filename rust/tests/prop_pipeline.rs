@@ -78,6 +78,8 @@ fn run_and_collect_cfg(
             win_pool: if pool { WinPoolPolicy::on() } else { WinPoolPolicy::off() },
             rma_chunk_kib,
             rma_dereg: true,
+            rma_sync: proteo::simmpi::RmaSync::Epoch,
+            sched_cache: false,
             planner: PlannerMode::Fixed,
             recalib: false,
         };

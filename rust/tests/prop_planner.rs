@@ -42,6 +42,7 @@ fn inputs(ns: usize, nd: usize, elems: usize, warm: bool) -> PlannerInputs {
         sched_cache: false,
         sched_warm: false,
         future_resizes: 0,
+        fail_p: 0.0,
     }
 }
 

@@ -49,6 +49,8 @@ fn run_and_collect(
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
             rma_dereg: true,
+            rma_sync: proteo::simmpi::RmaSync::Epoch,
+            sched_cache: false,
             planner: PlannerMode::Fixed,
             recalib: false,
         };
@@ -173,6 +175,8 @@ fn prop_block_sizes_after_resize_match_block_of() {
                     win_pool: WinPoolPolicy::off(),
                     rma_chunk_kib: 0,
                     rma_dereg: true,
+                    rma_sync: proteo::simmpi::RmaSync::Epoch,
+                    sched_cache: false,
                     planner: PlannerMode::Fixed,
                     recalib: false,
                 };
@@ -249,6 +253,8 @@ fn prop_virtual_and_real_modes_share_control_flow() {
                         win_pool: WinPoolPolicy::off(),
                         rma_chunk_kib: 0,
                         rma_dereg: true,
+                        rma_sync: proteo::simmpi::RmaSync::Epoch,
+                        sched_cache: false,
                         planner: PlannerMode::Fixed,
                         recalib: false,
                     };

@@ -47,6 +47,8 @@ fn run_grow(
             win_pool: WinPoolPolicy::off(),
             rma_chunk_kib: 0,
             rma_dereg: true,
+            rma_sync: proteo::simmpi::RmaSync::Epoch,
+            sched_cache: false,
             planner: PlannerMode::Fixed,
             recalib: false,
         };
