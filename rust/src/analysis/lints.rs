@@ -1,0 +1,406 @@
+//! The individual lint passes.
+//!
+//! Every pass is line-oriented over a [`SourceFile`]'s code view (see
+//! [`super::source`]), reports 1-based `file:line` positions, and is a
+//! pure function of the source text — the audit itself must be as
+//! deterministic as the simulator it guards.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::source::{ident_hits, SourceFile};
+use super::Finding;
+
+/// `HashMap`/`HashSet` iteration order is seeded per-process
+/// (`RandomState`), so any use inside the simulator risks leaking
+/// nondeterministic order into virtual time, counters, or JSON.  The
+/// lint conservatively flags *every* use of the std hash containers:
+/// the crate's keyed tables are `BTreeMap`/`BTreeSet` by contract, and
+/// a genuinely order-free use can carry an `audit:allow`.
+pub const HASHMAP_ITER: &str = "det::hashmap-iter-escapes";
+
+/// Wall-clock reads (`Instant`, `SystemTime`) differ across machines
+/// and runs; sim-path durations must come from virtual time.  The only
+/// allowed module is `util::wallclock`, the gateway harness code uses
+/// for soft `wall_s` metrics.
+pub const WALL_CLOCK: &str = "det::wall-clock-in-sim";
+
+/// Entropy-seeded RNGs (`thread_rng`, `OsRng`, `from_entropy`,
+/// `RandomState`, `getrandom`) make runs unrepeatable.  All
+/// randomness flows from `util::rng` seeded by the `RunSpec`.
+pub const UNSEEDED_RNG: &str = "det::unseeded-rng";
+
+/// OS threads spawned outside the pooled worker in
+/// `simcluster::engine` escape the engine's scheduling discipline
+/// (bounded pool, deterministic handoff) and TSan coverage.
+pub const BARE_SPAWN: &str = "conc::bare-thread-spawn";
+
+/// Declared lock hierarchy: the world mutex (`world` / `w`) is
+/// acquired *before* the worker-pool mutex (`worker_pool` / `pool`),
+/// and neither is acquired re-entrantly.  Acquiring against the order
+/// deadlocks under contention.
+pub const LOCK_ORDER: &str = "conc::lock-order";
+
+/// Calls routed through `#[deprecated]` lifecycle shims (PR 7) keep
+/// dead API surface alive; call the `*_with` opts-struct entrypoints.
+pub const DEPRECATED_SHIM: &str = "api::deprecated-shim";
+
+/// An `audit:allow` that no longer suppresses anything (or lacks a
+/// reason) is itself a defect: suppressions must stay auditable and
+/// minimal.
+pub const STALE_ALLOW: &str = "audit::stale-allow";
+
+/// Every lint the pass knows, with its rationale.
+pub const LINTS: &[(&str, &str)] = &[
+    (HASHMAP_ITER, "hash containers iterate in RandomState order; use BTreeMap/BTreeSet"),
+    (WALL_CLOCK, "Instant/SystemTime vary per host; only util::wallclock may read them"),
+    (UNSEEDED_RNG, "entropy-seeded RNGs are unrepeatable; seed util::rng from the RunSpec"),
+    (BARE_SPAWN, "threads outside the engine worker pool escape deterministic handoff"),
+    (LOCK_ORDER, "order is world before worker_pool, never re-entrant; else deadlock"),
+    (DEPRECATED_SHIM, "shims last one transition PR; call the *_with opts entrypoints"),
+    (STALE_ALLOW, "audit:allow needs a reason and a live finding; stale ones rot"),
+];
+
+/// Rationale for a lint name, if known.
+pub fn rationale(lint: &str) -> Option<&'static str> {
+    LINTS.iter().find(|(n, _)| *n == lint).map(|(_, r)| *r)
+}
+
+fn file_is(f: &SourceFile, suffix: &str) -> bool {
+    f.name == suffix || f.name.ends_with(&format!("/{suffix}"))
+}
+
+fn word_lint(f: &SourceFile, words: &[&str], lint: &'static str, what: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in f.code.iter().enumerate() {
+        for w in words {
+            if !ident_hits(line, w).is_empty() {
+                out.push(Finding {
+                    file: f.name.clone(),
+                    line: i + 1,
+                    lint,
+                    message: format!("{what} `{w}`"),
+                });
+            }
+        }
+    }
+    out
+}
+
+pub fn lint_hash_containers(f: &SourceFile) -> Vec<Finding> {
+    word_lint(f, &["HashMap", "HashSet"], HASHMAP_ITER, "std hash container")
+}
+
+pub fn lint_wall_clock(f: &SourceFile) -> Vec<Finding> {
+    if file_is(f, "util/wallclock.rs") {
+        return Vec::new();
+    }
+    word_lint(f, &["Instant", "SystemTime"], WALL_CLOCK, "wall-clock type")
+}
+
+pub fn lint_unseeded_rng(f: &SourceFile) -> Vec<Finding> {
+    let words = ["thread_rng", "from_entropy", "OsRng", "getrandom", "RandomState", "SmallRng"];
+    word_lint(f, &words, UNSEEDED_RNG, "entropy-seeded RNG")
+}
+
+pub fn lint_bare_spawn(f: &SourceFile) -> Vec<Finding> {
+    if file_is(f, "simcluster/engine.rs") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in f.code.iter().enumerate() {
+        if line.contains("thread::spawn") || line.contains("thread::Builder") {
+            out.push(Finding {
+                file: f.name.clone(),
+                line: i + 1,
+                lint: BARE_SPAWN,
+                message: "OS thread outside the simcluster::engine worker pool".to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Declared hierarchy rank of a mutex, from the receiver expression's
+/// final path segment.  Lower ranks are acquired first.
+fn lock_rank(receiver: &str) -> Option<(u8, &'static str)> {
+    match receiver {
+        "world" | "w" => Some((1, "world")),
+        "worker_pool" | "pool" => Some((2, "worker_pool")),
+        _ => None,
+    }
+}
+
+/// The receiver's final identifier segment before `.lock()` at byte
+/// offset `at` in `line` (e.g. `self.world.lock()` → `world`,
+/// `worker_pool().lock()` → `worker_pool`).
+fn lock_receiver(line: &str, at: usize) -> String {
+    let b = line.as_bytes();
+    let mut end = at;
+    while end > 0 && b[end - 1] == b')' {
+        // Strip a trailing call: find its matching open paren.
+        let mut depth = 0usize;
+        let mut j = end;
+        while j > 0 {
+            j -= 1;
+            match b[j] {
+                b')' => depth += 1,
+                b'(' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        end = j;
+    }
+    let mut start = end;
+    while start > 0 && (b[start - 1] == b'_' || b[start - 1].is_ascii_alphanumeric()) {
+        start -= 1;
+    }
+    line[start..end].to_string()
+}
+
+struct Hold {
+    name: String,
+    rank: u8,
+    label: &'static str,
+    depth: i32,
+}
+
+pub fn lint_lock_order(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut depth: i32 = 0;
+    let mut holds: Vec<Hold> = Vec::new();
+    let mut barriers: Vec<i32> = Vec::new();
+    let mut prev_nonws = b' ';
+    for (i, line) in f.code.iter().enumerate() {
+        // 1. Acquisition events on this line, checked against holds
+        //    visible at the current depth (closure bodies run later on
+        //    other activities, so an enclosing closure is a barrier).
+        let floor = barriers.last().copied().unwrap_or(i32::MIN);
+        let mut from = 0;
+        while let Some(p) = line[from..].find(".lock()") {
+            let at = from + p;
+            if let Some((rank, label)) = lock_rank(&lock_receiver(line, at)) {
+                for h in holds.iter().filter(|h| h.depth >= floor) {
+                    if h.rank >= rank {
+                        out.push(Finding {
+                            file: f.name.clone(),
+                            line: i + 1,
+                            lint: LOCK_ORDER,
+                            message: format!(
+                                "acquires `{label}` while `{}` is held by `{}`",
+                                h.label, h.name
+                            ),
+                        });
+                    }
+                }
+            }
+            from = at + ".lock()".len();
+        }
+        // 2. Guard bindings: `let [mut] NAME = <recv>.lock().unwrap();`
+        //    hold until their block closes or an explicit drop.
+        let t = line.trim();
+        if t.starts_with("let ") && t.ends_with(".lock().unwrap();") {
+            let rest = t["let ".len()..].trim_start_matches("mut ").trim_start();
+            let name: String =
+                rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+            let at = line.find(".lock()").expect("suffix-checked");
+            if let Some((rank, label)) = lock_rank(&lock_receiver(line, at)) {
+                if !name.is_empty() {
+                    holds.push(Hold { name, rank, label, depth });
+                }
+            }
+        }
+        // 3. Explicit releases.
+        holds.retain(|h| !line.contains(&format!("drop({})", h.name)));
+        // 4. Brace and closure-barrier tracking.
+        for &c in line.as_bytes() {
+            match c {
+                b'{' => {
+                    depth += 1;
+                    if prev_nonws == b'|' {
+                        barriers.push(depth);
+                    }
+                }
+                b'}' => {
+                    depth -= 1;
+                    holds.retain(|h| h.depth <= depth);
+                    barriers.retain(|&b| b <= depth);
+                }
+                b' ' | b'\t' => continue,
+                _ => {}
+            }
+            prev_nonws = c;
+        }
+    }
+    out
+}
+
+/// A `#[deprecated]` function: its name and body line span (1-based,
+/// inclusive, covering signature through closing brace).
+pub struct DeprecatedFn {
+    pub name: String,
+    pub span: (usize, usize),
+}
+
+/// Collect the `#[deprecated]` functions declared in `f`.
+pub fn deprecated_fns(f: &SourceFile) -> Vec<DeprecatedFn> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < f.code.len() {
+        if !f.code[i].contains("#[deprecated") {
+            i += 1;
+            continue;
+        }
+        // Find the `fn` the attribute decorates.
+        let mut j = i + 1;
+        let mut name = String::new();
+        while j < f.code.len() {
+            if let Some(p) = f.code[j].find("fn ") {
+                let rest = &f.code[j][p + 3..];
+                name = rest
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                break;
+            }
+            j += 1;
+        }
+        if name.is_empty() {
+            i += 1;
+            continue;
+        }
+        // Track braces from the signature line to the body's close.
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut end = j;
+        'body: for (k, line) in f.code.iter().enumerate().skip(j) {
+            for &c in line.as_bytes() {
+                match c {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => depth -= 1,
+                    b';' if !opened => {
+                        // Bodyless declaration.
+                        end = k;
+                        break 'body;
+                    }
+                    _ => {}
+                }
+            }
+            if opened && depth == 0 {
+                end = k;
+                break;
+            }
+        }
+        out.push(DeprecatedFn { name, span: (i + 1, end + 1) });
+        i = end + 1;
+    }
+    out
+}
+
+/// All `fn NAME` definitions in a file: `(name, 1-based line)`.
+pub fn fn_defs(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in f.code.iter().enumerate() {
+        let lb = line.as_bytes();
+        let mut from = 0;
+        while let Some(p) = line[from..].find("fn ") {
+            let at = from + p;
+            from = at + 3;
+            if at > 0 && (lb[at - 1] == b'_' || lb[at - 1].is_ascii_alphanumeric()) {
+                continue;
+            }
+            let name: String = line[at + 3..]
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                out.push((name, i + 1));
+            }
+        }
+    }
+    out
+}
+
+/// The module name a file defines (`mam/rma.rs` → `rma`,
+/// `mam/mod.rs` → `mam`), used to match path-qualified calls.
+pub fn module_stem(name: &str) -> String {
+    let segs: Vec<&str> = name.trim_end_matches(".rs").split('/').collect();
+    match segs.as_slice() {
+        [.., parent, "mod"] => (*parent).to_string(),
+        [.., last] => (*last).to_string(),
+        [] => String::new(),
+    }
+}
+
+/// Flag calls to crate-wide deprecated shims, excluding the shims' own
+/// definitions and bodies (a shim may delegate through another).
+///
+/// Without type information a bare name is ambiguous when a
+/// *non-deprecated* function of the same name also exists (the COL
+/// method's `redistribute_blocking` vs the RMA shim of the same name),
+/// so the matcher is deliberately one-sided: a path-qualified call
+/// (`rma::redistribute_blocking(..)`) is flagged only when the
+/// qualifier names a module that declares the deprecated fn, and an
+/// unqualified or method call only when no non-deprecated twin exists
+/// anywhere in the tree.  False negatives are possible; false
+/// positives are not.
+pub fn lint_deprecated_callers(
+    f: &SourceFile,
+    dep_stems: &BTreeMap<String, BTreeSet<String>>,
+    nondep: &BTreeSet<String>,
+    own: &[DeprecatedFn],
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in f.code.iter().enumerate() {
+        let ln = i + 1;
+        if own.iter().any(|d| d.span.0 <= ln && ln <= d.span.1) {
+            continue;
+        }
+        for (name, stems) in dep_stems {
+            for at in ident_hits(line, name) {
+                let after = line[at + name.len()..].trim_start();
+                if !after.starts_with('(') {
+                    continue;
+                }
+                let before = line[..at].trim_end();
+                if before.ends_with("fn") {
+                    continue;
+                }
+                let hit = match path_qualifier(line, at) {
+                    Some(seg) => stems.contains(&seg),
+                    None => !nondep.contains(name),
+                };
+                if hit {
+                    out.push(Finding {
+                        file: f.name.clone(),
+                        line: ln,
+                        lint: DEPRECATED_SHIM,
+                        message: format!("call routes through deprecated shim `{name}`"),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The path segment directly before `seg::name` at byte offset `at`,
+/// if the call is path-qualified.
+fn path_qualifier(line: &str, at: usize) -> Option<String> {
+    let b = line.as_bytes();
+    if at < 2 || b[at - 1] != b':' || b[at - 2] != b':' {
+        return None;
+    }
+    let mut start = at - 2;
+    while start > 0 && (b[start - 1] == b'_' || b[start - 1].is_ascii_alphanumeric()) {
+        start -= 1;
+    }
+    Some(line[start..at - 2].to_string())
+}

@@ -1,0 +1,223 @@
+//! `proteo audit` — the determinism & concurrency lint engine.
+//!
+//! Every result in this reproduction rests on one invariant: simulated
+//! runs are **byte-deterministic** — knobs-off bit-identity across
+//! PRs, rank agreement without synchronization, queue-swap
+//! equivalence.  The property tests *assert* it; this module
+//! *prevents* the easy ways of silently breaking it.  A lightweight,
+//! syn-free scanner (the build is offline — no parser crates) walks
+//! `rust/src/**` and enforces the contract as named, suppressible
+//! lints:
+//!
+//! | lint | guards against |
+//! |------|----------------|
+//! | `det::hashmap-iter-escapes` | std hash-container order escaping into virtual time or reports |
+//! | `det::wall-clock-in-sim` | `Instant`/`SystemTime` outside [`crate::util::wallclock`] |
+//! | `det::unseeded-rng` | entropy-seeded RNGs (`thread_rng`, `OsRng`, …) |
+//! | `conc::bare-thread-spawn` | OS threads outside the `simcluster::engine` worker pool |
+//! | `conc::lock-order` | acquisitions violating the world → worker_pool hierarchy |
+//! | `api::deprecated-shim` | callers routing through `#[deprecated]` lifecycle shims |
+//! | `audit::stale-allow` | suppressions that hide nothing (or lack a reason) |
+//!
+//! A finding can be suppressed in place with
+//! `// audit:allow(lint-name, reason)` on the offending line or the
+//! line directly above; the reason is mandatory and a directive that
+//! no longer suppresses anything is itself flagged
+//! (`audit::stale-allow`), so the escape hatch cannot rot.
+//!
+//! Run `proteo audit` for a report, `proteo audit --deny` as the CI
+//! gate (nonzero exit on any finding).  The scanner works on a *code
+//! view* with comments/strings blanked (see [`source`]), so lints
+//! never fire on prose, and its output is sorted — the audit is as
+//! deterministic as the code it checks.
+
+pub mod lints;
+pub mod source;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+pub use lints::{
+    rationale, BARE_SPAWN, DEPRECATED_SHIM, HASHMAP_ITER, LINTS, LOCK_ORDER, STALE_ALLOW,
+    UNSEEDED_RNG, WALL_CLOCK,
+};
+use source::SourceFile;
+
+/// One lint hit: `file:line: [lint] message`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, out: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(out, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.message)
+    }
+}
+
+/// Audit in-memory sources: `(name, content)` pairs.  Returns the
+/// surviving findings sorted by `(file, line, lint, message)` —
+/// independent of the order files are passed in.
+pub fn audit_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let parsed: Vec<SourceFile> = files.iter().map(|(n, t)| SourceFile::parse(n, t)).collect();
+
+    // Crate-wide pass: every #[deprecated] fn (name -> declaring
+    // module stems), each file's own shim spans (shims may delegate
+    // through each other), and the names that also have non-deprecated
+    // definitions (ambiguous without type info; see lints.rs).
+    let mut dep_stems: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut dep_spans: BTreeMap<String, Vec<lints::DeprecatedFn>> = BTreeMap::new();
+    for f in &parsed {
+        let d = lints::deprecated_fns(f);
+        let stem = lints::module_stem(&f.name);
+        for x in &d {
+            dep_stems.entry(x.name.clone()).or_default().insert(stem.clone());
+        }
+        dep_spans.insert(f.name.clone(), d);
+    }
+    let mut nondep: BTreeSet<String> = BTreeSet::new();
+    for f in &parsed {
+        let own = &dep_spans[&f.name];
+        for (name, line) in lints::fn_defs(f) {
+            if !own.iter().any(|d| d.span.0 <= line && line <= d.span.1) {
+                nondep.insert(name);
+            }
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &parsed {
+        let own = &dep_spans[&f.name];
+        let mut raw = Vec::new();
+        raw.extend(lints::lint_hash_containers(f));
+        raw.extend(lints::lint_wall_clock(f));
+        raw.extend(lints::lint_unseeded_rng(f));
+        raw.extend(lints::lint_bare_spawn(f));
+        raw.extend(lints::lint_lock_order(f));
+        raw.extend(lints::lint_deprecated_callers(f, &dep_stems, &nondep, own));
+        // In-place suppression (marks the directives it uses).
+        findings.extend(raw.into_iter().filter(|x| !f.allowed(x.lint, x.line)));
+        // Directive hygiene: reasons are mandatory, staleness is a
+        // finding.  Deliberately not suppressible by itself.
+        for a in &f.allows {
+            if a.reason.is_empty() {
+                findings.push(Finding {
+                    file: f.name.clone(),
+                    line: a.line,
+                    lint: STALE_ALLOW,
+                    message: format!("audit:allow({}) lacks its mandatory reason", a.lint),
+                });
+            } else if !a.used.get() {
+                findings.push(Finding {
+                    file: f.name.clone(),
+                    line: a.line,
+                    lint: STALE_ALLOW,
+                    message: format!(
+                        "audit:allow({}, {}) suppresses nothing here; remove it",
+                        a.lint, a.reason
+                    ),
+                });
+            }
+        }
+    }
+    findings.sort();
+    findings.dedup();
+    findings
+}
+
+/// Audit every `.rs` file under `root`, in sorted path order.  File
+/// names in the findings are `root`-relative with `/` separators.
+pub fn audit_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel = p.strip_prefix(root).unwrap_or(p);
+        files.push((rel.display().to_string().replace('\\', "/"), text));
+    }
+    Ok(audit_sources(&files))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn audit_one(name: &str, src: &str) -> Vec<Finding> {
+        audit_sources(&[(name.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn clean_source_has_no_findings() {
+        let src = concat!(
+            "use std::collections::BTreeMap;\n",
+            "fn f() -> BTreeMap<u8, u8> { BTreeMap::new() }\n"
+        );
+        assert!(audit_one("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_container_in_string_or_comment_never_fires() {
+        let src = "// a HashMap joke\nfn f() { let s = \"HashSet\"; let _ = s; }\n";
+        assert!(audit_one("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wallclock_module_is_the_single_allowed_clock_site() {
+        let src = "use std::time::Instant;\n";
+        assert!(audit_one("util/wallclock.rs", src).is_empty());
+        let hit = audit_one("simmpi/world.rs", src);
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].lint, WALL_CLOCK);
+    }
+
+    #[test]
+    fn allow_suppresses_and_staleness_is_flagged() {
+        let ok = "// audit:allow(det::hashmap-iter-escapes, ok)\nuse std::collections::HashMap;\n";
+        assert!(audit_one("a.rs", ok).is_empty());
+        let stale = "// audit:allow(det::hashmap-iter-escapes, nothing here)\nfn f() {}\n";
+        let hit = audit_one("a.rs", stale);
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].lint, STALE_ALLOW);
+        assert_eq!(hit[0].line, 1);
+    }
+
+    #[test]
+    fn findings_sort_independently_of_file_order() {
+        let a = ("a.rs".to_string(), "use std::collections::HashMap;\n".to_string());
+        let b = ("b.rs".to_string(), "use std::time::Instant;\n".to_string());
+        let fwd = audit_sources(&[a.clone(), b.clone()]);
+        let rev = audit_sources(&[b, a]);
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.len(), 2);
+    }
+
+    #[test]
+    fn every_lint_has_a_rationale() {
+        for (name, why) in LINTS {
+            assert!(rationale(name).is_some(), "{name}");
+            assert!(!why.is_empty());
+        }
+        assert!(rationale("not-a-lint").is_none());
+    }
+}

@@ -1,0 +1,342 @@
+//! Source preprocessing for the audit pass.
+//!
+//! The scanner is deliberately **syn-free** (no external parser crates
+//! — the build is offline), so every lint works on a *code view* of
+//! each file: the original text with comments, string literals, and
+//! char literals blanked to spaces, byte-for-byte line-aligned with
+//! the original.  Lints that match identifiers (`HashMap`, `Instant`,
+//! `thread::spawn`, …) therefore never fire on prose, and brace
+//! counting is not confused by `"{"` in strings.
+//!
+//! Allow directives are extracted from a second, *comment view* of the
+//! file (strings blanked, comments kept), so a directive inside a
+//! string literal — or this very documentation — never counts.  Doc
+//! comments (`///`, `//!`) are prose and are skipped too: only plain
+//! `//` comments can carry a directive.
+
+/// A parsed `// audit:allow(lint, reason)` directive.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// 1-based line the directive sits on.
+    pub line: usize,
+    /// The lint name inside the parens (may be unknown; checked later).
+    pub lint: String,
+    /// The free-text justification.  Empty means malformed — a reason
+    /// is mandatory so suppressions stay auditable.
+    pub reason: String,
+    /// Set when some finding was actually suppressed by this
+    /// directive; stale directives are themselves findings.
+    pub used: std::cell::Cell<bool>,
+}
+
+/// One source file, preprocessed for linting.
+pub struct SourceFile {
+    /// Path as given (repo- or root-relative), with `/` separators.
+    pub name: String,
+    /// Code view split into lines (no terminators), parallel to the
+    /// original line numbering.
+    pub code: Vec<String>,
+    /// All allow directives in the file.
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    pub fn parse(name: &str, text: &str) -> SourceFile {
+        let (view, comments) = views(text);
+        let code: Vec<String> = view.lines().map(str::to_string).collect();
+        let allows = parse_allows(&comments);
+        SourceFile { name: name.replace('\\', "/"), code, allows }
+    }
+
+    /// True when an allow directive for `lint` covers `line` (the
+    /// directive's own line for trailing comments, or the line
+    /// directly below for a directive on its own line).
+    pub fn allowed(&self, lint: &str, line: usize) -> bool {
+        for a in &self.allows {
+            if a.lint == lint && !a.reason.is_empty() && (a.line == line || a.line + 1 == line) {
+                a.used.set(true);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Code view only (test and external convenience).
+pub fn code_view(src: &str) -> String {
+    views(src).0
+}
+
+/// Build the code view and the comment view in one pass.
+///
+/// * **Code view** — comments, strings and char literals blanked to
+///   spaces; every newline preserved, so positions map 1:1.
+/// * **Comment view** — strings and char literals blanked, comments
+///   kept verbatim (this is where allow directives are parsed from).
+///
+/// Handles nested block comments, escape sequences, raw strings
+/// (`r"…"`, `r#"…"#`, byte variants), and distinguishes lifetimes
+/// (`'a`) from char literals (`'x'`).
+pub fn views(src: &str) -> (String, String) {
+    let b = src.as_bytes();
+    let mut code = Vec::with_capacity(b.len());
+    let mut com = Vec::with_capacity(b.len());
+    let mut i = 0;
+    // Emit one byte per view: `both!(code_byte, comment_byte)`.
+    macro_rules! both {
+        ($code_byte:expr, $com_byte:expr) => {{
+            code.push($code_byte);
+            com.push($com_byte);
+        }};
+    }
+    while i < b.len() {
+        let c = b[i];
+        // Line comment: blank in code view, verbatim in comment view.
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < b.len() && b[i] != b'\n' {
+                both!(b' ', b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested): blanked in the code view, kept in
+        // the comment view (newlines preserved in both).
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    both!(b' ', b'/');
+                    both!(b' ', b'*');
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    both!(b' ', b'*');
+                    both!(b' ', b'/');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    let keep = if b[i] == b'\n' { b'\n' } else { b' ' };
+                    both!(keep, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (byte) string: r"…", r#"…"#, br"…", …
+        if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i;
+            if b[j] == b'b' && b.get(j + 1) == Some(&b'r') {
+                j += 1;
+            }
+            if b[j] == b'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while b.get(k) == Some(&b'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if b.get(k) == Some(&b'"') {
+                    // Emit the prefix + opening quote verbatim.
+                    for &p in &b[i..=k] {
+                        both!(p, p);
+                    }
+                    i = k + 1;
+                    'raw: while i < b.len() {
+                        if b[i] == b'"' {
+                            let close = &b[i + 1..(i + 1 + hashes).min(b.len())];
+                            if close.len() == hashes && close.iter().all(|&h| h == b'#') {
+                                both!(b'"', b'"');
+                                for &h in close {
+                                    both!(h, h);
+                                }
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        let keep = if b[i] == b'\n' { b'\n' } else { b' ' };
+                        both!(keep, keep);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Plain (byte) string: blanked in both views.
+        if c == b'"' {
+            both!(b'"', b'"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    both!(b' ', b' ');
+                    both!(b' ', b' ');
+                    i += 2;
+                } else if b[i] == b'"' {
+                    both!(b'"', b'"');
+                    i += 1;
+                    break;
+                } else {
+                    let keep = if b[i] == b'\n' { b'\n' } else { b' ' };
+                    both!(keep, keep);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            let escaped = b.get(i + 1) == Some(&b'\\');
+            let closed = b.get(i + 2) == Some(&b'\'');
+            if escaped || closed {
+                both!(b'\'', b'\'');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        both!(b' ', b' ');
+                        both!(b' ', b' ');
+                        i += 2;
+                    } else if b[i] == b'\'' {
+                        both!(b'\'', b'\'');
+                        i += 1;
+                        break;
+                    } else {
+                        both!(b' ', b' ');
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // Lifetime: fall through, keep as-is.
+        }
+        both!(c, c);
+        i += 1;
+    }
+    let code = String::from_utf8(code).expect("code view is ascii-transformed utf8");
+    let com = String::from_utf8(com).expect("comment view is ascii-transformed utf8");
+    (code, com)
+}
+
+/// Extract `audit:allow(lint, reason)` directives from the comment
+/// view.  Only plain `//` comments count: doc comments are prose, and
+/// anything inside a string literal was blanked before we got here.
+fn parse_allows(comments: &str) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (ln, line) in comments.lines().enumerate() {
+        let Some(p) = line.find("//") else { continue };
+        let comment = &line[p..];
+        if comment.starts_with("///") || comment.starts_with("//!") {
+            continue;
+        }
+        let Some(start) = comment.find("audit:allow(") else { continue };
+        let body = &comment[start + "audit:allow(".len()..];
+        let Some(end) = body.find(')') else { continue };
+        let inner = &body[..end];
+        let (lint, reason) = match inner.find(',') {
+            Some(c) => (inner[..c].trim(), inner[c + 1..].trim()),
+            None => (inner.trim(), ""),
+        };
+        out.push(Allow {
+            line: ln + 1,
+            lint: lint.to_string(),
+            reason: reason.to_string(),
+            used: std::cell::Cell::new(false),
+        });
+    }
+    out
+}
+
+/// Columns (0-based byte offsets) where `word` occurs as a whole
+/// identifier in `line`.
+pub fn ident_hits(line: &str, word: &str) -> Vec<usize> {
+    let lb = line.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let pre_ok = at == 0 || !is_ident(lb[at - 1]);
+        let end = at + word.len();
+        let post_ok = end >= lb.len() || !is_ident(lb[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_line_aligned() {
+        let src = "let a = \"HashMap\"; // HashMap\nlet b = 1; /* multi\nline */ let c = 'x';\n";
+        let v = code_view(src);
+        assert_eq!(v.lines().count(), src.lines().count());
+        assert!(!v.contains("HashMap"));
+        assert!(v.contains("let a"));
+        assert!(v.contains("let c"));
+        assert!(!v.contains('x'), "char literal contents blanked");
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes_survive() {
+        let src = "fn f<'a>(s: &'a str) { let r = r#\"thread::spawn {\"#; }";
+        let v = code_view(src);
+        assert!(v.contains("<'a>"), "lifetime untouched");
+        assert!(!v.contains("thread::spawn"));
+        // Brace balance is preserved (the `{` inside the raw string is gone).
+        let open = v.matches('{').count();
+        let close = v.matches('}').count();
+        assert_eq!((open, close), (1, 1));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let v = code_view("a /* x /* y */ z */ b");
+        assert!(v.contains('a') && v.contains('b'));
+        assert!(!v.contains('y') && !v.contains('z'));
+    }
+
+    #[test]
+    fn allow_directives_parse_with_and_without_reason() {
+        let src = concat!(
+            "x(); // audit:allow(det::unseeded-rng, seeded upstream)\n",
+            "y(); // audit:allow(conc::lock-order)\n"
+        );
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].lint, "det::unseeded-rng");
+        assert_eq!(f.allows[0].reason, "seeded upstream");
+        assert!(f.allows[1].reason.is_empty(), "missing reason detected");
+        assert!(f.allowed("det::unseeded-rng", 1));
+        assert!(f.allowed("det::unseeded-rng", 2), "covers the next line");
+        assert!(!f.allowed("det::unseeded-rng", 3));
+        assert!(!f.allowed("conc::lock-order", 2), "reasonless allow never suppresses");
+    }
+
+    #[test]
+    fn directives_in_strings_and_docs_are_ignored() {
+        let src = concat!(
+            "/// audit:allow(det::unseeded-rng, doc prose)\n",
+            "//! audit:allow(det::unseeded-rng, module prose)\n",
+            "let s = \"// audit:allow(det::unseeded-rng, in a string)\";\n"
+        );
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.allows.is_empty());
+    }
+
+    #[test]
+    fn ident_hits_respects_word_boundaries() {
+        assert_eq!(ident_hits("HashMap::new()", "HashMap"), vec![0]);
+        assert!(ident_hits("MyHashMap::new()", "HashMap").is_empty());
+        assert!(ident_hits("HashMapExt::new()", "HashMap").is_empty());
+        assert_eq!(ident_hits("a HashMap b HashMap", "HashMap").len(), 2);
+    }
+}

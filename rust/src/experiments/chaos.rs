@@ -161,7 +161,7 @@ pub fn run_chaos(quick: bool) -> ChaosReport {
 /// under a healed spawn failure), the rollback headline (the hard cell
 /// rolls back), the faulty makespan, and a soft wall-clock row.
 pub fn chaos_bench_entries(quick: bool) -> Vec<(String, f64)> {
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::wallclock::WallTimer::start();
     let rep = run_chaos(quick);
     let cell = |n: &str| {
         rep.cells.iter().find(|c| c.name == n).expect("headline cell missing from the matrix")
@@ -170,7 +170,7 @@ pub fn chaos_bench_entries(quick: bool) -> Vec<(String, f64)> {
         ("chaos.spawnfail.completed_rate".to_string(), cell("spawnfail").completed_rate),
         ("chaos.spawnfail.rollbacks".to_string(), cell("spawnfail_hard").rollbacks as f64),
         ("scenario.faulty.makespan".to_string(), cell("spawnfail").makespan),
-        ("chaos.wall_s".to_string(), t0.elapsed().as_secs_f64().max(1e-9)),
+        ("chaos.wall_s".to_string(), t0.elapsed_s_nonzero()),
     ]
 }
 

@@ -16,6 +16,7 @@
 use crate::mam::{Method, PlannerMode, SpawnStrategy, Strategy, WinPoolPolicy};
 use crate::proteo::run_once;
 use crate::util::json::Json;
+use crate::util::wallclock::WallTimer;
 
 use super::{ablation, scenario, FigOptions};
 
@@ -24,8 +25,8 @@ pub const SCHEMA: u64 = 1;
 
 /// Elapsed wall seconds, clamped away from zero so the finiteness
 /// checks (`v > 0`) hold even on coarse clocks.
-fn wall_s(t0: std::time::Instant) -> f64 {
-    t0.elapsed().as_secs_f64().max(1e-9)
+fn wall_s(t0: WallTimer) -> f64 {
+    t0.elapsed_s_nonzero()
 }
 
 fn opts(quick: bool) -> FigOptions {
@@ -48,10 +49,10 @@ fn opts(quick: bool) -> FigOptions {
 pub fn collect(quick: bool) -> Json {
     let o = opts(quick);
     let mut entries: Vec<(String, f64)> = Vec::new();
-    let t_all = std::time::Instant::now();
+    let t_all = WallTimer::start();
 
     // Window pool: no-pool vs cold vs warm on the 8→4 shrink.
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     let wp = ablation::win_pool(&o);
     for (c, name) in ["no_pool", "cold", "warm"].iter().enumerate() {
         entries.push((format!("winpool.8to4.{name}"), wp.value(0, c)));
@@ -93,7 +94,7 @@ pub fn collect(quick: bool) -> Json {
     // Persistent-schedule cache: the headline 20→160 grow's cold
     // build and warm replay — the gate's guard on the schedule-cache
     // pricing (replay must keep undercutting the cold build).
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     let sc = ablation::sched_cache(&FigOptions { pairs: vec![], ..o.clone() });
     entries.push(("schedcache.20to160.cold".to_string(), sc.value(0, 1)));
     entries.push(("schedcache.20to160.replay".to_string(), sc.value(0, 2)));
@@ -102,7 +103,7 @@ pub fn collect(quick: bool) -> Json {
     // One end-to-end run per method family (redistribution time), at
     // the larger fig-sweep pair — the wall-clock row is the simulator
     // throughput tripwire for the engine itself.
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     for (name, m, s) in [
         ("col.blocking", Method::Collective, Strategy::Blocking),
         ("rma_lockall.wd", Method::RmaLockall, Strategy::WaitDrains),
@@ -117,7 +118,7 @@ pub fn collect(quick: bool) -> Json {
 
     // Closed-loop RMS scenario: total makespan under the planner and
     // two fixed anchors — the gate's planner-regression tripwire.
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     let base = scenario::ScenarioSpec::rms_trace(quick);
     for (name, planner, m, s) in [
         ("auto", PlannerMode::Auto, Method::Collective, Strategy::Blocking),
@@ -147,7 +148,7 @@ pub fn collect(quick: bool) -> Json {
     // Oscillating 20↔160 trace: the pooled RMA makespan without and
     // with the schedule cache + notified completion — the end-to-end
     // tripwire for the persistent-schedule machinery.
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     {
         let mut sp = scenario::ScenarioSpec::osc_trace(quick);
         sp.planner = PlannerMode::Fixed;

@@ -21,10 +21,10 @@
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use crate::simcluster::{ActivityId, Engine, EngineStats, LiteCtx, LiteStep};
 use crate::util::rng::splitmix64;
+use crate::util::wallclock::WallTimer;
 
 /// Outcome of one stress run.
 #[derive(Clone, Copy, Debug)]
@@ -77,7 +77,7 @@ const PARKED: u8 = 2;
 pub fn engine_stress(ns: usize, nd: usize, rounds: u64) -> StressReport {
     assert!(1 <= ns && ns <= nd, "need 1 <= ns <= nd");
     assert!(rounds >= 2, "need at least a pre- and post-resize round");
-    let t0 = Instant::now();
+    let t0 = WallTimer::start();
     let mut e = Engine::new();
 
     let arrivals = Arc::new(AtomicUsize::new(0));
@@ -171,7 +171,7 @@ pub fn engine_stress(ns: usize, nd: usize, rounds: u64) -> StressReport {
         nd,
         rounds,
         virt_end,
-        wall_s: t0.elapsed().as_secs_f64().max(1e-9),
+        wall_s: t0.elapsed_s_nonzero(),
         stats: e.stats(),
     }
 }

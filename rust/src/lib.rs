@@ -29,11 +29,14 @@
 //!   CG step from `artifacts/` on the Rust side,
 //! * [`monitor`], [`config`], [`util`] — metrics, config system and
 //!   self-contained substrates (JSON, CLI, bench harness, property
-//!   testing, PRNG, stats).
+//!   testing, PRNG, stats),
+//! * [`analysis`] — `proteo audit`: the determinism & concurrency
+//!   lint engine guarding the byte-determinism contract.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod analysis;
 pub mod config;
 pub mod experiments;
 pub mod linalg;

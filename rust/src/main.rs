@@ -29,6 +29,7 @@ use proteo::util::benchkit::compare_bench;
 use proteo::util::cli::{parse_toggle, Args, Cli, Command};
 use proteo::util::json::Json;
 use proteo::util::stats::{fmt_bytes, fmt_seconds};
+use proteo::util::wallclock::WallTimer;
 
 fn cli() -> Cli {
     Cli {
@@ -122,6 +123,10 @@ fn cli() -> Cli {
                 "promote a green bench-smoke JSON into the committed baseline",
             )
             .opt("out", "BENCH_baseline.json", "baseline path to (over)write"),
+            Command::new("audit", "static determinism & concurrency lints over rust/src")
+                .opt("root", "", "source root to scan (default: rust/src, then src)")
+                .flag("deny", "exit nonzero on any finding (the CI gate)")
+                .flag("json", "emit findings as JSON instead of text"),
             Command::new("info", "print calibration constants and artifact manifest"),
         ],
     }
@@ -462,9 +467,9 @@ fn cmd_cg(args: &Args) -> Result<(), String> {
     let b: Vec<f32> = (0..m.n).map(|i| 1.0 + ((i % 7) as f32) * 0.125).collect();
     let tol: f32 = args.get("tol").and_then(|s| s.parse().ok()).unwrap_or(1e-5);
     let iters = args.get_usize("iters").unwrap_or(200);
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     let (st, history) = rt.cg_solve(&a, &b, tol, iters).map_err(|e| format!("{e:#}"))?;
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = t0.elapsed_s();
     let done = history.len() - 1;
     println!(
         "CG: {} iterations, rel residual {:.3e}, rr={:.3e}, wall {:.3}s ({:.2} ms/iter)",
@@ -502,9 +507,9 @@ fn cmd_engine_stress(args: &Args) -> Result<(), String> {
 
 fn cmd_bench_smoke(args: &Args) -> Result<(), String> {
     let out = args.get("out").unwrap_or("BENCH_pr.json").to_string();
-    let t0 = std::time::Instant::now();
+    let t0 = WallTimer::start();
     let mut doc = smoke::collect(args.flag("quick"));
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = t0.elapsed_s();
     // Informational wall-clock provenance: never gated (bench-compare
     // only reads "entries"/"schema"/"mode"), but recorded so regressions
     // of the *simulator's own* speed are visible in the artifacts.
@@ -594,6 +599,50 @@ fn cmd_bench_promote(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_audit(args: &Args) -> Result<(), String> {
+    let root = match args.get("root") {
+        Some(r) if !r.is_empty() => std::path::PathBuf::from(r),
+        _ => ["rust/src", "src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or("no rust/src or src directory here; pass --root")?,
+    };
+    let findings = proteo::analysis::audit_tree(&root)?;
+    if args.flag("json") {
+        let arr: Vec<Json> = findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::str(&f.file)),
+                    ("line", Json::Num(f.line as f64)),
+                    ("lint", Json::str(f.lint)),
+                    ("message", Json::str(&f.message)),
+                ])
+            })
+            .collect();
+        println!("{}", Json::Arr(arr).to_pretty());
+    } else {
+        for f in &findings {
+            println!("{f}");
+            if let Some(why) = proteo::analysis::rationale(f.lint) {
+                println!("    why: {why}");
+            }
+            println!("    suppress: // audit:allow({}, <reason>)", f.lint);
+        }
+        println!(
+            "audit: {} finding(s) in {}{}",
+            findings.len(),
+            root.display(),
+            if findings.is_empty() { " — determinism contract holds" } else { "" },
+        );
+    }
+    if args.flag("deny") && !findings.is_empty() {
+        return Err(format!("audit --deny: {} finding(s)", findings.len()));
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<(), String> {
     let p = NetParams::sarteco25();
     println!("== calibration (NetParams::sarteco25) ==");
@@ -669,6 +718,7 @@ fn main() -> ExitCode {
         "bench-smoke" => cmd_bench_smoke(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "bench-promote" => cmd_bench_promote(&args),
+        "audit" => cmd_audit(&args),
         "info" => cmd_info(),
         _ => unreachable!(),
     };

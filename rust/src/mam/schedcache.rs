@@ -26,13 +26,13 @@
 //!   the next oscillation inherits the warm schedule — schedules, like
 //!   persistent collectives, outlive process churn.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::blockdist::{drain_plan, DrainPlan};
 
 /// Identity of one reusable redistribution schedule.  Everything a
 /// schedule contains is a pure function of these five values.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SchedKey {
     /// Source-side size (NS).
     pub from: usize,
@@ -192,7 +192,7 @@ impl RedistSchedule {
 /// against).
 #[derive(Debug, Default)]
 pub struct SchedCache {
-    map: HashMap<SchedKey, RedistSchedule>,
+    map: BTreeMap<SchedKey, RedistSchedule>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -204,7 +204,7 @@ impl SchedCache {
 
     /// Fetch the schedule for `key`, building it on first use.
     pub fn get_or_build(&mut self, key: SchedKey, rank: usize) -> &RedistSchedule {
-        use std::collections::hash_map::Entry;
+        use std::collections::btree_map::Entry;
         match self.map.entry(key) {
             Entry::Occupied(e) => {
                 self.hits += 1;
@@ -341,6 +341,30 @@ mod tests {
         let _ = c.get_or_build(shrink, 1);
         assert_eq!((c.hits, c.misses), (1, 3));
         assert!(c.poison(9, 9).is_empty(), "unknown shape poisons nothing");
+    }
+
+    /// Regression for `det::hashmap-iter-escapes`: the cache map is a
+    /// `BTreeMap`, so `poison` visits keys in key order and its digest
+    /// list is identical regardless of the order schedules were built.
+    #[test]
+    fn poison_digests_are_insertion_order_independent() {
+        let keys =
+            [key(2, 4, 100, 0), key(2, 4, 100, 7), key(2, 4, 200, 0), key(4, 2, 100, 0)];
+        let mut fwd = SchedCache::new();
+        let mut rev = SchedCache::new();
+        for &k in &keys {
+            let _ = fwd.get_or_build(k, 1);
+        }
+        for &k in keys.iter().rev() {
+            let _ = rev.get_or_build(k, 1);
+        }
+        let a = fwd.poison(2, 4);
+        let b = rev.poison(2, 4);
+        assert_eq!(a, b, "poison digests must not depend on build order");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(a, sorted, "digests come back sorted");
+        assert_eq!(fwd.len(), rev.len());
     }
 
     #[test]

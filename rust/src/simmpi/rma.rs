@@ -14,7 +14,7 @@
 //! — so reads may be satisfied from the exposure regardless of when
 //! the flow completes in virtual time.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::simcluster::{ActivityId, Time};
 
@@ -42,7 +42,7 @@ pub(crate) struct WinState {
     pub exposures: Vec<Payload>,
     /// Pending blocking-Get arrival times, keyed by (origin gpid,
     /// target rank) — consumed by `Unlock`/`Unlock_all`.
-    pub pending_gets: HashMap<(usize, usize), Vec<Time>>,
+    pub pending_gets: BTreeMap<(usize, usize), Vec<Time>>,
     /// Ranks that called `win_free_local` (WD path GC).
     pub freed_local: Vec<bool>,
     pub freed: bool,
@@ -90,7 +90,7 @@ impl WinState {
         WinState {
             comm,
             exposures: (0..n).map(|_| Payload::virt(0)).collect(),
-            pending_gets: HashMap::new(),
+            pending_gets: BTreeMap::new(),
             freed_local: vec![false; n],
             freed: false,
             mt: false,
@@ -336,6 +336,29 @@ mod tests {
         assert_eq!(w.flush_target(7, 0), None); // drained
         assert_eq!(w.flush_all(7), Some(2.0));
         assert_eq!(w.flush_all(8), Some(9.0));
+    }
+
+    /// Regression for `det::hashmap-iter-escapes`: `pending_gets` is a
+    /// `BTreeMap`, so the epoch flush visits (origin, target) pairs in
+    /// key order and its result is a pure max — identical no matter in
+    /// which order the Gets were tracked.
+    #[test]
+    fn flush_all_is_insertion_order_independent() {
+        let gets = [(7usize, 2usize, 4.0), (7, 0, 1.0), (7, 1, 6.0), (7, 0, 3.0), (8, 2, 9.0)];
+        let mut fwd = WinState::new(CommId(0), 3);
+        let mut rev = WinState::new(CommId(0), 3);
+        for &(o, t, at) in &gets {
+            fwd.track_get(o, t, at);
+        }
+        for &(o, t, at) in gets.iter().rev() {
+            rev.track_get(o, t, at);
+        }
+        let fk: Vec<_> = fwd.pending_gets.keys().copied().collect();
+        let rk: Vec<_> = rev.pending_gets.keys().copied().collect();
+        assert_eq!(fk, rk, "pending-get order must not depend on tracking order");
+        assert_eq!(fwd.flush_all(7), Some(6.0));
+        assert_eq!(rev.flush_all(7), Some(6.0));
+        assert_eq!(fwd.flush_all(8), rev.flush_all(8));
     }
 
     #[test]

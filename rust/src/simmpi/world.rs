@@ -6,8 +6,14 @@
 //! engine suspension (`advance`/`park`).  Since the engine runs exactly
 //! one activity at a time, the mutex is uncontended in practice — it
 //! exists to satisfy `Send`/`Sync`, not for parallelism.
+//!
+//! Determinism contract: all keyed collections here are `BTreeMap`/
+//! `BTreeSet`, never std hash tables — iteration order is the sorted
+//! key order, so no randomized ordering can leak into virtual time,
+//! counters, or reports (`det::hashmap-iter-escapes` in
+//! [`crate::analysis`] enforces this tree-wide).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 
 use crate::netmodel::{CostModel, NetParams, Placement, Topology};
@@ -124,16 +130,16 @@ pub struct MpiWorld {
     /// respawned into the same slot on an oscillating trace inherits
     /// the schedule negotiated by its predecessor and only validates
     /// it (the persistent-collective model of arXiv 2604.05099).
-    pub(crate) sched_pins: HashSet<(usize, u64)>,
+    pub(crate) sched_pins: BTreeSet<(usize, u64)>,
     /// Warm/cold accounting of the schedule cache.
     pub(crate) sched_stats: SchedStats,
-    pub(crate) colls: HashMap<(CommId, u64), CollState>,
+    pub(crate) colls: BTreeMap<(CommId, u64), CollState>,
     pub(crate) requests: Vec<ReqState>,
     /// Communicators produced by `spawn_merge` / `comm_sub`, keyed by
     /// the collective instance that produced them.
-    pub(crate) derived_comms: HashMap<(CommId, u64), CommId>,
+    pub(crate) derived_comms: BTreeMap<(CommId, u64), CommId>,
     /// Activities parked waiting for a derived communicator.
-    pub(crate) derived_waiters: HashMap<(CommId, u64), Vec<ActivityId>>,
+    pub(crate) derived_waiters: BTreeMap<(CommId, u64), Vec<ActivityId>>,
     /// Core-slot occupancy: slot index → gpid.
     core_slots: Vec<Option<usize>>,
     /// Free-form counters/series for experiment harnesses.
@@ -161,12 +167,12 @@ impl MpiWorld {
             comms: Vec::new(),
             windows: Vec::new(),
             win_pool: WinPool::new(),
-            sched_pins: HashSet::new(),
+            sched_pins: BTreeSet::new(),
             sched_stats: SchedStats::default(),
-            colls: HashMap::new(),
+            colls: BTreeMap::new(),
             requests: Vec::new(),
-            derived_comms: HashMap::new(),
-            derived_waiters: HashMap::new(),
+            derived_comms: BTreeMap::new(),
+            derived_waiters: BTreeMap::new(),
             metrics: crate::monitor::Metrics::new(),
             oversubscription: true,
             faults: None,
@@ -307,10 +313,10 @@ pub struct WorldSnapshot {
     comms: Vec<CommState>,
     windows: Vec<WinState>,
     win_pool: WinPool,
-    sched_pins: HashSet<(usize, u64)>,
+    sched_pins: BTreeSet<(usize, u64)>,
     sched_stats: SchedStats,
     requests: Vec<ReqState>,
-    derived_comms: HashMap<(CommId, u64), CommId>,
+    derived_comms: BTreeMap<(CommId, u64), CommId>,
     core_slots: Vec<Option<usize>>,
     metrics: crate::monitor::Metrics,
 }
@@ -486,5 +492,40 @@ mod tests {
         w.create_proc();
         w.create_proc();
         w.create_proc();
+    }
+
+    /// Regression for `det::hashmap-iter-escapes`: the world's keyed
+    /// tables are `BTreeMap`/`BTreeSet`, so iteration order is a pure
+    /// function of the keys — never of insertion history.  Before the
+    /// switch these were std hash tables whose `RandomState` order
+    /// could leak into anything that walks them.
+    #[test]
+    fn world_table_iteration_is_insertion_order_independent() {
+        let pins = [(3usize, 7u64), (0, 1), (3, 2), (1, 9), (0, 0)];
+        let mut fwd = MpiWorld::new(Topology::new(1, 2), NetParams::test_simple());
+        let mut rev = MpiWorld::new(Topology::new(1, 2), NetParams::test_simple());
+        for &p in &pins {
+            fwd.sched_pins.insert(p);
+        }
+        for &p in pins.iter().rev() {
+            rev.sched_pins.insert(p);
+        }
+        let a: Vec<_> = fwd.sched_pins.iter().copied().collect();
+        let b: Vec<_> = rev.sched_pins.iter().copied().collect();
+        assert_eq!(a, b, "pin order must not depend on insertion order");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(a, sorted, "pins iterate in key order");
+
+        let keys = [(CommId(2), 5u64), (CommId(0), 3), (CommId(2), 1), (CommId(1), 8)];
+        for &k in &keys {
+            fwd.derived_comms.insert(k, CommId(99));
+        }
+        for &k in keys.iter().rev() {
+            rev.derived_comms.insert(k, CommId(99));
+        }
+        let a: Vec<_> = fwd.derived_comms.keys().copied().collect();
+        let b: Vec<_> = rev.derived_comms.keys().copied().collect();
+        assert_eq!(a, b, "derived-comm order must not depend on insertion order");
     }
 }

@@ -10,7 +10,7 @@
 
 use crate::util::json::Json;
 use crate::util::stats::{fmt_seconds, Summary};
-use std::time::Instant;
+use crate::util::wallclock::WallTimer;
 
 /// Outcome of one bench-regression comparison.
 #[derive(Clone, Debug, PartialEq)]
@@ -182,9 +182,9 @@ impl Bench {
         }
         let mut samples = Vec::with_capacity(self.measure_iters);
         for _ in 0..self.measure_iters {
-            let t0 = Instant::now();
+            let t0 = WallTimer::start();
             f();
-            samples.push(t0.elapsed().as_secs_f64());
+            samples.push(t0.elapsed_s());
         }
         self.results.push(BenchResult {
             name: name.to_string(),
@@ -210,9 +210,9 @@ impl Bench {
         let mut wall = Vec::with_capacity(self.measure_iters);
         let mut met = Vec::with_capacity(self.measure_iters);
         for _ in 0..self.measure_iters {
-            let t0 = Instant::now();
+            let t0 = WallTimer::start();
             let m = f();
-            wall.push(t0.elapsed().as_secs_f64());
+            wall.push(t0.elapsed_s());
             met.push(m);
         }
         self.results.push(BenchResult {
@@ -242,9 +242,9 @@ impl Bench {
         let mut met = Vec::with_capacity(self.measure_iters);
         let mut extras = Vec::new();
         for _ in 0..self.measure_iters {
-            let t0 = Instant::now();
+            let t0 = WallTimer::start();
             let (m, e) = f();
-            wall.push(t0.elapsed().as_secs_f64());
+            wall.push(t0.elapsed_s());
             met.push(m);
             extras = e;
         }

@@ -10,7 +10,9 @@
 //! * [`json`]     — a JSON value type, parser and pretty-printer,
 //! * [`cli`]      — a tiny declarative command-line parser,
 //! * [`benchkit`] — a criterion-style benchmarking harness,
-//! * [`proptest_lite`] — a property-testing kit with shrinking.
+//! * [`proptest_lite`] — a property-testing kit with shrinking,
+//! * [`wallclock`] — the sole wall-clock gateway (see
+//!   `det::wall-clock-in-sim` in [`crate::analysis`]).
 
 pub mod benchkit;
 pub mod cli;
@@ -18,3 +20,4 @@ pub mod json;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;
+pub mod wallclock;

@@ -1,0 +1,50 @@
+//! The one place in the crate allowed to read the host's wall clock.
+//!
+//! The simulator is byte-deterministic: every quantity that reaches
+//! virtual time, counters, or report JSON must be a pure function of
+//! the run's inputs.  Wall-clock reads (`std::time::Instant`,
+//! `SystemTime`) are the easiest way to break that by accident, so the
+//! `det::wall-clock-in-sim` lint in [`crate::analysis`] forbids them
+//! everywhere *except* this module.  Harness code that wants a soft
+//! `wall_s` metric (stripped from determinism comparisons, see
+//! `strip_wall` in the tests) goes through [`WallTimer`]; sim-path
+//! code must never need one — durations there come from virtual time.
+
+use std::time::Instant;
+
+/// A started wall-clock stopwatch.  Thin wrapper over
+/// [`std::time::Instant`] so callers never name the std type directly.
+#[derive(Clone, Copy, Debug)]
+pub struct WallTimer(Instant);
+
+impl WallTimer {
+    /// Start a stopwatch now.
+    pub fn start() -> WallTimer {
+        WallTimer(Instant::now())
+    }
+
+    /// Seconds elapsed since [`WallTimer::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Seconds elapsed, floored at 1 ns so soft `wall_s` metrics never
+    /// hit the bench gate's divide-by-zero guard.
+    pub fn elapsed_s_nonzero(&self) -> f64 {
+        self.elapsed_s().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances_and_nonzero_floor_holds() {
+        let t = WallTimer::start();
+        let a = t.elapsed_s_nonzero();
+        assert!(a >= 1e-9);
+        assert!(t.elapsed_s() >= 0.0);
+        assert!(t.elapsed_s_nonzero() >= a);
+    }
+}

@@ -1,0 +1,206 @@
+//! Property tests for `proteo audit` (the static determinism &
+//! concurrency lint engine in `proteo::analysis`):
+//!
+//! * a fixture seeded with one violation per lint class is flagged
+//!   with the right lint name at the right line,
+//! * `audit:allow` suppression round-trips (and goes stale loudly),
+//! * the audit is deterministic — over repeated runs, over file order,
+//!   and over the real `src/**` tree,
+//! * the real tree is clean: `proteo audit --deny` would exit 0.
+
+use proteo::analysis::{audit_sources, audit_tree, Finding};
+
+/// One violation per lint class, each tagged with a `MARK:` comment so
+/// the expectations below track line numbers by content, not by magic
+/// constants.
+const FIXTURE: &str = r#"//! Audit fixture: one violation per lint class.
+
+use std::collections::HashMap; // MARK:hashmap
+use std::time::Instant; // MARK:clock-import
+
+fn wall() -> Instant { // MARK:clock-sig
+    Instant::now() // MARK:clock-call
+}
+
+fn entropy() -> u64 {
+    let state = RandomState::new(); // MARK:rng
+    0
+}
+
+fn bare() {
+    std::thread::spawn(|| {}); // MARK:spawn
+}
+
+fn order(world: &std::sync::Mutex<u32>, worker_pool: &std::sync::Mutex<u32>) {
+    let mut pool = worker_pool.lock().unwrap();
+    let w = world.lock().unwrap(); // MARK:lock-order
+}
+
+#[deprecated(note = "use new_api")]
+fn old_api() {}
+
+fn caller() {
+    old_api(); // MARK:shim-call
+}
+
+// audit:allow(det::unseeded-rng, nothing to suppress) MARK:stale
+fn quiet() {}
+
+fn suppressed() {
+    // audit:allow(conc::bare-thread-spawn, fixture proves suppression)
+    std::thread::spawn(|| {}); // MARK:suppressed
+}
+"#;
+
+/// 1-based line of the first fixture line containing `marker`.
+fn line_of(marker: &str) -> usize {
+    FIXTURE
+        .lines()
+        .position(|l| l.contains(marker))
+        .unwrap_or_else(|| panic!("marker {marker} missing from fixture"))
+        + 1
+}
+
+fn audit_fixture() -> Vec<Finding> {
+    audit_sources(&[("fixture.rs".to_string(), FIXTURE.to_string())])
+}
+
+fn has(findings: &[Finding], lint: &str, line: usize) -> bool {
+    findings.iter().any(|f| f.lint == lint && f.line == line)
+}
+
+#[test]
+fn fixture_fires_every_lint_class_at_the_right_line() {
+    let f = audit_fixture();
+    let expect = [
+        ("det::hashmap-iter-escapes", "MARK:hashmap"),
+        ("det::wall-clock-in-sim", "MARK:clock-import"),
+        ("det::wall-clock-in-sim", "MARK:clock-sig"),
+        ("det::wall-clock-in-sim", "MARK:clock-call"),
+        ("det::unseeded-rng", "MARK:rng"),
+        ("conc::bare-thread-spawn", "MARK:spawn"),
+        ("conc::lock-order", "MARK:lock-order"),
+        ("api::deprecated-shim", "MARK:shim-call"),
+        ("audit::stale-allow", "MARK:stale"),
+    ];
+    for (lint, marker) in expect {
+        assert!(
+            has(&f, lint, line_of(marker)),
+            "{lint} missing at {marker} (line {}); got: {f:#?}",
+            line_of(marker)
+        );
+    }
+    assert_eq!(f.len(), expect.len(), "unexpected extra findings: {f:#?}");
+}
+
+#[test]
+fn allow_suppression_round_trips() {
+    // The suppressed spawn never surfaces...
+    let f = audit_fixture();
+    assert!(
+        !has(&f, "conc::bare-thread-spawn", line_of("MARK:suppressed")),
+        "allow directive failed to suppress"
+    );
+    // ...removing the directive resurfaces exactly that finding...
+    let stripped: String = FIXTURE
+        .lines()
+        .filter(|l| !l.contains("audit:allow(conc::bare-thread-spawn"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let f2 = audit_sources(&[("fixture.rs".to_string(), stripped.clone())]);
+    assert_eq!(f2.len(), f.len() + 1, "exactly one finding resurfaces");
+    assert!(
+        f2.iter().any(|x| x.lint == "conc::bare-thread-spawn"
+            && stripped.lines().nth(x.line - 1).unwrap().contains("MARK:suppressed")),
+        "the resurfaced finding is the previously suppressed spawn"
+    );
+    // ...and a directive whose violation was fixed goes stale loudly
+    // (the fixture's MARK:stale directive proves this path already).
+    assert!(has(&f, "audit::stale-allow", line_of("MARK:stale")));
+}
+
+#[test]
+fn reasonless_allow_is_flagged_and_never_suppresses() {
+    let src = concat!(
+        "fn f() {\n    // audit:allow(conc::bare-thread-spawn)\n",
+        "    std::thread::spawn(|| {});\n}\n"
+    );
+    let f = audit_sources(&[("a.rs".to_string(), src.to_string())]);
+    assert!(has(&f, "conc::bare-thread-spawn", 3), "reasonless allow must not suppress");
+    assert!(has(&f, "audit::stale-allow", 2), "reasonless allow is itself flagged");
+}
+
+#[test]
+fn closures_are_lock_order_barriers_but_reentry_is_not() {
+    // The closure body runs later on another activity: holding the
+    // world lock while *constructing* a closure that locks it is fine.
+    let ok = concat!(
+        "fn f(world: &M) {\n    let w = world.lock().unwrap();\n",
+        "    let job = move || {\n        let w2 = world.lock().unwrap();\n    };\n}\n"
+    );
+    let f = audit_sources(&[("a.rs".to_string(), ok.to_string())]);
+    assert!(
+        !f.iter().any(|x| x.lint == "conc::lock-order"),
+        "closure must act as a barrier: {f:#?}"
+    );
+    // Straight-line re-entry deadlocks and is flagged.
+    let bad = concat!(
+        "fn f(world: &M) {\n    let w = world.lock().unwrap();\n",
+        "    let w2 = world.lock().unwrap();\n}\n"
+    );
+    let f = audit_sources(&[("a.rs".to_string(), bad.to_string())]);
+    assert!(has(&f, "conc::lock-order", 3), "re-entrant world lock: {f:#?}");
+}
+
+#[test]
+fn deprecated_twin_names_never_false_positive() {
+    // `helper` exists both as a deprecated shim (in old.rs) and as an
+    // unrelated non-deprecated fn (in col.rs).  Unqualified calls are
+    // ambiguous without type info and must not be flagged; a call
+    // qualified with the shim's module must.
+    let old = "#[deprecated(note = \"gone\")]\npub fn helper() {}\n";
+    let col = "pub fn helper() {}\nfn caller() { helper(); }\n";
+    let user = "fn f() { old::helper(); }\nfn g() { col::helper(); }\n";
+    let f = audit_sources(&[
+        ("old.rs".to_string(), old.to_string()),
+        ("col.rs".to_string(), col.to_string()),
+        ("user.rs".to_string(), user.to_string()),
+    ]);
+    let dep: Vec<_> = f.iter().filter(|x| x.lint == "api::deprecated-shim").collect();
+    assert_eq!(dep.len(), 1, "only the old::-qualified call is certain: {f:#?}");
+    assert_eq!((dep[0].file.as_str(), dep[0].line), ("user.rs", 1));
+}
+
+#[test]
+fn audit_is_deterministic_and_file_order_independent() {
+    let files: Vec<(String, String)> = vec![
+        ("b.rs".to_string(), "use std::time::Instant;\n".to_string()),
+        ("a.rs".to_string(), FIXTURE.to_string()),
+        ("c.rs".to_string(), "use std::collections::HashSet;\n".to_string()),
+    ];
+    let mut rev = files.clone();
+    rev.reverse();
+    let fwd = audit_sources(&files);
+    assert_eq!(fwd, audit_sources(&rev), "file order leaked into findings");
+    assert_eq!(fwd, audit_sources(&files), "audit not reproducible");
+    // Sorted output: (file, line) non-decreasing.
+    for pair in fwd.windows(2) {
+        assert!((&pair[0].file, pair[0].line) <= (&pair[1].file, pair[1].line));
+    }
+}
+
+#[test]
+fn real_tree_is_clean_and_audit_tree_is_deterministic() {
+    // Integration tests run with CWD = the crate root, so `src` is the
+    // tree `proteo audit --deny` gates in CI.
+    let root = std::path::Path::new("src");
+    assert!(root.is_dir(), "expected to run from the crate root");
+    let a = audit_tree(root).expect("audit walks the tree");
+    let b = audit_tree(root).expect("audit walks the tree");
+    assert_eq!(a, b, "tree audit not reproducible");
+    assert!(
+        a.is_empty(),
+        "src/** violates the determinism contract:\n{}",
+        a.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}

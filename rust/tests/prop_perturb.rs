@@ -1,0 +1,103 @@
+//! Schedule-perturbation determinism: the dynamic check backing the
+//! static `proteo audit` pass.
+//!
+//! The DES promises that simulated outputs are a pure function of the
+//! `RunSpec` — *never* of OS scheduling.  The strongest way to shake
+//! that promise without changing any input is to perturb worker wakeup
+//! order: the engine's pooled OS workers are handed out from a shared
+//! process-global pool, so flooding that pool from concurrent decoy
+//! simulations changes which physical worker picks up which simulated
+//! process, in what order, with what reuse pattern.  If any ordering
+//! leaked into virtual time, the scenario JSON would differ.  It must
+//! not — on either event-queue implementation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use proteo::experiments::scenario::{run_scenario, ScenarioSpec};
+use proteo::simcluster::{set_default_queue_kind, QueueKind};
+
+/// Serializes queue-kind flips across the tests in this binary.
+static QUEUE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` under the given process-default queue kind, restoring the
+/// calendar default afterwards (also on panic).
+fn with_queue_kind<T>(kind: QueueKind, f: impl FnOnce() -> T) -> T {
+    let _guard = QUEUE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_default_queue_kind(QueueKind::Calendar);
+        }
+    }
+    let _restore = Restore;
+    set_default_queue_kind(kind);
+    f()
+}
+
+/// The reference scenario: the quick RMS trace with the auto planner
+/// (planner probes exercise snapshot/rollback too).
+fn scenario_json() -> String {
+    let mut sp = ScenarioSpec::rms_trace(true);
+    sp.planner = proteo::mam::PlannerMode::Auto;
+    run_scenario(&sp).to_json().to_pretty()
+}
+
+/// The same scenario, run while `n_decoys` adversarial simulations
+/// hammer the shared worker pool from plain OS threads.  The decoys
+/// perturb pool handout order, worker reuse, and wakeup interleaving
+/// — every schedule degree of freedom the engine has — while the
+/// `RunSpec` stays bit-identical.
+fn perturbed_scenario_json(n_decoys: usize) -> String {
+    let stop = Arc::new(AtomicBool::new(false));
+    let decoys: Vec<_> = (0..n_decoys)
+        .map(|k| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                // Stagger decoy starts so contention keeps shifting.
+                for _ in 0..k {
+                    std::thread::yield_now();
+                }
+                while !stop.load(Ordering::Relaxed) {
+                    let sp = ScenarioSpec::rms_trace(true);
+                    let _ = run_scenario(&sp);
+                }
+            })
+        })
+        .collect();
+    let out = scenario_json();
+    stop.store(true, Ordering::Relaxed);
+    for d in decoys {
+        d.join().expect("decoy simulation panicked");
+    }
+    out
+}
+
+/// Same `RunSpec`, adversarially jittered worker wakeup order →
+/// byte-identical scenario JSON, on both queue kinds.
+#[test]
+fn scenario_json_survives_wakeup_perturbation_on_both_queues() {
+    for kind in [QueueKind::Calendar, QueueKind::Heap] {
+        let (quiet, noisy) = with_queue_kind(kind, || {
+            // The quiet run goes second so it also starts from a
+            // pool pre-warmed (and reordered) by the perturbed run.
+            let noisy = perturbed_scenario_json(3);
+            let quiet = scenario_json();
+            (quiet, noisy)
+        });
+        assert_eq!(
+            quiet, noisy,
+            "worker wakeup order leaked into the scenario output ({kind:?})"
+        );
+    }
+}
+
+/// Repeatability under contention: two perturbed runs (different
+/// decoy pressure) agree with each other, not just with a quiet run.
+#[test]
+fn perturbed_runs_agree_with_each_other() {
+    let (a, b) = with_queue_kind(QueueKind::Calendar, || {
+        (perturbed_scenario_json(1), perturbed_scenario_json(4))
+    });
+    assert_eq!(a, b, "decoy pressure level changed the scenario output");
+}
